@@ -1,0 +1,78 @@
+//! Quickstart: boot AlertMix on a small universe, run one virtual hour,
+//! and inspect what came out the other end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use alertmix::config::AlertMixConfig;
+use alertmix::sim::HOUR;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Configure a small deployment. Every knob has a sane default;
+    //    `use_xla: true` loads the AOT-compiled enrichment artifact
+    //    (built once by `make artifacts`; python never runs at serve time).
+    let cfg = AlertMixConfig {
+        seed: 2024,
+        n_feeds: 5_000,
+        use_xla: alertmix::runtime::find_artifact(alertmix::runtime::DEFAULT_ARTIFACT).is_some(),
+        ..AlertMixConfig::default()
+    };
+    println!("quickstart: {} feeds, 1 virtual hour", cfg.n_feeds);
+
+    // 1b. Subscribe some alerts — matched in real time at ingest.
+    use alertmix::pipeline::AlertRule;
+    let (mut sys, mut world, _h) = alertmix::pipeline::bootstrap(cfg)?;
+    world.alerts.subscribe(AlertRule::keyword(1, "wildfire desk", &["wildfire"]));
+    world.alerts.subscribe(AlertRule::keyword(2, "markets desk", &["markets", "rate"]));
+
+    // 2. Run. `run_for` bootstraps the full topology (picker, dual SQS,
+    //    feed router, channel pools, XLA enrich stage, sink, monitor) and
+    //    drives the virtual clock.
+    sys.run_until(&mut world, HOUR);
+    world.flush_enrichment(sys.now());
+    world.sink.flush();
+
+    // 3. Look at the results: CloudWatch-style counters...
+    let sent = world.metrics.get("NumberOfMessagesSent").map(|s| s.total()).unwrap_or(0.0);
+    let deleted = world.metrics.get("NumberOfMessagesDeleted").map(|s| s.total()).unwrap_or(0.0);
+    println!("messages: sent {sent:.0}, deleted {deleted:.0} (no-congestion check)");
+
+    // ...item flow...
+    let c = &world.counters;
+    println!(
+        "items: fetched {} -> ingested {} (+{} dropped as duplicates)",
+        c.items_fetched, c.items_ingested, c.items_deduped
+    );
+
+    // ...and the search sink is queryable.
+    for term in ["markets", "wildfire", "breakthrough"] {
+        let hits = world.sink.search_term(term);
+        println!("  sink search '{term}': {} docs", hits.len());
+        if let Some(doc) = hits.first().and_then(|id| world.sink.get(*id)) {
+            println!(
+                "    e.g. [{}] \"{}\" (relevance {:.2})",
+                doc.doc_id, doc.title, doc.scores[0]
+            );
+        }
+    }
+
+    // 3b. Alerts that fired during the hour.
+    println!("\nalerts fired: {} (p99 publish→alert latency {:?} ms)",
+        world.alerts.events.len(), world.alerts.latency_pct(0.99));
+    for ev in world.alerts.events.iter().take(3) {
+        println!("  [{}] \"{}\" ({}s after publish)", ev.rule_name, ev.title, ev.latency_ms / 1000);
+    }
+
+    // 4. The actor topology reports its own health.
+    println!("\npools after 1h:");
+    for st in sys.all_stats() {
+        if st.name.ends_with("-pool") {
+            println!(
+                "  {:<18} size {:>3}, processed {:>6}, restarts {}",
+                st.name, st.pool_size, st.processed, st.restarts
+            );
+        }
+    }
+    Ok(())
+}

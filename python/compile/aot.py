@@ -1,0 +1,80 @@
+"""AOT compile path: lower the L2 model to HLO **text** for the rust runtime.
+
+HLO text (not a serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the published xla
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py and its README.
+
+Usage (from the Makefile):  cd python && python -m compile.aot --out ../artifacts/enricher.hlo.txt
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple=True so
+    the rust side unwraps with to_tuple2)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def golden_io(seed: int = 1234):
+    """A pinned input batch and the model's outputs on it. Shipped next to
+    the artifact so the rust runtime test can verify end-to-end numerics
+    across the language boundary."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    x = rng.random((model.BATCH, model.FEATURE_DIM)).astype(np.float32)
+    x = np.where(x > 0.8, np.log1p(x * 4.0), 0.0).astype(np.float32)
+    scores, sig = model.enrich_fn(x)
+    return x, np.asarray(scores), np.asarray(sig)
+
+
+def build(out_path: str) -> None:
+    import numpy as np
+
+    lowered = jax.jit(model.enrich_fn).lower(model.example_input())
+    text = to_hlo_text(lowered)
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        f.write(text)
+    base = out_path[: -len(".hlo.txt")] if out_path.endswith(".hlo.txt") else os.path.splitext(out_path)[0]
+    with open(base + ".meta.json", "w") as f:
+        json.dump(model.meta(), f, indent=2, sort_keys=True)
+    x, scores, sig = golden_io()
+    golden = {
+        "x": [round(float(v), 7) for v in x.reshape(-1)],
+        "scores": [round(float(v), 7) for v in scores.reshape(-1)],
+        "sig": [float(v) for v in sig.reshape(-1)],
+        "shapes": {"x": list(x.shape), "scores": list(scores.shape), "sig": list(sig.shape)},
+    }
+    with open(base + ".golden.json", "w") as f:
+        json.dump(golden, f)
+    _ = np  # imported for golden_io
+    print(f"wrote {len(text)} chars of HLO to {out_path}")
+    print(f"wrote metadata to {base}.meta.json and golden I/O to {base}.golden.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/enricher.hlo.txt")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

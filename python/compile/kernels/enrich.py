@@ -1,0 +1,191 @@
+"""L1 Pallas kernels: the enrichment hot-spot.
+
+Two kernels, both lowered with ``interpret=True`` (the CPU PJRT plugin
+cannot execute Mosaic custom-calls; interpret-mode lowers to plain HLO that
+runs anywhere — see /opt/xla-example/README.md):
+
+- ``mlp_scores``: fused scorer  sigmoid(relu(x@W1 + b1)@W2 + b2).  One
+  kernel performs both matmuls and both activations so the intermediate
+  ``h`` tile never leaves VMEM.
+- ``simhash_sign``: random-hyperplane signature  sign(x@R) in {-1,+1}.
+
+TPU design notes (DESIGN.md §Hardware-Adaptation): the grid tiles the batch
+dimension in ``BLOCK_B`` rows; each step pulls an (BLOCK_B, 256) activation
+tile plus the full (256,128)/(128,8) weight panels into VMEM — ~330 KiB at
+BLOCK_B=64, comfortably inside a TPU core's ~16 MiB VMEM — and drives the
+MXU with two back-to-back matmuls. Weights are grid-invariant so Mosaic
+would keep them resident across steps.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Batch tile. 64 rows keeps the fused working set ≈ 330 KiB of VMEM and is
+# a multiple of the 8-sublane f32 layout.
+BLOCK_B = 64
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """Fused MLP tile: both matmuls + activations in one VMEM residency."""
+    x = x_ref[...]
+    h = jnp.maximum(
+        jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32) + b1_ref[...],
+        0.0,
+    )
+    logits = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32) + b2_ref[...]
+    o_ref[...] = 1.0 / (1.0 + jnp.exp(-logits))
+
+
+def _sign_kernel(x_ref, r_ref, o_ref):
+    """Signature tile: project and take the sign (0 maps to +1)."""
+    proj = jnp.dot(x_ref[...], r_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.where(proj >= 0.0, 1.0, -1.0).astype(o_ref.dtype)
+
+
+def _batch_grid(batch: int, block_b: int):
+    assert batch % block_b == 0, f"batch {batch} must be a multiple of {block_b}"
+    return (batch // block_b,)
+
+
+@partial(jax.jit, static_argnames=("block_b", "interpret"))
+def mlp_scores(x, w1, b1, w2, b2, *, block_b: int = BLOCK_B, interpret: bool = True):
+    """Pallas scorer over a (B, FEATURE_DIM) batch -> (B, NUM_SCORES)."""
+    batch, fdim = x.shape
+    hdim = w1.shape[1]
+    sdim = w2.shape[1]
+    block_b = min(block_b, batch)
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=_batch_grid(batch, block_b),
+        in_specs=[
+            pl.BlockSpec((block_b, fdim), lambda i: (i, 0)),
+            pl.BlockSpec((fdim, hdim), lambda i: (0, 0)),  # weight panel, grid-invariant
+            pl.BlockSpec((hdim,), lambda i: (0,)),
+            pl.BlockSpec((hdim, sdim), lambda i: (0, 0)),
+            pl.BlockSpec((sdim,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, sdim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, sdim), jnp.float32),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)
+
+
+@partial(jax.jit, static_argnames=("block_b", "interpret"))
+def simhash_sign(x, r, *, block_b: int = BLOCK_B, interpret: bool = True):
+    """Pallas signature head over (B, FEATURE_DIM) -> (B, SIG_BITS) ±1."""
+    batch, fdim = x.shape
+    bits = r.shape[1]
+    block_b = min(block_b, batch)
+    return pl.pallas_call(
+        _sign_kernel,
+        grid=_batch_grid(batch, block_b),
+        in_specs=[
+            pl.BlockSpec((block_b, fdim), lambda i: (i, 0)),
+            pl.BlockSpec((fdim, bits), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, bits), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, bits), x.dtype),
+        interpret=interpret,
+    )(x, r)
+
+
+def _fused_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, r_ref, scores_ref, sig_ref):
+    """Scorer + signature in one VMEM residency: the x tile is loaded once
+    and feeds both the MLP matmul chain and the sign projection. One
+    pallas_call means one grid loop in the lowered HLO — §Perf L1-1 halved
+    the per-batch PJRT dispatch cost vs two separate kernels."""
+    x = x_ref[...]
+    h = jnp.maximum(
+        jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32) + b1_ref[...],
+        0.0,
+    )
+    logits = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32) + b2_ref[...]
+    scores_ref[...] = 1.0 / (1.0 + jnp.exp(-logits))
+    proj = jnp.dot(x, r_ref[...], preferred_element_type=jnp.float32)
+    sig_ref[...] = jnp.where(proj >= 0.0, 1.0, -1.0).astype(sig_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("block_b", "interpret"))
+def enrich_fused(x, w1, b1, w2, b2, r, *, block_b: int = BLOCK_B, interpret: bool = True):
+    """Fused enrichment: (scores, sig) from a single kernel launch."""
+    batch, fdim = x.shape
+    hdim = w1.shape[1]
+    sdim = w2.shape[1]
+    bits = r.shape[1]
+    block_b = min(block_b, batch)
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=_batch_grid(batch, block_b),
+        in_specs=[
+            pl.BlockSpec((block_b, fdim), lambda i: (i, 0)),
+            pl.BlockSpec((fdim, hdim), lambda i: (0, 0)),
+            pl.BlockSpec((hdim,), lambda i: (0,)),
+            pl.BlockSpec((hdim, sdim), lambda i: (0, 0)),
+            pl.BlockSpec((sdim,), lambda i: (0,)),
+            pl.BlockSpec((fdim, bits), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, sdim), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, bits), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, sdim), jnp.float32),
+            jax.ShapeDtypeStruct((batch, bits), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, w1, b1, w2, b2, r)
+
+
+def enrich(x, weights, *, block_b: int = BLOCK_B, interpret: bool = True, fused: bool = True):
+    """Full enrichment: (scores, sig) — the L2 model calls this."""
+    if fused:
+        scores, sig = enrich_fused(
+            x, weights["w1"], weights["b1"], weights["w2"], weights["b2"], weights["r"],
+            block_b=block_b, interpret=interpret,
+        )
+        return scores, sig
+    scores = mlp_scores(
+        x, weights["w1"], weights["b1"], weights["w2"], weights["b2"],
+        block_b=block_b, interpret=interpret,
+    )
+    sig = simhash_sign(x, weights["r"], block_b=block_b, interpret=interpret)
+    return scores, sig
+
+
+def vmem_estimate_bytes(block_b: int = BLOCK_B) -> dict:
+    """Static VMEM footprint estimate per grid step (DESIGN.md §Perf).
+
+    interpret=True gives no hardware timing; on a real TPU the relevant
+    budget is VMEM residency per step and MXU occupancy, which we can
+    compute exactly from the BlockSpecs.
+    """
+    f32 = 4
+    mlp = (
+        block_b * ref.FEATURE_DIM * f32          # x tile
+        + ref.FEATURE_DIM * ref.HIDDEN_DIM * f32  # w1 panel
+        + ref.HIDDEN_DIM * f32                    # b1
+        + block_b * ref.HIDDEN_DIM * f32          # h (scratch)
+        + ref.HIDDEN_DIM * ref.NUM_SCORES * f32   # w2 panel
+        + ref.NUM_SCORES * f32                    # b2
+        + block_b * ref.NUM_SCORES * f32          # out tile
+    )
+    sig = (
+        block_b * ref.FEATURE_DIM * f32
+        + ref.FEATURE_DIM * ref.SIG_BITS * f32
+        + block_b * ref.SIG_BITS * f32
+    )
+    flops_mlp = 2 * block_b * (ref.FEATURE_DIM * ref.HIDDEN_DIM + ref.HIDDEN_DIM * ref.NUM_SCORES)
+    flops_sig = 2 * block_b * ref.FEATURE_DIM * ref.SIG_BITS
+    return {
+        "mlp_vmem_bytes": mlp,
+        "sig_vmem_bytes": sig,
+        "mlp_flops_per_step": flops_mlp,
+        "sig_flops_per_step": flops_sig,
+    }

@@ -1,0 +1,102 @@
+"""Pure-jnp reference oracle for the enrichment kernels.
+
+This module is the correctness ground truth: the Pallas kernels in
+``enrich.py`` must match these functions bit-for-bit (they compute the same
+graph), and ``python/tests/`` assert_allclose them across shapes/dtypes via
+hypothesis. It also documents the *feature contract* shared with the rust
+side (``rust/src/text/mod.rs``): FNV-1a token hashing into FEATURE_DIM
+buckets with log1p'd counts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---- Shared model contract (pinned by the AOT artifact; the rust runtime
+# loads these from enricher.meta.json) -------------------------------------
+FEATURE_DIM = 256
+HIDDEN_DIM = 128
+NUM_SCORES = 8
+SIG_BITS = 64
+BATCH = 64
+WEIGHT_SEED = 0xA1E7_0001
+
+
+def make_weights(seed: int = WEIGHT_SEED):
+    """Deterministic model weights, baked into the HLO as constants.
+
+    The paper ships no trained model (enrichment is its future-work
+    section); random-but-fixed projections give a deterministic,
+    structure-preserving enrichment: the scorer is a random MLP and the
+    signature head is a classic random-hyperplane SimHash.
+    """
+    rng = np.random.default_rng(seed)
+    w1 = rng.normal(0.0, (2.0 / FEATURE_DIM) ** 0.5, (FEATURE_DIM, HIDDEN_DIM)).astype(np.float32)
+    b1 = np.zeros((HIDDEN_DIM,), dtype=np.float32)
+    w2 = rng.normal(0.0, (2.0 / HIDDEN_DIM) ** 0.5, (HIDDEN_DIM, NUM_SCORES)).astype(np.float32)
+    b2 = np.zeros((NUM_SCORES,), dtype=np.float32)
+    r = rng.normal(0.0, 1.0, (FEATURE_DIM, SIG_BITS)).astype(np.float32)
+    return {"w1": w1, "b1": b1, "w2": w2, "b2": b2, "r": r}
+
+
+def mlp_scores_ref(x, w1, b1, w2, b2):
+    """Reference scorer: sigmoid(relu(x @ w1 + b1) @ w2 + b2)."""
+    h = jnp.maximum(x @ w1 + b1, 0.0)
+    logits = h @ w2 + b2
+    return 1.0 / (1.0 + jnp.exp(-logits))
+
+
+def simhash_sign_ref(x, r):
+    """Reference signature head: sign(x @ r) in {-1, +1} (0 maps to +1)."""
+    proj = x @ r
+    return jnp.where(proj >= 0.0, 1.0, -1.0).astype(x.dtype)
+
+
+def enrich_ref(x, weights):
+    """Full reference model: (scores[B, NUM_SCORES], sig[B, SIG_BITS])."""
+    scores = mlp_scores_ref(x, weights["w1"], weights["b1"], weights["w2"], weights["b2"])
+    sig = simhash_sign_ref(x, weights["r"])
+    return scores, sig
+
+
+# ---- Feature contract (mirrors rust/src/text/mod.rs) ----------------------
+
+def fnv1a(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) % (1 << 64)
+    return h
+
+
+def tokenize(text: str) -> list[str]:
+    out, cur = [], []
+    for c in text:
+        if c.isalnum():
+            cur.append(c.lower())
+        else:
+            if len(cur) > 1:
+                out.append("".join(cur))
+            cur = []
+    if len(cur) > 1:
+        out.append("".join(cur))
+    return out
+
+
+def token_bucket(token: str) -> int:
+    return fnv1a(token.encode("utf-8")) % FEATURE_DIM
+
+
+def featurize_item(title: str, body: str) -> np.ndarray:
+    """Hashed bag-of-words, title double-weighted — must equal
+    ``text::featurize_item`` in rust (pinned by test_parity golden file)."""
+    counts = np.zeros(FEATURE_DIM, dtype=np.int64)
+    for tok in tokenize(title):
+        counts[token_bucket(tok)] += 2
+    for tok in tokenize(body):
+        counts[token_bucket(tok)] += 1
+    x = np.zeros(FEATURE_DIM, dtype=np.float32)
+    nz = counts > 0
+    x[nz] = np.log1p(counts[nz].astype(np.float32))
+    return x

@@ -1,0 +1,61 @@
+"""L2: the enrichment model graph (build-time only).
+
+One jitted function, ``enrich_fn``, closes over the deterministic weights
+and calls the L1 Pallas kernels; ``aot.py`` lowers it once to HLO text that
+the rust runtime loads through PJRT. Python never runs at serve time.
+
+The entry point takes a single (BATCH, FEATURE_DIM) f32 feature matrix (the
+rust side featurizes text with the shared FNV/log1p contract) and returns a
+2-tuple:
+
+  scores[BATCH, NUM_SCORES]  -- sigmoid outputs; the pipeline reads
+                                 [0]=relevance, [1]=priority, [2]=spam
+  sig[BATCH, SIG_BITS]       -- ±1 sign projections; the rust side packs
+                                 bit i from lane i into a u64 SimHash
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import enrich as kernels
+from .kernels import ref
+
+BATCH = ref.BATCH
+FEATURE_DIM = ref.FEATURE_DIM
+NUM_SCORES = ref.NUM_SCORES
+SIG_BITS = ref.SIG_BITS
+
+_WEIGHTS = ref.make_weights()
+
+
+def enrich_fn(x):
+    """The AOT entry point. Closes over constant weights (baked into HLO)."""
+    weights = {k: jnp.asarray(v) for k, v in _WEIGHTS.items()}
+    scores, sig = kernels.enrich(x, weights, interpret=True)
+    return (scores, sig)
+
+
+def enrich_ref_fn(x):
+    """Pure-jnp oracle with the same weights (for pytest and benches)."""
+    weights = {k: jnp.asarray(v) for k, v in _WEIGHTS.items()}
+    return ref.enrich_ref(x, weights)
+
+
+def example_input():
+    return jax.ShapeDtypeStruct((BATCH, FEATURE_DIM), jnp.float32)
+
+
+def meta() -> dict:
+    """Shape/contract metadata shipped with the artifact; the rust runtime
+    validates against this before serving."""
+    return {
+        "batch": BATCH,
+        "feature_dim": FEATURE_DIM,
+        "num_scores": NUM_SCORES,
+        "sig_bits": SIG_BITS,
+        "weight_seed": ref.WEIGHT_SEED,
+        "outputs": ["scores", "sig"],
+        "vmem": kernels.vmem_estimate_bytes(),
+    }

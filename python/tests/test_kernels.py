@@ -1,0 +1,167 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps batch sizes, block sizes and value ranges; every case
+must match ``ref`` to float32 tolerance (the kernels compute the same
+graph, so tolerances are tight).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import enrich, ref
+
+WEIGHTS = ref.make_weights()
+JW = {k: jnp.asarray(v) for k, v in WEIGHTS.items()}
+
+
+def random_batch(rng: np.random.Generator, batch: int, scale: float = 1.0) -> jnp.ndarray:
+    # Features are log1p counts: nonnegative, mostly sparse.
+    x = rng.random((batch, ref.FEATURE_DIM)).astype(np.float32)
+    x = np.where(x > 0.8, np.log1p(x * 5.0 * scale), 0.0).astype(np.float32)
+    return jnp.asarray(x)
+
+
+class TestMlpScores:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(0)
+        x = random_batch(rng, ref.BATCH)
+        got = enrich.mlp_scores(x, JW["w1"], JW["b1"], JW["w2"], JW["b2"])
+        want = ref.mlp_scores_ref(x, JW["w1"], JW["b1"], JW["w2"], JW["b2"])
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_outputs_are_probabilities(self):
+        rng = np.random.default_rng(1)
+        x = random_batch(rng, ref.BATCH, scale=10.0)
+        got = np.asarray(enrich.mlp_scores(x, JW["w1"], JW["b1"], JW["w2"], JW["b2"]))
+        assert got.shape == (ref.BATCH, ref.NUM_SCORES)
+        assert np.all(got > 0.0) and np.all(got < 1.0)
+
+    def test_zero_input_gives_bias_scores(self):
+        x = jnp.zeros((ref.BATCH, ref.FEATURE_DIM), jnp.float32)
+        got = np.asarray(enrich.mlp_scores(x, JW["w1"], JW["b1"], JW["w2"], JW["b2"]))
+        # b1 = b2 = 0 -> sigmoid(0) = 0.5 everywhere.
+        np.testing.assert_allclose(got, 0.5, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        batch_blocks=st.integers(min_value=1, max_value=4),
+        block_b=st.sampled_from([8, 16, 32, 64]),
+        seed=st.integers(min_value=0, max_value=2**31),
+        scale=st.floats(min_value=0.1, max_value=20.0),
+    )
+    def test_matches_ref_swept(self, batch_blocks, block_b, seed, scale):
+        batch = batch_blocks * block_b
+        rng = np.random.default_rng(seed)
+        x = random_batch(rng, batch, scale)
+        got = enrich.mlp_scores(x, JW["w1"], JW["b1"], JW["w2"], JW["b2"], block_b=block_b)
+        want = ref.mlp_scores_ref(x, JW["w1"], JW["b1"], JW["w2"], JW["b2"])
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_rejects_ragged_batch(self):
+        x = jnp.zeros((50, ref.FEATURE_DIM), jnp.float32)  # 50 % 64 != 0 -> block_b=min(64,50)=50 ok
+        # 50 is fine (block shrinks); 50 with explicit block 32 is ragged.
+        with pytest.raises(AssertionError):
+            enrich.mlp_scores(x, JW["w1"], JW["b1"], JW["w2"], JW["b2"], block_b=32)
+
+
+class TestSimhashSign:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(2)
+        x = random_batch(rng, ref.BATCH)
+        got = enrich.simhash_sign(x, JW["r"])
+        want = ref.simhash_sign_ref(x, JW["r"])
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_outputs_are_pm_one(self):
+        rng = np.random.default_rng(3)
+        x = random_batch(rng, 128)
+        got = np.asarray(enrich.simhash_sign(x, JW["r"]))
+        assert got.shape == (128, ref.SIG_BITS)
+        assert set(np.unique(got)).issubset({-1.0, 1.0})
+
+    def test_zero_input_is_all_plus_one(self):
+        x = jnp.zeros((ref.BATCH, ref.FEATURE_DIM), jnp.float32)
+        got = np.asarray(enrich.simhash_sign(x, JW["r"]))
+        np.testing.assert_array_equal(got, 1.0)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        batch_blocks=st.integers(min_value=1, max_value=4),
+        block_b=st.sampled_from([8, 16, 32, 64]),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_matches_ref_swept(self, batch_blocks, block_b, seed):
+        batch = batch_blocks * block_b
+        rng = np.random.default_rng(seed)
+        x = random_batch(rng, batch)
+        got = enrich.simhash_sign(x, JW["r"], block_b=block_b)
+        want = ref.simhash_sign_ref(x, JW["r"])
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_similar_inputs_similar_signatures(self):
+        rng = np.random.default_rng(4)
+        x = random_batch(rng, 1, scale=5.0)
+        # Perturb one feature slightly.
+        y = np.asarray(x).copy()
+        y[0, 10] += 0.05
+        sx = np.asarray(enrich.simhash_sign(jnp.asarray(x), JW["r"]))[0]
+        sy = np.asarray(enrich.simhash_sign(jnp.asarray(y), JW["r"]))[0]
+        sz = np.asarray(
+            enrich.simhash_sign(random_batch(np.random.default_rng(5), 1, 5.0), JW["r"])
+        )[0]
+        d_near = int(np.sum(sx != sy))
+        d_far = int(np.sum(sx != sz))
+        assert d_near < d_far, (d_near, d_far)
+
+
+class TestFusedEnrich:
+    def test_enrich_pair_matches_ref(self):
+        rng = np.random.default_rng(6)
+        x = random_batch(rng, ref.BATCH)
+        got_scores, got_sig = enrich.enrich(x, JW)
+        want_scores, want_sig = ref.enrich_ref(x, JW)
+        np.testing.assert_allclose(got_scores, want_scores, rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(got_sig), np.asarray(want_sig))
+
+    def test_vmem_estimate_within_budget(self):
+        est = enrich.vmem_estimate_bytes()
+        # Fused working set must fit a TPU core's VMEM (~16 MiB) with
+        # plenty of headroom for double-buffering.
+        assert est["mlp_vmem_bytes"] < 4 << 20
+        assert est["sig_vmem_bytes"] < 4 << 20
+        assert est["mlp_flops_per_step"] > 0
+
+    def test_weights_are_deterministic(self):
+        a = ref.make_weights()
+        b = ref.make_weights()
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+
+
+class TestFusedKernel:
+    def test_fused_matches_unfused_and_ref(self):
+        rng = np.random.default_rng(8)
+        x = random_batch(rng, ref.BATCH)
+        fs, fg = enrich.enrich(x, JW, fused=True)
+        us, ug = enrich.enrich(x, JW, fused=False)
+        np.testing.assert_allclose(fs, us, rtol=1e-6, atol=1e-7)
+        np.testing.assert_array_equal(np.asarray(fg), np.asarray(ug))
+        ws, wg = ref.enrich_ref(x, JW)
+        np.testing.assert_allclose(fs, ws, rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(fg), np.asarray(wg))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        block_b=st.sampled_from([8, 32, 64]),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_fused_swept(self, block_b, seed):
+        rng = np.random.default_rng(seed)
+        x = random_batch(rng, 64)
+        fs, fg = enrich.enrich(x, JW, block_b=block_b, fused=True)
+        ws, wg = ref.enrich_ref(x, JW)
+        np.testing.assert_allclose(fs, ws, rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(fg), np.asarray(wg))

@@ -1,0 +1,87 @@
+"""Cross-language feature-contract parity.
+
+The rust featurizer (rust/src/text/mod.rs) and the python reference
+(compile/kernels/ref.py) must produce identical feature vectors for the
+same text — otherwise the AOT model sees different inputs at build-time
+validation vs serve time. This test pins the contract with golden vectors;
+`rust/tests/parity.rs` checks the same goldens from the rust side.
+"""
+
+import json
+import os
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden_features.json")
+
+GOLDEN_CASES = [
+    {"title": "markets approve rate cut amid protests", "body": "sources said the rate cut would affect markets"},
+    {"title": "Breaking: wildfire warning!", "body": "Officials warn of record drought, before deadline."},
+    {"title": "", "body": ""},
+    {"title": "a I x", "body": "single chars dropped"},
+    {"title": "Économie française", "body": "union célèbre"},
+    {"title": "echo echo echo", "body": "echo"},
+]
+
+
+def compute_golden():
+    out = []
+    for case in GOLDEN_CASES:
+        x = ref.featurize_item(case["title"], case["body"])
+        nz = np.nonzero(x)[0]
+        out.append(
+            {
+                "title": case["title"],
+                "body": case["body"],
+                "nonzero": {str(int(i)): round(float(x[i]), 6) for i in nz},
+            }
+        )
+    return out
+
+
+class TestGolden:
+    def test_golden_file_matches_current_implementation(self):
+        """The checked-in golden file must match ref.featurize_item. If this
+        fails, the feature contract changed: regenerate goldens AND bump the
+        rust side together."""
+        with open(GOLDEN_PATH) as f:
+            golden = json.load(f)
+        assert golden == compute_golden()
+
+    def test_fnv_vectors(self):
+        # Standard FNV-1a vectors, also pinned in rust/src/util/hash.rs.
+        assert ref.fnv1a(b"") == 0xCBF29CE484222325
+        assert ref.fnv1a(b"a") == 0xAF63DC4C8601EC8C
+        assert ref.fnv1a(b"foobar") == 0x85944171F73967E8
+
+    def test_tokenizer_contract(self):
+        assert ref.tokenize("Hello, World!") == ["hello", "world"]
+        assert ref.tokenize("rate-cut 2024: 3.5%") == ["rate", "cut", "2024", "35"] or \
+            ref.tokenize("rate-cut 2024: 3.5%") == ["rate", "cut", "2024"]
+        assert ref.tokenize("a I x") == []
+
+
+class TestFeaturizeProperties:
+    @settings(max_examples=50, deadline=None)
+    @given(st.text(max_size=200))
+    def test_featurize_finite_nonnegative(self, text):
+        x = ref.featurize_item(text, text)
+        assert np.all(np.isfinite(x)) and np.all(x >= 0)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.text(alphabet="abcdefgh ", max_size=60))
+    def test_title_weighting(self, text):
+        t = ref.featurize_item(text, "")
+        b = ref.featurize_item("", text)
+        # Title counts double: every nonzero bucket weight in t >= in b.
+        assert np.all(t >= b - 1e-9)
+
+
+if __name__ == "__main__":
+    # Regenerate goldens: python -m tests.test_parity
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(compute_golden(), f, indent=1, sort_keys=True)
+    print(f"wrote {GOLDEN_PATH}")

@@ -1,0 +1,135 @@
+//! Ablation A-1: AlertMix (streaming) vs the "too-late" batch baseline.
+//!
+//! The paper's motivation: "a 'too late architecture' that focuses on
+//! batch processing cannot realize the use cases." Both systems consume
+//! the *same* synthetic universe (same seed) for 6 virtual hours; we
+//! compare publish→delivery latency for the items each finds.
+
+use alertmix::baseline::{run_batch_poller, BatchPollerConfig};
+use alertmix::benchlib::{env_u64, section, Table};
+use alertmix::config::AlertMixConfig;
+use alertmix::feedsim::{FeedUniverse, HttpConfig, HttpSim, UniverseConfig};
+use alertmix::pipeline::run_for;
+use alertmix::sim::{HOUR, MINUTE};
+
+fn main() {
+    let feeds = env_u64("BASELINE_FEEDS", 10_000) as usize;
+    let dur = 6 * HOUR;
+    section(&format!("streaming vs batch: {feeds} feeds, 6h virtual, same universe seed"));
+
+    // --- AlertMix (streaming) -------------------------------------------
+    let cfg = AlertMixConfig {
+        seed: 77,
+        n_feeds: feeds,
+        use_xla: false,
+        worker_fault_rate: 0.0,
+        ..AlertMixConfig::default()
+    };
+    let wall = std::time::Instant::now();
+    let (_sys, world) = run_for(cfg, dur).expect("run");
+    let alert_wall = wall.elapsed().as_secs_f64();
+    let alert_p50 = world.sink.ingest_latency_pct(0.5).unwrap_or(0);
+    let alert_p99 = world.sink.ingest_latency_pct(0.99).unwrap_or(0);
+    let alert_items = world.counters.items_ingested + world.counters.items_deduped;
+
+    // --- Batch poller on an identical universe ---------------------------
+    let mut run_batch = |sweep: u64, workers: usize| {
+        let ucfg = UniverseConfig {
+            n_feeds: feeds,
+            seed: 77 ^ 0x0051_F00D, // same as World::build derives
+            ..UniverseConfig::default()
+        };
+        let mut universe = FeedUniverse::new(ucfg);
+        let mut http = HttpSim::new(HttpConfig { seed: 77 ^ 0x4777, ..Default::default() });
+        let wall = std::time::Instant::now();
+        let report = run_batch_poller(
+            &mut universe,
+            &mut http,
+            &BatchPollerConfig { sweep_interval: sweep, workers, run_until: dur },
+        );
+        (report, wall.elapsed().as_secs_f64())
+    };
+
+    let mut t = Table::new(&[
+        "system",
+        "delivery p50",
+        "delivery p99",
+        "items",
+        "polls",
+        "wall",
+    ]);
+    t.row(&[
+        "AlertMix (streaming)".into(),
+        format!("{:.1} min", alert_p50 as f64 / MINUTE as f64),
+        format!("{:.1} min", alert_p99 as f64 / MINUTE as f64),
+        format!("{alert_items}"),
+        format!("{}", world.counters.jobs_completed),
+        format!("{alert_wall:.1}s"),
+    ]);
+    for (label, sweep, workers) in [
+        ("batch hourly, 32 wkr", HOUR, 32),
+        ("batch 30min, 32 wkr", 30 * MINUTE, 32),
+        ("batch hourly, 256 wkr", HOUR, 256),
+    ] {
+        let (report, wall_s) = run_batch(sweep, workers);
+        t.row(&[
+            label.into(),
+            format!("{:.1} min", report.latency_pct(0.5).unwrap_or(0) as f64 / MINUTE as f64),
+            format!("{:.1} min", report.latency_pct(0.99).unwrap_or(0) as f64 / MINUTE as f64),
+            format!("{}", report.items),
+            format!("{}", report.polls),
+            format!("{wall_s:.1}s"),
+        ]);
+    }
+    t.print();
+
+    // Popularity split: "breaking news" content lives on active feeds.
+    // The streaming design spends its poll budget where content appears,
+    // so head-feed latency collapses; tail latency is bounded by the
+    // adaptive backoff — the design's explicit traffic/latency tradeoff.
+    section("delivery latency by feed popularity (head = top 10% by rate)");
+    let mut rates: Vec<f64> =
+        world.universe.profiles().iter().map(|p| p.rate_per_ms).collect();
+    rates.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let head_cut = rates[feeds / 10];
+    let is_head = |id: u64| world.universe.profile(id).rate_per_ms >= head_cut;
+
+    let stream_pct = |p: f64, head: bool| -> f64 {
+        let mut xs: Vec<u64> = world
+            .sink
+            .docs()
+            .filter(|d| is_head(d.stream_id) == head)
+            .map(|d| d.ingested_ms.saturating_sub(d.published_ms))
+            .collect();
+        xs.sort_unstable();
+        if xs.is_empty() {
+            return f64::NAN;
+        }
+        xs[((xs.len() - 1) as f64 * p).round() as usize] as f64 / MINUTE as f64
+    };
+    let (batch_report, _) = run_batch(HOUR, 32);
+    let batch_pct = |p: f64, head: bool| -> f64 {
+        batch_report
+            .latency_pct_where(p, |id| is_head(id) == head)
+            .map(|v| v as f64 / MINUTE as f64)
+            .unwrap_or(f64::NAN)
+    };
+    let mut t = Table::new(&["segment", "AlertMix p50", "AlertMix p99", "batch-hourly p50", "batch-hourly p99"]);
+    for (label, head) in [("head feeds (top 10%)", true), ("tail feeds", false)] {
+        t.row(&[
+            label.into(),
+            format!("{:.1} min", stream_pct(0.5, head)),
+            format!("{:.1} min", stream_pct(0.99, head)),
+            format!("{:.1} min", batch_pct(0.5, head)),
+            format!("{:.1} min", batch_pct(0.99, head)),
+        ]);
+    }
+    t.print();
+
+    println!(
+        "\nexpectation: on head feeds (where breaking news lives) streaming delivers \
+         in ~minutes while every batch item waits for the next sweep; tail latency is \
+         the adaptive-backoff tradeoff the paper's design accepts to poll 200k sources \
+         sustainably — the 'too late architecture' in numbers"
+    );
+}

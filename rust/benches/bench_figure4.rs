@@ -1,0 +1,113 @@
+//! Figure 4 reproduction bench — the paper's only quantitative artifact.
+//!
+//! Regenerates the CloudWatch panel (`NumberOfMessagesSent` / `Received` /
+//! `Deleted` per 5-min period over 24 virtual hours) and reports the three
+//! claims: diurnal periodicity, peak throughput, and queue-empty parity.
+//!
+//! Scale knobs: `FIG4_FEEDS` (default 50_000 for bench runtime; the paper's
+//! scale is 200_000 — set FIG4_FEEDS=200000 for the full run),
+//! `FIG4_FAULTS=1` adds 1% worker crashes (claim C-5: self-healing).
+
+use alertmix::benchlib::{env_flag, env_u64, section, Table};
+use alertmix::config::AlertMixConfig;
+use alertmix::metrics::PERIOD_5MIN;
+use alertmix::pipeline::run_for;
+use alertmix::sim::{DAY, HOUR};
+
+fn main() {
+    let feeds = env_u64("FIG4_FEEDS", 50_000) as usize;
+    let faults = env_flag("FIG4_FAULTS");
+    let mut cfg = AlertMixConfig::figure4();
+    cfg.n_feeds = feeds;
+    cfg.use_xla = alertmix::runtime::find_artifact(alertmix::runtime::DEFAULT_ARTIFACT).is_some();
+    if faults {
+        cfg.worker_fault_rate = 0.01;
+    }
+
+    section(&format!(
+        "Figure 4: {feeds} feeds, 24h virtual, 5-min cycle{} (paper: 200k feeds)",
+        if faults { ", 1% fault injection" } else { "" }
+    ));
+    let wall = std::time::Instant::now();
+    let (sys, world) = run_for(cfg, DAY).expect("run");
+    let wall_s = wall.elapsed().as_secs_f64();
+
+    let n_periods = (DAY / PERIOD_5MIN) as usize;
+    let skip = (3 * HOUR / PERIOD_5MIN) as usize; // steady-state window
+
+    let series = |name: &str| world.metrics.get(name).unwrap().values(n_periods);
+    let sent = series("NumberOfMessagesSent");
+    let received = series("NumberOfMessagesReceived");
+    let deleted = series("NumberOfMessagesDeleted");
+
+    // The paper's three CloudWatch rows, in steady state.
+    let stat = |xs: &[f64]| {
+        let ss = &xs[skip..];
+        let total: f64 = ss.iter().sum();
+        let peak = ss.iter().copied().fold(0.0, f64::max);
+        (total, peak, total / ss.len() as f64)
+    };
+    let mut t = Table::new(&["series", "total(ss)", "peak/5min", "mean/5min", "peak msg/s"]);
+    for (name, xs) in [("Sent", &sent), ("Received", &received), ("Deleted", &deleted)] {
+        let (total, peak, mean) = stat(xs);
+        t.row(&[
+            name.into(),
+            format!("{total:.0}"),
+            format!("{peak:.0}"),
+            format!("{mean:.1}"),
+            format!("{:.1}", peak / 300.0),
+        ]);
+    }
+    t.print();
+    println!("paper reference: peak ~8000 msgs/5min (~27 msg/s) at 200k feeds");
+
+    // Claim C-1: no congestion — deleted tracks sent per period with <1
+    // period of lag.
+    let (s_total, _, _) = stat(&sent);
+    let (d_total, _, _) = stat(&deleted);
+    let parity = d_total / s_total.max(1.0);
+    let mut max_gap: f64 = 0.0;
+    let mut cum_s = 0.0;
+    let mut cum_d = 0.0;
+    for i in skip..n_periods {
+        cum_s += sent[i];
+        cum_d += deleted[i];
+        max_gap = max_gap.max(cum_s - cum_d);
+    }
+    let peak_period = sent[skip..].iter().copied().fold(0.0, f64::max);
+    println!(
+        "\nC-1 no-congestion: deleted/sent = {parity:.4}; max cumulative gap {max_gap:.0} msgs \
+         ({:.2} periods of peak load)",
+        max_gap / peak_period.max(1.0)
+    );
+
+    // Diurnal periodicity: peak-hour vs trough-hour mean.
+    let hour_mean = |h: usize| -> f64 {
+        let per = (HOUR / PERIOD_5MIN) as usize;
+        sent[h * per..(h + 1) * per].iter().sum::<f64>() / per as f64
+    };
+    let hours: Vec<f64> = (3..24).map(hour_mean).collect();
+    let hmax = hours.iter().copied().fold(0.0, f64::max);
+    let hmin = hours.iter().copied().fold(f64::INFINITY, f64::min);
+    println!(
+        "periodicity: hourly means swing {hmin:.0} -> {hmax:.0} msgs/5min ({:.2}x)",
+        hmax / hmin.max(1.0)
+    );
+
+    // Claim C-5 (with FIG4_FAULTS=1): the system self-heals.
+    let restarts: u64 = sys.all_stats().iter().map(|s| s.restarts).sum();
+    println!(
+        "self-healing: {} worker restarts, {} stale re-picks, backlog at end {}",
+        restarts,
+        world.store.stale_repicks,
+        world.queues.total_visible()
+    );
+
+    println!(
+        "\nend-to-end: {} jobs, {} items ingested, {} deduped; wall {wall_s:.1}s ({:.0}x real-time)",
+        world.counters.jobs_completed,
+        world.counters.items_ingested,
+        world.counters.items_deduped,
+        DAY as f64 / 1000.0 / wall_s
+    );
+}

@@ -1,0 +1,118 @@
+//! Ablation A-3: the PJRT enrichment hot path.
+//!
+//! Measures the AOT-compiled XLA executable end to end from rust: items/s
+//! at each batch fill level (padding waste vs dispatch amortization), the
+//! featurize→enrich pipeline cost, and the CPU fallback for reference.
+//! This is the §Perf L1/L2 measurement harness.
+
+use alertmix::benchlib::{env_u64, section, time, Table};
+use alertmix::runtime::{Batcher, BatcherConfig, CpuFallbackEnricher, EnrichBackend, PendingItem, XlaEnricher};
+use alertmix::text::{featurize_item, FEATURE_DIM};
+use alertmix::util::rng::Rng;
+
+fn synth_features(n: usize) -> Vec<[f32; FEATURE_DIM]> {
+    let mut rng = Rng::new(9);
+    (0..n)
+        .map(|_| {
+            let mut f = [0f32; FEATURE_DIM];
+            for v in f.iter_mut() {
+                if rng.chance(0.15) {
+                    *v = 1.0 + rng.next_f32();
+                }
+            }
+            f
+        })
+        .collect()
+}
+
+fn bench_backend(name: &str, backend: &mut dyn EnrichBackend, items: u64) {
+    let feats = synth_features(backend.batch_size());
+    let mut t = Table::new(&["fill", "batches/s", "items/s", "us/item (valid)"]);
+    for &fill in &[1usize, 8, 16, 32, 64] {
+        let fill = fill.min(backend.batch_size());
+        let reps = (items / fill as u64).max(1);
+        let slice = &feats[..fill];
+        let (wall, _) = time(3, || {
+            for _ in 0..reps {
+                std::hint::black_box(backend.enrich_batch(std::hint::black_box(slice)).unwrap());
+            }
+        });
+        let per_batch = wall / reps as f64;
+        t.row(&[
+            format!("{fill}/{}", backend.batch_size()),
+            format!("{:.0}", 1.0 / per_batch),
+            format!("{:.0}", fill as f64 / per_batch),
+            format!("{:.1}", per_batch * 1e6 / fill as f64),
+        ]);
+    }
+    println!("\nbackend: {name}");
+    t.print();
+}
+
+fn main() {
+    let items = env_u64("RUNTIME_ITEMS", 20_000);
+
+    section("featurizer (FNV hashing trick, shared contract with python)");
+    let titles: Vec<(String, String)> = (0..1000)
+        .map(|i| {
+            (
+                format!("headline number {i} about markets and {i}"),
+                format!("body text with many words describing event {i} in detail {i}"),
+            )
+        })
+        .collect();
+    let (feat_s, _) = time(5, || {
+        for (t, b) in &titles {
+            std::hint::black_box(featurize_item(t, b));
+        }
+    });
+    println!("featurize_item: {:.2} us/item ({:.0} items/s)", feat_s * 1e3, 1000.0 / feat_s);
+
+    match XlaEnricher::load_default() {
+        Ok(mut xla) => {
+            section("XLA/PJRT enricher (AOT artifact)");
+            bench_backend("xla-pjrt", &mut xla, items);
+            println!(
+                "\nexecutions: {} | items: {} | artifact batch {}",
+                xla.executions,
+                xla.items_enriched,
+                xla.batch_size()
+            );
+        }
+        Err(e) => println!("SKIP xla backend: {e}"),
+    }
+
+    section("CPU fallback enricher (reference point)");
+    let mut cpu = CpuFallbackEnricher::new(64);
+    bench_backend("cpu-fallback", &mut cpu, items / 5);
+
+    // Micro-batching policy: how much padding does the timeout policy cost?
+    section("batcher policy (size-or-timeout)");
+    let mut t = Table::new(&["max_wait", "flushes full", "flushes timeout", "padding waste"]);
+    for &wait in &[50u64, 250, 1000] {
+        let mut b = Batcher::new(BatcherConfig { batch_size: 64, max_wait_ms: wait });
+        let mut rng = Rng::new(4);
+        let mut now = 0u64;
+        let mut flushed = 0u64;
+        for i in 0..200_000u64 {
+            now += rng.exp(0.02) as u64; // ~20ms between items
+            if let Some(batch) = b.push(PendingItem {
+                ticket: i,
+                features: [0.0; FEATURE_DIM],
+                enqueued_at: now,
+            }) {
+                flushed += batch.len() as u64;
+            }
+            if let Some(batch) = b.poll_timeout(now) {
+                flushed += batch.len() as u64;
+            }
+        }
+        t.row(&[
+            format!("{wait}ms"),
+            format!("{}", b.flushes_full),
+            format!("{}", b.flushes_timeout),
+            format!("{:.2}%", 100.0 * b.padding_waste as f64 / flushed.max(1) as f64),
+        ]);
+    }
+    t.print();
+}

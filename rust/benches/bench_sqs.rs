@@ -1,0 +1,110 @@
+//! Figure-3 substrate bench: the simulated SQS dual-queue.
+//!
+//! Wall-clock throughput of the queue operations on the coordinator's hot
+//! path (send / receive-batch / delete), at-least-once overhead under
+//! visibility-timeout churn, and the dual-queue priority drain order.
+
+use alertmix::benchlib::{env_u64, section, time, Table};
+use alertmix::sqs::{DualQueue, RedrivePolicy, SqsQueue};
+
+fn main() {
+    let n = env_u64("SQS_OPS", 1_000_000);
+    section(&format!("SQS simulator hot path ({n} messages)"));
+
+    let mut t = Table::new(&["operation", "wall (median)", "ops/s"]);
+
+    let (send_s, _) = time(3, || {
+        let mut q = SqsQueue::new("bench", 30_000, None);
+        for i in 0..n {
+            q.send(i, "{\"stream_id\":12345}");
+        }
+        std::hint::black_box(q.visible_count());
+    });
+    t.row(&["send".into(), format!("{:.3}s", send_s), format!("{:.0}", n as f64 / send_s)]);
+
+    let (rx_s, _) = time(3, || {
+        let mut q = SqsQueue::new("bench", 30_000, None);
+        for i in 0..n {
+            q.send(i, "{\"stream_id\":12345}");
+        }
+        let mut now = n;
+        let mut got = 0u64;
+        while got < n {
+            let batch = q.receive(now, 10);
+            if batch.is_empty() {
+                break;
+            }
+            got += batch.len() as u64;
+            for m in batch {
+                q.delete(now, m.handle);
+            }
+            now += 1;
+        }
+        std::hint::black_box(got);
+    });
+    t.row(&[
+        "send+receive(10)+delete".into(),
+        format!("{:.3}s", rx_s),
+        format!("{:.0}", 3.0 * n as f64 / rx_s),
+    ]);
+
+    // Redelivery churn: never delete, let everything expire twice.
+    let churn_n = n / 10;
+    let (churn_s, _) = time(3, || {
+        let mut q =
+            SqsQueue::new("bench", 100, Some(RedrivePolicy { max_receive_count: 3 }));
+        for i in 0..churn_n {
+            q.send(i, "x");
+        }
+        let mut now = churn_n;
+        for _ in 0..3 {
+            loop {
+                let batch = q.receive(now, 10);
+                if batch.is_empty() {
+                    break;
+                }
+            }
+            now += 200; // everything expires
+        }
+        std::hint::black_box(q.dead_letter_count());
+    });
+    t.row(&[
+        format!("visibility churn x3 ({churn_n})"),
+        format!("{:.3}s", churn_s),
+        format!("{:.0}", 3.0 * churn_n as f64 / churn_s),
+    ]);
+    t.print();
+
+    section("dual-queue priority drain (paper Figure 3)");
+    let mut d = DualQueue::new(30_000, None);
+    for i in 0..1000 {
+        d.main.send(i, format!("m{i}"));
+    }
+    for i in 0..100 {
+        d.priority.send(i, format!("p{i}"));
+    }
+    let mut priority_first = 0;
+    let mut total_priority = 0;
+    let mut seen = 0;
+    loop {
+        let batch = d.receive_prioritized(2_000, 10);
+        if batch.is_empty() {
+            break;
+        }
+        for (from_pri, m) in batch {
+            seen += 1;
+            if from_pri {
+                total_priority += 1;
+                if seen <= 100 {
+                    priority_first += 1;
+                }
+            }
+            let _ = m;
+        }
+    }
+    println!(
+        "priority messages drained in first 100 receives: {priority_first}/100 \
+         (total priority {total_priority})"
+    );
+    assert_eq!(priority_first, 100, "priority queue must drain first");
+}

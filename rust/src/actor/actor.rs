@@ -1,0 +1,156 @@
+//! The `Actor` trait and the handler context.
+//!
+//! Handlers execute under the discrete-event scheduler: a handler runs
+//! logically over a virtual-time interval whose length it declares with
+//! [`Ctx::take`] (e.g. a simulated HTTP fetch). Messages it sends are
+//! dispatched when the handler *completes*, which is what gives the
+//! simulation realistic queueing dynamics.
+
+use super::message::{ActorId, Msg, Priority, PRIORITY_NORMAL};
+use crate::sim::SimTime;
+use crate::util::rng::Rng;
+
+/// Failure signal from a handler, fed to the supervisor strategy.
+#[derive(Debug, thiserror::Error)]
+#[error("actor failure: {reason}")]
+pub struct ActorError {
+    pub reason: String,
+    /// A fatal error bypasses Restart/Resume and stops the routee.
+    pub fatal: bool,
+}
+
+impl ActorError {
+    pub fn new(reason: impl Into<String>) -> Self {
+        ActorError { reason: reason.into(), fatal: false }
+    }
+
+    pub fn fatal(reason: impl Into<String>) -> Self {
+        ActorError { reason: reason.into(), fatal: true }
+    }
+}
+
+pub type ActorResult = Result<(), ActorError>;
+
+/// An actor behaviour over a shared world `W` (the substrate bundle: SQS,
+/// document store, feed universe, sink, metrics...).
+pub trait Actor<W> {
+    /// Handle one message. Runs for `ctx.service_time()` virtual ms.
+    fn receive(&mut self, ctx: &mut Ctx, world: &mut W, msg: Msg) -> ActorResult;
+
+    /// Called when the actor (or a pool routee) starts or restarts.
+    fn on_start(&mut self, _ctx: &mut Ctx, _world: &mut W) {}
+}
+
+/// Outbound message buffered during a handler run.
+pub(crate) struct Outbound {
+    pub delay: SimTime,
+    pub to: ActorId,
+    pub priority: Priority,
+    pub msg: Msg,
+}
+
+/// Handler context: virtual clock access, messaging, service-time
+/// accounting and a per-routee deterministic RNG stream.
+pub struct Ctx {
+    pub(crate) now: SimTime,
+    pub(crate) me: ActorId,
+    pub(crate) slot: usize,
+    pub(crate) outbox: Vec<Outbound>,
+    pub(crate) service_ms: SimTime,
+    pub(crate) stop_requested: bool,
+    pub(crate) rng: Rng,
+}
+
+impl Ctx {
+    pub(crate) fn new(now: SimTime, me: ActorId, slot: usize, rng: Rng) -> Self {
+        Ctx { now, me, slot, outbox: Vec::new(), service_ms: 0, stop_requested: false, rng }
+    }
+
+    /// Current virtual time (start of this handler run).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// This actor's address.
+    pub fn me(&self) -> ActorId {
+        self.me
+    }
+
+    /// Routee index within a pool (0 for plain actors).
+    pub fn slot(&self) -> usize {
+        self.slot
+    }
+
+    /// Declare that the work handled so far consumed `ms` of virtual time.
+    /// Accumulates across multiple calls within one handler.
+    pub fn take(&mut self, ms: SimTime) {
+        self.service_ms += ms;
+    }
+
+    /// Total declared service time so far.
+    pub fn service_time(&self) -> SimTime {
+        self.service_ms
+    }
+
+    /// Send with normal priority; dispatched at handler completion.
+    pub fn send<M: Send + 'static>(&mut self, to: ActorId, msg: M) {
+        self.send_pri(to, PRIORITY_NORMAL, msg);
+    }
+
+    /// Send with an explicit priority class.
+    pub fn send_pri<M: Send + 'static>(&mut self, to: ActorId, priority: Priority, msg: M) {
+        self.outbox.push(Outbound { delay: 0, to, priority, msg: Box::new(msg) });
+    }
+
+    /// Send after an additional delay past handler completion.
+    pub fn send_after<M: Send + 'static>(&mut self, delay: SimTime, to: ActorId, msg: M) {
+        self.outbox.push(Outbound { delay, to, priority: PRIORITY_NORMAL, msg: Box::new(msg) });
+    }
+
+    /// Send to self after a delay (timer-like).
+    pub fn remind<M: Send + 'static>(&mut self, delay: SimTime, msg: M) {
+        let me = self.me;
+        self.send_after(delay, me, msg);
+    }
+
+    /// Request a graceful stop of this routee after the current message.
+    pub fn stop_self(&mut self) {
+        self.stop_requested = true;
+    }
+
+    /// Deterministic per-routee RNG stream.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctx_accumulates_service_time() {
+        let mut ctx = Ctx::new(100, ActorId(1), 0, Rng::new(1));
+        ctx.take(5);
+        ctx.take(10);
+        assert_eq!(ctx.service_time(), 15);
+        assert_eq!(ctx.now(), 100);
+    }
+
+    #[test]
+    fn ctx_buffers_outbox() {
+        let mut ctx = Ctx::new(0, ActorId(1), 0, Rng::new(1));
+        ctx.send(ActorId(2), "hello");
+        ctx.send_pri(ActorId(3), 1, 42u32);
+        ctx.send_after(50, ActorId(4), ());
+        assert_eq!(ctx.outbox.len(), 3);
+        assert_eq!(ctx.outbox[1].priority, 1);
+        assert_eq!(ctx.outbox[2].delay, 50);
+    }
+
+    #[test]
+    fn error_kinds() {
+        assert!(!ActorError::new("x").fatal);
+        assert!(ActorError::fatal("y").fatal);
+    }
+}

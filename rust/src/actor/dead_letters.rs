@@ -1,0 +1,131 @@
+//! Dead-letter office.
+//!
+//! Bounded mailboxes reject overflow; rejected, undeliverable and
+//! post-stop messages land here. The paper's `DeadLettersListener`
+//! subscribes to this office, logs for ELK-style monitoring, and raises an
+//! alert when the rate is unexpected (see
+//! `pipeline::dead_letters_monitor`).
+
+use super::message::ActorId;
+use crate::sim::SimTime;
+use std::collections::VecDeque;
+
+/// Why a message became a dead letter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeadLetterReason {
+    /// Bounded mailbox was full (backpressure shedding).
+    MailboxOverflow,
+    /// Target actor was stopped.
+    ActorStopped,
+    /// Target id was never spawned.
+    NoSuchActor,
+    /// Actor stopped with messages still queued.
+    DrainedOnStop,
+}
+
+/// A recorded dead letter (metadata only; payloads are dropped).
+#[derive(Debug, Clone)]
+pub struct DeadLetter {
+    pub at: SimTime,
+    pub to: ActorId,
+    pub from: ActorId,
+    pub priority: u8,
+    pub reason: DeadLetterReason,
+}
+
+/// The office: ring buffer of recent letters + lifetime counters.
+pub struct DeadLetters {
+    recent: VecDeque<DeadLetter>,
+    keep: usize,
+    pub total: u64,
+    pub by_overflow: u64,
+    pub by_stopped: u64,
+    pub by_missing: u64,
+    pub by_drained: u64,
+}
+
+impl Default for DeadLetters {
+    fn default() -> Self {
+        Self::new(4096)
+    }
+}
+
+impl DeadLetters {
+    pub fn new(keep: usize) -> Self {
+        DeadLetters {
+            recent: VecDeque::with_capacity(keep.min(4096)),
+            keep,
+            total: 0,
+            by_overflow: 0,
+            by_stopped: 0,
+            by_missing: 0,
+            by_drained: 0,
+        }
+    }
+
+    pub fn publish(&mut self, letter: DeadLetter) {
+        self.total += 1;
+        match letter.reason {
+            DeadLetterReason::MailboxOverflow => self.by_overflow += 1,
+            DeadLetterReason::ActorStopped => self.by_stopped += 1,
+            DeadLetterReason::NoSuchActor => self.by_missing += 1,
+            DeadLetterReason::DrainedOnStop => self.by_drained += 1,
+        }
+        if self.recent.len() == self.keep {
+            self.recent.pop_front();
+        }
+        self.recent.push_back(letter);
+    }
+
+    /// Most recent letters, oldest first.
+    pub fn recent(&self) -> impl Iterator<Item = &DeadLetter> {
+        self.recent.iter()
+    }
+
+    /// Letters recorded since the given time (for windowed alerting).
+    pub fn since(&self, t: SimTime) -> usize {
+        self.recent.iter().rev().take_while(|l| l.at >= t).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn letter(at: SimTime, reason: DeadLetterReason) -> DeadLetter {
+        DeadLetter { at, to: ActorId(1), from: ActorId(2), priority: 4, reason }
+    }
+
+    #[test]
+    fn counters_by_reason() {
+        let mut d = DeadLetters::new(10);
+        d.publish(letter(0, DeadLetterReason::MailboxOverflow));
+        d.publish(letter(1, DeadLetterReason::MailboxOverflow));
+        d.publish(letter(2, DeadLetterReason::ActorStopped));
+        assert_eq!(d.total, 3);
+        assert_eq!(d.by_overflow, 2);
+        assert_eq!(d.by_stopped, 1);
+    }
+
+    #[test]
+    fn ring_buffer_caps() {
+        let mut d = DeadLetters::new(3);
+        for i in 0..10 {
+            d.publish(letter(i, DeadLetterReason::MailboxOverflow));
+        }
+        let times: Vec<SimTime> = d.recent().map(|l| l.at).collect();
+        assert_eq!(times, vec![7, 8, 9]);
+        assert_eq!(d.total, 10);
+    }
+
+    #[test]
+    fn since_counts_window() {
+        let mut d = DeadLetters::new(100);
+        for i in 0..10 {
+            d.publish(letter(i * 10, DeadLetterReason::MailboxOverflow));
+        }
+        assert_eq!(d.since(70), 3); // letters at 70, 80, 90
+        assert_eq!(d.since(0), 10);
+        assert_eq!(d.since(91), 0);
+    }
+}

@@ -1,0 +1,252 @@
+//! Mailboxes: unbounded FIFO, bounded FIFO, and bounded **stable priority**
+//! (the paper's "bounded stable priority mail box").
+//!
+//! Bounded mailboxes are AlertMix's backpressure mechanism: when a mailbox
+//! is full the message is *rejected* and the system routes it to the dead
+//! letters listener instead of letting a backlog grow without bound ("to
+//! avoid long backlog being created which eventually might result in out of
+//! memory exception"). Stable priority means messages are served in
+//! ascending priority class, FIFO *within* a class — Akka's
+//! `BoundedStablePriorityMailbox` semantics.
+
+use super::message::Envelope;
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Mailbox configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MailboxKind {
+    /// FIFO, no capacity limit.
+    Unbounded,
+    /// FIFO with capacity; overflow is rejected (→ dead letters).
+    Bounded(usize),
+    /// Priority classes, FIFO within class, no capacity limit.
+    UnboundedStablePriority,
+    /// Priority classes, FIFO within class, capacity-limited.
+    BoundedStablePriority(usize),
+}
+
+struct PriorityEntry(Envelope);
+
+impl PartialEq for PriorityEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.priority == other.0.priority && self.0.seq == other.0.seq
+    }
+}
+impl Eq for PriorityEntry {}
+impl PartialOrd for PriorityEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for PriorityEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max-heap: invert so lowest (priority, seq) pops first.
+        other
+            .0
+            .priority
+            .cmp(&self.0.priority)
+            .then(other.0.seq.cmp(&self.0.seq))
+    }
+}
+
+enum Store {
+    Fifo(VecDeque<Envelope>),
+    Pri(BinaryHeap<PriorityEntry>),
+}
+
+/// A mailbox instance. See [`MailboxKind`].
+pub struct Mailbox {
+    store: Store,
+    capacity: Option<usize>,
+    /// Lifetime counters for monitoring and the resizer.
+    pub enqueued: u64,
+    pub rejected: u64,
+    /// High-water mark of queue depth.
+    pub peak_len: usize,
+}
+
+impl Mailbox {
+    pub fn new(kind: MailboxKind) -> Self {
+        let (store, capacity) = match kind {
+            MailboxKind::Unbounded => (Store::Fifo(VecDeque::new()), None),
+            MailboxKind::Bounded(c) => (Store::Fifo(VecDeque::new()), Some(c)),
+            MailboxKind::UnboundedStablePriority => (Store::Pri(BinaryHeap::new()), None),
+            MailboxKind::BoundedStablePriority(c) => (Store::Pri(BinaryHeap::new()), Some(c)),
+        };
+        Mailbox { store, capacity, enqueued: 0, rejected: 0, peak_len: 0 }
+    }
+
+    /// Enqueue; on overflow the envelope is handed back for dead-letter
+    /// routing.
+    pub fn push(&mut self, env: Envelope) -> Result<(), Envelope> {
+        if let Some(cap) = self.capacity {
+            if self.len() >= cap {
+                self.rejected += 1;
+                return Err(env);
+            }
+        }
+        match &mut self.store {
+            Store::Fifo(q) => q.push_back(env),
+            Store::Pri(h) => h.push(PriorityEntry(env)),
+        }
+        self.enqueued += 1;
+        self.peak_len = self.peak_len.max(self.len());
+        Ok(())
+    }
+
+    /// Dequeue the next message per the mailbox discipline.
+    pub fn pop(&mut self) -> Option<Envelope> {
+        match &mut self.store {
+            Store::Fifo(q) => q.pop_front(),
+            Store::Pri(h) => h.pop().map(|e| e.0),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.store {
+            Store::Fifo(q) => q.len(),
+            Store::Pri(h) => h.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
+    /// Drain all messages (used when an actor stops — everything goes to
+    /// dead letters).
+    pub fn drain(&mut self) -> Vec<Envelope> {
+        let mut out = Vec::with_capacity(self.len());
+        while let Some(e) = self.pop() {
+            out.push(e);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::actor::message::{ActorId, SYSTEM};
+    use crate::util::prop::forall;
+
+    fn env(priority: u8, seq: u64) -> Envelope {
+        Envelope {
+            to: ActorId(0),
+            from: SYSTEM,
+            priority,
+            seq,
+            enqueued_at: 0,
+            msg: Box::new(seq),
+        }
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut m = Mailbox::new(MailboxKind::Unbounded);
+        for i in 0..10 {
+            m.push(env(4, i)).unwrap();
+        }
+        for i in 0..10 {
+            assert_eq!(m.pop().unwrap().seq, i);
+        }
+    }
+
+    #[test]
+    fn bounded_rejects_overflow() {
+        let mut m = Mailbox::new(MailboxKind::Bounded(3));
+        for i in 0..3 {
+            m.push(env(4, i)).unwrap();
+        }
+        assert!(m.push(env(4, 99)).is_err());
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.len(), 3);
+        m.pop();
+        assert!(m.push(env(4, 100)).is_ok());
+    }
+
+    #[test]
+    fn priority_order_stable_within_class() {
+        let mut m = Mailbox::new(MailboxKind::BoundedStablePriority(100));
+        m.push(env(4, 0)).unwrap();
+        m.push(env(4, 1)).unwrap();
+        m.push(env(1, 2)).unwrap();
+        m.push(env(1, 3)).unwrap();
+        m.push(env(7, 4)).unwrap();
+        let order: Vec<u64> = std::iter::from_fn(|| m.pop()).map(|e| e.seq).collect();
+        assert_eq!(order, vec![2, 3, 0, 1, 4]);
+    }
+
+    #[test]
+    fn peak_len_tracks_high_water() {
+        let mut m = Mailbox::new(MailboxKind::Unbounded);
+        for i in 0..5 {
+            m.push(env(4, i)).unwrap();
+        }
+        m.pop();
+        m.pop();
+        assert_eq!(m.peak_len, 5);
+        assert_eq!(m.len(), 3);
+    }
+
+    #[test]
+    fn drain_empties() {
+        let mut m = Mailbox::new(MailboxKind::UnboundedStablePriority);
+        for i in 0..4 {
+            m.push(env((i % 2) as u8, i)).unwrap();
+        }
+        let drained = m.drain();
+        assert_eq!(drained.len(), 4);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn prop_stable_priority_invariant() {
+        forall("pops are sorted by (priority, seq-within-class)", 150, |g| {
+            let mut m = Mailbox::new(MailboxKind::UnboundedStablePriority);
+            let n = g.usize(0, 100);
+            for seq in 0..n as u64 {
+                m.push(env(g.u64(0, 8) as u8, seq)).unwrap();
+            }
+            let mut last: Option<(u8, u64)> = None;
+            while let Some(e) = m.pop() {
+                if let Some((lp, ls)) = last {
+                    if e.priority < lp {
+                        return false; // priority must be non-decreasing
+                    }
+                    if e.priority == lp && e.seq < ls {
+                        return false; // FIFO within class
+                    }
+                }
+                last = Some((e.priority, e.seq));
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn prop_bounded_never_exceeds_capacity() {
+        forall("bounded mailbox length <= capacity", 150, |g| {
+            let cap = g.usize(1, 20);
+            let mut m = Mailbox::new(MailboxKind::BoundedStablePriority(cap));
+            let ops = g.usize(0, 200);
+            for seq in 0..ops as u64 {
+                if g.bool() {
+                    let _ = m.push(env(g.u64(0, 8) as u8, seq));
+                } else {
+                    m.pop();
+                }
+                if m.len() > cap {
+                    return false;
+                }
+            }
+            // conservation: enqueued - popped == len
+            m.enqueued >= m.len() as u64
+        });
+    }
+}

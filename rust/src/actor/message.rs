@@ -1,0 +1,106 @@
+//! Messages and envelopes.
+//!
+//! Messages are dynamically typed (`Box<dyn Any>`), mirroring Akka's untyped
+//! actor mailboxes that the paper builds on. An [`Envelope`] carries the
+//! routing metadata the mailboxes need: a priority class (lower = more
+//! urgent, like Akka's `PriorityMailbox`) and a sequence number used for
+//! stable FIFO ordering within a class.
+
+use crate::sim::SimTime;
+use std::any::Any;
+
+/// Opaque message payload.
+pub type Msg = Box<dyn Any + Send>;
+
+/// Actor address: an index into the system's cell table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ActorId(pub u32);
+
+/// Reserved pseudo-address for system-originated messages (timers, boot).
+pub const SYSTEM: ActorId = ActorId(u32::MAX);
+
+/// Message priority class. Lower value is served first.
+pub type Priority = u8;
+
+/// Default priority for ordinary traffic.
+pub const PRIORITY_NORMAL: Priority = 4;
+/// Priority for user-initiated / newly-created streams (paper's
+/// PriorityStreamsActor path).
+pub const PRIORITY_HIGH: Priority = 1;
+/// Priority for background/maintenance traffic.
+pub const PRIORITY_LOW: Priority = 7;
+
+/// A routed message.
+pub struct Envelope {
+    pub to: ActorId,
+    pub from: ActorId,
+    pub priority: Priority,
+    /// Global dispatch sequence — stable tie-break within a priority class.
+    pub seq: u64,
+    /// When the message entered the mailbox (for queue-latency metrics).
+    pub enqueued_at: SimTime,
+    pub msg: Msg,
+}
+
+impl Envelope {
+    /// Downcast helper: peek at the payload type.
+    pub fn is<T: 'static>(&self) -> bool {
+        self.msg.is::<T>()
+    }
+
+    /// Consume the envelope, downcasting the payload.
+    pub fn take<T: 'static>(self) -> Result<Box<T>, Envelope> {
+        let Envelope { to, from, priority, seq, enqueued_at, msg } = self;
+        match msg.downcast::<T>() {
+            Ok(t) => Ok(t),
+            Err(msg) => Err(Envelope { to, from, priority, seq, enqueued_at, msg }),
+        }
+    }
+}
+
+impl std::fmt::Debug for Envelope {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Envelope")
+            .field("to", &self.to)
+            .field("from", &self.from)
+            .field("priority", &self.priority)
+            .field("seq", &self.seq)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn downcast_roundtrip() {
+        let env = Envelope {
+            to: ActorId(1),
+            from: SYSTEM,
+            priority: PRIORITY_NORMAL,
+            seq: 0,
+            enqueued_at: 0,
+            msg: Box::new(42u32),
+        };
+        assert!(env.is::<u32>());
+        assert!(!env.is::<String>());
+        let v = env.take::<u32>().unwrap();
+        assert_eq!(*v, 42);
+    }
+
+    #[test]
+    fn failed_downcast_returns_envelope() {
+        let env = Envelope {
+            to: ActorId(1),
+            from: SYSTEM,
+            priority: 2,
+            seq: 7,
+            enqueued_at: 0,
+            msg: Box::new("hello".to_string()),
+        };
+        let env = env.take::<u32>().unwrap_err();
+        assert_eq!(env.seq, 7);
+        assert!(env.is::<String>());
+    }
+}

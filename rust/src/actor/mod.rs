@@ -1,0 +1,26 @@
+//! In-house actor runtime with Akka-equivalent semantics.
+//!
+//! The paper builds AlertMix on Akka Streams / Akka actors; this module
+//! reimplements the primitives the paper's architecture names:
+//! bounded (stable-priority) mailboxes, balancing-pool routers with a
+//! shared mailbox, the `OptimalSizeExploringResizer`, supervisor
+//! strategies, dead letters, and a timer scheduler — all driven by a
+//! deterministic discrete-event clock (see [`crate::sim`]).
+
+mod actor;
+mod dead_letters;
+mod mailbox;
+mod message;
+mod resizer;
+mod supervision;
+mod system;
+
+pub use actor::{Actor, ActorError, ActorResult, Ctx};
+pub use dead_letters::{DeadLetter, DeadLetterReason, DeadLetters};
+pub use mailbox::{Mailbox, MailboxKind};
+pub use message::{
+    ActorId, Envelope, Msg, Priority, PRIORITY_HIGH, PRIORITY_LOW, PRIORITY_NORMAL, SYSTEM,
+};
+pub use resizer::{OptimalSizeExploringResizer, ResizerConfig};
+pub use supervision::{Directive, FailureState, SupervisorStrategy};
+pub use system::{ActorFactory, ActorSystem, CellStats};

@@ -1,0 +1,229 @@
+//! `OptimalSizeExploringResizer` — adaptive pool sizing.
+//!
+//! The paper: "This resizer resizes the pool to an optimal size that
+//! provides the most message throughput." Mirrors Akka's
+//! `OptimalSizeExploringResizer`: the pool alternates between *exploring*
+//! (random ±step around the current size) and *optimizing* (jump toward the
+//! size with the best observed throughput), keeping a decaying performance
+//! log per size.
+
+use crate::sim::SimTime;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ResizerConfig {
+    pub lower_bound: usize,
+    pub upper_bound: usize,
+    /// Virtual-time length of one measurement window.
+    pub action_interval: SimTime,
+    /// Probability of exploring instead of optimizing.
+    pub explore_ratio: f64,
+    /// Max relative step when exploring (fraction of current size).
+    pub explore_step: f64,
+    /// Exponential-decay factor applied to old throughput records.
+    pub weight_decay: f64,
+    /// Only act when utilization is high enough to be informative.
+    pub min_utilization: f64,
+}
+
+impl Default for ResizerConfig {
+    fn default() -> Self {
+        ResizerConfig {
+            lower_bound: 1,
+            upper_bound: 64,
+            action_interval: 5_000,
+            explore_ratio: 0.4,
+            explore_step: 0.1,
+            weight_decay: 0.8,
+            min_utilization: 0.5,
+        }
+    }
+}
+
+/// Throughput-exploring pool resizer.
+#[derive(Debug)]
+pub struct OptimalSizeExploringResizer {
+    cfg: ResizerConfig,
+    rng: Rng,
+    /// size -> decayed messages-per-ms record.
+    perf_log: BTreeMap<usize, f64>,
+    window_start: SimTime,
+    processed_in_window: u64,
+    busy_ms_in_window: SimTime,
+    /// Counters for reporting/ablation.
+    pub resizes: u64,
+    pub explorations: u64,
+    pub optimizations: u64,
+}
+
+impl OptimalSizeExploringResizer {
+    pub fn new(cfg: ResizerConfig, rng: Rng) -> Self {
+        OptimalSizeExploringResizer {
+            cfg,
+            rng,
+            perf_log: BTreeMap::new(),
+            window_start: 0,
+            processed_in_window: 0,
+            busy_ms_in_window: 0,
+            resizes: 0,
+            explorations: 0,
+            optimizations: 0,
+        }
+    }
+
+    pub fn config(&self) -> &ResizerConfig {
+        &self.cfg
+    }
+
+    /// Record one completed message and its service time.
+    pub fn record(&mut self, service_ms: SimTime) {
+        self.processed_in_window += 1;
+        self.busy_ms_in_window += service_ms;
+    }
+
+    /// Called by the cell after each completion; returns the new desired
+    /// pool size if a resize action is due.
+    pub fn poll(&mut self, now: SimTime, current_size: usize, queue_len: usize) -> Option<usize> {
+        let elapsed = now.saturating_sub(self.window_start);
+        if elapsed < self.cfg.action_interval || self.processed_in_window == 0 {
+            return None;
+        }
+        // Utilization of the pool over the window.
+        let util =
+            self.busy_ms_in_window as f64 / (elapsed as f64 * current_size.max(1) as f64);
+        let throughput = self.processed_in_window as f64 / elapsed as f64;
+
+        // Decay history and fold in this window's observation.
+        for v in self.perf_log.values_mut() {
+            *v *= self.cfg.weight_decay;
+        }
+        let e = self.perf_log.entry(current_size).or_insert(0.0);
+        *e = e.max(throughput);
+
+        self.window_start = now;
+        self.processed_in_window = 0;
+        self.busy_ms_in_window = 0;
+
+        // Backpressure rule: saturated pool with a backlog grows
+        // multiplicatively — waiting for the explore walk to find the
+        // right size would let the queue snowball (this is the dominant
+        // regime during the cold-start sweep of a 200k-feed universe).
+        if util > 0.8 && queue_len > current_size {
+            let target = (current_size + (current_size / 2).max(2))
+                .clamp(self.cfg.lower_bound, self.cfg.upper_bound);
+            if target != current_size {
+                self.resizes += 1;
+                return Some(target);
+            }
+            return None;
+        }
+
+        // Underutilized and no backlog: shrink gently toward lower bound.
+        if util < self.cfg.min_utilization && queue_len == 0 {
+            let target = (current_size - 1).max(self.cfg.lower_bound);
+            if target != current_size {
+                self.resizes += 1;
+                return Some(target);
+            }
+            return None;
+        }
+
+        let target = if self.rng.chance(self.cfg.explore_ratio) {
+            // Explore: random walk of up to explore_step around current.
+            self.explorations += 1;
+            let span = ((current_size as f64 * self.cfg.explore_step).ceil() as i64).max(1);
+            let delta = self.rng.range(0, 2 * span as u64 + 1) as i64 - span;
+            (current_size as i64 + delta).max(self.cfg.lower_bound as i64) as usize
+        } else {
+            // Optimize: move halfway toward the historically best size.
+            self.optimizations += 1;
+            let best = self
+                .perf_log
+                .iter()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(s, _)| *s)
+                .unwrap_or(current_size);
+            ((current_size + best) / 2).max(1)
+        };
+        let target = target.clamp(self.cfg.lower_bound, self.cfg.upper_bound);
+        if target != current_size {
+            self.resizes += 1;
+            Some(target)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(cfg: ResizerConfig) -> OptimalSizeExploringResizer {
+        OptimalSizeExploringResizer::new(cfg, Rng::new(42))
+    }
+
+    #[test]
+    fn no_action_before_interval() {
+        let mut r = mk(ResizerConfig::default());
+        r.record(10);
+        assert_eq!(r.poll(100, 4, 10), None);
+    }
+
+    #[test]
+    fn shrinks_when_underutilized_and_idle() {
+        let mut r = mk(ResizerConfig { min_utilization: 0.5, ..Default::default() });
+        // 1 message of 10ms over a 5000ms window on 8 routees => util ~0
+        r.record(10);
+        let next = r.poll(5_000, 8, 0);
+        assert_eq!(next, Some(7));
+    }
+
+    #[test]
+    fn respects_bounds() {
+        let cfg = ResizerConfig { lower_bound: 2, upper_bound: 4, ..Default::default() };
+        let mut r = mk(cfg);
+        for window in 1..50u64 {
+            // Saturate: lots of work, deep queue.
+            for _ in 0..1000 {
+                r.record(5);
+            }
+            if let Some(n) = r.poll(window * 5_000, 3, 100) {
+                assert!((2..=4).contains(&n), "size {n} out of bounds");
+            }
+        }
+    }
+
+    #[test]
+    fn converges_toward_best_recorded_size() {
+        let cfg = ResizerConfig {
+            explore_ratio: 0.0, // pure optimize
+            upper_bound: 32,
+            ..Default::default()
+        };
+        let mut r = mk(cfg);
+        // Seed the perf log: size 16 had the best throughput.
+        r.perf_log.insert(4, 0.5);
+        r.perf_log.insert(16, 5.0);
+        for _ in 0..500 {
+            r.record(5);
+        }
+        let next = r.poll(5_000, 4, 50).unwrap();
+        assert_eq!(next, 10, "half-way from 4 toward 16");
+    }
+
+    #[test]
+    fn exploration_counter_increments() {
+        let cfg = ResizerConfig { explore_ratio: 1.0, ..Default::default() };
+        let mut r = mk(cfg);
+        for w in 1..20u64 {
+            for _ in 0..2000 {
+                r.record(4);
+            }
+            r.poll(w * 5_000, 8, 50);
+        }
+        assert!(r.explorations > 0);
+        assert_eq!(r.optimizations, 0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Supervisor strategies — the paper's "self-healing" story.
+//!
+//! When a handler fails, the owning cell applies its strategy: resume the
+//! routee (keep state), restart it (fresh state from the factory), stop it,
+//! or restart with exponential backoff. Restart budgets are windowed, as in
+//! Akka's `OneForOneStrategy(maxNrOfRetries, withinTimeRange)`.
+
+use crate::sim::SimTime;
+
+/// What to do when a routee's handler returns an error.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SupervisorStrategy {
+    /// Keep the routee and its state; drop the failed message.
+    Resume,
+    /// Recreate the routee from its factory, bounded by a retry window.
+    Restart { max_retries: u32, within: SimTime },
+    /// Stop the routee permanently.
+    Stop,
+    /// Restart with exponential backoff: the routee is unavailable for
+    /// `base * 2^(consecutive_failures-1)` capped at `cap`.
+    Backoff { base: SimTime, cap: SimTime, max_retries: u32 },
+}
+
+impl Default for SupervisorStrategy {
+    fn default() -> Self {
+        // Akka default-ish: generous restart budget.
+        SupervisorStrategy::Restart { max_retries: 10, within: 60_000 }
+    }
+}
+
+/// Per-routee failure bookkeeping.
+#[derive(Debug, Clone, Default)]
+pub struct FailureState {
+    pub consecutive: u32,
+    pub window_start: SimTime,
+    pub in_window: u32,
+}
+
+/// Decision produced by applying a strategy to a failure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Directive {
+    Resume,
+    /// Restart now (or after the given backoff delay).
+    Restart { delay: SimTime },
+    Stop,
+}
+
+/// Apply `strategy` to a failure at time `now`, updating `state`.
+pub fn decide(
+    strategy: SupervisorStrategy,
+    state: &mut FailureState,
+    now: SimTime,
+    fatal: bool,
+) -> Directive {
+    state.consecutive += 1;
+    if fatal {
+        return Directive::Stop;
+    }
+    match strategy {
+        SupervisorStrategy::Resume => Directive::Resume,
+        SupervisorStrategy::Stop => Directive::Stop,
+        SupervisorStrategy::Restart { max_retries, within } => {
+            if now.saturating_sub(state.window_start) > within {
+                state.window_start = now;
+                state.in_window = 0;
+            }
+            state.in_window += 1;
+            if state.in_window > max_retries {
+                Directive::Stop
+            } else {
+                Directive::Restart { delay: 0 }
+            }
+        }
+        SupervisorStrategy::Backoff { base, cap, max_retries } => {
+            if state.consecutive > max_retries {
+                Directive::Stop
+            } else {
+                let exp = state.consecutive.saturating_sub(1).min(20);
+                let delay = base.saturating_mul(1 << exp).min(cap);
+                Directive::Restart { delay }
+            }
+        }
+    }
+}
+
+/// Reset after a successful message (clears consecutive-failure count).
+pub fn on_success(state: &mut FailureState) {
+    state.consecutive = 0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resume_always_resumes() {
+        let mut st = FailureState::default();
+        for _ in 0..100 {
+            assert_eq!(decide(SupervisorStrategy::Resume, &mut st, 0, false), Directive::Resume);
+        }
+    }
+
+    #[test]
+    fn fatal_overrides() {
+        let mut st = FailureState::default();
+        assert_eq!(decide(SupervisorStrategy::Resume, &mut st, 0, true), Directive::Stop);
+    }
+
+    #[test]
+    fn restart_budget_window() {
+        let strat = SupervisorStrategy::Restart { max_retries: 3, within: 1000 };
+        let mut st = FailureState::default();
+        for i in 0..3 {
+            assert_eq!(decide(strat, &mut st, i * 10, false), Directive::Restart { delay: 0 });
+        }
+        // 4th failure inside the window -> stop
+        assert_eq!(decide(strat, &mut st, 40, false), Directive::Stop);
+        // new window resets the budget
+        let mut st = FailureState::default();
+        assert_eq!(decide(strat, &mut st, 0, false), Directive::Restart { delay: 0 });
+        assert_eq!(decide(strat, &mut st, 5000, false), Directive::Restart { delay: 0 });
+        assert_eq!(st.in_window, 1, "window should have reset");
+    }
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        let strat = SupervisorStrategy::Backoff { base: 100, cap: 1000, max_retries: 10 };
+        let mut st = FailureState::default();
+        let delays: Vec<SimTime> = (0..6)
+            .map(|_| match decide(strat, &mut st, 0, false) {
+                Directive::Restart { delay } => delay,
+                other => panic!("{other:?}"),
+            })
+            .collect();
+        assert_eq!(delays, vec![100, 200, 400, 800, 1000, 1000]);
+        // success resets the exponent
+        on_success(&mut st);
+        assert_eq!(decide(strat, &mut st, 0, false), Directive::Restart { delay: 100 });
+    }
+
+    #[test]
+    fn backoff_exhausts_to_stop() {
+        let strat = SupervisorStrategy::Backoff { base: 1, cap: 10, max_retries: 2 };
+        let mut st = FailureState::default();
+        decide(strat, &mut st, 0, false);
+        decide(strat, &mut st, 0, false);
+        assert_eq!(decide(strat, &mut st, 0, false), Directive::Stop);
+    }
+}

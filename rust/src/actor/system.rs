@@ -1,0 +1,833 @@
+//! The actor system: cells, balancing pools, timers and the
+//! discrete-event dispatch loop.
+//!
+//! Semantics reproduced from the paper's Akka deployment:
+//! - every actor (or pool) owns one mailbox ("all routees share the same
+//!   mail box" — balancing pool);
+//! - a pool has N routees that pull from the shared mailbox as they become
+//!   idle (busy→idle work redistribution);
+//! - bounded mailboxes shed overflow to the dead-letter office;
+//! - an optional [`OptimalSizeExploringResizer`] adapts N to throughput;
+//! - supervisor strategies decide what a routee failure does.
+//!
+//! Time is virtual: each handler declares its service time via
+//! [`Ctx::take`], outbound messages dispatch at handler completion, and the
+//! system's event loop interleaves everything deterministically.
+
+use super::actor::{Actor, Ctx, Outbound};
+use super::dead_letters::{DeadLetter, DeadLetterReason, DeadLetters};
+use super::mailbox::{Mailbox, MailboxKind};
+use super::message::{ActorId, Envelope, Msg, Priority, PRIORITY_NORMAL, SYSTEM};
+use super::resizer::OptimalSizeExploringResizer;
+use super::supervision::{decide, on_success, Directive, FailureState, SupervisorStrategy};
+use crate::sim::{Clock, EventQueue, SimTime};
+use std::cell::RefCell;
+use std::rc::Rc;
+use crate::util::rng::Rng;
+
+/// Factory that builds a routee instance (index within pool).
+pub type ActorFactory<W> = Box<dyn Fn(usize) -> Box<dyn Actor<W>>>;
+
+struct Routee<W> {
+    actor: Option<Box<dyn Actor<W>>>,
+    /// None => idle; Some(t) => processing until t (or backoff until t).
+    busy_until: Option<SimTime>,
+    stopped: bool,
+    failures: FailureState,
+}
+
+struct Cell<W> {
+    name: String,
+    mailbox: Mailbox,
+    routees: Vec<Routee<W>>,
+    factory: ActorFactory<W>,
+    strategy: SupervisorStrategy,
+    resizer: Option<OptimalSizeExploringResizer>,
+    /// Desired pool size (>= live routees when shrinking lazily).
+    desired_size: usize,
+    stopped: bool,
+    // counters
+    processed: u64,
+    failed: u64,
+    restarts: u64,
+    busy_ms: SimTime,
+    queue_wait_ms: SimTime,
+}
+
+impl<W> Cell<W> {
+    fn live_routees(&self) -> usize {
+        self.routees.iter().filter(|r| !r.stopped).count()
+    }
+
+    fn idle_routee(&self) -> Option<usize> {
+        self.routees
+            .iter()
+            .position(|r| !r.stopped && r.actor.is_some() && r.busy_until.is_none())
+    }
+}
+
+enum Ev {
+    Deliver(Envelope),
+    Complete { cell: u32, slot: usize },
+    RestartDone { cell: u32, slot: usize },
+    Timer { idx: usize },
+}
+
+struct Timer<W> {
+    to: ActorId,
+    interval: SimTime,
+    priority: Priority,
+    make: Box<dyn Fn() -> Msg>,
+    cancelled: bool,
+    _ph: std::marker::PhantomData<W>,
+}
+
+/// Snapshot of one cell's runtime stats (for `inspect` and benches).
+#[derive(Debug, Clone)]
+pub struct CellStats {
+    pub name: String,
+    pub pool_size: usize,
+    pub mailbox_len: usize,
+    pub mailbox_peak: usize,
+    pub mailbox_rejected: u64,
+    pub processed: u64,
+    pub failed: u64,
+    pub restarts: u64,
+    pub busy_ms: SimTime,
+    pub mean_queue_wait_ms: f64,
+}
+
+/// The actor system over a shared world `W`.
+pub struct ActorSystem<W> {
+    cells: Vec<Cell<W>>,
+    events: EventQueue<Ev>,
+    timers: Vec<Timer<W>>,
+    pub clock: Clock,
+    /// Shared with the world so a DeadLettersListener actor can observe it.
+    pub dead_letters: Rc<RefCell<DeadLetters>>,
+    seq: u64,
+    rng_root: Rng,
+    /// Total messages dispatched (including redeliveries).
+    pub dispatched: u64,
+}
+
+impl<W> ActorSystem<W> {
+    pub fn new(seed: u64) -> Self {
+        ActorSystem {
+            cells: Vec::new(),
+            events: EventQueue::new(),
+            timers: Vec::new(),
+            clock: Clock::virtual_clock(),
+            dead_letters: Rc::new(RefCell::new(DeadLetters::default())),
+            seq: 0,
+            rng_root: Rng::new(seed),
+            dispatched: 0,
+        }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.clock.now()
+    }
+
+    // ---- spawning ------------------------------------------------------
+
+    /// Spawn a single actor with the given mailbox and default supervision.
+    pub fn spawn(
+        &mut self,
+        name: &str,
+        mailbox: MailboxKind,
+        factory: ActorFactory<W>,
+    ) -> ActorId {
+        self.spawn_pool(name, mailbox, factory, 1, SupervisorStrategy::default(), None)
+    }
+
+    /// Spawn a balancing pool of `size` routees sharing one mailbox.
+    pub fn spawn_pool(
+        &mut self,
+        name: &str,
+        mailbox: MailboxKind,
+        factory: ActorFactory<W>,
+        size: usize,
+        strategy: SupervisorStrategy,
+        resizer: Option<OptimalSizeExploringResizer>,
+    ) -> ActorId {
+        assert!(size >= 1, "pool needs at least one routee");
+        let mut routees = Vec::with_capacity(size);
+        for i in 0..size {
+            routees.push(Routee {
+                actor: Some(factory(i)),
+                busy_until: None,
+                stopped: false,
+                failures: FailureState::default(),
+            });
+        }
+        let cell = Cell {
+            name: name.to_string(),
+            mailbox: Mailbox::new(mailbox),
+            routees,
+            factory,
+            strategy,
+            resizer,
+            desired_size: size,
+            stopped: false,
+            processed: 0,
+            failed: 0,
+            restarts: 0,
+            busy_ms: 0,
+            queue_wait_ms: 0,
+        };
+        self.cells.push(cell);
+        ActorId(self.cells.len() as u32 - 1)
+    }
+
+    /// Register a periodic timer that sends `make()` to `to` every
+    /// `interval`, first firing at `first_at`.
+    pub fn schedule_periodic<M: Send + 'static>(
+        &mut self,
+        first_at: SimTime,
+        interval: SimTime,
+        to: ActorId,
+        priority: Priority,
+        make: impl Fn() -> M + 'static,
+    ) -> usize {
+        let idx = self.timers.len();
+        self.timers.push(Timer {
+            to,
+            interval,
+            priority,
+            make: Box::new(move || Box::new(make()) as Msg),
+            cancelled: false,
+            _ph: std::marker::PhantomData,
+        });
+        self.events.push(first_at, Ev::Timer { idx });
+        idx
+    }
+
+    pub fn cancel_timer(&mut self, idx: usize) {
+        if let Some(t) = self.timers.get_mut(idx) {
+            t.cancelled = true;
+        }
+    }
+
+    // ---- messaging -------------------------------------------------------
+
+    /// Send a message from outside any actor (e.g. the bootstrapper/CLI).
+    pub fn tell<M: Send + 'static>(&mut self, to: ActorId, msg: M) {
+        self.tell_pri(to, PRIORITY_NORMAL, msg);
+    }
+
+    pub fn tell_pri<M: Send + 'static>(&mut self, to: ActorId, priority: Priority, msg: M) {
+        let at = self.now();
+        self.enqueue_at(at, SYSTEM, to, priority, Box::new(msg));
+    }
+
+    /// Send at a future virtual time.
+    pub fn tell_at<M: Send + 'static>(&mut self, at: SimTime, to: ActorId, msg: M) {
+        self.enqueue_at(at, SYSTEM, to, PRIORITY_NORMAL, Box::new(msg));
+    }
+
+    fn enqueue_at(&mut self, at: SimTime, from: ActorId, to: ActorId, priority: Priority, msg: Msg) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.events.push(
+            at,
+            Ev::Deliver(Envelope { to, from, priority, seq, enqueued_at: at, msg }),
+        );
+    }
+
+    // ---- running ---------------------------------------------------------
+
+    /// Run the event loop over the shared world until `t_end` (inclusive)
+    /// or until no events remain.
+    pub fn run_until(&mut self, world: &mut W, t_end: SimTime) {
+        while let Some((t, ev)) = self.events.pop_until(t_end) {
+            self.clock.advance_to(t);
+            self.handle(world, ev);
+        }
+        self.clock.advance_to(t_end);
+    }
+
+    /// Run until the event queue drains completely.
+    pub fn run_to_idle(&mut self, world: &mut W) {
+        while let Some((t, ev)) = self.events.pop() {
+            self.clock.advance_to(t);
+            self.handle(world, ev);
+        }
+    }
+
+    /// Pending event count (diagnostics).
+    pub fn pending_events(&self) -> usize {
+        self.events.len()
+    }
+
+    fn handle(&mut self, world: &mut W, ev: Ev) {
+        match ev {
+            Ev::Deliver(env) => self.deliver(world, env),
+            Ev::Complete { cell, slot } => self.complete(world, cell, slot),
+            Ev::RestartDone { cell, slot } => {
+                let now = self.now();
+                if let Some(c) = self.cells.get_mut(cell as usize) {
+                    if let Some(r) = c.routees.get_mut(slot) {
+                        if !r.stopped {
+                            r.busy_until = None;
+                        }
+                    }
+                }
+                let _ = now;
+                self.pump(world, cell);
+            }
+            Ev::Timer { idx } => {
+                let now = self.now();
+                let (to, priority, interval, msg, cancelled) = {
+                    let t = &self.timers[idx];
+                    (t.to, t.priority, t.interval, if t.cancelled { None } else { Some((t.make)()) }, t.cancelled)
+                };
+                if let Some(msg) = msg {
+                    self.enqueue_at(now, SYSTEM, to, priority, msg);
+                }
+                if !cancelled && interval > 0 {
+                    self.events.push(now + interval, Ev::Timer { idx });
+                }
+            }
+        }
+    }
+
+    fn deliver(&mut self, world: &mut W, env: Envelope) {
+        let now = self.now();
+        let to = env.to;
+        let Some(cell) = self.cells.get_mut(to.0 as usize) else {
+            self.dead_letters.borrow_mut().publish(DeadLetter {
+                at: now,
+                to,
+                from: env.from,
+                priority: env.priority,
+                reason: DeadLetterReason::NoSuchActor,
+            });
+            return;
+        };
+        if cell.stopped || cell.live_routees() == 0 {
+            self.dead_letters.borrow_mut().publish(DeadLetter {
+                at: now,
+                to,
+                from: env.from,
+                priority: env.priority,
+                reason: DeadLetterReason::ActorStopped,
+            });
+            return;
+        }
+        if let Err(rejected) = cell.mailbox.push(env) {
+            self.dead_letters.borrow_mut().publish(DeadLetter {
+                at: now,
+                to,
+                from: rejected.from,
+                priority: rejected.priority,
+                reason: DeadLetterReason::MailboxOverflow,
+            });
+            return;
+        }
+        self.pump(world, to.0);
+    }
+
+    /// Feed idle routees from the shared mailbox.
+    fn pump(&mut self, world: &mut W, cell_idx: u32) {
+        loop {
+            let now = self.now();
+            let (slot, env) = {
+                let cell = &mut self.cells[cell_idx as usize];
+                if cell.stopped || cell.mailbox.is_empty() {
+                    return;
+                }
+                let Some(slot) = cell.idle_routee() else { return };
+                let Some(env) = cell.mailbox.pop() else { return };
+                (slot, env)
+            };
+            self.run_handler(world, cell_idx, slot, env, now);
+        }
+    }
+
+    fn run_handler(&mut self, world: &mut W, cell_idx: u32, slot: usize, env: Envelope, now: SimTime) {
+        self.dispatched += 1;
+        let rng = self.rng_root.stream((cell_idx as u64) << 20 | slot as u64).stream(self.dispatched);
+        let mut ctx = Ctx::new(now, ActorId(cell_idx), slot, rng);
+        let wait = now.saturating_sub(env.enqueued_at);
+
+        let result = {
+            let cell = &mut self.cells[cell_idx as usize];
+            cell.queue_wait_ms += wait;
+            let routee = &mut cell.routees[slot];
+            let actor = routee.actor.as_mut().expect("idle routee has actor");
+            actor.receive(&mut ctx, world, env.msg)
+        };
+
+        let service = ctx.service_ms;
+        let outbox = std::mem::take(&mut ctx.outbox);
+        let stop_requested = ctx.stop_requested;
+        let done_at = now + service;
+
+        // Dispatch outbound messages at completion time.
+        for Outbound { delay, to, priority, msg } in outbox {
+            self.enqueue_at(done_at + delay, ActorId(cell_idx), to, priority, msg);
+        }
+
+        let cell = &mut self.cells[cell_idx as usize];
+        cell.busy_ms += service;
+        let routee = &mut cell.routees[slot];
+
+        match result {
+            Ok(()) => {
+                cell.processed += 1;
+                on_success(&mut routee.failures);
+                if let Some(rz) = cell.resizer.as_mut() {
+                    rz.record(service);
+                }
+                if stop_requested {
+                    routee.stopped = true;
+                    routee.actor = None;
+                }
+            }
+            Err(err) => {
+                cell.failed += 1;
+                let directive = decide(cell.strategy, &mut routee.failures, now, err.fatal);
+                match directive {
+                    Directive::Resume => {}
+                    Directive::Restart { delay } => {
+                        cell.restarts += 1;
+                        routee.actor = Some((cell.factory)(slot));
+                        if delay > 0 {
+                            // Unavailable during backoff.
+                            routee.busy_until = Some(done_at + delay);
+                            self.events
+                                .push(done_at + delay, Ev::RestartDone { cell: cell_idx, slot });
+                            // Completion event still fires to account busy time.
+                            self.events.push(done_at, Ev::Complete { cell: cell_idx, slot: usize::MAX });
+                            return;
+                        }
+                    }
+                    Directive::Stop => {
+                        routee.stopped = true;
+                        routee.actor = None;
+                    }
+                }
+            }
+        }
+
+        if !routee.stopped {
+            routee.busy_until = Some(done_at);
+        }
+        self.events.push(done_at, Ev::Complete { cell: cell_idx, slot });
+
+        // If the whole cell died, drain its mailbox to dead letters.
+        if self.cells[cell_idx as usize].live_routees() == 0 {
+            self.drain_to_dead_letters(cell_idx, now);
+        }
+    }
+
+    fn complete(&mut self, world: &mut W, cell_idx: u32, slot: usize) {
+        let now = self.now();
+        {
+            let cell = &mut self.cells[cell_idx as usize];
+            if slot != usize::MAX {
+                if let Some(r) = cell.routees.get_mut(slot) {
+                    if r.busy_until == Some(now) {
+                        r.busy_until = None;
+                    }
+                }
+            }
+            // Apply lazy shrink: drop idle surplus routees.
+            while cell.live_routees() > cell.desired_size {
+                if let Some(idx) = cell
+                    .routees
+                    .iter()
+                    .rposition(|r| !r.stopped && r.busy_until.is_none() && r.actor.is_some())
+                {
+                    cell.routees[idx].stopped = true;
+                    cell.routees[idx].actor = None;
+                } else {
+                    break;
+                }
+            }
+        }
+
+        // Resizer decision point.
+        let resize_to = {
+            let cell = &mut self.cells[cell_idx as usize];
+            let size = cell.live_routees();
+            let qlen = cell.mailbox.len();
+            cell.resizer.as_mut().and_then(|rz| rz.poll(now, size, qlen))
+        };
+        if let Some(target) = resize_to {
+            self.resize(cell_idx, target);
+        }
+
+        self.pump(world, cell_idx);
+    }
+
+    fn resize(&mut self, cell_idx: u32, target: usize) {
+        let cell = &mut self.cells[cell_idx as usize];
+        cell.desired_size = target;
+        let live = cell.live_routees();
+        if target > live {
+            // Grow: reuse stopped slots first, then append.
+            let mut need = target - live;
+            for (i, r) in cell.routees.iter_mut().enumerate() {
+                if need == 0 {
+                    break;
+                }
+                if r.stopped {
+                    *r = Routee {
+                        actor: Some((cell.factory)(i)),
+                        busy_until: None,
+                        stopped: false,
+                        failures: FailureState::default(),
+                    };
+                    need -= 1;
+                }
+            }
+            for _ in 0..need {
+                let i = cell.routees.len();
+                cell.routees.push(Routee {
+                    actor: Some((cell.factory)(i)),
+                    busy_until: None,
+                    stopped: false,
+                    failures: FailureState::default(),
+                });
+            }
+        }
+        // Shrink happens lazily in `complete`.
+    }
+
+    fn drain_to_dead_letters(&mut self, cell_idx: u32, now: SimTime) {
+        let cell = &mut self.cells[cell_idx as usize];
+        cell.stopped = true;
+        let drained = cell.mailbox.drain();
+        for env in drained {
+            self.dead_letters.borrow_mut().publish(DeadLetter {
+                at: now,
+                to: env.to,
+                from: env.from,
+                priority: env.priority,
+                reason: DeadLetterReason::DrainedOnStop,
+            });
+        }
+    }
+
+    // ---- introspection ---------------------------------------------------
+
+    pub fn stats(&self, id: ActorId) -> CellStats {
+        let c = &self.cells[id.0 as usize];
+        CellStats {
+            name: c.name.clone(),
+            pool_size: c.live_routees(),
+            mailbox_len: c.mailbox.len(),
+            mailbox_peak: c.mailbox.peak_len,
+            mailbox_rejected: c.mailbox.rejected,
+            processed: c.processed,
+            failed: c.failed,
+            restarts: c.restarts,
+            busy_ms: c.busy_ms,
+            mean_queue_wait_ms: if c.processed + c.failed > 0 {
+                c.queue_wait_ms as f64 / (c.processed + c.failed) as f64
+            } else {
+                0.0
+            },
+        }
+    }
+
+    pub fn all_stats(&self) -> Vec<CellStats> {
+        (0..self.cells.len() as u32).map(|i| self.stats(ActorId(i))).collect()
+    }
+
+    pub fn name_of(&self, id: ActorId) -> &str {
+        &self.cells[id.0 as usize].name
+    }
+
+    pub fn cell_count(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Current mailbox depth of an actor (used by FeedRouter's
+    /// replenishment logic, which "programmatically keeps track of the
+    /// worker mailbox size").
+    pub fn mailbox_len(&self, id: ActorId) -> usize {
+        self.cells[id.0 as usize].mailbox.len()
+    }
+
+    /// Messages processed so far by an actor.
+    pub fn processed(&self, id: ActorId) -> u64 {
+        self.cells[id.0 as usize].processed
+    }
+
+    /// Live pool size.
+    pub fn pool_size(&self, id: ActorId) -> usize {
+        self.cells[id.0 as usize].live_routees()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::actor::resizer::ResizerConfig;
+
+    /// Trivial world for unit tests.
+    #[derive(Default)]
+    struct TestWorld {
+        log: Vec<(SimTime, String)>,
+        counter: u64,
+    }
+
+    struct Echo {
+        service: SimTime,
+    }
+
+    impl Actor<TestWorld> for Echo {
+        fn receive(&mut self, ctx: &mut Ctx, world: &mut TestWorld, msg: Msg) -> ActorResult {
+            let m = msg.downcast::<String>().unwrap();
+            ctx.take(self.service);
+            world.log.push((ctx.now(), *m));
+            world.counter += 1;
+            Ok(())
+        }
+    }
+
+    use crate::actor::actor::ActorResult;
+    use crate::actor::actor::ActorError;
+
+    #[test]
+    fn single_actor_processes_in_order() {
+        let mut sys: ActorSystem<TestWorld> = ActorSystem::new(1);
+        let id = sys.spawn("echo", MailboxKind::Unbounded, Box::new(|_| Box::new(Echo { service: 10 })));
+        let mut w = TestWorld::default();
+        sys.tell(id, "a".to_string());
+        sys.tell(id, "b".to_string());
+        sys.tell(id, "c".to_string());
+        sys.run_to_idle(&mut w);
+        let names: Vec<&str> = w.log.iter().map(|(_, s)| s.as_str()).collect();
+        assert_eq!(names, vec!["a", "b", "c"]);
+        // Serial processing: starts at 0, 10, 20.
+        assert_eq!(w.log[1].0, 10);
+        assert_eq!(w.log[2].0, 20);
+        assert_eq!(sys.processed(id), 3);
+    }
+
+    #[test]
+    fn pool_processes_concurrently_in_virtual_time() {
+        let mut sys: ActorSystem<TestWorld> = ActorSystem::new(1);
+        let id = sys.spawn_pool(
+            "pool",
+            MailboxKind::Unbounded,
+            Box::new(|_| Box::new(Echo { service: 100 })),
+            4,
+            SupervisorStrategy::default(),
+            None,
+        );
+        let mut w = TestWorld::default();
+        for i in 0..8 {
+            sys.tell(id, format!("m{i}"));
+        }
+        sys.run_to_idle(&mut w);
+        // 8 messages, 4-wide pool, 100ms each => makespan 200ms.
+        let t_end = w.log.iter().map(|(t, _)| *t).max().unwrap();
+        assert_eq!(t_end, 100); // start-of-handler times: batch2 starts at 100
+        assert_eq!(sys.now(), 200);
+        assert_eq!(w.counter, 8);
+    }
+
+    #[test]
+    fn bounded_mailbox_sheds_to_dead_letters() {
+        let mut sys: ActorSystem<TestWorld> = ActorSystem::new(1);
+        let id = sys.spawn("slow", MailboxKind::Bounded(2), Box::new(|_| Box::new(Echo { service: 50 })));
+        let mut w = TestWorld::default();
+        // 1 in-flight + 2 queued + 3 rejected
+        for i in 0..6 {
+            sys.tell(id, format!("m{i}"));
+        }
+        sys.run_to_idle(&mut w);
+        assert_eq!(w.counter + sys.dead_letters.borrow().by_overflow, 6);
+        assert!(sys.dead_letters.borrow().by_overflow >= 1, "overflow expected");
+    }
+
+    struct FailsN {
+        remaining: u32,
+    }
+
+    impl Actor<TestWorld> for FailsN {
+        fn receive(&mut self, _ctx: &mut Ctx, world: &mut TestWorld, _msg: Msg) -> ActorResult {
+            if self.remaining > 0 {
+                self.remaining -= 1;
+                Err(ActorError::new("boom"))
+            } else {
+                world.counter += 1;
+                Ok(())
+            }
+        }
+    }
+
+    #[test]
+    fn restart_recreates_state() {
+        let mut sys: ActorSystem<TestWorld> = ActorSystem::new(1);
+        // Each instance fails its first message, then succeeds — restart
+        // resets `remaining`, so every message after a failure fails once.
+        let id = sys.spawn_pool(
+            "flaky",
+            MailboxKind::Unbounded,
+            Box::new(|_| Box::new(FailsN { remaining: 1 })),
+            1,
+            SupervisorStrategy::Restart { max_retries: 100, within: 1_000_000 },
+            None,
+        );
+        let mut w = TestWorld::default();
+        for _ in 0..3 {
+            sys.tell(id, ());
+        }
+        sys.run_to_idle(&mut w);
+        let st = sys.stats(id);
+        // msg1 fails (restart), msg2 fails again (fresh instance), ...
+        assert_eq!(st.failed, 3);
+        assert_eq!(st.restarts, 3);
+        assert_eq!(w.counter, 0);
+    }
+
+    #[test]
+    fn resume_keeps_state() {
+        let mut sys: ActorSystem<TestWorld> = ActorSystem::new(1);
+        let id = sys.spawn_pool(
+            "flaky",
+            MailboxKind::Unbounded,
+            Box::new(|_| Box::new(FailsN { remaining: 1 })),
+            1,
+            SupervisorStrategy::Resume,
+            None,
+        );
+        let mut w = TestWorld::default();
+        for _ in 0..3 {
+            sys.tell(id, ());
+        }
+        sys.run_to_idle(&mut w);
+        // First fails, state survives, next two succeed.
+        assert_eq!(w.counter, 2);
+        assert_eq!(sys.stats(id).failed, 1);
+    }
+
+    #[test]
+    fn stop_strategy_sends_rest_to_dead_letters() {
+        let mut sys: ActorSystem<TestWorld> = ActorSystem::new(1);
+        let id = sys.spawn_pool(
+            "fragile",
+            MailboxKind::Unbounded,
+            Box::new(|_| Box::new(FailsN { remaining: 99 })),
+            1,
+            SupervisorStrategy::Stop,
+            None,
+        );
+        let mut w = TestWorld::default();
+        for _ in 0..5 {
+            sys.tell(id, ());
+        }
+        sys.run_to_idle(&mut w);
+        assert_eq!(sys.stats(id).failed, 1);
+        assert!(sys.dead_letters.borrow().total >= 4, "queued + later msgs dead-lettered");
+        assert_eq!(w.counter, 0);
+    }
+
+    #[test]
+    fn priorities_jump_the_queue() {
+        let mut sys: ActorSystem<TestWorld> = ActorSystem::new(1);
+        let id = sys.spawn(
+            "pri",
+            MailboxKind::BoundedStablePriority(100),
+            Box::new(|_| Box::new(Echo { service: 10 })),
+        );
+        let mut w = TestWorld::default();
+        sys.tell(id, "normal-1".to_string());
+        sys.tell(id, "normal-2".to_string());
+        sys.tell_pri(id, 1, "urgent".to_string());
+        sys.run_to_idle(&mut w);
+        let names: Vec<&str> = w.log.iter().map(|(_, s)| s.as_str()).collect();
+        // normal-1 is already in-flight when urgent arrives.
+        assert_eq!(names, vec!["normal-1", "urgent", "normal-2"]);
+    }
+
+    #[test]
+    fn periodic_timer_fires() {
+        let mut sys: ActorSystem<TestWorld> = ActorSystem::new(1);
+        let id = sys.spawn("tick", MailboxKind::Unbounded, Box::new(|_| Box::new(Echo { service: 0 })));
+        let mut w = TestWorld::default();
+        sys.schedule_periodic(0, 100, id, PRIORITY_NORMAL, || "tick".to_string());
+        sys.run_until(&mut w, 450);
+        assert_eq!(w.counter, 5); // t=0,100,200,300,400
+    }
+
+    #[test]
+    fn cancelled_timer_stops() {
+        let mut sys: ActorSystem<TestWorld> = ActorSystem::new(1);
+        let id = sys.spawn("tick", MailboxKind::Unbounded, Box::new(|_| Box::new(Echo { service: 0 })));
+        let mut w = TestWorld::default();
+        let t = sys.schedule_periodic(0, 100, id, PRIORITY_NORMAL, || "tick".to_string());
+        sys.run_until(&mut w, 250);
+        sys.cancel_timer(t);
+        sys.run_until(&mut w, 1000);
+        assert_eq!(w.counter, 3);
+    }
+
+    #[test]
+    fn resizer_grows_under_load() {
+        let mut sys: ActorSystem<TestWorld> = ActorSystem::new(7);
+        let rz = OptimalSizeExploringResizer::new(
+            ResizerConfig {
+                lower_bound: 1,
+                upper_bound: 16,
+                action_interval: 1_000,
+                explore_ratio: 0.5,
+                ..Default::default()
+            },
+            Rng::new(3),
+        );
+        let id = sys.spawn_pool(
+            "work",
+            MailboxKind::Unbounded,
+            Box::new(|_| Box::new(Echo { service: 50 })),
+            1,
+            SupervisorStrategy::default(),
+            Some(rz),
+        );
+        let mut w = TestWorld::default();
+        // Offer 40 msg/s against a 20 msg/s single routee: must grow.
+        for i in 0..2000u64 {
+            sys.tell_at(i * 25, id, format!("m{i}"));
+        }
+        sys.run_to_idle(&mut w);
+        assert!(sys.pool_size(id) > 1, "pool should have grown, size={}", sys.pool_size(id));
+        assert_eq!(w.counter, 2000);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        fn run() -> (u64, SimTime) {
+            let mut sys: ActorSystem<TestWorld> = ActorSystem::new(99);
+            let id = sys.spawn_pool(
+                "p",
+                MailboxKind::BoundedStablePriority(50),
+                Box::new(|_| Box::new(Echo { service: 7 })),
+                3,
+                SupervisorStrategy::default(),
+                None,
+            );
+            let mut w = TestWorld::default();
+            for i in 0..200u64 {
+                sys.tell_at(i * 3, id, format!("m{i}"));
+            }
+            sys.run_to_idle(&mut w);
+            (w.counter, sys.now())
+        }
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn tell_to_unknown_actor_is_dead_letter() {
+        let mut sys: ActorSystem<TestWorld> = ActorSystem::new(1);
+        let mut w = TestWorld::default();
+        sys.tell(ActorId(42), "nobody home".to_string());
+        sys.run_to_idle(&mut w);
+        assert_eq!(sys.dead_letters.borrow().by_missing, 1);
+    }
+}

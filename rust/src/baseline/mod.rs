@@ -1,0 +1,190 @@
+//! The "too-late architecture" baseline.
+//!
+//! The paper's introduction motivates AlertMix against batch architectures
+//! ("a 'too late architecture' that focuses on batch processing cannot
+//! realize the use cases"). This module implements that comparator: a
+//! naive periodic batch poller that sweeps *every* feed once per batch
+//! window with a fixed worker fleet — no SQS, no adaptive scheduling, no
+//! backpressure, no priority path. `bench_baseline` measures what the
+//! paper claims qualitatively: item delivery latency collapses under the
+//! streaming design.
+
+use crate::feedsim::{Conditional, FeedUniverse, HttpSim, HttpStatus};
+use crate::sim::SimTime;
+use crate::store::streams::Channel;
+use std::collections::HashMap;
+
+/// Results of one batch-poller run.
+#[derive(Debug, Default)]
+pub struct BatchRunReport {
+    pub sweeps: u64,
+    pub polls: u64,
+    pub items: u64,
+    /// (feed id, publish -> delivery latency ms) samples.
+    pub latencies: Vec<(u64, SimTime)>,
+    /// Virtual time each sweep took (fleet-limited).
+    pub sweep_durations: Vec<SimTime>,
+}
+
+impl BatchRunReport {
+    pub fn latency_pct(&self, p: f64) -> Option<SimTime> {
+        Self::pct(self.latencies.iter().map(|(_, l)| *l).collect(), p)
+    }
+
+    /// Percentile over a feed subset (popularity-split reporting).
+    pub fn latency_pct_where(&self, p: f64, keep: impl Fn(u64) -> bool) -> Option<SimTime> {
+        Self::pct(
+            self.latencies.iter().filter(|(id, _)| keep(*id)).map(|(_, l)| *l).collect(),
+            p,
+        )
+    }
+
+    fn pct(mut xs: Vec<SimTime>, p: f64) -> Option<SimTime> {
+        if xs.is_empty() {
+            return None;
+        }
+        xs.sort_unstable();
+        Some(xs[((xs.len() - 1) as f64 * p).round() as usize])
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        self.latencies.iter().map(|(_, l)| *l).sum::<SimTime>() as f64
+            / self.latencies.len() as f64
+    }
+}
+
+/// Configuration of the naive poller.
+#[derive(Debug, Clone)]
+pub struct BatchPollerConfig {
+    /// Sweep cadence (e.g. hourly batch job).
+    pub sweep_interval: SimTime,
+    /// Fixed worker fleet size.
+    pub workers: usize,
+    /// Mean per-fetch virtual cost used for sweep-duration modeling
+    /// (the HTTP sim supplies exact latencies; this bounds concurrency).
+    pub run_until: SimTime,
+}
+
+/// Run the batch poller over the universe: every `sweep_interval`, fetch
+/// all feeds (conditional GETs still used — being fair to the baseline),
+/// delivering any found items at the *end of the sweep* (batch semantics:
+/// results land when the job completes).
+pub fn run_batch_poller(
+    universe: &mut FeedUniverse,
+    http: &mut HttpSim,
+    cfg: &BatchPollerConfig,
+) -> BatchRunReport {
+    let mut report = BatchRunReport::default();
+    let mut etags: HashMap<u64, String> = HashMap::new();
+    let n = universe.n_feeds() as u64;
+    let mut sweep_start = 0;
+    while sweep_start < cfg.run_until {
+        report.sweeps += 1;
+        // Workers share the sweep: each fetch occupies one worker slot;
+        // the sweep's virtual duration is total fetch time / fleet width.
+        let mut total_fetch_ms: SimTime = 0;
+        let mut found: Vec<(u64, SimTime)> = Vec::new(); // (count-ish, pub_ms)
+        for id in 1..=n {
+            // Social channels are polled by the same batch job here; the
+            // baseline has no channel specialization.
+            let _ = universe.profile(id).channel == Channel::News;
+            let cond = Conditional {
+                if_none_match: etags.get(&id).cloned(),
+                if_modified_since: None,
+            };
+            let url = universe.profile(id).url.clone();
+            // Items are generated as of the sweep start (what a batch job
+            // launched at sweep_start would see).
+            let resp = http.fetch(universe, &url, &cond, sweep_start);
+            report.polls += 1;
+            total_fetch_ms += resp.latency_ms;
+            if let Some(e) = &resp.etag {
+                etags.insert(id, e.clone());
+            }
+            if resp.status == HttpStatus::Ok {
+                for item in &resp.items {
+                    report.items += 1;
+                    found.push((id, item.pub_ms));
+                }
+            }
+        }
+        let sweep_duration = total_fetch_ms / cfg.workers.max(1) as u64;
+        report.sweep_durations.push(sweep_duration);
+        // Batch semantics: everything found is delivered when the job ends.
+        let delivery = sweep_start + sweep_duration;
+        for (feed, pub_ms) in found {
+            report.latencies.push((feed, delivery.saturating_sub(pub_ms)));
+        }
+        // Next sweep starts on schedule, or after this one if it overran.
+        sweep_start = (sweep_start + cfg.sweep_interval).max(delivery);
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::feedsim::{HttpConfig, UniverseConfig};
+    use crate::sim::{HOUR, MINUTE};
+
+    fn world() -> (FeedUniverse, HttpSim) {
+        let mut h = HttpConfig::default();
+        h.error_rate = 0.0;
+        h.timeout_rate = 0.0;
+        h.redirect_rate = 0.0;
+        (
+            FeedUniverse::new(UniverseConfig::small(300, 21)),
+            HttpSim::new(h),
+        )
+    }
+
+    #[test]
+    fn poller_sweeps_all_feeds() {
+        let (mut u, mut http) = world();
+        let report = run_batch_poller(
+            &mut u,
+            &mut http,
+            &BatchPollerConfig { sweep_interval: HOUR, workers: 10, run_until: 3 * HOUR },
+        );
+        assert_eq!(report.sweeps, 3);
+        assert_eq!(report.polls, 3 * 300);
+        assert!(report.items > 0);
+    }
+
+    #[test]
+    fn latencies_bounded_by_sweep_interval_plus_duration() {
+        let (mut u, mut http) = world();
+        let report = run_batch_poller(
+            &mut u,
+            &mut http,
+            &BatchPollerConfig { sweep_interval: 30 * MINUTE, workers: 50, run_until: 2 * HOUR },
+        );
+        let max_sweep = report.sweep_durations.iter().max().copied().unwrap_or(0);
+        let p100 = report.latency_pct(1.0).unwrap_or(0);
+        assert!(
+            p100 <= 30 * MINUTE + max_sweep + 1,
+            "p100={p100} bound={}",
+            30 * MINUTE + max_sweep
+        );
+    }
+
+    #[test]
+    fn fewer_workers_longer_sweeps() {
+        let (mut u1, mut h1) = world();
+        let (mut u2, mut h2) = world();
+        let small = run_batch_poller(
+            &mut u1,
+            &mut h1,
+            &BatchPollerConfig { sweep_interval: HOUR, workers: 2, run_until: HOUR },
+        );
+        let big = run_batch_poller(
+            &mut u2,
+            &mut h2,
+            &BatchPollerConfig { sweep_interval: HOUR, workers: 64, run_until: HOUR },
+        );
+        assert!(small.sweep_durations[0] > big.sweep_durations[0]);
+    }
+}

@@ -1,0 +1,99 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! Each bench target (`rust/benches/*.rs`, `harness = false`) uses this to
+//! time scenarios and emit aligned result tables; `cargo bench` runs them
+//! all. Wall-clock numbers are medians over repeats with a warmup pass.
+
+use std::time::Instant;
+
+/// Time `f` `repeats` times (after one warmup) and return (median_s, min_s).
+pub fn time<F: FnMut()>(repeats: usize, mut f: F) -> (f64, f64) {
+    f(); // warmup
+    let mut samples: Vec<f64> = (0..repeats.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (samples[samples.len() / 2], samples[0])
+}
+
+/// Simple results table builder with aligned columns.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut out = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", out.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", widths.iter().map(|w| "-".repeat(*w + 2)).collect::<String>());
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Banner for bench output sections.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Read an env knob with default (benches scale via env, e.g. FULL=1).
+pub fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn env_flag(name: &str) -> bool {
+    std::env::var(name).map(|v| v == "1" || v == "true").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_returns_positive() {
+        let (med, min) = time(3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(med >= 0.0 && min >= 0.0 && min <= med + 1e-9);
+    }
+
+    #[test]
+    fn table_builds() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print();
+    }
+
+    #[test]
+    fn env_helpers() {
+        assert_eq!(env_u64("NOT_SET_XYZ", 7), 7);
+        assert!(!env_flag("NOT_SET_XYZ"));
+    }
+}

@@ -1,0 +1,252 @@
+//! Typed configuration for the AlertMix launcher.
+//!
+//! Every knob of the system lives here, loadable from a JSON file
+//! (`alertmix --config run.json simulate ...`) with validated defaults —
+//! the "real config system" a deployment needs. Field names match the
+//! JSON keys 1:1.
+
+use crate::sim::{SimTime, HOUR, MINUTE, SECOND};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// Full system configuration.
+#[derive(Debug, Clone)]
+pub struct AlertMixConfig {
+    /// Experiment seed — everything stochastic derives from it.
+    pub seed: u64,
+    /// Virtual duration of the run.
+    pub duration: SimTime,
+
+    // -- universe ---------------------------------------------------------
+    pub n_feeds: usize,
+    pub base_poll_interval: SimTime,
+    pub diurnal_depth: f64,
+    pub syndication_rate: f64,
+
+    // -- picker / cron ----------------------------------------------------
+    /// Cron cadence ("runs at fixed intervals, say 5 seconds").
+    pub pick_interval: SimTime,
+    /// Streams picked per cron run at most.
+    pub pick_batch: usize,
+    /// Re-pick in-process streams stuck longer than this.
+    pub stale_after: SimTime,
+    /// Max adaptive backoff level: silent feeds poll at
+    /// base_poll_interval << level.
+    pub max_backoff_level: u8,
+
+    // -- SQS ----------------------------------------------------------------
+    pub visibility_timeout: SimTime,
+    pub max_receive_count: u32,
+
+    // -- FeedRouter replenishment (paper a–e) -------------------------------
+    /// (a) optimal number of in-flight items to keep at the worker pools.
+    pub optimal_buffer: usize,
+    /// (b) replenish after this many completions.
+    pub replenish_count: usize,
+    /// (c) replenish anyway after this long.
+    pub replenish_timeout: SimTime,
+    /// Router tick cadence.
+    pub router_tick: SimTime,
+
+    // -- worker pools -------------------------------------------------------
+    pub news_pool: usize,
+    pub rss_pool: usize,
+    pub social_pool: usize,
+    pub pool_mailbox: usize,
+    pub use_resizer: bool,
+    pub resizer_upper: usize,
+    /// Probability a worker crashes on a message (fault injection; the
+    /// supervisor restarts it).
+    pub worker_fault_rate: f64,
+
+    // -- enrichment ---------------------------------------------------------
+    pub enrich_batch: usize,
+    pub enrich_max_wait: SimTime,
+    /// Use the XLA artifact (false = CPU fallback, for artifact-less runs).
+    pub use_xla: bool,
+
+    // -- dedup / sink ---------------------------------------------------------
+    pub dedup_max_hamming: u32,
+    pub sink_bulk: usize,
+
+    // -- monitoring -----------------------------------------------------------
+    pub dead_letter_alarm: f64,
+    pub monitor_interval: SimTime,
+}
+
+impl Default for AlertMixConfig {
+    fn default() -> Self {
+        AlertMixConfig {
+            seed: 42,
+            duration: 2 * HOUR,
+            n_feeds: 20_000,
+            base_poll_interval: 5 * MINUTE,
+            diurnal_depth: 0.65,
+            syndication_rate: 0.12,
+            pick_interval: 5 * SECOND,
+            pick_batch: 2_000,
+            stale_after: 10 * MINUTE,
+            max_backoff_level: 4,
+            visibility_timeout: 2 * MINUTE,
+            max_receive_count: 5,
+            optimal_buffer: 256,
+            replenish_count: 64,
+            replenish_timeout: 2 * SECOND,
+            router_tick: 500,
+            news_pool: 16,
+            rss_pool: 4,
+            social_pool: 4,
+            pool_mailbox: 4_096,
+            use_resizer: true,
+            resizer_upper: 64,
+            worker_fault_rate: 0.0005,
+            enrich_batch: 64,
+            enrich_max_wait: 250,
+            use_xla: true,
+            dedup_max_hamming: 7,
+            sink_bulk: 64,
+            dead_letter_alarm: 100.0,
+            monitor_interval: MINUTE,
+        }
+    }
+}
+
+impl AlertMixConfig {
+    /// The paper's Figure-4 deployment: 200 k feeds, 24 h.
+    pub fn figure4() -> Self {
+        AlertMixConfig {
+            n_feeds: 200_000,
+            duration: 24 * HOUR,
+            pick_batch: 20_000,
+            optimal_buffer: 2_048,
+            news_pool: 32,
+            resizer_upper: 256,
+            stale_after: 30 * MINUTE,
+            max_backoff_level: 5,
+            ..Default::default()
+        }
+    }
+
+    /// Small smoke configuration for tests.
+    pub fn tiny() -> Self {
+        AlertMixConfig {
+            n_feeds: 200,
+            duration: 30 * MINUTE,
+            pick_batch: 200,
+            optimal_buffer: 64,
+            news_pool: 4,
+            use_xla: false,
+            worker_fault_rate: 0.0,
+            ..Default::default()
+        }
+    }
+
+    /// Load from a JSON object, starting from `base` for unset keys.
+    pub fn from_json(j: &Json, base: AlertMixConfig) -> Result<Self> {
+        let mut c = base;
+        let obj = j.as_obj().ok_or_else(|| anyhow!("config must be a JSON object"))?;
+        for (k, v) in obj {
+            let u = || v.as_u64().ok_or_else(|| anyhow!("{k} must be a non-negative integer"));
+            let f = || v.as_f64().ok_or_else(|| anyhow!("{k} must be a number"));
+            let b = || v.as_bool().ok_or_else(|| anyhow!("{k} must be a bool"));
+            match k.as_str() {
+                "seed" => c.seed = u()?,
+                "duration_ms" => c.duration = u()?,
+                "n_feeds" => c.n_feeds = u()? as usize,
+                "base_poll_interval_ms" => c.base_poll_interval = u()?,
+                "diurnal_depth" => c.diurnal_depth = f()?,
+                "syndication_rate" => c.syndication_rate = f()?,
+                "pick_interval_ms" => c.pick_interval = u()?,
+                "pick_batch" => c.pick_batch = u()? as usize,
+                "stale_after_ms" => c.stale_after = u()?,
+                "max_backoff_level" => c.max_backoff_level = u()? as u8,
+                "visibility_timeout_ms" => c.visibility_timeout = u()?,
+                "max_receive_count" => c.max_receive_count = u()? as u32,
+                "optimal_buffer" => c.optimal_buffer = u()? as usize,
+                "replenish_count" => c.replenish_count = u()? as usize,
+                "replenish_timeout_ms" => c.replenish_timeout = u()?,
+                "router_tick_ms" => c.router_tick = u()?,
+                "news_pool" => c.news_pool = u()? as usize,
+                "rss_pool" => c.rss_pool = u()? as usize,
+                "social_pool" => c.social_pool = u()? as usize,
+                "pool_mailbox" => c.pool_mailbox = u()? as usize,
+                "use_resizer" => c.use_resizer = b()?,
+                "resizer_upper" => c.resizer_upper = u()? as usize,
+                "worker_fault_rate" => c.worker_fault_rate = f()?,
+                "enrich_batch" => c.enrich_batch = u()? as usize,
+                "enrich_max_wait_ms" => c.enrich_max_wait = u()?,
+                "use_xla" => c.use_xla = b()?,
+                "dedup_max_hamming" => c.dedup_max_hamming = u()? as u32,
+                "sink_bulk" => c.sink_bulk = u()? as usize,
+                "dead_letter_alarm" => c.dead_letter_alarm = f()?,
+                "monitor_interval_ms" => c.monitor_interval = u()?,
+                other => bail!("unknown config key: {other}"),
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        Self::from_json(&j, AlertMixConfig::default())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_feeds == 0 {
+            bail!("n_feeds must be > 0");
+        }
+        if self.pick_interval == 0 || self.base_poll_interval == 0 {
+            bail!("intervals must be > 0");
+        }
+        if self.enrich_batch == 0 || self.enrich_batch > 64 {
+            bail!("enrich_batch must be in 1..=64 (compiled artifact width)");
+        }
+        if self.optimal_buffer == 0 {
+            bail!("optimal_buffer must be > 0");
+        }
+        if !(0.0..=1.0).contains(&self.worker_fault_rate) {
+            bail!("worker_fault_rate must be a probability");
+        }
+        if self.visibility_timeout <= self.replenish_timeout {
+            bail!("visibility_timeout must exceed replenish_timeout");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        AlertMixConfig::default().validate().unwrap();
+        AlertMixConfig::figure4().validate().unwrap();
+        AlertMixConfig::tiny().validate().unwrap();
+    }
+
+    #[test]
+    fn from_json_overrides() {
+        let j = Json::parse(r#"{"n_feeds": 123, "use_resizer": false, "seed": 7}"#).unwrap();
+        let c = AlertMixConfig::from_json(&j, AlertMixConfig::default()).unwrap();
+        assert_eq!(c.n_feeds, 123);
+        assert!(!c.use_resizer);
+        assert_eq!(c.seed, 7);
+        // untouched defaults survive
+        assert_eq!(c.pick_interval, 5 * SECOND);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        let j = Json::parse(r#"{"not_a_key": 1}"#).unwrap();
+        assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
+        let j = Json::parse(r#"{"n_feeds": 0}"#).unwrap();
+        assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
+        let j = Json::parse(r#"{"enrich_batch": 100}"#).unwrap();
+        assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
+        let j = Json::parse(r#"{"worker_fault_rate": 2.0}"#).unwrap();
+        assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
+    }
+}

@@ -1,0 +1,327 @@
+//! Duplicate detection: URL canonicalization, exact guid/content dedup and
+//! SimHash near-duplicate detection with banded LSH lookup.
+//!
+//! The paper's Worker "checks for duplicate entries already in the system
+//! and then processes the results". Two layers are needed in practice:
+//! exact dedup (same guid re-served across polls, same story URL) and
+//! *near*-duplicate dedup for syndicated wire copies whose text differs by
+//! a few words. Near-dup signatures come from the SimHash sign-projection
+//! computed by the Pallas kernel on the hot path (or the CPU fallback in
+//! `util::hash`).
+
+use crate::util::hash::{fnv1a_str, hamming};
+use std::collections::{HashMap, HashSet};
+
+/// Canonicalize a URL for exact dedup: lowercase scheme/host, strip
+/// fragments, default ports, trailing slashes and common tracking params.
+pub fn canonicalize_url(url: &str) -> String {
+    let url = url.trim();
+    // Split off fragment.
+    let url = url.split('#').next().unwrap_or(url);
+    // Scheme & rest.
+    let (scheme, rest) = match url.find("://") {
+        Some(i) => (&url[..i], &url[i + 3..]),
+        None => ("http", url),
+    };
+    let (hostport, pathquery) = match rest.find('/') {
+        Some(i) => (&rest[..i], &rest[i..]),
+        None => (rest, ""),
+    };
+    let host = hostport.to_ascii_lowercase();
+    let host = host
+        .strip_suffix(":80")
+        .or_else(|| host.strip_suffix(":443"))
+        .unwrap_or(&host);
+    let (path, query) = match pathquery.find('?') {
+        Some(i) => (&pathquery[..i], Some(&pathquery[i + 1..])),
+        None => (pathquery, None),
+    };
+    let path = if path.len() > 1 { path.trim_end_matches('/') } else { path };
+    let mut out = format!("{}://{}{}", scheme.to_ascii_lowercase(), host, path);
+    if let Some(q) = query {
+        let mut kept: Vec<&str> = q
+            .split('&')
+            .filter(|kv| {
+                let key = kv.split('=').next().unwrap_or("");
+                !key.starts_with("utm_") && key != "ref" && key != "fbclid" && !kv.is_empty()
+            })
+            .collect();
+        kept.sort_unstable();
+        if !kept.is_empty() {
+            out.push('?');
+            out.push_str(&kept.join("&"));
+        }
+    }
+    out
+}
+
+/// Number of LSH bands (4 bands x 16 bits over a 64-bit signature).
+const BANDS: usize = 4;
+
+/// Banded LSH index over 64-bit SimHash signatures: 4 bands x 16 bits with
+/// **1-bit multiprobe** on lookup. By pigeonhole, a pair within Hamming
+/// distance 7 has some band with <= 1 flipped bit, and probing every
+/// single-bit variant of each band key finds it — so recall is guaranteed
+/// for d <= 7 while 16-bit buckets stay ~256x more selective than 8-bit
+/// ones (§Perf L3-3: 6,257 -> ~2 candidate probes per lookup at 200k sigs).
+pub struct SimHashIndex {
+    /// Direct-indexed buckets: bands[b][key] (65536 buckets per band) —
+    /// multiprobe does 68 bucket reads per lookup, so bucket access must
+    /// be an array index, not a hash (§Perf L3-3b).
+    bands: Vec<Vec<Vec<u64>>>,
+    /// signature -> representative doc id
+    sigs: HashMap<u64, u64>,
+    max_distance: u32,
+    pub lookups: u64,
+    pub candidate_probes: u64,
+}
+
+impl SimHashIndex {
+    pub fn new(max_distance: u32) -> Self {
+        SimHashIndex {
+            bands: vec![vec![Vec::new(); 1 << 16]; BANDS],
+            sigs: HashMap::new(),
+            max_distance,
+            lookups: 0,
+            candidate_probes: 0,
+        }
+    }
+
+    fn band_keys(sig: u64) -> [u16; BANDS] {
+        let mut keys = [0u16; BANDS];
+        for (i, k) in keys.iter_mut().enumerate() {
+            *k = ((sig >> (16 * i)) & 0xFFFF) as u16;
+        }
+        keys
+    }
+
+    /// Find a previously-inserted near-duplicate (within `max_distance`).
+    /// Probes each band key plus all 16 single-bit variants of it.
+    pub fn find_near(&mut self, sig: u64) -> Option<u64> {
+        self.lookups += 1;
+        let keys = Self::band_keys(sig);
+        let mut best: Option<(u32, u64)> = None;
+        let check = |bands: &[Vec<Vec<u64>>],
+                         probes: &mut u64,
+                         b: usize,
+                         key: u16,
+                         best: &mut Option<(u32, u64)>,
+                         sigs: &HashMap<u64, u64>,
+                         max_d: u32| {
+            let cands = &bands[b][key as usize];
+            for &cand in cands {
+                *probes += 1;
+                let d = hamming(sig, cand);
+                if d <= max_d {
+                    let doc = sigs[&cand];
+                    if best.map(|(bd, _)| d < bd).unwrap_or(true) {
+                        *best = Some((d, doc));
+                    }
+                }
+            }
+        };
+        for (b, &key) in keys.iter().enumerate() {
+            check(&self.bands, &mut self.candidate_probes, b, key, &mut best, &self.sigs, self.max_distance);
+            if self.max_distance > BANDS as u32 - 1 {
+                // Multiprobe: single-bit variants cover d <= 2*BANDS - 1.
+                for bit in 0..16 {
+                    check(
+                        &self.bands,
+                        &mut self.candidate_probes,
+                        b,
+                        key ^ (1 << bit),
+                        &mut best,
+                        &self.sigs,
+                        self.max_distance,
+                    );
+                }
+            }
+        }
+        best.map(|(_, doc)| doc)
+    }
+
+    /// Insert a signature for the given doc id.
+    pub fn insert(&mut self, sig: u64, doc_id: u64) {
+        if self.sigs.contains_key(&sig) {
+            return;
+        }
+        self.sigs.insert(sig, doc_id);
+        for (b, key) in Self::band_keys(sig).iter().enumerate() {
+            self.bands[b][*key as usize].push(sig);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sigs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sigs.is_empty()
+    }
+}
+
+/// Verdict for one incoming item.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DedupVerdict {
+    Fresh,
+    /// Same guid or canonical URL already ingested.
+    ExactDuplicate,
+    /// A near-identical story (SimHash within threshold) exists; carries
+    /// the representative doc id.
+    NearDuplicate(u64),
+}
+
+/// The full dedup stage: exact sets + SimHash LSH.
+pub struct Deduper {
+    seen_guids: HashSet<u64>,
+    seen_urls: HashSet<u64>,
+    near: SimHashIndex,
+    pub exact_hits: u64,
+    pub near_hits: u64,
+    pub fresh: u64,
+}
+
+impl Deduper {
+    pub fn new(max_hamming: u32) -> Self {
+        Deduper {
+            seen_guids: HashSet::new(),
+            seen_urls: HashSet::new(),
+            near: SimHashIndex::new(max_hamming),
+            exact_hits: 0,
+            near_hits: 0,
+            fresh: 0,
+        }
+    }
+
+    /// Check an item and record it if fresh. `sig` is the SimHash of the
+    /// item's text (from the PJRT enricher or the CPU fallback).
+    pub fn check_and_insert(&mut self, guid: &str, url: &str, sig: u64, doc_id: u64) -> DedupVerdict {
+        let gh = fnv1a_str(guid);
+        let uh = fnv1a_str(&canonicalize_url(url));
+        if self.seen_guids.contains(&gh) || self.seen_urls.contains(&uh) {
+            self.exact_hits += 1;
+            return DedupVerdict::ExactDuplicate;
+        }
+        if let Some(rep) = self.near.find_near(sig) {
+            self.near_hits += 1;
+            // Remember identifiers so re-served copies exact-dedup next time.
+            self.seen_guids.insert(gh);
+            self.seen_urls.insert(uh);
+            return DedupVerdict::NearDuplicate(rep);
+        }
+        self.seen_guids.insert(gh);
+        self.seen_urls.insert(uh);
+        self.near.insert(sig, doc_id);
+        self.fresh += 1;
+        DedupVerdict::Fresh
+    }
+
+    pub fn unique_count(&self) -> usize {
+        self.near.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hash::simhash_tokens;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn url_canonicalization() {
+        assert_eq!(
+            canonicalize_url("HTTP://News.Example.com:80/a/b/?utm_source=x&id=3#frag"),
+            "http://news.example.com/a/b?id=3"
+        );
+        assert_eq!(canonicalize_url("http://x.com/p/"), "http://x.com/p");
+        assert_eq!(canonicalize_url("http://x.com/"), "http://x.com/");
+        // Query params sorted for stability.
+        assert_eq!(canonicalize_url("http://x.com/p?b=2&a=1"), "http://x.com/p?a=1&b=2");
+        assert_eq!(
+            canonicalize_url("http://x.com/p?a=1"),
+            canonicalize_url("http://X.com/p/?a=1&utm_campaign=z")
+        );
+    }
+
+    #[test]
+    fn exact_dup_by_guid_and_url() {
+        let mut d = Deduper::new(3);
+        assert_eq!(d.check_and_insert("g1", "http://x/a", 0b1010, 1), DedupVerdict::Fresh);
+        assert_eq!(
+            d.check_and_insert("g1", "http://y/b", 0b1111, 2),
+            DedupVerdict::ExactDuplicate
+        );
+        assert_eq!(
+            d.check_and_insert("g2", "HTTP://X/a", u64::MAX, 3),
+            DedupVerdict::ExactDuplicate
+        );
+    }
+
+    #[test]
+    fn near_dup_within_hamming() {
+        let mut d = Deduper::new(3);
+        let sig = 0xDEAD_BEEF_0123_4567u64;
+        assert_eq!(d.check_and_insert("g1", "http://a/1", sig, 10), DedupVerdict::Fresh);
+        // Flip 2 bits: near-duplicate.
+        let near = sig ^ 0b101;
+        assert_eq!(
+            d.check_and_insert("g2", "http://b/2", near, 11),
+            DedupVerdict::NearDuplicate(10)
+        );
+        // Flip 16 bits spread across bands: fresh.
+        let far = sig ^ 0x1111_1111_1111_1111;
+        assert_eq!(d.check_and_insert("g3", "http://c/3", far, 12), DedupVerdict::Fresh);
+    }
+
+    #[test]
+    fn wire_copies_detected_via_simhash() {
+        let mut d = Deduper::new(7);
+        let a = "markets approve rate cut amid protests sources said the rate cut would affect markets";
+        let b = "markets approve rate cut amid protests sources said the rate cut would affect markets wire";
+        let sa = simhash_tokens(a.split(' '));
+        let sb = simhash_tokens(b.split(' '));
+        assert_eq!(d.check_and_insert("g-a", "http://f1/a", sa, 1), DedupVerdict::Fresh);
+        assert_eq!(
+            d.check_and_insert("g-b", "http://f2/b", sb, 2),
+            DedupVerdict::NearDuplicate(1)
+        );
+    }
+
+    #[test]
+    fn lsh_index_finds_all_close_pairs() {
+        let mut idx = SimHashIndex::new(3);
+        let base = 0xABCD_EF01_2345_6789u64;
+        idx.insert(base, 1);
+        for flip in 0..64u32 {
+            let probe = base ^ (1u64 << flip);
+            assert_eq!(idx.find_near(probe), Some(1), "distance 1 must always hit (bit {flip})");
+        }
+    }
+
+    #[test]
+    fn prop_canonicalize_idempotent() {
+        forall("canonicalize(canonicalize(u)) == canonicalize(u)", 150, |g| {
+            let url = format!(
+                "http://{}.com/{}?{}={}&utm_source={}",
+                g.word(8),
+                g.word(6),
+                g.word(3),
+                g.word(4),
+                g.word(5)
+            );
+            let once = canonicalize_url(&url);
+            canonicalize_url(&once) == once
+        });
+    }
+
+    #[test]
+    fn prop_near_dedup_never_false_negative_d1() {
+        forall("hamming<=1 always detected", 100, |g| {
+            let mut idx = SimHashIndex::new(3);
+            let sig = g.rng().next_u64();
+            idx.insert(sig, 7);
+            let flipped = sig ^ (1u64 << g.u64(0, 64));
+            idx.find_near(flipped) == Some(7)
+        });
+    }
+}

@@ -1,0 +1,15 @@
+//! Simulated data-source world: feed universe, HTTP conditional-GET layer,
+//! RSS 2.0 generation/parsing and social-platform timeline APIs.
+//!
+//! This is the stand-in for the paper's 200 k live news sources — see
+//! DESIGN.md §2 for the substitution rationale.
+
+pub mod http;
+pub mod rss;
+pub mod social;
+pub mod universe;
+
+pub use http::{Conditional, HttpConfig, HttpResponse, HttpSim, HttpStatus};
+pub use rss::{parse_rss, write_rss, RssFeed, RssItem};
+pub use social::{Platform, Post, SocialConfig, SocialResult, SocialSim};
+pub use universe::{FeedProfile, FeedUniverse, GeneratedItem, UniverseConfig};

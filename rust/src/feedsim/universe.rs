@@ -1,0 +1,469 @@
+//! The synthetic feed universe.
+//!
+//! Stands in for the paper's live population of ~200,000 news/RSS sources
+//! plus Facebook/Twitter channels. Statistical shape (what CloudWatch saw):
+//!
+//! - **Zipf popularity**: a handful of wire services publish every few
+//!   minutes; the long tail posts a few times a day.
+//! - **Diurnal cycle**: publish rates swell during the (virtual) day and
+//!   sag overnight — this is what produces Figure 4's periodicity.
+//! - **Syndication**: a fraction of items are near-duplicates of a shared
+//!   "wire" story (slightly rewritten), which is what the dedup stage and
+//!   the SimHash kernel exist for.
+//!
+//! Item generation is *lazy*: a feed materializes the items that appeared
+//! since its last poll only when polled, so 200 k feeds cost nothing while
+//! idle.
+
+use super::rss::{RssFeed, RssItem};
+use crate::sim::{SimTime, DAY, HOUR};
+use crate::store::streams::Channel;
+use crate::util::rng::Rng;
+
+/// Universe tuning knobs (calibrated in EXPERIMENTS.md §Fig4 so the
+/// CloudWatch series peaks near the paper's ~8 k messages / 5 min).
+#[derive(Debug, Clone)]
+pub struct UniverseConfig {
+    pub n_feeds: usize,
+    /// Zipf exponent for per-feed publish rates.
+    pub zipf_s: f64,
+    /// Mean items/day for the most active feed (rank 1).
+    pub top_feed_items_per_day: f64,
+    /// Mean items/day for the median feed, used to set the tail scale.
+    pub min_items_per_day: f64,
+    /// Diurnal modulation depth in [0,1): rate(t) = base * (1 + depth*sin).
+    pub diurnal_depth: f64,
+    /// Hour of virtual day with peak publishing.
+    pub peak_hour: f64,
+    /// Probability an item is a syndicated near-duplicate of a wire story.
+    pub syndication_rate: f64,
+    /// Channel mix (fractions must sum to <= 1; remainder is News).
+    pub frac_custom_rss: f64,
+    pub frac_facebook: f64,
+    pub frac_twitter: f64,
+    pub seed: u64,
+}
+
+impl Default for UniverseConfig {
+    fn default() -> Self {
+        UniverseConfig {
+            n_feeds: 200_000,
+            zipf_s: 1.25,
+            top_feed_items_per_day: 1200.0,
+            min_items_per_day: 0.35,
+            diurnal_depth: 0.65,
+            peak_hour: 14.0,
+            syndication_rate: 0.12,
+            frac_custom_rss: 0.05,
+            frac_facebook: 0.02,
+            frac_twitter: 0.03,
+            seed: 0xA1E7_314D,
+        }
+    }
+}
+
+impl UniverseConfig {
+    /// Small universe for tests/examples.
+    pub fn small(n: usize, seed: u64) -> Self {
+        UniverseConfig { n_feeds: n, seed, ..Default::default() }
+    }
+}
+
+/// Per-feed static profile.
+#[derive(Debug, Clone)]
+pub struct FeedProfile {
+    pub id: u64,
+    pub channel: Channel,
+    pub url: String,
+    /// Base publish rate, items per virtual ms.
+    pub rate_per_ms: f64,
+    /// Stable ETag seed.
+    pub etag_salt: u64,
+}
+
+/// A published item before RSS serialization.
+#[derive(Debug, Clone)]
+pub struct GeneratedItem {
+    pub guid: String,
+    pub title: String,
+    pub body: String,
+    pub link: String,
+    pub pub_ms: SimTime,
+    /// Set when this item syndicates a wire story (same `wire_id` =>
+    /// near-duplicate content).
+    pub wire_id: Option<u64>,
+}
+
+/// Dynamic per-feed state (advances as the feed is polled).
+#[derive(Debug, Clone)]
+struct FeedState {
+    /// Items published in [0, covered_until) have been materialized.
+    covered_until: SimTime,
+    /// Monotone per-feed item counter (guid source).
+    items_published: u64,
+    /// Timestamp of last content change (Last-Modified header).
+    last_changed: SimTime,
+}
+
+/// Vocabulary for headline synthesis. Small but structured enough that
+/// tokenized titles exercise the hashing/enrichment path realistically.
+const SUBJECTS: &[&str] = &[
+    "markets", "senate", "wildfire", "startup", "researchers", "city council",
+    "central bank", "union", "hospital", "astronomers", "regulators", "voters",
+    "engineers", "farmers", "students", "investors", "officials", "scientists",
+];
+const VERBS: &[&str] = &[
+    "approve", "reject", "launch", "investigate", "expand", "warn of",
+    "celebrate", "suspend", "announce", "debate", "uncover", "halt",
+    "accelerate", "postpone", "endorse", "challenge",
+];
+const OBJECTS: &[&str] = &[
+    "new policy", "quarterly results", "rate cut", "major outage", "breakthrough",
+    "budget deal", "trade pact", "safety recall", "record drought", "funding round",
+    "court ruling", "infrastructure plan", "energy project", "health initiative",
+    "data breach", "housing program",
+];
+const MODIFIERS: &[&str] = &[
+    "amid protests", "after long talks", "despite warnings", "in surprise move",
+    "citing costs", "before deadline", "as tensions rise", "following review",
+    "with broad support", "under pressure",
+];
+const PLACES: &[&str] = &[
+    "in helsinki", "in nairobi", "in osaka", "in denver", "in porto", "in quito",
+    "in lagos", "in mumbai", "in seoul", "in lyon", "in austin", "in leeds",
+    "in zurich", "in bogota", "in hanoi", "in perth", "in turin", "in quebec",
+    "in cairo", "in dallas", "in bergen", "in gdansk", "in malmo", "in kyoto",
+];
+
+/// The universe: feed profiles + lazy item generation.
+pub struct FeedUniverse {
+    pub cfg: UniverseConfig,
+    profiles: Vec<FeedProfile>,
+    states: Vec<FeedState>,
+    rng_root: Rng,
+    /// Counter for wire (syndicated) stories.
+    next_wire_id: u64,
+    pub items_generated: u64,
+}
+
+impl FeedUniverse {
+    pub fn new(cfg: UniverseConfig) -> Self {
+        let rng_root = Rng::new(cfg.seed);
+        let mut rank_rng = rng_root.stream(0xFEED);
+        // Rank-1 rate and a floor for the tail, items/ms.
+        let top = cfg.top_feed_items_per_day / DAY as f64;
+        let floor = cfg.min_items_per_day / DAY as f64;
+
+        // Assign each feed a distinct popularity rank (1..=n, shuffled so
+        // rank is independent of id), rates Zipf-decaying in rank.
+        let mut ranks: Vec<u64> = (1..=cfg.n_feeds as u64).collect();
+        rank_rng.shuffle(&mut ranks);
+
+        let mut profiles = Vec::with_capacity(cfg.n_feeds);
+        let mut states = Vec::with_capacity(cfg.n_feeds);
+        for i in 0..cfg.n_feeds {
+            let id = i as u64 + 1;
+            let rank = ranks[i] as f64;
+            let jitter = 0.5 + rank_rng.next_f64();
+            let rate = (top / rank.powf(cfg.zipf_s * 0.55)).max(floor) * jitter;
+            let channel = {
+                let u = rank_rng.next_f64();
+                if u < cfg.frac_facebook {
+                    Channel::Facebook
+                } else if u < cfg.frac_facebook + cfg.frac_twitter {
+                    Channel::Twitter
+                } else if u < cfg.frac_facebook + cfg.frac_twitter + cfg.frac_custom_rss {
+                    Channel::CustomRss
+                } else {
+                    Channel::News
+                }
+            };
+            profiles.push(FeedProfile {
+                id,
+                channel,
+                url: format!("http://src-{id}.feeds.sim/rss"),
+                rate_per_ms: rate,
+                etag_salt: rank_rng.next_u64(),
+            });
+            states.push(FeedState { covered_until: 0, items_published: 0, last_changed: 0 });
+        }
+        FeedUniverse {
+            cfg,
+            profiles,
+            states,
+            rng_root,
+            next_wire_id: 1,
+            items_generated: 0,
+        }
+    }
+
+    pub fn n_feeds(&self) -> usize {
+        self.profiles.len()
+    }
+
+    pub fn profile(&self, id: u64) -> &FeedProfile {
+        &self.profiles[(id - 1) as usize]
+    }
+
+    pub fn profiles(&self) -> &[FeedProfile] {
+        &self.profiles
+    }
+
+    /// Diurnal rate multiplier at virtual time `t` (mean 1.0 over a day).
+    pub fn diurnal_factor(&self, t: SimTime) -> f64 {
+        let hour = (t % DAY) as f64 / HOUR as f64;
+        let phase = (hour - self.cfg.peak_hour) / 24.0 * std::f64::consts::TAU;
+        1.0 + self.cfg.diurnal_depth * phase.cos()
+    }
+
+    /// Expected number of items feed `id` publishes over [a, b), integrating
+    /// the diurnal modulation hour-by-hour.
+    fn expected_items(&self, id: u64, a: SimTime, b: SimTime) -> f64 {
+        let rate = self.profile(id).rate_per_ms;
+        let mut total = 0.0;
+        let mut t = a;
+        while t < b {
+            let seg_end = ((t / HOUR + 1) * HOUR).min(b);
+            total += rate * self.diurnal_factor(t) * (seg_end - t) as f64;
+            t = seg_end;
+        }
+        total
+    }
+
+    /// Materialize the items feed `id` published since its last poll, up to
+    /// `now`. Returns the new items (possibly empty) — at-most-once per
+    /// interval; subsequent calls cover later intervals.
+    pub fn poll(&mut self, id: u64, now: SimTime) -> Vec<GeneratedItem> {
+        let idx = (id - 1) as usize;
+        let from = self.states[idx].covered_until;
+        if now <= from {
+            return Vec::new();
+        }
+        let mean = self.expected_items(id, from, now);
+        let mut rng = self
+            .rng_root
+            .stream(0x17E5 ^ id)
+            .stream(from ^ now.rotate_left(17));
+        let count = rng.poisson(mean).min(500); // cap pathological bursts
+        let mut out = Vec::with_capacity(count as usize);
+        for k in 0..count {
+            // Spread pub times across the interval.
+            let pub_ms = from + rng.below((now - from).max(1));
+            let item_no = self.states[idx].items_published + k + 1;
+            let wire_id = if rng.chance(self.cfg.syndication_rate) {
+                // Syndicate one of the recent wire stories (or mint one).
+                if self.next_wire_id > 1 && rng.chance(0.8) {
+                    let back = rng.below(self.next_wire_id.min(512)) + 1;
+                    Some(self.next_wire_id - back)
+                } else {
+                    let w = self.next_wire_id;
+                    self.next_wire_id += 1;
+                    Some(w)
+                }
+            } else {
+                None
+            };
+            out.push(self.synthesize_item(id, item_no, pub_ms, wire_id));
+        }
+        let st = &mut self.states[idx];
+        st.covered_until = now;
+        st.items_published += count;
+        if count > 0 {
+            st.last_changed = now;
+        }
+        self.items_generated += count;
+        out
+    }
+
+    /// Time of last content change (drives Last-Modified / 304 handling).
+    pub fn last_changed(&self, id: u64) -> SimTime {
+        self.states[(id - 1) as usize].last_changed
+    }
+
+    /// ETag for the current content version of a feed.
+    pub fn etag(&self, id: u64) -> String {
+        let st = &self.states[(id - 1) as usize];
+        format!("W/\"{:x}-{:x}\"", self.profile(id).etag_salt & 0xFFFF_FFFF, st.items_published)
+    }
+
+    fn synthesize_item(
+        &self,
+        feed_id: u64,
+        item_no: u64,
+        pub_ms: SimTime,
+        wire_id: Option<u64>,
+    ) -> GeneratedItem {
+        // Wire stories share a content seed -> near-identical token sets;
+        // original stories seed from (feed, item).
+        let content_seed = match wire_id {
+            Some(w) => 0x0077_1222_0000_0000u64 ^ w,
+            None => (feed_id << 24) ^ item_no,
+        };
+        let mut crng = self.rng_root.stream(0xC0 ^ content_seed);
+        let subject = *crng.pick(SUBJECTS);
+        let verb = *crng.pick(VERBS);
+        let object = *crng.pick(OBJECTS);
+        let modifier = *crng.pick(MODIFIERS);
+        let place = *crng.pick(PLACES);
+        let figure = crng.range(2, 980);
+        let mut title = format!("{subject} {place} {verb} {object} {modifier}");
+        let mut body = format!(
+            "{subject} {place} {verb} {object} {modifier}; sources said the {object} \
+             valued at {figure} million would affect {subject} through the coming quarter"
+        );
+        if wire_id.is_some() {
+            // Syndicators lightly rewrite: per-feed flourish appended.
+            let mut frng = self.rng_root.stream(0xF10 ^ feed_id ^ item_no);
+            let extra = *frng.pick(MODIFIERS);
+            title.push_str(&format!(" {extra}"));
+            body.push_str(&format!(" (via wire desk, {extra})"));
+        }
+        GeneratedItem {
+            guid: format!("urn:feed:{feed_id}:item:{item_no}"),
+            title,
+            body,
+            link: format!("http://src-{feed_id}.feeds.sim/a/{item_no}"),
+            pub_ms,
+            wire_id,
+        }
+    }
+
+    /// Render the most recent items of a feed as an RSS document (the HTTP
+    /// layer serves this as the 200-OK body).
+    pub fn render_rss(&self, id: u64, items: &[GeneratedItem]) -> RssFeed {
+        RssFeed {
+            title: format!("Simulated Source {id}"),
+            link: self.profile(id).url.clone(),
+            items: items
+                .iter()
+                .map(|it| RssItem {
+                    guid: it.guid.clone(),
+                    title: it.title.clone(),
+                    link: it.link.clone(),
+                    description: it.body.clone(),
+                    pub_ms: it.pub_ms,
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::MINUTE;
+
+    fn small() -> FeedUniverse {
+        FeedUniverse::new(UniverseConfig::small(500, 7))
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let mut a = small();
+        let mut b = small();
+        for id in 1..=100u64 {
+            let ia = a.poll(id, 2 * HOUR);
+            let ib = b.poll(id, 2 * HOUR);
+            assert_eq!(ia.len(), ib.len());
+            for (x, y) in ia.iter().zip(&ib) {
+                assert_eq!(x.guid, y.guid);
+                assert_eq!(x.title, y.title);
+            }
+        }
+    }
+
+    #[test]
+    fn poll_is_incremental_no_duplicates() {
+        let mut u = small();
+        let first = u.poll(1, 6 * HOUR);
+        let second = u.poll(1, 12 * HOUR);
+        let mut guids: Vec<&str> = first.iter().chain(&second).map(|i| i.guid.as_str()).collect();
+        let before = guids.len();
+        guids.sort_unstable();
+        guids.dedup();
+        assert_eq!(guids.len(), before, "no guid repeats across polls");
+        // Re-poll at same time yields nothing.
+        assert!(u.poll(1, 12 * HOUR).is_empty());
+    }
+
+    #[test]
+    fn rates_are_heavy_tailed() {
+        let u = small();
+        let mut rates: Vec<f64> = u.profiles().iter().map(|p| p.rate_per_ms).collect();
+        rates.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        assert!(rates[0] / rates[rates.len() / 2] > 10.0, "head should dwarf median");
+    }
+
+    #[test]
+    fn diurnal_factor_mean_about_one() {
+        let u = small();
+        let samples = 24 * 4;
+        let mean: f64 = (0..samples)
+            .map(|i| u.diurnal_factor(i as u64 * 15 * MINUTE))
+            .sum::<f64>()
+            / samples as f64;
+        assert!((mean - 1.0).abs() < 0.02, "mean={mean}");
+        let peak = u.diurnal_factor((14.0 * HOUR as f64) as u64);
+        let trough = u.diurnal_factor((2.0 * HOUR as f64) as u64);
+        assert!(peak > 1.3 && trough < 0.7, "peak={peak} trough={trough}");
+    }
+
+    #[test]
+    fn syndicated_items_share_wire_content() {
+        let mut u = FeedUniverse::new(UniverseConfig {
+            n_feeds: 50,
+            syndication_rate: 1.0, // everything syndicated
+            ..UniverseConfig::small(50, 3)
+        });
+        let mut by_wire: std::collections::HashMap<u64, Vec<String>> = Default::default();
+        for id in 1..=50u64 {
+            for item in u.poll(id, DAY) {
+                if let Some(w) = item.wire_id {
+                    by_wire.entry(w).or_default().push(item.title);
+                }
+            }
+        }
+        // At least one wire story appears in >1 feed with shared prefix.
+        let mut found = false;
+        for titles in by_wire.values() {
+            if titles.len() >= 2 {
+                let a: Vec<&str> = titles[0].split(' ').collect();
+                let b: Vec<&str> = titles[1].split(' ').collect();
+                let shared = a.iter().zip(&b).take_while(|(x, y)| x == y).count();
+                assert!(shared >= 4, "wire copies share the headline core");
+                found = true;
+                break;
+            }
+        }
+        assert!(found, "expected at least one multi-feed wire story");
+    }
+
+    #[test]
+    fn etag_changes_with_content() {
+        let mut u = small();
+        let e0 = u.etag(1);
+        let items = u.poll(1, DAY);
+        if !items.is_empty() {
+            assert_ne!(u.etag(1), e0);
+        } else {
+            assert_eq!(u.etag(1), e0);
+        }
+    }
+
+    #[test]
+    fn render_rss_roundtrips() {
+        let mut u = small();
+        // Find a feed that published something.
+        for id in 1..=500u64 {
+            let items = u.poll(id, DAY);
+            if !items.is_empty() {
+                let feed = u.render_rss(id, &items);
+                let xml = super::super::rss::write_rss(&feed);
+                let parsed = super::super::rss::parse_rss(&xml).unwrap();
+                assert_eq!(parsed.items.len(), items.len());
+                return;
+            }
+        }
+        panic!("no feed published in a day?");
+    }
+}

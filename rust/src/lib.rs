@@ -1,0 +1,25 @@
+//! # AlertMix
+//!
+//! A reproduction of "AlertMix: A Big Data platform for multi-source
+//! streaming data" (CS.DC 2018): a rust streaming-ingestion coordinator
+//! (actor runtime, dual SQS queues, adaptive pollers, backpressure) with a
+//! JAX/Pallas enrichment model compiled ahead-of-time and executed through
+//! XLA/PJRT — python never runs on the request path.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+pub mod actor;
+pub mod baseline;
+pub mod benchlib;
+pub mod config;
+pub mod dedup;
+pub mod feedsim;
+pub mod metrics;
+pub mod pipeline;
+pub mod runtime;
+pub mod sim;
+pub mod sink;
+pub mod sqs;
+pub mod store;
+pub mod text;
+pub mod util;

@@ -1,0 +1,202 @@
+//! AlertMix launcher.
+//!
+//! ```text
+//! alertmix [--config FILE] [--seed N] [--feeds N] [--hours H] [--no-xla] <command>
+//!
+//! commands:
+//!   simulate      run the pipeline for the configured duration, print the
+//!                 CloudWatch summary + charts
+//!   figure4       run the paper's Figure-4 deployment (200k feeds, 24h)
+//!   inspect       print the actor topology and artifact metadata
+//!   selftest      load the artifact and verify golden I/O numerics
+//! ```
+
+use alertmix::config::AlertMixConfig;
+use alertmix::metrics::chart;
+use alertmix::pipeline;
+use alertmix::sim::HOUR;
+use alertmix::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+struct Args {
+    command: String,
+    config: Option<String>,
+    seed: Option<u64>,
+    feeds: Option<usize>,
+    hours: Option<u64>,
+    no_xla: bool,
+    csv_out: Option<String>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut args = Args {
+        command: String::new(),
+        config: None,
+        seed: None,
+        feeds: None,
+        hours: None,
+        no_xla: false,
+        csv_out: None,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--config" => args.config = Some(it.next().context("--config needs a path")?),
+            "--seed" => args.seed = Some(it.next().context("--seed needs a value")?.parse()?),
+            "--feeds" => args.feeds = Some(it.next().context("--feeds needs a value")?.parse()?),
+            "--hours" => args.hours = Some(it.next().context("--hours needs a value")?.parse()?),
+            "--csv" => args.csv_out = Some(it.next().context("--csv needs a path")?),
+            "--no-xla" => args.no_xla = true,
+            "--help" | "-h" => {
+                println!("{}", HELP);
+                std::process::exit(0);
+            }
+            cmd if !cmd.starts_with('-') && args.command.is_empty() => args.command = cmd.into(),
+            other => bail!("unknown argument: {other} (see --help)"),
+        }
+    }
+    if args.command.is_empty() {
+        args.command = "simulate".into();
+    }
+    Ok(args)
+}
+
+const HELP: &str = "alertmix — multi-source streaming ingestion platform
+usage: alertmix [--config FILE] [--seed N] [--feeds N] [--hours H] [--no-xla] [--csv OUT] <simulate|figure4|inspect|selftest>";
+
+fn build_config(args: &Args) -> Result<AlertMixConfig> {
+    let mut cfg = match args.command.as_str() {
+        "figure4" => AlertMixConfig::figure4(),
+        _ => AlertMixConfig::default(),
+    };
+    if let Some(path) = &args.config {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        cfg = AlertMixConfig::from_json(&j, cfg)?;
+    }
+    if let Some(s) = args.seed {
+        cfg.seed = s;
+    }
+    if let Some(f) = args.feeds {
+        cfg.n_feeds = f;
+    }
+    if let Some(h) = args.hours {
+        cfg.duration = h * HOUR;
+    }
+    if args.no_xla {
+        cfg.use_xla = false;
+    }
+    Ok(cfg)
+}
+
+fn cmd_simulate(cfg: AlertMixConfig, csv_out: Option<&str>) -> Result<()> {
+    let duration = cfg.duration;
+    let n_periods = (duration / alertmix::metrics::PERIOD_5MIN) as usize;
+    println!(
+        "alertmix simulate: {} feeds, {:.1}h virtual, seed {} (backend: {})",
+        cfg.n_feeds,
+        duration as f64 / HOUR as f64,
+        cfg.seed,
+        if cfg.use_xla { "xla-pjrt" } else { "cpu-fallback" }
+    );
+    let wall = std::time::Instant::now();
+    let (sys, world) = pipeline::run_for(cfg, duration)?;
+    let wall_s = wall.elapsed().as_secs_f64();
+
+    // Figure-4 panel.
+    let names = ["NumberOfMessagesSent", "NumberOfMessagesReceived", "NumberOfMessagesDeleted"];
+    let series: Vec<_> = names.iter().filter_map(|n| world.metrics.get(n)).collect();
+    println!("\n{}", chart::render_panel(&series, n_periods, 96, 8));
+    println!("{}", chart::summary_table(&series, n_periods));
+
+    let c = &world.counters;
+    println!(
+        "jobs: dispatched {} completed {} in-flight {}",
+        c.jobs_dispatched,
+        c.jobs_completed,
+        c.jobs_in_flight()
+    );
+    println!(
+        "polls: ok {} not-modified {} error {} | items: fetched {} ingested {} deduped {}",
+        c.polls_ok,
+        c.polls_not_modified,
+        c.polls_error,
+        c.items_fetched,
+        c.items_ingested,
+        c.items_deduped
+    );
+    println!(
+        "queues: visible {} dlq {} | dead letters {} | sink docs {} | emails {}",
+        world.queues.total_visible(),
+        world.queues.main.dead_letter_count() + world.queues.priority.dead_letter_count(),
+        world.dead_letters.borrow().total,
+        world.sink.doc_count(),
+        world.metrics.emails.len()
+    );
+    println!("\nactor topology after run:");
+    for st in sys.all_stats() {
+        println!(
+            "  {:<22} pool {:>3}  processed {:>9}  failed {:>4}  restarts {:>3}  mbox peak {:>6}  rejected {:>5}",
+            st.name,
+            st.pool_size,
+            st.processed,
+            st.failed,
+            st.restarts,
+            st.mailbox_peak,
+            st.mailbox_rejected
+        );
+    }
+    println!(
+        "\nwall time: {wall_s:.2}s ({:.0}x real time)",
+        duration as f64 / 1000.0 / wall_s
+    );
+
+    if let Some(path) = csv_out {
+        std::fs::write(path, world.metrics.to_csv(n_periods))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_inspect(cfg: AlertMixConfig) -> Result<()> {
+    let (sys, world, h) = pipeline::bootstrap(cfg)?;
+    println!("topology ({} actors):", sys.cell_count());
+    for st in sys.all_stats() {
+        println!("  {:<22} pool {}", st.name, st.pool_size);
+    }
+    println!("\nrouting: picker -> [sqs main|priority] -> feed-router -> distributor");
+    for ch in alertmix::store::streams::Channel::ALL {
+        println!("  channel {:<12} -> {}", ch.name(), sys.name_of(h.pool_for(ch)));
+    }
+    println!("\nstreams bucket: {} records", world.store.len());
+    println!(
+        "enricher backend: {} (batch {})",
+        world.enricher.name(),
+        world.enricher.batch_size()
+    );
+    if let Some(meta) = alertmix::runtime::find_artifact(alertmix::runtime::DEFAULT_META) {
+        println!("artifact meta: {}", std::fs::read_to_string(meta)?.trim());
+    }
+    Ok(())
+}
+
+fn cmd_selftest() -> Result<()> {
+    println!("pjrt platform: {}", alertmix::runtime::pjrt_cpu_available()?);
+    let mut enricher = alertmix::runtime::XlaEnricher::load_default()?;
+    use alertmix::runtime::EnrichBackend;
+    let feats = vec![[0.5f32; alertmix::text::FEATURE_DIM]; 8];
+    let out = enricher.enrich_batch(&feats)?;
+    println!("enriched {} items; scores[0] = {:?}", out.len(), out[0].scores);
+    println!("selftest OK");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = parse_args()?;
+    match args.command.as_str() {
+        "simulate" | "figure4" => cmd_simulate(build_config(&args)?, args.csv_out.as_deref()),
+        "inspect" => cmd_inspect(build_config(&args)?),
+        "selftest" => cmd_selftest(),
+        other => bail!("unknown command {other}\n{HELP}"),
+    }
+}

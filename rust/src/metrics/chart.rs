@@ -1,0 +1,162 @@
+//! ASCII chart rendering for CloudWatch-style series — the bench harness
+//! prints the same charts Figure 4 screenshots (sent / received / deleted
+//! per 5-minute period over 24 h).
+
+use super::TimeSeries;
+use crate::sim::SimTime;
+use crate::util::fmt_hms;
+
+/// `HH:MM` label that does not wrap at 24 h (chart axes can exceed a day).
+fn fmt_axis(ms: u64) -> String {
+    let s = ms / 1000;
+    format!("{:02}:{:02}:{:02}", s / 3600, (s / 60) % 60, s % 60)
+}
+
+/// Render a series as a fixed-height ASCII column chart. `cols` periods
+/// are resampled (by mean) into at most `width` columns.
+pub fn render(series: &TimeSeries, n_periods: usize, width: usize, height: usize) -> String {
+    let values = series.values(n_periods);
+    let n = values.len().max(1);
+    let width = width.min(n).max(1);
+    let per_col = (n + width - 1) / width;
+    let cols: Vec<f64> = (0..width)
+        .map(|c| {
+            let lo = c * per_col;
+            let hi = ((c + 1) * per_col).min(n);
+            if lo >= hi {
+                0.0
+            } else {
+                values[lo..hi].iter().sum::<f64>() / (hi - lo) as f64
+            }
+        })
+        .collect();
+    let max = cols.iter().copied().fold(0.0_f64, f64::max).max(1e-12);
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{} (peak {:.0}/period, total {:.0})\n",
+        series.name,
+        series.peak(),
+        series.total()
+    ));
+    for row in (0..height).rev() {
+        let cut = max * (row as f64 + 0.5) / height as f64;
+        let label = if row == height - 1 {
+            format!("{max:>8.0} |")
+        } else if row == 0 {
+            format!("{:>8.0} |", 0.0)
+        } else {
+            "         |".to_string()
+        };
+        out.push_str(&label);
+        for &v in &cols {
+            out.push(if v >= cut { '#' } else { ' ' });
+        }
+        out.push('\n');
+    }
+    out.push_str("         +");
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    // Time axis: start / middle / end.
+    let label_at = |c: usize| -> String {
+        let t = (c * per_col) as u64 * series.period;
+        fmt_axis(t)
+    };
+    out.push_str(&format!(
+        "          {}{}{}\n",
+        label_at(0),
+        " ".repeat(width.saturating_sub(16).max(1)),
+        label_at(width - 1)
+    ));
+    out
+}
+
+/// Render several series stacked (the Figure-4 layout).
+pub fn render_panel(
+    series: &[&TimeSeries],
+    n_periods: usize,
+    width: usize,
+    height: usize,
+) -> String {
+    let mut out = String::new();
+    for s in series {
+        out.push_str(&render(s, n_periods, width, height));
+        out.push('\n');
+    }
+    out
+}
+
+/// One summary row per series: total, peak, mean/period, peak time.
+pub fn summary_table(series: &[&TimeSeries], n_periods: usize) -> String {
+    let mut out = String::from(
+        "metric                          total      peak/period  mean/period  peak at\n",
+    );
+    for s in series {
+        let vals = s.values(n_periods);
+        let total: f64 = vals.iter().sum();
+        let peak = vals.iter().copied().fold(0.0, f64::max);
+        let mean = total / vals.len().max(1) as f64;
+        let peak_t: SimTime = s.peak_index() as u64 * s.period;
+        out.push_str(&format!(
+            "{:<30} {:>10.0} {:>12.0} {:>12.1}  {}\n",
+            s.name,
+            total,
+            peak,
+            mean,
+            fmt_hms(peak_t)
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Agg;
+
+    fn series() -> TimeSeries {
+        let mut s = TimeSeries::new("NumberOfMessagesSent", 100, Agg::Sum);
+        for i in 0..50u64 {
+            let v = 10.0 + 8.0 * ((i as f64) / 8.0).sin();
+            s.record(i * 100, v.max(0.0));
+        }
+        s
+    }
+
+    #[test]
+    fn render_has_expected_shape() {
+        let s = series();
+        let text = render(&s, 50, 40, 8);
+        let lines: Vec<&str> = text.lines().collect();
+        // title + 8 rows + axis + time labels
+        assert_eq!(lines.len(), 11);
+        assert!(lines[0].contains("NumberOfMessagesSent"));
+        assert!(text.contains('#'));
+    }
+
+    #[test]
+    fn peak_row_marked() {
+        let mut s = TimeSeries::new("x", 10, Agg::Sum);
+        s.record(0, 1.0);
+        s.record(10, 100.0);
+        let text = render(&s, 2, 2, 4);
+        // Top row must contain a '#' for the peak column only.
+        let top = text.lines().nth(1).unwrap();
+        assert_eq!(top.matches('#').count(), 1);
+    }
+
+    #[test]
+    fn summary_table_rows() {
+        let s = series();
+        let t = summary_table(&[&s], 50);
+        assert_eq!(t.lines().count(), 2);
+        assert!(t.contains("NumberOfMessagesSent"));
+    }
+
+    #[test]
+    fn handles_empty_series() {
+        let s = TimeSeries::new("empty", 100, Agg::Sum);
+        let text = render(&s, 10, 20, 4);
+        assert!(text.contains("empty"));
+    }
+}

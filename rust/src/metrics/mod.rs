@@ -1,0 +1,312 @@
+//! CloudWatch-lite: period-aggregated time series, chart rendering and
+//! alarms.
+//!
+//! Figure 4 of the paper is an AWS CloudWatch screenshot of the SQS queue's
+//! `NumberOfMessagesSent` / `Received` / `Deleted` at 5-minute periods over
+//! 24 h. This module reproduces that observability layer: components
+//! `record` raw events, the registry aggregates them into fixed periods,
+//! and the bench harness renders the same series as ASCII charts + CSV.
+
+pub mod chart;
+
+use crate::sim::{SimTime, MINUTE};
+use std::collections::BTreeMap;
+
+/// CloudWatch's default detailed period.
+pub const PERIOD_5MIN: SimTime = 5 * MINUTE;
+
+/// How multiple samples within a period combine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Agg {
+    Sum,
+    Max,
+    Mean,
+}
+
+/// One named metric: fixed-period buckets.
+#[derive(Debug, Clone)]
+pub struct TimeSeries {
+    pub name: String,
+    pub period: SimTime,
+    pub agg: Agg,
+    sums: Vec<f64>,
+    counts: Vec<u64>,
+    maxs: Vec<f64>,
+}
+
+impl TimeSeries {
+    pub fn new(name: &str, period: SimTime, agg: Agg) -> Self {
+        TimeSeries {
+            name: name.to_string(),
+            period,
+            agg,
+            sums: Vec::new(),
+            counts: Vec::new(),
+            maxs: Vec::new(),
+        }
+    }
+
+    fn bucket(&mut self, t: SimTime) -> usize {
+        let idx = (t / self.period) as usize;
+        if idx >= self.sums.len() {
+            self.sums.resize(idx + 1, 0.0);
+            self.counts.resize(idx + 1, 0);
+            self.maxs.resize(idx + 1, f64::NEG_INFINITY);
+        }
+        idx
+    }
+
+    pub fn record(&mut self, t: SimTime, value: f64) {
+        let i = self.bucket(t);
+        self.sums[i] += value;
+        self.counts[i] += 1;
+        if value > self.maxs[i] {
+            self.maxs[i] = value;
+        }
+    }
+
+    /// Value of bucket `i` under this series' aggregation.
+    pub fn value(&self, i: usize) -> f64 {
+        if i >= self.sums.len() || self.counts[i] == 0 {
+            return 0.0;
+        }
+        match self.agg {
+            Agg::Sum => self.sums[i],
+            Agg::Max => self.maxs[i],
+            Agg::Mean => self.sums[i] / self.counts[i] as f64,
+        }
+    }
+
+    /// Number of buckets (periods) covered so far.
+    pub fn len(&self) -> usize {
+        self.sums.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sums.is_empty()
+    }
+
+    /// All bucket values, padded to `n` periods.
+    pub fn values(&self, n: usize) -> Vec<f64> {
+        (0..n.max(self.len())).map(|i| self.value(i)).collect()
+    }
+
+    pub fn total(&self) -> f64 {
+        (0..self.len()).map(|i| self.value(i)).sum()
+    }
+
+    pub fn peak(&self) -> f64 {
+        (0..self.len()).map(|i| self.value(i)).fold(0.0, f64::max)
+    }
+
+    /// Index of the peak bucket.
+    pub fn peak_index(&self) -> usize {
+        (0..self.len())
+            .max_by(|&a, &b| self.value(a).partial_cmp(&self.value(b)).unwrap())
+            .unwrap_or(0)
+    }
+}
+
+/// An alarm watching one metric's per-period value.
+#[derive(Debug, Clone)]
+pub struct Alarm {
+    pub metric: String,
+    pub threshold: f64,
+    /// Fire when value exceeds (true) or drops below (false) threshold.
+    pub above: bool,
+    pub fired: Vec<(usize, f64)>,
+}
+
+/// The registry: all series + alarms + an "email" log (the paper's
+/// dead-letter monitor "will email to support group").
+pub struct MetricRegistry {
+    pub period: SimTime,
+    series: BTreeMap<String, TimeSeries>,
+    alarms: Vec<Alarm>,
+    pub emails: Vec<String>,
+    /// Periods `< evaluated_until` have been alarm-checked.
+    evaluated_until: usize,
+}
+
+impl MetricRegistry {
+    pub fn new(period: SimTime) -> Self {
+        MetricRegistry {
+            period,
+            series: BTreeMap::new(),
+            alarms: Vec::new(),
+            emails: Vec::new(),
+            evaluated_until: 0,
+        }
+    }
+
+    pub fn cloudwatch() -> Self {
+        Self::new(PERIOD_5MIN)
+    }
+
+    /// Record into a Sum-aggregated counter metric.
+    pub fn count(&mut self, name: &str, t: SimTime, n: f64) {
+        self.get_or(name, Agg::Sum).record(t, n);
+    }
+
+    /// Record into a Mean-aggregated gauge metric.
+    pub fn gauge(&mut self, name: &str, t: SimTime, v: f64) {
+        self.get_or(name, Agg::Mean).record(t, v);
+    }
+
+    /// Record into a Max-aggregated metric.
+    pub fn peak(&mut self, name: &str, t: SimTime, v: f64) {
+        self.get_or(name, Agg::Max).record(t, v);
+    }
+
+    fn get_or(&mut self, name: &str, agg: Agg) -> &mut TimeSeries {
+        let period = self.period;
+        self.series
+            .entry(name.to_string())
+            .or_insert_with(|| TimeSeries::new(name, period, agg))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&TimeSeries> {
+        self.series.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.series.keys().map(String::as_str).collect()
+    }
+
+    pub fn add_alarm(&mut self, metric: &str, threshold: f64, above: bool) {
+        self.alarms.push(Alarm { metric: metric.to_string(), threshold, above, fired: Vec::new() });
+    }
+
+    /// Evaluate alarms over every newly *completed* period up to `t`
+    /// (CloudWatch evaluates completed periods). Sends "emails".
+    pub fn evaluate_alarms(&mut self, t: SimTime) {
+        let completed = (t / self.period) as usize; // periods < completed are closed
+        let mut emails = Vec::new();
+        for idx in self.evaluated_until..completed {
+            for alarm in &mut self.alarms {
+                if let Some(s) = self.series.get(&alarm.metric) {
+                    let v = s.value(idx);
+                    let breach =
+                        if alarm.above { v > alarm.threshold } else { v < alarm.threshold };
+                    if breach {
+                        alarm.fired.push((idx, v));
+                        emails.push(format!(
+                            "[alert] {} = {v:.1} {} {} in period {idx}",
+                            alarm.metric,
+                            if alarm.above { ">" } else { "<" },
+                            alarm.threshold
+                        ));
+                    }
+                }
+            }
+        }
+        self.evaluated_until = self.evaluated_until.max(completed);
+        self.emails.extend(emails);
+    }
+
+    pub fn alarms(&self) -> &[Alarm] {
+        &self.alarms
+    }
+
+    /// Export all series as CSV: `period_index,metric1,metric2,...`.
+    pub fn to_csv(&self, n_periods: usize) -> String {
+        let mut out = String::from("period");
+        for name in self.series.keys() {
+            out.push(',');
+            out.push_str(name);
+        }
+        out.push('\n');
+        let n = self
+            .series
+            .values()
+            .map(|s| s.len())
+            .max()
+            .unwrap_or(0)
+            .max(n_periods);
+        for i in 0..n {
+            out.push_str(&i.to_string());
+            for s in self.series.values() {
+                out.push(',');
+                out.push_str(&format!("{:.2}", s.value(i)));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sum_aggregation_buckets_by_period() {
+        let mut s = TimeSeries::new("sent", 100, Agg::Sum);
+        s.record(0, 1.0);
+        s.record(50, 2.0);
+        s.record(100, 5.0);
+        s.record(250, 7.0);
+        assert_eq!(s.value(0), 3.0);
+        assert_eq!(s.value(1), 5.0);
+        assert_eq!(s.value(2), 7.0);
+        assert_eq!(s.total(), 15.0);
+        assert_eq!(s.peak(), 7.0);
+        assert_eq!(s.peak_index(), 2);
+    }
+
+    #[test]
+    fn mean_and_max() {
+        let mut m = TimeSeries::new("g", 100, Agg::Mean);
+        m.record(10, 2.0);
+        m.record(20, 4.0);
+        assert_eq!(m.value(0), 3.0);
+        let mut x = TimeSeries::new("p", 100, Agg::Max);
+        x.record(10, 2.0);
+        x.record(20, 4.0);
+        assert_eq!(x.value(0), 4.0);
+    }
+
+    #[test]
+    fn registry_records_and_exports() {
+        let mut r = MetricRegistry::new(100);
+        r.count("sent", 0, 5.0);
+        r.count("sent", 150, 3.0);
+        r.count("deleted", 150, 2.0);
+        let csv = r.to_csv(2);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "period,deleted,sent");
+        assert_eq!(lines[1], "0,0.00,5.00");
+        assert_eq!(lines[2], "1,2.00,3.00");
+    }
+
+    #[test]
+    fn alarm_fires_and_emails() {
+        let mut r = MetricRegistry::new(100);
+        r.add_alarm("dead_letters", 10.0, true);
+        r.count("dead_letters", 50, 20.0);
+        r.evaluate_alarms(100); // evaluates period 0
+        assert_eq!(r.alarms()[0].fired.len(), 1);
+        assert_eq!(r.emails.len(), 1);
+        assert!(r.emails[0].contains("dead_letters"));
+        // Quiet period: no new alarm.
+        r.evaluate_alarms(200);
+        assert_eq!(r.emails.len(), 1);
+    }
+
+    #[test]
+    fn alarm_below_mode() {
+        let mut r = MetricRegistry::new(100);
+        r.add_alarm("throughput", 5.0, false);
+        r.count("throughput", 10, 2.0);
+        r.evaluate_alarms(100);
+        assert_eq!(r.emails.len(), 1);
+    }
+
+    #[test]
+    fn empty_periods_are_zero() {
+        let mut s = TimeSeries::new("x", 10, Agg::Sum);
+        s.record(100, 1.0);
+        assert_eq!(s.value(3), 0.0);
+        assert_eq!(s.values(12).len(), 12);
+    }
+}

@@ -1,0 +1,268 @@
+//! Alert subscriptions — the "Alert" in AlertMix.
+//!
+//! The paper's delivery side ("multi-channel distribution") and its
+//! future-work section ("more intensive text analytics on the streaming
+//! data") meet here: subscribers register keyword/score rules, and every
+//! *fresh* ingested item is matched at the enrich stage in real time. A
+//! match produces an [`AlertEvent`] on the subscriber's channel —
+//! webhook/email in production, an in-memory feed here.
+
+use crate::sim::SimTime;
+use crate::sink::SinkDoc;
+use crate::text::tokenize;
+use std::collections::{HashMap, HashSet};
+
+/// What a subscriber listens for.
+#[derive(Debug, Clone)]
+pub struct AlertRule {
+    pub id: u64,
+    pub name: String,
+    /// All these tokens must appear in title or body (lowercased).
+    pub all_terms: Vec<String>,
+    /// At least one of these, if non-empty.
+    pub any_terms: Vec<String>,
+    /// Minimum model relevance (scores[0]) to fire.
+    pub min_relevance: f32,
+    /// Restrict to specific stream ids (empty = all).
+    pub stream_filter: HashSet<u64>,
+}
+
+impl AlertRule {
+    pub fn keyword(id: u64, name: &str, all: &[&str]) -> Self {
+        AlertRule {
+            id,
+            name: name.to_string(),
+            all_terms: all.iter().map(|s| s.to_lowercase()).collect(),
+            any_terms: Vec::new(),
+            min_relevance: 0.0,
+            stream_filter: HashSet::new(),
+        }
+    }
+
+    fn matches(&self, doc: &SinkDoc, tokens: &HashSet<String>) -> bool {
+        if !self.stream_filter.is_empty() && !self.stream_filter.contains(&doc.stream_id) {
+            return false;
+        }
+        if doc.scores.first().copied().unwrap_or(1.0) < self.min_relevance {
+            return false;
+        }
+        if !self.all_terms.iter().all(|t| tokens.contains(t)) {
+            return false;
+        }
+        if !self.any_terms.is_empty() && !self.any_terms.iter().any(|t| tokens.contains(t)) {
+            return false;
+        }
+        true
+    }
+}
+
+/// A fired alert.
+#[derive(Debug, Clone)]
+pub struct AlertEvent {
+    pub rule_id: u64,
+    pub rule_name: String,
+    pub doc_id: u64,
+    pub stream_id: u64,
+    pub title: String,
+    pub fired_at: SimTime,
+    /// publish -> alert latency, the number subscribers care about.
+    pub latency_ms: SimTime,
+}
+
+/// The matcher: rules indexed by their rarest required term so each item
+/// only probes rules that could possibly match (same idea as ES percolate).
+pub struct AlertBook {
+    rules: HashMap<u64, AlertRule>,
+    /// term -> rule ids requiring that term (first `all_term` as anchor).
+    anchor: HashMap<String, Vec<u64>>,
+    /// rules with no all_terms (must be probed every item).
+    unanchored: Vec<u64>,
+    pub events: Vec<AlertEvent>,
+    pub matches: u64,
+    pub probes: u64,
+}
+
+impl Default for AlertBook {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AlertBook {
+    pub fn new() -> Self {
+        AlertBook {
+            rules: HashMap::new(),
+            anchor: HashMap::new(),
+            unanchored: Vec::new(),
+            events: Vec::new(),
+            matches: 0,
+            probes: 0,
+        }
+    }
+
+    pub fn subscribe(&mut self, rule: AlertRule) {
+        let id = rule.id;
+        match rule.all_terms.first() {
+            Some(t) => self.anchor.entry(t.clone()).or_default().push(id),
+            None => self.unanchored.push(id),
+        }
+        self.rules.insert(id, rule);
+    }
+
+    pub fn unsubscribe(&mut self, rule_id: u64) -> bool {
+        let Some(rule) = self.rules.remove(&rule_id) else { return false };
+        if let Some(t) = rule.all_terms.first() {
+            if let Some(v) = self.anchor.get_mut(t) {
+                v.retain(|id| *id != rule_id);
+            }
+        } else {
+            self.unanchored.retain(|id| *id != rule_id);
+        }
+        true
+    }
+
+    pub fn rule_count(&self) -> usize {
+        self.rules.len()
+    }
+
+    /// Match one freshly-ingested document; fires events for every rule hit.
+    pub fn check(&mut self, doc: &SinkDoc, now: SimTime) -> usize {
+        let tokens: HashSet<String> = tokenize(&doc.title)
+            .into_iter()
+            .chain(tokenize(&doc.body))
+            .collect();
+        let mut candidates: Vec<u64> = self.unanchored.clone();
+        for tok in &tokens {
+            if let Some(ids) = self.anchor.get(tok) {
+                candidates.extend_from_slice(ids);
+            }
+        }
+        candidates.sort_unstable();
+        candidates.dedup();
+        let mut fired = 0;
+        for id in candidates {
+            self.probes += 1;
+            let rule = &self.rules[&id];
+            if rule.matches(doc, &tokens) {
+                fired += 1;
+                self.matches += 1;
+                self.events.push(AlertEvent {
+                    rule_id: id,
+                    rule_name: rule.name.clone(),
+                    doc_id: doc.doc_id,
+                    stream_id: doc.stream_id,
+                    title: doc.title.clone(),
+                    fired_at: now,
+                    latency_ms: now.saturating_sub(doc.published_ms),
+                });
+            }
+        }
+        fired
+    }
+
+    /// p-th percentile publish→alert latency.
+    pub fn latency_pct(&self, p: f64) -> Option<SimTime> {
+        if self.events.is_empty() {
+            return None;
+        }
+        let mut xs: Vec<SimTime> = self.events.iter().map(|e| e.latency_ms).collect();
+        xs.sort_unstable();
+        Some(xs[((xs.len() - 1) as f64 * p).round() as usize])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(id: u64, title: &str, body: &str, relevance: f32) -> SinkDoc {
+        SinkDoc {
+            doc_id: id,
+            stream_id: 7,
+            guid: format!("g{id}"),
+            title: title.into(),
+            body: body.into(),
+            url: "http://x".into(),
+            published_ms: 1_000,
+            ingested_ms: 5_000,
+            scores: vec![relevance],
+            simhash: 0,
+        }
+    }
+
+    #[test]
+    fn keyword_rule_fires_and_carries_latency() {
+        let mut book = AlertBook::new();
+        book.subscribe(AlertRule::keyword(1, "drought watch", &["drought"]));
+        let fired = book.check(&doc(10, "record drought in denver", "officials warn", 0.9), 5_000);
+        assert_eq!(fired, 1);
+        let ev = &book.events[0];
+        assert_eq!(ev.rule_id, 1);
+        assert_eq!(ev.latency_ms, 4_000);
+        // Non-matching item does not fire.
+        assert_eq!(book.check(&doc(11, "markets rally", "calm day", 0.9), 6_000), 0);
+    }
+
+    #[test]
+    fn all_terms_are_conjunctive() {
+        let mut book = AlertBook::new();
+        book.subscribe(AlertRule::keyword(1, "rate cut", &["rate", "cut"]));
+        assert_eq!(book.check(&doc(1, "central bank rate decision", "", 0.5), 0), 0);
+        assert_eq!(book.check(&doc(2, "surprise rate cut announced", "", 0.5), 0), 1);
+    }
+
+    #[test]
+    fn any_terms_and_relevance_gate() {
+        let mut book = AlertBook::new();
+        let mut rule = AlertRule::keyword(3, "energy", &["energy"]);
+        rule.any_terms = vec!["solar".into(), "wind".into()];
+        rule.min_relevance = 0.6;
+        book.subscribe(rule);
+        // missing any_term
+        assert_eq!(book.check(&doc(1, "energy project approved", "", 0.9), 0), 0);
+        // below relevance
+        assert_eq!(book.check(&doc(2, "energy project solar", "", 0.3), 0), 0);
+        // all gates pass
+        assert_eq!(book.check(&doc(3, "energy project solar", "", 0.9), 0), 1);
+    }
+
+    #[test]
+    fn stream_filter_restricts() {
+        let mut book = AlertBook::new();
+        let mut rule = AlertRule::keyword(4, "mine", &["markets"]);
+        rule.stream_filter = HashSet::from([99]);
+        book.subscribe(rule);
+        assert_eq!(book.check(&doc(1, "markets rally", "", 0.9), 0), 0, "stream 7 != 99");
+    }
+
+    #[test]
+    fn unsubscribe_stops_alerts() {
+        let mut book = AlertBook::new();
+        book.subscribe(AlertRule::keyword(5, "w", &["wildfire"]));
+        assert_eq!(book.check(&doc(1, "wildfire spreads", "", 0.5), 0), 1);
+        assert!(book.unsubscribe(5));
+        assert_eq!(book.check(&doc(2, "wildfire grows", "", 0.5), 0), 0);
+        assert!(!book.unsubscribe(5));
+    }
+
+    #[test]
+    fn anchored_probing_skips_unrelated_rules() {
+        let mut book = AlertBook::new();
+        for i in 0..100 {
+            book.subscribe(AlertRule::keyword(i, "r", &["zzznever"]));
+        }
+        book.check(&doc(1, "ordinary markets story", "body", 0.5), 0);
+        assert_eq!(book.probes, 0, "no anchor term matched, no rule probed");
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut book = AlertBook::new();
+        book.subscribe(AlertRule::keyword(1, "m", &["markets"]));
+        for i in 0..10u64 {
+            book.check(&doc(i, "markets move", "", 0.5), 1_000 + i * 100);
+        }
+        assert_eq!(book.latency_pct(0.0), Some(0));
+        assert_eq!(book.latency_pct(1.0), Some(900));
+    }
+}

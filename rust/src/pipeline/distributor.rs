@@ -1,0 +1,138 @@
+//! ChannelDistributorActor: "find out different channels within the
+//! stream and pass those on to appropriate routers for processing."
+
+use super::messages::FeedJob;
+use super::world::World;
+use crate::actor::{Actor, ActorResult, Ctx, Msg, PRIORITY_HIGH, PRIORITY_NORMAL};
+
+pub struct ChannelDistributor;
+
+impl Actor<World> for ChannelDistributor {
+    fn receive(&mut self, ctx: &mut Ctx, world: &mut World, msg: Msg) -> ActorResult {
+        let Ok(job) = msg.downcast::<FeedJob>() else { return Ok(()) };
+        let now = ctx.now();
+        let Some(rec) = world.store.get(job.stream_id) else {
+            // Stream was removed while queued: ack and drop.
+            world.counters.missing_streams += 1;
+            if job.from_priority {
+                world.queues.priority.delete(now, job.receipt);
+            } else {
+                world.queues.main.delete(now, job.receipt);
+            }
+            world.metrics.count("NumberOfMessagesDeleted", now, 1.0);
+            world.counters.jobs_completed += 1;
+            return Ok(());
+        };
+        let pool = world.handles().pool_for(rec.channel);
+        let pri = if job.from_priority || rec.priority { PRIORITY_HIGH } else { PRIORITY_NORMAL };
+        ctx.send_pri(pool, pri, *job);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::actor::{ActorSystem, MailboxKind};
+    use crate::config::AlertMixConfig;
+    use crate::pipeline::Handles;
+    use crate::sqs::ReceiptHandle;
+
+    #[test]
+    fn routes_by_channel_and_acks_missing() {
+        let mut sys: ActorSystem<World> = ActorSystem::new(1);
+        let mut w = World::build(&AlertMixConfig::tiny()).unwrap();
+
+        struct Capture(&'static str);
+        impl Actor<World> for Capture {
+            fn receive(&mut self, _: &mut Ctx, w: &mut World, msg: Msg) -> ActorResult {
+                if let Ok(job) = msg.downcast::<FeedJob>() {
+                    w.counters.jobs_completed += 1;
+                    // record which pool saw it via metrics
+                    w.metrics.count(self.0, 0, job.stream_id as f64);
+                }
+                Ok(())
+            }
+        }
+        let news = sys.spawn("n", MailboxKind::Unbounded, Box::new(|_| Box::new(Capture("cap-news"))));
+        let fb = sys.spawn("f", MailboxKind::Unbounded, Box::new(|_| Box::new(Capture("cap-fb"))));
+        let dist =
+            sys.spawn("d", MailboxKind::Unbounded, Box::new(|_| Box::new(ChannelDistributor)));
+        let h = Handles {
+            picker: dist,
+            feed_router: dist,
+            distributor: dist,
+            priority_streams: dist,
+            news_pool: news,
+            rss_pool: news,
+            facebook_pool: fb,
+            twitter_pool: fb,
+            updater: dist,
+            enrich_stage: dist,
+            monitor: dist,
+        };
+        w.handles = Some(h);
+
+        // Find one news stream id in the tiny universe.
+        let news_id = w
+            .universe
+            .profiles()
+            .iter()
+            .find(|p| p.channel == crate::store::streams::Channel::News)
+            .unwrap()
+            .id;
+        // Queue a message so the ack below has something to delete.
+        w.queues.main.send(0, "x".to_string());
+        let rcv = w.queues.main.receive(0, 1);
+        sys.tell(dist, FeedJob {
+            stream_id: news_id,
+            receipt: rcv[0].handle,
+            from_priority: false,
+            receive_count: 1,
+        });
+        // And a job for a stream that does not exist.
+        w.queues.main.send(0, "y".to_string());
+        let rcv2 = w.queues.main.receive(0, 1);
+        sys.tell(dist, FeedJob {
+            stream_id: 10_000_000,
+            receipt: rcv2[0].handle,
+            from_priority: false,
+            receive_count: 1,
+        });
+        sys.run_to_idle(&mut w);
+
+        assert!(w.metrics.get("cap-news").is_some(), "news job routed to news pool");
+        assert_eq!(w.counters.missing_streams, 1);
+        assert_eq!(w.queues.main.counters.deleted, 1, "missing stream job acked");
+    }
+
+    #[test]
+    fn unknown_receipt_ack_is_harmless() {
+        let mut sys: ActorSystem<World> = ActorSystem::new(1);
+        let mut w = World::build(&AlertMixConfig::tiny()).unwrap();
+        let dist =
+            sys.spawn("d", MailboxKind::Unbounded, Box::new(|_| Box::new(ChannelDistributor)));
+        let h = Handles {
+            picker: dist,
+            feed_router: dist,
+            distributor: dist,
+            priority_streams: dist,
+            news_pool: dist,
+            rss_pool: dist,
+            facebook_pool: dist,
+            twitter_pool: dist,
+            updater: dist,
+            enrich_stage: dist,
+            monitor: dist,
+        };
+        w.handles = Some(h);
+        sys.tell(dist, FeedJob {
+            stream_id: 10_000_000,
+            receipt: ReceiptHandle(987),
+            from_priority: true,
+            receive_count: 1,
+        });
+        sys.run_to_idle(&mut w);
+        assert_eq!(w.counters.missing_streams, 1);
+    }
+}

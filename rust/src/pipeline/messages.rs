@@ -1,0 +1,63 @@
+//! Message vocabulary of the pipeline actors.
+
+use crate::sim::SimTime;
+use crate::sqs::ReceiptHandle;
+use crate::store::streams::PollOutcome;
+use crate::text::FEATURE_DIM;
+
+/// Timer: StreamsPicker cadence (the 5-second "Cron").
+pub struct PickDue;
+
+/// Timer: FeedRouter replenishment evaluation.
+pub struct RouterTick;
+
+/// Timer: enrichment batcher timeout flush.
+pub struct EnrichTick;
+
+/// Timer: dead-letters / alarm evaluation.
+pub struct MonitorTick;
+
+/// A feed-processing job pulled from SQS, en route to a channel pool.
+#[derive(Debug, Clone)]
+pub struct FeedJob {
+    pub stream_id: u64,
+    pub receipt: ReceiptHandle,
+    pub from_priority: bool,
+    pub receive_count: u32,
+}
+
+/// Web-app request: process a (new) stream on priority.
+#[derive(Debug, Clone, Copy)]
+pub struct PrioritizeStream {
+    pub stream_id: u64,
+}
+
+/// Worker -> StreamsUpdater: poll finished, update the bucket + ack SQS.
+#[derive(Debug)]
+pub struct StreamPolled {
+    pub stream_id: u64,
+    pub receipt: ReceiptHandle,
+    pub from_priority: bool,
+    pub outcome: PollOutcome,
+    pub etag: Option<String>,
+    pub last_modified: Option<SimTime>,
+}
+
+/// Worker -> EnrichStage: one fetched item, featurized and ready for the
+/// XLA enricher.
+pub struct EnrichRequest {
+    pub meta: ItemMeta,
+    pub features: Box<[f32; FEATURE_DIM]>,
+}
+
+/// Everything the sink needs once enrichment scores/signature arrive.
+#[derive(Debug, Clone)]
+pub struct ItemMeta {
+    pub doc_id: u64,
+    pub stream_id: u64,
+    pub guid: String,
+    pub title: String,
+    pub body: String,
+    pub url: String,
+    pub published_ms: SimTime,
+}

@@ -1,0 +1,85 @@
+//! DeadLettersListener: "will subscribe to dead letters mail box and will
+//! generate logs for monitoring purposes and ELK stack will be used for
+//! monitoring purposes and if it sees unexpected number of dead letters it
+//! will email to support group as well."
+//!
+//! Here: reads the shared dead-letter office each interval, publishes the
+//! count as a CloudWatch metric, and lets the registry's alarm fire the
+//! "email" when the per-period count is unexpected.
+
+use super::messages::MonitorTick;
+use super::world::World;
+use crate::actor::{Actor, ActorResult, Ctx, Msg};
+
+pub struct DeadLettersMonitor;
+
+impl Actor<World> for DeadLettersMonitor {
+    fn receive(&mut self, ctx: &mut Ctx, world: &mut World, msg: Msg) -> ActorResult {
+        if msg.downcast::<MonitorTick>().is_err() {
+            return Ok(());
+        }
+        let now = ctx.now();
+        let window = world.cfg.monitor_interval;
+        let recent = world.dead_letters.borrow().since(now.saturating_sub(window));
+        if recent > 0 {
+            world.metrics.count("DeadLetters", now, recent as f64);
+            log::warn!("dead letters in last {window}ms: {recent}");
+        }
+        // Also surface backlog and in-flight gauges for the dashboards.
+        world.metrics.gauge("JobsInFlight", now, world.counters.jobs_in_flight() as f64);
+        world.metrics.gauge("SinkDocs", now, world.sink.doc_count() as f64);
+        world.metrics.evaluate_alarms(now);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::actor::{ActorId, ActorSystem, DeadLetter, DeadLetterReason, MailboxKind};
+    use crate::config::AlertMixConfig;
+    use crate::sim::MINUTE;
+
+    #[test]
+    fn monitor_counts_and_alarms() {
+        let mut sys: ActorSystem<World> = ActorSystem::new(1);
+        let mut cfg = AlertMixConfig::tiny();
+        cfg.dead_letter_alarm = 5.0;
+        let mut w = World::build(&cfg).unwrap();
+        w.dead_letters = sys.dead_letters.clone();
+        let mon =
+            sys.spawn("mon", MailboxKind::Unbounded, Box::new(|_| Box::new(DeadLettersMonitor)));
+
+        // Inject 10 dead letters at t≈30s.
+        for i in 0..10 {
+            sys.dead_letters.borrow_mut().publish(DeadLetter {
+                at: 30_000 + i,
+                to: ActorId(0),
+                from: ActorId(1),
+                priority: 4,
+                reason: DeadLetterReason::MailboxOverflow,
+            });
+        }
+        sys.tell_at(MINUTE, mon, MonitorTick);
+        // Alarm evaluates the *completed* 5-min period, so tick again later.
+        sys.tell_at(10 * MINUTE, mon, MonitorTick);
+        sys.run_to_idle(&mut w);
+
+        assert_eq!(w.metrics.get("DeadLetters").unwrap().total(), 10.0);
+        assert!(!w.metrics.emails.is_empty(), "support group should get an email");
+        assert!(w.metrics.emails[0].contains("DeadLetters"));
+    }
+
+    #[test]
+    fn quiet_system_no_emails() {
+        let mut sys: ActorSystem<World> = ActorSystem::new(1);
+        let mut w = World::build(&AlertMixConfig::tiny()).unwrap();
+        w.dead_letters = sys.dead_letters.clone();
+        let mon =
+            sys.spawn("mon", MailboxKind::Unbounded, Box::new(|_| Box::new(DeadLettersMonitor)));
+        sys.tell_at(MINUTE, mon, MonitorTick);
+        sys.tell_at(10 * MINUTE, mon, MonitorTick);
+        sys.run_to_idle(&mut w);
+        assert!(w.metrics.emails.is_empty());
+    }
+}

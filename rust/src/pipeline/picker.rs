@@ -1,0 +1,133 @@
+//! StreamsPickerActor ("Cron") and PriorityStreamsActor.
+//!
+//! The picker is invoked on a fixed schedule ("runs at fixed intervals,
+//! say 5 seconds, querying the Couchbase database to fetch Feed messages
+//! which have their next run time within the next interval"), claims the
+//! due streams (in-process status) and enqueues a job per stream into the
+//! main or priority SQS queue. Streams stuck in-process past the stale
+//! window are re-picked — the paper's recovery story for lost messages.
+
+use super::messages::{PickDue, PrioritizeStream};
+use super::world::World;
+use crate::actor::{Actor, ActorResult, Ctx, Msg};
+
+pub struct StreamsPicker;
+
+impl Actor<World> for StreamsPicker {
+    fn receive(&mut self, ctx: &mut Ctx, world: &mut World, msg: Msg) -> ActorResult {
+        if msg.downcast::<PickDue>().is_err() {
+            return Ok(()); // ignore unknown messages
+        }
+        let now = ctx.now();
+        let picked = world.store.pick_due(
+            now,
+            world.cfg.pick_interval,
+            world.cfg.stale_after,
+            world.cfg.pick_batch,
+        );
+        if picked.is_empty() {
+            return Ok(());
+        }
+        let mut to_priority = 0u64;
+        let mut to_main = 0u64;
+        for id in &picked {
+            let priority = world.store.get(*id).map(|r| r.priority).unwrap_or(false);
+            // Job body is the JSON the production system would put on SQS.
+            let body = format!("{{\"stream_id\":{id}}}");
+            if priority {
+                world.queues.priority.send(now, body);
+                to_priority += 1;
+            } else {
+                world.queues.main.send(now, body);
+                to_main += 1;
+            }
+        }
+        // CloudWatch series: Figure 4's NumberOfMessagesSent.
+        world.metrics.count("NumberOfMessagesSent", now, (to_main + to_priority) as f64);
+        if to_priority > 0 {
+            world.metrics.count("PriorityMessagesSent", now, to_priority as f64);
+        }
+        // Claiming + enqueueing cost: a Couchbase query + N small writes.
+        ctx.take(1 + picked.len() as u64 / 200);
+        Ok(())
+    }
+}
+
+/// PriorityStreamsActor: "invoked most likely from AlertMix web
+/// application, where by some streams e.g. newly created stream etc. will
+/// be processed on priority."
+pub struct PriorityStreams;
+
+impl Actor<World> for PriorityStreams {
+    fn receive(&mut self, ctx: &mut Ctx, world: &mut World, msg: Msg) -> ActorResult {
+        let Ok(req) = msg.downcast::<PrioritizeStream>() else { return Ok(()) };
+        let now = ctx.now();
+        let id = req.stream_id;
+        if world.store.get(id).is_none() {
+            world.counters.missing_streams += 1;
+            return Ok(());
+        }
+        // Mark + pull forward in the bucket; if idle, claim immediately and
+        // push straight onto the priority queue so it beats the next cron.
+        if world.store.prioritize(id, now) {
+            let picked = world.store.pick_due(now, 0, world.cfg.stale_after, 1);
+            for id in picked {
+                world.queues.priority.send(now, format!("{{\"stream_id\":{id}}}"));
+                world.metrics.count("NumberOfMessagesSent", now, 1.0);
+                world.metrics.count("PriorityMessagesSent", now, 1.0);
+            }
+        }
+        ctx.take(1);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::actor::{ActorSystem, MailboxKind};
+    use crate::config::AlertMixConfig;
+
+    fn world() -> World {
+        World::build(&AlertMixConfig::tiny()).unwrap()
+    }
+
+    #[test]
+    fn picker_enqueues_due_streams() {
+        let mut sys: ActorSystem<World> = ActorSystem::new(1);
+        let picker =
+            sys.spawn("p", MailboxKind::Unbounded, Box::new(|_| Box::new(StreamsPicker)));
+        let mut w = world();
+        // All 200 tiny-universe streams are due within the first interval.
+        sys.tell_at(w.cfg.base_poll_interval, picker, PickDue);
+        sys.run_to_idle(&mut w);
+        let sent = w.queues.main.counters.sent;
+        assert!(sent > 0, "sent={sent}");
+        let (_idle, inproc, _) = w.store.status_counts();
+        assert_eq!(inproc as u64, sent, "every enqueued stream is claimed");
+    }
+
+    #[test]
+    fn prioritize_jumps_to_priority_queue() {
+        let mut sys: ActorSystem<World> = ActorSystem::new(1);
+        let pri =
+            sys.spawn("pri", MailboxKind::Unbounded, Box::new(|_| Box::new(PriorityStreams)));
+        let mut w = world();
+        sys.tell(pri, PrioritizeStream { stream_id: 5 });
+        sys.run_to_idle(&mut w);
+        assert_eq!(w.queues.priority.counters.sent, 1);
+        assert!(w.store.get(5).unwrap().priority);
+    }
+
+    #[test]
+    fn prioritize_unknown_stream_counts_missing() {
+        let mut sys: ActorSystem<World> = ActorSystem::new(1);
+        let pri =
+            sys.spawn("pri", MailboxKind::Unbounded, Box::new(|_| Box::new(PriorityStreams)));
+        let mut w = world();
+        sys.tell(pri, PrioritizeStream { stream_id: 999_999 });
+        sys.run_to_idle(&mut w);
+        assert_eq!(w.counters.missing_streams, 1);
+        assert_eq!(w.queues.priority.counters.sent, 0);
+    }
+}

@@ -1,0 +1,94 @@
+//! StreamsUpdaterActor: "update couchbase with data received for streams
+//! and also mark stream's status as processed and update next due date" —
+//! plus the SQS delete (the ack that Figure 4's "deleting" series counts).
+
+use super::messages::StreamPolled;
+use super::world::World;
+use crate::actor::{Actor, ActorResult, Ctx, Msg};
+
+pub struct StreamsUpdater;
+
+impl Actor<World> for StreamsUpdater {
+    fn receive(&mut self, ctx: &mut Ctx, world: &mut World, msg: Msg) -> ActorResult {
+        let Ok(p) = msg.downcast::<StreamPolled>() else { return Ok(()) };
+        let now = ctx.now();
+
+        // Adapt the schedule + release the claim (Couchbase write).
+        world.store.complete(p.stream_id, now, p.outcome, p.etag, p.last_modified);
+
+        // Ack SQS. A false return means the visibility timeout already
+        // expired and the message may be redelivered — at-least-once; the
+        // redelivered job will 304 immediately thanks to the saved ETag.
+        let acked = if p.from_priority {
+            world.queues.priority.delete(now, p.receipt)
+        } else {
+            world.queues.main.delete(now, p.receipt)
+        };
+        if acked {
+            world.metrics.count("NumberOfMessagesDeleted", now, 1.0);
+        }
+        world.counters.jobs_completed += 1;
+        ctx.take(1); // couchbase update + sqs delete round trip
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::actor::{ActorSystem, MailboxKind};
+    use crate::config::AlertMixConfig;
+    use crate::store::streams::{PollOutcome, StreamStatus};
+
+    #[test]
+    fn updater_completes_and_acks() {
+        let mut sys: ActorSystem<World> = ActorSystem::new(1);
+        let mut w = World::build(&AlertMixConfig::tiny()).unwrap();
+        let upd = sys.spawn("u", MailboxKind::Unbounded, Box::new(|_| Box::new(StreamsUpdater)));
+
+        // Claim stream 1 and queue its job.
+        let picked = w.store.pick_due(0, u64::MAX, 60_000, 1);
+        let id = picked[0];
+        w.queues.main.send(0, format!("{{\"stream_id\":{id}}}"));
+        let m = w.queues.main.receive(0, 1).pop().unwrap();
+
+        sys.tell(upd, StreamPolled {
+            stream_id: id,
+            receipt: m.handle,
+            from_priority: false,
+            outcome: PollOutcome::Items(3),
+            etag: Some("e1".into()),
+            last_modified: Some(5),
+        });
+        sys.run_to_idle(&mut w);
+
+        let rec = w.store.get(id).unwrap();
+        assert_eq!(rec.status, StreamStatus::Idle);
+        assert_eq!(rec.items_seen, 3);
+        assert_eq!(rec.etag.as_deref(), Some("e1"));
+        assert_eq!(w.queues.main.counters.deleted, 1);
+        assert_eq!(w.counters.jobs_completed, 1);
+        assert_eq!(w.metrics.get("NumberOfMessagesDeleted").unwrap().total(), 1.0);
+    }
+
+    #[test]
+    fn expired_receipt_still_completes_stream() {
+        let mut sys: ActorSystem<World> = ActorSystem::new(1);
+        let mut w = World::build(&AlertMixConfig::tiny()).unwrap();
+        let upd = sys.spawn("u", MailboxKind::Unbounded, Box::new(|_| Box::new(StreamsUpdater)));
+        let picked = w.store.pick_due(0, u64::MAX, 60_000, 1);
+        let id = picked[0];
+        sys.tell(upd, StreamPolled {
+            stream_id: id,
+            receipt: crate::sqs::ReceiptHandle(999), // bogus/expired
+            from_priority: false,
+            outcome: PollOutcome::NotModified,
+            etag: None,
+            last_modified: None,
+        });
+        sys.run_to_idle(&mut w);
+        assert_eq!(w.store.get(id).unwrap().status, StreamStatus::Idle);
+        // No delete counted — the metric reflects reality.
+        assert!(w.metrics.get("NumberOfMessagesDeleted").is_none());
+    }
+}

@@ -1,0 +1,234 @@
+//! The shared world: every substrate the actors operate on.
+
+use super::alerts::AlertBook;
+use super::messages::ItemMeta;
+use super::Handles;
+use crate::actor::DeadLetters;
+use crate::config::AlertMixConfig;
+use crate::dedup::{DedupVerdict, Deduper};
+use crate::feedsim::{FeedUniverse, HttpConfig, HttpSim, SocialConfig, SocialSim, UniverseConfig};
+use crate::metrics::MetricRegistry;
+use crate::runtime::{
+    Batcher, BatcherConfig, CpuFallbackEnricher, EnrichBackend, PendingItem, XlaEnricher,
+};
+use crate::sim::SimTime;
+use crate::sink::{ElasticLite, SinkDoc};
+use crate::sqs::{DualQueue, RedrivePolicy};
+use crate::store::streams::{StreamRecord, StreamStore};
+use crate::util::IdGen;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// End-to-end accounting, asserted by integration tests
+/// (conservation: fetched == ingested + deduped).
+#[derive(Debug, Default, Clone)]
+pub struct WorldCounters {
+    pub jobs_dispatched: u64,
+    pub jobs_completed: u64,
+    pub items_fetched: u64,
+    pub items_ingested: u64,
+    pub items_deduped: u64,
+    pub fetch_errors: u64,
+    pub redirects_followed: u64,
+    pub rate_limited: u64,
+    pub polls_ok: u64,
+    pub polls_not_modified: u64,
+    pub polls_error: u64,
+    pub missing_streams: u64,
+    pub enrich_batches: u64,
+}
+
+impl WorldCounters {
+    pub fn jobs_in_flight(&self) -> u64 {
+        self.jobs_dispatched.saturating_sub(self.jobs_completed)
+    }
+}
+
+/// The substrate bundle threaded through every actor handler.
+pub struct World {
+    pub cfg: AlertMixConfig,
+    pub store: StreamStore,
+    pub queues: DualQueue,
+    pub universe: FeedUniverse,
+    pub http: HttpSim,
+    pub social: SocialSim,
+    pub sink: ElasticLite,
+    pub dedup: Deduper,
+    pub metrics: MetricRegistry,
+    pub enricher: Box<dyn EnrichBackend>,
+    pub batcher: Batcher,
+    /// ticket -> item metadata for in-flight enrichment requests.
+    pub pending_items: HashMap<u64, ItemMeta>,
+    pub doc_ids: IdGen,
+    /// Alert subscriptions matched against every fresh ingested item.
+    pub alerts: AlertBook,
+    pub counters: WorldCounters,
+    /// Shared view of the actor system's dead-letter office (monitor
+    /// actor reads it; the system writes it).
+    pub dead_letters: Rc<RefCell<DeadLetters>>,
+    pub handles: Option<Handles>,
+}
+
+impl World {
+    pub fn build(cfg: &AlertMixConfig) -> anyhow::Result<World> {
+        let ucfg = UniverseConfig {
+            n_feeds: cfg.n_feeds,
+            diurnal_depth: cfg.diurnal_depth,
+            syndication_rate: cfg.syndication_rate,
+            seed: cfg.seed ^ 0x0051_F00D,
+            ..UniverseConfig::default()
+        };
+        let universe = FeedUniverse::new(ucfg);
+
+        // Seed the streams bucket from the universe in *steady state*: the
+        // paper's Figure-4 snapshot observes a long-running production
+        // system, so each stream starts at its rate-implied equilibrium
+        // backoff level with its next poll staggered uniformly across its
+        // own effective interval. (A cold start would open with a
+        // pathological 200k-feed sweep no production chart shows.)
+        let mut store = StreamStore::new();
+        store.max_backoff = cfg.max_backoff_level;
+        for p in universe.profiles() {
+            let mut rec =
+                StreamRecord::new(p.id, p.channel, p.url.clone(), cfg.base_poll_interval, 0);
+            // Equilibrium level: smallest backoff at which the feed has a
+            // reasonable chance (~exp items >= 0.5) of new content per poll.
+            let mut level = 0u8;
+            while level < cfg.max_backoff_level {
+                let interval = cfg.base_poll_interval * (1u64 << level);
+                if p.rate_per_ms * interval as f64 >= 0.5 {
+                    break;
+                }
+                level += 1;
+            }
+            rec.backoff_level = level;
+            let interval = rec.effective_interval();
+            rec.next_due = crate::util::hash::combine(p.id, 0xD15E) % interval;
+            store.insert(rec);
+        }
+
+        let enricher: Box<dyn EnrichBackend> = if cfg.use_xla {
+            Box::new(XlaEnricher::load_default()?)
+        } else {
+            Box::new(CpuFallbackEnricher::new(cfg.enrich_batch))
+        };
+
+        let mut metrics = MetricRegistry::cloudwatch();
+        metrics.add_alarm("DeadLetters", cfg.dead_letter_alarm, true);
+
+        Ok(World {
+            store,
+            queues: DualQueue::new(
+                cfg.visibility_timeout,
+                Some(RedrivePolicy { max_receive_count: cfg.max_receive_count }),
+            ),
+            universe,
+            http: HttpSim::new(HttpConfig { seed: cfg.seed ^ 0x4777, ..HttpConfig::default() }),
+            social: SocialSim::new(SocialConfig::default()),
+            sink: ElasticLite::new(cfg.sink_bulk),
+            dedup: Deduper::new(cfg.dedup_max_hamming),
+            metrics,
+            enricher,
+            batcher: Batcher::new(BatcherConfig {
+                batch_size: cfg.enrich_batch,
+                max_wait_ms: cfg.enrich_max_wait,
+            }),
+            pending_items: HashMap::new(),
+            doc_ids: IdGen::new(),
+            alerts: AlertBook::new(),
+            counters: WorldCounters::default(),
+            dead_letters: Rc::new(RefCell::new(DeadLetters::default())),
+            handles: None,
+            cfg: cfg.clone(),
+        })
+    }
+
+    pub fn handles(&self) -> &Handles {
+        self.handles.as_ref().expect("bootstrap sets handles")
+    }
+
+    /// Queue an item for enrichment; returns the virtual cost (ms) if a
+    /// full batch was processed inline.
+    pub fn enrich_push(&mut self, now: SimTime, meta: ItemMeta, features: Box<[f32; 256]>) -> SimTime {
+        let ticket = meta.doc_id;
+        self.pending_items.insert(ticket, meta);
+        if let Some(batch) = self.batcher.push(PendingItem {
+            ticket,
+            features: *features,
+            enqueued_at: now,
+        }) {
+            self.process_enriched_batch(now, batch)
+        } else {
+            0
+        }
+    }
+
+    /// Timeout-flush hook for the EnrichTick timer.
+    pub fn enrich_poll_timeout(&mut self, now: SimTime) -> SimTime {
+        match self.batcher.poll_timeout(now) {
+            Some(batch) => self.process_enriched_batch(now, batch),
+            None => 0,
+        }
+    }
+
+    /// End-of-run drain.
+    pub fn flush_enrichment(&mut self, now: SimTime) {
+        while let Some(batch) = self.batcher.flush() {
+            self.process_enriched_batch(now, batch);
+        }
+    }
+
+    /// Run one batch through the XLA enricher, then dedup + sink.
+    /// Returns the modeled virtual cost of the batch.
+    fn process_enriched_batch(&mut self, now: SimTime, batch: Vec<PendingItem>) -> SimTime {
+        if batch.is_empty() {
+            return 0;
+        }
+        let feats: Vec<[f32; 256]> = batch.iter().map(|p| p.features).collect();
+        let enriched = match self.enricher.enrich_batch(&feats) {
+            Ok(e) => e,
+            Err(err) => {
+                log::error!("enrichment failed, dropping batch: {err}");
+                for p in &batch {
+                    self.pending_items.remove(&p.ticket);
+                }
+                return 0;
+            }
+        };
+        self.counters.enrich_batches += 1;
+        for (p, e) in batch.iter().zip(enriched) {
+            let Some(meta) = self.pending_items.remove(&p.ticket) else { continue };
+            match self.dedup.check_and_insert(&meta.guid, &meta.url, e.simhash, meta.doc_id) {
+                DedupVerdict::Fresh => {
+                    let doc = SinkDoc {
+                        doc_id: meta.doc_id,
+                        stream_id: meta.stream_id,
+                        guid: meta.guid,
+                        title: meta.title,
+                        body: meta.body,
+                        url: meta.url,
+                        published_ms: meta.published_ms,
+                        ingested_ms: now,
+                        scores: e.scores,
+                        simhash: e.simhash,
+                    };
+                    // Real-time alerting on the fresh item (AlertMix!).
+                    let fired = self.alerts.check(&doc, now);
+                    if fired > 0 {
+                        self.metrics.count("AlertsFired", now, fired as f64);
+                    }
+                    self.sink.ingest(doc);
+                    self.counters.items_ingested += 1;
+                    self.metrics.count("ItemsIngested", now, 1.0);
+                }
+                DedupVerdict::ExactDuplicate | DedupVerdict::NearDuplicate(_) => {
+                    self.counters.items_deduped += 1;
+                    self.metrics.count("DuplicatesDropped", now, 1.0);
+                }
+            }
+        }
+        // Virtual cost model: dispatch overhead + per-item compute.
+        1 + batch.len() as SimTime / 16
+    }
+}

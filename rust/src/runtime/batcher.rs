@@ -1,0 +1,171 @@
+//! Micro-batching for the enrichment executable.
+//!
+//! The XLA artifact is compiled for a fixed batch width; items trickle in
+//! one feed-poll at a time. The batcher accumulates feature vectors and
+//! flushes when (a) the batch fills, or (b) the oldest item has waited
+//! `max_wait_ms` — the same size-or-timeout policy the FeedRouter uses for
+//! SQS, applied at the compute layer. Padding waste is tracked so the
+//! perf bench can report effective MXU utilization per policy.
+
+use crate::sim::SimTime;
+use crate::text::FEATURE_DIM;
+
+/// An item waiting for enrichment, with an opaque ticket the caller uses
+/// to route results back (e.g. a doc id).
+#[derive(Debug, Clone)]
+pub struct PendingItem {
+    pub ticket: u64,
+    pub features: [f32; FEATURE_DIM],
+    pub enqueued_at: SimTime,
+}
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Compiled batch width (flush when full).
+    pub batch_size: usize,
+    /// Flush when the oldest item has waited this long.
+    pub max_wait_ms: SimTime,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { batch_size: 64, max_wait_ms: 200 }
+    }
+}
+
+/// Accumulates items into executable-width batches.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    pending: Vec<PendingItem>,
+    pub flushes_full: u64,
+    pub flushes_timeout: u64,
+    pub items_in: u64,
+    /// Sum of (batch_size - len) over flushes: padding overhead.
+    pub padding_waste: u64,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Batcher {
+            pending: Vec::with_capacity(cfg.batch_size),
+            cfg,
+            flushes_full: 0,
+            flushes_timeout: 0,
+            items_in: 0,
+            padding_waste: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Add an item; returns a full batch if this item filled it.
+    pub fn push(&mut self, item: PendingItem) -> Option<Vec<PendingItem>> {
+        self.items_in += 1;
+        self.pending.push(item);
+        if self.pending.len() >= self.cfg.batch_size {
+            self.flushes_full += 1;
+            Some(std::mem::take(&mut self.pending))
+        } else {
+            None
+        }
+    }
+
+    /// Time-based flush: returns the partial batch if the oldest item has
+    /// exceeded its wait budget (call this from a periodic tick).
+    pub fn poll_timeout(&mut self, now: SimTime) -> Option<Vec<PendingItem>> {
+        let oldest = self.pending.first()?.enqueued_at;
+        if now.saturating_sub(oldest) >= self.cfg.max_wait_ms {
+            self.flushes_timeout += 1;
+            self.padding_waste += (self.cfg.batch_size - self.pending.len()) as u64;
+            Some(std::mem::take(&mut self.pending))
+        } else {
+            None
+        }
+    }
+
+    /// Unconditional flush (shutdown / end of run).
+    pub fn flush(&mut self) -> Option<Vec<PendingItem>> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            self.padding_waste += (self.cfg.batch_size - self.pending.len()) as u64;
+            Some(std::mem::take(&mut self.pending))
+        }
+    }
+
+    /// Deadline of the oldest pending item (for scheduling the next tick).
+    pub fn next_deadline(&self) -> Option<SimTime> {
+        self.pending.first().map(|p| p.enqueued_at + self.cfg.max_wait_ms)
+    }
+
+    pub fn config(&self) -> &BatcherConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(ticket: u64, at: SimTime) -> PendingItem {
+        PendingItem { ticket, features: [0.0; FEATURE_DIM], enqueued_at: at }
+    }
+
+    #[test]
+    fn flushes_when_full() {
+        let mut b = Batcher::new(BatcherConfig { batch_size: 3, max_wait_ms: 100 });
+        assert!(b.push(item(1, 0)).is_none());
+        assert!(b.push(item(2, 0)).is_none());
+        let batch = b.push(item(3, 0)).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert!(b.is_empty());
+        assert_eq!(b.flushes_full, 1);
+    }
+
+    #[test]
+    fn timeout_flush_partial() {
+        let mut b = Batcher::new(BatcherConfig { batch_size: 10, max_wait_ms: 100 });
+        b.push(item(1, 50));
+        b.push(item(2, 80));
+        assert!(b.poll_timeout(100).is_none(), "oldest waited only 50");
+        let batch = b.poll_timeout(150).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.flushes_timeout, 1);
+        assert_eq!(b.padding_waste, 8);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut b = Batcher::new(BatcherConfig { batch_size: 10, max_wait_ms: 100 });
+        assert_eq!(b.next_deadline(), None);
+        b.push(item(1, 42));
+        b.push(item(2, 50));
+        assert_eq!(b.next_deadline(), Some(142));
+    }
+
+    #[test]
+    fn manual_flush_counts_padding() {
+        let mut b = Batcher::new(BatcherConfig { batch_size: 4, max_wait_ms: 100 });
+        b.push(item(1, 0));
+        let batch = b.flush().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(b.padding_waste, 3);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn tickets_preserved_in_order() {
+        let mut b = Batcher::new(BatcherConfig { batch_size: 3, max_wait_ms: 100 });
+        b.push(item(7, 0));
+        b.push(item(8, 0));
+        let batch = b.push(item(9, 0)).unwrap();
+        let tickets: Vec<u64> = batch.iter().map(|p| p.ticket).collect();
+        assert_eq!(tickets, vec![7, 8, 9]);
+    }
+}

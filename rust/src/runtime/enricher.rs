@@ -1,0 +1,259 @@
+//! The enrichment backend: XLA executable wrapper + CPU fallback.
+
+use crate::text::FEATURE_DIM;
+use crate::util::hash::pack_sign_bits;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// Output of enriching one item.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Enrichment {
+    /// Sigmoid scores; index 0 = relevance, 1 = priority, 2 = spam.
+    pub scores: Vec<f32>,
+    /// Packed 64-bit SimHash signature.
+    pub simhash: u64,
+}
+
+/// A batch enrichment backend. The pipeline is generic over this so tests
+/// can run without artifacts and benches can compare backends.
+pub trait EnrichBackend {
+    /// Enrich up to `batch_size()` feature vectors. Shorter slices are
+    /// padded internally.
+    fn enrich_batch(&mut self, feats: &[[f32; FEATURE_DIM]]) -> Result<Vec<Enrichment>>;
+
+    /// The compiled batch width.
+    fn batch_size(&self) -> usize;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Artifact metadata (enricher.meta.json).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub batch: usize,
+    pub feature_dim: usize,
+    pub num_scores: usize,
+    pub sig_bits: usize,
+}
+
+impl ArtifactMeta {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("meta json: {e}"))?;
+        let get = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow!("meta missing {k}"))
+        };
+        Ok(ArtifactMeta {
+            batch: get("batch")?,
+            feature_dim: get("feature_dim")?,
+            num_scores: get("num_scores")?,
+            sig_bits: get("sig_bits")?,
+        })
+    }
+}
+
+/// The production backend: the AOT-compiled XLA executable.
+pub struct XlaEnricher {
+    exe: xla::PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+    /// Reused input staging buffer (avoids per-call allocation).
+    staging: Vec<f32>,
+    pub executions: u64,
+    pub items_enriched: u64,
+}
+
+impl XlaEnricher {
+    /// Load + compile the artifact on the PJRT CPU client. Compilation
+    /// happens once at startup; `enrich_batch` is the hot path.
+    pub fn load(hlo_path: &Path, meta_path: &Path) -> Result<Self> {
+        let meta = ArtifactMeta::load(meta_path)?;
+        if meta.feature_dim != FEATURE_DIM {
+            bail!(
+                "artifact feature_dim {} != runtime FEATURE_DIM {FEATURE_DIM}: \
+                 rebuild artifacts (make artifacts)",
+                meta.feature_dim
+            );
+        }
+        if meta.sig_bits > 64 {
+            bail!("sig_bits {} > 64 cannot pack into u64", meta.sig_bits);
+        }
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        let staging = vec![0f32; meta.batch * meta.feature_dim];
+        Ok(XlaEnricher { exe, meta, staging, executions: 0, items_enriched: 0 })
+    }
+
+    /// Load from the default repo-relative artifact locations.
+    pub fn load_default() -> Result<Self> {
+        let hlo = super::find_artifact(super::DEFAULT_ARTIFACT)
+            .ok_or_else(|| anyhow!("artifact not found — run `make artifacts`"))?;
+        let meta = super::find_artifact(super::DEFAULT_META)
+            .ok_or_else(|| anyhow!("artifact meta not found — run `make artifacts`"))?;
+        Self::load(&hlo, &meta)
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Raw execution: one padded batch in, (scores, sig) lanes out.
+    fn execute_padded(&mut self, n_valid: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let lit = xla::Literal::vec1(&self.staging)
+            .reshape(&[self.meta.batch as i64, self.meta.feature_dim as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?;
+        let out = result[0][0].to_literal_sync()?;
+        let (scores_lit, sig_lit) = out.to_tuple2()?;
+        self.executions += 1;
+        self.items_enriched += n_valid as u64;
+        Ok((scores_lit.to_vec::<f32>()?, sig_lit.to_vec::<f32>()?))
+    }
+}
+
+impl EnrichBackend for XlaEnricher {
+    fn enrich_batch(&mut self, feats: &[[f32; FEATURE_DIM]]) -> Result<Vec<Enrichment>> {
+        if feats.is_empty() {
+            return Ok(Vec::new());
+        }
+        if feats.len() > self.meta.batch {
+            bail!("batch {} exceeds compiled width {}", feats.len(), self.meta.batch);
+        }
+        // Stage + zero-pad the tail.
+        for (i, f) in feats.iter().enumerate() {
+            self.staging[i * FEATURE_DIM..(i + 1) * FEATURE_DIM].copy_from_slice(f);
+        }
+        for v in &mut self.staging[feats.len() * FEATURE_DIM..] {
+            *v = 0.0;
+        }
+        let (scores, sig) = self.execute_padded(feats.len())?;
+        let ns = self.meta.num_scores;
+        let nb = self.meta.sig_bits;
+        Ok((0..feats.len())
+            .map(|i| Enrichment {
+                scores: scores[i * ns..(i + 1) * ns].to_vec(),
+                simhash: pack_sign_bits(&sig[i * nb..(i + 1) * nb]),
+            })
+            .collect())
+    }
+
+    fn batch_size(&self) -> usize {
+        self.meta.batch
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}
+
+/// Fallback backend for artifact-less environments (unit tests, quick
+/// sims): deterministic random projections computed in rust. NOT
+/// numerically identical to the XLA model — integration tests that check
+/// XLA numerics use the golden I/O file instead.
+pub struct CpuFallbackEnricher {
+    batch: usize,
+    /// FEATURE_DIM x 64 sign-projection matrix (seeded).
+    proj: Vec<[f32; 64]>,
+    pub items_enriched: u64,
+}
+
+impl CpuFallbackEnricher {
+    pub fn new(batch: usize) -> Self {
+        let mut rng = crate::util::rng::Rng::new(0xFA11_BACC);
+        let proj = (0..FEATURE_DIM)
+            .map(|_| {
+                let mut row = [0f32; 64];
+                for v in &mut row {
+                    *v = (rng.gaussian()) as f32;
+                }
+                row
+            })
+            .collect();
+        CpuFallbackEnricher { batch, proj, items_enriched: 0 }
+    }
+}
+
+impl EnrichBackend for CpuFallbackEnricher {
+    fn enrich_batch(&mut self, feats: &[[f32; FEATURE_DIM]]) -> Result<Vec<Enrichment>> {
+        let mut out = Vec::with_capacity(feats.len());
+        for f in feats {
+            let mut lanes = [0f32; 64];
+            for (i, &x) in f.iter().enumerate() {
+                if x != 0.0 {
+                    let row = &self.proj[i];
+                    for (l, r) in lanes.iter_mut().zip(row) {
+                        *l += x * r;
+                    }
+                }
+            }
+            let energy: f32 = f.iter().map(|v| v * v).sum();
+            let relevance = 1.0 / (1.0 + (-energy * 0.05).exp());
+            out.push(Enrichment {
+                scores: vec![relevance, 0.5, 0.1, 0.5, 0.5, 0.5, 0.5, 0.5],
+                simhash: pack_sign_bits(&lanes),
+            });
+        }
+        self.items_enriched += feats.len() as u64;
+        Ok(out)
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn name(&self) -> &'static str {
+        "cpu-fallback"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feat(seed: u64) -> [f32; FEATURE_DIM] {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut f = [0f32; FEATURE_DIM];
+        for v in f.iter_mut() {
+            if rng.chance(0.2) {
+                *v = rng.next_f32() * 2.0;
+            }
+        }
+        f
+    }
+
+    #[test]
+    fn cpu_fallback_deterministic_and_packs() {
+        let mut e = CpuFallbackEnricher::new(8);
+        let f = feat(1);
+        let a = e.enrich_batch(&[f]).unwrap();
+        let b = e.enrich_batch(&[f]).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a[0].scores.len(), 8);
+    }
+
+    #[test]
+    fn cpu_fallback_similar_features_close_sigs() {
+        let mut e = CpuFallbackEnricher::new(8);
+        let f1 = feat(2);
+        let mut f2 = f1;
+        f2[3] += 0.01;
+        let f3 = feat(99);
+        let out = e.enrich_batch(&[f1, f2, f3]).unwrap();
+        let d12 = crate::util::hash::hamming(out[0].simhash, out[1].simhash);
+        let d13 = crate::util::hash::hamming(out[0].simhash, out[2].simhash);
+        assert!(d12 <= d13, "perturbed sig {d12} should be <= unrelated {d13}");
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let mut e = CpuFallbackEnricher::new(8);
+        assert!(e.enrich_batch(&[]).unwrap().is_empty());
+    }
+}

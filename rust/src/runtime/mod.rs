@@ -1,0 +1,48 @@
+//! PJRT runtime: load the AOT-compiled enrichment artifact and execute it
+//! on the request path.
+//!
+//! This is the only place the rust coordinator touches XLA. The artifact
+//! (`artifacts/enricher.hlo.txt`) is HLO *text* produced once by
+//! `python/compile/aot.py`; we parse it with `HloModuleProto::from_text_file`,
+//! compile it on the PJRT CPU client at startup, and from then on the hot
+//! path is a single `execute` per feature batch — python is never invoked.
+
+mod batcher;
+mod enricher;
+
+pub use batcher::{Batcher, BatcherConfig, PendingItem};
+pub use enricher::{CpuFallbackEnricher, EnrichBackend, Enrichment, XlaEnricher};
+
+use anyhow::Result;
+
+/// Smoke check that the PJRT CPU client is available.
+pub fn pjrt_cpu_available() -> Result<String> {
+    let client = xla::PjRtClient::cpu()?;
+    Ok(client.platform_name())
+}
+
+/// Default artifact locations relative to the repo root.
+pub const DEFAULT_ARTIFACT: &str = "artifacts/enricher.hlo.txt";
+pub const DEFAULT_META: &str = "artifacts/enricher.meta.json";
+pub const DEFAULT_GOLDEN: &str = "artifacts/enricher.golden.json";
+
+/// Locate the artifacts dir whether run from the repo root or a subdir
+/// (cargo test sets cwd to the crate root; examples may run elsewhere).
+pub fn find_artifact(name: &str) -> Option<std::path::PathBuf> {
+    let candidates = [
+        std::path::PathBuf::from(name),
+        std::path::PathBuf::from("..").join(name),
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(name),
+    ];
+    candidates.into_iter().find(|p| p.exists())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pjrt_cpu_is_available() {
+        assert_eq!(pjrt_cpu_available().unwrap(), "cpu");
+    }
+}

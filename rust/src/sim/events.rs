@@ -1,0 +1,163 @@
+//! Time-ordered event queue with stable FIFO tie-breaking.
+//!
+//! Determinism contract: events scheduled for the same instant fire in
+//! scheduling order (a strictly increasing sequence number breaks ties), so
+//! a given seed always produces the same interleaving.
+
+use super::SimTime;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Entry<E> {
+    at: SimTime,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other.at.cmp(&self.at).then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-heap of `(time, event)` with FIFO ordering among equal times.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    /// Schedule `event` at absolute time `at`.
+    pub fn push(&mut self, at: SimTime, event: E) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { at, seq, event });
+    }
+
+    /// Time of the earliest pending event.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        self.heap.pop().map(|e| (e.at, e.event))
+    }
+
+    /// Pop the earliest event only if it fires at or before `t`.
+    pub fn pop_until(&mut self, t: SimTime) -> Option<(SimTime, E)> {
+        if self.peek_time()? <= t {
+            self.pop()
+        } else {
+            None
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30, "c");
+        q.push(10, "a");
+        q.push(20, "b");
+        assert_eq!(q.pop(), Some((10, "a")));
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn fifo_within_same_time() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.push(5, i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop(), Some((5, i)));
+        }
+    }
+
+    #[test]
+    fn pop_until_respects_bound() {
+        let mut q = EventQueue::new();
+        q.push(10, "a");
+        q.push(20, "b");
+        assert_eq!(q.pop_until(15), Some((10, "a")));
+        assert_eq!(q.pop_until(15), None);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn prop_global_time_order() {
+        forall("event queue pops non-decreasing times", 100, |g| {
+            let times = g.vec_u64(0..200, 0, 1000);
+            let mut q = EventQueue::new();
+            for (i, &t) in times.iter().enumerate() {
+                q.push(t, i);
+            }
+            let mut last = 0;
+            while let Some((t, _)) = q.pop() {
+                if t < last {
+                    return false;
+                }
+                last = t;
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn prop_same_time_fifo() {
+        forall("equal-time events pop in push order", 100, |g| {
+            let n = g.usize(1, 100);
+            let t = g.u64(0, 50);
+            let mut q = EventQueue::new();
+            for i in 0..n {
+                q.push(t, i);
+            }
+            let mut expect = 0;
+            while let Some((_, i)) = q.pop() {
+                if i != expect {
+                    return false;
+                }
+                expect += 1;
+            }
+            expect == n
+        });
+    }
+}

@@ -1,0 +1,210 @@
+//! Elasticsearch-lite: the delivery sink.
+//!
+//! The paper ingests processed feeds "in the Elasticsearch database
+//! maintaining the same queue emptying speed". This module provides the
+//! ingest-side behaviour the pipeline exercises: bulk-batched document
+//! indexing into an inverted index, plus enough query capability
+//! (term/phrase lookup) for the examples to verify end-to-end delivery.
+
+use crate::sim::SimTime;
+use crate::text::tokenize;
+use std::collections::HashMap;
+
+/// An enriched document as delivered to the sink.
+#[derive(Debug, Clone)]
+pub struct SinkDoc {
+    pub doc_id: u64,
+    pub stream_id: u64,
+    pub guid: String,
+    pub title: String,
+    pub body: String,
+    pub url: String,
+    pub published_ms: SimTime,
+    pub ingested_ms: SimTime,
+    /// Enrichment scores from the XLA model (relevance, priority, spam...).
+    pub scores: Vec<f32>,
+    /// SimHash signature (for audit).
+    pub simhash: u64,
+}
+
+/// Ingest statistics (drives Figure-4's "deleting/emptying" parity check).
+#[derive(Debug, Default, Clone)]
+pub struct SinkCounters {
+    pub docs_indexed: u64,
+    pub bulk_requests: u64,
+    pub tokens_indexed: u64,
+}
+
+/// A naive but real inverted index.
+pub struct ElasticLite {
+    docs: HashMap<u64, SinkDoc>,
+    postings: HashMap<String, Vec<u64>>,
+    /// Bulk buffer: documents queue here until `flush` (size- or
+    /// time-triggered by the pipeline).
+    pending: Vec<SinkDoc>,
+    pub bulk_size: usize,
+    pub counters: SinkCounters,
+    /// ingestion latency samples (published -> ingested), for percentiles.
+    latencies: Vec<SimTime>,
+}
+
+impl ElasticLite {
+    pub fn new(bulk_size: usize) -> Self {
+        ElasticLite {
+            docs: HashMap::new(),
+            postings: HashMap::new(),
+            pending: Vec::new(),
+            bulk_size,
+            counters: SinkCounters::default(),
+            latencies: Vec::new(),
+        }
+    }
+
+    /// Queue a document for the next bulk. Returns true if the bulk filled
+    /// and was flushed.
+    pub fn ingest(&mut self, doc: SinkDoc) -> bool {
+        self.pending.push(doc);
+        if self.pending.len() >= self.bulk_size {
+            self.flush();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Flush the bulk buffer into the index.
+    pub fn flush(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        self.counters.bulk_requests += 1;
+        for doc in std::mem::take(&mut self.pending) {
+            self.latencies.push(doc.ingested_ms.saturating_sub(doc.published_ms));
+            for tok in tokenize(&doc.title).into_iter().chain(tokenize(&doc.body)) {
+                self.counters.tokens_indexed += 1;
+                let posting = self.postings.entry(tok).or_default();
+                if posting.last() != Some(&doc.doc_id) {
+                    posting.push(doc.doc_id);
+                }
+            }
+            self.counters.docs_indexed += 1;
+            self.docs.insert(doc.doc_id, doc);
+        }
+    }
+
+    /// Term query: doc ids containing the token.
+    pub fn search_term(&self, term: &str) -> &[u64] {
+        self.postings
+            .get(&term.to_lowercase())
+            .map(Vec::as_slice)
+            .unwrap_or(&[])
+    }
+
+    /// All-terms conjunction query.
+    pub fn search_all(&self, terms: &[&str]) -> Vec<u64> {
+        let mut lists: Vec<&[u64]> = terms.iter().map(|t| self.search_term(t)).collect();
+        lists.sort_by_key(|l| l.len());
+        let Some(first) = lists.first() else { return Vec::new() };
+        first
+            .iter()
+            .filter(|id| lists[1..].iter().all(|l| l.binary_search(id).is_ok() || l.contains(id)))
+            .copied()
+            .collect()
+    }
+
+    pub fn get(&self, doc_id: u64) -> Option<&SinkDoc> {
+        self.docs.get(&doc_id)
+    }
+
+    /// Iterate all indexed documents (reporting/benches).
+    pub fn docs(&self) -> impl Iterator<Item = &SinkDoc> {
+        self.docs.values()
+    }
+
+    pub fn doc_count(&self) -> usize {
+        self.docs.len()
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// p-th percentile publish→ingest latency.
+    pub fn ingest_latency_pct(&self, p: f64) -> Option<SimTime> {
+        if self.latencies.is_empty() {
+            return None;
+        }
+        let mut xs = self.latencies.clone();
+        xs.sort_unstable();
+        Some(xs[((xs.len() - 1) as f64 * p).round() as usize])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(id: u64, title: &str, pub_ms: SimTime, ing_ms: SimTime) -> SinkDoc {
+        SinkDoc {
+            doc_id: id,
+            stream_id: 1,
+            guid: format!("g{id}"),
+            title: title.to_string(),
+            body: "shared body words".to_string(),
+            url: format!("http://x/{id}"),
+            published_ms: pub_ms,
+            ingested_ms: ing_ms,
+            scores: vec![0.5],
+            simhash: 0,
+        }
+    }
+
+    #[test]
+    fn bulk_flush_on_size() {
+        let mut es = ElasticLite::new(3);
+        assert!(!es.ingest(doc(1, "alpha", 0, 10)));
+        assert!(!es.ingest(doc(2, "beta", 0, 10)));
+        assert_eq!(es.doc_count(), 0, "not yet flushed");
+        assert!(es.ingest(doc(3, "gamma", 0, 10)));
+        assert_eq!(es.doc_count(), 3);
+        assert_eq!(es.counters.bulk_requests, 1);
+    }
+
+    #[test]
+    fn manual_flush() {
+        let mut es = ElasticLite::new(100);
+        es.ingest(doc(1, "alpha news", 0, 10));
+        es.flush();
+        assert_eq!(es.doc_count(), 1);
+        assert_eq!(es.pending_count(), 0);
+    }
+
+    #[test]
+    fn term_search_finds_docs() {
+        let mut es = ElasticLite::new(1);
+        es.ingest(doc(1, "markets rally today", 0, 5));
+        es.ingest(doc(2, "markets slump today", 0, 5));
+        es.ingest(doc(3, "weather calm", 0, 5));
+        assert_eq!(es.search_term("markets"), &[1, 2]);
+        assert_eq!(es.search_term("Markets"), &[1, 2], "case folded");
+        assert_eq!(es.search_term("nonexistent"), &[] as &[u64]);
+        assert_eq!(es.search_all(&["markets", "rally"]), vec![1]);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut es = ElasticLite::new(1);
+        for i in 0..10 {
+            es.ingest(doc(i, "t", 0, (i + 1) * 100));
+        }
+        assert_eq!(es.ingest_latency_pct(0.0), Some(100));
+        assert_eq!(es.ingest_latency_pct(1.0), Some(1000));
+    }
+
+    #[test]
+    fn duplicate_tokens_one_posting_per_doc() {
+        let mut es = ElasticLite::new(1);
+        es.ingest(doc(1, "echo echo echo", 0, 1));
+        assert_eq!(es.search_term("echo"), &[1]);
+    }
+}

@@ -1,0 +1,461 @@
+//! Simulated message-queue service with AWS SQS semantics.
+//!
+//! The paper's SQS Queue Pull Logic runs against two queues (a **main**
+//! queue and a **priority** queue for newly-added feeds). This module
+//! reproduces the SQS contract the FeedRouter depends on:
+//!
+//! - at-least-once delivery with a **visibility timeout**: a received
+//!   message is hidden, and reappears if not deleted in time;
+//! - explicit `delete` acknowledgement (the paper's "deleting" series in
+//!   Figure 4 counts these);
+//! - `receive` batches of up to 10 messages (SQS API limit);
+//! - an optional **dead-letter queue** redrive after `max_receive_count`
+//!   failed receives;
+//! - CloudWatch-style counters: `NumberOfMessagesSent` / `Received` /
+//!   `Deleted` and `ApproximateNumberOfMessagesVisible`.
+
+use crate::sim::SimTime;
+use crate::util::IdGen;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+/// SQS caps a single `ReceiveMessage` at 10 messages.
+pub const MAX_RECEIVE_BATCH: usize = 10;
+
+/// Message handle returned by `receive`, needed to delete (ack).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ReceiptHandle(pub u64);
+
+/// A queued message (payload is an opaque string — the pipeline stores
+/// feed-job JSON here, exactly like the production system).
+#[derive(Debug, Clone)]
+pub struct QueuedMessage {
+    pub id: u64,
+    pub body: String,
+    pub sent_at: SimTime,
+    pub receive_count: u32,
+}
+
+/// A message as seen by a consumer.
+#[derive(Debug, Clone)]
+pub struct ReceivedMessage {
+    pub id: u64,
+    pub body: String,
+    pub sent_at: SimTime,
+    pub receive_count: u32,
+    pub handle: ReceiptHandle,
+}
+
+/// Lifetime + windowed counters, CloudWatch naming.
+#[derive(Debug, Default, Clone)]
+pub struct QueueCounters {
+    pub sent: u64,
+    pub received: u64,
+    pub deleted: u64,
+    pub redriven: u64,
+    /// Receives that returned no messages (long-poll misses).
+    pub empty_receives: u64,
+}
+
+/// Redrive policy to a dead-letter queue.
+#[derive(Debug, Clone, Copy)]
+pub struct RedrivePolicy {
+    pub max_receive_count: u32,
+}
+
+struct InFlight {
+    msg: QueuedMessage,
+    visible_again: SimTime,
+}
+
+/// One simulated SQS queue.
+pub struct SqsQueue {
+    pub name: String,
+    visible: VecDeque<QueuedMessage>,
+    /// receipt handle -> in-flight message.
+    in_flight: BTreeMap<u64, InFlight>,
+    /// (visible_again, handle) expiry index — makes `requeue_expired` a
+    /// prefix scan instead of a full in-flight sweep (§Perf L3-2).
+    expiry: std::collections::BTreeSet<(SimTime, u64)>,
+    dead: Vec<QueuedMessage>,
+    redrive: Option<RedrivePolicy>,
+    visibility_timeout: SimTime,
+    ids: IdGen,
+    handles: IdGen,
+    pub counters: QueueCounters,
+    /// Cumulative end-to-end latency (sent -> deleted) for percentiles.
+    delete_latencies: Vec<SimTime>,
+}
+
+impl SqsQueue {
+    pub fn new(name: &str, visibility_timeout: SimTime, redrive: Option<RedrivePolicy>) -> Self {
+        SqsQueue {
+            name: name.to_string(),
+            visible: VecDeque::new(),
+            in_flight: BTreeMap::new(),
+            expiry: std::collections::BTreeSet::new(),
+            dead: Vec::new(),
+            redrive,
+            visibility_timeout,
+            ids: IdGen::new(),
+            handles: IdGen::new(),
+            counters: QueueCounters::default(),
+            delete_latencies: Vec::new(),
+        }
+    }
+
+    /// SendMessage.
+    pub fn send(&mut self, now: SimTime, body: impl Into<String>) -> u64 {
+        let id = self.ids.next();
+        self.visible.push_back(QueuedMessage {
+            id,
+            body: body.into(),
+            sent_at: now,
+            receive_count: 0,
+        });
+        self.counters.sent += 1;
+        id
+    }
+
+    /// SendMessageBatch.
+    pub fn send_batch<I: IntoIterator<Item = String>>(&mut self, now: SimTime, bodies: I) -> Vec<u64> {
+        bodies.into_iter().map(|b| self.send(now, b)).collect()
+    }
+
+    /// ReceiveMessage: up to `max` (≤ 10) messages become in-flight for the
+    /// visibility timeout. Expired in-flight messages are returned to the
+    /// head of the queue first (redelivery).
+    pub fn receive(&mut self, now: SimTime, max: usize) -> Vec<ReceivedMessage> {
+        self.requeue_expired(now);
+        let take = max.min(MAX_RECEIVE_BATCH);
+        let mut out = Vec::with_capacity(take);
+        while out.len() < take {
+            let Some(mut msg) = self.visible.pop_front() else { break };
+            msg.receive_count += 1;
+            // Redrive check happens on receive, like SQS.
+            if let Some(policy) = self.redrive {
+                if msg.receive_count > policy.max_receive_count {
+                    self.counters.redriven += 1;
+                    self.dead.push(msg);
+                    continue;
+                }
+            }
+            let handle = ReceiptHandle(self.handles.next());
+            out.push(ReceivedMessage {
+                id: msg.id,
+                body: msg.body.clone(),
+                sent_at: msg.sent_at,
+                receive_count: msg.receive_count,
+                handle,
+            });
+            let visible_again = now + self.visibility_timeout;
+            self.expiry.insert((visible_again, handle.0));
+            self.in_flight.insert(handle.0, InFlight { msg, visible_again });
+        }
+        if out.is_empty() {
+            self.counters.empty_receives += 1;
+        }
+        self.counters.received += out.len() as u64;
+        out
+    }
+
+    /// DeleteMessage (ack). Returns false if the handle expired — the
+    /// message may be redelivered (at-least-once).
+    pub fn delete(&mut self, now: SimTime, handle: ReceiptHandle) -> bool {
+        match self.in_flight.remove(&handle.0) {
+            Some(f) => {
+                self.expiry.remove(&(f.visible_again, handle.0));
+                self.counters.deleted += 1;
+                self.delete_latencies.push(now.saturating_sub(f.msg.sent_at));
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// ChangeMessageVisibility: extend/shorten an in-flight lease.
+    pub fn change_visibility(&mut self, now: SimTime, handle: ReceiptHandle, timeout: SimTime) -> bool {
+        match self.in_flight.get_mut(&handle.0) {
+            Some(f) => {
+                self.expiry.remove(&(f.visible_again, handle.0));
+                f.visible_again = now + timeout;
+                self.expiry.insert((f.visible_again, handle.0));
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn requeue_expired(&mut self, now: SimTime) {
+        // Prefix scan of the expiry index: O(expired log n), not O(n).
+        loop {
+            let Some(&(at, h)) = self.expiry.iter().next() else { return };
+            if at > now {
+                return;
+            }
+            self.expiry.remove(&(at, h));
+            let f = self.in_flight.remove(&h).unwrap();
+            // Redelivered messages go to the front: oldest first.
+            self.visible.push_front(f.msg);
+        }
+    }
+
+    /// `ApproximateNumberOfMessagesVisible`.
+    pub fn visible_count(&self) -> usize {
+        self.visible.len()
+    }
+
+    /// `ApproximateNumberOfMessagesNotVisible`.
+    pub fn in_flight_count(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Dead-letter queue contents (after redrive).
+    pub fn dead_letter_count(&self) -> usize {
+        self.dead.len()
+    }
+
+    /// Age of the oldest visible message (ApproximateAgeOfOldestMessage).
+    pub fn oldest_age(&self, now: SimTime) -> SimTime {
+        self.visible.front().map(|m| now.saturating_sub(m.sent_at)).unwrap_or(0)
+    }
+
+    /// p-th percentile of sent→deleted latency.
+    pub fn delete_latency_pct(&self, p: f64) -> Option<SimTime> {
+        if self.delete_latencies.is_empty() {
+            return None;
+        }
+        let mut xs = self.delete_latencies.clone();
+        xs.sort_unstable();
+        let idx = ((xs.len() - 1) as f64 * p).round() as usize;
+        Some(xs[idx])
+    }
+}
+
+/// The paper's dual-queue layout: main + priority, plus a shared DLQ view.
+pub struct DualQueue {
+    pub main: SqsQueue,
+    pub priority: SqsQueue,
+}
+
+impl DualQueue {
+    pub fn new(visibility_timeout: SimTime, redrive: Option<RedrivePolicy>) -> Self {
+        DualQueue {
+            main: SqsQueue::new("alertmix-main", visibility_timeout, redrive),
+            priority: SqsQueue::new("alertmix-priority", visibility_timeout, redrive),
+        }
+    }
+
+    /// Pull up to `max`, draining the priority queue first — the paper:
+    /// "messages in this queue are handled with higher priority".
+    pub fn receive_prioritized(&mut self, now: SimTime, max: usize) -> Vec<(bool, ReceivedMessage)> {
+        let mut out: Vec<(bool, ReceivedMessage)> = self
+            .priority
+            .receive(now, max)
+            .into_iter()
+            .map(|m| (true, m))
+            .collect();
+        if out.len() < max {
+            out.extend(self.main.receive(now, max - out.len()).into_iter().map(|m| (false, m)));
+        }
+        out
+    }
+
+    pub fn total_visible(&self) -> usize {
+        self.main.visible_count() + self.priority.visible_count()
+    }
+}
+
+/// Per-consumer view of delivery guarantees, used by tests/benches to
+/// assert the at-least-once contract end to end.
+#[derive(Default)]
+pub struct DeliveryLedger {
+    seen: HashMap<u64, u32>,
+}
+
+impl DeliveryLedger {
+    pub fn record(&mut self, msg_id: u64) {
+        *self.seen.entry(msg_id).or_insert(0) += 1;
+    }
+
+    pub fn delivered_at_least_once(&self, ids: &[u64]) -> bool {
+        ids.iter().all(|id| self.seen.contains_key(id))
+    }
+
+    pub fn duplicates(&self) -> usize {
+        self.seen.values().filter(|&&c| c > 1).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn send_receive_delete_basics() {
+        let mut q = SqsQueue::new("t", 30_000, None);
+        q.send(0, "a");
+        q.send(0, "b");
+        assert_eq!(q.visible_count(), 2);
+        let got = q.receive(1, 10);
+        assert_eq!(got.len(), 2);
+        assert_eq!(q.visible_count(), 0);
+        assert_eq!(q.in_flight_count(), 2);
+        assert!(q.delete(2, got[0].handle));
+        assert_eq!(q.counters.deleted, 1);
+        assert_eq!(q.in_flight_count(), 1);
+    }
+
+    #[test]
+    fn receive_caps_at_ten() {
+        let mut q = SqsQueue::new("t", 30_000, None);
+        for i in 0..20 {
+            q.send(0, format!("{i}"));
+        }
+        assert_eq!(q.receive(0, 50).len(), MAX_RECEIVE_BATCH);
+    }
+
+    #[test]
+    fn visibility_timeout_redelivers() {
+        let mut q = SqsQueue::new("t", 1_000, None);
+        q.send(0, "x");
+        let got = q.receive(0, 1);
+        assert_eq!(got.len(), 1);
+        // Not yet expired.
+        assert!(q.receive(500, 1).is_empty());
+        // Expired: redelivered with bumped receive_count.
+        let again = q.receive(1_001, 1);
+        assert_eq!(again.len(), 1);
+        assert_eq!(again[0].receive_count, 2);
+        // Old handle is now dead.
+        assert!(!q.delete(1_002, got[0].handle));
+        // New handle works.
+        assert!(q.delete(1_002, again[0].handle));
+    }
+
+    #[test]
+    fn change_visibility_extends_lease() {
+        let mut q = SqsQueue::new("t", 1_000, None);
+        q.send(0, "x");
+        let got = q.receive(0, 1);
+        assert!(q.change_visibility(500, got[0].handle, 10_000));
+        assert!(q.receive(2_000, 1).is_empty(), "lease extended, no redelivery");
+        assert!(q.delete(3_000, got[0].handle));
+    }
+
+    #[test]
+    fn redrive_to_dlq_after_max_receives() {
+        let mut q = SqsQueue::new("t", 100, Some(RedrivePolicy { max_receive_count: 2 }));
+        q.send(0, "poison");
+        let mut t = 0;
+        // Receive and never delete: 2 allowed receives, then redriven.
+        for _ in 0..2 {
+            let got = q.receive(t, 1);
+            assert_eq!(got.len(), 1, "t={t}");
+            t += 200;
+        }
+        assert!(q.receive(t, 1).is_empty());
+        assert_eq!(q.dead_letter_count(), 1);
+        assert_eq!(q.counters.redriven, 1);
+    }
+
+    #[test]
+    fn dual_queue_priority_first() {
+        let mut d = DualQueue::new(30_000, None);
+        d.main.send(0, "m1");
+        d.main.send(0, "m2");
+        d.priority.send(0, "p1");
+        let got = d.receive_prioritized(1, 2);
+        assert_eq!(got.len(), 2);
+        assert!(got[0].0, "priority message first");
+        assert_eq!(got[0].1.body, "p1");
+        assert_eq!(got[1].1.body, "m1");
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut q = SqsQueue::new("t", 60_000, None);
+        for i in 0..10 {
+            q.send(i * 10, format!("{i}"));
+        }
+        let got = q.receive(100, 10);
+        for m in got {
+            q.delete(100, m.handle);
+        }
+        // latencies: 100-0, 100-10, ..., 100-90 => 10..100
+        assert_eq!(q.delete_latency_pct(0.0), Some(10));
+        assert_eq!(q.delete_latency_pct(1.0), Some(100));
+    }
+
+    #[test]
+    fn prop_at_least_once_with_random_consumer() {
+        forall("every sent message is eventually processed exactly when deleted", 60, |g| {
+            let vt = g.u64(50, 500);
+            let mut q = SqsQueue::new("t", vt, None);
+            let n = g.usize(1, 60);
+            let ids: Vec<u64> = (0..n).map(|i| q.send(i as u64, format!("{i}"))).collect();
+            let mut ledger = DeliveryLedger::default();
+            let mut deleted = 0usize;
+            let mut now = 0;
+            let mut guard = 0;
+            while deleted < n {
+                guard += 1;
+                if guard > 100_000 {
+                    return false; // livelock
+                }
+                now += g.u64(1, 200);
+                let batch = q.receive(now, g.usize(1, 10));
+                for m in batch {
+                    ledger.record(m.id);
+                    // Flaky consumer: sometimes forgets to delete.
+                    if g.chance(0.7) {
+                        q.delete(now, m.handle);
+                        deleted += 1;
+                    }
+                }
+            }
+            ledger.delivered_at_least_once(&ids)
+                && q.counters.deleted == n as u64
+                && q.visible_count() == 0
+        });
+    }
+
+    #[test]
+    fn prop_conservation() {
+        forall("visible + in_flight + deleted + dlq == sent", 80, |g| {
+            let mut q = SqsQueue::new(
+                "t",
+                g.u64(10, 300),
+                Some(RedrivePolicy { max_receive_count: 3 }),
+            );
+            let mut now = 0;
+            let mut handles: Vec<ReceiptHandle> = Vec::new();
+            for _ in 0..g.usize(1, 150) {
+                now += g.u64(0, 50);
+                match g.u64(0, 3) {
+                    0 => {
+                        q.send(now, "m");
+                    }
+                    1 => {
+                        let got = q.receive(now, g.usize(1, 10));
+                        handles.extend(got.iter().map(|m| m.handle));
+                    }
+                    _ => {
+                        if !handles.is_empty() {
+                            let h = handles.swap_remove(g.usize(0, handles.len()));
+                            q.delete(now, h);
+                        }
+                    }
+                }
+            }
+            // Force all leases to expire, then drain.
+            now += 10_000;
+            q.requeue_expired(now);
+            let accounted = q.visible_count() as u64
+                + q.in_flight_count() as u64
+                + q.counters.deleted
+                + q.dead_letter_count() as u64;
+            accounted == q.counters.sent
+        });
+    }
+}

@@ -1,0 +1,255 @@
+//! Couchbase-like document store.
+//!
+//! The paper keeps per-stream state ("streams will be picked based on their
+//! next due date ... picked streams will be updated in couchbase with
+//! in-process status") in Couchbase. This module provides the semantics the
+//! pipeline relies on:
+//!
+//! - [`DocStore`]: a JSON document KV store with **CAS** (compare-and-swap)
+//!   optimistic concurrency and per-document **TTL** expiry — the Couchbase
+//!   bucket model;
+//! - [`streams::StreamStore`]: the typed "streams bucket" with a secondary
+//!   index on `next_due` plus a stale-in-process index, supporting the
+//!   StreamsPickerActor's query ("streams picked earlier, but could not be
+//!   updated even after a given time elapsed will also be picked").
+
+pub mod persist;
+pub mod streams;
+
+use crate::sim::SimTime;
+use crate::util::json::Json;
+use std::collections::HashMap;
+
+/// CAS token. 0 never matches a live document.
+pub type Cas = u64;
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum StoreError {
+    #[error("key not found")]
+    NotFound,
+    #[error("key already exists")]
+    Exists,
+    #[error("cas mismatch (expected {expected}, found {found})")]
+    CasMismatch { expected: Cas, found: Cas },
+}
+
+struct Doc {
+    value: Json,
+    cas: Cas,
+    expires_at: Option<SimTime>,
+}
+
+/// A bucket of JSON documents with CAS and TTL.
+pub struct DocStore {
+    docs: HashMap<String, Doc>,
+    cas_gen: Cas,
+    pub gets: u64,
+    pub mutations: u64,
+    pub cas_conflicts: u64,
+    pub expirations: u64,
+}
+
+impl Default for DocStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DocStore {
+    pub fn new() -> Self {
+        DocStore {
+            docs: HashMap::new(),
+            cas_gen: 0,
+            gets: 0,
+            mutations: 0,
+            cas_conflicts: 0,
+            expirations: 0,
+        }
+    }
+
+    fn next_cas(&mut self) -> Cas {
+        self.cas_gen += 1;
+        self.cas_gen
+    }
+
+    fn expired(doc: &Doc, now: SimTime) -> bool {
+        doc.expires_at.map(|t| t <= now).unwrap_or(false)
+    }
+
+    /// Get a document and its CAS.
+    pub fn get(&mut self, now: SimTime, key: &str) -> Option<(Json, Cas)> {
+        self.gets += 1;
+        if let Some(doc) = self.docs.get(key) {
+            if Self::expired(doc, now) {
+                self.docs.remove(key);
+                self.expirations += 1;
+                return None;
+            }
+            return Some((doc.value.clone(), doc.cas));
+        }
+        None
+    }
+
+    /// Insert-only (fails if the key exists).
+    pub fn insert(
+        &mut self,
+        now: SimTime,
+        key: &str,
+        value: Json,
+        ttl: Option<SimTime>,
+    ) -> Result<Cas, StoreError> {
+        if let Some(doc) = self.docs.get(key) {
+            if !Self::expired(doc, now) {
+                return Err(StoreError::Exists);
+            }
+            self.expirations += 1;
+        }
+        let cas = self.next_cas();
+        self.docs.insert(
+            key.to_string(),
+            Doc { value, cas, expires_at: ttl.map(|d| now + d) },
+        );
+        self.mutations += 1;
+        Ok(cas)
+    }
+
+    /// Unconditional upsert.
+    pub fn upsert(&mut self, now: SimTime, key: &str, value: Json, ttl: Option<SimTime>) -> Cas {
+        let cas = self.next_cas();
+        self.docs.insert(
+            key.to_string(),
+            Doc { value, cas, expires_at: ttl.map(|d| now + d) },
+        );
+        self.mutations += 1;
+        cas
+    }
+
+    /// CAS-guarded replace: succeeds only if the caller holds the current
+    /// CAS (optimistic locking — how the picker claims a stream).
+    pub fn replace(
+        &mut self,
+        now: SimTime,
+        key: &str,
+        expected: Cas,
+        value: Json,
+        ttl: Option<SimTime>,
+    ) -> Result<Cas, StoreError> {
+        match self.docs.get(key) {
+            None => Err(StoreError::NotFound),
+            Some(doc) if Self::expired(doc, now) => {
+                self.docs.remove(key);
+                self.expirations += 1;
+                Err(StoreError::NotFound)
+            }
+            Some(doc) if doc.cas != expected => {
+                self.cas_conflicts += 1;
+                Err(StoreError::CasMismatch { expected, found: doc.cas })
+            }
+            Some(_) => {
+                let cas = self.next_cas();
+                self.docs.insert(
+                    key.to_string(),
+                    Doc { value, cas, expires_at: ttl.map(|d| now + d) },
+                );
+                self.mutations += 1;
+                Ok(cas)
+            }
+        }
+    }
+
+    pub fn remove(&mut self, key: &str) -> Result<(), StoreError> {
+        self.docs.remove(key).map(|_| ()).ok_or(StoreError::NotFound)
+    }
+
+    pub fn len(&self) -> usize {
+        self.docs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.docs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn j(n: u64) -> Json {
+        Json::obj().set("n", n)
+    }
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let mut s = DocStore::new();
+        let cas = s.insert(0, "k", j(1), None).unwrap();
+        let (v, got_cas) = s.get(0, "k").unwrap();
+        assert_eq!(v.path("n").unwrap().as_u64(), Some(1));
+        assert_eq!(cas, got_cas);
+        assert_eq!(s.insert(0, "k", j(2), None), Err(StoreError::Exists));
+    }
+
+    #[test]
+    fn cas_replace_conflict() {
+        let mut s = DocStore::new();
+        let cas1 = s.insert(0, "k", j(1), None).unwrap();
+        let cas2 = s.replace(0, "k", cas1, j(2), None).unwrap();
+        // Old CAS no longer valid.
+        assert!(matches!(
+            s.replace(0, "k", cas1, j(3), None),
+            Err(StoreError::CasMismatch { .. })
+        ));
+        assert_eq!(s.cas_conflicts, 1);
+        // Current CAS works.
+        s.replace(0, "k", cas2, j(3), None).unwrap();
+        assert_eq!(s.get(0, "k").unwrap().0.path("n").unwrap().as_u64(), Some(3));
+    }
+
+    #[test]
+    fn ttl_expires() {
+        let mut s = DocStore::new();
+        s.insert(0, "k", j(1), Some(100)).unwrap();
+        assert!(s.get(50, "k").is_some());
+        assert!(s.get(100, "k").is_none());
+        assert_eq!(s.expirations, 1);
+        // Key is reusable after expiry.
+        s.insert(200, "k", j(2), None).unwrap();
+    }
+
+    #[test]
+    fn replace_missing_is_not_found() {
+        let mut s = DocStore::new();
+        assert_eq!(s.replace(0, "nope", 1, j(1), None), Err(StoreError::NotFound));
+    }
+
+    #[test]
+    fn prop_cas_serializes_writers() {
+        // Two writers racing with CAS: exactly one of each pair wins.
+        forall("cas admits exactly one winner per round", 100, |g| {
+            let mut s = DocStore::new();
+            let mut cas = s.insert(0, "k", j(0), None).unwrap();
+            let rounds = g.usize(1, 30);
+            for r in 0..rounds as u64 {
+                let w1 = s.replace(r, "k", cas, j(r * 2 + 1), None);
+                let w2 = s.replace(r, "k", cas, j(r * 2 + 2), None);
+                match (w1, w2) {
+                    (Ok(c), Err(_)) | (Err(_), Ok(c)) => cas = c,
+                    _ => return false,
+                }
+            }
+            s.cas_conflicts == rounds as u64
+        });
+    }
+
+    #[test]
+    fn prop_ttl_monotone() {
+        forall("document visible strictly before its expiry only", 100, |g| {
+            let mut s = DocStore::new();
+            let ttl = g.u64(1, 1000);
+            s.insert(0, "k", j(1), Some(ttl)).unwrap();
+            let probe = g.u64(0, 2000);
+            let visible = s.get(probe, "k").is_some();
+            visible == (probe < ttl)
+        });
+    }
+}

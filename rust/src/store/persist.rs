@@ -1,0 +1,187 @@
+//! Streams-bucket persistence: snapshot + recovery.
+//!
+//! The paper leans on Couchbase durability for its crash story: "because
+//! we have persistent storage of streams, so even if any message is lost
+//! and processing of any stream fails it will automatically be picked in
+//! next cycles." This module serializes the bucket to JSON and restores
+//! it after a (simulated) coordinator restart; streams that were
+//! in-process at the crash come back in-process and are recovered by the
+//! stale re-pick — exactly the paper's mechanism.
+
+use super::streams::{Channel, StreamRecord, StreamStatus, StreamStore};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+fn channel_name(c: Channel) -> &'static str {
+    c.name()
+}
+
+fn channel_from(name: &str) -> Result<Channel> {
+    Ok(match name {
+        "news" => Channel::News,
+        "custom_rss" => Channel::CustomRss,
+        "facebook" => Channel::Facebook,
+        "twitter" => Channel::Twitter,
+        other => bail!("unknown channel {other}"),
+    })
+}
+
+/// Serialize the full bucket (deterministic key order via the Json codec).
+pub fn snapshot(store: &StreamStore) -> String {
+    let mut records = Vec::new();
+    let mut sorted: Vec<&StreamRecord> = store.records().collect();
+    sorted.sort_by_key(|r| r.id);
+    for rec in sorted {
+        let mut j = Json::obj()
+            .set("id", rec.id)
+            .set("channel", channel_name(rec.channel))
+            .set("url", rec.url.as_str())
+            .set("next_due", rec.next_due)
+            .set("base_interval", rec.base_interval)
+            .set("backoff_level", rec.backoff_level as u64)
+            .set("priority", rec.priority)
+            .set("created_at", rec.created_at)
+            .set("polls", rec.polls)
+            .set("items_seen", rec.items_seen)
+            .set("not_modified", rec.not_modified)
+            .set("errors", rec.errors);
+        if let Some(e) = &rec.etag {
+            j = j.set("etag", e.as_str());
+        }
+        if let Some(lm) = rec.last_modified {
+            j = j.set("last_modified", lm);
+        }
+        if let Some(fp) = rec.first_polled_at {
+            j = j.set("first_polled_at", fp);
+        }
+        match rec.status {
+            StreamStatus::Idle => j = j.set("status", "idle"),
+            StreamStatus::InProcess { since } => {
+                j = j.set("status", "in_process").set("since", since);
+            }
+            StreamStatus::Disabled => j = j.set("status", "disabled"),
+        }
+        records.push(j);
+    }
+    Json::obj()
+        .set("version", 1u64)
+        .set("max_backoff", store.max_backoff as u64)
+        .set("records", Json::Arr(records))
+        .to_string()
+}
+
+/// Restore a bucket from a snapshot.
+pub fn restore(text: &str) -> Result<StreamStore> {
+    let j = Json::parse(text).map_err(|e| anyhow!("snapshot parse: {e}"))?;
+    let version = j.get("version").and_then(Json::as_u64).unwrap_or(0);
+    if version != 1 {
+        bail!("unsupported snapshot version {version}");
+    }
+    let mut store = StreamStore::new();
+    store.max_backoff = j.get("max_backoff").and_then(Json::as_u64).unwrap_or(4) as u8;
+    let records = j
+        .get("records")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("snapshot missing records"))?;
+    for r in records {
+        let get_u = |k: &str| r.get(k).and_then(Json::as_u64);
+        let id = get_u("id").ok_or_else(|| anyhow!("record missing id"))?;
+        let channel = channel_from(
+            r.get("channel").and_then(Json::as_str).ok_or_else(|| anyhow!("missing channel"))?,
+        )?;
+        let url = r.get("url").and_then(Json::as_str).unwrap_or_default().to_string();
+        let mut rec =
+            StreamRecord::new(id, channel, url, get_u("base_interval").unwrap_or(300_000), 0);
+        rec.next_due = get_u("next_due").unwrap_or(0);
+        rec.backoff_level = get_u("backoff_level").unwrap_or(0) as u8;
+        rec.priority = r.get("priority").and_then(Json::as_bool).unwrap_or(false);
+        rec.created_at = get_u("created_at").unwrap_or(0);
+        rec.polls = get_u("polls").unwrap_or(0);
+        rec.items_seen = get_u("items_seen").unwrap_or(0);
+        rec.not_modified = get_u("not_modified").unwrap_or(0);
+        rec.errors = get_u("errors").unwrap_or(0);
+        rec.etag = r.get("etag").and_then(Json::as_str).map(String::from);
+        rec.last_modified = get_u("last_modified");
+        rec.first_polled_at = get_u("first_polled_at");
+        rec.status = match r.get("status").and_then(Json::as_str) {
+            Some("in_process") => StreamStatus::InProcess { since: get_u("since").unwrap_or(0) },
+            Some("disabled") => StreamStatus::Disabled,
+            _ => StreamStatus::Idle,
+        };
+        store.insert_with_status(rec);
+    }
+    store.check_invariants().map_err(|e| anyhow!("restored store inconsistent: {e}"))?;
+    Ok(store)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::streams::PollOutcome;
+
+    fn populated() -> StreamStore {
+        let mut s = StreamStore::new();
+        s.max_backoff = 5;
+        for id in 1..=20u64 {
+            let mut r = StreamRecord::new(
+                id,
+                if id % 4 == 0 { Channel::Twitter } else { Channel::News },
+                format!("http://src-{id}.feeds.sim/rss"),
+                300_000,
+                0,
+            );
+            r.next_due = id * 1_000;
+            s.insert(r);
+        }
+        // Exercise state: pick a few, complete some with etags.
+        let picked = s.pick_due(25_000, 0, 60_000, 8);
+        for (i, id) in picked.iter().enumerate() {
+            if i % 2 == 0 {
+                s.complete(*id, 30_000, PollOutcome::Items(2), Some(format!("e{id}")), Some(9));
+            } // odd ones stay in-process (simulated crash)
+        }
+        s.prioritize(15, 31_000);
+        s
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let store = populated();
+        let snap = snapshot(&store);
+        let restored = restore(&snap).unwrap();
+        assert_eq!(restored.len(), store.len());
+        assert_eq!(restored.max_backoff, store.max_backoff);
+        assert_eq!(restored.status_counts(), store.status_counts());
+        for id in 1..=20u64 {
+            let a = store.get(id).unwrap();
+            let b = restored.get(id).unwrap();
+            assert_eq!(a.status, b.status, "stream {id}");
+            assert_eq!(a.next_due, b.next_due);
+            assert_eq!(a.etag, b.etag);
+            assert_eq!(a.backoff_level, b.backoff_level);
+            assert_eq!(a.priority, b.priority);
+            assert_eq!(a.polls, b.polls);
+        }
+        // Snapshot is deterministic.
+        assert_eq!(snap, snapshot(&restored));
+    }
+
+    #[test]
+    fn crashed_inprocess_streams_recovered_after_restart() {
+        let store = populated();
+        let (_, inproc_before, _) = store.status_counts();
+        assert!(inproc_before > 0, "test needs crashed streams");
+        let mut restored = restore(&snapshot(&store)).unwrap();
+        // After restart, the stale re-pick recovers the in-process rows.
+        let repicked = restored.pick_due(25_000 + 120_000, 0, 60_000, 100);
+        assert!(repicked.len() >= inproc_before);
+        assert_eq!(restored.stale_repicks as usize, inproc_before);
+    }
+
+    #[test]
+    fn rejects_garbage_and_bad_versions() {
+        assert!(restore("not json").is_err());
+        assert!(restore("{\"version\": 99, \"records\": []}").is_err());
+        assert!(restore("{\"version\": 1}").is_err());
+    }
+}

@@ -1,0 +1,547 @@
+//! The "streams bucket": typed per-stream state with the secondary indexes
+//! the StreamsPickerActor and the 5-second Cron query.
+//!
+//! Paper semantics implemented here:
+//! - "Streams will be picked based on their next due date" — an ordered
+//!   `(next_due, id)` index;
+//! - "streams which were picked earlier, but could not be updated even
+//!   after a given time elapsed will also be picked" — a stale-in-process
+//!   index on `(picked_at, id)`;
+//! - "Picked streams will be updated ... with in-process status" — an
+//!   atomic claim transition (backed by CAS in the document model);
+//! - adaptive scheduling: streams that keep yielding items are polled more
+//!   often; silent ones back off. This is what produces the diurnal send
+//!   rate CloudWatch shows in Figure 4 (feeds publish diurnally, so due
+//!   times cluster diurnally).
+
+use crate::sim::{SimTime, MINUTE};
+use std::collections::{BTreeSet, HashMap};
+
+/// Source channel, one per paper router family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Channel {
+    News,
+    CustomRss,
+    Facebook,
+    Twitter,
+}
+
+impl Channel {
+    pub const ALL: [Channel; 4] =
+        [Channel::News, Channel::CustomRss, Channel::Facebook, Channel::Twitter];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Channel::News => "news",
+            Channel::CustomRss => "custom_rss",
+            Channel::Facebook => "facebook",
+            Channel::Twitter => "twitter",
+        }
+    }
+}
+
+/// Stream processing status.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamStatus {
+    Idle,
+    /// Claimed by a picker/worker at the given time.
+    InProcess { since: SimTime },
+    /// Administratively disabled (source removed).
+    Disabled,
+}
+
+/// Per-stream persistent record.
+#[derive(Debug, Clone)]
+pub struct StreamRecord {
+    pub id: u64,
+    pub channel: Channel,
+    pub url: String,
+    pub status: StreamStatus,
+    pub next_due: SimTime,
+    /// Poll cadence control: the base interval and the adaptive backoff
+    /// level (0 = poll at base rate).
+    pub base_interval: SimTime,
+    pub backoff_level: u8,
+    /// Conditional-GET state.
+    pub etag: Option<String>,
+    pub last_modified: Option<SimTime>,
+    /// Priority flag (newly-created streams go through the priority path).
+    pub priority: bool,
+    pub created_at: SimTime,
+    /// When the stream was first successfully polled (latency metric for
+    /// the priority path).
+    pub first_polled_at: Option<SimTime>,
+    // counters
+    pub polls: u64,
+    pub items_seen: u64,
+    pub not_modified: u64,
+    pub errors: u64,
+}
+
+impl StreamRecord {
+    pub fn new(id: u64, channel: Channel, url: String, base_interval: SimTime, now: SimTime) -> Self {
+        StreamRecord {
+            id,
+            channel,
+            url,
+            status: StreamStatus::Idle,
+            next_due: now,
+            base_interval,
+            backoff_level: 0,
+            etag: None,
+            last_modified: None,
+            priority: false,
+            created_at: now,
+            first_polled_at: None,
+            polls: 0,
+            items_seen: 0,
+            not_modified: 0,
+            errors: 0,
+        }
+    }
+
+    /// Effective poll interval under the current backoff level (the level
+    /// is clamped at write time; 6 is a hard safety cap = 64x base).
+    pub fn effective_interval(&self) -> SimTime {
+        self.base_interval * (1u64 << self.backoff_level.min(6))
+    }
+}
+
+/// Outcome of a poll, used to adapt the schedule.
+#[derive(Debug, Clone, Copy)]
+pub enum PollOutcome {
+    /// New items found: poll faster (reset backoff).
+    Items(u32),
+    /// 304 Not Modified: back off one level.
+    NotModified,
+    /// Fetch error: back off and count.
+    Error,
+}
+
+/// The streams bucket.
+pub struct StreamStore {
+    records: HashMap<u64, StreamRecord>,
+    /// (next_due, id) for Idle streams.
+    due_index: BTreeSet<(SimTime, u64)>,
+    /// (since, id) for InProcess streams.
+    inprocess_index: BTreeSet<(SimTime, u64)>,
+    pub claims: u64,
+    pub stale_repicks: u64,
+    /// Max adaptive backoff level (effective interval = base << level).
+    pub max_backoff: u8,
+}
+
+impl Default for StreamStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StreamStore {
+    pub fn new() -> Self {
+        StreamStore {
+            records: HashMap::new(),
+            due_index: BTreeSet::new(),
+            inprocess_index: BTreeSet::new(),
+            claims: 0,
+            stale_repicks: 0,
+            max_backoff: 4,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn get(&self, id: u64) -> Option<&StreamRecord> {
+        self.records.get(&id)
+    }
+
+    /// Iterate all records (persistence / reporting). Order is unspecified.
+    pub fn records(&self) -> impl Iterator<Item = &StreamRecord> {
+        self.records.values()
+    }
+
+    /// Insert preserving the record's current status (snapshot restore) —
+    /// regular `insert` assumes Idle.
+    pub fn insert_with_status(&mut self, rec: StreamRecord) {
+        debug_assert!(!self.records.contains_key(&rec.id), "duplicate stream id");
+        match rec.status {
+            StreamStatus::Idle => {
+                self.due_index.insert((rec.next_due, rec.id));
+            }
+            StreamStatus::InProcess { since } => {
+                self.inprocess_index.insert((since, rec.id));
+            }
+            StreamStatus::Disabled => {}
+        }
+        self.records.insert(rec.id, rec);
+    }
+
+    /// Add a stream (source added "on an ongoing basis").
+    pub fn insert(&mut self, rec: StreamRecord) {
+        debug_assert!(!self.records.contains_key(&rec.id), "duplicate stream id");
+        if rec.status == StreamStatus::Idle {
+            self.due_index.insert((rec.next_due, rec.id));
+        }
+        self.records.insert(rec.id, rec);
+    }
+
+    /// Remove a stream (source deleted). Safe in any status.
+    pub fn remove(&mut self, id: u64) -> Option<StreamRecord> {
+        let rec = self.records.remove(&id)?;
+        self.due_index.remove(&(rec.next_due, id));
+        if let StreamStatus::InProcess { since } = rec.status {
+            self.inprocess_index.remove(&(since, id));
+        }
+        Some(rec)
+    }
+
+    /// The Cron query: ids of Idle streams due within `horizon` of `now`,
+    /// plus InProcess streams stuck longer than `stale_after`. Claims each
+    /// (marks InProcess) and returns them ordered by due time — the atomic
+    /// pick-and-mark the paper performs against Couchbase.
+    pub fn pick_due(
+        &mut self,
+        now: SimTime,
+        horizon: SimTime,
+        stale_after: SimTime,
+        limit: usize,
+    ) -> Vec<u64> {
+        let mut picked = Vec::new();
+
+        // Stale in-process first: they have waited longest. (Nothing can
+        // be stale before a full stale window has elapsed.)
+        let stale: Vec<(SimTime, u64)> = if now >= stale_after {
+            let cutoff = now - stale_after;
+            self.inprocess_index
+                .range(..=(cutoff, u64::MAX))
+                .take(limit)
+                .copied()
+                .collect()
+        } else {
+            Vec::new()
+        };
+        for (since, id) in stale {
+            self.inprocess_index.remove(&(since, id));
+            let rec = self.records.get_mut(&id).unwrap();
+            rec.status = StreamStatus::InProcess { since: now };
+            self.inprocess_index.insert((now, id));
+            self.stale_repicks += 1;
+            picked.push(id);
+            if picked.len() >= limit {
+                return picked;
+            }
+        }
+
+        // Then due idle streams.
+        let due: Vec<(SimTime, u64)> = self
+            .due_index
+            .range(..(now + horizon, u64::MAX))
+            .take(limit - picked.len())
+            .copied()
+            .collect();
+        for (due_at, id) in due {
+            self.due_index.remove(&(due_at, id));
+            let rec = self.records.get_mut(&id).unwrap();
+            rec.status = StreamStatus::InProcess { since: now };
+            self.inprocess_index.insert((now, id));
+            self.claims += 1;
+            picked.push(id);
+        }
+        picked
+    }
+
+    /// StreamsUpdaterActor: record a poll outcome, adapt the schedule,
+    /// release the claim and re-index the stream.
+    pub fn complete(
+        &mut self,
+        id: u64,
+        now: SimTime,
+        outcome: PollOutcome,
+        etag: Option<String>,
+        last_modified: Option<SimTime>,
+    ) {
+        let Some(rec) = self.records.get_mut(&id) else { return };
+        if let StreamStatus::InProcess { since } = rec.status {
+            self.inprocess_index.remove(&(since, id));
+        }
+        rec.polls += 1;
+        if rec.first_polled_at.is_none() {
+            rec.first_polled_at = Some(now);
+        }
+        match outcome {
+            PollOutcome::Items(n) => {
+                rec.items_seen += n as u64;
+                rec.backoff_level = 0;
+            }
+            PollOutcome::NotModified => {
+                rec.not_modified += 1;
+                rec.backoff_level = (rec.backoff_level + 1).min(self.max_backoff);
+            }
+            PollOutcome::Error => {
+                rec.errors += 1;
+                rec.backoff_level = (rec.backoff_level + 1).min(self.max_backoff);
+            }
+        }
+        if let Some(e) = etag {
+            rec.etag = Some(e);
+        }
+        if let Some(lm) = last_modified {
+            rec.last_modified = Some(lm);
+        }
+        rec.status = StreamStatus::Idle;
+        // Jitter the next poll by ±12.5% (deterministic in (id, polls)):
+        // without it every silent feed marches in lockstep to the same
+        // backoff interval and the fleet synchronizes into bursts that
+        // real populations don't show.
+        let interval = rec.effective_interval();
+        let jitter_span = (interval / 4).max(1);
+        let h = crate::util::hash::combine(id, rec.polls);
+        let jitter = (h % jitter_span) as i64 - (jitter_span / 2) as i64;
+        rec.next_due = now + (interval as i64 + jitter).max(1) as SimTime;
+        self.due_index.insert((rec.next_due, id));
+    }
+
+    /// Bump a stream to the front of the line (PriorityStreamsActor).
+    pub fn prioritize(&mut self, id: u64, now: SimTime) -> bool {
+        let Some(rec) = self.records.get_mut(&id) else { return false };
+        if rec.status != StreamStatus::Idle {
+            rec.priority = true;
+            return false;
+        }
+        self.due_index.remove(&(rec.next_due, id));
+        rec.priority = true;
+        rec.next_due = now;
+        self.due_index.insert((now, id));
+        true
+    }
+
+    /// Counts by status (for `inspect` and invariants).
+    pub fn status_counts(&self) -> (usize, usize, usize) {
+        let mut idle = 0;
+        let mut inproc = 0;
+        let mut disabled = 0;
+        for r in self.records.values() {
+            match r.status {
+                StreamStatus::Idle => idle += 1,
+                StreamStatus::InProcess { .. } => inproc += 1,
+                StreamStatus::Disabled => disabled += 1,
+            }
+        }
+        (idle, inproc, disabled)
+    }
+
+    /// Index-consistency check used by property tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut idle = 0;
+        let mut inproc = 0;
+        for (id, r) in &self.records {
+            match r.status {
+                StreamStatus::Idle => {
+                    idle += 1;
+                    if !self.due_index.contains(&(r.next_due, *id)) {
+                        return Err(format!("idle stream {id} missing from due index"));
+                    }
+                }
+                StreamStatus::InProcess { since } => {
+                    inproc += 1;
+                    if !self.inprocess_index.contains(&(since, *id)) {
+                        return Err(format!("in-process stream {id} missing from index"));
+                    }
+                }
+                StreamStatus::Disabled => {}
+            }
+        }
+        if self.due_index.len() != idle {
+            return Err(format!("due index size {} != idle {}", self.due_index.len(), idle));
+        }
+        if self.inprocess_index.len() != inproc {
+            return Err(format!(
+                "inprocess index size {} != inproc {}",
+                self.inprocess_index.len(),
+                inproc
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Default poll interval used across the system (paper: "every 5 minutes").
+pub const DEFAULT_POLL_INTERVAL: SimTime = 5 * MINUTE;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn rec(id: u64, due: SimTime) -> StreamRecord {
+        let mut r = StreamRecord::new(id, Channel::News, format!("http://feed/{id}"), 300_000, 0);
+        r.next_due = due;
+        r
+    }
+
+    #[test]
+    fn pick_orders_by_due_and_claims() {
+        let mut s = StreamStore::new();
+        s.insert(rec(1, 100));
+        s.insert(rec(2, 50));
+        s.insert(rec(3, 900_000));
+        let picked = s.pick_due(200, 0, 60_000, 10);
+        assert_eq!(picked, vec![2, 1]);
+        assert!(matches!(s.get(2).unwrap().status, StreamStatus::InProcess { .. }));
+        // Picking again returns nothing: claimed.
+        assert!(s.pick_due(200, 0, 60_000, 10).is_empty());
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn stale_inprocess_repicked() {
+        let mut s = StreamStore::new();
+        s.insert(rec(1, 0));
+        assert_eq!(s.pick_due(0, 0, 60_000, 10), vec![1]);
+        // Worker died; after the stale window the stream is re-picked.
+        assert!(s.pick_due(30_000, 0, 60_000, 10).is_empty());
+        assert_eq!(s.pick_due(61_000, 0, 60_000, 10), vec![1]);
+        assert_eq!(s.stale_repicks, 1);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn complete_reschedules_with_backoff() {
+        let mut s = StreamStore::new();
+        s.insert(rec(1, 0));
+        s.pick_due(0, 0, 60_000, 10);
+        s.complete(1, 1_000, PollOutcome::NotModified, None, None);
+        let r = s.get(1).unwrap();
+        assert_eq!(r.backoff_level, 1);
+        // 2x base, within the ±12.5% scheduling jitter.
+        let want: i64 = 1_000 + 600_000;
+        assert!(
+            (r.next_due as i64 - want).unsigned_abs() <= 600_000 / 8,
+            "next_due={} want~{want}",
+            r.next_due
+        );
+        // Items reset the backoff.
+        let due = r.next_due;
+        s.pick_due(due, 0, 60_000, 10);
+        s.complete(1, due + 500, PollOutcome::Items(3), Some("etag-2".into()), None);
+        let r = s.get(1).unwrap();
+        assert_eq!(r.backoff_level, 0);
+        assert_eq!(r.items_seen, 3);
+        assert_eq!(r.etag.as_deref(), Some("etag-2"));
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn backoff_caps() {
+        let mut s = StreamStore::new();
+        s.insert(rec(1, 0));
+        for i in 0..10 {
+            let due = s.get(1).unwrap().next_due;
+            s.pick_due(due, 0, 60_000, 10);
+            s.complete(1, due + i, PollOutcome::Error, None, None);
+        }
+        assert_eq!(s.get(1).unwrap().backoff_level, 4);
+        assert_eq!(s.get(1).unwrap().effective_interval(), 300_000 * 16);
+    }
+
+    #[test]
+    fn prioritize_moves_due_now() {
+        let mut s = StreamStore::new();
+        s.insert(rec(7, 500_000));
+        assert!(s.prioritize(7, 100));
+        assert_eq!(s.pick_due(100, 0, 60_000, 10), vec![7]);
+        assert!(s.get(7).unwrap().priority);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn horizon_includes_soon_due() {
+        let mut s = StreamStore::new();
+        s.insert(rec(1, 4_000));
+        // Cron with a 5s horizon picks streams due within the next interval.
+        assert_eq!(s.pick_due(0, 5_000, 60_000, 10), vec![1]);
+    }
+
+    #[test]
+    fn remove_cleans_indexes() {
+        let mut s = StreamStore::new();
+        s.insert(rec(1, 10));
+        s.insert(rec(2, 20));
+        s.pick_due(15, 0, 60_000, 1); // claims 1
+        s.remove(1);
+        s.remove(2);
+        assert!(s.is_empty());
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prop_store_invariants_under_random_ops() {
+        forall("stream store indexes stay consistent", 60, |g| {
+            let mut s = StreamStore::new();
+            let mut now = 0;
+            let mut next_id = 0u64;
+            for _ in 0..g.usize(1, 120) {
+                now += g.u64(0, 5_000);
+                match g.u64(0, 5) {
+                    0 => {
+                        next_id += 1;
+                        s.insert(rec(next_id, now + g.u64(0, 10_000)));
+                    }
+                    1 => {
+                        let picked = s.pick_due(now, g.u64(0, 5_000), 60_000, g.usize(1, 20));
+                        // complete a random subset
+                        for id in picked {
+                            if g.chance(0.8) {
+                                s.complete(id, now, PollOutcome::Items(1), None, None);
+                            }
+                        }
+                    }
+                    2 if next_id > 0 => {
+                        s.prioritize(g.u64(1, next_id + 1), now);
+                    }
+                    3 if next_id > 0 => {
+                        s.remove(g.u64(1, next_id + 1));
+                    }
+                    _ => {
+                        s.pick_due(now, 0, 60_000, 5);
+                    }
+                }
+                if s.check_invariants().is_err() {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn prop_no_stream_lost() {
+        // Every inserted stream is always either pickable eventually or
+        // in-process — never silently dropped.
+        forall("streams conserved across pick/complete cycles", 60, |g| {
+            let mut s = StreamStore::new();
+            let n = g.usize(1, 50);
+            for id in 0..n as u64 {
+                s.insert(rec(id + 1, g.u64(0, 1000)));
+            }
+            let mut now = 2_000;
+            for _ in 0..g.usize(1, 40) {
+                let picked = s.pick_due(now, 0, 10_000, g.usize(1, 10));
+                for id in picked {
+                    if g.chance(0.6) {
+                        s.complete(id, now, PollOutcome::NotModified, None, None);
+                    } // else: simulate crash — stream stays in-process
+                }
+                now += g.u64(1_000, 20_000);
+            }
+            let (idle, inproc, _) = s.status_counts();
+            idle + inproc == n
+        });
+    }
+}

