@@ -1,0 +1,23 @@
+# AlertMix — repo-root automation.
+#
+#   make verify        tier-1 gate: offline release build + full test suite
+#   make bench-ingest  refresh BENCH_ingest.json (ingest hot-path numbers)
+#   make bench         run every bench target
+#   make artifacts     (re)build the AOT enrichment artifacts (needs jax)
+
+CARGO ?= cargo
+
+.PHONY: verify bench-ingest bench artifacts
+
+verify:
+	cd rust && $(CARGO) build --release && $(CARGO) test -q
+
+bench-ingest:
+	cd rust && $(CARGO) bench --bench bench_ingest
+	@test -f BENCH_ingest.json && echo "refreshed BENCH_ingest.json" || true
+
+bench:
+	cd rust && $(CARGO) bench
+
+artifacts:
+	cd python && python3 -m compile.aot

@@ -24,8 +24,10 @@ fn main() -> anyhow::Result<()> {
     if let Ok(n) = std::env::var("FIG4_FEEDS") {
         cfg.n_feeds = n.parse()?;
     }
-    if !alertmix::runtime::find_artifact(alertmix::runtime::DEFAULT_ARTIFACT).is_some() {
-        eprintln!("note: artifacts missing, using CPU fallback enricher");
+    if !cfg!(feature = "xla")
+        || alertmix::runtime::find_artifact(alertmix::runtime::DEFAULT_ARTIFACT).is_none()
+    {
+        eprintln!("note: xla feature/artifacts missing, using CPU fallback enricher");
         cfg.use_xla = false;
     }
     println!(

@@ -17,7 +17,8 @@ fn main() -> anyhow::Result<()> {
     let cfg = AlertMixConfig {
         seed: 99,
         n_feeds: 10_000,
-        use_xla: alertmix::runtime::find_artifact(alertmix::runtime::DEFAULT_ARTIFACT).is_some(),
+        use_xla: cfg!(feature = "xla")
+            && alertmix::runtime::find_artifact(alertmix::runtime::DEFAULT_ARTIFACT).is_some(),
         ..AlertMixConfig::default()
     };
     // The universe's channel mix is configured through UniverseConfig;

@@ -15,7 +15,8 @@ fn main() -> anyhow::Result<()> {
     let cfg = AlertMixConfig {
         seed: 7,
         n_feeds: 20_000,
-        use_xla: alertmix::runtime::find_artifact(alertmix::runtime::DEFAULT_ARTIFACT).is_some(),
+        use_xla: cfg!(feature = "xla")
+            && alertmix::runtime::find_artifact(alertmix::runtime::DEFAULT_ARTIFACT).is_some(),
         ..AlertMixConfig::default()
     };
     let (mut sys, mut world, h) = bootstrap(cfg)?;

@@ -15,7 +15,8 @@ fn main() -> anyhow::Result<()> {
     let cfg = AlertMixConfig {
         seed: 2024,
         n_feeds: 5_000,
-        use_xla: alertmix::runtime::find_artifact(alertmix::runtime::DEFAULT_ARTIFACT).is_some(),
+        use_xla: cfg!(feature = "xla")
+            && alertmix::runtime::find_artifact(alertmix::runtime::DEFAULT_ARTIFACT).is_some(),
         ..AlertMixConfig::default()
     };
     println!("quickstart: {} feeds, 1 virtual hour", cfg.n_feeds);

@@ -19,7 +19,8 @@ fn main() {
     let faults = env_flag("FIG4_FAULTS");
     let mut cfg = AlertMixConfig::figure4();
     cfg.n_feeds = feeds;
-    cfg.use_xla = alertmix::runtime::find_artifact(alertmix::runtime::DEFAULT_ARTIFACT).is_some();
+    cfg.use_xla = cfg!(feature = "xla")
+        && alertmix::runtime::find_artifact(alertmix::runtime::DEFAULT_ARTIFACT).is_some();
     if faults {
         cfg.worker_fault_rate = 0.01;
     }

@@ -1,0 +1,303 @@
+//! Ingest hot-path throughput: featurize → batch → enrich → dedup,
+//! reference (allocating) path vs streaming (zero-allocation) path.
+//!
+//! The reference side reproduces the pre-refactor per-item costs: the
+//! tokenize-then-hash featurizer (`featurize_item_reference`, one `String`
+//! per token), a boxed 1 KiB feature array per item, a row-struct pending
+//! vec with a flat-copy per flush, and a freshly allocated
+//! `Vec<Enrichment>` (plus per-item scores vec) per batch. The streaming
+//! side is the shipped hot path: fused featurize fold into a pooled
+//! columnar buffer, the columnar `Batcher`, the backend's reused output
+//! slice, and the allocation-free canonical-URL dedup hash.
+//!
+//! A thread-local counting allocator reports heap allocations per item in
+//! steady state (passes over an already-seen working set — the re-served
+//! RSS re-poll case): the streaming path must be **zero** and the bench
+//! asserts it. Results go to `BENCH_ingest.json` at the repo root so later
+//! PRs can track the trajectory.
+//!
+//! ```bash
+//! cargo bench --bench bench_ingest
+//! INGEST_ITEMS=32768 INGEST_PASSES=10 cargo bench --bench bench_ingest
+//! ```
+
+use alertmix::benchlib::{env_u64, section, time, Table};
+use alertmix::dedup::{DedupVerdict, Deduper};
+use alertmix::runtime::{Batcher, BatcherConfig, CpuFallbackEnricher, EnrichBackend, Enrichment};
+use alertmix::text::{featurize_item_into, featurize_item_reference, FEATURE_DIM};
+use alertmix::util::rng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+// ---------------------------------------------------------------------------
+// Thread-local counting allocator: counts every heap allocation on this
+// thread (alloc/realloc/alloc_zeroed); frees are not counted. const-init
+// TLS so the counter itself never allocates or recurses.
+
+thread_local! {
+    static ALLOC_COUNT: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAllocator;
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
+
+fn allocs() -> u64 {
+    ALLOC_COUNT.try_with(|c| c.get()).unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------------
+
+const BATCH: usize = 64;
+/// Items per simulated worker poll (the unit that shares one pooled buffer).
+const POLL: usize = 8;
+
+struct Item {
+    guid: String,
+    title: String,
+    body: String,
+    url: String,
+}
+
+fn make_items(n: usize) -> Vec<Item> {
+    let mut rng = Rng::new(0x146E57);
+    (0..n)
+        .map(|i| {
+            let word = |rng: &mut Rng| rng.ident(3 + (i % 5));
+            let title: Vec<String> = (0..8).map(|_| word(&mut rng)).collect();
+            let body: Vec<String> = (0..30).map(|_| word(&mut rng)).collect();
+            Item {
+                guid: format!("guid-{i}"),
+                title: title.join(" "),
+                body: body.join(" "),
+                url: format!("http://Feed{}.example.com:80/item/{i}/?utm_source=rss&id={i}", i % 97),
+            }
+        })
+        .collect()
+}
+
+// -- reference (pre-refactor) path ------------------------------------------
+
+struct RefPending {
+    ticket: u64,
+    features: [f32; FEATURE_DIM],
+}
+
+fn reference_flush(
+    items: &[Item],
+    dedup: &mut Deduper,
+    backend: &mut CpuFallbackEnricher,
+    pending: &mut Vec<RefPending>,
+) -> u64 {
+    if pending.is_empty() {
+        return 0;
+    }
+    // Old world: copy every staged row into a fresh row-major buffer…
+    let flat: Vec<f32> = pending.iter().flat_map(|p| p.features.iter().copied()).collect();
+    // …and get back a freshly allocated Vec<Enrichment> per batch.
+    let out: Vec<Enrichment> = backend.enrich_batch(&flat, pending.len()).unwrap().to_vec();
+    let mut fresh = 0;
+    for (p, e) in pending.drain(..).zip(out) {
+        let it = &items[p.ticket as usize];
+        if matches!(
+            dedup.check_and_insert(&it.guid, &it.url, e.simhash, p.ticket),
+            DedupVerdict::Fresh
+        ) {
+            fresh += 1;
+        }
+    }
+    fresh
+}
+
+fn reference_pass(
+    items: &[Item],
+    dedup: &mut Deduper,
+    backend: &mut CpuFallbackEnricher,
+    pending: &mut Vec<RefPending>,
+) -> u64 {
+    let mut fresh = 0;
+    for (i, it) in items.iter().enumerate() {
+        // Old worker: fresh Vec<String> tokenizer + boxed 1 KiB array per item.
+        let features = Box::new(featurize_item_reference(&it.title, &it.body));
+        pending.push(RefPending { ticket: i as u64, features: *features });
+        if pending.len() == BATCH {
+            fresh += reference_flush(items, dedup, backend, pending);
+        }
+    }
+    fresh += reference_flush(items, dedup, backend, pending);
+    fresh
+}
+
+// -- streaming (shipped) path -----------------------------------------------
+
+fn streaming_flush(
+    items: &[Item],
+    dedup: &mut Deduper,
+    backend: &mut CpuFallbackEnricher,
+    batcher: &mut Batcher,
+) -> u64 {
+    let n = batcher.staged_len();
+    let out = backend.enrich_batch(batcher.staged_features(), n).unwrap();
+    let mut fresh = 0;
+    for (i, e) in out.iter().enumerate() {
+        let t = batcher.staged_tickets()[i];
+        let it = &items[t as usize];
+        if matches!(dedup.check_and_insert(&it.guid, &it.url, e.simhash, t), DedupVerdict::Fresh) {
+            fresh += 1;
+        }
+    }
+    batcher.clear_staged();
+    fresh
+}
+
+fn streaming_pass(
+    items: &[Item],
+    dedup: &mut Deduper,
+    backend: &mut CpuFallbackEnricher,
+    batcher: &mut Batcher,
+    poll_buf: &mut Vec<f32>,
+) -> u64 {
+    let mut fresh = 0;
+    let mut ticket = 0u64;
+    for chunk in items.chunks(POLL) {
+        // Worker: featurize the whole poll into the reused columnar buffer.
+        poll_buf.clear();
+        for it in chunk {
+            featurize_item_into(&it.title, &it.body, poll_buf);
+        }
+        // EnrichStage: append rows into the shared batcher staging area.
+        for j in 0..chunk.len() {
+            let row = &poll_buf[j * FEATURE_DIM..(j + 1) * FEATURE_DIM];
+            if batcher.push_row(ticket, row, 0) {
+                fresh += streaming_flush(items, dedup, backend, batcher);
+            }
+            ticket += 1;
+        }
+    }
+    if batcher.flush() {
+        fresh += streaming_flush(items, dedup, backend, batcher);
+    }
+    fresh
+}
+
+// ---------------------------------------------------------------------------
+
+fn bench_out_path() -> std::path::PathBuf {
+    for root in [".", "..", "../.."] {
+        let p = std::path::Path::new(root);
+        if p.join("ROADMAP.md").exists() {
+            return p.join("BENCH_ingest.json");
+        }
+    }
+    std::path::PathBuf::from("BENCH_ingest.json")
+}
+
+fn main() {
+    let n_items = env_u64("INGEST_ITEMS", 8_192) as usize;
+    let passes = env_u64("INGEST_PASSES", 5) as usize;
+    section(&format!(
+        "ingest hot path: {n_items} items x {passes} steady-state passes, batch {BATCH}, poll {POLL}"
+    ));
+    let items = make_items(n_items);
+    let total_items = (n_items * passes) as u64;
+
+    // --- reference path ----------------------------------------------------
+    let mut d_ref = Deduper::new(7);
+    let mut be_ref = CpuFallbackEnricher::new(BATCH);
+    let mut pending: Vec<RefPending> = Vec::with_capacity(BATCH);
+    // Warmup: populate the dedup index (a rare random near-dup collision
+    // may drop an item or two, hence >=).
+    let ingested = reference_pass(&items, &mut d_ref, &mut be_ref, &mut pending);
+    assert!(ingested as usize >= n_items * 99 / 100, "warmup ingests the working set");
+    let a0 = allocs();
+    for _ in 0..passes {
+        std::hint::black_box(reference_pass(&items, &mut d_ref, &mut be_ref, &mut pending));
+    }
+    let ref_allocs_per_item = (allocs() - a0) as f64 / total_items as f64;
+    let (ref_wall, _) = time(3, || {
+        for _ in 0..passes {
+            std::hint::black_box(reference_pass(&items, &mut d_ref, &mut be_ref, &mut pending));
+        }
+    });
+    let ref_ips = total_items as f64 / ref_wall;
+
+    // --- streaming path ----------------------------------------------------
+    let mut d_new = Deduper::new(7);
+    let mut be_new = CpuFallbackEnricher::new(BATCH);
+    let mut batcher = Batcher::new(BatcherConfig { batch_size: BATCH, max_wait_ms: 250 });
+    let mut poll_buf: Vec<f32> = Vec::new();
+    let ingested =
+        streaming_pass(&items, &mut d_new, &mut be_new, &mut batcher, &mut poll_buf); // warmup
+    assert!(ingested as usize >= n_items * 99 / 100, "warmup ingests the working set");
+    let a0 = allocs();
+    for _ in 0..passes {
+        std::hint::black_box(streaming_pass(
+            &items, &mut d_new, &mut be_new, &mut batcher, &mut poll_buf,
+        ));
+    }
+    let new_steady_allocs = allocs() - a0;
+    let new_allocs_per_item = new_steady_allocs as f64 / total_items as f64;
+    let (new_wall, _) = time(3, || {
+        for _ in 0..passes {
+            std::hint::black_box(streaming_pass(
+                &items, &mut d_new, &mut be_new, &mut batcher, &mut poll_buf,
+            ));
+        }
+    });
+    let new_ips = total_items as f64 / new_wall;
+
+    // --- report ------------------------------------------------------------
+    let speedup = new_ips / ref_ips;
+    let mut t = Table::new(&["path", "items/s", "us/item", "allocs/item (steady)"]);
+    t.row(&[
+        "reference".into(),
+        format!("{ref_ips:.0}"),
+        format!("{:.2}", 1e6 / ref_ips),
+        format!("{ref_allocs_per_item:.2}"),
+    ]);
+    t.row(&[
+        "streaming".into(),
+        format!("{new_ips:.0}"),
+        format!("{:.2}", 1e6 / new_ips),
+        format!("{new_allocs_per_item:.2}"),
+    ]);
+    t.print();
+    println!("\nspeedup: {speedup:.2}x  |  steady-state allocations (streaming): {new_steady_allocs}");
+    assert_eq!(
+        new_steady_allocs, 0,
+        "streaming ingest path must not allocate in steady state"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"ingest\",\n  \"items\": {n_items},\n  \"passes\": {passes},\n  \
+         \"batch\": {BATCH},\n  \"poll\": {POLL},\n  \"reference\": {{\"items_per_sec\": {ref_ips:.0}, \
+         \"allocs_per_item\": {ref_allocs_per_item:.3}}},\n  \"streaming\": {{\"items_per_sec\": {new_ips:.0}, \
+         \"allocs_per_item\": {new_allocs_per_item:.3}}},\n  \"speedup\": {speedup:.3},\n  \
+         \"zero_alloc_steady_state\": {}\n}}\n",
+        new_steady_allocs == 0
+    );
+    let out = bench_out_path();
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}

@@ -1,28 +1,26 @@
 //! Ablation A-3: the PJRT enrichment hot path.
 //!
-//! Measures the AOT-compiled XLA executable end to end from rust: items/s
-//! at each batch fill level (padding waste vs dispatch amortization), the
+//! Measures the enrichment backend end to end from rust: items/s at each
+//! batch fill level (padding waste vs dispatch amortization), the
 //! featurize→enrich pipeline cost, and the CPU fallback for reference.
-//! This is the §Perf L1/L2 measurement harness.
+//! The XLA/PJRT section runs only when built with `--features xla` and
+//! artifacts are present. This is the §Perf L1/L2 measurement harness.
 
 use alertmix::benchlib::{env_u64, section, time, Table};
-use alertmix::runtime::{Batcher, BatcherConfig, CpuFallbackEnricher, EnrichBackend, PendingItem, XlaEnricher};
+use alertmix::runtime::{Batcher, BatcherConfig, CpuFallbackEnricher, EnrichBackend};
 use alertmix::text::{featurize_item, FEATURE_DIM};
 use alertmix::util::rng::Rng;
 
-fn synth_features(n: usize) -> Vec<[f32; FEATURE_DIM]> {
+/// Row-major synthetic feature matrix (n x FEATURE_DIM).
+fn synth_features(n: usize) -> Vec<f32> {
     let mut rng = Rng::new(9);
-    (0..n)
-        .map(|_| {
-            let mut f = [0f32; FEATURE_DIM];
-            for v in f.iter_mut() {
-                if rng.chance(0.15) {
-                    *v = 1.0 + rng.next_f32();
-                }
-            }
-            f
-        })
-        .collect()
+    let mut flat = vec![0f32; n * FEATURE_DIM];
+    for v in flat.iter_mut() {
+        if rng.chance(0.15) {
+            *v = 1.0 + rng.next_f32();
+        }
+    }
+    flat
 }
 
 fn bench_backend(name: &str, backend: &mut dyn EnrichBackend, items: u64) {
@@ -31,10 +29,12 @@ fn bench_backend(name: &str, backend: &mut dyn EnrichBackend, items: u64) {
     for &fill in &[1usize, 8, 16, 32, 64] {
         let fill = fill.min(backend.batch_size());
         let reps = (items / fill as u64).max(1);
-        let slice = &feats[..fill];
+        let slice = &feats[..fill * FEATURE_DIM];
         let (wall, _) = time(3, || {
             for _ in 0..reps {
-                std::hint::black_box(backend.enrich_batch(std::hint::black_box(slice)).unwrap());
+                std::hint::black_box(
+                    backend.enrich_batch(std::hint::black_box(slice), fill).unwrap(),
+                );
             }
         });
         let per_batch = wall / reps as f64;
@@ -68,7 +68,8 @@ fn main() {
     });
     println!("featurize_item: {:.2} us/item ({:.0} items/s)", feat_s * 1e3, 1000.0 / feat_s);
 
-    match XlaEnricher::load_default() {
+    #[cfg(feature = "xla")]
+    match alertmix::runtime::XlaEnricher::load_default() {
         Ok(mut xla) => {
             section("XLA/PJRT enricher (AOT artifact)");
             bench_backend("xla-pjrt", &mut xla, items);
@@ -81,6 +82,8 @@ fn main() {
         }
         Err(e) => println!("SKIP xla backend: {e}"),
     }
+    #[cfg(not(feature = "xla"))]
+    println!("SKIP xla backend: built without `--features xla`");
 
     section("CPU fallback enricher (reference point)");
     let mut cpu = CpuFallbackEnricher::new(64);
@@ -89,6 +92,7 @@ fn main() {
     // Micro-batching policy: how much padding does the timeout policy cost?
     section("batcher policy (size-or-timeout)");
     let mut t = Table::new(&["max_wait", "flushes full", "flushes timeout", "padding waste"]);
+    let zero_row = [0.0f32; FEATURE_DIM];
     for &wait in &[50u64, 250, 1000] {
         let mut b = Batcher::new(BatcherConfig { batch_size: 64, max_wait_ms: wait });
         let mut rng = Rng::new(4);
@@ -96,15 +100,13 @@ fn main() {
         let mut flushed = 0u64;
         for i in 0..200_000u64 {
             now += rng.exp(0.02) as u64; // ~20ms between items
-            if let Some(batch) = b.push(PendingItem {
-                ticket: i,
-                features: [0.0; FEATURE_DIM],
-                enqueued_at: now,
-            }) {
-                flushed += batch.len() as u64;
+            if b.push_row(i, &zero_row, now) {
+                flushed += b.staged_len() as u64;
+                b.clear_staged();
             }
-            if let Some(batch) = b.poll_timeout(now) {
-                flushed += batch.len() as u64;
+            if b.poll_timeout(now) {
+                flushed += b.staged_len() as u64;
+                b.clear_staged();
             }
         }
         t.row(&[

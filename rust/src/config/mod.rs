@@ -102,7 +102,9 @@ impl Default for AlertMixConfig {
             worker_fault_rate: 0.0005,
             enrich_batch: 64,
             enrich_max_wait: 250,
-            use_xla: true,
+            // PJRT by default only when the backend is compiled in; the
+            // CPU fallback keeps default builds runnable out of the box.
+            use_xla: cfg!(feature = "xla"),
             dedup_max_hamming: 7,
             sink_bulk: 64,
             dead_letter_alarm: 100.0,

@@ -9,8 +9,16 @@
 //! computed by the Pallas kernel on the hot path (or the CPU fallback in
 //! `util::hash`).
 
-use crate::util::hash::{fnv1a_str, hamming};
+use crate::util::hash::{fnv1a_step, fnv1a_str, hamming, FNV_OFFSET};
 use std::collections::{HashMap, HashSet};
+
+/// Shared query-param filter for both canonicalization paths: `true` for
+/// `key=value` pairs that are tracking noise (or empty) and must be
+/// dropped from the canonical form.
+fn is_dropped_param(kv: &str) -> bool {
+    let key = kv.split('=').next().unwrap_or("");
+    key.starts_with("utm_") || key == "ref" || key == "fbclid" || kv.is_empty()
+}
 
 /// Canonicalize a URL for exact dedup: lowercase scheme/host, strip
 /// fragments, default ports, trailing slashes and common tracking params.
@@ -39,13 +47,7 @@ pub fn canonicalize_url(url: &str) -> String {
     let path = if path.len() > 1 { path.trim_end_matches('/') } else { path };
     let mut out = format!("{}://{}{}", scheme.to_ascii_lowercase(), host, path);
     if let Some(q) = query {
-        let mut kept: Vec<&str> = q
-            .split('&')
-            .filter(|kv| {
-                let key = kv.split('=').next().unwrap_or("");
-                !key.starts_with("utm_") && key != "ref" && key != "fbclid" && !kv.is_empty()
-            })
-            .collect();
+        let mut kept: Vec<&str> = q.split('&').filter(|kv| !is_dropped_param(kv)).collect();
         kept.sort_unstable();
         if !kept.is_empty() {
             out.push('?');
@@ -53,6 +55,87 @@ pub fn canonicalize_url(url: &str) -> String {
         }
     }
     out
+}
+
+/// FNV-1a of [`canonicalize_url`]\(url\) computed **without building the
+/// canonical string** — the hot-path form used by [`Deduper`]. The bytes
+/// of the canonical URL are streamed straight into the FNV accumulator
+/// (scheme/host lowercased per byte, port/fragment/tracking params
+/// skipped, query params sorted on a stack buffer), so exact-dedup of a
+/// re-served item allocates nothing. Falls back to the allocating path
+/// only for URLs with more than 32 kept query params.
+pub fn canonical_url_fnv(url: &str) -> u64 {
+    struct Fnv(u64);
+    impl Fnv {
+        fn byte(&mut self, b: u8) {
+            self.0 = fnv1a_step(self.0, b);
+        }
+        fn bytes(&mut self, bs: &[u8]) {
+            for &b in bs {
+                self.byte(b);
+            }
+        }
+        fn lower_bytes(&mut self, bs: &[u8]) {
+            for &b in bs {
+                self.byte(b.to_ascii_lowercase());
+            }
+        }
+    }
+
+    let original = url;
+    let url = url.trim();
+    let url = url.split('#').next().unwrap_or(url);
+    let (scheme, rest) = match url.find("://") {
+        Some(i) => (&url[..i], &url[i + 3..]),
+        None => ("http", url),
+    };
+    let (hostport, pathquery) = match rest.find('/') {
+        Some(i) => (&rest[..i], &rest[i..]),
+        None => (rest, ""),
+    };
+    // Port suffixes are digits/colon, untouched by lowercasing, so
+    // stripping before the per-byte lowercase matches the reference.
+    let host = if let Some(h) = hostport.strip_suffix(":80") {
+        h
+    } else {
+        hostport.strip_suffix(":443").unwrap_or(hostport)
+    };
+    let (path, query) = match pathquery.find('?') {
+        Some(i) => (&pathquery[..i], Some(&pathquery[i + 1..])),
+        None => (pathquery, None),
+    };
+    let path = if path.len() > 1 { path.trim_end_matches('/') } else { path };
+
+    let mut h = Fnv(FNV_OFFSET);
+    h.lower_bytes(scheme.as_bytes());
+    h.bytes(b"://");
+    h.lower_bytes(host.as_bytes());
+    h.bytes(path.as_bytes());
+    if let Some(q) = query {
+        let mut kept: [&str; 32] = [""; 32];
+        let mut n = 0;
+        for kv in q.split('&') {
+            if !is_dropped_param(kv) {
+                if n == kept.len() {
+                    return fnv1a_str(&canonicalize_url(original));
+                }
+                kept[n] = kv;
+                n += 1;
+            }
+        }
+        let kept = &mut kept[..n];
+        kept.sort_unstable();
+        if !kept.is_empty() {
+            h.byte(b'?');
+            for (i, kv) in kept.iter().enumerate() {
+                if i > 0 {
+                    h.byte(b'&');
+                }
+                h.bytes(kv.as_bytes());
+            }
+        }
+    }
+    h.0
 }
 
 /// Number of LSH bands (4 bands x 16 bits over a 64-bit signature).
@@ -197,7 +280,7 @@ impl Deduper {
     /// item's text (from the PJRT enricher or the CPU fallback).
     pub fn check_and_insert(&mut self, guid: &str, url: &str, sig: u64, doc_id: u64) -> DedupVerdict {
         let gh = fnv1a_str(guid);
-        let uh = fnv1a_str(&canonicalize_url(url));
+        let uh = canonical_url_fnv(url);
         if self.seen_guids.contains(&gh) || self.seen_urls.contains(&uh) {
             self.exact_hits += 1;
             return DedupVerdict::ExactDuplicate;
@@ -296,6 +379,66 @@ mod tests {
             let probe = base ^ (1u64 << flip);
             assert_eq!(idx.find_near(probe), Some(1), "distance 1 must always hit (bit {flip})");
         }
+    }
+
+    #[test]
+    fn canonical_url_fnv_matches_allocating_path() {
+        for url in [
+            "HTTP://News.Example.com:80/a/b/?utm_source=x&id=3#frag",
+            "http://x.com/p/",
+            "http://x.com/",
+            "http://x.com/p?b=2&a=1",
+            "https://Secure.Example.com:443/Path/To/Item",
+            "no-scheme.example.com/path?ref=rss&z=1&a=2",
+            "http://x.com/p?utm_campaign=z&fbclid=abc",
+            "  http://padded.example.com/x  ",
+            "",
+        ] {
+            assert_eq!(
+                canonical_url_fnv(url),
+                fnv1a_str(&canonicalize_url(url)),
+                "url={url:?}"
+            );
+        }
+        // Overflow fallback: > 32 kept params still agrees.
+        let mut big = String::from("http://x.com/p?");
+        for i in 0..40 {
+            if i > 0 {
+                big.push('&');
+            }
+            big.push_str(&format!("k{i:02}={i}"));
+        }
+        assert_eq!(canonical_url_fnv(&big), fnv1a_str(&canonicalize_url(&big)));
+    }
+
+    #[test]
+    fn prop_canonical_url_fnv_matches_reference() {
+        forall("streaming canonical hash == fnv(canonicalize_url)", 200, |g| {
+            let mut url = format!(
+                "{}://{}.Example.com{}/{}",
+                g.pick(&["http", "HTTP", "https"]),
+                g.word(6),
+                g.pick(&["", ":80", ":443", ":8080"]),
+                g.word(8),
+            );
+            if g.bool() {
+                url.push('/');
+            }
+            if g.bool() {
+                url.push_str(&format!(
+                    "?{}={}&utm_source={}&{}={}",
+                    g.word(3),
+                    g.word(4),
+                    g.word(4),
+                    g.word(3),
+                    g.word(4)
+                ));
+            }
+            if g.bool() {
+                url.push_str("#frag");
+            }
+            canonical_url_fnv(&url) == fnv1a_str(&canonicalize_url(&url))
+        });
     }
 
     #[test]

@@ -6,8 +6,9 @@
 //! JAX/Pallas enrichment model compiled ahead-of-time and executed through
 //! XLA/PJRT — python never runs on the request path.
 //!
-//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
-//! paper-vs-measured results.
+//! See `rust/DESIGN.md` for the architecture (actor topology, the
+//! zero-allocation ingest hot path, module layout) and `BENCH_ingest.json`
+//! at the repo root for the tracked ingest-path measurements.
 pub mod actor;
 pub mod baseline;
 pub mod benchlib;

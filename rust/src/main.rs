@@ -14,6 +14,7 @@
 use alertmix::config::AlertMixConfig;
 use alertmix::metrics::chart;
 use alertmix::pipeline;
+use alertmix::runtime::EnrichBackend as _;
 use alertmix::sim::HOUR;
 use alertmix::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -180,15 +181,23 @@ fn cmd_inspect(cfg: AlertMixConfig) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_selftest() -> Result<()> {
     println!("pjrt platform: {}", alertmix::runtime::pjrt_cpu_available()?);
     let mut enricher = alertmix::runtime::XlaEnricher::load_default()?;
-    use alertmix::runtime::EnrichBackend;
-    let feats = vec![[0.5f32; alertmix::text::FEATURE_DIM]; 8];
-    let out = enricher.enrich_batch(&feats)?;
+    let feats = vec![0.5f32; 8 * alertmix::text::FEATURE_DIM];
+    let out = enricher.enrich_batch(&feats, 8)?;
     println!("enriched {} items; scores[0] = {:?}", out.len(), out[0].scores);
     println!("selftest OK");
     Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_selftest() -> Result<()> {
+    bail!(
+        "selftest exercises the PJRT backend — vendor the `xla` crate (see the \
+         commented dependency in rust/Cargo.toml) and rebuild with `--features xla`"
+    )
 }
 
 fn main() -> Result<()> {

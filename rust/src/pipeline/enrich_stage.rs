@@ -5,8 +5,13 @@
 //! ("more intensive text analytics on the streaming data and still
 //! maintaining the real-time efficiency") — implemented as a first-class
 //! stage whose compute is the L1 Pallas kernel behind PJRT.
+//!
+//! Input arrives as one columnar [`EnrichBatch`] per worker poll; the rows
+//! are appended into the shared `Batcher` staging area and the drained
+//! buffers go back to the `World` pool, keeping the steady-state path
+//! allocation-free.
 
-use super::messages::{EnrichRequest, EnrichTick};
+use super::messages::{EnrichBatch, EnrichTick};
 use super::world::World;
 use crate::actor::{Actor, ActorResult, Ctx, Msg};
 
@@ -15,9 +20,9 @@ pub struct EnrichStage;
 impl Actor<World> for EnrichStage {
     fn receive(&mut self, ctx: &mut Ctx, world: &mut World, msg: Msg) -> ActorResult {
         let now = ctx.now();
-        match msg.downcast::<EnrichRequest>() {
-            Ok(req) => {
-                let cost = world.enrich_push(now, req.meta, req.features);
+        match msg.downcast::<EnrichBatch>() {
+            Ok(batch) => {
+                let cost = world.enrich_push_batch(now, *batch);
                 ctx.take(cost);
                 Ok(())
             }
@@ -38,21 +43,27 @@ mod tests {
     use crate::actor::{ActorSystem, MailboxKind};
     use crate::config::AlertMixConfig;
     use crate::pipeline::messages::ItemMeta;
-    use crate::text::{featurize_item, FEATURE_DIM};
+    use crate::text::{featurize_item_into, FEATURE_DIM};
 
-    fn req(doc_id: u64, title: &str) -> EnrichRequest {
-        EnrichRequest {
-            meta: ItemMeta {
+    /// Build a single-item batch (the per-item shape the workers used to
+    /// send; still valid — a poll can return one item).
+    fn batch_of(items: &[(u64, &str)]) -> EnrichBatch {
+        let mut metas = Vec::new();
+        let mut features = Vec::new();
+        for &(doc_id, title) in items {
+            let body = format!("body of {title} with more words");
+            featurize_item_into(title, &body, &mut features);
+            metas.push(ItemMeta {
                 doc_id,
                 stream_id: 1,
                 guid: format!("g{doc_id}"),
                 title: title.to_string(),
-                body: format!("body of {title} with more words"),
+                body,
                 url: format!("http://x/{doc_id}"),
                 published_ms: 0,
-            },
-            features: Box::new(featurize_item(title, "body")),
+            });
         }
+        EnrichBatch { metas, features }
     }
 
     #[test]
@@ -62,9 +73,11 @@ mod tests {
         cfg.enrich_batch = 4;
         let mut w = World::build(&cfg).unwrap();
         let stage = sys.spawn("e", MailboxKind::Unbounded, Box::new(|_| Box::new(EnrichStage)));
-        for i in 0..4 {
-            sys.tell(stage, req(i + 1, &format!("unique headline number {i} about topic {i}")));
-        }
+        let items: Vec<(u64, String)> = (0..4)
+            .map(|i| (i + 1, format!("unique headline number {i} about topic {i}")))
+            .collect();
+        let refs: Vec<(u64, &str)> = items.iter().map(|(d, t)| (*d, t.as_str())).collect();
+        sys.tell(stage, batch_of(&refs));
         sys.run_to_idle(&mut w);
         w.sink.flush();
         assert_eq!(w.counters.enrich_batches, 1);
@@ -80,7 +93,7 @@ mod tests {
         cfg.enrich_max_wait = 100;
         let mut w = World::build(&cfg).unwrap();
         let stage = sys.spawn("e", MailboxKind::Unbounded, Box::new(|_| Box::new(EnrichStage)));
-        sys.tell(stage, req(1, "lonely item waits for the tick"));
+        sys.tell(stage, batch_of(&[(1, "lonely item waits for the tick")]));
         sys.tell_at(150, stage, EnrichTick);
         sys.run_to_idle(&mut w);
         assert_eq!(w.counters.enrich_batches, 1, "timeout must flush the partial batch");
@@ -95,11 +108,9 @@ mod tests {
         let mut w = World::build(&cfg).unwrap();
         let stage = sys.spawn("e", MailboxKind::Unbounded, Box::new(|_| Box::new(EnrichStage)));
         // Same guid twice (re-served item across polls).
-        let mut a = req(1, "the very same story");
-        a.meta.guid = "same-guid".into();
-        let mut b = req(2, "the very same story");
-        b.meta.guid = "same-guid".into();
-        sys.tell(stage, a);
+        let mut b = batch_of(&[(1, "the very same story"), (2, "the very same story")]);
+        b.metas[0].guid = "same-guid".into();
+        b.metas[1].guid = "same-guid".into();
         sys.tell(stage, b);
         sys.run_to_idle(&mut w);
         assert_eq!(w.counters.items_ingested, 1);
@@ -115,34 +126,30 @@ mod tests {
         let mut w = World::build(&cfg).unwrap();
         let stage = sys.spawn("e", MailboxKind::Unbounded, Box::new(|_| Box::new(EnrichStage)));
         let base = "markets approve rate cut amid protests sources said the cut would affect markets through the quarter";
-        let mut a = EnrichRequest {
-            meta: ItemMeta {
-                doc_id: 1,
-                stream_id: 1,
-                guid: "g-a".into(),
-                title: base.to_string(),
-                body: base.to_string(),
-                url: "http://f1/a".into(),
-                published_ms: 0,
-            },
-            features: Box::new(featurize_item(base, base)),
-        };
         let rewritten = format!("{base} via wire desk");
-        let b = EnrichRequest {
-            meta: ItemMeta {
-                doc_id: 2,
-                stream_id: 2,
-                guid: "g-b".into(),
-                title: rewritten.clone(),
-                body: rewritten.clone(),
-                url: "http://f2/b".into(),
-                published_ms: 0,
-            },
-            features: Box::new(featurize_item(&rewritten, &rewritten)),
-        };
-        a.meta.guid = "g-a".into();
-        sys.tell(stage, a);
-        sys.tell(stage, b);
+        let mut metas = Vec::new();
+        let mut features = Vec::new();
+        featurize_item_into(base, base, &mut features);
+        metas.push(ItemMeta {
+            doc_id: 1,
+            stream_id: 1,
+            guid: "g-a".into(),
+            title: base.to_string(),
+            body: base.to_string(),
+            url: "http://f1/a".into(),
+            published_ms: 0,
+        });
+        featurize_item_into(&rewritten, &rewritten, &mut features);
+        metas.push(ItemMeta {
+            doc_id: 2,
+            stream_id: 2,
+            guid: "g-b".into(),
+            title: rewritten.clone(),
+            body: rewritten.clone(),
+            url: "http://f2/b".into(),
+            published_ms: 0,
+        });
+        sys.tell(stage, EnrichBatch { metas, features });
         sys.run_to_idle(&mut w);
         assert_eq!(
             (w.counters.items_ingested, w.counters.items_deduped),
@@ -150,5 +157,23 @@ mod tests {
             "wire rewrite should near-dup against the original"
         );
         let _ = FEATURE_DIM;
+    }
+
+    #[test]
+    fn drained_buffers_are_recycled_to_the_pool() {
+        let mut sys: ActorSystem<World> = ActorSystem::new(1);
+        let mut cfg = AlertMixConfig::tiny();
+        cfg.enrich_batch = 2;
+        let mut w = World::build(&cfg).unwrap();
+        let stage = sys.spawn("e", MailboxKind::Unbounded, Box::new(|_| Box::new(EnrichStage)));
+        sys.tell(stage, batch_of(&[(1, "first story here"), (2, "second story there")]));
+        sys.run_to_idle(&mut w);
+        assert_eq!(w.enrich_pool.pooled(), 1, "stage recycles drained buffers");
+        // The next acquire reuses the recycled pair instead of allocating.
+        let (m, f) = w.enrich_pool.acquire();
+        assert!(m.is_empty() && f.is_empty());
+        assert!(f.capacity() >= 2 * FEATURE_DIM, "capacity survives recycling");
+        assert_eq!(w.enrich_pool.reuses, 1);
+        w.enrich_pool.recycle(m, f);
     }
 }

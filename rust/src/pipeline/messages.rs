@@ -3,7 +3,6 @@
 use crate::sim::SimTime;
 use crate::sqs::ReceiptHandle;
 use crate::store::streams::PollOutcome;
-use crate::text::FEATURE_DIM;
 
 /// Timer: StreamsPicker cadence (the 5-second "Cron").
 pub struct PickDue;
@@ -43,11 +42,26 @@ pub struct StreamPolled {
     pub last_modified: Option<SimTime>,
 }
 
-/// Worker -> EnrichStage: one fetched item, featurized and ready for the
-/// XLA enricher.
-pub struct EnrichRequest {
-    pub meta: ItemMeta,
-    pub features: Box<[f32; FEATURE_DIM]>,
+/// Worker -> EnrichStage: every item fetched by one poll, featurized into
+/// a columnar buffer — one message per poll instead of one boxed request
+/// per item. Row i of `features` (at `[i*FEATURE_DIM, (i+1)*FEATURE_DIM)`)
+/// belongs to `metas[i]`. Both buffers come from the `World` enrich-buffer
+/// pool and are recycled by the EnrichStage once drained, so steady state
+/// reuses capacity instead of reallocating.
+pub struct EnrichBatch {
+    pub metas: Vec<ItemMeta>,
+    /// Row-major feature matrix: `metas.len() * FEATURE_DIM` floats.
+    pub features: Vec<f32>,
+}
+
+impl EnrichBatch {
+    pub fn len(&self) -> usize {
+        self.metas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metas.is_empty()
+    }
 }
 
 /// Everything the sink needs once enrichment scores/signature arrive.

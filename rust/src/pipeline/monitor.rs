@@ -23,7 +23,7 @@ impl Actor<World> for DeadLettersMonitor {
         let recent = world.dead_letters.borrow().since(now.saturating_sub(window));
         if recent > 0 {
             world.metrics.count("DeadLetters", now, recent as f64);
-            log::warn!("dead letters in last {window}ms: {recent}");
+            eprintln!("alertmix: dead letters in last {window}ms: {recent}");
         }
         // Also surface backlog and in-flight gauges for the dashboards.
         world.metrics.gauge("JobsInFlight", now, world.counters.jobs_in_flight() as f64);

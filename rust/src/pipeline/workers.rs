@@ -6,17 +6,19 @@
 //!
 //! News/CustomRSS workers fetch + parse real RSS XML through the simulated
 //! HTTP layer; Facebook/Twitter workers call the simulated platform APIs.
-//! Every fetched item is featurized (shared FNV/log1p contract) and handed
-//! to the EnrichStage for batched XLA enrichment; the poll outcome goes to
-//! the StreamsUpdater which adapts the schedule and acks SQS.
+//! Every fetched item is featurized (shared FNV/log1p contract) directly
+//! into a pooled columnar buffer and the whole poll is shipped to the
+//! EnrichStage as one `EnrichBatch` — no per-item message, no per-item
+//! boxed feature array. The poll outcome goes to the StreamsUpdater which
+//! adapts the schedule and acks SQS.
 
-use super::messages::{EnrichRequest, FeedJob, ItemMeta, StreamPolled};
+use super::messages::{EnrichBatch, FeedJob, ItemMeta, StreamPolled};
 use super::world::World;
 use crate::actor::{Actor, ActorError, ActorResult, Ctx, Msg};
 use crate::feedsim::{Conditional, HttpStatus, Platform, SocialResult};
 use crate::sim::SimTime;
 use crate::store::streams::{Channel, PollOutcome};
-use crate::text::featurize_item;
+use crate::text::featurize_item_into;
 
 pub struct ChannelWorker {
     pub channel: Channel,
@@ -64,25 +66,25 @@ impl ChannelWorker {
                 };
                 let n = parsed.items.len() as u32;
                 let enrich_stage = world.handles().enrich_stage;
+                let (mut metas, mut features) = world.enrich_pool.acquire();
                 for item in parsed.items {
                     let doc_id = world.doc_ids.next();
                     world.counters.items_fetched += 1;
-                    let features = Box::new(featurize_item(&item.title, &item.description));
-                    ctx.send(
-                        enrich_stage,
-                        EnrichRequest {
-                            meta: ItemMeta {
-                                doc_id,
-                                stream_id,
-                                guid: item.guid,
-                                title: item.title,
-                                body: item.description,
-                                url: item.link,
-                                published_ms: item.pub_ms,
-                            },
-                            features,
-                        },
-                    );
+                    featurize_item_into(&item.title, &item.description, &mut features);
+                    metas.push(ItemMeta {
+                        doc_id,
+                        stream_id,
+                        guid: item.guid,
+                        title: item.title,
+                        body: item.description,
+                        url: item.link,
+                        published_ms: item.pub_ms,
+                    });
+                }
+                if metas.is_empty() {
+                    world.enrich_pool.recycle(metas, features);
+                } else {
+                    ctx.send(enrich_stage, EnrichBatch { metas, features });
                 }
                 (PollOutcome::Items(n), resp.etag, resp.last_modified)
             }
@@ -121,26 +123,26 @@ impl ChannelWorker {
                 ctx.take(latency_ms);
                 let n = posts.len() as u32;
                 let enrich_stage = world.handles().enrich_stage;
+                let (mut metas, mut features) = world.enrich_pool.acquire();
                 for post in posts {
                     let doc_id = world.doc_ids.next();
                     world.counters.items_fetched += 1;
                     let it = post.item;
-                    let features = Box::new(featurize_item(&it.title, &it.body));
-                    ctx.send(
-                        enrich_stage,
-                        EnrichRequest {
-                            meta: ItemMeta {
-                                doc_id,
-                                stream_id,
-                                guid: it.guid,
-                                title: it.title,
-                                body: it.body,
-                                url: it.link,
-                                published_ms: it.pub_ms,
-                            },
-                            features,
-                        },
-                    );
+                    featurize_item_into(&it.title, &it.body, &mut features);
+                    metas.push(ItemMeta {
+                        doc_id,
+                        stream_id,
+                        guid: it.guid,
+                        title: it.title,
+                        body: it.body,
+                        url: it.link,
+                        published_ms: it.pub_ms,
+                    });
+                }
+                if metas.is_empty() {
+                    world.enrich_pool.recycle(metas, features);
+                } else {
+                    ctx.send(enrich_stage, EnrichBatch { metas, features });
                 }
                 if n > 0 {
                     (PollOutcome::Items(n), None, Some(now))
@@ -196,6 +198,7 @@ mod tests {
     use crate::config::AlertMixConfig;
     use crate::pipeline::Handles;
     use crate::sim::DAY;
+    use crate::text::FEATURE_DIM;
 
     /// Wire a worker with capture actors for updater + enrich stage.
     fn setup(
@@ -225,8 +228,11 @@ mod tests {
         struct CaptureEnrich;
         impl Actor<World> for CaptureEnrich {
             fn receive(&mut self, _: &mut Ctx, w: &mut World, msg: Msg) -> ActorResult {
-                if msg.downcast::<EnrichRequest>().is_ok() {
-                    w.metrics.count("enrich-reqs", 0, 1.0);
+                if let Ok(batch) = msg.downcast::<EnrichBatch>() {
+                    // One columnar message per poll: rows align with metas.
+                    assert_eq!(batch.features.len(), batch.metas.len() * FEATURE_DIM);
+                    w.metrics.count("enrich-items", 0, batch.len() as f64);
+                    w.metrics.count("enrich-batches", 0, 1.0);
                 }
                 Ok(())
             }
@@ -277,11 +283,21 @@ mod tests {
         sys.tell_at(DAY, wk, job(id));
         sys.run_to_idle(&mut w);
         assert_eq!(w.counters.jobs_completed, 1);
-        // Either items (enrich reqs sent) or a 304/error — but reported.
+        // Either items (enrich batch sent) or a 304/error — but reported.
         let polled = w.counters.polls_ok + w.counters.polls_not_modified + w.counters.polls_error;
         assert_eq!(polled, 1);
         if w.counters.polls_ok == 1 {
-            assert!(w.metrics.get("enrich-reqs").is_some());
+            assert!(w.metrics.get("enrich-items").is_some());
+            assert_eq!(
+                w.metrics.get("enrich-items").unwrap().total(),
+                w.counters.items_fetched as f64,
+                "every fetched item rides in the poll's EnrichBatch"
+            );
+            assert_eq!(
+                w.metrics.get("enrich-batches").unwrap().total(),
+                1.0,
+                "one message per poll, not per item"
+            );
             assert!(w.counters.items_fetched > 0);
         }
     }

@@ -1,20 +1,19 @@
 //! The shared world: every substrate the actors operate on.
 
 use super::alerts::AlertBook;
-use super::messages::ItemMeta;
+use super::messages::{EnrichBatch, ItemMeta};
 use super::Handles;
 use crate::actor::DeadLetters;
 use crate::config::AlertMixConfig;
 use crate::dedup::{DedupVerdict, Deduper};
 use crate::feedsim::{FeedUniverse, HttpConfig, HttpSim, SocialConfig, SocialSim, UniverseConfig};
 use crate::metrics::MetricRegistry;
-use crate::runtime::{
-    Batcher, BatcherConfig, CpuFallbackEnricher, EnrichBackend, PendingItem, XlaEnricher,
-};
+use crate::runtime::{Batcher, BatcherConfig, CpuFallbackEnricher, EnrichBackend};
 use crate::sim::SimTime;
 use crate::sink::{ElasticLite, SinkDoc};
 use crate::sqs::{DualQueue, RedrivePolicy};
 use crate::store::streams::{StreamRecord, StreamStore};
+use crate::text::FEATURE_DIM;
 use crate::util::IdGen;
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -45,6 +44,50 @@ impl WorldCounters {
     }
 }
 
+/// Recycles the (metas, features) buffer pairs that ride in
+/// [`EnrichBatch`] messages: workers `acquire` a cleared pair per poll, the
+/// EnrichStage `recycle`s it once drained. Bounded so a burst can't pin
+/// unbounded memory; steady state reuses capacity instead of reallocating.
+#[derive(Default)]
+pub struct EnrichBufferPool {
+    free: Vec<(Vec<ItemMeta>, Vec<f32>)>,
+    /// Total acquires (pool hits + fresh allocations).
+    pub acquires: u64,
+    /// Acquires served from the pool (steady state: acquires == reuses).
+    pub reuses: u64,
+}
+
+impl EnrichBufferPool {
+    /// Max pooled pairs: enough for every in-flight poll of a full worker
+    /// complement without letting a burst pin memory forever.
+    const MAX_POOLED: usize = 64;
+
+    pub fn acquire(&mut self) -> (Vec<ItemMeta>, Vec<f32>) {
+        self.acquires += 1;
+        match self.free.pop() {
+            Some(pair) => {
+                self.reuses += 1;
+                pair
+            }
+            None => (Vec::new(), Vec::new()),
+        }
+    }
+
+    pub fn recycle(&mut self, mut metas: Vec<ItemMeta>, mut features: Vec<f32>) {
+        if self.free.len() >= Self::MAX_POOLED {
+            return; // drop: let the burst overflow deallocate
+        }
+        metas.clear();
+        features.clear();
+        self.free.push((metas, features));
+    }
+
+    /// Pairs currently waiting in the pool.
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
 /// The substrate bundle threaded through every actor handler.
 pub struct World {
     pub cfg: AlertMixConfig,
@@ -58,6 +101,8 @@ pub struct World {
     pub metrics: MetricRegistry,
     pub enricher: Box<dyn EnrichBackend>,
     pub batcher: Batcher,
+    /// Recycled buffers for worker -> EnrichStage batches.
+    pub enrich_pool: EnrichBufferPool,
     /// ticket -> item metadata for in-flight enrichment requests.
     pub pending_items: HashMap<u64, ItemMeta>,
     pub doc_ids: IdGen,
@@ -109,7 +154,7 @@ impl World {
         }
 
         let enricher: Box<dyn EnrichBackend> = if cfg.use_xla {
-            Box::new(XlaEnricher::load_default()?)
+            crate::runtime::load_xla_backend()?
         } else {
             Box::new(CpuFallbackEnricher::new(cfg.enrich_batch))
         };
@@ -134,6 +179,7 @@ impl World {
                 batch_size: cfg.enrich_batch,
                 max_wait_ms: cfg.enrich_max_wait,
             }),
+            enrich_pool: EnrichBufferPool::default(),
             pending_items: HashMap::new(),
             doc_ids: IdGen::new(),
             alerts: AlertBook::new(),
@@ -148,57 +194,65 @@ impl World {
         self.handles.as_ref().expect("bootstrap sets handles")
     }
 
-    /// Queue an item for enrichment; returns the virtual cost (ms) if a
-    /// full batch was processed inline.
-    pub fn enrich_push(&mut self, now: SimTime, meta: ItemMeta, features: Box<[f32; 256]>) -> SimTime {
-        let ticket = meta.doc_id;
-        self.pending_items.insert(ticket, meta);
-        if let Some(batch) = self.batcher.push(PendingItem {
-            ticket,
-            features: *features,
-            enqueued_at: now,
-        }) {
-            self.process_enriched_batch(now, batch)
+    /// Queue one poll's worth of featurized items for enrichment and
+    /// recycle the batch buffers. Returns the virtual cost (ms) of any
+    /// full batches processed inline.
+    pub fn enrich_push_batch(&mut self, now: SimTime, batch: EnrichBatch) -> SimTime {
+        let EnrichBatch { mut metas, mut features } = batch;
+        let mut cost = 0;
+        for (i, meta) in metas.drain(..).enumerate() {
+            let ticket = meta.doc_id;
+            self.pending_items.insert(ticket, meta);
+            let row = &features[i * FEATURE_DIM..(i + 1) * FEATURE_DIM];
+            if self.batcher.push_row(ticket, row, now) {
+                cost += self.process_staged(now);
+            }
+        }
+        features.clear();
+        self.enrich_pool.recycle(metas, features);
+        cost
+    }
+
+    /// Timeout-flush hook for the EnrichTick timer.
+    pub fn enrich_poll_timeout(&mut self, now: SimTime) -> SimTime {
+        if self.batcher.poll_timeout(now) {
+            self.process_staged(now)
         } else {
             0
         }
     }
 
-    /// Timeout-flush hook for the EnrichTick timer.
-    pub fn enrich_poll_timeout(&mut self, now: SimTime) -> SimTime {
-        match self.batcher.poll_timeout(now) {
-            Some(batch) => self.process_enriched_batch(now, batch),
-            None => 0,
-        }
-    }
-
     /// End-of-run drain.
     pub fn flush_enrichment(&mut self, now: SimTime) {
-        while let Some(batch) = self.batcher.flush() {
-            self.process_enriched_batch(now, batch);
+        while self.batcher.flush() {
+            self.process_staged(now);
         }
     }
 
-    /// Run one batch through the XLA enricher, then dedup + sink.
-    /// Returns the modeled virtual cost of the batch.
-    fn process_enriched_batch(&mut self, now: SimTime, batch: Vec<PendingItem>) -> SimTime {
-        if batch.is_empty() {
+    /// Run the staged columnar batch through the enricher, then dedup +
+    /// sink, and clear the staging area (keeping its capacity). Returns
+    /// the modeled virtual cost of the batch.
+    fn process_staged(&mut self, now: SimTime) -> SimTime {
+        let n = self.batcher.staged_len();
+        if n == 0 {
             return 0;
         }
-        let feats: Vec<[f32; 256]> = batch.iter().map(|p| p.features).collect();
-        let enriched = match self.enricher.enrich_batch(&feats) {
+        let enriched = match self.enricher.enrich_batch(self.batcher.staged_features(), n) {
             Ok(e) => e,
             Err(err) => {
-                log::error!("enrichment failed, dropping batch: {err}");
-                for p in &batch {
-                    self.pending_items.remove(&p.ticket);
+                eprintln!("alertmix: enrichment failed, dropping batch: {err}");
+                for i in 0..n {
+                    let ticket = self.batcher.staged_tickets()[i];
+                    self.pending_items.remove(&ticket);
                 }
+                self.batcher.clear_staged();
                 return 0;
             }
         };
         self.counters.enrich_batches += 1;
-        for (p, e) in batch.iter().zip(enriched) {
-            let Some(meta) = self.pending_items.remove(&p.ticket) else { continue };
+        for (i, e) in enriched.iter().enumerate() {
+            let ticket = self.batcher.staged_tickets()[i];
+            let Some(meta) = self.pending_items.remove(&ticket) else { continue };
             match self.dedup.check_and_insert(&meta.guid, &meta.url, e.simhash, meta.doc_id) {
                 DedupVerdict::Fresh => {
                     let doc = SinkDoc {
@@ -210,7 +264,7 @@ impl World {
                         url: meta.url,
                         published_ms: meta.published_ms,
                         ingested_ms: now,
-                        scores: e.scores,
+                        scores: e.scores.clone(),
                         simhash: e.simhash,
                     };
                     // Real-time alerting on the fresh item (AlertMix!).
@@ -228,7 +282,8 @@ impl World {
                 }
             }
         }
+        self.batcher.clear_staged();
         // Virtual cost model: dispatch overhead + per-item compute.
-        1 + batch.len() as SimTime / 16
+        1 + n as SimTime / 16
     }
 }

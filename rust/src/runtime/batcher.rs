@@ -6,18 +6,18 @@
 //! `max_wait_ms` — the same size-or-timeout policy the FeedRouter uses for
 //! SQS, applied at the compute layer. Padding waste is tracked so the
 //! perf bench can report effective MXU utilization per policy.
+//!
+//! Layout is **columnar**: one reusable `Vec<f32>` staging area with row i
+//! at `features[i*FEATURE_DIM..(i+1)*FEATURE_DIM]`, plus parallel ticket /
+//! enqueue-time columns. Rows are appended in place and a flush hands out
+//! `&[f32]` views over the staged data — no `Vec<PendingItem>` and no
+//! per-row copy on flush. The caller drains the staged batch
+//! ([`Batcher::staged_features`] / [`Batcher::staged_tickets`]) and then
+//! calls [`Batcher::clear_staged`], which keeps the capacity for reuse, so
+//! steady state allocates nothing.
 
 use crate::sim::SimTime;
 use crate::text::FEATURE_DIM;
-
-/// An item waiting for enrichment, with an opaque ticket the caller uses
-/// to route results back (e.g. a doc id).
-#[derive(Debug, Clone)]
-pub struct PendingItem {
-    pub ticket: u64,
-    pub features: [f32; FEATURE_DIM],
-    pub enqueued_at: SimTime,
-}
 
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
@@ -33,10 +33,16 @@ impl Default for BatcherConfig {
     }
 }
 
-/// Accumulates items into executable-width batches.
+/// Accumulates feature rows into executable-width columnar batches.
 pub struct Batcher {
     cfg: BatcherConfig,
-    pending: Vec<PendingItem>,
+    /// Opaque per-row tickets the caller uses to route results back
+    /// (e.g. doc ids), in arrival order.
+    tickets: Vec<u64>,
+    /// Arrival time of each staged row (same order as `tickets`).
+    enqueued_at: Vec<SimTime>,
+    /// Columnar staging area: row i at `[i*FEATURE_DIM, (i+1)*FEATURE_DIM)`.
+    features: Vec<f32>,
     pub flushes_full: u64,
     pub flushes_timeout: u64,
     pub items_in: u64,
@@ -46,8 +52,11 @@ pub struct Batcher {
 
 impl Batcher {
     pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(cfg.batch_size > 0, "batch_size must be >= 1");
         Batcher {
-            pending: Vec::with_capacity(cfg.batch_size),
+            tickets: Vec::with_capacity(cfg.batch_size),
+            enqueued_at: Vec::with_capacity(cfg.batch_size),
+            features: Vec::with_capacity(cfg.batch_size * FEATURE_DIM),
             cfg,
             flushes_full: 0,
             flushes_timeout: 0,
@@ -57,51 +66,84 @@ impl Batcher {
     }
 
     pub fn len(&self) -> usize {
-        self.pending.len()
+        self.tickets.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.pending.is_empty()
+        self.tickets.is_empty()
     }
 
-    /// Add an item; returns a full batch if this item filled it.
-    pub fn push(&mut self, item: PendingItem) -> Option<Vec<PendingItem>> {
+    /// Append one feature row. Returns `true` when this row filled the
+    /// batch: the caller must then drain the staged views and call
+    /// [`Batcher::clear_staged`] before pushing again.
+    pub fn push_row(&mut self, ticket: u64, row: &[f32], now: SimTime) -> bool {
+        debug_assert_eq!(row.len(), FEATURE_DIM);
+        assert!(
+            self.tickets.len() < self.cfg.batch_size,
+            "staged batch not drained before push"
+        );
         self.items_in += 1;
-        self.pending.push(item);
-        if self.pending.len() >= self.cfg.batch_size {
+        self.tickets.push(ticket);
+        self.enqueued_at.push(now);
+        self.features.extend_from_slice(row);
+        if self.tickets.len() >= self.cfg.batch_size {
             self.flushes_full += 1;
-            Some(std::mem::take(&mut self.pending))
+            true
         } else {
-            None
+            false
         }
     }
 
-    /// Time-based flush: returns the partial batch if the oldest item has
-    /// exceeded its wait budget (call this from a periodic tick).
-    pub fn poll_timeout(&mut self, now: SimTime) -> Option<Vec<PendingItem>> {
-        let oldest = self.pending.first()?.enqueued_at;
+    /// Time-based flush: returns `true` (batch ready to drain) if the
+    /// oldest staged row has exceeded its wait budget (call this from a
+    /// periodic tick).
+    pub fn poll_timeout(&mut self, now: SimTime) -> bool {
+        let Some(&oldest) = self.enqueued_at.first() else { return false };
         if now.saturating_sub(oldest) >= self.cfg.max_wait_ms {
             self.flushes_timeout += 1;
-            self.padding_waste += (self.cfg.batch_size - self.pending.len()) as u64;
-            Some(std::mem::take(&mut self.pending))
+            self.padding_waste += (self.cfg.batch_size - self.tickets.len()) as u64;
+            true
         } else {
-            None
+            false
         }
     }
 
-    /// Unconditional flush (shutdown / end of run).
-    pub fn flush(&mut self) -> Option<Vec<PendingItem>> {
-        if self.pending.is_empty() {
-            None
+    /// Unconditional flush (shutdown / end of run): `true` if rows are
+    /// staged and ready to drain.
+    pub fn flush(&mut self) -> bool {
+        if self.tickets.is_empty() {
+            false
         } else {
-            self.padding_waste += (self.cfg.batch_size - self.pending.len()) as u64;
-            Some(std::mem::take(&mut self.pending))
+            self.padding_waste += (self.cfg.batch_size - self.tickets.len()) as u64;
+            true
         }
+    }
+
+    /// Number of staged rows awaiting drain.
+    pub fn staged_len(&self) -> usize {
+        self.tickets.len()
+    }
+
+    /// Staged tickets, in arrival order.
+    pub fn staged_tickets(&self) -> &[u64] {
+        &self.tickets
+    }
+
+    /// Staged feature rows, row-major (`staged_len() * FEATURE_DIM` floats).
+    pub fn staged_features(&self) -> &[f32] {
+        &self.features
+    }
+
+    /// Drop the staged batch, keeping all capacity for reuse.
+    pub fn clear_staged(&mut self) {
+        self.tickets.clear();
+        self.enqueued_at.clear();
+        self.features.clear();
     }
 
     /// Deadline of the oldest pending item (for scheduling the next tick).
     pub fn next_deadline(&self) -> Option<SimTime> {
-        self.pending.first().map(|p| p.enqueued_at + self.cfg.max_wait_ms)
+        self.enqueued_at.first().map(|&t| t + self.cfg.max_wait_ms)
     }
 
     pub fn config(&self) -> &BatcherConfig {
@@ -113,17 +155,19 @@ impl Batcher {
 mod tests {
     use super::*;
 
-    fn item(ticket: u64, at: SimTime) -> PendingItem {
-        PendingItem { ticket, features: [0.0; FEATURE_DIM], enqueued_at: at }
+    fn push(b: &mut Batcher, ticket: u64, at: SimTime) -> bool {
+        b.push_row(ticket, &[0.0; FEATURE_DIM], at)
     }
 
     #[test]
     fn flushes_when_full() {
         let mut b = Batcher::new(BatcherConfig { batch_size: 3, max_wait_ms: 100 });
-        assert!(b.push(item(1, 0)).is_none());
-        assert!(b.push(item(2, 0)).is_none());
-        let batch = b.push(item(3, 0)).unwrap();
-        assert_eq!(batch.len(), 3);
+        assert!(!push(&mut b, 1, 0));
+        assert!(!push(&mut b, 2, 0));
+        assert!(push(&mut b, 3, 0));
+        assert_eq!(b.staged_len(), 3);
+        assert_eq!(b.staged_features().len(), 3 * FEATURE_DIM);
+        b.clear_staged();
         assert!(b.is_empty());
         assert_eq!(b.flushes_full, 1);
     }
@@ -131,11 +175,12 @@ mod tests {
     #[test]
     fn timeout_flush_partial() {
         let mut b = Batcher::new(BatcherConfig { batch_size: 10, max_wait_ms: 100 });
-        b.push(item(1, 50));
-        b.push(item(2, 80));
-        assert!(b.poll_timeout(100).is_none(), "oldest waited only 50");
-        let batch = b.poll_timeout(150).unwrap();
-        assert_eq!(batch.len(), 2);
+        push(&mut b, 1, 50);
+        push(&mut b, 2, 80);
+        assert!(!b.poll_timeout(100), "oldest waited only 50");
+        assert!(b.poll_timeout(150));
+        assert_eq!(b.staged_len(), 2);
+        b.clear_staged();
         assert_eq!(b.flushes_timeout, 1);
         assert_eq!(b.padding_waste, 8);
     }
@@ -144,28 +189,76 @@ mod tests {
     fn next_deadline_tracks_oldest() {
         let mut b = Batcher::new(BatcherConfig { batch_size: 10, max_wait_ms: 100 });
         assert_eq!(b.next_deadline(), None);
-        b.push(item(1, 42));
-        b.push(item(2, 50));
+        push(&mut b, 1, 42);
+        push(&mut b, 2, 50);
         assert_eq!(b.next_deadline(), Some(142));
     }
 
     #[test]
     fn manual_flush_counts_padding() {
         let mut b = Batcher::new(BatcherConfig { batch_size: 4, max_wait_ms: 100 });
-        b.push(item(1, 0));
-        let batch = b.flush().unwrap();
-        assert_eq!(batch.len(), 1);
+        push(&mut b, 1, 0);
+        assert!(b.flush());
+        assert_eq!(b.staged_len(), 1);
+        b.clear_staged();
         assert_eq!(b.padding_waste, 3);
-        assert!(b.flush().is_none());
+        assert!(!b.flush());
     }
 
     #[test]
     fn tickets_preserved_in_order() {
         let mut b = Batcher::new(BatcherConfig { batch_size: 3, max_wait_ms: 100 });
-        b.push(item(7, 0));
-        b.push(item(8, 0));
-        let batch = b.push(item(9, 0)).unwrap();
-        let tickets: Vec<u64> = batch.iter().map(|p| p.ticket).collect();
-        assert_eq!(tickets, vec![7, 8, 9]);
+        push(&mut b, 7, 0);
+        push(&mut b, 8, 0);
+        assert!(push(&mut b, 9, 0));
+        assert_eq!(b.staged_tickets(), &[7, 8, 9]);
+    }
+
+    /// Regression guard for the columnar refactor: flush order (row i of
+    /// the staged features belongs to ticket i), `padding_waste`, and the
+    /// flush counters must behave exactly as the row-struct batcher did.
+    #[test]
+    fn columnar_layout_preserves_flush_order_and_accounting() {
+        let mut b = Batcher::new(BatcherConfig { batch_size: 4, max_wait_ms: 100 });
+        let mut drained: Vec<(u64, f32)> = Vec::new();
+        for i in 0..10u64 {
+            let mut row = [0.0f32; FEATURE_DIM];
+            row[0] = i as f32; // tag the row so order is observable
+            if b.push_row(100 + i, &row, i) {
+                for (j, &t) in b.staged_tickets().iter().enumerate() {
+                    drained.push((t, b.staged_features()[j * FEATURE_DIM]));
+                }
+                b.clear_staged();
+            }
+        }
+        // Two full flushes (8 rows), two rows left staged.
+        assert_eq!(b.flushes_full, 2);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.items_in, 10);
+        assert_eq!(b.padding_waste, 0, "full flushes pad nothing");
+        let want: Vec<(u64, f32)> = (0..8u64).map(|i| (100 + i, i as f32)).collect();
+        assert_eq!(drained, want, "rows drain in arrival order, ticket-aligned");
+        // Timeout flush of the remainder pads to batch width.
+        assert!(b.poll_timeout(1_000));
+        assert_eq!(b.staged_tickets(), &[108, 109]);
+        b.clear_staged();
+        assert_eq!(b.padding_waste, 2);
+        assert_eq!(b.flushes_timeout, 1);
+    }
+
+    /// Steady state must not allocate: capacities survive clear_staged.
+    #[test]
+    fn clear_staged_keeps_capacity() {
+        let mut b = Batcher::new(BatcherConfig { batch_size: 8, max_wait_ms: 100 });
+        for i in 0..8 {
+            push(&mut b, i, 0);
+        }
+        let cap = (b.tickets.capacity(), b.features.capacity());
+        b.clear_staged();
+        for i in 0..8 {
+            push(&mut b, i, 1);
+        }
+        assert_eq!((b.tickets.capacity(), b.features.capacity()), cap);
+        b.clear_staged();
     }
 }

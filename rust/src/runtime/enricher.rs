@@ -1,9 +1,23 @@
 //! The enrichment backend: XLA executable wrapper + CPU fallback.
+//!
+//! The batch interface is **columnar**: callers hand in a flat row-major
+//! `&[f32]` slice (straight from the `Batcher` staging area) and get back a
+//! `&[Enrichment]` view over the backend's reused output buffer. Both
+//! backends recycle their staging/output storage, so the steady-state hot
+//! path performs zero heap allocation per item.
+//!
+//! The `XlaEnricher` (PJRT) lives behind the `xla` cargo feature: offline
+//! and CI builds use the CPU fallback without linking the PJRT toolchain.
 
 use crate::text::FEATURE_DIM;
 use crate::util::hash::pack_sign_bits;
+use anyhow::{bail, Result};
+
+#[cfg(feature = "xla")]
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "xla")]
+use anyhow::{anyhow, Context};
+#[cfg(feature = "xla")]
 use std::path::Path;
 
 /// Output of enriching one item.
@@ -18,9 +32,11 @@ pub struct Enrichment {
 /// A batch enrichment backend. The pipeline is generic over this so tests
 /// can run without artifacts and benches can compare backends.
 pub trait EnrichBackend {
-    /// Enrich up to `batch_size()` feature vectors. Shorter slices are
-    /// padded internally.
-    fn enrich_batch(&mut self, feats: &[[f32; FEATURE_DIM]]) -> Result<Vec<Enrichment>>;
+    /// Enrich `n_rows` feature rows laid out row-major in `feats`
+    /// (`feats.len() == n_rows * FEATURE_DIM`; shorter batches are padded
+    /// internally). The returned slice aliases the backend's reused output
+    /// buffer and is valid until the next call.
+    fn enrich_batch(&mut self, feats: &[f32], n_rows: usize) -> Result<&[Enrichment]>;
 
     /// The compiled batch width.
     fn batch_size(&self) -> usize;
@@ -28,7 +44,18 @@ pub trait EnrichBackend {
     fn name(&self) -> &'static str;
 }
 
+/// Grow-only output buffer reuse shared by both backends: make sure `out`
+/// holds at least `n` entries with `n_scores`-wide score vectors, without
+/// ever shrinking (so per-call allocation stops once the compiled batch
+/// width has been seen).
+fn ensure_out(out: &mut Vec<Enrichment>, n: usize, n_scores: usize) {
+    while out.len() < n {
+        out.push(Enrichment { scores: vec![0.0; n_scores], simhash: 0 });
+    }
+}
+
 /// Artifact metadata (enricher.meta.json).
+#[cfg(feature = "xla")]
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
     pub batch: usize,
@@ -37,6 +64,7 @@ pub struct ArtifactMeta {
     pub sig_bits: usize,
 }
 
+#[cfg(feature = "xla")]
 impl ArtifactMeta {
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
@@ -58,15 +86,19 @@ impl ArtifactMeta {
 }
 
 /// The production backend: the AOT-compiled XLA executable.
+#[cfg(feature = "xla")]
 pub struct XlaEnricher {
     exe: xla::PjRtLoadedExecutable,
     meta: ArtifactMeta,
     /// Reused input staging buffer (avoids per-call allocation).
     staging: Vec<f32>,
+    /// Reused output buffer (see `EnrichBackend::enrich_batch`).
+    out: Vec<Enrichment>,
     pub executions: u64,
     pub items_enriched: u64,
 }
 
+#[cfg(feature = "xla")]
 impl XlaEnricher {
     /// Load + compile the artifact on the PJRT CPU client. Compilation
     /// happens once at startup; `enrich_batch` is the hot path.
@@ -89,7 +121,14 @@ impl XlaEnricher {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = client.compile(&comp)?;
         let staging = vec![0f32; meta.batch * meta.feature_dim];
-        Ok(XlaEnricher { exe, meta, staging, executions: 0, items_enriched: 0 })
+        Ok(XlaEnricher {
+            exe,
+            meta,
+            staging,
+            out: Vec::new(),
+            executions: 0,
+            items_enriched: 0,
+        })
     }
 
     /// Load from the default repo-relative artifact locations.
@@ -118,30 +157,33 @@ impl XlaEnricher {
     }
 }
 
+#[cfg(feature = "xla")]
 impl EnrichBackend for XlaEnricher {
-    fn enrich_batch(&mut self, feats: &[[f32; FEATURE_DIM]]) -> Result<Vec<Enrichment>> {
-        if feats.is_empty() {
-            return Ok(Vec::new());
+    fn enrich_batch(&mut self, feats: &[f32], n_rows: usize) -> Result<&[Enrichment]> {
+        if n_rows == 0 {
+            return Ok(&self.out[..0]);
         }
-        if feats.len() > self.meta.batch {
-            bail!("batch {} exceeds compiled width {}", feats.len(), self.meta.batch);
+        if n_rows > self.meta.batch {
+            bail!("batch {} exceeds compiled width {}", n_rows, self.meta.batch);
+        }
+        if feats.len() != n_rows * FEATURE_DIM {
+            bail!("feats len {} != {} rows x {FEATURE_DIM}", feats.len(), n_rows);
         }
         // Stage + zero-pad the tail.
-        for (i, f) in feats.iter().enumerate() {
-            self.staging[i * FEATURE_DIM..(i + 1) * FEATURE_DIM].copy_from_slice(f);
-        }
-        for v in &mut self.staging[feats.len() * FEATURE_DIM..] {
+        self.staging[..feats.len()].copy_from_slice(feats);
+        for v in &mut self.staging[feats.len()..] {
             *v = 0.0;
         }
-        let (scores, sig) = self.execute_padded(feats.len())?;
+        let (scores, sig) = self.execute_padded(n_rows)?;
         let ns = self.meta.num_scores;
         let nb = self.meta.sig_bits;
-        Ok((0..feats.len())
-            .map(|i| Enrichment {
-                scores: scores[i * ns..(i + 1) * ns].to_vec(),
-                simhash: pack_sign_bits(&sig[i * nb..(i + 1) * nb]),
-            })
-            .collect())
+        ensure_out(&mut self.out, n_rows, ns);
+        for (i, e) in self.out[..n_rows].iter_mut().enumerate() {
+            e.scores.clear();
+            e.scores.extend_from_slice(&scores[i * ns..(i + 1) * ns]);
+            e.simhash = pack_sign_bits(&sig[i * nb..(i + 1) * nb]);
+        }
+        Ok(&self.out[..n_rows])
     }
 
     fn batch_size(&self) -> usize {
@@ -161,6 +203,8 @@ pub struct CpuFallbackEnricher {
     batch: usize,
     /// FEATURE_DIM x 64 sign-projection matrix (seeded).
     proj: Vec<[f32; 64]>,
+    /// Reused output buffer (see `EnrichBackend::enrich_batch`).
+    out: Vec<Enrichment>,
     pub items_enriched: u64,
 }
 
@@ -176,32 +220,39 @@ impl CpuFallbackEnricher {
                 row
             })
             .collect();
-        CpuFallbackEnricher { batch, proj, items_enriched: 0 }
+        CpuFallbackEnricher { batch, proj, out: Vec::new(), items_enriched: 0 }
     }
 }
 
 impl EnrichBackend for CpuFallbackEnricher {
-    fn enrich_batch(&mut self, feats: &[[f32; FEATURE_DIM]]) -> Result<Vec<Enrichment>> {
-        let mut out = Vec::with_capacity(feats.len());
-        for f in feats {
+    fn enrich_batch(&mut self, feats: &[f32], n_rows: usize) -> Result<&[Enrichment]> {
+        if n_rows > self.batch {
+            bail!("batch {} exceeds compiled width {}", n_rows, self.batch);
+        }
+        if feats.len() != n_rows * FEATURE_DIM {
+            bail!("feats len {} != {} rows x {FEATURE_DIM}", feats.len(), n_rows);
+        }
+        ensure_out(&mut self.out, n_rows, 8);
+        for (r, e) in self.out[..n_rows].iter_mut().enumerate() {
+            let f = &feats[r * FEATURE_DIM..(r + 1) * FEATURE_DIM];
             let mut lanes = [0f32; 64];
             for (i, &x) in f.iter().enumerate() {
                 if x != 0.0 {
-                    let row = &self.proj[i];
-                    for (l, r) in lanes.iter_mut().zip(row) {
-                        *l += x * r;
+                    let proj_row = &self.proj[i];
+                    for (l, p) in lanes.iter_mut().zip(proj_row) {
+                        *l += x * p;
                     }
                 }
             }
             let energy: f32 = f.iter().map(|v| v * v).sum();
             let relevance = 1.0 / (1.0 + (-energy * 0.05).exp());
-            out.push(Enrichment {
-                scores: vec![relevance, 0.5, 0.1, 0.5, 0.5, 0.5, 0.5, 0.5],
-                simhash: pack_sign_bits(&lanes),
-            });
+            e.scores.clear();
+            e.scores
+                .extend_from_slice(&[relevance, 0.5, 0.1, 0.5, 0.5, 0.5, 0.5, 0.5]);
+            e.simhash = pack_sign_bits(&lanes);
         }
-        self.items_enriched += feats.len() as u64;
-        Ok(out)
+        self.items_enriched += n_rows as u64;
+        Ok(&self.out[..n_rows])
     }
 
     fn batch_size(&self) -> usize {
@@ -217,9 +268,9 @@ impl EnrichBackend for CpuFallbackEnricher {
 mod tests {
     use super::*;
 
-    fn feat(seed: u64) -> [f32; FEATURE_DIM] {
+    fn feat(seed: u64) -> Vec<f32> {
         let mut rng = crate::util::rng::Rng::new(seed);
-        let mut f = [0f32; FEATURE_DIM];
+        let mut f = vec![0f32; FEATURE_DIM];
         for v in f.iter_mut() {
             if rng.chance(0.2) {
                 *v = rng.next_f32() * 2.0;
@@ -232,8 +283,8 @@ mod tests {
     fn cpu_fallback_deterministic_and_packs() {
         let mut e = CpuFallbackEnricher::new(8);
         let f = feat(1);
-        let a = e.enrich_batch(&[f]).unwrap();
-        let b = e.enrich_batch(&[f]).unwrap();
+        let a = e.enrich_batch(&f, 1).unwrap().to_vec();
+        let b = e.enrich_batch(&f, 1).unwrap().to_vec();
         assert_eq!(a, b);
         assert_eq!(a[0].scores.len(), 8);
     }
@@ -242,10 +293,13 @@ mod tests {
     fn cpu_fallback_similar_features_close_sigs() {
         let mut e = CpuFallbackEnricher::new(8);
         let f1 = feat(2);
-        let mut f2 = f1;
+        let mut f2 = f1.clone();
         f2[3] += 0.01;
         let f3 = feat(99);
-        let out = e.enrich_batch(&[f1, f2, f3]).unwrap();
+        let mut flat = f1.clone();
+        flat.extend_from_slice(&f2);
+        flat.extend_from_slice(&f3);
+        let out = e.enrich_batch(&flat, 3).unwrap();
         let d12 = crate::util::hash::hamming(out[0].simhash, out[1].simhash);
         let d13 = crate::util::hash::hamming(out[0].simhash, out[2].simhash);
         assert!(d12 <= d13, "perturbed sig {d12} should be <= unrelated {d13}");
@@ -254,6 +308,26 @@ mod tests {
     #[test]
     fn empty_batch_is_empty() {
         let mut e = CpuFallbackEnricher::new(8);
-        assert!(e.enrich_batch(&[]).unwrap().is_empty());
+        assert!(e.enrich_batch(&[], 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_row_count_mismatch_and_oversize() {
+        let mut e = CpuFallbackEnricher::new(2);
+        assert!(e.enrich_batch(&[0.0; FEATURE_DIM], 2).is_err(), "len mismatch");
+        let flat = vec![0f32; 3 * FEATURE_DIM];
+        assert!(e.enrich_batch(&flat, 3).is_err(), "oversize batch");
+    }
+
+    #[test]
+    fn output_buffer_reused_across_calls() {
+        let mut e = CpuFallbackEnricher::new(8);
+        let full: Vec<f32> = (0..8).flat_map(|s| feat(s)).collect();
+        let want = e.enrich_batch(&full, 8).unwrap().to_vec();
+        // A smaller batch in between must not corrupt later full batches.
+        let one = feat(3);
+        e.enrich_batch(&one, 1).unwrap();
+        let again = e.enrich_batch(&full, 8).unwrap();
+        assert_eq!(again, &want[..]);
     }
 }

@@ -1,24 +1,49 @@
-//! PJRT runtime: load the AOT-compiled enrichment artifact and execute it
-//! on the request path.
+//! Enrichment runtime: columnar micro-batcher + pluggable batch backends.
 //!
-//! This is the only place the rust coordinator touches XLA. The artifact
+//! The production backend is the AOT-compiled enrichment artifact executed
+//! through XLA/PJRT (`XlaEnricher`, cargo feature `xla`). The artifact
 //! (`artifacts/enricher.hlo.txt`) is HLO *text* produced once by
 //! `python/compile/aot.py`; we parse it with `HloModuleProto::from_text_file`,
 //! compile it on the PJRT CPU client at startup, and from then on the hot
 //! path is a single `execute` per feature batch — python is never invoked.
+//!
+//! The `xla` feature is **off by default** so offline builds and CI run
+//! without the PJRT toolchain; the deterministic `CpuFallbackEnricher` is
+//! the default backend.
 
 mod batcher;
 mod enricher;
 
-pub use batcher::{Batcher, BatcherConfig, PendingItem};
-pub use enricher::{CpuFallbackEnricher, EnrichBackend, Enrichment, XlaEnricher};
+pub use batcher::{Batcher, BatcherConfig};
+pub use enricher::{CpuFallbackEnricher, EnrichBackend, Enrichment};
+#[cfg(feature = "xla")]
+pub use enricher::{ArtifactMeta, XlaEnricher};
 
 use anyhow::Result;
 
 /// Smoke check that the PJRT CPU client is available.
+#[cfg(feature = "xla")]
 pub fn pjrt_cpu_available() -> Result<String> {
     let client = xla::PjRtClient::cpu()?;
     Ok(client.platform_name())
+}
+
+/// Build the XLA/PJRT backend from the default artifact locations.
+/// With the `xla` feature disabled this reports how to enable it — callers
+/// (e.g. `World::build` with `use_xla: true`) surface the error.
+#[cfg(feature = "xla")]
+pub fn load_xla_backend() -> Result<Box<dyn EnrichBackend>> {
+    Ok(Box::new(XlaEnricher::load_default()?))
+}
+
+/// See the `xla`-enabled variant; this build has no PJRT backend.
+#[cfg(not(feature = "xla"))]
+pub fn load_xla_backend() -> Result<Box<dyn EnrichBackend>> {
+    anyhow::bail!(
+        "use_xla requires the PJRT backend: vendor the `xla` crate (see the \
+         commented dependency in rust/Cargo.toml) and build with `--features xla`, \
+         or set use_xla=false for the CPU fallback"
+    )
 }
 
 /// Default artifact locations relative to the repo root.
@@ -41,8 +66,16 @@ pub fn find_artifact(name: &str) -> Option<std::path::PathBuf> {
 mod tests {
     use super::*;
 
+    #[cfg(feature = "xla")]
     #[test]
     fn pjrt_cpu_is_available() {
         assert_eq!(pjrt_cpu_available().unwrap(), "cpu");
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn xla_backend_unavailable_without_feature() {
+        let err = load_xla_backend().unwrap_err().to_string();
+        assert!(err.contains("--features xla"), "{err}");
     }
 }

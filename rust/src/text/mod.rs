@@ -6,8 +6,20 @@
 //! The feature layout here MUST match `python/compile/model.py`
 //! (`FEATURE_DIM`, FNV-1a token hashing, log1p term-frequency weighting)
 //! — `python/tests/test_parity.py` pins that contract with golden vectors.
+//!
+//! Two implementations of the same contract live here:
+//!
+//! * [`featurize`] / [`featurize_item`] / [`featurize_item_into`] — the
+//!   streaming hot path: a single fold over the characters that hashes
+//!   lowercased UTF-8 bytes directly into an FNV-1a accumulator and bumps
+//!   the bucket count at each token boundary. No `Vec<String>`, no
+//!   per-token `String`, zero heap allocation.
+//! * [`featurize_reference`] / [`featurize_item_reference`] — the original
+//!   tokenize-then-hash implementation, kept as the parity guard (the
+//!   property test below asserts bit-identical output) and as the baseline
+//!   for `benches/bench_ingest.rs`.
 
-use crate::util::hash::fnv1a_str;
+use crate::util::hash::{fnv1a_step, fnv1a_str, FNV_OFFSET};
 
 /// Feature-vector width — must equal `model.FEATURE_DIM` on the python
 /// side (the AOT artifact is compiled for this shape).
@@ -20,7 +32,7 @@ pub fn tokenize(text: &str) -> Vec<String> {
     let mut cur = String::new();
     for c in text.chars() {
         if c.is_alphanumeric() {
-            // Lowercase may expand to multiple chars (ß → ss).
+            // Lowercase may expand to multiple chars (İ → i + combining dot).
             for lc in c.to_lowercase() {
                 cur.push(lc);
             }
@@ -44,13 +56,39 @@ pub fn token_bucket(token: &str) -> usize {
     (fnv1a_str(token) % FEATURE_DIM as u64) as usize
 }
 
-/// Hashed bag-of-words with log-scaled term frequency:
-/// `x[bucket] = ln(1 + count)`. Matches `ref.featurize` in python.
-pub fn featurize(text: &str) -> [f32; FEATURE_DIM] {
-    let mut counts = [0u32; FEATURE_DIM];
-    for tok in tokenize(text) {
-        counts[token_bucket(&tok)] += 1;
+/// Streaming tokenize-hash-count fold: the tokenizer and FNV-1a hash fused
+/// into one pass. Each alphanumeric char is lowercased and its UTF-8 bytes
+/// are folded straight into the running hash; at a token boundary the
+/// bucket count is bumped by `weight` iff the token spanned more than one
+/// byte (the same "drop single characters" rule as [`tokenize`], which
+/// compares `String::len`, i.e. bytes).
+fn accumulate_counts(text: &str, weight: u32, counts: &mut [u32; FEATURE_DIM]) {
+    let mut h: u64 = FNV_OFFSET;
+    let mut token_bytes: usize = 0;
+    for c in text.chars() {
+        if c.is_alphanumeric() {
+            for lc in c.to_lowercase() {
+                let mut buf = [0u8; 4];
+                for &b in lc.encode_utf8(&mut buf).as_bytes() {
+                    h = fnv1a_step(h, b);
+                }
+                token_bytes += lc.len_utf8();
+            }
+        } else {
+            if token_bytes > 1 {
+                counts[(h % FEATURE_DIM as u64) as usize] += weight;
+            }
+            h = FNV_OFFSET;
+            token_bytes = 0;
+        }
     }
+    if token_bytes > 1 {
+        counts[(h % FEATURE_DIM as u64) as usize] += weight;
+    }
+}
+
+#[inline]
+fn counts_to_features(counts: &[u32; FEATURE_DIM]) -> [f32; FEATURE_DIM] {
     let mut x = [0f32; FEATURE_DIM];
     for (i, &c) in counts.iter().enumerate() {
         if c > 0 {
@@ -60,9 +98,55 @@ pub fn featurize(text: &str) -> [f32; FEATURE_DIM] {
     x
 }
 
+/// Hashed bag-of-words with log-scaled term frequency:
+/// `x[bucket] = ln(1 + count)`. Matches `ref.featurize` in python.
+/// Streaming implementation — bit-identical to [`featurize_reference`].
+pub fn featurize(text: &str) -> [f32; FEATURE_DIM] {
+    let mut counts = [0u32; FEATURE_DIM];
+    accumulate_counts(text, 1, &mut counts);
+    counts_to_features(&counts)
+}
+
 /// Featurize title + body with the title counted twice (headline terms
 /// matter more) — mirrors the python `featurize_item`.
+/// Streaming implementation — bit-identical to [`featurize_item_reference`].
 pub fn featurize_item(title: &str, body: &str) -> [f32; FEATURE_DIM] {
+    let mut counts = [0u32; FEATURE_DIM];
+    accumulate_counts(title, 2, &mut counts);
+    accumulate_counts(body, 1, &mut counts);
+    counts_to_features(&counts)
+}
+
+/// Featurize title + body, appending one `FEATURE_DIM`-wide row to `out`.
+/// This is the hot-path entry used by the channel workers: `out` is a
+/// reusable columnar buffer (row i at `out[i*FEATURE_DIM..]`), so steady
+/// state re-polls featurize with zero heap allocation.
+pub fn featurize_item_into(title: &str, body: &str, out: &mut Vec<f32>) {
+    let mut counts = [0u32; FEATURE_DIM];
+    accumulate_counts(title, 2, &mut counts);
+    accumulate_counts(body, 1, &mut counts);
+    let start = out.len();
+    out.resize(start + FEATURE_DIM, 0.0);
+    let row = &mut out[start..];
+    for (i, &c) in counts.iter().enumerate() {
+        row[i] = if c > 0 { (1.0 + c as f32).ln() } else { 0.0 };
+    }
+}
+
+/// Original tokenize-then-hash implementation. Allocates a `String` per
+/// token; kept as the parity oracle for the streaming fold and as the
+/// baseline side of `bench_ingest`.
+pub fn featurize_reference(text: &str) -> [f32; FEATURE_DIM] {
+    let mut counts = [0u32; FEATURE_DIM];
+    for tok in tokenize(text) {
+        counts[token_bucket(&tok)] += 1;
+    }
+    counts_to_features(&counts)
+}
+
+/// Original title-double-weighted implementation (see
+/// [`featurize_reference`]).
+pub fn featurize_item_reference(title: &str, body: &str) -> [f32; FEATURE_DIM] {
     let mut counts = [0u32; FEATURE_DIM];
     for tok in tokenize(title) {
         counts[token_bucket(&tok)] += 2;
@@ -70,13 +154,7 @@ pub fn featurize_item(title: &str, body: &str) -> [f32; FEATURE_DIM] {
     for tok in tokenize(body) {
         counts[token_bucket(&tok)] += 1;
     }
-    let mut x = [0f32; FEATURE_DIM];
-    for (i, &c) in counts.iter().enumerate() {
-        if c > 0 {
-            x[i] = (1.0 + c as f32).ln();
-        }
-    }
-    x
+    counts_to_features(&counts)
 }
 
 #[cfg(test)]
@@ -122,6 +200,69 @@ mod tests {
         let b = featurize_item("", "storm");
         let bucket = token_bucket("storm");
         assert!(t[bucket] > b[bucket]);
+    }
+
+    #[test]
+    fn streaming_matches_reference_on_fixtures() {
+        for text in [
+            "",
+            "a",
+            "markets rally after surprise rate cut",
+            "rate-cut 2024: 3.5%",
+            "Économie française — l'union célèbre",
+            "Straße İstanbul ǅungla",      // multi-char / special lowercasing
+            "İİ İ ß ßß",                   // İ lowercases to 2 chars
+            "trailing token",
+            "  leading,,separators!!",
+        ] {
+            assert_eq!(featurize(text), featurize_reference(text), "text={text:?}");
+        }
+        assert_eq!(
+            featurize_item("Breaking: wildfire!", "Officials warn of drought."),
+            featurize_item_reference("Breaking: wildfire!", "Officials warn of drought.")
+        );
+    }
+
+    #[test]
+    fn featurize_item_into_appends_identical_rows() {
+        let mut buf = Vec::new();
+        featurize_item_into("storm warning", "officials brace for landfall", &mut buf);
+        featurize_item_into("markets rally", "surprise rate cut", &mut buf);
+        assert_eq!(buf.len(), 2 * FEATURE_DIM);
+        assert_eq!(
+            &buf[..FEATURE_DIM],
+            &featurize_item("storm warning", "officials brace for landfall")[..]
+        );
+        assert_eq!(
+            &buf[FEATURE_DIM..],
+            &featurize_item("markets rally", "surprise rate cut")[..]
+        );
+        // Reused buffer: clearing keeps capacity, re-filling allocates nothing.
+        let cap = buf.capacity();
+        buf.clear();
+        featurize_item_into("storm warning", "officials brace for landfall", &mut buf);
+        assert_eq!(buf.capacity(), cap);
+    }
+
+    #[test]
+    fn prop_streaming_matches_reference() {
+        // Unicode alphabet exercising multi-byte chars, multi-char
+        // lowercase expansions (İ → i + combining dot), digits, and
+        // plenty of token boundaries.
+        const ALPHABET: &[char] = &[
+            'a', 'B', 'z', '9', '3', 'ß', 'İ', 'É', 'è', 'Ǆ', 'ǅ', '½', 'Ω', 'щ', '-', ' ', ' ',
+            '.', '!', '/', '\t',
+        ];
+        forall("streaming featurizer == reference", 300, |g| {
+            let gen_text = |g: &mut crate::util::prop::Gen, max: usize| -> String {
+                let n = g.usize(0, max);
+                (0..n).map(|_| *g.pick(ALPHABET)).collect()
+            };
+            let title = gen_text(g, 30);
+            let body = gen_text(g, 80);
+            featurize(&body) == featurize_reference(&body)
+                && featurize_item(&title, &body) == featurize_item_reference(&title, &body)
+        });
     }
 
     #[test]

@@ -1,14 +1,24 @@
 //! Hashing utilities: FNV-1a (stable, fast, dependency-free), token feature
 //! hashing for the enrichment model, and SimHash signature packing.
 
+/// FNV-1a offset basis (the shared constant for streaming FNV folds).
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a prime.
+pub const FNV_PRIME: u64 = 0x100_0000_01b3;
+
+/// Fold one byte into a running FNV-1a hash.
+#[inline]
+pub fn fnv1a_step(h: u64, b: u8) -> u64 {
+    (h ^ b as u64).wrapping_mul(FNV_PRIME)
+}
+
 /// 64-bit FNV-1a over bytes. Stable across platforms and runs — used for
 /// dedup keys, feature hashing and deterministic id derivation.
 #[inline]
 pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut h = FNV_OFFSET;
     for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100_0000_01b3);
+        h = fnv1a_step(h, b);
     }
     h
 }

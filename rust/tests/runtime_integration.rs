@@ -1,14 +1,17 @@
 //! Cross-boundary integration: the rust PJRT runtime must reproduce the
 //! python oracle's numbers on the AOT artifact.
 //!
-//! Requires `make artifacts` (skips politely otherwise — the Makefile test
-//! target guarantees the ordering).
+//! Requires a build with `--features xla` (the whole file compiles away
+//! otherwise) and `make artifacts` (skips politely if missing — the
+//! Makefile test target guarantees the ordering).
+#![cfg(feature = "xla")]
 
 use alertmix::runtime::{find_artifact, EnrichBackend, XlaEnricher, DEFAULT_GOLDEN};
 use alertmix::text::FEATURE_DIM;
 use alertmix::util::json::Json;
 
-fn load_golden() -> Option<(Vec<[f32; FEATURE_DIM]>, Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+/// (flat row-major features, batch rows, want_scores, want_sig)
+fn load_golden() -> Option<(Vec<f32>, usize, Vec<Vec<f32>>, Vec<Vec<f32>>)> {
     let path = find_artifact(DEFAULT_GOLDEN)?;
     let text = std::fs::read_to_string(path).ok()?;
     let j = Json::parse(&text).ok()?;
@@ -24,15 +27,9 @@ fn load_golden() -> Option<(Vec<[f32; FEATURE_DIM]>, Vec<Vec<f32>>, Vec<Vec<f32>
         j.get("scores")?.as_arr()?.iter().map(|v| v.as_f64().unwrap() as f32).collect();
     let sig: Vec<f32> = j.get("sig")?.as_arr()?.iter().map(|v| v.as_f64().unwrap() as f32).collect();
 
-    let mut feats = Vec::with_capacity(batch);
-    for i in 0..batch {
-        let mut f = [0f32; FEATURE_DIM];
-        f.copy_from_slice(&xs[i * fdim..(i + 1) * fdim]);
-        feats.push(f);
-    }
     let want_scores = (0..batch).map(|i| scores[i * ns..(i + 1) * ns].to_vec()).collect();
     let want_sig = (0..batch).map(|i| sig[i * nb..(i + 1) * nb].to_vec()).collect();
-    Some((feats, want_scores, want_sig))
+    Some((xs, batch, want_scores, want_sig))
 }
 
 fn enricher_or_skip() -> Option<XlaEnricher> {
@@ -48,12 +45,12 @@ fn enricher_or_skip() -> Option<XlaEnricher> {
 #[test]
 fn xla_enricher_matches_python_golden() {
     let Some(mut enricher) = enricher_or_skip() else { return };
-    let Some((feats, want_scores, want_sig)) = load_golden() else {
+    let Some((feats, batch, want_scores, want_sig)) = load_golden() else {
         eprintln!("SKIP: golden file missing");
         return;
     };
-    let got = enricher.enrich_batch(&feats).unwrap();
-    assert_eq!(got.len(), feats.len());
+    let got = enricher.enrich_batch(&feats, batch).unwrap();
+    assert_eq!(got.len(), batch);
     for (i, e) in got.iter().enumerate() {
         for (a, b) in e.scores.iter().zip(&want_scores[i]) {
             assert!(
@@ -70,10 +67,10 @@ fn xla_enricher_matches_python_golden() {
 #[test]
 fn xla_enricher_pads_partial_batches() {
     let Some(mut enricher) = enricher_or_skip() else { return };
-    let Some((feats, want_scores, _)) = load_golden() else { return };
+    let Some((feats, _, want_scores, _)) = load_golden() else { return };
     // Run only the first 5 rows: results must match the full-batch run
     // (padding must not leak into valid lanes).
-    let got = enricher.enrich_batch(&feats[..5]).unwrap();
+    let got = enricher.enrich_batch(&feats[..5 * FEATURE_DIM], 5).unwrap();
     assert_eq!(got.len(), 5);
     for (i, e) in got.iter().enumerate() {
         for (a, b) in e.scores.iter().zip(&want_scores[i]) {
@@ -85,22 +82,23 @@ fn xla_enricher_pads_partial_batches() {
 #[test]
 fn xla_enricher_rejects_oversize_batch() {
     let Some(mut enricher) = enricher_or_skip() else { return };
-    let too_big = vec![[0f32; FEATURE_DIM]; enricher.batch_size() + 1];
-    assert!(enricher.enrich_batch(&too_big).is_err());
+    let n = enricher.batch_size() + 1;
+    let too_big = vec![0f32; n * FEATURE_DIM];
+    assert!(enricher.enrich_batch(&too_big, n).is_err());
 }
 
 #[test]
 fn xla_enricher_empty_batch() {
     let Some(mut enricher) = enricher_or_skip() else { return };
-    assert!(enricher.enrich_batch(&[]).unwrap().is_empty());
+    assert!(enricher.enrich_batch(&[], 0).unwrap().is_empty());
 }
 
 #[test]
 fn xla_repeated_executions_are_stable() {
     let Some(mut enricher) = enricher_or_skip() else { return };
-    let Some((feats, _, _)) = load_golden() else { return };
-    let a = enricher.enrich_batch(&feats).unwrap();
-    let b = enricher.enrich_batch(&feats).unwrap();
+    let Some((feats, batch, _, _)) = load_golden() else { return };
+    let a = enricher.enrich_batch(&feats, batch).unwrap().to_vec();
+    let b = enricher.enrich_batch(&feats, batch).unwrap().to_vec();
     assert_eq!(a, b);
     assert_eq!(enricher.executions, 2);
 }
