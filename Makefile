@@ -1,20 +1,33 @@
 # AlertMix — repo-root automation.
 #
 #   make verify        tier-1 gate: offline release build + full test suite
+#                      (+ clippy -D warnings when clippy is installed)
 #   make bench-ingest  refresh BENCH_ingest.json (ingest hot-path numbers)
+#   make bench-sqs     refresh BENCH_sqs.json (SQS hot-path numbers)
 #   make bench         run every bench target
 #   make artifacts     (re)build the AOT enrichment artifacts (needs jax)
 
 CARGO ?= cargo
 
-.PHONY: verify bench-ingest bench artifacts
+.PHONY: verify bench-ingest bench-sqs bench artifacts
 
+# The clippy gate covers lib + bins (not --all-targets: the bench/test
+# surface is exercised by `cargo test` and the CI bench smoke instead).
 verify:
 	cd rust && $(CARGO) build --release && $(CARGO) test -q
+	cd rust && if $(CARGO) clippy --version >/dev/null 2>&1; then \
+		$(CARGO) clippy -- -D warnings; \
+	else \
+		echo "cargo clippy unavailable in this toolchain; lint skipped"; \
+	fi
 
 bench-ingest:
 	cd rust && $(CARGO) bench --bench bench_ingest
 	@test -f BENCH_ingest.json && echo "refreshed BENCH_ingest.json" || true
+
+bench-sqs:
+	cd rust && $(CARGO) bench --bench bench_sqs
+	@test -f BENCH_sqs.json && echo "refreshed BENCH_sqs.json" || true
 
 bench:
 	cd rust && $(CARGO) bench

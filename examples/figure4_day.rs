@@ -66,6 +66,13 @@ fn main() -> anyhow::Result<()> {
     let d_total: f64 = d_vals[skip..].iter().sum();
     let ratio = d_total / s_total.max(1.0);
     println!("queue-emptying ratio (deleted/sent, steady state): {ratio:.3}  (paper: ~1.0)");
+    let mq = &world.queues.main;
+    println!(
+        "sqs send→delete latency: p50 {:.1}s p99 {:.1}s over {} deletes (O(1) histogram)",
+        mq.delete_latency_pct(0.5).unwrap_or(0) as f64 / 1000.0,
+        mq.delete_latency_pct(0.99).unwrap_or(0) as f64 / 1000.0,
+        mq.counters.deleted
+    );
 
     // (1) diurnal periodicity: peak-hour rate vs trough-hour rate.
     let hour_rate = |h: u64| -> f64 {

@@ -21,49 +21,14 @@
 //! INGEST_ITEMS=32768 INGEST_PASSES=10 cargo bench --bench bench_ingest
 //! ```
 
-use alertmix::benchlib::{env_u64, section, time, Table};
+use alertmix::benchlib::{allocs, bench_out_path, env_u64, section, time, CountingAllocator, Table};
 use alertmix::dedup::{DedupVerdict, Deduper};
 use alertmix::runtime::{Batcher, BatcherConfig, CpuFallbackEnricher, EnrichBackend, Enrichment};
 use alertmix::text::{featurize_item_into, featurize_item_reference, FEATURE_DIM};
 use alertmix::util::rng::Rng;
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::cell::Cell;
-
-// ---------------------------------------------------------------------------
-// Thread-local counting allocator: counts every heap allocation on this
-// thread (alloc/realloc/alloc_zeroed); frees are not counted. const-init
-// TLS so the counter itself never allocates or recurses.
-
-thread_local! {
-    static ALLOC_COUNT: Cell<u64> = const { Cell::new(0) };
-}
-
-struct CountingAllocator;
-
-unsafe impl GlobalAlloc for CountingAllocator {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
-        System.alloc(layout)
-    }
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
-        System.realloc(ptr, layout, new_size)
-    }
-    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
-        System.alloc_zeroed(layout)
-    }
-}
 
 #[global_allocator]
 static GLOBAL: CountingAllocator = CountingAllocator;
-
-fn allocs() -> u64 {
-    ALLOC_COUNT.try_with(|c| c.get()).unwrap_or(0)
-}
 
 // ---------------------------------------------------------------------------
 
@@ -201,16 +166,6 @@ fn streaming_pass(
 
 // ---------------------------------------------------------------------------
 
-fn bench_out_path() -> std::path::PathBuf {
-    for root in [".", "..", "../.."] {
-        let p = std::path::Path::new(root);
-        if p.join("ROADMAP.md").exists() {
-            return p.join("BENCH_ingest.json");
-        }
-    }
-    std::path::PathBuf::from("BENCH_ingest.json")
-}
-
 fn main() {
     let n_items = env_u64("INGEST_ITEMS", 8_192) as usize;
     let passes = env_u64("INGEST_PASSES", 5) as usize;
@@ -295,7 +250,7 @@ fn main() {
          \"zero_alloc_steady_state\": {}\n}}\n",
         new_steady_allocs == 0
     );
-    let out = bench_out_path();
+    let out = bench_out_path("BENCH_ingest.json");
     match std::fs::write(&out, &json) {
         Ok(()) => println!("wrote {}", out.display()),
         Err(e) => eprintln!("could not write {}: {e}", out.display()),

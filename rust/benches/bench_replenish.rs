@@ -4,6 +4,12 @@
 //! processed-count trigger (b) and timeout trigger (c) — on a fixed 2-hour
 //! workload, and reports end-to-end SQS latency (send→delete) and
 //! throughput. Also the priority-queue latency win (claim C-2).
+//!
+//! The router replenishes through the batched
+//! `DualQueue::receive_prioritized_into` drain (one probe per
+//! replenishment, recycled buffer) and the `delete_latency_pct` figures
+//! come from the O(1)-memory log-bucketed histogram, so the sweep itself
+//! no longer pays an O(n log n) clone-and-sort per percentile query.
 
 use alertmix::benchlib::{env_u64, section, Table};
 use alertmix::config::AlertMixConfig;

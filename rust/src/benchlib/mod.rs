@@ -4,6 +4,8 @@
 //! time scenarios and emit aligned result tables; `cargo bench` runs them
 //! all. Wall-clock numbers are medians over repeats with a warmup pass.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
 use std::time::Instant;
 
 /// Time `f` `repeats` times (after one warmup) and return (median_s, min_s).
@@ -70,6 +72,59 @@ pub fn env_u64(name: &str, default: u64) -> u64 {
 
 pub fn env_flag(name: &str) -> bool {
     std::env::var(name).map(|v| v == "1" || v == "true").unwrap_or(false)
+}
+
+// ---------------------------------------------------------------------------
+// Allocation counting, shared by the zero-alloc bench assertions
+// (`bench_ingest`, `bench_sqs`).
+
+thread_local! {
+    /// Heap allocations observed on this thread. const-init TLS so the
+    /// counter itself never allocates or recurses.
+    static ALLOC_COUNT: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Thread-local counting allocator: counts every heap allocation on this
+/// thread (alloc/realloc/alloc_zeroed); frees are not counted. Each bench
+/// binary installs it with
+/// `#[global_allocator] static GLOBAL: CountingAllocator = CountingAllocator;`
+/// (the attribute itself must live in the binary).
+pub struct CountingAllocator;
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+}
+
+/// Allocations counted on this thread so far (see [`CountingAllocator`]).
+pub fn allocs() -> u64 {
+    ALLOC_COUNT.try_with(|c| c.get()).unwrap_or(0)
+}
+
+/// Resolve `file_name` at the repo root (the directory holding
+/// ROADMAP.md), falling back to the current directory — where the
+/// `BENCH_*.json` trend records live.
+pub fn bench_out_path(file_name: &str) -> std::path::PathBuf {
+    for root in [".", "..", "../.."] {
+        let p = std::path::Path::new(root);
+        if p.join("ROADMAP.md").exists() {
+            return p.join(file_name);
+        }
+    }
+    std::path::PathBuf::from(file_name)
 }
 
 #[cfg(test)]

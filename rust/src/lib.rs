@@ -7,8 +7,9 @@
 //! XLA/PJRT — python never runs on the request path.
 //!
 //! See `rust/DESIGN.md` for the architecture (actor topology, the
-//! zero-allocation ingest hot path, module layout) and `BENCH_ingest.json`
-//! at the repo root for the tracked ingest-path measurements.
+//! zero-allocation ingest and SQS hot paths, module layout) and
+//! `BENCH_ingest.json` / `BENCH_sqs.json` at the repo root for the
+//! tracked hot-path measurements.
 pub mod actor;
 pub mod baseline;
 pub mod benchlib;

@@ -134,6 +134,13 @@ fn cmd_simulate(cfg: AlertMixConfig, csv_out: Option<&str>) -> Result<()> {
         world.sink.doc_count(),
         world.metrics.emails.len()
     );
+    println!(
+        "sqs send→delete: main p50 {:.1}s p99 {:.1}s | priority p50 {:.1}s p99 {:.1}s",
+        world.queues.main.delete_latency_pct(0.5).unwrap_or(0) as f64 / 1000.0,
+        world.queues.main.delete_latency_pct(0.99).unwrap_or(0) as f64 / 1000.0,
+        world.queues.priority.delete_latency_pct(0.5).unwrap_or(0) as f64 / 1000.0,
+        world.queues.priority.delete_latency_pct(0.99).unwrap_or(0) as f64 / 1000.0
+    );
     println!("\nactor topology after run:");
     for st in sys.all_stats() {
         println!(

@@ -10,6 +10,7 @@
 use super::messages::{PickDue, PrioritizeStream};
 use super::world::World;
 use crate::actor::{Actor, ActorResult, Ctx, Msg};
+use crate::sqs::JobBody;
 
 pub struct StreamsPicker;
 
@@ -32,8 +33,10 @@ impl Actor<World> for StreamsPicker {
         let mut to_main = 0u64;
         for id in &picked {
             let priority = world.store.get(*id).map(|r| r.priority).unwrap_or(false);
-            // Job body is the JSON the production system would put on SQS.
-            let body = format!("{{\"stream_id\":{id}}}");
+            // Compact job body: the wire-equivalent of the production
+            // system's {"stream_id":N} JSON, without formatting a String
+            // per job on the enqueue hot path.
+            let body = JobBody::StreamId(*id);
             if priority {
                 world.queues.priority.send(now, body);
                 to_priority += 1;
@@ -72,7 +75,7 @@ impl Actor<World> for PriorityStreams {
         if world.store.prioritize(id, now) {
             let picked = world.store.pick_due(now, 0, world.cfg.stale_after, 1);
             for id in picked {
-                world.queues.priority.send(now, format!("{{\"stream_id\":{id}}}"));
+                world.queues.priority.send(now, JobBody::StreamId(id));
                 world.metrics.count("NumberOfMessagesSent", now, 1.0);
                 world.metrics.count("PriorityMessagesSent", now, 1.0);
             }

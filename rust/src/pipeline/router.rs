@@ -39,14 +39,6 @@ impl FeedRouter {
             replenishes_by_timeout: 0,
         }
     }
-
-    fn parse_stream_id(body: &str) -> Option<u64> {
-        // Body is {"stream_id":N}; a tolerant scan keeps the hot path
-        // allocation-free.
-        let start = body.find(':')? + 1;
-        let end = body.find('}')?;
-        body[start..end].trim().parse().ok()
-    }
 }
 
 impl Default for FeedRouter {
@@ -82,39 +74,40 @@ impl Actor<World> for FeedRouter {
         }
         let want = world.cfg.optimal_buffer - in_flight;
 
-        let mut pulled = 0usize;
+        // One batched drain: a single receive_prioritized_into call pulls
+        // the whole replenishment (internally looping the SQS 10-message
+        // cap) into a buffer recycled on the World, priority first.
+        let mut batch = std::mem::take(&mut world.router_drain);
+        batch.clear();
+        world.queues.receive_prioritized_into(now, want, &mut batch);
+        let pulled = batch.len();
         let distributor = world.handles().distributor;
-        while pulled < want {
-            let take = (want - pulled).min(MAX_RECEIVE_BATCH);
-            let batch = world.queues.receive_prioritized(now, take);
-            if batch.is_empty() {
-                break;
-            }
-            for (from_priority, m) in batch {
-                pulled += 1;
-                let Some(stream_id) = Self::parse_stream_id(&m.body) else {
-                    // Poison message: ack it away.
-                    if from_priority {
-                        world.queues.priority.delete(now, m.handle);
-                    } else {
-                        world.queues.main.delete(now, m.handle);
-                    }
-                    continue;
-                };
-                world.counters.jobs_dispatched += 1;
-                let pri = if from_priority { PRIORITY_HIGH } else { PRIORITY_NORMAL };
-                ctx.send_pri(
-                    distributor,
-                    pri,
-                    FeedJob {
-                        stream_id,
-                        receipt: m.handle,
-                        from_priority,
-                        receive_count: m.receive_count,
-                    },
-                );
-            }
+        for (from_priority, m) in batch.drain(..) {
+            // Fast path: the stream id is a field read on compact bodies;
+            // legacy text bodies fall back to the tolerant scan.
+            let Some(stream_id) = m.body.stream_id() else {
+                // Poison message: ack it away.
+                if from_priority {
+                    world.queues.priority.delete(now, m.handle);
+                } else {
+                    world.queues.main.delete(now, m.handle);
+                }
+                continue;
+            };
+            world.counters.jobs_dispatched += 1;
+            let pri = if from_priority { PRIORITY_HIGH } else { PRIORITY_NORMAL };
+            ctx.send_pri(
+                distributor,
+                pri,
+                FeedJob {
+                    stream_id,
+                    receipt: m.handle,
+                    from_priority,
+                    receive_count: m.receive_count,
+                },
+            );
         }
+        world.router_drain = batch;
         if pulled > 0 {
             world.metrics.count("NumberOfMessagesReceived", now, pulled as f64);
             if count_trigger {
@@ -169,10 +162,19 @@ mod tests {
     }
 
     #[test]
-    fn parses_job_bodies() {
-        assert_eq!(FeedRouter::parse_stream_id("{\"stream_id\":42}"), Some(42));
-        assert_eq!(FeedRouter::parse_stream_id("{\"stream_id\": 7 }"), Some(7));
-        assert_eq!(FeedRouter::parse_stream_id("garbage"), None);
+    fn dispatches_compact_and_legacy_bodies() {
+        // Compact bodies, canonical strings and tolerant legacy spacing
+        // all resolve to a stream id on the drain path.
+        let mut sys: ActorSystem<World> = ActorSystem::new(1);
+        let (mut w, _sink) = world_with_handles(&mut sys);
+        let router =
+            sys.spawn("router", MailboxKind::Unbounded, Box::new(|_| Box::new(FeedRouter::new())));
+        w.queues.main.send(0, crate::sqs::JobBody::StreamId(42));
+        w.queues.main.send(0, "{\"stream_id\":43}");
+        w.queues.main.send(0, "{\"stream_id\": 44 }");
+        sys.tell_at(w.cfg.replenish_timeout, router, RouterTick);
+        sys.run_to_idle(&mut w);
+        assert_eq!(w.counters.jobs_dispatched, 3);
     }
 
     #[test]

@@ -49,7 +49,7 @@ mod tests {
         // Claim stream 1 and queue its job.
         let picked = w.store.pick_due(0, u64::MAX, 60_000, 1);
         let id = picked[0];
-        w.queues.main.send(0, format!("{{\"stream_id\":{id}}}"));
+        w.queues.main.send(0, crate::sqs::JobBody::StreamId(id));
         let m = w.queues.main.receive(0, 1).pop().unwrap();
 
         sys.tell(upd, StreamPolled {

@@ -11,7 +11,7 @@ use crate::metrics::MetricRegistry;
 use crate::runtime::{Batcher, BatcherConfig, CpuFallbackEnricher, EnrichBackend};
 use crate::sim::SimTime;
 use crate::sink::{ElasticLite, SinkDoc};
-use crate::sqs::{DualQueue, RedrivePolicy};
+use crate::sqs::{DualQueue, ReceivedMessage, RedrivePolicy};
 use crate::store::streams::{StreamRecord, StreamStore};
 use crate::text::FEATURE_DIM;
 use crate::util::IdGen;
@@ -103,6 +103,10 @@ pub struct World {
     pub batcher: Batcher,
     /// Recycled buffers for worker -> EnrichStage batches.
     pub enrich_pool: EnrichBufferPool,
+    /// Recycled drain buffer for the FeedRouter's batched SQS pull
+    /// (`DualQueue::receive_prioritized_into`): one buffer serves every
+    /// replenishment, so the steady-state pull loop allocates nothing.
+    pub router_drain: Vec<(bool, ReceivedMessage)>,
     /// ticket -> item metadata for in-flight enrichment requests.
     pub pending_items: HashMap<u64, ItemMeta>,
     pub doc_ids: IdGen,
@@ -180,6 +184,7 @@ impl World {
                 max_wait_ms: cfg.enrich_max_wait,
             }),
             enrich_pool: EnrichBufferPool::default(),
+            router_drain: Vec::new(),
             pending_items: HashMap::new(),
             doc_ids: IdGen::new(),
             alerts: AlertBook::new(),

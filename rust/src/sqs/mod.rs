@@ -7,30 +7,236 @@
 //! - at-least-once delivery with a **visibility timeout**: a received
 //!   message is hidden, and reappears if not deleted in time;
 //! - explicit `delete` acknowledgement (the paper's "deleting" series in
-//!   Figure 4 counts these);
+//!   Figure 4 counts these), plus `DeleteMessageBatch`;
 //! - `receive` batches of up to 10 messages (SQS API limit);
 //! - an optional **dead-letter queue** redrive after `max_receive_count`
 //!   failed receives;
 //! - CloudWatch-style counters: `NumberOfMessagesSent` / `Received` /
 //!   `Deleted` and `ApproximateNumberOfMessagesVisible`.
+//!
+//! The send → receive → dispatch → delete loop is allocation-free in
+//! steady state (`benches/bench_sqs.rs` asserts it):
+//!
+//! - payloads are a compact [`JobBody`]: the pipeline's `{"stream_id":N}`
+//!   jobs ride as one `u64` (parsing is a field read), arbitrary payloads
+//!   as a refcounted `Rc<str>` whose per-receive clone is a refcount bump
+//!   instead of a fresh `String`;
+//! - in-flight bookkeeping is a capacity-reusing `HashMap` plus a FIFO
+//!   expiry index — leases expire in receive order while the clock is
+//!   monotone and the timeout fixed, so the index is a ring buffer; the
+//!   rare out-of-order lease (`change_visibility`, clock skew) spills to
+//!   a small ordered side index — and a deleted lease just marks its ring
+//!   entry stale, with an amortized in-place compaction keeping the ring
+//!   O(in-flight);
+//! - consumers drain into recycled buffers via [`SqsQueue::receive_into`]
+//!   / [`DualQueue::receive_prioritized_into`] (one call pulls a whole
+//!   replenishment, internally looping the 10-message API cap) and ack
+//!   with [`SqsQueue::delete_batch`];
+//! - sent→deleted latency lives in a fixed-size log-bucketed
+//!   [`LatencyHistogram`]: O(1) memory in messages processed and
+//!   O(buckets) per percentile query, where the old `Vec<SimTime>` grew
+//!   without bound and cloned + sorted the full history on every query.
 
 use crate::sim::SimTime;
 use crate::util::IdGen;
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::rc::Rc;
 
 /// SQS caps a single `ReceiveMessage` at 10 messages.
 pub const MAX_RECEIVE_BATCH: usize = 10;
+
+/// A job payload. The pipeline's feed jobs are `{"stream_id":N}` on the
+/// wire; [`JobBody::StreamId`] carries that as a single `u64` so producers
+/// skip the JSON `format!` and consumers read a field instead of scanning
+/// a string. Anything else rides verbatim in [`JobBody::Text`], an
+/// `Rc<str>` so the clone handed out by `receive` is a refcount bump.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobBody {
+    /// The canonical feed job `{"stream_id":N}`.
+    StreamId(u64),
+    /// Any other payload, kept byte-identical to what was sent.
+    Text(Rc<str>),
+}
+
+impl JobBody {
+    /// Parse a legacy wire body. The exact canonical rendering
+    /// `{"stream_id":N}` (no spaces, no leading zeros) becomes the compact
+    /// variant; everything else is kept verbatim as [`JobBody::Text`] so
+    /// round-tripping is byte-identical either way.
+    pub fn from_legacy(s: &str) -> JobBody {
+        match Self::parse_canonical(s) {
+            Some(n) => JobBody::StreamId(n),
+            None => JobBody::Text(Rc::from(s)),
+        }
+    }
+
+    fn parse_canonical(s: &str) -> Option<u64> {
+        let num = s.strip_prefix("{\"stream_id\":")?.strip_suffix('}')?;
+        if num.is_empty() || !num.bytes().all(|b| b.is_ascii_digit()) {
+            return None;
+        }
+        if num.len() > 1 && num.starts_with('0') {
+            return None; // leading zeros are not the canonical rendering
+        }
+        num.parse().ok() // overflow falls through to Text
+    }
+
+    /// The job's stream id: a field read on the fast path, the old
+    /// tolerant `{"stream_id": N }` scan on legacy text bodies.
+    pub fn stream_id(&self) -> Option<u64> {
+        match self {
+            JobBody::StreamId(n) => Some(*n),
+            JobBody::Text(s) => {
+                let start = s.find(':')? + 1;
+                let end = s.find('}')?;
+                s[start..end].trim().parse().ok()
+            }
+        }
+    }
+
+    /// The raw text payload, if this is not a compact stream-id job.
+    pub fn as_text(&self) -> Option<&str> {
+        match self {
+            JobBody::Text(s) => Some(s),
+            JobBody::StreamId(_) => None,
+        }
+    }
+
+    /// Render the legacy wire form — exactly the JSON the production
+    /// system put on SQS.
+    pub fn to_legacy_string(&self) -> String {
+        match self {
+            JobBody::StreamId(n) => format!("{{\"stream_id\":{n}}}"),
+            JobBody::Text(s) => s.to_string(),
+        }
+    }
+}
+
+impl From<u64> for JobBody {
+    fn from(n: u64) -> Self {
+        JobBody::StreamId(n)
+    }
+}
+
+impl From<&str> for JobBody {
+    fn from(s: &str) -> Self {
+        JobBody::from_legacy(s)
+    }
+}
+
+impl From<String> for JobBody {
+    fn from(s: String) -> Self {
+        JobBody::from_legacy(&s)
+    }
+}
+
+/// Linear sub-buckets per octave in [`LatencyHistogram`].
+const HIST_SUB: usize = 8;
+const HIST_LOG_SUB: u32 = 3;
+/// Indices 0..8 hold exact small values; each of the 61 octaves
+/// `[2^k, 2^(k+1))` for k in 3..=63 contributes 8 sub-buckets.
+const HIST_BUCKETS: usize = HIST_SUB + 61 * HIST_SUB;
+
+/// Fixed-size log₂-bucketed latency histogram with 8 linear sub-buckets
+/// per octave (HDR-style): `record` is O(1), percentile queries walk the
+/// 496 buckets, and memory is constant in the number of samples. Values
+/// below 8 are exact; above that the bucket upper bound overestimates by
+/// at most 12.5%. Exact min/max are tracked so p0 and p100 are exact.
+#[derive(Clone)]
+pub struct LatencyHistogram {
+    counts: [u64; HIST_BUCKETS],
+    total: u64,
+    min: SimTime,
+    max: SimTime,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            counts: [0; HIST_BUCKETS],
+            total: 0,
+            min: SimTime::MAX,
+            max: 0,
+        }
+    }
+
+    fn bucket_index(v: SimTime) -> usize {
+        if v < HIST_SUB as u64 {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros(); // >= HIST_LOG_SUB
+        let sub = ((v >> (msb - HIST_LOG_SUB)) & (HIST_SUB as u64 - 1)) as usize;
+        (msb as usize - 2) * HIST_SUB + sub
+    }
+
+    /// Largest value that lands in bucket `idx`. The bucket base is
+    /// width-aligned, so OR-ing in `width - 1` is exact and — unlike
+    /// `base + width - 1` — cannot overflow on the top bucket
+    /// (`bucket_upper(495)` is `u64::MAX`).
+    fn bucket_upper(idx: usize) -> SimTime {
+        if idx < HIST_SUB {
+            return idx as SimTime;
+        }
+        let msb = (idx / HIST_SUB + 2) as u32;
+        let sub = (idx % HIST_SUB) as u64;
+        let width = 1u64 << (msb - HIST_LOG_SUB);
+        (1u64 << msb) | (sub * width) | (width - 1)
+    }
+
+    pub fn record(&mut self, v: SimTime) {
+        self.counts[Self::bucket_index(v)] += 1;
+        self.total += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Number of recorded samples.
+    pub fn samples(&self) -> u64 {
+        self.total
+    }
+
+    /// p-th percentile (p in [0, 1]); p0/p100 are exact, interior
+    /// percentiles return the containing bucket's upper bound (≤ 12.5%
+    /// overestimate), using the same 0-based rounded rank as the old
+    /// sort-based implementation.
+    pub fn percentile(&self, p: f64) -> Option<SimTime> {
+        if self.total == 0 {
+            return None;
+        }
+        if p <= 0.0 {
+            return Some(self.min);
+        }
+        if p >= 1.0 {
+            return Some(self.max);
+        }
+        let rank = ((self.total - 1) as f64 * p).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return Some(Self::bucket_upper(i).clamp(self.min, self.max));
+            }
+        }
+        Some(self.max)
+    }
+}
 
 /// Message handle returned by `receive`, needed to delete (ack).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ReceiptHandle(pub u64);
 
-/// A queued message (payload is an opaque string — the pipeline stores
-/// feed-job JSON here, exactly like the production system).
+/// A queued message (payload is an opaque [`JobBody`] — the pipeline
+/// stores feed jobs here, exactly like the production system).
 #[derive(Debug, Clone)]
 pub struct QueuedMessage {
     pub id: u64,
-    pub body: String,
+    pub body: JobBody,
     pub sent_at: SimTime,
     pub receive_count: u32,
 }
@@ -39,7 +245,7 @@ pub struct QueuedMessage {
 #[derive(Debug, Clone)]
 pub struct ReceivedMessage {
     pub id: u64,
-    pub body: String,
+    pub body: JobBody,
     pub sent_at: SimTime,
     pub receive_count: u32,
     pub handle: ReceiptHandle,
@@ -65,17 +271,35 @@ pub struct RedrivePolicy {
 struct InFlight {
     msg: QueuedMessage,
     visible_again: SimTime,
+    /// Where the current lease's expiry entry lives (FIFO ring vs the
+    /// ordered side index) — lets `delete` account stale ring entries in
+    /// O(1) and evict side-index entries eagerly.
+    lease_in_fifo: bool,
 }
 
 /// One simulated SQS queue.
 pub struct SqsQueue {
     pub name: String,
     visible: VecDeque<QueuedMessage>,
-    /// receipt handle -> in-flight message.
-    in_flight: BTreeMap<u64, InFlight>,
-    /// (visible_again, handle) expiry index — makes `requeue_expired` a
-    /// prefix scan instead of a full in-flight sweep (§Perf L3-2).
-    expiry: std::collections::BTreeSet<(SimTime, u64)>,
+    /// receipt handle -> in-flight message. Capacity is reused across the
+    /// receive/delete churn, so steady state never reallocates.
+    in_flight: HashMap<u64, InFlight>,
+    /// FIFO expiry index: `(visible_again, handle)` in nondecreasing
+    /// order. Entries for deleted or re-leased handles are skipped lazily
+    /// when popped (the in-flight record is the source of truth), which
+    /// keeps `delete` O(1) and the index a pure ring buffer.
+    expiry_fifo: VecDeque<(SimTime, u64)>,
+    /// Out-of-order leases: `change_visibility` and non-monotone receive
+    /// clocks land here (rare; never on the replenish/ack hot path).
+    /// Kept exact: deletes and re-leases evict their entry eagerly.
+    expiry_ooo: BTreeSet<(SimTime, u64)>,
+    /// Advisory count of abandoned (deleted / re-leased) entries still in
+    /// `expiry_fifo`; drives the amortized in-place compaction that keeps
+    /// the ring O(in-flight) instead of O(receives per visibility window).
+    expiry_fifo_stale: u64,
+    /// Scratch for `requeue_expired` so redelivery ordering needs no
+    /// fresh allocation.
+    requeue_scratch: Vec<QueuedMessage>,
     dead: Vec<QueuedMessage>,
     redrive: Option<RedrivePolicy>,
     visibility_timeout: SimTime,
@@ -83,7 +307,7 @@ pub struct SqsQueue {
     handles: IdGen,
     pub counters: QueueCounters,
     /// Cumulative end-to-end latency (sent -> deleted) for percentiles.
-    delete_latencies: Vec<SimTime>,
+    delete_latencies: LatencyHistogram,
 }
 
 impl SqsQueue {
@@ -91,20 +315,23 @@ impl SqsQueue {
         SqsQueue {
             name: name.to_string(),
             visible: VecDeque::new(),
-            in_flight: BTreeMap::new(),
-            expiry: std::collections::BTreeSet::new(),
+            in_flight: HashMap::new(),
+            expiry_fifo: VecDeque::new(),
+            expiry_ooo: BTreeSet::new(),
+            expiry_fifo_stale: 0,
+            requeue_scratch: Vec::new(),
             dead: Vec::new(),
             redrive,
             visibility_timeout,
             ids: IdGen::new(),
             handles: IdGen::new(),
             counters: QueueCounters::default(),
-            delete_latencies: Vec::new(),
+            delete_latencies: LatencyHistogram::new(),
         }
     }
 
     /// SendMessage.
-    pub fn send(&mut self, now: SimTime, body: impl Into<String>) -> u64 {
+    pub fn send(&mut self, now: SimTime, body: impl Into<JobBody>) -> u64 {
         let id = self.ids.next();
         self.visible.push_back(QueuedMessage {
             id,
@@ -117,7 +344,11 @@ impl SqsQueue {
     }
 
     /// SendMessageBatch.
-    pub fn send_batch<I: IntoIterator<Item = String>>(&mut self, now: SimTime, bodies: I) -> Vec<u64> {
+    pub fn send_batch<B, I>(&mut self, now: SimTime, bodies: I) -> Vec<u64>
+    where
+        B: Into<JobBody>,
+        I: IntoIterator<Item = B>,
+    {
         bodies.into_iter().map(|b| self.send(now, b)).collect()
     }
 
@@ -125,10 +356,25 @@ impl SqsQueue {
     /// visibility timeout. Expired in-flight messages are returned to the
     /// head of the queue first (redelivery).
     pub fn receive(&mut self, now: SimTime, max: usize) -> Vec<ReceivedMessage> {
+        let mut out = Vec::with_capacity(max.min(MAX_RECEIVE_BATCH));
+        self.receive_into(now, max, &mut out);
+        out
+    }
+
+    /// ReceiveMessage into a caller-owned buffer (appended, not cleared):
+    /// same contract as [`SqsQueue::receive`] but the consumer recycles
+    /// the buffer, so steady state allocates nothing. Returns the number
+    /// of messages appended.
+    pub fn receive_into(
+        &mut self,
+        now: SimTime,
+        max: usize,
+        out: &mut Vec<ReceivedMessage>,
+    ) -> usize {
         self.requeue_expired(now);
         let take = max.min(MAX_RECEIVE_BATCH);
-        let mut out = Vec::with_capacity(take);
-        while out.len() < take {
+        let mut n = 0usize;
+        while n < take {
             let Some(mut msg) = self.visible.pop_front() else { break };
             msg.receive_count += 1;
             // Redrive check happens on receive, like SQS.
@@ -140,6 +386,7 @@ impl SqsQueue {
                 }
             }
             let handle = ReceiptHandle(self.handles.next());
+            let visible_again = now + self.visibility_timeout;
             out.push(ReceivedMessage {
                 id: msg.id,
                 body: msg.body.clone(),
@@ -147,55 +394,193 @@ impl SqsQueue {
                 receive_count: msg.receive_count,
                 handle,
             });
-            let visible_again = now + self.visibility_timeout;
-            self.expiry.insert((visible_again, handle.0));
-            self.in_flight.insert(handle.0, InFlight { msg, visible_again });
+            let lease_in_fifo = self.push_expiry(visible_again, handle.0);
+            self.in_flight.insert(handle.0, InFlight { msg, visible_again, lease_in_fifo });
+            n += 1;
         }
-        if out.is_empty() {
+        if n == 0 {
             self.counters.empty_receives += 1;
         }
-        self.counters.received += out.len() as u64;
-        out
+        self.counters.received += n as u64;
+        n
     }
 
     /// DeleteMessage (ack). Returns false if the handle expired — the
-    /// message may be redelivered (at-least-once).
+    /// message may be redelivered (at-least-once). A FIFO-ring expiry
+    /// entry is abandoned (amortized compaction reclaims it), a side-index
+    /// entry is evicted eagerly; either way the ack stays O(1) amortized.
     pub fn delete(&mut self, now: SimTime, handle: ReceiptHandle) -> bool {
         match self.in_flight.remove(&handle.0) {
             Some(f) => {
-                self.expiry.remove(&(f.visible_again, handle.0));
+                if f.lease_in_fifo {
+                    self.expiry_fifo_stale += 1;
+                    self.trim_stale_back();
+                    self.maybe_compact_expiry();
+                } else {
+                    self.expiry_ooo.remove(&(f.visible_again, handle.0));
+                }
                 self.counters.deleted += 1;
-                self.delete_latencies.push(now.saturating_sub(f.msg.sent_at));
+                self.delete_latencies.record(now.saturating_sub(f.msg.sent_at));
                 true
             }
             None => false,
         }
     }
 
-    /// ChangeMessageVisibility: extend/shorten an in-flight lease.
-    pub fn change_visibility(&mut self, now: SimTime, handle: ReceiptHandle, timeout: SimTime) -> bool {
-        match self.in_flight.get_mut(&handle.0) {
+    /// DeleteMessageBatch: ack a batch of handles in one call. Returns how
+    /// many were still in flight (expired handles are skipped, as in
+    /// `delete`).
+    pub fn delete_batch(&mut self, now: SimTime, handles: &[ReceiptHandle]) -> usize {
+        let mut acked = 0usize;
+        for h in handles {
+            if self.delete(now, *h) {
+                acked += 1;
+            }
+        }
+        acked
+    }
+
+    /// ChangeMessageVisibility: extend/shorten an in-flight lease. The
+    /// old expiry entry is dropped (eagerly from the side index,
+    /// stale-counted in the FIFO ring) and a fresh one is pushed.
+    pub fn change_visibility(
+        &mut self,
+        now: SimTime,
+        handle: ReceiptHandle,
+        timeout: SimTime,
+    ) -> bool {
+        let new_at = now + timeout;
+        let (old_at, old_in_fifo) = match self.in_flight.get_mut(&handle.0) {
             Some(f) => {
-                self.expiry.remove(&(f.visible_again, handle.0));
-                f.visible_again = now + timeout;
-                self.expiry.insert((f.visible_again, handle.0));
-                true
+                let old = (f.visible_again, f.lease_in_fifo);
+                f.visible_again = new_at;
+                old
             }
-            None => false,
+            None => return false,
+        };
+        if old_in_fifo {
+            self.expiry_fifo_stale += 1;
+        } else {
+            self.expiry_ooo.remove(&(old_at, handle.0));
+        }
+        // Reclaim the ring's stale back *before* pushing, so a shortened
+        // lease whose own abandoned entry was the back stays on the
+        // zero-alloc ring instead of spilling to the side index; this also
+        // keeps heartbeat-style consumers (repeated extensions, no deletes
+        // yet) from accumulating abandoned entries.
+        self.trim_stale_back();
+        let in_fifo = self.push_expiry(new_at, handle.0);
+        if let Some(f) = self.in_flight.get_mut(&handle.0) {
+            f.lease_in_fifo = in_fifo;
+        }
+        self.maybe_compact_expiry();
+        true
+    }
+
+    /// Pop abandoned entries off the ring's back (amortized O(1): each
+    /// popped entry was pushed exactly once). Without this, one
+    /// extend-then-ack sequence would leave a far-future stale entry as
+    /// the back, and `push_expiry`'s `at < back` comparison would divert
+    /// every later receive into the allocating side index until that
+    /// timestamp passed.
+    fn trim_stale_back(&mut self) {
+        while let Some(&(at, h)) = self.expiry_fifo.back() {
+            let live = self
+                .in_flight
+                .get(&h)
+                .is_some_and(|f| f.lease_in_fifo && f.visible_again == at);
+            if live {
+                break;
+            }
+            self.expiry_fifo.pop_back();
+            self.expiry_fifo_stale = self.expiry_fifo_stale.saturating_sub(1);
         }
     }
 
-    fn requeue_expired(&mut self, now: SimTime) {
-        // Prefix scan of the expiry index: O(expired log n), not O(n).
-        loop {
-            let Some(&(at, h)) = self.expiry.iter().next() else { return };
-            if at > now {
-                return;
+    /// Index an expiry. The FIFO fast path holds entries in nondecreasing
+    /// time order; anything that would violate that goes to the ordered
+    /// side index instead. Returns true if the entry landed in the ring.
+    fn push_expiry(&mut self, at: SimTime, handle: u64) -> bool {
+        match self.expiry_fifo.back() {
+            Some(&(back, _)) if at < back => {
+                self.expiry_ooo.insert((at, handle));
+                false
             }
-            self.expiry.remove(&(at, h));
-            let f = self.in_flight.remove(&h).unwrap();
-            // Redelivered messages go to the front: oldest first.
-            self.visible.push_front(f.msg);
+            _ => {
+                self.expiry_fifo.push_back((at, handle));
+                true
+            }
+        }
+    }
+
+    /// Amortized in-place compaction: once abandoned entries outnumber
+    /// live ones, rebuild the ring keeping only entries that still match
+    /// their in-flight lease. Keeps the ring O(in-flight) for
+    /// promptly-acked traffic (the pipeline's normal mode) instead of
+    /// O(receives per visibility window), without allocating and without
+    /// giving `delete` a per-ack index scan.
+    fn maybe_compact_expiry(&mut self) {
+        let len = self.expiry_fifo.len() as u64;
+        if len >= 64 && self.expiry_fifo_stale * 2 > len {
+            let in_flight = &self.in_flight;
+            self.expiry_fifo.retain(|&(at, h)| {
+                in_flight.get(&h).is_some_and(|f| f.lease_in_fifo && f.visible_again == at)
+            });
+            self.expiry_fifo_stale = 0;
+        }
+    }
+
+    /// Return expired in-flight messages to the visible queue,
+    /// oldest-expired first (so the longest-overdue message is
+    /// redelivered first).
+    fn requeue_expired(&mut self, now: SimTime) {
+        debug_assert!(self.requeue_scratch.is_empty());
+        loop {
+            // Next candidate: the smaller head of the FIFO index and the
+            // out-of-order side index.
+            let fifo = self.expiry_fifo.front().copied();
+            let ooo = self.expiry_ooo.iter().next().copied();
+            let (at, h, from_fifo) = match (fifo, ooo) {
+                (Some(f), Some(o)) => {
+                    if f <= o {
+                        (f.0, f.1, true)
+                    } else {
+                        (o.0, o.1, false)
+                    }
+                }
+                (Some(f), None) => (f.0, f.1, true),
+                (None, Some(o)) => (o.0, o.1, false),
+                (None, None) => break,
+            };
+            if at > now {
+                break;
+            }
+            if from_fifo {
+                self.expiry_fifo.pop_front();
+            } else {
+                self.expiry_ooo.remove(&(at, h));
+            }
+            // Lazy validity: the entry is live only while the in-flight
+            // record still carries this exact lease in this index
+            // (abandoned ring entries fail the check and correct the
+            // advisory stale counter).
+            let live = self
+                .in_flight
+                .get(&h)
+                .is_some_and(|f| f.visible_again == at && f.lease_in_fifo == from_fifo);
+            if live {
+                let f = self.in_flight.remove(&h).unwrap();
+                self.requeue_scratch.push(f.msg);
+            } else if from_fifo {
+                self.expiry_fifo_stale = self.expiry_fifo_stale.saturating_sub(1);
+            }
+        }
+        // Scratch holds oldest-expired first; pushing to the queue head in
+        // reverse leaves the oldest-expired message at the very front.
+        // (The old implementation push_front'ed in scan order, so the
+        // *newest*-expired of a group landed at the head.)
+        while let Some(msg) = self.requeue_scratch.pop() {
+            self.visible.push_front(msg);
         }
     }
 
@@ -219,15 +604,16 @@ impl SqsQueue {
         self.visible.front().map(|m| now.saturating_sub(m.sent_at)).unwrap_or(0)
     }
 
-    /// p-th percentile of sent→deleted latency.
+    /// p-th percentile of sent→deleted latency (histogram-backed: O(1)
+    /// memory in deletes, O(buckets) per query; p0/p100 exact, interior
+    /// percentiles within 12.5%).
     pub fn delete_latency_pct(&self, p: f64) -> Option<SimTime> {
-        if self.delete_latencies.is_empty() {
-            return None;
-        }
-        let mut xs = self.delete_latencies.clone();
-        xs.sort_unstable();
-        let idx = ((xs.len() - 1) as f64 * p).round() as usize;
-        Some(xs[idx])
+        self.delete_latencies.percentile(p)
+    }
+
+    /// The full sent→deleted latency distribution.
+    pub fn delete_latency_histogram(&self) -> &LatencyHistogram {
+        &self.delete_latencies
     }
 }
 
@@ -235,6 +621,32 @@ impl SqsQueue {
 pub struct DualQueue {
     pub main: SqsQueue,
     pub priority: SqsQueue,
+    /// Reused staging buffer for the per-queue legs of a prioritized drain.
+    scratch: Vec<ReceivedMessage>,
+}
+
+/// Drain `q` into `out` (tagged with `from_priority`), looping the SQS
+/// 10-per-receive cap until `budget` is met or the queue runs dry.
+fn drain_queue_into(
+    q: &mut SqsQueue,
+    from_priority: bool,
+    now: SimTime,
+    budget: usize,
+    scratch: &mut Vec<ReceivedMessage>,
+    out: &mut Vec<(bool, ReceivedMessage)>,
+) -> usize {
+    let mut pulled = 0usize;
+    while pulled < budget {
+        let take = (budget - pulled).min(MAX_RECEIVE_BATCH);
+        scratch.clear();
+        let n = q.receive_into(now, take, scratch);
+        pulled += n;
+        out.extend(scratch.drain(..).map(|m| (from_priority, m)));
+        if n < take {
+            break; // a short batch means the queue is out of visible messages
+        }
+    }
+    pulled
 }
 
 impl DualQueue {
@@ -242,22 +654,33 @@ impl DualQueue {
         DualQueue {
             main: SqsQueue::new("alertmix-main", visibility_timeout, redrive),
             priority: SqsQueue::new("alertmix-priority", visibility_timeout, redrive),
+            scratch: Vec::new(),
         }
     }
 
     /// Pull up to `max`, draining the priority queue first — the paper:
     /// "messages in this queue are handled with higher priority".
     pub fn receive_prioritized(&mut self, now: SimTime, max: usize) -> Vec<(bool, ReceivedMessage)> {
-        let mut out: Vec<(bool, ReceivedMessage)> = self
-            .priority
-            .receive(now, max)
-            .into_iter()
-            .map(|m| (true, m))
-            .collect();
-        if out.len() < max {
-            out.extend(self.main.receive(now, max - out.len()).into_iter().map(|m| (false, m)));
-        }
+        let mut out = Vec::new();
+        self.receive_prioritized_into(now, max, &mut out);
         out
+    }
+
+    /// Batched prioritized drain into a caller-owned (recycled) buffer:
+    /// one call pulls up to `max` messages, internally looping the SQS
+    /// 10-per-receive cap, priority queue strictly first. Appends to
+    /// `out` and returns the number of messages pulled.
+    pub fn receive_prioritized_into(
+        &mut self,
+        now: SimTime,
+        max: usize,
+        out: &mut Vec<(bool, ReceivedMessage)>,
+    ) -> usize {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let mut pulled = drain_queue_into(&mut self.priority, true, now, max, &mut scratch, out);
+        pulled += drain_queue_into(&mut self.main, false, now, max - pulled, &mut scratch, out);
+        self.scratch = scratch;
+        pulled
     }
 
     pub fn total_visible(&self) -> usize {
@@ -344,6 +767,26 @@ mod tests {
     }
 
     #[test]
+    fn change_visibility_shortens_lease() {
+        let mut q = SqsQueue::new("t", 1_000, None);
+        q.send(0, "x");
+        let got = q.receive(0, 1);
+        // Shorten: expires at 110 instead of 1000.
+        assert!(q.change_visibility(10, got[0].handle, 100));
+        // The abandoned original entry was the ring's back; trimming it
+        // first keeps the shortened lease on the zero-alloc ring.
+        assert!(q.expiry_ooo.is_empty(), "shortened lease stays on the ring");
+        assert!(q.receive(50, 1).is_empty(), "not yet expired");
+        let again = q.receive(150, 1);
+        assert_eq!(again.len(), 1, "shortened lease redelivers early");
+        assert_eq!(again[0].receive_count, 2);
+        // The abandoned original expiry entry must not redeliver again.
+        assert!(q.receive(1_100, 1).is_empty());
+        assert!(q.delete(1_100, again[0].handle));
+        assert_eq!(q.in_flight_count(), 0);
+    }
+
+    #[test]
     fn redrive_to_dlq_after_max_receives() {
         let mut q = SqsQueue::new("t", 100, Some(RedrivePolicy { max_receive_count: 2 }));
         q.send(0, "poison");
@@ -360,6 +803,157 @@ mod tests {
     }
 
     #[test]
+    fn requeue_redelivers_oldest_expired_first() {
+        // Regression: the old prefix scan walked expiries oldest-first but
+        // push_front reversed them, so the newest-expired landed at the
+        // queue head.
+        let mut q = SqsQueue::new("t", 100, None);
+        let a = q.send(0, "a");
+        let b = q.send(0, "b");
+        let c = q.send(0, "c");
+        // Staggered leases: a expires at 100, b at 110, c at 120.
+        assert_eq!(q.receive(0, 1)[0].id, a);
+        assert_eq!(q.receive(10, 1)[0].id, b);
+        assert_eq!(q.receive(20, 1)[0].id, c);
+        // All expired: redelivery must be oldest-expired first.
+        let again = q.receive(200, 10);
+        let ids: Vec<u64> = again.iter().map(|m| m.id).collect();
+        assert_eq!(ids, vec![a, b, c]);
+    }
+
+    #[test]
+    fn requeue_keeps_fifo_for_simultaneous_expiries() {
+        // Messages received in one batch share an expiry time; redelivery
+        // must preserve their original order.
+        let mut q = SqsQueue::new("t", 100, None);
+        let ids: Vec<u64> = (0..5).map(|i| q.send(0, format!("{i}"))).collect();
+        assert_eq!(q.receive(0, 10).len(), 5);
+        let again = q.receive(500, 10);
+        let redelivered: Vec<u64> = again.iter().map(|m| m.id).collect();
+        assert_eq!(redelivered, ids);
+    }
+
+    #[test]
+    fn out_of_order_receive_clock_still_redelivers() {
+        // A receive with an earlier `now` than the previous one produces a
+        // lease that would violate the FIFO index order; it must spill to
+        // the side index and still expire correctly.
+        let mut q = SqsQueue::new("t", 1_000, None);
+        let a = q.send(0, "a");
+        let b = q.send(0, "b");
+        assert_eq!(q.receive(100, 1)[0].id, a); // expires 1100 (fifo)
+        assert_eq!(q.receive(50, 1)[0].id, b); // expires 1050 (ooo)
+        let again = q.receive(2_000, 10);
+        let ids: Vec<u64> = again.iter().map(|m| m.id).collect();
+        // b expired first (1050 < 1100), so it is redelivered first.
+        assert_eq!(ids, vec![b, a]);
+    }
+
+    #[test]
+    fn expiry_ring_stays_bounded_for_prompt_acks() {
+        // Regression for the compaction heuristic: with a long visibility
+        // timeout and a consumer that acks immediately (the pipeline's
+        // normal mode), abandoned ring entries must be reclaimed long
+        // before their 30s lease would expire.
+        let mut q = SqsQueue::new("t", 30_000, None);
+        let mut now = 0;
+        for _ in 0..5_000 {
+            for _ in 0..10 {
+                q.send(now, JobBody::StreamId(1));
+            }
+            let got = q.receive(now, 10);
+            for m in got {
+                q.delete(now, m.handle);
+            }
+            now += 1;
+        }
+        assert_eq!(q.in_flight_count(), 0);
+        assert!(
+            q.expiry_fifo.len() < 256,
+            "expiry ring must stay O(in-flight), not O(visibility window): len={}",
+            q.expiry_fifo.len()
+        );
+    }
+
+    #[test]
+    fn expiry_ring_stays_bounded_under_heartbeat_extensions() {
+        // A consumer heartbeating long-running jobs (repeated
+        // change_visibility, no deletes) abandons a ring entry per
+        // extension; compaction must reclaim those too.
+        let mut q = SqsQueue::new("t", 30_000, None);
+        for _ in 0..8 {
+            q.send(0, JobBody::StreamId(1));
+        }
+        let got = q.receive(0, 10);
+        let handles: Vec<ReceiptHandle> = got.iter().map(|m| m.handle).collect();
+        let mut now = 0;
+        for _ in 0..5_000 {
+            now += 1;
+            for h in &handles {
+                assert!(q.change_visibility(now, *h, 30_000));
+            }
+        }
+        assert!(
+            q.expiry_fifo.len() + q.expiry_ooo.len() < 256,
+            "expiry indexes must stay O(in-flight) under heartbeats: ring={} ooo={}",
+            q.expiry_fifo.len(),
+            q.expiry_ooo.len()
+        );
+        // The extended leases are all still live and expire correctly.
+        assert_eq!(q.receive(now + 40_000, 10).len(), 8);
+    }
+
+    #[test]
+    fn extend_then_ack_does_not_divert_ring_to_side_index() {
+        let mut q = SqsQueue::new("t", 1_000, None);
+        q.send(0, JobBody::StreamId(1));
+        let got = q.receive(0, 1);
+        // Extend far into the future, then ack: the abandoned far-future
+        // ring entry must not linger as the ring's back, where it would
+        // reroute every later (earlier-expiring) receive into the
+        // allocating side index.
+        assert!(q.change_visibility(1, got[0].handle, 1_000_000));
+        assert!(q.delete(2, got[0].handle));
+        let mut now = 10;
+        for _ in 0..100 {
+            q.send(now, JobBody::StreamId(2));
+            let m = q.receive(now, 1);
+            q.delete(now, m[0].handle);
+            now += 1;
+        }
+        assert!(q.expiry_ooo.is_empty(), "receives must stay on the ring fast path");
+        assert_eq!(q.counters.deleted, 101);
+    }
+
+    #[test]
+    fn delete_batch_acks_in_flight_only() {
+        let mut q = SqsQueue::new("t", 30_000, None);
+        for i in 0..3 {
+            q.send(0, format!("{i}"));
+        }
+        let got = q.receive(1, 10);
+        let mut handles: Vec<ReceiptHandle> = got.iter().map(|m| m.handle).collect();
+        handles.push(ReceiptHandle(9_999)); // bogus handle is skipped
+        assert_eq!(q.delete_batch(2, &handles), 3);
+        assert_eq!(q.counters.deleted, 3);
+        assert_eq!(q.in_flight_count(), 0);
+    }
+
+    #[test]
+    fn receive_into_appends_to_reused_buffer() {
+        let mut q = SqsQueue::new("t", 30_000, None);
+        for i in 0..4 {
+            q.send(0, JobBody::StreamId(i));
+        }
+        let mut buf: Vec<ReceivedMessage> = Vec::new();
+        assert_eq!(q.receive_into(1, 2, &mut buf), 2);
+        assert_eq!(q.receive_into(1, 10, &mut buf), 2, "appends after existing contents");
+        assert_eq!(buf.len(), 4);
+        let ids: Vec<Option<u64>> = buf.iter().map(|m| m.body.stream_id()).collect();
+        assert_eq!(ids, vec![Some(0), Some(1), Some(2), Some(3)]);
+    }
+
+    #[test]
     fn dual_queue_priority_first() {
         let mut d = DualQueue::new(30_000, None);
         d.main.send(0, "m1");
@@ -368,8 +962,49 @@ mod tests {
         let got = d.receive_prioritized(1, 2);
         assert_eq!(got.len(), 2);
         assert!(got[0].0, "priority message first");
-        assert_eq!(got[0].1.body, "p1");
-        assert_eq!(got[1].1.body, "m1");
+        assert_eq!(got[0].1.body.as_text(), Some("p1"));
+        assert_eq!(got[1].1.body.as_text(), Some("m1"));
+    }
+
+    #[test]
+    fn prioritized_drain_loops_past_the_api_cap() {
+        // One receive_prioritized_into call drains more than the SQS
+        // 10-message cap by looping probes internally.
+        let mut d = DualQueue::new(30_000, None);
+        for i in 0..25u64 {
+            d.main.send(0, JobBody::StreamId(i));
+        }
+        for i in 0..7u64 {
+            d.priority.send(0, JobBody::StreamId(1_000 + i));
+        }
+        let mut out = Vec::new();
+        assert_eq!(d.receive_prioritized_into(1, 50, &mut out), 32);
+        assert_eq!(out.len(), 32);
+        // First the 7 priority jobs in FIFO order, then the 25 main jobs.
+        let got: Vec<(bool, u64)> =
+            out.iter().map(|(p, m)| (*p, m.body.stream_id().unwrap())).collect();
+        let want: Vec<(bool, u64)> = (0..7u64)
+            .map(|i| (true, 1_000 + i))
+            .chain((0..25u64).map(|i| (false, i)))
+            .collect();
+        assert_eq!(got, want);
+        assert_eq!(d.priority.counters.received, 7);
+        assert_eq!(d.main.counters.received, 25);
+    }
+
+    #[test]
+    fn job_body_fast_path_and_legacy_parse() {
+        // Canonical wire form takes the compact path.
+        assert_eq!(JobBody::from_legacy("{\"stream_id\":42}"), JobBody::StreamId(42));
+        assert_eq!(JobBody::StreamId(42).to_legacy_string(), "{\"stream_id\":42}");
+        assert_eq!(JobBody::StreamId(42).stream_id(), Some(42));
+        // Non-canonical spacing stays text but still parses tolerantly.
+        let spaced = JobBody::from_legacy("{\"stream_id\": 7 }");
+        assert!(matches!(spaced, JobBody::Text(_)));
+        assert_eq!(spaced.stream_id(), Some(7));
+        assert_eq!(spaced.to_legacy_string(), "{\"stream_id\": 7 }");
+        // Garbage is preserved and yields no stream id.
+        assert_eq!(JobBody::from_legacy("garbage").stream_id(), None);
     }
 
     #[test]
@@ -385,6 +1020,50 @@ mod tests {
         // latencies: 100-0, 100-10, ..., 100-90 => 10..100
         assert_eq!(q.delete_latency_pct(0.0), Some(10));
         assert_eq!(q.delete_latency_pct(1.0), Some(100));
+        assert_eq!(q.delete_latency_histogram().samples(), 10);
+    }
+
+    #[test]
+    fn histogram_small_values_exact() {
+        let mut h = LatencyHistogram::new();
+        for v in 0..8u64 {
+            h.record(v);
+        }
+        // Below 8 every value has its own bucket: interior percentiles are
+        // exact too.
+        assert_eq!(h.percentile(0.5), Some(4)); // rank round(7*0.5)=4
+        assert_eq!(h.percentile(0.0), Some(0));
+        assert_eq!(h.percentile(1.0), Some(7));
+    }
+
+    #[test]
+    fn histogram_interior_percentiles_bounded_error() {
+        let mut h = LatencyHistogram::new();
+        for v in 0..=1_000u64 {
+            h.record(v);
+        }
+        let p50 = h.percentile(0.5).unwrap();
+        // True p50 is 500; the bucket upper bound may overestimate by at
+        // most 12.5%.
+        assert!((500..=562).contains(&p50), "p50={p50}");
+        let p99 = h.percentile(0.99).unwrap();
+        assert!((990..=1_000).contains(&p99), "p99={p99}");
+        assert_eq!(h.samples(), 1_001);
+    }
+
+    #[test]
+    fn histogram_handles_extreme_values() {
+        // The top bucket's upper bound is u64::MAX; computing it must not
+        // overflow (regression: `base + width - 1` panicked in debug).
+        let mut h = LatencyHistogram::new();
+        h.record(u64::MAX);
+        h.record(u64::MAX - 1);
+        h.record(0);
+        assert_eq!(h.percentile(0.0), Some(0));
+        assert_eq!(h.percentile(1.0), Some(u64::MAX));
+        // Interior percentile walks bucket_upper on the top bucket; the
+        // result is that bucket's upper bound.
+        assert_eq!(h.percentile(0.5), Some(u64::MAX));
     }
 
     #[test]

@@ -18,6 +18,8 @@ impl IdGen {
         IdGen { next: 1 }
     }
 
+    // Not an Iterator: ids are infinite and allocation is explicit.
+    #[allow(clippy::should_implement_trait)]
     pub fn next(&mut self) -> u64 {
         let v = self.next;
         self.next += 1;

@@ -1,0 +1,160 @@
+//! Contract tests for the zero-allocation SQS layer: the compact
+//! [`JobBody`] representation must be wire-compatible with the legacy
+//! `{"stream_id":N}` strings, and the batched prioritized drain
+//! (`receive_prioritized_into` + `delete_batch`) must preserve the same
+//! delivery guarantees as the one-receive-per-probe path it replaced.
+
+use alertmix::sqs::{DualQueue, JobBody, ReceiptHandle, ReceivedMessage};
+use alertmix::util::prop::forall;
+use std::collections::HashSet;
+
+// ---------------------------------------------------------------------------
+// Golden: JobBody <-> legacy wire strings, byte-identical both ways.
+
+#[test]
+fn golden_jobbody_roundtrips_byte_identically() {
+    // Canonical renderings take the compact fast path and render back to
+    // the exact same bytes.
+    for id in [0u64, 1, 7, 42, 999, 1_000_000, u64::MAX - 1, u64::MAX] {
+        let wire = format!("{{\"stream_id\":{id}}}");
+        let body = JobBody::from_legacy(&wire);
+        assert_eq!(body, JobBody::StreamId(id), "compact path for {wire}");
+        assert_eq!(body.to_legacy_string(), wire, "render({wire})");
+        assert_eq!(body.stream_id(), Some(id));
+        // And the producer-side constructor renders identically.
+        assert_eq!(JobBody::StreamId(id).to_legacy_string(), wire);
+    }
+    // Everything else is preserved verbatim (still byte-identical), even
+    // when it *almost* matches the canonical form.
+    let weird = [
+        "{\"stream_id\": 7 }",                      // non-canonical spacing
+        "{\"stream_id\":007}",                       // leading zeros
+        "{\"stream_id\":-3}",                        // negative
+        "{\"stream_id\":99999999999999999999999}",   // u64 overflow
+        "{\"stream_id\":12,\"extra\":1}",            // extra fields
+        "garbage",
+        "",
+    ];
+    for s in weird {
+        let body = JobBody::from_legacy(s);
+        assert!(matches!(body, JobBody::Text(_)), "text path for {s:?}");
+        assert_eq!(body.to_legacy_string(), s, "render({s:?})");
+    }
+    // The tolerant legacy scan still understands spaced bodies, exactly
+    // like the old FeedRouter::parse_stream_id.
+    assert_eq!(JobBody::from_legacy("{\"stream_id\": 7 }").stream_id(), Some(7));
+    assert_eq!(JobBody::from_legacy("garbage").stream_id(), None);
+    assert_eq!(JobBody::from_legacy("{\"stream_id\":-3}").stream_id(), None);
+}
+
+#[test]
+fn queue_is_transparent_to_body_representation() {
+    // A legacy-string producer and a compact producer are
+    // indistinguishable to the consumer.
+    let mut d = DualQueue::new(30_000, None);
+    d.main.send(0, "{\"stream_id\":5}");
+    d.main.send(0, JobBody::StreamId(5));
+    let got = d.receive_prioritized(1, 10);
+    assert_eq!(got.len(), 2);
+    assert_eq!(got[0].1.body, got[1].1.body);
+    assert_eq!(got[0].1.body.stream_id(), Some(5));
+}
+
+// ---------------------------------------------------------------------------
+// Property: the batched drain is priority-first and FIFO within a queue.
+
+#[test]
+fn prop_batched_drain_priority_first_fifo() {
+    forall("receive_prioritized_into drains priority first, FIFO per queue", 80, |g| {
+        let mut d = DualQueue::new(1_000_000, None); // lease never expires mid-test
+        let np = g.usize(0, 30);
+        let nm = g.usize(0, 30);
+        for i in 0..np {
+            d.priority.send(0, JobBody::StreamId(100_000 + i as u64));
+        }
+        for i in 0..nm {
+            d.main.send(0, JobBody::StreamId(i as u64));
+        }
+        let mut out: Vec<(bool, ReceivedMessage)> = Vec::new();
+        let mut drained: Vec<(bool, u64)> = Vec::new();
+        let mut now = 1;
+        loop {
+            out.clear();
+            let n = d.receive_prioritized_into(now, g.usize(1, 25), &mut out);
+            if n == 0 {
+                break;
+            }
+            if n != out.len() {
+                return false;
+            }
+            drained.extend(out.iter().map(|(p, m)| (*p, m.body.stream_id().unwrap())));
+            now += 1;
+        }
+        // Nothing expires, so the union of the per-call drains must be:
+        // every priority job in send order, then every main job in send
+        // order.
+        let want: Vec<(bool, u64)> = (0..np)
+            .map(|i| (true, 100_000 + i as u64))
+            .chain((0..nm).map(|i| (false, i as u64)))
+            .collect();
+        drained == want
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Property: at-least-once + conservation hold under the batched path.
+
+#[test]
+fn prop_batched_drain_at_least_once_and_conservation() {
+    forall("batched drain + delete_batch keep at-least-once + conservation", 50, |g| {
+        let vt = g.u64(50, 500);
+        let mut d = DualQueue::new(vt, None);
+        let n = g.usize(1, 80);
+        // Message ids are per-queue, so key ledgers by (queue, id).
+        let mut expected: Vec<(bool, u64)> = Vec::new();
+        for i in 0..n {
+            let body = JobBody::StreamId(i as u64);
+            if g.chance(0.3) {
+                expected.push((true, d.priority.send(i as u64, body)));
+            } else {
+                expected.push((false, d.main.send(i as u64, body)));
+            }
+        }
+        let mut seen: HashSet<(bool, u64)> = HashSet::new();
+        let mut out: Vec<(bool, ReceivedMessage)> = Vec::new();
+        let mut pri_acks: Vec<ReceiptHandle> = Vec::new();
+        let mut main_acks: Vec<ReceiptHandle> = Vec::new();
+        let mut deleted = 0usize;
+        let mut now = 0u64;
+        let mut guard = 0;
+        while deleted < n {
+            guard += 1;
+            if guard > 100_000 {
+                return false; // livelock
+            }
+            now += g.u64(1, vt);
+            out.clear();
+            d.receive_prioritized_into(now, g.usize(1, 30), &mut out);
+            pri_acks.clear();
+            main_acks.clear();
+            for (from_pri, m) in &out {
+                seen.insert((*from_pri, m.id));
+                // Flaky consumer: sometimes forgets to ack.
+                if g.chance(0.7) {
+                    if *from_pri {
+                        pri_acks.push(m.handle);
+                    } else {
+                        main_acks.push(m.handle);
+                    }
+                }
+            }
+            deleted += d.priority.delete_batch(now, &pri_acks);
+            deleted += d.main.delete_batch(now, &main_acks);
+        }
+        let all_seen = expected.iter().all(|k| seen.contains(k));
+        all_seen
+            && d.main.counters.deleted + d.priority.counters.deleted == n as u64
+            && d.total_visible() == 0
+            && d.main.in_flight_count() + d.priority.in_flight_count() == 0
+    });
+}
