@@ -1,15 +1,17 @@
 # AlertMix — repo-root automation.
 #
-#   make verify        tier-1 gate: offline release build + full test suite
-#                      (+ clippy -D warnings when clippy is installed)
-#   make bench-ingest  refresh BENCH_ingest.json (ingest hot-path numbers)
-#   make bench-sqs     refresh BENCH_sqs.json (SQS hot-path numbers)
-#   make bench         run every bench target
-#   make artifacts     (re)build the AOT enrichment artifacts (needs jax)
+#   make verify              tier-1 gate: offline release build + full test
+#                            suite (+ clippy -D warnings when installed)
+#   make example-connectors  run examples/five_sources.rs (all five source
+#                            connectors live end to end; asserts delivery)
+#   make bench-ingest        refresh BENCH_ingest.json (ingest hot-path numbers)
+#   make bench-sqs           refresh BENCH_sqs.json (SQS hot-path numbers)
+#   make bench               run every bench target
+#   make artifacts           (re)build the AOT enrichment artifacts (needs jax)
 
 CARGO ?= cargo
 
-.PHONY: verify bench-ingest bench-sqs bench artifacts
+.PHONY: verify example-connectors bench-ingest bench-sqs bench artifacts
 
 # The clippy gate covers lib + bins (not --all-targets: the bench/test
 # surface is exercised by `cargo test` and the CI bench smoke instead).
@@ -20,6 +22,9 @@ verify:
 	else \
 		echo "cargo clippy unavailable in this toolchain; lint skipped"; \
 	fi
+
+example-connectors:
+	cd rust && $(CARGO) run --release --example five_sources
 
 bench-ingest:
 	cd rust && $(CARGO) bench --bench bench_ingest

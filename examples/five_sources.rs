@@ -1,0 +1,120 @@
+//! Five source connectors live at once — the abstract's scenario list on
+//! one pipeline: news RSS, Facebook and Twitter timelines, YouTube video
+//! uploads, and a system-monitoring gauge fleet, all registered through
+//! the pluggable `ConnectorRegistry` (no enum, no per-channel code in the
+//! pipeline).
+//!
+//! Exits non-zero unless every connector family delivers end to end:
+//! YouTube + metrics streams must produce sink documents, and the
+//! threshold rules on the monitoring channel must fire alert events.
+//!
+//! ```bash
+//! cargo run --release --example five_sources
+//! FIVE_SOURCES_FEEDS=8000 cargo run --release --example five_sources
+//! ```
+
+use alertmix::config::{AlertMixConfig, ConnectorSpec};
+use alertmix::pipeline::{bootstrap, AlertRule};
+use alertmix::sim::HOUR;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = AlertMixConfig {
+        seed: 61,
+        n_feeds: 3_000,
+        use_xla: cfg!(feature = "xla")
+            && alertmix::runtime::find_artifact(alertmix::runtime::DEFAULT_ARTIFACT).is_some(),
+        ..AlertMixConfig::default()
+    };
+    if let Ok(n) = std::env::var("FIVE_SOURCES_FEEDS") {
+        cfg.n_feeds = n.parse()?;
+    }
+    // The declarative connector list — five sources, one pipeline.
+    cfg.connectors = vec![
+        ConnectorSpec::new("news", 8, 0.50),
+        ConnectorSpec::new("facebook", 2, 0.08),
+        ConnectorSpec::new("twitter", 2, 0.12),
+        ConnectorSpec::new("youtube", 3, 0.18),
+        ConnectorSpec::new("metrics", 3, 0.12),
+    ];
+
+    let (mut sys, mut world, h) = bootstrap(cfg)?;
+
+    // Alert subscriptions: a newsroom keyword desk plus an ops pager fed
+    // by the monitoring channel's threshold breaches.
+    world.alerts.subscribe(AlertRule::keyword(1, "markets desk", &["markets"]));
+    world.alerts.subscribe(AlertRule::keyword(2, "video desk", &["video", "upload"]));
+    world.alerts.subscribe(AlertRule::keyword(3, "ops pager: critical", &["crit", "alarm"]));
+    world.alerts.subscribe(AlertRule::keyword(4, "ops pager: cpu", &["cpu", "alarm"]));
+
+    println!("five_sources: {} sources over {} connectors", world.store.len(), world.connectors.len());
+    for (id, d) in world.connectors.descriptors() {
+        let n = world.store.records().filter(|r| r.channel == id).count();
+        println!("  {:<12} {:>6} streams  kind {:?}", d.name, n, d.kind);
+    }
+
+    sys.run_until(&mut world, 4 * HOUR);
+    world.flush_enrichment(sys.now());
+    world.sink.flush();
+
+    // Per-channel delivery table.
+    println!("\nafter 4 virtual hours:");
+    println!("{:<12} {:>8} {:>10} {:>10} {:>10} {:>9}", "channel", "streams", "polls", "items", "sink-docs", "pool");
+    let mut sink_docs_by_channel = vec![0u64; world.connectors.len()];
+    for doc in world.sink.docs() {
+        if doc.stream_id >= 1 && doc.stream_id <= world.universe.n_feeds() as u64 {
+            let ch = world.universe.profile(doc.stream_id).channel;
+            sink_docs_by_channel[ch.0 as usize] += 1;
+        }
+    }
+    for (id, d) in world.connectors.descriptors() {
+        let mut streams = 0u64;
+        let mut polls = 0u64;
+        let mut items = 0u64;
+        for r in world.store.records().filter(|r| r.channel == id) {
+            streams += 1;
+            polls += r.polls;
+            items += r.items_seen;
+        }
+        let pool = h.pool_for(id).map(|p| sys.stats(p).pool_size).unwrap_or(0);
+        println!(
+            "{:<12} {:>8} {:>10} {:>10} {:>10} {:>9}",
+            d.name, streams, polls, items, sink_docs_by_channel[id.0 as usize], pool
+        );
+    }
+
+    let c = &world.counters;
+    println!(
+        "\nitems: fetched {} -> ingested {} / deduped {} (sink docs {})",
+        c.items_fetched, c.items_ingested, c.items_deduped, world.sink.doc_count()
+    );
+    println!(
+        "social API: {} calls, {} rate-limited | sysmon: {} scrapes, {} breaches",
+        world.social.calls, world.social.rate_limited, world.sysmon.scrapes, world.sysmon.breaches
+    );
+    println!("alerts: {} events across {} rules", world.alerts.events.len(), world.alerts.rule_count());
+    for ev in world.alerts.events.iter().take(6) {
+        println!("  [{:>7}s] {:<20} {}", ev.fired_at / 1000, ev.rule_name, ev.title);
+    }
+
+    // End-to-end acceptance: the two new scenario connectors deliver.
+    let yt = world.connectors.id("youtube").unwrap();
+    let metrics = world.connectors.id("metrics").unwrap();
+    anyhow::ensure!(
+        sink_docs_by_channel[yt.0 as usize] > 0,
+        "youtube streams produced no sink docs"
+    );
+    anyhow::ensure!(
+        sink_docs_by_channel[metrics.0 as usize] > 0,
+        "metrics streams produced no sink docs"
+    );
+    anyhow::ensure!(
+        world.alerts.events.iter().any(|e| e.rule_id == 3 || e.rule_id == 4),
+        "monitoring threshold rules fired no alerts"
+    );
+    anyhow::ensure!(
+        c.items_fetched == c.items_ingested + c.items_deduped,
+        "item conservation violated"
+    );
+    println!("\nfive_sources OK: all five connectors delivered end to end");
+    Ok(())
+}

@@ -1,40 +1,43 @@
 //! Multi-channel ingestion: News + Custom RSS + Facebook + Twitter flowing
 //! through their dedicated router pools simultaneously — the paper's
 //! Figure-2 topology exercised end to end, including the social platforms'
-//! rate limits and the per-channel OptimalSizeExploringResizer.
+//! rate limits and the per-channel OptimalSizeExploringResizer. Channels
+//! come from the `ConnectorRegistry`; this example keeps the classic
+//! quartet (see `five_sources` for the extended scenario list).
 //!
 //! ```bash
 //! cargo run --release --example multi_channel
 //! ```
 
-use alertmix::config::AlertMixConfig;
-use alertmix::pipeline::run_for;
+use alertmix::config::{AlertMixConfig, ConnectorSpec};
+use alertmix::pipeline::World;
 use alertmix::sim::HOUR;
-use alertmix::store::streams::Channel;
 
 fn main() -> anyhow::Result<()> {
-    // A social-heavy mix: 30% of sources are Facebook/Twitter accounts.
-    let cfg = AlertMixConfig {
+    // A social-heavy mix: 30% of sources are Facebook/Twitter accounts,
+    // declared directly on the connector list (share = universe fraction).
+    let mut cfg = AlertMixConfig {
         seed: 99,
         n_feeds: 10_000,
         use_xla: cfg!(feature = "xla")
             && alertmix::runtime::find_artifact(alertmix::runtime::DEFAULT_ARTIFACT).is_some(),
         ..AlertMixConfig::default()
     };
-    // The universe's channel mix is configured through UniverseConfig;
-    // World::build uses the defaults (5% custom RSS / 2% FB / 3% TW), so
-    // boost the social share by re-tagging — easiest done via a custom
-    // build here:
+    cfg.connectors = vec![
+        ConnectorSpec::new("news", 16, 0.60),
+        ConnectorSpec::new("custom_rss", 4, 0.10),
+        ConnectorSpec::new("facebook", 4, 0.14),
+        ConnectorSpec::new("twitter", 4, 0.16),
+    ];
     let (mut sys, mut world, _h) = alertmix::pipeline::bootstrap(cfg)?;
 
-    println!(
-        "multi-channel run: {} sources ({} news / {} custom-rss / {} facebook / {} twitter)",
-        world.store.len(),
-        count(&world, Channel::News),
-        count(&world, Channel::CustomRss),
-        count(&world, Channel::Facebook),
-        count(&world, Channel::Twitter),
-    );
+    print!("multi-channel run: {} sources (", world.store.len());
+    let names: Vec<String> = world
+        .connectors
+        .descriptors()
+        .map(|(id, d)| format!("{} {}", count(&world, id), d.name))
+        .collect();
+    println!("{})", names.join(" / "));
 
     sys.run_until(&mut world, 4 * HOUR);
     world.flush_enrichment(sys.now());
@@ -42,35 +45,27 @@ fn main() -> anyhow::Result<()> {
 
     println!("\nafter 4 virtual hours:");
     println!("{:<14} {:>8} {:>10} {:>8} {:>9}", "channel", "streams", "polls", "items", "pool-size");
-    let mut per_channel: Vec<(Channel, u64, u64)> = Vec::new();
-    for ch in Channel::ALL {
+    let handles = world.handles().clone();
+    for (id, d) in world.connectors.descriptors() {
         let mut polls = 0;
         let mut items = 0;
-        for p in world.universe.profiles() {
-            if p.channel == ch {
-                if let Some(rec) = world.store.get(p.id) {
-                    polls += rec.polls;
-                    items += rec.items_seen;
-                }
-            }
+        for rec in world.store.records().filter(|r| r.channel == id) {
+            polls += rec.polls;
+            items += rec.items_seen;
         }
-        per_channel.push((ch, polls, items));
-    }
-    let handles = world.handles().clone();
-    for (ch, polls, items) in &per_channel {
-        let pool = sys.stats(handles.pool_for(*ch));
+        let pool_size = handles.pool_for(id).map(|p| sys.stats(p).pool_size).unwrap_or(0);
         println!(
             "{:<14} {:>8} {:>10} {:>8} {:>9}",
-            ch.name(),
-            count(&world, *ch),
+            d.name,
+            count(&world, id),
             polls,
             items,
-            pool.pool_size
+            pool_size
         );
     }
 
     println!(
-        "\nsocial API pressure: {} calls, {} rate-limited (per-platform 15-min windows)",
+        "\nsocial API pressure: {} calls, {} rate-limited (per-platform windows)",
         world.social.calls, world.social.rate_limited
     );
     println!(
@@ -84,20 +79,18 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Per-channel docs in the sink prove all four paths deliver.
-    let mut by_channel = [0usize; 4];
-    for doc_id in 1..=world.counters.items_fetched {
-        if let Some(doc) = world.sink.get(doc_id) {
-            let ch = world.universe.profile(doc.stream_id).channel;
-            by_channel[Channel::ALL.iter().position(|c| *c == ch).unwrap()] += 1;
-        }
+    let mut by_channel = vec![0usize; world.connectors.len()];
+    for doc in world.sink.docs() {
+        let ch = world.universe.profile(doc.stream_id).channel;
+        by_channel[ch.0 as usize] += 1;
     }
     println!("\nsink docs by channel:");
-    for (i, ch) in Channel::ALL.iter().enumerate() {
-        println!("  {:<12} {}", ch.name(), by_channel[i]);
+    for (id, d) in world.connectors.descriptors() {
+        println!("  {:<12} {}", d.name, by_channel[id.0 as usize]);
     }
     Ok(())
 }
 
-fn count(world: &alertmix::pipeline::World, ch: Channel) -> usize {
+fn count(world: &World, ch: alertmix::connector::ChannelId) -> usize {
     world.universe.profiles().iter().filter(|p| p.channel == ch).count()
 }

@@ -9,7 +9,7 @@
 use alertmix::config::AlertMixConfig;
 use alertmix::pipeline::{bootstrap, PrioritizeStream};
 use alertmix::sim::{HOUR, MINUTE, SECOND};
-use alertmix::store::streams::{Channel, StreamRecord};
+use alertmix::store::streams::StreamRecord;
 
 fn main() -> anyhow::Result<()> {
     let cfg = AlertMixConfig {
@@ -34,6 +34,7 @@ fn main() -> anyhow::Result<()> {
     // A newsroom adds 8 new sources. Half go through the priority path,
     // half are just inserted and wait for the normal cron.
     let t0 = sys.now();
+    let news = world.connectors.id("news").expect("news connector registered");
     let mut priority_ids = Vec::new();
     let mut normal_ids = Vec::new();
     for k in 0..8u64 {
@@ -42,7 +43,7 @@ fn main() -> anyhow::Result<()> {
         // content to fetch (re-use profile 1's url pattern).
         let mut rec = StreamRecord::new(
             id,
-            Channel::News,
+            news,
             format!("http://src-{}.feeds.sim/rss", (k % 50) + 1),
             world.cfg.base_poll_interval,
             t0,

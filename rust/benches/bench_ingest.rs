@@ -6,26 +6,38 @@
 //! per token), a boxed 1 KiB feature array per item, a row-struct pending
 //! vec with a flat-copy per flush, and a freshly allocated
 //! `Vec<Enrichment>` (plus per-item scores vec) per batch. The streaming
-//! side is the shipped hot path: fused featurize fold into a pooled
-//! columnar buffer, the columnar `Batcher`, the backend's reused output
-//! slice, and the allocation-free canonical-URL dedup hash.
+//! side is the shipped hot path — and it is driven **through the
+//! pluggable `SourceConnector::poll` dispatch** (trait object + registry
+//! buffers): each simulated poll acquires the `World`'s pooled enrich
+//! buffers, does the fused featurize fold into the pooled columnar
+//! buffer, stages rows in the columnar `Batcher`, and reuses the
+//! backend's output slice plus the allocation-free canonical-URL dedup
+//! hash.
 //!
 //! A thread-local counting allocator reports heap allocations per item in
 //! steady state (passes over an already-seen working set — the re-served
-//! RSS re-poll case): the streaming path must be **zero** and the bench
-//! asserts it. Results go to `BENCH_ingest.json` at the repo root so later
-//! PRs can track the trajectory.
+//! RSS re-poll case): the streaming path must be **zero**, dynamic
+//! dispatch and pool round-trips included, and the bench asserts it.
+//! Results go to `BENCH_ingest.json` at the repo root so later PRs can
+//! track the trajectory.
 //!
 //! ```bash
 //! cargo bench --bench bench_ingest
 //! INGEST_ITEMS=32768 INGEST_PASSES=10 cargo bench --bench bench_ingest
 //! ```
 
+use alertmix::actor::Ctx;
 use alertmix::benchlib::{allocs, bench_out_path, env_u64, section, time, CountingAllocator, Table};
+use alertmix::config::AlertMixConfig;
+use alertmix::connector::{PollResult, SourceConnector};
 use alertmix::dedup::{DedupVerdict, Deduper};
+use alertmix::pipeline::World;
 use alertmix::runtime::{Batcher, BatcherConfig, CpuFallbackEnricher, EnrichBackend, Enrichment};
+use alertmix::store::streams::PollOutcome;
 use alertmix::text::{featurize_item_into, featurize_item_reference, FEATURE_DIM};
 use alertmix::util::rng::Rng;
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
 
 #[global_allocator]
 static GLOBAL: CountingAllocator = CountingAllocator;
@@ -113,55 +125,101 @@ fn reference_pass(
 }
 
 // -- streaming (shipped) path -----------------------------------------------
+//
+// Driven through the real `SourceConnector` trait: the bench registers a
+// fixture connector whose `poll` featurizes one poll's worth of the
+// working set into the `World`'s pooled enrich buffers (exactly the
+// buffer discipline the RSS/social/youtube/metrics connectors use), so
+// the measured loop includes the dynamic dispatch and the pool
+// round-trip.
 
-fn streaming_flush(
-    items: &[Item],
-    dedup: &mut Deduper,
-    backend: &mut CpuFallbackEnricher,
-    batcher: &mut Batcher,
-) -> u64 {
-    let n = batcher.staged_len();
-    let out = backend.enrich_batch(batcher.staged_features(), n).unwrap();
+struct StreamState {
+    dedup: Deduper,
+    backend: CpuFallbackEnricher,
+    batcher: Batcher,
+}
+
+struct FixtureConnector {
+    items: Vec<Item>,
+    state: RefCell<StreamState>,
+    fresh: Cell<u64>,
+}
+
+fn streaming_flush(items: &[Item], st: &mut StreamState) -> u64 {
+    let n = st.batcher.staged_len();
+    let out = st.backend.enrich_batch(st.batcher.staged_features(), n).unwrap();
     let mut fresh = 0;
     for (i, e) in out.iter().enumerate() {
-        let t = batcher.staged_tickets()[i];
+        let t = st.batcher.staged_tickets()[i];
         let it = &items[t as usize];
-        if matches!(dedup.check_and_insert(&it.guid, &it.url, e.simhash, t), DedupVerdict::Fresh) {
+        if matches!(
+            st.dedup.check_and_insert(&it.guid, &it.url, e.simhash, t),
+            DedupVerdict::Fresh
+        ) {
             fresh += 1;
         }
     }
-    batcher.clear_staged();
+    st.batcher.clear_staged();
     fresh
 }
 
-fn streaming_pass(
-    items: &[Item],
-    dedup: &mut Deduper,
-    backend: &mut CpuFallbackEnricher,
-    batcher: &mut Batcher,
-    poll_buf: &mut Vec<f32>,
-) -> u64 {
-    let mut fresh = 0;
-    let mut ticket = 0u64;
-    for chunk in items.chunks(POLL) {
-        // Worker: featurize the whole poll into the reused columnar buffer.
-        poll_buf.clear();
+impl SourceConnector for FixtureConnector {
+    /// One simulated poll: `stream_id` selects the POLL-sized chunk of the
+    /// working set this "source" serves.
+    fn poll(&self, ctx: &mut Ctx, world: &mut World, stream_id: u64) -> PollResult {
+        let start = stream_id as usize * POLL;
+        let chunk = &self.items[start..(start + POLL).min(self.items.len())];
+        let mut guard = self.state.borrow_mut();
+        let st = &mut *guard;
+        let mut fresh = 0;
+        // Worker: featurize the whole poll into a pooled columnar buffer.
+        let (metas, mut features) = world.enrich_pool.acquire();
         for it in chunk {
-            featurize_item_into(&it.title, &it.body, poll_buf);
+            featurize_item_into(&it.title, &it.body, &mut features);
         }
         // EnrichStage: append rows into the shared batcher staging area.
         for j in 0..chunk.len() {
-            let row = &poll_buf[j * FEATURE_DIM..(j + 1) * FEATURE_DIM];
-            if batcher.push_row(ticket, row, 0) {
-                fresh += streaming_flush(items, dedup, backend, batcher);
+            let row = &features[j * FEATURE_DIM..(j + 1) * FEATURE_DIM];
+            if st.batcher.push_row(start as u64 + j as u64, row, 0) {
+                fresh += streaming_flush(&self.items, st);
             }
-            ticket += 1;
+        }
+        world.enrich_pool.recycle(metas, features);
+        self.fresh.set(self.fresh.get() + fresh);
+        ctx.take(1);
+        PollResult {
+            outcome: PollOutcome::Items(chunk.len() as u32),
+            etag: None,
+            last_modified: None,
         }
     }
-    if batcher.flush() {
-        fresh += streaming_flush(items, dedup, backend, batcher);
+}
+
+impl FixtureConnector {
+    /// Drain any partial batch and return+reset the fresh-docs counter.
+    fn finish_pass(&self) -> u64 {
+        let mut guard = self.state.borrow_mut();
+        let st = &mut *guard;
+        if st.batcher.flush() {
+            let fresh = streaming_flush(&self.items, st);
+            self.fresh.set(self.fresh.get() + fresh);
+        }
+        drop(guard);
+        self.fresh.replace(0)
     }
-    fresh
+}
+
+/// One steady-state pass over the working set, poll by poll, through the
+/// trait-object dispatch.
+fn streaming_pass(
+    conn: &Rc<dyn SourceConnector>,
+    ctx: &mut Ctx,
+    world: &mut World,
+    n_polls: usize,
+) {
+    for s in 0..n_polls {
+        std::hint::black_box(conn.poll(ctx, world, s as u64));
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -195,27 +253,34 @@ fn main() {
     });
     let ref_ips = total_items as f64 / ref_wall;
 
-    // --- streaming path ----------------------------------------------------
-    let mut d_new = Deduper::new(7);
-    let mut be_new = CpuFallbackEnricher::new(BATCH);
-    let mut batcher = Batcher::new(BatcherConfig { batch_size: BATCH, max_wait_ms: 250 });
-    let mut poll_buf: Vec<f32> = Vec::new();
-    let ingested =
-        streaming_pass(&items, &mut d_new, &mut be_new, &mut batcher, &mut poll_buf); // warmup
+    // --- streaming path (through SourceConnector::poll dispatch) -----------
+    let n_polls = n_items.div_ceil(POLL);
+    let fixture = Rc::new(FixtureConnector {
+        items: make_items(n_items),
+        state: RefCell::new(StreamState {
+            dedup: Deduper::new(7),
+            backend: CpuFallbackEnricher::new(BATCH),
+            batcher: Batcher::new(BatcherConfig { batch_size: BATCH, max_wait_ms: 250 }),
+        }),
+        fresh: Cell::new(0),
+    });
+    let conn: Rc<dyn SourceConnector> = fixture.clone();
+    let mut world = World::build(&AlertMixConfig::tiny()).expect("bench world");
+    let mut ctx = Ctx::detached(0);
+    streaming_pass(&conn, &mut ctx, &mut world, n_polls); // warmup
+    let ingested = fixture.finish_pass();
     assert!(ingested as usize >= n_items * 99 / 100, "warmup ingests the working set");
     let a0 = allocs();
     for _ in 0..passes {
-        std::hint::black_box(streaming_pass(
-            &items, &mut d_new, &mut be_new, &mut batcher, &mut poll_buf,
-        ));
+        streaming_pass(&conn, &mut ctx, &mut world, n_polls);
+        fixture.finish_pass();
     }
     let new_steady_allocs = allocs() - a0;
     let new_allocs_per_item = new_steady_allocs as f64 / total_items as f64;
     let (new_wall, _) = time(3, || {
         for _ in 0..passes {
-            std::hint::black_box(streaming_pass(
-                &items, &mut d_new, &mut be_new, &mut batcher, &mut poll_buf,
-            ));
+            streaming_pass(&conn, &mut ctx, &mut world, n_polls);
+            fixture.finish_pass();
         }
     });
     let new_ips = total_items as f64 / new_wall;

@@ -66,6 +66,14 @@ impl Ctx {
         Ctx { now, me, slot, outbox: Vec::new(), service_ms: 0, stop_requested: false, rng }
     }
 
+    /// A context detached from any actor system: the clock is pinned at
+    /// `now`, sends buffer into a dropped outbox, `take` accumulates as
+    /// usual. For benches/tests that drive handler-shaped code (e.g.
+    /// `SourceConnector::poll`) without spinning up a scheduler.
+    pub fn detached(now: SimTime) -> Ctx {
+        Ctx::new(now, ActorId(0), 0, Rng::new(0))
+    }
+
     /// Current virtual time (start of this handler run).
     pub fn now(&self) -> SimTime {
         self.now

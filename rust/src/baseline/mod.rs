@@ -11,8 +11,8 @@
 
 use crate::feedsim::{Conditional, FeedUniverse, HttpSim, HttpStatus};
 use crate::sim::SimTime;
-use crate::store::streams::Channel;
 use std::collections::HashMap;
+use std::rc::Rc;
 
 /// Results of one batch-poller run.
 #[derive(Debug, Default)]
@@ -78,7 +78,7 @@ pub fn run_batch_poller(
     cfg: &BatchPollerConfig,
 ) -> BatchRunReport {
     let mut report = BatchRunReport::default();
-    let mut etags: HashMap<u64, String> = HashMap::new();
+    let mut etags: HashMap<u64, Rc<str>> = HashMap::new();
     let n = universe.n_feeds() as u64;
     let mut sweep_start = 0;
     while sweep_start < cfg.run_until {
@@ -88,9 +88,9 @@ pub fn run_batch_poller(
         let mut total_fetch_ms: SimTime = 0;
         let mut found: Vec<(u64, SimTime)> = Vec::new(); // (count-ish, pub_ms)
         for id in 1..=n {
-            // Social channels are polled by the same batch job here; the
-            // baseline has no channel specialization.
-            let _ = universe.profile(id).channel == Channel::News;
+            // Every channel is swept by the same batch job here; the
+            // baseline has no connector specialization — that contrast is
+            // the point.
             let cond = Conditional {
                 if_none_match: etags.get(&id).cloned(),
                 if_modified_since: None,
@@ -102,7 +102,7 @@ pub fn run_batch_poller(
             report.polls += 1;
             total_fetch_ms += resp.latency_ms;
             if let Some(e) = &resp.etag {
-                etags.insert(id, e.clone());
+                etags.insert(id, Rc::from(e.as_str()));
             }
             if resp.status == HttpStatus::Ok {
                 for item in &resp.items {

@@ -9,6 +9,26 @@ use crate::sim::{SimTime, HOUR, MINUTE, SECOND};
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 
+/// Declarative entry of the connector list: which source connector to
+/// register (by built-in name), how many pool workers it gets, and what
+/// fraction of the simulated universe it serves. Custom connectors are
+/// code, registered via `pipeline::bootstrap_with` instead.
+#[derive(Debug, Clone)]
+pub struct ConnectorSpec {
+    pub name: String,
+    /// Worker-pool size for this channel.
+    pub pool: usize,
+    /// Fraction of simulated sources on this channel (the largest share
+    /// also absorbs any unassigned remainder).
+    pub share: f64,
+}
+
+impl ConnectorSpec {
+    pub fn new(name: &str, pool: usize, share: f64) -> Self {
+        ConnectorSpec { name: name.to_string(), pool, share }
+    }
+}
+
 /// Full system configuration.
 #[derive(Debug, Clone)]
 pub struct AlertMixConfig {
@@ -48,10 +68,12 @@ pub struct AlertMixConfig {
     /// Router tick cadence.
     pub router_tick: SimTime,
 
-    // -- worker pools -------------------------------------------------------
-    pub news_pool: usize,
-    pub rss_pool: usize,
-    pub social_pool: usize,
+    // -- source connectors / worker pools -----------------------------------
+    /// Declarative connector list: one worker pool per entry, spawned by
+    /// the bootstrapper through the `ConnectorRegistry`. Replaces the old
+    /// fixed `news_pool`/`rss_pool`/`social_pool` trio (whose JSON keys
+    /// survive as back-compat aliases into this list).
+    pub connectors: Vec<ConnectorSpec>,
     pub pool_mailbox: usize,
     pub use_resizer: bool,
     pub resizer_upper: usize,
@@ -93,9 +115,14 @@ impl Default for AlertMixConfig {
             replenish_count: 64,
             replenish_timeout: 2 * SECOND,
             router_tick: 500,
-            news_pool: 16,
-            rss_pool: 4,
-            social_pool: 4,
+            // The classic quartet; shares mirror the historical universe
+            // mix (news absorbs the remainder as the largest share).
+            connectors: vec![
+                ConnectorSpec::new("news", 16, 0.90),
+                ConnectorSpec::new("custom_rss", 4, 0.05),
+                ConnectorSpec::new("facebook", 4, 0.02),
+                ConnectorSpec::new("twitter", 4, 0.03),
+            ],
             pool_mailbox: 4_096,
             use_resizer: true,
             resizer_upper: 64,
@@ -116,30 +143,48 @@ impl Default for AlertMixConfig {
 impl AlertMixConfig {
     /// The paper's Figure-4 deployment: 200 k feeds, 24 h.
     pub fn figure4() -> Self {
-        AlertMixConfig {
+        let mut c = AlertMixConfig {
             n_feeds: 200_000,
             duration: 24 * HOUR,
             pick_batch: 20_000,
             optimal_buffer: 2_048,
-            news_pool: 32,
             resizer_upper: 256,
             stale_after: 30 * MINUTE,
             max_backoff_level: 5,
             ..Default::default()
-        }
+        };
+        c.set_pool("news", 32);
+        c
     }
 
     /// Small smoke configuration for tests.
     pub fn tiny() -> Self {
-        AlertMixConfig {
+        let mut c = AlertMixConfig {
             n_feeds: 200,
             duration: 30 * MINUTE,
             pick_batch: 200,
             optimal_buffer: 64,
-            news_pool: 4,
             use_xla: false,
             worker_fault_rate: 0.0,
             ..Default::default()
+        };
+        c.set_pool("news", 4);
+        c
+    }
+
+    /// Mutable access to a connector spec by name.
+    pub fn connector_mut(&mut self, name: &str) -> Option<&mut ConnectorSpec> {
+        self.connectors.iter_mut().find(|s| s.name == name)
+    }
+
+    /// Set a connector's pool size; `true` if the connector exists.
+    pub fn set_pool(&mut self, name: &str, pool: usize) -> bool {
+        match self.connector_mut(name) {
+            Some(s) => {
+                s.pool = pool;
+                true
+            }
+            None => false,
         }
     }
 
@@ -147,6 +192,26 @@ impl AlertMixConfig {
     pub fn from_json(j: &Json, base: AlertMixConfig) -> Result<Self> {
         let mut c = base;
         let obj = j.as_obj().ok_or_else(|| anyhow!("config must be a JSON object"))?;
+        // The declarative connector list replaces the defaults wholesale,
+        // so apply it before the per-key loop: otherwise a legacy
+        // `news_pool`-style alias appearing *before* the `connectors` key
+        // would be silently discarded by the replacement (key-order
+        // dependent behaviour).
+        if let Some(v) = j.get("connectors") {
+            let arr = v.as_arr().ok_or_else(|| anyhow!("connectors must be an array"))?;
+            let mut list = Vec::new();
+            for entry in arr {
+                let name = entry
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("connector entry missing name"))?
+                    .to_string();
+                let pool = entry.get("pool").and_then(Json::as_u64).unwrap_or(4) as usize;
+                let share = entry.get("share").and_then(Json::as_f64).unwrap_or(0.0);
+                list.push(ConnectorSpec { name, pool, share });
+            }
+            c.connectors = list;
+        }
         for (k, v) in obj {
             let u = || v.as_u64().ok_or_else(|| anyhow!("{k} must be a non-negative integer"));
             let f = || v.as_f64().ok_or_else(|| anyhow!("{k} must be a number"));
@@ -168,9 +233,31 @@ impl AlertMixConfig {
                 "replenish_count" => c.replenish_count = u()? as usize,
                 "replenish_timeout_ms" => c.replenish_timeout = u()?,
                 "router_tick_ms" => c.router_tick = u()?,
-                "news_pool" => c.news_pool = u()? as usize,
-                "rss_pool" => c.rss_pool = u()? as usize,
-                "social_pool" => c.social_pool = u()? as usize,
+                // Declarative connector list: applied before this loop
+                // (see above) so legacy aliases compose either way round.
+                "connectors" => {}
+                // Back-compat aliases for the pre-registry pool knobs.
+                "news_pool" => {
+                    let n = u()? as usize;
+                    if !c.set_pool("news", n) {
+                        bail!("news_pool set but no 'news' connector configured");
+                    }
+                }
+                "rss_pool" => {
+                    let n = u()? as usize;
+                    if !c.set_pool("custom_rss", n) {
+                        bail!("rss_pool set but no 'custom_rss' connector configured");
+                    }
+                }
+                "social_pool" => {
+                    // Historically one knob sized both social pools.
+                    let n = u()? as usize;
+                    let fb = c.set_pool("facebook", n);
+                    let tw = c.set_pool("twitter", n);
+                    if !fb && !tw {
+                        bail!("social_pool set but no social connector configured");
+                    }
+                }
                 "pool_mailbox" => c.pool_mailbox = u()? as usize,
                 "use_resizer" => c.use_resizer = b()?,
                 "resizer_upper" => c.resizer_upper = u()? as usize,
@@ -207,6 +294,28 @@ impl AlertMixConfig {
         }
         if self.optimal_buffer == 0 {
             bail!("optimal_buffer must be > 0");
+        }
+        if self.connectors.is_empty() {
+            bail!("connectors must list at least one source");
+        }
+        let mut share_sum = 0.0;
+        for (i, spec) in self.connectors.iter().enumerate() {
+            if spec.name.is_empty() {
+                bail!("connector {} has an empty name", i);
+            }
+            if self.connectors[..i].iter().any(|s| s.name == spec.name) {
+                bail!("duplicate connector name '{}'", spec.name);
+            }
+            if spec.pool == 0 {
+                bail!("connector '{}' needs a pool of at least 1", spec.name);
+            }
+            if !(0.0..=1.0).contains(&spec.share) {
+                bail!("connector '{}' share must be in [0, 1]", spec.name);
+            }
+            share_sum += spec.share;
+        }
+        if share_sum > 1.0 + 1e-9 {
+            bail!("connector shares sum to {share_sum:.3} > 1");
         }
         if !(0.0..=1.0).contains(&self.worker_fault_rate) {
             bail!("worker_fault_rate must be a probability");
@@ -250,5 +359,65 @@ mod tests {
         assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
         let j = Json::parse(r#"{"worker_fault_rate": 2.0}"#).unwrap();
         assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
+    }
+
+    #[test]
+    fn legacy_pool_keys_alias_into_the_connector_list() {
+        let j = Json::parse(r#"{"news_pool": 9, "rss_pool": 3, "social_pool": 7}"#).unwrap();
+        let c = AlertMixConfig::from_json(&j, AlertMixConfig::default()).unwrap();
+        let pool = |name: &str| c.connectors.iter().find(|s| s.name == name).unwrap().pool;
+        assert_eq!(pool("news"), 9);
+        assert_eq!(pool("custom_rss"), 3);
+        assert_eq!(pool("facebook"), 7);
+        assert_eq!(pool("twitter"), 7);
+    }
+
+    #[test]
+    fn declarative_connector_list_replaces_defaults() {
+        let j = Json::parse(
+            r#"{"connectors": [
+                {"name": "news", "pool": 6, "share": 0.5},
+                {"name": "youtube", "pool": 2, "share": 0.3},
+                {"name": "metrics", "pool": 2, "share": 0.2}
+            ]}"#,
+        )
+        .unwrap();
+        let c = AlertMixConfig::from_json(&j, AlertMixConfig::default()).unwrap();
+        assert_eq!(c.connectors.len(), 3);
+        assert_eq!(c.connectors[1].name, "youtube");
+        assert_eq!(c.connectors[1].pool, 2);
+        assert!((c.connectors[2].share - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn legacy_alias_composes_with_connectors_key_in_any_order() {
+        // The connectors list is applied before the per-key loop, so a
+        // legacy alias works identically whether it appears before or
+        // after the "connectors" key in the document.
+        for json in [
+            r#"{"news_pool": 32, "connectors": [{"name": "news", "pool": 4, "share": 0.9}]}"#,
+            r#"{"connectors": [{"name": "news", "pool": 4, "share": 0.9}], "news_pool": 32}"#,
+        ] {
+            let j = Json::parse(json).unwrap();
+            let c = AlertMixConfig::from_json(&j, AlertMixConfig::default()).unwrap();
+            assert_eq!(c.connectors.len(), 1);
+            assert_eq!(c.connectors[0].pool, 32, "alias must win over the list default");
+        }
+    }
+
+    #[test]
+    fn connector_list_validation() {
+        let mut c = AlertMixConfig::default();
+        c.connectors.clear();
+        assert!(c.validate().is_err(), "empty list");
+        let mut c = AlertMixConfig::default();
+        c.connectors[0].pool = 0;
+        assert!(c.validate().is_err(), "zero pool");
+        let mut c = AlertMixConfig::default();
+        c.connectors[1].name = "news".into();
+        assert!(c.validate().is_err(), "duplicate name");
+        let mut c = AlertMixConfig::default();
+        c.connectors[0].share = 0.99;
+        assert!(c.validate().is_err(), "shares over 1");
     }
 }

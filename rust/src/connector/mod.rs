@@ -1,0 +1,669 @@
+//! The pluggable source-ingestion API.
+//!
+//! The paper pitches AlertMix as a platform for *multi-source* streaming —
+//! "trading, fraud detection, system monitoring, and of course social
+//! media data such as Twitter and YouTube videos" — which means the set of
+//! sources must be open-ended. This module replaces the historical
+//! hard-coded `enum Channel` (news / custom_rss / facebook / twitter,
+//! matched in eight files) with a registry of connectors:
+//!
+//! - [`ChannelId`]: a lightweight index into the registry, carried by
+//!   every [`crate::store::streams::StreamRecord`];
+//! - [`ChannelDescriptor`]: what the bootstrapper needs to know about a
+//!   channel (name, kind, poll cadence, worker-pool and mailbox sizing,
+//!   simulated universe share);
+//! - [`SourceConnector`]: the poll behaviour — fetch from the source,
+//!   featurize items into the pooled [`EnrichBatch`] buffers, report a
+//!   [`PollResult`] that drives the adaptive schedule;
+//! - [`ConnectorRegistry`]: descriptor + connector pairs, looked up by
+//!   id on the hot path and by name at the persistence boundary.
+//!
+//! The bootstrapper spawns one worker pool per *registered* connector, so
+//! adding a source is: implement the trait, register it, done — no enum
+//! arms, no new pool fields, no persistence changes (the wire form is the
+//! channel *name*, unknown names are interned on restore).
+
+use crate::actor::Ctx;
+use crate::config::AlertMixConfig;
+use crate::feedsim::{Conditional, HttpStatus, Platform, SocialResult};
+use crate::pipeline::{EnrichBatch, ItemMeta, World};
+use crate::sim::{SimTime, MINUTE};
+use crate::store::streams::PollOutcome;
+use crate::text::featurize_item_into;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Registry index of a source channel. Cheap to copy and store: stream
+/// records carry this, never the connector itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ChannelId(pub u16);
+
+/// Coarse connector family — informational (inspect / docs / metrics
+/// labels); dispatch always goes through the trait object.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SourceKind {
+    /// Conditional-GET RSS/Atom style HTTP polling.
+    Rss,
+    /// Cursored social-platform timeline API.
+    SocialTimeline,
+    /// Video-upload timeline (rate-limited platform API, media payloads).
+    VideoTimeline,
+    /// System-monitoring gauge scrape with threshold rules.
+    Metrics,
+    /// Anything registered programmatically.
+    Custom,
+}
+
+/// Everything the bootstrapper and simulator need to know about a channel.
+#[derive(Debug, Clone)]
+pub struct ChannelDescriptor {
+    /// Stable wire name — the persistence format stores this, never the id.
+    pub name: String,
+    pub kind: SourceKind,
+    /// Base poll interval for streams of this channel; 0 = use the global
+    /// `cfg.base_poll_interval`.
+    pub default_interval: SimTime,
+    /// Worker-pool size for this channel.
+    pub pool_size: usize,
+    /// Pool mailbox capacity; 0 = use the global `cfg.pool_mailbox`.
+    pub mailbox: usize,
+    /// Fraction of the simulated universe assigned to this channel (the
+    /// entry with the largest share also absorbs any unassigned
+    /// remainder).
+    pub share: f64,
+}
+
+impl ChannelDescriptor {
+    pub fn new(name: &str, kind: SourceKind) -> Self {
+        ChannelDescriptor {
+            name: name.to_string(),
+            kind,
+            default_interval: 0,
+            pool_size: 4,
+            mailbox: 0,
+            share: 0.0,
+        }
+    }
+
+    pub fn pool(mut self, size: usize) -> Self {
+        self.pool_size = size;
+        self
+    }
+
+    pub fn share(mut self, share: f64) -> Self {
+        self.share = share;
+        self
+    }
+
+    pub fn interval(mut self, ms: SimTime) -> Self {
+        self.default_interval = ms;
+        self
+    }
+}
+
+/// Outcome of one [`SourceConnector::poll`], consumed by the
+/// StreamsUpdater to adapt the schedule and ack SQS.
+#[derive(Debug)]
+pub struct PollResult {
+    pub outcome: PollOutcome,
+    /// Conditional-GET state to persist on the stream record.
+    pub etag: Option<String>,
+    pub last_modified: Option<SimTime>,
+}
+
+impl PollResult {
+    pub fn items(n: u32) -> Self {
+        PollResult { outcome: PollOutcome::Items(n), etag: None, last_modified: None }
+    }
+
+    pub fn not_modified() -> Self {
+        PollResult { outcome: PollOutcome::NotModified, etag: None, last_modified: None }
+    }
+
+    pub fn error() -> Self {
+        PollResult { outcome: PollOutcome::Error, etag: None, last_modified: None }
+    }
+}
+
+/// One poll of one stream. Implementations fetch from their source
+/// simulator, featurize every fetched item **into the pooled
+/// `(metas, features)` buffers** from `world.enrich_pool`, ship the whole
+/// poll to the EnrichStage as a single [`EnrichBatch`] message (or recycle
+/// the pair if nothing came back), and return the schedule-driving
+/// outcome. `ctx.take(ms)` declares the virtual time the fetch consumed.
+///
+/// Contract notes for implementors (see DESIGN.md §Connector API):
+/// - `&self` receivers: one connector instance is shared by every routee
+///   of the channel's worker pool; keep per-call state on the `World` (or
+///   interior-mutable, single-threaded).
+/// - steady-state polls of unchanged sources must not allocate on the
+///   featurize path — acquire/recycle the pooled buffers, never build
+///   per-item messages.
+pub trait SourceConnector {
+    fn poll(&self, ctx: &mut Ctx, world: &mut World, stream_id: u64) -> PollResult;
+}
+
+/// Staging handle [`ship_poll`] lends its closure: one `push` per fetched
+/// item featurizes it straight into the pooled columnar buffer and
+/// records the shared accounting (doc id, `items_fetched`).
+pub struct PollSink<'a> {
+    world: &'a mut World,
+    metas: &'a mut Vec<ItemMeta>,
+    features: &'a mut Vec<f32>,
+    stream_id: u64,
+}
+
+impl PollSink<'_> {
+    pub fn push(
+        &mut self,
+        guid: String,
+        title: String,
+        body: String,
+        url: String,
+        published_ms: SimTime,
+    ) {
+        let doc_id = self.world.doc_ids.next();
+        self.world.counters.items_fetched += 1;
+        featurize_item_into(&title, &body, self.features);
+        self.metas.push(ItemMeta {
+            doc_id,
+            stream_id: self.stream_id,
+            guid,
+            title,
+            body,
+            url,
+            published_ms,
+        });
+    }
+}
+
+/// The shared shipping discipline every connector uses: acquire the
+/// pooled `(metas, features)` pair, let `fill` stage each fetched item
+/// through a [`PollSink`], then send the whole poll to the EnrichStage as
+/// one [`EnrichBatch`] — or recycle the pair untouched if nothing came
+/// back. Returns the number of items shipped. Centralizing this keeps the
+/// buffer round-trip (and the zero-allocation steady state it buys)
+/// identical across every source.
+pub fn ship_poll(
+    ctx: &mut Ctx,
+    world: &mut World,
+    stream_id: u64,
+    fill: impl FnOnce(&mut PollSink),
+) -> u32 {
+    let enrich_stage = world.handles().enrich_stage;
+    let (mut metas, mut features) = world.enrich_pool.acquire();
+    let mut sink =
+        PollSink { world: &mut *world, metas: &mut metas, features: &mut features, stream_id };
+    fill(&mut sink);
+    let n = metas.len() as u32;
+    if metas.is_empty() {
+        world.enrich_pool.recycle(metas, features);
+    } else {
+        ctx.send(enrich_stage, EnrichBatch { metas, features });
+    }
+    n
+}
+
+struct Entry {
+    descriptor: ChannelDescriptor,
+    /// `None` for descriptor-only entries (unknown channel names interned
+    /// while restoring a snapshot from a newer deployment).
+    connector: Option<Rc<dyn SourceConnector>>,
+}
+
+/// The channel registry: descriptor + connector per channel, id-indexed.
+/// Registration order defines [`ChannelId`]s; the persistence wire format
+/// uses names so ids can differ across deployments.
+#[derive(Default)]
+pub struct ConnectorRegistry {
+    entries: Vec<Entry>,
+    by_name: HashMap<String, ChannelId>,
+}
+
+impl ConnectorRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a connector. If `descriptor.name` was previously interned
+    /// as descriptor-only, the entry is upgraded in place (keeping its id).
+    pub fn register(
+        &mut self,
+        descriptor: ChannelDescriptor,
+        connector: Rc<dyn SourceConnector>,
+    ) -> ChannelId {
+        if let Some(&id) = self.by_name.get(&descriptor.name) {
+            let entry = &mut self.entries[id.0 as usize];
+            assert!(
+                entry.connector.is_none(),
+                "connector '{}' registered twice",
+                descriptor.name
+            );
+            entry.descriptor = descriptor;
+            entry.connector = Some(connector);
+            return id;
+        }
+        self.push_entry(descriptor, Some(connector))
+    }
+
+    /// Intern a channel *name* without a connector — the forward-compat
+    /// path: restoring a snapshot that mentions a channel this deployment
+    /// doesn't serve keeps the records (and their wire name) intact; their
+    /// jobs are counted as unrouted and left to the SQS redrive/DLQ path
+    /// instead of silently masquerading as another channel.
+    pub fn intern(&mut self, name: &str) -> ChannelId {
+        if let Some(&id) = self.by_name.get(name) {
+            return id;
+        }
+        self.push_entry(ChannelDescriptor::new(name, SourceKind::Custom).pool(0), None)
+    }
+
+    fn push_entry(
+        &mut self,
+        descriptor: ChannelDescriptor,
+        connector: Option<Rc<dyn SourceConnector>>,
+    ) -> ChannelId {
+        assert!(self.entries.len() < u16::MAX as usize, "channel id space exhausted");
+        let id = ChannelId(self.entries.len() as u16);
+        self.by_name.insert(descriptor.name.clone(), id);
+        self.entries.push(Entry { descriptor, connector });
+        id
+    }
+
+    pub fn id(&self, name: &str) -> Option<ChannelId> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn name(&self, id: ChannelId) -> Option<&str> {
+        self.entries.get(id.0 as usize).map(|e| e.descriptor.name.as_str())
+    }
+
+    pub fn descriptor(&self, id: ChannelId) -> Option<&ChannelDescriptor> {
+        self.entries.get(id.0 as usize).map(|e| &e.descriptor)
+    }
+
+    /// The poll behaviour for a channel (cloned `Rc`, so the caller can
+    /// keep it across a `&mut World` borrow).
+    pub fn connector(&self, id: ChannelId) -> Option<Rc<dyn SourceConnector>> {
+        self.entries.get(id.0 as usize).and_then(|e| e.connector.clone())
+    }
+
+    /// Registered channels, in id order (including descriptor-only ones).
+    pub fn descriptors(&self) -> impl Iterator<Item = (ChannelId, &ChannelDescriptor)> {
+        self.entries.iter().enumerate().map(|(i, e)| (ChannelId(i as u16), &e.descriptor))
+    }
+
+    /// Total registered channels (including descriptor-only entries).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Channels that actually have a connector (= worker pools to spawn).
+    pub fn connector_count(&self) -> usize {
+        self.entries.iter().filter(|e| e.connector.is_some()).count()
+    }
+
+    /// `(id, share)` pairs for the universe's channel mix.
+    pub fn shares(&self) -> Vec<(ChannelId, f64)> {
+        self.descriptors().map(|(id, d)| (id, d.share)).collect()
+    }
+
+    /// Channel absorbing the unassigned universe remainder: the largest
+    /// share (ties break toward the earliest registration).
+    pub fn default_channel(&self) -> ChannelId {
+        let mut best = ChannelId(0);
+        let mut best_share = f64::NEG_INFINITY;
+        for (id, d) in self.descriptors() {
+            if d.share > best_share {
+                best = id;
+                best_share = d.share;
+            }
+        }
+        best
+    }
+
+    /// Build the registry a config's declarative connector list describes.
+    /// Every name must be a built-in ([`builtin_connector`]); custom
+    /// connectors are code, registered via `pipeline::bootstrap_with`.
+    pub fn from_config(cfg: &AlertMixConfig) -> Result<Self> {
+        let mut reg = ConnectorRegistry::new();
+        for spec in &cfg.connectors {
+            if reg.id(&spec.name).is_some() {
+                bail!("duplicate connector '{}' in config", spec.name);
+            }
+            let Some((kind, interval, connector)) = builtin_connector(&spec.name) else {
+                bail!(
+                    "unknown connector '{}' in config — built-ins are news, custom_rss, \
+                     facebook, twitter, youtube, metrics; custom connectors must be \
+                     registered programmatically via pipeline::bootstrap_with",
+                    spec.name
+                );
+            };
+            reg.register(
+                ChannelDescriptor {
+                    name: spec.name.clone(),
+                    kind,
+                    default_interval: interval,
+                    pool_size: spec.pool,
+                    mailbox: 0,
+                    share: spec.share,
+                },
+                connector,
+            );
+        }
+        if reg.connector_count() == 0 {
+            bail!("config registers no connectors");
+        }
+        Ok(reg)
+    }
+}
+
+/// Built-in connector for a well-known channel name:
+/// `(kind, default_interval, connector)`. `default_interval == 0` means
+/// the global base poll interval.
+pub fn builtin_connector(name: &str) -> Option<(SourceKind, SimTime, Rc<dyn SourceConnector>)> {
+    let out: (SourceKind, SimTime, Rc<dyn SourceConnector>) = match name {
+        "news" | "custom_rss" => (SourceKind::Rss, 0, Rc::new(RssConnector)),
+        "facebook" => (
+            SourceKind::SocialTimeline,
+            0,
+            Rc::new(SocialConnector { platform: Platform::Facebook }),
+        ),
+        "twitter" => (
+            SourceKind::SocialTimeline,
+            0,
+            Rc::new(SocialConnector { platform: Platform::Twitter }),
+        ),
+        "youtube" => (SourceKind::VideoTimeline, 0, Rc::new(YouTubeConnector)),
+        "metrics" => (SourceKind::Metrics, MINUTE, Rc::new(MetricsConnector)),
+        _ => return None,
+    };
+    Some(out)
+}
+
+// ---------------------------------------------------------------------------
+// Built-in connectors
+// ---------------------------------------------------------------------------
+
+/// Conditional-GET RSS polling — the paper's Worker: "performs a
+/// conditional get on the feed based on the eTag and lastModified headers.
+/// It handles redirects, checks for duplicate entries already in the
+/// system and then processes the results."
+pub struct RssConnector;
+
+impl SourceConnector for RssConnector {
+    fn poll(&self, ctx: &mut Ctx, world: &mut World, stream_id: u64) -> PollResult {
+        let now = ctx.now();
+        let Some(rec) = world.store.get(stream_id) else {
+            return PollResult::error();
+        };
+        let cond = Conditional {
+            // Interned `Rc<str>`: a refcount bump per poll, not a String
+            // clone per 304.
+            if_none_match: rec.etag.clone(),
+            if_modified_since: rec.last_modified,
+        };
+        let url = rec.url.clone();
+        let mut resp = world.http.fetch(&mut world.universe, &url, &cond, now);
+        ctx.take(resp.latency_ms);
+
+        // "It handles redirects": follow one permanent move.
+        if let HttpStatus::MovedPermanently { location } = &resp.status {
+            world.counters.redirects_followed += 1;
+            let loc = location.clone();
+            resp = world.http.fetch(&mut world.universe, &loc, &cond, now);
+            ctx.take(resp.latency_ms);
+        }
+
+        match resp.status {
+            HttpStatus::Ok => {
+                let body = resp.body.as_deref().unwrap_or("");
+                // Parse the actual XML (cost modeled per KiB).
+                ctx.take(1 + body.len() as SimTime / 65_536);
+                let parsed = match crate::feedsim::parse_rss(body) {
+                    Ok(f) => f,
+                    Err(_) => {
+                        world.counters.fetch_errors += 1;
+                        return PollResult {
+                            outcome: PollOutcome::Error,
+                            etag: resp.etag,
+                            last_modified: resp.last_modified,
+                        };
+                    }
+                };
+                let n = ship_poll(ctx, world, stream_id, |sink| {
+                    for item in parsed.items {
+                        sink.push(item.guid, item.title, item.description, item.link, item.pub_ms);
+                    }
+                });
+                PollResult {
+                    outcome: PollOutcome::Items(n),
+                    etag: resp.etag,
+                    last_modified: resp.last_modified,
+                }
+            }
+            HttpStatus::NotModified => PollResult {
+                outcome: PollOutcome::NotModified,
+                etag: resp.etag,
+                last_modified: resp.last_modified,
+            },
+            HttpStatus::MovedPermanently { .. } => {
+                // Second redirect in a row: treat as an error this cycle.
+                world.counters.fetch_errors += 1;
+                PollResult::error()
+            }
+            HttpStatus::ServerError(_) | HttpStatus::Timeout => {
+                world.counters.fetch_errors += 1;
+                PollResult::error()
+            }
+        }
+    }
+}
+
+/// Cursored timeline pull for text social platforms. The platform is an
+/// explicit field — there is no catch-all: a channel that isn't mapped to
+/// a connector never reaches a poll (the worker raises a supervised
+/// `ActorError` instead of masquerading as a Twitter pull).
+pub struct SocialConnector {
+    pub platform: Platform,
+}
+
+impl SourceConnector for SocialConnector {
+    fn poll(&self, ctx: &mut Ctx, world: &mut World, stream_id: u64) -> PollResult {
+        let now = ctx.now();
+        match world.social.timeline(&mut world.universe, self.platform, stream_id, now) {
+            SocialResult::RateLimited { .. } => {
+                world.counters.rate_limited += 1;
+                // Back off via the error path; the schedule adapts.
+                PollResult::error()
+            }
+            SocialResult::Page { posts, latency_ms } => {
+                ctx.take(latency_ms);
+                let n = ship_poll(ctx, world, stream_id, |sink| {
+                    for post in posts {
+                        let it = post.item;
+                        sink.push(it.guid, it.title, it.body, it.link, it.pub_ms);
+                    }
+                });
+                if n > 0 {
+                    PollResult {
+                        outcome: PollOutcome::Items(n),
+                        etag: None,
+                        last_modified: Some(now),
+                    }
+                } else {
+                    PollResult::not_modified()
+                }
+            }
+        }
+    }
+}
+
+/// Video-upload timeline — the abstract's "YouTube videos" scenario.
+/// Rides the cursored-timeline simulator under a distinct (much tighter)
+/// API quota, and carries a video payload shape: upload duration in the
+/// body, a watch URL instead of the canonical feed link.
+pub struct YouTubeConnector;
+
+impl SourceConnector for YouTubeConnector {
+    fn poll(&self, ctx: &mut Ctx, world: &mut World, stream_id: u64) -> PollResult {
+        let now = ctx.now();
+        match world.social.timeline(&mut world.universe, Platform::YouTube, stream_id, now) {
+            SocialResult::RateLimited { .. } => {
+                world.counters.rate_limited += 1;
+                PollResult::error()
+            }
+            SocialResult::Page { posts, latency_ms } => {
+                // Video metadata payloads are heavier than text timelines.
+                ctx.take(latency_ms * 2);
+                let n = ship_poll(ctx, world, stream_id, |sink| {
+                    for post in posts {
+                        // Deterministic upload length in 30s..10min.
+                        let duration_s = 30 + (post.post_id * 7 + stream_id) % 570;
+                        let url =
+                            format!("http://youtube.sim/watch?v={stream_id}-{}", post.post_id);
+                        let it = post.item;
+                        let body = format!("{} [video upload {duration_s}s]", it.body);
+                        sink.push(it.guid, it.title, body, url, it.pub_ms);
+                    }
+                });
+                if n > 0 {
+                    PollResult {
+                        outcome: PollOutcome::Items(n),
+                        etag: None,
+                        last_modified: Some(now),
+                    }
+                } else {
+                    PollResult::not_modified()
+                }
+            }
+        }
+    }
+}
+
+/// System-monitoring gauge scrape — the abstract's "system monitoring"
+/// scenario. Each stream is a monitored host; a poll reads its gauges and
+/// turns threshold breaches into alert-ready documents (quiet hosts
+/// return NotModified so the adaptive schedule backs off, exactly like a
+/// silent feed).
+pub struct MetricsConnector;
+
+impl SourceConnector for MetricsConnector {
+    fn poll(&self, ctx: &mut Ctx, world: &mut World, stream_id: u64) -> PollResult {
+        let now = ctx.now();
+        let (readings, seq) = world.sysmon.poll(stream_id, now);
+        // Agent scrape round-trip.
+        ctx.take(2);
+        let n_breach = readings
+            .iter()
+            .filter(|r| r.severity != crate::feedsim::Severity::Ok)
+            .count();
+        if n_breach == 0 {
+            return PollResult::not_modified();
+        }
+        let n = ship_poll(ctx, world, stream_id, |sink| {
+            for r in readings.iter().filter(|r| r.severity != crate::feedsim::Severity::Ok) {
+                let sev = r.severity.label();
+                let title =
+                    format!("{sev} {} alarm on host {stream_id} level {:.2}", r.gauge, r.value);
+                let body = format!(
+                    "system monitor sample {seq}: gauge {} measured {:.3} on host {stream_id} \
+                     breaching the {sev} threshold",
+                    r.gauge, r.value
+                );
+                sink.push(
+                    format!("urn:sysmon:{stream_id}:{seq}:{}", r.gauge),
+                    title,
+                    body,
+                    format!("http://sysmon.sim/host-{stream_id}/{}?s={seq}", r.gauge),
+                    now,
+                );
+            }
+        });
+        world.metrics.count("SysmonBreaches", now, n as f64);
+        PollResult {
+            outcome: PollOutcome::Items(n),
+            etag: None,
+            last_modified: Some(now),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_follow_registration_order() {
+        let reg = ConnectorRegistry::from_config(&AlertMixConfig::default()).unwrap();
+        assert_eq!(reg.len(), 4);
+        assert_eq!(reg.connector_count(), 4);
+        assert_eq!(reg.id("news"), Some(ChannelId(0)));
+        assert_eq!(reg.id("custom_rss"), Some(ChannelId(1)));
+        assert_eq!(reg.id("facebook"), Some(ChannelId(2)));
+        assert_eq!(reg.id("twitter"), Some(ChannelId(3)));
+        assert_eq!(reg.name(ChannelId(3)), Some("twitter"));
+        assert_eq!(reg.name(ChannelId(9)), None);
+        assert!(reg.connector(ChannelId(0)).is_some());
+        assert!(reg.connector(ChannelId(9)).is_none());
+        assert_eq!(reg.default_channel(), reg.id("news").unwrap());
+    }
+
+    #[test]
+    fn intern_is_descriptor_only_and_upgradable() {
+        let mut reg = ConnectorRegistry::new();
+        let id = reg.intern("telemetry");
+        assert_eq!(reg.intern("telemetry"), id, "idempotent");
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.connector_count(), 0);
+        assert!(reg.connector(id).is_none());
+        // Registering the real connector later keeps the id.
+        let (kind, interval, conn) = builtin_connector("metrics").unwrap();
+        let id2 = reg.register(
+            ChannelDescriptor { name: "telemetry".into(), kind, default_interval: interval, pool_size: 2, mailbox: 0, share: 0.1 },
+            conn,
+        );
+        assert_eq!(id2, id);
+        assert_eq!(reg.connector_count(), 1);
+        assert!(reg.connector(id).is_some());
+        assert_eq!(reg.descriptor(id).unwrap().pool_size, 2);
+    }
+
+    #[test]
+    fn unknown_config_connector_is_rejected() {
+        let mut cfg = AlertMixConfig::default();
+        cfg.connectors[0].name = "gopher".into();
+        let err = ConnectorRegistry::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("gopher"), "{err}");
+    }
+
+    #[test]
+    fn builtins_cover_the_scenario_list() {
+        for name in ["news", "custom_rss", "facebook", "twitter", "youtube", "metrics"] {
+            assert!(builtin_connector(name).is_some(), "{name}");
+        }
+        assert!(builtin_connector("nntp").is_none());
+    }
+
+    #[test]
+    fn shares_and_default_channel() {
+        let mut reg = ConnectorRegistry::new();
+        let (k, i, c) = builtin_connector("news").unwrap();
+        reg.register(
+            ChannelDescriptor { name: "news".into(), kind: k, default_interval: i, pool_size: 1, mailbox: 0, share: 0.2 },
+            c,
+        );
+        let (k, i, c) = builtin_connector("youtube").unwrap();
+        let yt = reg.register(
+            ChannelDescriptor { name: "youtube".into(), kind: k, default_interval: i, pool_size: 1, mailbox: 0, share: 0.7 },
+            c,
+        );
+        assert_eq!(reg.default_channel(), yt);
+        assert_eq!(reg.shares(), vec![(ChannelId(0), 0.2), (yt, 0.7)]);
+    }
+}

@@ -14,6 +14,7 @@ use super::universe::{FeedUniverse, GeneratedItem};
 use crate::sim::SimTime;
 use crate::util::rng::Rng;
 use std::collections::HashMap;
+use std::rc::Rc;
 
 #[derive(Debug, Clone)]
 pub struct HttpConfig {
@@ -70,10 +71,12 @@ pub struct HttpResponse {
     pub latency_ms: SimTime,
 }
 
-/// Conditional-GET request headers.
+/// Conditional-GET request headers. The ETag rides as the interned
+/// `Rc<str>` the stream record holds, so building a request is a refcount
+/// bump rather than a per-poll String clone.
 #[derive(Debug, Clone, Default)]
 pub struct Conditional {
-    pub if_none_match: Option<String>,
+    pub if_none_match: Option<Rc<str>>,
     pub if_modified_since: Option<SimTime>,
 }
 
@@ -273,7 +276,8 @@ mod tests {
         assert_eq!(first.status, HttpStatus::Ok);
         // Immediately refetch with the etag: nothing new can have appeared
         // at the same virtual instant.
-        let cond = Conditional { if_none_match: first.etag.clone(), if_modified_since: None };
+        let cond =
+            Conditional { if_none_match: first.etag.as_deref().map(Rc::from), if_modified_since: None };
         let second = http.fetch(&mut u, &url, &cond, DAY);
         assert_eq!(second.status, HttpStatus::NotModified);
         assert_eq!(http.counters.not_modified, 1);

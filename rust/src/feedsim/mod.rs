@@ -7,9 +7,11 @@
 pub mod http;
 pub mod rss;
 pub mod social;
+pub mod sysmon;
 pub mod universe;
 
 pub use http::{Conditional, HttpConfig, HttpResponse, HttpSim, HttpStatus};
 pub use rss::{parse_rss, write_rss, RssFeed, RssItem};
 pub use social::{Platform, Post, SocialConfig, SocialResult, SocialSim};
+pub use sysmon::{GaugeReading, Severity, SysmonConfig, SysmonSim, GAUGES};
 pub use universe::{FeedProfile, FeedUniverse, GeneratedItem, UniverseConfig};

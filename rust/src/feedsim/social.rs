@@ -7,7 +7,7 @@
 //! that returns `RateLimited` (HTTP 429 equivalent) when exhausted.
 
 use super::universe::{FeedUniverse, GeneratedItem};
-use crate::sim::{SimTime, MINUTE};
+use crate::sim::{SimTime, HOUR, MINUTE};
 use std::collections::HashMap;
 
 /// Which social platform an account lives on.
@@ -15,6 +15,9 @@ use std::collections::HashMap;
 pub enum Platform {
     Facebook,
     Twitter,
+    /// Video-upload timelines (the abstract's "YouTube videos" source) —
+    /// same cursored-timeline surface, much tighter API quota.
+    YouTube,
 }
 
 #[derive(Debug, Clone)]
@@ -25,11 +28,32 @@ pub struct SocialConfig {
     pub window: SimTime,
     /// Max posts returned per page.
     pub page_size: usize,
+    /// Per-platform `(requests, window)` quota overrides — platforms not
+    /// listed use the defaults above.
+    pub quota_overrides: Vec<(Platform, u32, SimTime)>,
 }
 
 impl Default for SocialConfig {
     fn default() -> Self {
-        SocialConfig { requests_per_window: 900, window: 15 * MINUTE, page_size: 100 }
+        SocialConfig {
+            requests_per_window: 900,
+            window: 15 * MINUTE,
+            page_size: 100,
+            // YouTube's data API budget is an order of magnitude tighter
+            // than the text timelines.
+            quota_overrides: vec![(Platform::YouTube, 100, HOUR)],
+        }
+    }
+}
+
+impl SocialConfig {
+    /// Effective `(requests, window)` quota for a platform.
+    pub fn quota(&self, platform: Platform) -> (u32, SimTime) {
+        self.quota_overrides
+            .iter()
+            .find(|(p, _, _)| *p == platform)
+            .map(|(_, r, w)| (*r, *w))
+            .unwrap_or((self.requests_per_window, self.window))
     }
 }
 
@@ -75,13 +99,14 @@ impl SocialSim {
     }
 
     fn check_rate(&mut self, platform: Platform, now: SimTime) -> Result<(), SimTime> {
+        let (requests, window) = self.cfg.quota(platform);
         let w = self.windows.entry(platform).or_insert(WindowState { window_start: now, used: 0 });
-        if now.saturating_sub(w.window_start) >= self.cfg.window {
+        if now.saturating_sub(w.window_start) >= window {
             w.window_start = now;
             w.used = 0;
         }
-        if w.used >= self.cfg.requests_per_window {
-            return Err(w.window_start + self.cfg.window - now);
+        if w.used >= requests {
+            return Err(w.window_start + window - now);
         }
         w.used += 1;
         Ok(())
@@ -166,6 +191,37 @@ mod tests {
             SocialResult::Page { .. }
         ));
         assert_eq!(s.rate_limited, 1);
+    }
+
+    #[test]
+    fn youtube_quota_override_is_tighter() {
+        let (mut s, mut u) = world();
+        let (req, window) = s.cfg.quota(Platform::YouTube);
+        assert_eq!((req, window), (100, HOUR), "default override");
+        // Exhaust the YouTube budget; Twitter is untouched.
+        for _ in 0..req {
+            assert!(matches!(
+                s.timeline(&mut u, Platform::YouTube, 1, HOUR),
+                SocialResult::Page { .. }
+            ));
+        }
+        assert!(matches!(
+            s.timeline(&mut u, Platform::YouTube, 1, HOUR),
+            SocialResult::RateLimited { .. }
+        ));
+        assert!(matches!(
+            s.timeline(&mut u, Platform::Twitter, 1, HOUR),
+            SocialResult::Page { .. }
+        ));
+        // The tighter window also resets later than the text platforms'.
+        assert!(matches!(
+            s.timeline(&mut u, Platform::YouTube, 1, HOUR + 16 * MINUTE),
+            SocialResult::RateLimited { .. }
+        ));
+        assert!(matches!(
+            s.timeline(&mut u, Platform::YouTube, 1, 2 * HOUR),
+            SocialResult::Page { .. }
+        ));
     }
 
     #[test]

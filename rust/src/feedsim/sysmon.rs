@@ -1,0 +1,207 @@
+//! Simulated system-monitoring substrate: per-host gauges with threshold
+//! severities — the source behind the `metrics` connector (the abstract's
+//! "system monitoring" scenario).
+//!
+//! Each monitored host exposes a fixed gauge set (cpu, memory, disk,
+//! error_rate). Values are a pure deterministic function of
+//! `(host, gauge, time, seed)`: a per-host base load, a slow sinusoidal
+//! drift (load waves), and minute-bucketed noise — so identical runs see
+//! identical breaches and the pipeline's determinism tests keep holding.
+
+use crate::sim::{SimTime, HOUR, MINUTE};
+use crate::util::hash::combine;
+use std::collections::HashMap;
+
+/// Gauges every monitored host exposes.
+pub const GAUGES: [&str; 4] = ["cpu", "memory", "disk", "error_rate"];
+
+/// Threshold classification of one reading.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Ok,
+    Warn,
+    Crit,
+}
+
+impl Severity {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Severity::Ok => "ok",
+            Severity::Warn => "warn",
+            Severity::Crit => "crit",
+        }
+    }
+}
+
+/// One gauge reading from one scrape.
+#[derive(Debug, Clone, Copy)]
+pub struct GaugeReading {
+    pub gauge: &'static str,
+    pub value: f64,
+    pub severity: Severity,
+}
+
+#[derive(Debug, Clone)]
+pub struct SysmonConfig {
+    /// Warn / crit thresholds applied uniformly to the normalized gauges.
+    pub warn: f64,
+    pub crit: f64,
+    /// Period of the slow load wave.
+    pub period: SimTime,
+    pub seed: u64,
+}
+
+impl Default for SysmonConfig {
+    fn default() -> Self {
+        SysmonConfig { warn: 0.85, crit: 0.95, period: 6 * HOUR, seed: 0x5195_604D }
+    }
+}
+
+/// The monitoring front: deterministic gauge synthesis + per-host scrape
+/// sequence numbers (event guids need a monotone component).
+pub struct SysmonSim {
+    pub cfg: SysmonConfig,
+    /// host -> scrapes served so far.
+    seq: HashMap<u64, u64>,
+    pub scrapes: u64,
+    pub breaches: u64,
+}
+
+impl Default for SysmonSim {
+    fn default() -> Self {
+        Self::new(SysmonConfig::default())
+    }
+}
+
+impl SysmonSim {
+    pub fn new(cfg: SysmonConfig) -> Self {
+        SysmonSim { cfg, seq: HashMap::new(), scrapes: 0, breaches: 0 }
+    }
+
+    /// Normalized gauge value in [0, 1.10]: per-host base + slow wave +
+    /// minute-bucketed noise. Pure in `(host, gauge index, now, seed)`.
+    fn gauge_value(&self, host: u64, gi: usize, now: SimTime) -> f64 {
+        let salt = self.cfg.seed ^ gi as u64;
+        // Base load tops out at 0.80: breaches need the wave and noise to
+        // line up, keeping alerts the exception rather than the rule.
+        let base = 0.35 + 0.45 * ((combine(host, 0xBA5E ^ salt) % 1000) as f64 / 1000.0);
+        let phase = (combine(host, 0x9A5E ^ salt) % 1000) as f64 / 1000.0;
+        let t = now as f64 / self.cfg.period.max(1) as f64;
+        let wave = 0.12 * ((t + phase) * std::f64::consts::TAU).sin();
+        let bucket = now / MINUTE;
+        let noise = (combine(combine(host, salt), bucket) % 1000) as f64 / 1000.0 * 0.10;
+        (base + wave + noise).clamp(0.0, 1.10)
+    }
+
+    fn severity(&self, v: f64) -> Severity {
+        if v >= self.cfg.crit {
+            Severity::Crit
+        } else if v >= self.cfg.warn {
+            Severity::Warn
+        } else {
+            Severity::Ok
+        }
+    }
+
+    /// Scrape a host's gauges at `now`. Returns the readings (fixed-size,
+    /// no allocation beyond the first scrape of a host) and the scrape
+    /// sequence number.
+    pub fn poll(&mut self, host: u64, now: SimTime) -> ([GaugeReading; GAUGES.len()], u64) {
+        self.scrapes += 1;
+        let seq = {
+            let s = self.seq.entry(host).or_insert(0);
+            *s += 1;
+            *s
+        };
+        let mut out = [GaugeReading { gauge: "", value: 0.0, severity: Severity::Ok }; GAUGES.len()];
+        for (gi, g) in GAUGES.iter().enumerate() {
+            let value = self.gauge_value(host, gi, now);
+            let severity = self.severity(value);
+            if severity != Severity::Ok {
+                self.breaches += 1;
+            }
+            out[gi] = GaugeReading { gauge: g, value, severity };
+        }
+        (out, seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_sequenced() {
+        let mut a = SysmonSim::default();
+        let mut b = SysmonSim::default();
+        for host in 1..=20u64 {
+            for k in 0..5u64 {
+                let (ra, sa) = a.poll(host, k * HOUR);
+                let (rb, sb) = b.poll(host, k * HOUR);
+                assert_eq!(sa, sb);
+                assert_eq!(sa, k + 1, "per-host scrape sequence is monotone");
+                for (x, y) in ra.iter().zip(rb.iter()) {
+                    assert_eq!(x.value, y.value);
+                    assert_eq!(x.severity, y.severity);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn values_bounded_and_thresholds_applied() {
+        let mut s = SysmonSim::default();
+        for host in 1..=100u64 {
+            let (readings, _) = s.poll(host, host * MINUTE * 37);
+            for r in readings {
+                assert!((0.0..=1.10).contains(&r.value), "{}", r.value);
+                match r.severity {
+                    Severity::Ok => assert!(r.value < s.cfg.warn),
+                    Severity::Warn => assert!(r.value >= s.cfg.warn && r.value < s.cfg.crit),
+                    Severity::Crit => assert!(r.value >= s.cfg.crit),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn a_host_population_breaches_sometimes_not_always() {
+        // Across a day of hourly scrapes of 50 hosts, some scrapes breach
+        // and most don't — monitoring traffic, not a firehose.
+        let mut s = SysmonSim::default();
+        let mut scrapes_with_breach = 0;
+        let mut total = 0;
+        for host in 1..=50u64 {
+            for h in 0..24u64 {
+                let (readings, _) = s.poll(host, h * HOUR + host * MINUTE);
+                total += 1;
+                if readings.iter().any(|r| r.severity != Severity::Ok) {
+                    scrapes_with_breach += 1;
+                }
+            }
+        }
+        assert!(scrapes_with_breach > 0, "no breaches in a day across 50 hosts");
+        assert!(
+            scrapes_with_breach < total / 2,
+            "breaches should be the exception: {scrapes_with_breach}/{total}"
+        );
+    }
+
+    #[test]
+    fn quiet_and_noisy_hosts_exist() {
+        // The per-host base spreads hosts from never-breaching to chronic;
+        // both ends must exist for the adaptive-schedule story.
+        let mut s = SysmonSim::default();
+        let mut per_host_breaches = Vec::new();
+        for host in 1..=60u64 {
+            let mut n = 0;
+            for h in 0..24u64 {
+                let (readings, _) = s.poll(host, h * HOUR);
+                n += readings.iter().filter(|r| r.severity != Severity::Ok).count();
+            }
+            per_host_breaches.push(n);
+        }
+        assert!(per_host_breaches.iter().any(|&n| n == 0), "some hosts stay quiet");
+        assert!(per_host_breaches.iter().any(|&n| n > 5), "some hosts are chronic");
+    }
+}

@@ -16,8 +16,8 @@
 //! idle.
 
 use super::rss::{RssFeed, RssItem};
+use crate::connector::ChannelId;
 use crate::sim::{SimTime, DAY, HOUR};
-use crate::store::streams::Channel;
 use crate::util::rng::Rng;
 
 /// Universe tuning knobs (calibrated in EXPERIMENTS.md §Fig4 so the
@@ -37,10 +37,12 @@ pub struct UniverseConfig {
     pub peak_hour: f64,
     /// Probability an item is a syndicated near-duplicate of a wire story.
     pub syndication_rate: f64,
-    /// Channel mix (fractions must sum to <= 1; remainder is News).
-    pub frac_custom_rss: f64,
-    pub frac_facebook: f64,
-    pub frac_twitter: f64,
+    /// Channel mix: cumulative `(channel, share)` sampling in list order;
+    /// any remainder goes to `default_channel`. `World::build` fills this
+    /// from the connector registry; the standalone default mirrors the
+    /// classic four-connector registry (news=0 absorbing the remainder).
+    pub channel_shares: Vec<(ChannelId, f64)>,
+    pub default_channel: ChannelId,
     pub seed: u64,
 }
 
@@ -54,9 +56,13 @@ impl Default for UniverseConfig {
             diurnal_depth: 0.65,
             peak_hour: 14.0,
             syndication_rate: 0.12,
-            frac_custom_rss: 0.05,
-            frac_facebook: 0.02,
-            frac_twitter: 0.03,
+            // custom_rss / facebook / twitter shares of the classic mix.
+            channel_shares: vec![
+                (ChannelId(1), 0.05),
+                (ChannelId(2), 0.02),
+                (ChannelId(3), 0.03),
+            ],
+            default_channel: ChannelId(0),
             seed: 0xA1E7_314D,
         }
     }
@@ -73,7 +79,7 @@ impl UniverseConfig {
 #[derive(Debug, Clone)]
 pub struct FeedProfile {
     pub id: u64,
-    pub channel: Channel,
+    pub channel: ChannelId,
     pub url: String,
     /// Base publish rate, items per virtual ms.
     pub rate_per_ms: f64,
@@ -168,15 +174,16 @@ impl FeedUniverse {
             let rate = (top / rank.powf(cfg.zipf_s * 0.55)).max(floor) * jitter;
             let channel = {
                 let u = rank_rng.next_f64();
-                if u < cfg.frac_facebook {
-                    Channel::Facebook
-                } else if u < cfg.frac_facebook + cfg.frac_twitter {
-                    Channel::Twitter
-                } else if u < cfg.frac_facebook + cfg.frac_twitter + cfg.frac_custom_rss {
-                    Channel::CustomRss
-                } else {
-                    Channel::News
+                let mut acc = 0.0;
+                let mut assigned = None;
+                for (ch, share) in &cfg.channel_shares {
+                    acc += share;
+                    if u < acc {
+                        assigned = Some(*ch);
+                        break;
+                    }
                 }
+                assigned.unwrap_or(cfg.default_channel)
             };
             profiles.push(FeedProfile {
                 id,

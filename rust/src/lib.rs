@@ -14,6 +14,7 @@ pub mod actor;
 pub mod baseline;
 pub mod benchlib;
 pub mod config;
+pub mod connector;
 pub mod dedup;
 pub mod feedsim;
 pub mod metrics;

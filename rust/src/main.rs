@@ -173,8 +173,16 @@ fn cmd_inspect(cfg: AlertMixConfig) -> Result<()> {
         println!("  {:<22} pool {}", st.name, st.pool_size);
     }
     println!("\nrouting: picker -> [sqs main|priority] -> feed-router -> distributor");
-    for ch in alertmix::store::streams::Channel::ALL {
-        println!("  channel {:<12} -> {}", ch.name(), sys.name_of(h.pool_for(ch)));
+    for (id, desc) in world.connectors.descriptors() {
+        match h.pool_for(id) {
+            Some(pool) => println!(
+                "  channel {:<12} -> {} ({:?})",
+                desc.name,
+                sys.name_of(pool),
+                desc.kind
+            ),
+            None => println!("  channel {:<12} -> (no connector registered)", desc.name),
+        }
     }
     println!("\nstreams bucket: {} records", world.store.len());
     println!(

@@ -23,7 +23,28 @@ impl Actor<World> for ChannelDistributor {
             world.counters.jobs_completed += 1;
             return Ok(());
         };
-        let pool = world.handles().pool_for(rec.channel);
+        // Registry-backed routing: a channel with no worker pool (no
+        // connector registered under that name, e.g. streams restored
+        // from a newer deployment's snapshot) is never silently rerouted
+        // to another channel's workers. It must not fail this shared
+        // singleton either — a burst of unrouted jobs would trip the
+        // supervision window and Stop routing for every channel. Instead:
+        // count it, keep the SQS message undeleted so redelivery walks it
+        // into the DLQ (redrive policy) where the monitor surfaces it,
+        // and release the in-flight slot.
+        let Some(pool) = world.handles().pool_for(rec.channel) else {
+            let channel = rec.channel;
+            world.counters.unrouted_jobs += 1;
+            world.counters.jobs_completed += 1;
+            world.metrics.count("UnroutedChannelJobs", now, 1.0);
+            eprintln!(
+                "alertmix: no worker pool for channel {} ({}) of stream {}; left for DLQ",
+                channel.0,
+                world.connectors.name(channel).unwrap_or("?"),
+                job.stream_id,
+            );
+            return Ok(());
+        };
         let pri = if job.from_priority || rec.priority { PRIORITY_HIGH } else { PRIORITY_NORMAL };
         ctx.send_pri(pool, pri, *job);
         Ok(())
@@ -58,27 +79,18 @@ mod tests {
         let fb = sys.spawn("f", MailboxKind::Unbounded, Box::new(|_| Box::new(Capture("cap-fb"))));
         let dist =
             sys.spawn("d", MailboxKind::Unbounded, Box::new(|_| Box::new(ChannelDistributor)));
-        let h = Handles {
-            picker: dist,
-            feed_router: dist,
-            distributor: dist,
-            priority_streams: dist,
-            news_pool: news,
-            rss_pool: news,
-            facebook_pool: fb,
-            twitter_pool: fb,
-            updater: dist,
-            enrich_stage: dist,
-            monitor: dist,
-        };
+        let mut h = Handles::uniform(dist, w.connectors.len());
+        // news + custom_rss share the news capture; both socials the other.
+        h.pools = vec![Some(news), Some(news), Some(fb), Some(fb)];
         w.handles = Some(h);
 
         // Find one news stream id in the tiny universe.
+        let news_ch = w.connectors.id("news").unwrap();
         let news_id = w
             .universe
             .profiles()
             .iter()
-            .find(|p| p.channel == crate::store::streams::Channel::News)
+            .find(|p| p.channel == news_ch)
             .unwrap()
             .id;
         // Queue a message so the ack below has something to delete.
@@ -112,20 +124,7 @@ mod tests {
         let mut w = World::build(&AlertMixConfig::tiny()).unwrap();
         let dist =
             sys.spawn("d", MailboxKind::Unbounded, Box::new(|_| Box::new(ChannelDistributor)));
-        let h = Handles {
-            picker: dist,
-            feed_router: dist,
-            distributor: dist,
-            priority_streams: dist,
-            news_pool: dist,
-            rss_pool: dist,
-            facebook_pool: dist,
-            twitter_pool: dist,
-            updater: dist,
-            enrich_stage: dist,
-            monitor: dist,
-        };
-        w.handles = Some(h);
+        w.handles = Some(Handles::uniform(dist, w.connectors.len()));
         sys.tell(dist, FeedJob {
             stream_id: 10_000_000,
             receipt: ReceiptHandle(987),
@@ -134,5 +133,48 @@ mod tests {
         });
         sys.run_to_idle(&mut w);
         assert_eq!(w.counters.missing_streams, 1);
+    }
+
+    #[test]
+    fn poolless_channel_is_counted_and_left_for_dlq() {
+        // A stream whose channel has no worker pool (descriptor-only
+        // registry entry, e.g. restored from a newer deployment) is never
+        // rerouted to another channel's workers — and a burst of such
+        // jobs must not crash the shared distributor either. The message
+        // stays undeleted so SQS redelivery walks it into the DLQ.
+        let mut sys: ActorSystem<World> = ActorSystem::new(1);
+        let mut w = World::build(&AlertMixConfig::tiny()).unwrap();
+        let ghost = w.connectors.intern("telemetry");
+        let dist =
+            sys.spawn("d", MailboxKind::Unbounded, Box::new(|_| Box::new(ChannelDistributor)));
+        // Handles built before the intern: no pool slot for the ghost.
+        let mut h = Handles::uniform(dist, w.connectors.len());
+        h.pools[ghost.0 as usize] = None;
+        w.handles = Some(h);
+        // A burst well past the supervision window (Restart{10, 60s}).
+        for i in 0..30u64 {
+            let id = 5_000_000 + i;
+            w.store.insert(crate::store::streams::StreamRecord::new(
+                id,
+                ghost,
+                format!("http://t/{i}"),
+                300_000,
+                0,
+            ));
+            w.queues.main.send(0, crate::sqs::JobBody::StreamId(id));
+            let m = w.queues.main.receive(0, 1).pop().unwrap();
+            sys.tell(dist, FeedJob {
+                stream_id: id,
+                receipt: m.handle,
+                from_priority: false,
+                receive_count: m.receive_count,
+            });
+        }
+        sys.run_to_idle(&mut w);
+        assert_eq!(sys.stats(dist).failed, 0, "distributor must survive the burst");
+        assert_eq!(w.counters.unrouted_jobs, 30);
+        assert_eq!(w.counters.jobs_completed, 30, "in-flight slots released");
+        assert_eq!(w.queues.main.counters.deleted, 0, "SQS messages kept for redelivery");
+        assert_eq!(w.metrics.get("UnroutedChannelJobs").unwrap().total(), 30.0);
     }
 }

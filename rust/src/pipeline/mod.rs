@@ -45,8 +45,8 @@ use crate::actor::{
 };
 use crate::actor::{ActorId, PRIORITY_NORMAL};
 use crate::config::AlertMixConfig;
+use crate::connector::{ChannelId, ConnectorRegistry};
 use crate::sim::SimTime;
-use crate::store::streams::Channel;
 use crate::util::rng::Rng;
 
 /// Addresses of the spawned topology.
@@ -56,22 +56,35 @@ pub struct Handles {
     pub feed_router: ActorId,
     pub distributor: ActorId,
     pub priority_streams: ActorId,
-    pub news_pool: ActorId,
-    pub rss_pool: ActorId,
-    pub facebook_pool: ActorId,
-    pub twitter_pool: ActorId,
+    /// One worker pool per registered connector, indexed by `ChannelId.0`
+    /// (registration order). `None` for descriptor-only registry entries
+    /// (channels known by name but served by no connector here).
+    pub pools: Vec<Option<ActorId>>,
     pub updater: ActorId,
     pub enrich_stage: ActorId,
     pub monitor: ActorId,
 }
 
 impl Handles {
-    pub fn pool_for(&self, channel: Channel) -> ActorId {
-        match channel {
-            Channel::News => self.news_pool,
-            Channel::CustomRss => self.rss_pool,
-            Channel::Facebook => self.facebook_pool,
-            Channel::Twitter => self.twitter_pool,
+    /// Worker pool serving a channel; `None` when the channel has no
+    /// connector (the distributor counts those jobs as unrouted and
+    /// leaves them to the SQS redrive/DLQ path).
+    pub fn pool_for(&self, channel: ChannelId) -> Option<ActorId> {
+        self.pools.get(channel.0 as usize).copied().flatten()
+    }
+
+    /// Test/bench fixture: every role (and `n_pools` worker pools) served
+    /// by a single actor.
+    pub fn uniform(actor: ActorId, n_pools: usize) -> Handles {
+        Handles {
+            picker: actor,
+            feed_router: actor,
+            distributor: actor,
+            priority_streams: actor,
+            pools: vec![Some(actor); n_pools],
+            updater: actor,
+            enrich_stage: actor,
+            monitor: actor,
         }
     }
 }
@@ -80,9 +93,23 @@ impl Handles {
 /// scheduler". Builds the world, spawns every actor with the paper's
 /// mailbox/supervision choices, registers the timers, seeds the stream
 /// bucket — and returns a ready-to-run system.
+///
+/// Sources come from the config's declarative connector list; use
+/// [`bootstrap_with`] to register custom [`crate::connector::SourceConnector`]s.
 pub fn bootstrap(cfg: AlertMixConfig) -> anyhow::Result<(ActorSystem<World>, World, Handles)> {
+    let registry = ConnectorRegistry::from_config(&cfg)?;
+    bootstrap_with(cfg, registry)
+}
+
+/// [`bootstrap`] against an explicit connector registry: one worker pool
+/// is spawned per registered connector (registry order = `ChannelId`
+/// order), sized by its [`crate::connector::ChannelDescriptor`].
+pub fn bootstrap_with(
+    cfg: AlertMixConfig,
+    registry: ConnectorRegistry,
+) -> anyhow::Result<(ActorSystem<World>, World, Handles)> {
     cfg.validate()?;
-    let mut world = World::build(&cfg)?;
+    let mut world = World::build_with(&cfg, registry)?;
     let mut sys: ActorSystem<World> = ActorSystem::new(cfg.seed ^ 0x5157E4);
 
     // -- actors -----------------------------------------------------------
@@ -99,12 +126,29 @@ pub fn bootstrap(cfg: AlertMixConfig) -> anyhow::Result<(ActorSystem<World>, Wor
         Box::new(|_| Box::new(enrich_stage::EnrichStage)),
     );
 
-    let mk_pool = |sys: &mut ActorSystem<World>,
-                   name: &str,
-                   channel: Channel,
-                   size: usize,
-                   resizer_seed: u64|
-     -> ActorId {
+    // One pool per registered connector. Channels interned without a
+    // connector get no pool: the distributor counts their jobs as
+    // unrouted (DLQ via redelivery) instead of silently borrowing
+    // another channel's workers.
+    let pool_specs: Vec<(ChannelId, String, usize, usize, bool)> = world
+        .connectors
+        .descriptors()
+        .map(|(id, d)| {
+            (
+                id,
+                format!("{}-pool", d.name),
+                d.pool_size,
+                if d.mailbox > 0 { d.mailbox } else { cfg.pool_mailbox },
+                world.connectors.connector(id).is_some(),
+            )
+        })
+        .collect();
+    let mut pools: Vec<Option<ActorId>> = Vec::with_capacity(pool_specs.len());
+    for (channel, name, size, mailbox, has_connector) in pool_specs {
+        if !has_connector {
+            pools.push(None);
+            continue;
+        }
         let resizer = if cfg.use_resizer {
             Some(OptimalSizeExploringResizer::new(
                 ResizerConfig {
@@ -112,27 +156,22 @@ pub fn bootstrap(cfg: AlertMixConfig) -> anyhow::Result<(ActorSystem<World>, Wor
                     upper_bound: cfg.resizer_upper,
                     ..Default::default()
                 },
-                Rng::new(cfg.seed ^ resizer_seed),
+                Rng::new(cfg.seed ^ (0xA + channel.0 as u64)),
             ))
         } else {
             None
         };
-        sys.spawn_pool(
-            name,
+        let pool = sys.spawn_pool(
+            &name,
             // paper: "pool of actors with bounded stable priority mail box"
-            MailboxKind::BoundedStablePriority(cfg.pool_mailbox),
-            Box::new(move |_| {
-                Box::new(workers::ChannelWorker { channel })
-            }),
-            size,
+            MailboxKind::BoundedStablePriority(mailbox),
+            Box::new(move |_| Box::new(workers::ChannelWorker { channel })),
+            size.max(1),
             SupervisorStrategy::Restart { max_retries: 50, within: 60_000 },
             resizer,
-        )
-    };
-    let news_pool = mk_pool(&mut sys, "news-pool", Channel::News, cfg.news_pool, 0xA);
-    let rss_pool = mk_pool(&mut sys, "custom-rss-pool", Channel::CustomRss, cfg.rss_pool, 0xB);
-    let facebook_pool = mk_pool(&mut sys, "facebook-pool", Channel::Facebook, cfg.social_pool, 0xC);
-    let twitter_pool = mk_pool(&mut sys, "twitter-pool", Channel::Twitter, cfg.social_pool, 0xD);
+        );
+        pools.push(Some(pool));
+    }
 
     let distributor = sys.spawn(
         "channel-distributor",
@@ -170,10 +209,7 @@ pub fn bootstrap(cfg: AlertMixConfig) -> anyhow::Result<(ActorSystem<World>, Wor
         feed_router,
         distributor,
         priority_streams,
-        news_pool,
-        rss_pool,
-        facebook_pool,
-        twitter_pool,
+        pools,
         updater,
         enrich_stage,
         monitor,
@@ -200,7 +236,17 @@ pub fn bootstrap(cfg: AlertMixConfig) -> anyhow::Result<(ActorSystem<World>, Wor
 /// Convenience driver: bootstrap, run for the configured duration, return
 /// the final world + system for inspection.
 pub fn run_for(cfg: AlertMixConfig, duration: SimTime) -> anyhow::Result<(ActorSystem<World>, World)> {
-    let (mut sys, mut world, _h) = bootstrap(cfg)?;
+    let registry = ConnectorRegistry::from_config(&cfg)?;
+    run_for_with(cfg, registry, duration)
+}
+
+/// [`run_for`] against an explicit connector registry (custom sources).
+pub fn run_for_with(
+    cfg: AlertMixConfig,
+    registry: ConnectorRegistry,
+    duration: SimTime,
+) -> anyhow::Result<(ActorSystem<World>, World)> {
+    let (mut sys, mut world, _h) = bootstrap_with(cfg, registry)?;
     sys.run_until(&mut world, duration);
     // Drain the enrichment batcher so every fetched item is accounted for.
     world.flush_enrichment(duration);
@@ -216,10 +262,19 @@ mod tests {
     #[test]
     fn bootstrap_spawns_topology() {
         let (sys, world, h) = bootstrap(AlertMixConfig::tiny()).unwrap();
-        assert_eq!(sys.cell_count(), 11);
+        // 7 singleton actors + one pool per registered connector.
+        assert_eq!(sys.cell_count(), 7 + world.connectors.connector_count());
+        assert_eq!(world.connectors.connector_count(), 4, "classic quartet by default");
         assert_eq!(world.store.len(), 200);
-        assert_eq!(sys.name_of(h.news_pool), "news-pool");
-        assert_eq!(sys.pool_size(h.news_pool), 4);
+        let news = world.connectors.id("news").unwrap();
+        let news_pool = h.pool_for(news).unwrap();
+        assert_eq!(sys.name_of(news_pool), "news-pool");
+        assert_eq!(sys.pool_size(news_pool), 4);
+        // Every registered connector got a pool.
+        for (id, d) in world.connectors.descriptors() {
+            let pool = h.pool_for(id).expect("pool per connector");
+            assert_eq!(sys.name_of(pool), format!("{}-pool", d.name));
+        }
     }
 
     #[test]

@@ -20,15 +20,16 @@ impl Actor<World> for StreamsPicker {
             return Ok(()); // ignore unknown messages
         }
         let now = ctx.now();
-        let picked = world.store.pick_due(
+        // One recycled buffer serves every cron tick: the steady-state
+        // pick path allocates nothing (ROADMAP streams-bucket slice).
+        let mut picked = std::mem::take(&mut world.pick_buf);
+        world.store.pick_due_into(
             now,
             world.cfg.pick_interval,
             world.cfg.stale_after,
             world.cfg.pick_batch,
+            &mut picked,
         );
-        if picked.is_empty() {
-            return Ok(());
-        }
         let mut to_priority = 0u64;
         let mut to_main = 0u64;
         for id in &picked {
@@ -45,13 +46,18 @@ impl Actor<World> for StreamsPicker {
                 to_main += 1;
             }
         }
+        let n_picked = picked.len();
+        world.pick_buf = picked;
+        if n_picked == 0 {
+            return Ok(());
+        }
         // CloudWatch series: Figure 4's NumberOfMessagesSent.
         world.metrics.count("NumberOfMessagesSent", now, (to_main + to_priority) as f64);
         if to_priority > 0 {
             world.metrics.count("PriorityMessagesSent", now, to_priority as f64);
         }
         // Claiming + enqueueing cost: a Couchbase query + N small writes.
-        ctx.take(1 + picked.len() as u64 / 200);
+        ctx.take(1 + n_picked as u64 / 200);
         Ok(())
     }
 }

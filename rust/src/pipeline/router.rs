@@ -144,20 +144,8 @@ mod tests {
             }
         }
         let sink = sys.spawn("sink", MailboxKind::Unbounded, Box::new(|_| Box::new(Sink)));
-        let h = Handles {
-            picker: sink,
-            feed_router: sink,
-            distributor: sink,
-            priority_streams: sink,
-            news_pool: sink,
-            rss_pool: sink,
-            facebook_pool: sink,
-            twitter_pool: sink,
-            updater: sink,
-            enrich_stage: sink,
-            monitor: sink,
-        };
-        w.handles = Some(h);
+        let n_pools = w.connectors.len();
+        w.handles = Some(Handles::uniform(sink, n_pools));
         (w, sink)
     }
 

@@ -4,154 +4,22 @@
 //! lastModified headers. It handles redirects, checks for duplicate
 //! entries already in the system and then processes the results."
 //!
-//! News/CustomRSS workers fetch + parse real RSS XML through the simulated
-//! HTTP layer; Facebook/Twitter workers call the simulated platform APIs.
-//! Every fetched item is featurized (shared FNV/log1p contract) directly
-//! into a pooled columnar buffer and the whole poll is shipped to the
-//! EnrichStage as one `EnrichBatch` — no per-item message, no per-item
-//! boxed feature array. The poll outcome goes to the StreamsUpdater which
-//! adapts the schedule and acks SQS.
+//! The fetch behaviour itself lives behind the pluggable
+//! [`SourceConnector`] API (`crate::connector`): the worker looks its
+//! channel's connector up in the registry and dispatches — no per-channel
+//! match, no catch-all. A channel with no registered connector is a
+//! supervised [`ActorError`], never a silent fallback onto another
+//! source's API. The poll outcome goes to the StreamsUpdater which adapts
+//! the schedule and acks SQS.
 
-use super::messages::{EnrichBatch, FeedJob, ItemMeta, StreamPolled};
+use super::messages::{FeedJob, StreamPolled};
 use super::world::World;
 use crate::actor::{Actor, ActorError, ActorResult, Ctx, Msg};
-use crate::feedsim::{Conditional, HttpStatus, Platform, SocialResult};
-use crate::sim::SimTime;
-use crate::store::streams::{Channel, PollOutcome};
-use crate::text::featurize_item_into;
+use crate::connector::ChannelId;
+use crate::store::streams::PollOutcome;
 
 pub struct ChannelWorker {
-    pub channel: Channel,
-}
-
-impl ChannelWorker {
-    /// Fetch + parse for RSS-style channels. Returns (outcome, etag, lm).
-    fn poll_rss(
-        &self,
-        ctx: &mut Ctx,
-        world: &mut World,
-        stream_id: u64,
-    ) -> (PollOutcome, Option<String>, Option<SimTime>) {
-        let now = ctx.now();
-        let Some(rec) = world.store.get(stream_id) else {
-            return (PollOutcome::Error, None, None);
-        };
-        let cond = Conditional {
-            if_none_match: rec.etag.clone(),
-            if_modified_since: rec.last_modified,
-        };
-        let url = rec.url.clone();
-        let mut resp = world.http.fetch(&mut world.universe, &url, &cond, now);
-        ctx.take(resp.latency_ms);
-
-        // "It handles redirects": follow one permanent move.
-        if let HttpStatus::MovedPermanently { location } = &resp.status {
-            world.counters.redirects_followed += 1;
-            let loc = location.clone();
-            resp = world.http.fetch(&mut world.universe, &loc, &cond, now);
-            ctx.take(resp.latency_ms);
-        }
-
-        match resp.status {
-            HttpStatus::Ok => {
-                let body = resp.body.as_deref().unwrap_or("");
-                // Parse the actual XML (cost modeled per KiB).
-                ctx.take(1 + body.len() as SimTime / 65_536);
-                let parsed = match crate::feedsim::parse_rss(body) {
-                    Ok(f) => f,
-                    Err(_) => {
-                        world.counters.fetch_errors += 1;
-                        return (PollOutcome::Error, resp.etag, resp.last_modified);
-                    }
-                };
-                let n = parsed.items.len() as u32;
-                let enrich_stage = world.handles().enrich_stage;
-                let (mut metas, mut features) = world.enrich_pool.acquire();
-                for item in parsed.items {
-                    let doc_id = world.doc_ids.next();
-                    world.counters.items_fetched += 1;
-                    featurize_item_into(&item.title, &item.description, &mut features);
-                    metas.push(ItemMeta {
-                        doc_id,
-                        stream_id,
-                        guid: item.guid,
-                        title: item.title,
-                        body: item.description,
-                        url: item.link,
-                        published_ms: item.pub_ms,
-                    });
-                }
-                if metas.is_empty() {
-                    world.enrich_pool.recycle(metas, features);
-                } else {
-                    ctx.send(enrich_stage, EnrichBatch { metas, features });
-                }
-                (PollOutcome::Items(n), resp.etag, resp.last_modified)
-            }
-            HttpStatus::NotModified => (PollOutcome::NotModified, resp.etag, resp.last_modified),
-            HttpStatus::MovedPermanently { .. } => {
-                // Second redirect in a row: treat as an error this cycle.
-                world.counters.fetch_errors += 1;
-                (PollOutcome::Error, None, None)
-            }
-            HttpStatus::ServerError(_) | HttpStatus::Timeout => {
-                world.counters.fetch_errors += 1;
-                (PollOutcome::Error, None, None)
-            }
-        }
-    }
-
-    /// Timeline pull for social channels.
-    fn poll_social(
-        &self,
-        ctx: &mut Ctx,
-        world: &mut World,
-        stream_id: u64,
-    ) -> (PollOutcome, Option<String>, Option<SimTime>) {
-        let now = ctx.now();
-        let platform = match self.channel {
-            Channel::Facebook => Platform::Facebook,
-            _ => Platform::Twitter,
-        };
-        match world.social.timeline(&mut world.universe, platform, stream_id, now) {
-            SocialResult::RateLimited { .. } => {
-                world.counters.rate_limited += 1;
-                // Back off via the error path; the schedule adapts.
-                (PollOutcome::Error, None, None)
-            }
-            SocialResult::Page { posts, latency_ms } => {
-                ctx.take(latency_ms);
-                let n = posts.len() as u32;
-                let enrich_stage = world.handles().enrich_stage;
-                let (mut metas, mut features) = world.enrich_pool.acquire();
-                for post in posts {
-                    let doc_id = world.doc_ids.next();
-                    world.counters.items_fetched += 1;
-                    let it = post.item;
-                    featurize_item_into(&it.title, &it.body, &mut features);
-                    metas.push(ItemMeta {
-                        doc_id,
-                        stream_id,
-                        guid: it.guid,
-                        title: it.title,
-                        body: it.body,
-                        url: it.link,
-                        published_ms: it.pub_ms,
-                    });
-                }
-                if metas.is_empty() {
-                    world.enrich_pool.recycle(metas, features);
-                } else {
-                    ctx.send(enrich_stage, EnrichBatch { metas, features });
-                }
-                if n > 0 {
-                    (PollOutcome::Items(n), None, Some(now))
-                } else {
-                    (PollOutcome::NotModified, None, None)
-                }
-            }
-        }
-    }
+    pub channel: ChannelId,
 }
 
 impl Actor<World> for ChannelWorker {
@@ -166,11 +34,18 @@ impl Actor<World> for ChannelWorker {
             return Err(ActorError::new("injected worker crash"));
         }
 
-        let (outcome, etag, last_modified) = match self.channel {
-            Channel::News | Channel::CustomRss => self.poll_rss(ctx, world, job.stream_id),
-            Channel::Facebook | Channel::Twitter => self.poll_social(ctx, world, job.stream_id),
+        // Registry dispatch. An unmapped channel is a supervised failure —
+        // the job stays undeleted in SQS and either redelivers once a
+        // connector appears or lands in the DLQ where the monitor sees it.
+        let Some(connector) = world.connectors.connector(self.channel) else {
+            return Err(ActorError::new(format!(
+                "no connector registered for channel {} ({})",
+                self.channel.0,
+                world.connectors.name(self.channel).unwrap_or("?"),
+            )));
         };
-        match outcome {
+        let result = connector.poll(ctx, world, job.stream_id);
+        match result.outcome {
             PollOutcome::Items(_) => world.counters.polls_ok += 1,
             PollOutcome::NotModified => world.counters.polls_not_modified += 1,
             PollOutcome::Error => world.counters.polls_error += 1,
@@ -182,9 +57,9 @@ impl Actor<World> for ChannelWorker {
                 stream_id: job.stream_id,
                 receipt: job.receipt,
                 from_priority: job.from_priority,
-                outcome,
-                etag,
-                last_modified,
+                outcome: result.outcome,
+                etag: result.etag,
+                last_modified: result.last_modified,
             },
         );
         Ok(())
@@ -196,17 +71,25 @@ mod tests {
     use super::*;
     use crate::actor::{ActorSystem, MailboxKind};
     use crate::config::AlertMixConfig;
+    use crate::pipeline::messages::EnrichBatch;
     use crate::pipeline::Handles;
     use crate::sim::DAY;
     use crate::text::FEATURE_DIM;
 
-    /// Wire a worker with capture actors for updater + enrich stage.
-    fn setup(
-        channel: Channel,
-    ) -> (ActorSystem<World>, World, crate::actor::ActorId) {
-        let mut sys: ActorSystem<World> = ActorSystem::new(1);
-        let mut w = World::build(&AlertMixConfig::tiny()).unwrap();
+    /// Wire a worker for `channel_name` with capture actors for updater +
+    /// enrich stage.
+    fn setup(channel_name: &str) -> (ActorSystem<World>, World, crate::actor::ActorId) {
+        let sys: ActorSystem<World> = ActorSystem::new(1);
+        let w = World::build(&AlertMixConfig::tiny()).unwrap();
+        let channel = w.connectors.id(channel_name).unwrap();
+        setup_with_channel(sys, w, channel)
+    }
 
+    fn setup_with_channel(
+        mut sys: ActorSystem<World>,
+        mut w: World,
+        channel: ChannelId,
+    ) -> (ActorSystem<World>, World, crate::actor::ActorId) {
         struct CaptureUpdater;
         impl Actor<World> for CaptureUpdater {
             fn receive(&mut self, _: &mut Ctx, w: &mut World, msg: Msg) -> ActorResult {
@@ -244,19 +127,10 @@ mod tests {
             MailboxKind::Unbounded,
             Box::new(move |_| Box::new(ChannelWorker { channel })),
         );
-        w.handles = Some(Handles {
-            picker: wk,
-            feed_router: wk,
-            distributor: wk,
-            priority_streams: wk,
-            news_pool: wk,
-            rss_pool: wk,
-            facebook_pool: wk,
-            twitter_pool: wk,
-            updater: upd,
-            enrich_stage: enr,
-            monitor: wk,
-        });
+        let mut h = Handles::uniform(wk, w.connectors.len());
+        h.updater = upd;
+        h.enrich_stage = enr;
+        w.handles = Some(h);
         (sys, w, wk)
     }
 
@@ -271,12 +145,13 @@ mod tests {
 
     #[test]
     fn news_worker_fetches_and_reports() {
-        let (mut sys, mut w, wk) = setup(Channel::News);
+        let (mut sys, mut w, wk) = setup("news");
+        let news = w.connectors.id("news").unwrap();
         let id = w
             .universe
             .profiles()
             .iter()
-            .find(|p| p.channel == Channel::News)
+            .find(|p| p.channel == news)
             .unwrap()
             .id;
         // Move virtual time a day forward so the feed has items.
@@ -304,7 +179,7 @@ mod tests {
 
     #[test]
     fn social_worker_pulls_timeline() {
-        let (mut sys, mut w, wk) = setup(Channel::Twitter);
+        let (mut sys, mut w, wk) = setup("twitter");
         let id = w.universe.profiles()[0].id;
         sys.tell_at(DAY, wk, job(id));
         sys.run_to_idle(&mut w);
@@ -312,8 +187,91 @@ mod tests {
     }
 
     #[test]
+    fn unmapped_channel_is_supervised_error_not_twitter() {
+        // Regression: the old `_ => Platform::Twitter` catch-all silently
+        // polled Twitter for any unknown channel. Now an unmapped channel
+        // is a supervised ActorError and no social API call happens.
+        let sys: ActorSystem<World> = ActorSystem::new(1);
+        let w = World::build(&AlertMixConfig::tiny()).unwrap();
+        let ghost = ChannelId(999);
+        assert!(w.connectors.connector(ghost).is_none());
+        let (mut sys, mut w, wk) = setup_with_channel(sys, w, ghost);
+        sys.tell_at(DAY, wk, job(1));
+        sys.run_to_idle(&mut w);
+        let st = sys.stats(wk);
+        assert_eq!(st.failed, 1, "unmapped channel must fail the routee");
+        assert_eq!(w.social.calls, 0, "must not masquerade as a Twitter poll");
+        assert_eq!(w.counters.jobs_completed, 0, "no poll outcome reported");
+        let polled = w.counters.polls_ok + w.counters.polls_not_modified + w.counters.polls_error;
+        assert_eq!(polled, 0);
+    }
+
+    #[test]
+    fn descriptor_only_channel_is_also_unmapped() {
+        // An interned (descriptor-only) channel — e.g. restored from a
+        // newer deployment's snapshot — has a name but no connector, and
+        // must fail the same way.
+        let sys: ActorSystem<World> = ActorSystem::new(1);
+        let mut w = World::build(&AlertMixConfig::tiny()).unwrap();
+        let ghost = w.connectors.intern("telemetry");
+        let (mut sys, mut w, wk) = setup_with_channel(sys, w, ghost);
+        sys.tell_at(DAY, wk, job(1));
+        sys.run_to_idle(&mut w);
+        assert_eq!(sys.stats(wk).failed, 1);
+        assert_eq!(w.counters.jobs_completed, 0);
+    }
+
+    #[test]
+    fn youtube_worker_ships_video_payloads() {
+        // Swap the universe onto a registry where every stream is a
+        // youtube channel, then poll one.
+        let mut cfg = AlertMixConfig::tiny();
+        cfg.connectors = vec![crate::config::ConnectorSpec::new("youtube", 2, 1.0)];
+        let sys: ActorSystem<World> = ActorSystem::new(1);
+        let w = World::build(&cfg).unwrap();
+        let yt = w.connectors.id("youtube").unwrap();
+        let (mut sys, mut w, wk) = setup_with_channel(sys, w, yt);
+        let id = w.universe.profiles()[0].id;
+        sys.tell_at(DAY, wk, job(id));
+        sys.run_to_idle(&mut w);
+        assert_eq!(w.counters.jobs_completed, 1);
+        assert_eq!(w.social.calls, 1, "youtube rides the timeline simulator");
+    }
+
+    #[test]
+    fn metrics_worker_reports_threshold_breaches() {
+        let mut cfg = AlertMixConfig::tiny();
+        cfg.connectors = vec![crate::config::ConnectorSpec::new("metrics", 2, 1.0)];
+        let sys: ActorSystem<World> = ActorSystem::new(1);
+        let w = World::build(&cfg).unwrap();
+        let metrics = w.connectors.id("metrics").unwrap();
+        let (mut sys, mut w, wk) = setup_with_channel(sys, w, metrics);
+        // Scrape a spread of hosts; with default thresholds some breach.
+        for (i, host) in (1..=40u64).enumerate() {
+            sys.tell_at(DAY + i as u64, wk, job(host));
+        }
+        sys.run_to_idle(&mut w);
+        assert_eq!(w.counters.jobs_completed, 40);
+        assert!(w.sysmon.scrapes >= 40);
+        assert!(
+            w.counters.polls_ok > 0,
+            "some hosts should breach thresholds and yield items"
+        );
+        assert!(
+            w.counters.polls_not_modified > 0,
+            "quiet hosts return NotModified so the schedule backs off"
+        );
+        if w.counters.polls_ok > 0 {
+            assert_eq!(
+                w.metrics.get("enrich-items").unwrap().total(),
+                w.counters.items_fetched as f64
+            );
+        }
+    }
+
+    #[test]
     fn fault_injection_crashes_worker() {
-        let (mut sys, mut w, wk) = setup(Channel::News);
+        let (mut sys, mut w, wk) = setup("news");
         w.cfg.worker_fault_rate = 1.0;
         sys.tell_at(DAY, wk, job(1));
         sys.run_to_idle(&mut w);

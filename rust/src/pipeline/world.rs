@@ -5,8 +5,12 @@ use super::messages::{EnrichBatch, ItemMeta};
 use super::Handles;
 use crate::actor::DeadLetters;
 use crate::config::AlertMixConfig;
+use crate::connector::ConnectorRegistry;
 use crate::dedup::{DedupVerdict, Deduper};
-use crate::feedsim::{FeedUniverse, HttpConfig, HttpSim, SocialConfig, SocialSim, UniverseConfig};
+use crate::feedsim::{
+    FeedUniverse, HttpConfig, HttpSim, SocialConfig, SocialSim, SysmonConfig, SysmonSim,
+    UniverseConfig,
+};
 use crate::metrics::MetricRegistry;
 use crate::runtime::{Batcher, BatcherConfig, CpuFallbackEnricher, EnrichBackend};
 use crate::sim::SimTime;
@@ -35,6 +39,11 @@ pub struct WorldCounters {
     pub polls_not_modified: u64,
     pub polls_error: u64,
     pub missing_streams: u64,
+    /// Jobs whose channel has no worker pool (no connector registered
+    /// under that name — e.g. streams restored from a newer deployment's
+    /// snapshot). Left undeleted in SQS so redelivery walks them into the
+    /// DLQ where the monitor sees them.
+    pub unrouted_jobs: u64,
     pub enrich_batches: u64,
 }
 
@@ -91,11 +100,16 @@ impl EnrichBufferPool {
 /// The substrate bundle threaded through every actor handler.
 pub struct World {
     pub cfg: AlertMixConfig,
+    /// The pluggable source registry: one [`crate::connector::SourceConnector`]
+    /// per channel, dispatched by the worker pools.
+    pub connectors: ConnectorRegistry,
     pub store: StreamStore,
     pub queues: DualQueue,
     pub universe: FeedUniverse,
     pub http: HttpSim,
     pub social: SocialSim,
+    /// System-monitoring substrate behind the `metrics` connector.
+    pub sysmon: SysmonSim,
     pub sink: ElasticLite,
     pub dedup: Deduper,
     pub metrics: MetricRegistry,
@@ -107,6 +121,10 @@ pub struct World {
     /// (`DualQueue::receive_prioritized_into`): one buffer serves every
     /// replenishment, so the steady-state pull loop allocates nothing.
     pub router_drain: Vec<(bool, ReceivedMessage)>,
+    /// Recycled output buffer for the picker's 5-second cron
+    /// (`StreamStore::pick_due_into`): the steady-state pick path
+    /// allocates nothing.
+    pub pick_buf: Vec<u64>,
     /// ticket -> item metadata for in-flight enrichment requests.
     pub pending_items: HashMap<u64, ItemMeta>,
     pub doc_ids: IdGen,
@@ -120,12 +138,28 @@ pub struct World {
 }
 
 impl World {
+    /// Build with the connector registry the config's declarative
+    /// connector list describes.
     pub fn build(cfg: &AlertMixConfig) -> anyhow::Result<World> {
+        let connectors = ConnectorRegistry::from_config(cfg)?;
+        Self::build_with(cfg, connectors)
+    }
+
+    /// Build against an explicit registry (custom connectors registered
+    /// programmatically). The universe's channel mix and each stream's
+    /// base poll interval come from the registry's descriptors.
+    pub fn build_with(
+        cfg: &AlertMixConfig,
+        connectors: ConnectorRegistry,
+    ) -> anyhow::Result<World> {
+        anyhow::ensure!(connectors.connector_count() > 0, "registry has no connectors");
         let ucfg = UniverseConfig {
             n_feeds: cfg.n_feeds,
             diurnal_depth: cfg.diurnal_depth,
             syndication_rate: cfg.syndication_rate,
             seed: cfg.seed ^ 0x0051_F00D,
+            channel_shares: connectors.shares(),
+            default_channel: connectors.default_channel(),
             ..UniverseConfig::default()
         };
         let universe = FeedUniverse::new(ucfg);
@@ -139,13 +173,17 @@ impl World {
         let mut store = StreamStore::new();
         store.max_backoff = cfg.max_backoff_level;
         for p in universe.profiles() {
-            let mut rec =
-                StreamRecord::new(p.id, p.channel, p.url.clone(), cfg.base_poll_interval, 0);
+            let base_interval = connectors
+                .descriptor(p.channel)
+                .map(|d| d.default_interval)
+                .filter(|&ms| ms > 0)
+                .unwrap_or(cfg.base_poll_interval);
+            let mut rec = StreamRecord::new(p.id, p.channel, p.url.clone(), base_interval, 0);
             // Equilibrium level: smallest backoff at which the feed has a
             // reasonable chance (~exp items >= 0.5) of new content per poll.
             let mut level = 0u8;
             while level < cfg.max_backoff_level {
-                let interval = cfg.base_poll_interval * (1u64 << level);
+                let interval = base_interval * (1u64 << level);
                 if p.rate_per_ms * interval as f64 >= 0.5 {
                     break;
                 }
@@ -167,6 +205,7 @@ impl World {
         metrics.add_alarm("DeadLetters", cfg.dead_letter_alarm, true);
 
         Ok(World {
+            connectors,
             store,
             queues: DualQueue::new(
                 cfg.visibility_timeout,
@@ -175,6 +214,10 @@ impl World {
             universe,
             http: HttpSim::new(HttpConfig { seed: cfg.seed ^ 0x4777, ..HttpConfig::default() }),
             social: SocialSim::new(SocialConfig::default()),
+            sysmon: SysmonSim::new(SysmonConfig {
+                seed: cfg.seed ^ 0x5195_604D,
+                ..SysmonConfig::default()
+            }),
             sink: ElasticLite::new(cfg.sink_bulk),
             dedup: Deduper::new(cfg.dedup_max_hamming),
             metrics,
@@ -185,6 +228,7 @@ impl World {
             }),
             enrich_pool: EnrichBufferPool::default(),
             router_drain: Vec::new(),
+            pick_buf: Vec::new(),
             pending_items: HashMap::new(),
             doc_ids: IdGen::new(),
             alerts: AlertBook::new(),

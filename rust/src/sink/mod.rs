@@ -7,6 +7,7 @@
 //! (term/phrase lookup) for the examples to verify end-to-end delivery.
 
 use crate::sim::SimTime;
+use crate::sqs::LatencyHistogram;
 use crate::text::tokenize;
 use std::collections::HashMap;
 
@@ -44,8 +45,10 @@ pub struct ElasticLite {
     pending: Vec<SinkDoc>,
     pub bulk_size: usize,
     pub counters: SinkCounters,
-    /// ingestion latency samples (published -> ingested), for percentiles.
-    latencies: Vec<SimTime>,
+    /// Ingestion latency (published -> ingested) as an O(1)-memory
+    /// log-bucketed histogram — same structure as the SQS delete-latency
+    /// tracking, so percentiles stay cheap at any ingest volume.
+    latencies: LatencyHistogram,
 }
 
 impl ElasticLite {
@@ -56,7 +59,7 @@ impl ElasticLite {
             pending: Vec::new(),
             bulk_size,
             counters: SinkCounters::default(),
-            latencies: Vec::new(),
+            latencies: LatencyHistogram::new(),
         }
     }
 
@@ -79,7 +82,7 @@ impl ElasticLite {
         }
         self.counters.bulk_requests += 1;
         for doc in std::mem::take(&mut self.pending) {
-            self.latencies.push(doc.ingested_ms.saturating_sub(doc.published_ms));
+            self.latencies.record(doc.ingested_ms.saturating_sub(doc.published_ms));
             for tok in tokenize(&doc.title).into_iter().chain(tokenize(&doc.body)) {
                 self.counters.tokens_indexed += 1;
                 let posting = self.postings.entry(tok).or_default();
@@ -129,14 +132,15 @@ impl ElasticLite {
         self.pending.len()
     }
 
-    /// p-th percentile publish→ingest latency.
+    /// p-th percentile publish→ingest latency. p0/p100 are exact; interior
+    /// percentiles carry the histogram's ≤12.5% bucket error.
     pub fn ingest_latency_pct(&self, p: f64) -> Option<SimTime> {
-        if self.latencies.is_empty() {
-            return None;
-        }
-        let mut xs = self.latencies.clone();
-        xs.sort_unstable();
-        Some(xs[((xs.len() - 1) as f64 * p).round() as usize])
+        self.latencies.percentile(p)
+    }
+
+    /// Number of latency samples recorded (== docs indexed).
+    pub fn latency_samples(&self) -> u64 {
+        self.latencies.samples()
     }
 }
 
@@ -199,6 +203,11 @@ mod tests {
         }
         assert_eq!(es.ingest_latency_pct(0.0), Some(100));
         assert_eq!(es.ingest_latency_pct(1.0), Some(1000));
+        assert_eq!(es.latency_samples(), 10);
+        // Interior percentiles are histogram-bucketed: the true rank value
+        // is 600, reported as its bucket upper bound (≤12.5% above).
+        let p50 = es.ingest_latency_pct(0.5).unwrap();
+        assert!((600..=675).contains(&p50), "p50={p50}");
     }
 
     #[test]

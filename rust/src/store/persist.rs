@@ -7,34 +7,33 @@
 //! it after a (simulated) coordinator restart; streams that were
 //! in-process at the crash come back in-process and are recovered by the
 //! stale re-pick — exactly the paper's mechanism.
+//!
+//! Channels cross the wire as **names**, resolved against the
+//! [`ConnectorRegistry`] on both sides. Registry ids may therefore differ
+//! across deployments, and a snapshot mentioning a channel this deployment
+//! doesn't serve still restores: the unknown name is interned
+//! (descriptor-only) so the records — and their wire names — survive the
+//! round trip, forward-compatibly.
 
-use super::streams::{Channel, StreamRecord, StreamStatus, StreamStore};
+use super::streams::{StreamRecord, StreamStatus, StreamStore};
+use crate::connector::ConnectorRegistry;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 
-fn channel_name(c: Channel) -> &'static str {
-    c.name()
-}
-
-fn channel_from(name: &str) -> Result<Channel> {
-    Ok(match name {
-        "news" => Channel::News,
-        "custom_rss" => Channel::CustomRss,
-        "facebook" => Channel::Facebook,
-        "twitter" => Channel::Twitter,
-        other => bail!("unknown channel {other}"),
-    })
-}
-
 /// Serialize the full bucket (deterministic key order via the Json codec).
-pub fn snapshot(store: &StreamStore) -> String {
+/// `channels` maps registry ids to wire names.
+pub fn snapshot(store: &StreamStore, channels: &ConnectorRegistry) -> String {
     let mut records = Vec::new();
     let mut sorted: Vec<&StreamRecord> = store.records().collect();
     sorted.sort_by_key(|r| r.id);
     for rec in sorted {
+        let name = channels
+            .name(rec.channel)
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("channel-{}", rec.channel.0));
         let mut j = Json::obj()
             .set("id", rec.id)
-            .set("channel", channel_name(rec.channel))
+            .set("channel", name.as_str())
             .set("url", rec.url.as_str())
             .set("next_due", rec.next_due)
             .set("base_interval", rec.base_interval)
@@ -46,7 +45,7 @@ pub fn snapshot(store: &StreamStore) -> String {
             .set("not_modified", rec.not_modified)
             .set("errors", rec.errors);
         if let Some(e) = &rec.etag {
-            j = j.set("etag", e.as_str());
+            j = j.set("etag", &**e);
         }
         if let Some(lm) = rec.last_modified {
             j = j.set("last_modified", lm);
@@ -70,8 +69,12 @@ pub fn snapshot(store: &StreamStore) -> String {
         .to_string()
 }
 
-/// Restore a bucket from a snapshot.
-pub fn restore(text: &str) -> Result<StreamStore> {
+/// Restore a bucket from a snapshot. Channel names are resolved against
+/// `channels`; unknown names (snapshots from deployments serving more
+/// sources) are interned descriptor-only so nothing is lost — their jobs
+/// are counted as unrouted and DLQ'd until a connector is registered
+/// under that name.
+pub fn restore(text: &str, channels: &mut ConnectorRegistry) -> Result<StreamStore> {
     let j = Json::parse(text).map_err(|e| anyhow!("snapshot parse: {e}"))?;
     let version = j.get("version").and_then(Json::as_u64).unwrap_or(0);
     if version != 1 {
@@ -86,9 +89,10 @@ pub fn restore(text: &str) -> Result<StreamStore> {
     for r in records {
         let get_u = |k: &str| r.get(k).and_then(Json::as_u64);
         let id = get_u("id").ok_or_else(|| anyhow!("record missing id"))?;
-        let channel = channel_from(
-            r.get("channel").and_then(Json::as_str).ok_or_else(|| anyhow!("missing channel"))?,
-        )?;
+        let chan_name =
+            r.get("channel").and_then(Json::as_str).ok_or_else(|| anyhow!("missing channel"))?;
+        let channel =
+            channels.id(chan_name).unwrap_or_else(|| channels.intern(chan_name));
         let url = r.get("url").and_then(Json::as_str).unwrap_or_default().to_string();
         let mut rec =
             StreamRecord::new(id, channel, url, get_u("base_interval").unwrap_or(300_000), 0);
@@ -100,7 +104,7 @@ pub fn restore(text: &str) -> Result<StreamStore> {
         rec.items_seen = get_u("items_seen").unwrap_or(0);
         rec.not_modified = get_u("not_modified").unwrap_or(0);
         rec.errors = get_u("errors").unwrap_or(0);
-        rec.etag = r.get("etag").and_then(Json::as_str).map(String::from);
+        rec.etag = r.get("etag").and_then(Json::as_str).map(std::rc::Rc::from);
         rec.last_modified = get_u("last_modified");
         rec.first_polled_at = get_u("first_polled_at");
         rec.status = match r.get("status").and_then(Json::as_str) {
@@ -117,15 +121,22 @@ pub fn restore(text: &str) -> Result<StreamStore> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::AlertMixConfig;
     use crate::store::streams::PollOutcome;
 
-    fn populated() -> StreamStore {
+    fn registry() -> ConnectorRegistry {
+        ConnectorRegistry::from_config(&AlertMixConfig::default()).unwrap()
+    }
+
+    fn populated(reg: &ConnectorRegistry) -> StreamStore {
+        let news = reg.id("news").unwrap();
+        let twitter = reg.id("twitter").unwrap();
         let mut s = StreamStore::new();
         s.max_backoff = 5;
         for id in 1..=20u64 {
             let mut r = StreamRecord::new(
                 id,
-                if id % 4 == 0 { Channel::Twitter } else { Channel::News },
+                if id % 4 == 0 { twitter } else { news },
                 format!("http://src-{id}.feeds.sim/rss"),
                 300_000,
                 0,
@@ -146,9 +157,10 @@ mod tests {
 
     #[test]
     fn roundtrip_preserves_everything() {
-        let store = populated();
-        let snap = snapshot(&store);
-        let restored = restore(&snap).unwrap();
+        let mut reg = registry();
+        let store = populated(&reg);
+        let snap = snapshot(&store, &reg);
+        let restored = restore(&snap, &mut reg).unwrap();
         assert_eq!(restored.len(), store.len());
         assert_eq!(restored.max_backoff, store.max_backoff);
         assert_eq!(restored.status_counts(), store.status_counts());
@@ -156,6 +168,7 @@ mod tests {
             let a = store.get(id).unwrap();
             let b = restored.get(id).unwrap();
             assert_eq!(a.status, b.status, "stream {id}");
+            assert_eq!(a.channel, b.channel);
             assert_eq!(a.next_due, b.next_due);
             assert_eq!(a.etag, b.etag);
             assert_eq!(a.backoff_level, b.backoff_level);
@@ -163,15 +176,16 @@ mod tests {
             assert_eq!(a.polls, b.polls);
         }
         // Snapshot is deterministic.
-        assert_eq!(snap, snapshot(&restored));
+        assert_eq!(snap, snapshot(&restored, &reg));
     }
 
     #[test]
     fn crashed_inprocess_streams_recovered_after_restart() {
-        let store = populated();
+        let mut reg = registry();
+        let store = populated(&reg);
         let (_, inproc_before, _) = store.status_counts();
         assert!(inproc_before > 0, "test needs crashed streams");
-        let mut restored = restore(&snapshot(&store)).unwrap();
+        let mut restored = restore(&snapshot(&store, &reg), &mut reg).unwrap();
         // After restart, the stale re-pick recovers the in-process rows.
         let repicked = restored.pick_due(25_000 + 120_000, 0, 60_000, 100);
         assert!(repicked.len() >= inproc_before);
@@ -179,9 +193,50 @@ mod tests {
     }
 
     #[test]
+    fn unknown_channel_names_are_interned_forward_compatibly() {
+        // A snapshot from a deployment that also serves "telemetry"
+        // restores on a classic four-connector deployment: the unknown
+        // name is interned, the record survives, and the wire form is
+        // stable across another round trip.
+        let mut newer = registry();
+        let (kind, interval, conn) = crate::connector::builtin_connector("metrics").unwrap();
+        let telemetry = newer.register(
+            crate::connector::ChannelDescriptor {
+                name: "telemetry".into(),
+                kind,
+                default_interval: interval,
+                pool_size: 2,
+                mailbox: 0,
+                share: 0.1,
+            },
+            conn,
+        );
+        let mut store = populated(&newer);
+        store.insert(StreamRecord::new(777, telemetry, "http://t/1".into(), 60_000, 0));
+
+        let snap = snapshot(&store, &newer);
+        let mut older = registry();
+        assert!(older.id("telemetry").is_none());
+        let restored = restore(&snap, &mut older).unwrap();
+        let interned = older.id("telemetry").expect("unknown name interned on restore");
+        assert!(older.connector(interned).is_none(), "descriptor-only");
+        assert_eq!(restored.get(777).unwrap().channel, interned);
+        // Round trip again from the older deployment: the name survives.
+        let snap2 = snapshot(&restored, &older);
+        assert!(snap2.contains("\"telemetry\""));
+        let mut third = registry();
+        let again = restore(&snap2, &mut third).unwrap();
+        assert_eq!(
+            third.name(again.get(777).unwrap().channel),
+            Some("telemetry")
+        );
+    }
+
+    #[test]
     fn rejects_garbage_and_bad_versions() {
-        assert!(restore("not json").is_err());
-        assert!(restore("{\"version\": 99, \"records\": []}").is_err());
-        assert!(restore("{\"version\": 1}").is_err());
+        let mut reg = registry();
+        assert!(restore("not json", &mut reg).is_err());
+        assert!(restore("{\"version\": 99, \"records\": []}", &mut reg).is_err());
+        assert!(restore("{\"version\": 1}", &mut reg).is_err());
     }
 }

@@ -14,31 +14,10 @@
 //!   rate CloudWatch shows in Figure 4 (feeds publish diurnally, so due
 //!   times cluster diurnally).
 
+use crate::connector::ChannelId;
 use crate::sim::{SimTime, MINUTE};
 use std::collections::{BTreeSet, HashMap};
-
-/// Source channel, one per paper router family.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Channel {
-    News,
-    CustomRss,
-    Facebook,
-    Twitter,
-}
-
-impl Channel {
-    pub const ALL: [Channel; 4] =
-        [Channel::News, Channel::CustomRss, Channel::Facebook, Channel::Twitter];
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Channel::News => "news",
-            Channel::CustomRss => "custom_rss",
-            Channel::Facebook => "facebook",
-            Channel::Twitter => "twitter",
-        }
-    }
-}
+use std::rc::Rc;
 
 /// Stream processing status.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -54,7 +33,9 @@ pub enum StreamStatus {
 #[derive(Debug, Clone)]
 pub struct StreamRecord {
     pub id: u64,
-    pub channel: Channel,
+    /// Registry index of the source connector serving this stream (the
+    /// persistence wire form is the channel *name* — see `store::persist`).
+    pub channel: ChannelId,
     pub url: String,
     pub status: StreamStatus,
     pub next_due: SimTime,
@@ -62,8 +43,10 @@ pub struct StreamRecord {
     /// level (0 = poll at base rate).
     pub base_interval: SimTime,
     pub backoff_level: u8,
-    /// Conditional-GET state.
-    pub etag: Option<String>,
+    /// Conditional-GET state. Interned: cloning for a poll request is a
+    /// refcount bump, and an unchanged ETag (the per-304 case) never
+    /// reallocates.
+    pub etag: Option<Rc<str>>,
     pub last_modified: Option<SimTime>,
     /// Priority flag (newly-created streams go through the priority path).
     pub priority: bool,
@@ -79,7 +62,7 @@ pub struct StreamRecord {
 }
 
 impl StreamRecord {
-    pub fn new(id: u64, channel: Channel, url: String, base_interval: SimTime, now: SimTime) -> Self {
+    pub fn new(id: u64, channel: ChannelId, url: String, base_interval: SimTime, now: SimTime) -> Self {
         StreamRecord {
             id,
             channel,
@@ -125,6 +108,10 @@ pub struct StreamStore {
     due_index: BTreeSet<(SimTime, u64)>,
     /// (since, id) for InProcess streams.
     inprocess_index: BTreeSet<(SimTime, u64)>,
+    /// Reused staging buffer for `pick_due_into` (index entries are copied
+    /// out before the indexes are mutated); steady-state picks allocate
+    /// nothing here.
+    scratch: Vec<(SimTime, u64)>,
     pub claims: u64,
     pub stale_repicks: u64,
     /// Max adaptive backoff level (effective interval = base << level).
@@ -143,6 +130,7 @@ impl StreamStore {
             records: HashMap::new(),
             due_index: BTreeSet::new(),
             inprocess_index: BTreeSet::new(),
+            scratch: Vec::new(),
             claims: 0,
             stale_repicks: 0,
             max_backoff: 4,
@@ -205,6 +193,10 @@ impl StreamStore {
     /// plus InProcess streams stuck longer than `stale_after`. Claims each
     /// (marks InProcess) and returns them ordered by due time — the atomic
     /// pick-and-mark the paper performs against Couchbase.
+    ///
+    /// Allocating convenience wrapper over [`Self::pick_due_into`] (tests
+    /// and the rare priority path; the 5-second cron uses the pooled
+    /// buffer on `World`).
     pub fn pick_due(
         &mut self,
         now: SimTime,
@@ -213,47 +205,58 @@ impl StreamStore {
         limit: usize,
     ) -> Vec<u64> {
         let mut picked = Vec::new();
+        self.pick_due_into(now, horizon, stale_after, limit, &mut picked);
+        picked
+    }
+
+    /// [`Self::pick_due`] writing into a caller-owned buffer (cleared
+    /// first): the cron tick recycles one buffer on the `World`, so the
+    /// steady-state pick path allocates nothing.
+    pub fn pick_due_into(
+        &mut self,
+        now: SimTime,
+        horizon: SimTime,
+        stale_after: SimTime,
+        limit: usize,
+        picked: &mut Vec<u64>,
+    ) {
+        picked.clear();
+        let mut scratch = std::mem::take(&mut self.scratch);
 
         // Stale in-process first: they have waited longest. (Nothing can
         // be stale before a full stale window has elapsed.)
-        let stale: Vec<(SimTime, u64)> = if now >= stale_after {
+        scratch.clear();
+        if now >= stale_after {
             let cutoff = now - stale_after;
-            self.inprocess_index
-                .range(..=(cutoff, u64::MAX))
-                .take(limit)
-                .copied()
-                .collect()
-        } else {
-            Vec::new()
-        };
-        for (since, id) in stale {
+            scratch.extend(self.inprocess_index.range(..=(cutoff, u64::MAX)).take(limit));
+        }
+        for (since, id) in scratch.drain(..) {
             self.inprocess_index.remove(&(since, id));
             let rec = self.records.get_mut(&id).unwrap();
             rec.status = StreamStatus::InProcess { since: now };
             self.inprocess_index.insert((now, id));
             self.stale_repicks += 1;
             picked.push(id);
-            if picked.len() >= limit {
-                return picked;
-            }
         }
 
         // Then due idle streams.
-        let due: Vec<(SimTime, u64)> = self
-            .due_index
-            .range(..(now + horizon, u64::MAX))
-            .take(limit - picked.len())
-            .copied()
-            .collect();
-        for (due_at, id) in due {
-            self.due_index.remove(&(due_at, id));
-            let rec = self.records.get_mut(&id).unwrap();
-            rec.status = StreamStatus::InProcess { since: now };
-            self.inprocess_index.insert((now, id));
-            self.claims += 1;
-            picked.push(id);
+        if picked.len() < limit {
+            scratch.clear();
+            scratch.extend(
+                self.due_index
+                    .range(..(now + horizon, u64::MAX))
+                    .take(limit - picked.len()),
+            );
+            for (due_at, id) in scratch.drain(..) {
+                self.due_index.remove(&(due_at, id));
+                let rec = self.records.get_mut(&id).unwrap();
+                rec.status = StreamStatus::InProcess { since: now };
+                self.inprocess_index.insert((now, id));
+                self.claims += 1;
+                picked.push(id);
+            }
         }
-        picked
+        self.scratch = scratch;
     }
 
     /// StreamsUpdaterActor: record a poll outcome, adapt the schedule,
@@ -289,7 +292,11 @@ impl StreamStore {
             }
         }
         if let Some(e) = etag {
-            rec.etag = Some(e);
+            // Intern only on change: the per-304 case (same ETag echoed
+            // back every poll) keeps the existing Rc, no churn.
+            if rec.etag.as_deref() != Some(e.as_str()) {
+                rec.etag = Some(Rc::from(e));
+            }
         }
         if let Some(lm) = last_modified {
             rec.last_modified = Some(lm);
@@ -380,7 +387,7 @@ mod tests {
     use crate::util::prop::forall;
 
     fn rec(id: u64, due: SimTime) -> StreamRecord {
-        let mut r = StreamRecord::new(id, Channel::News, format!("http://feed/{id}"), 300_000, 0);
+        let mut r = StreamRecord::new(id, ChannelId(0), format!("http://feed/{id}"), 300_000, 0);
         r.next_due = due;
         r
     }
@@ -478,6 +485,43 @@ mod tests {
         s.remove(2);
         assert!(s.is_empty());
         s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pick_due_into_clears_and_matches_wrapper() {
+        let mut a = StreamStore::new();
+        let mut b = StreamStore::new();
+        for id in 1..=10u64 {
+            a.insert(rec(id, id * 10));
+            b.insert(rec(id, id * 10));
+        }
+        let mut buf = vec![99, 98, 97]; // stale content must be cleared
+        b.pick_due_into(60, 0, 60_000, 4, &mut buf);
+        assert_eq!(a.pick_due(60, 0, 60_000, 4), buf);
+        // Reuse the same buffer for the next tick: capacity survives.
+        let cap = buf.capacity();
+        b.pick_due_into(200, 0, 60_000, 4, &mut buf);
+        assert_eq!(a.pick_due(200, 0, 60_000, 4), buf);
+        assert!(buf.capacity() >= cap);
+        b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn etag_interned_only_on_change() {
+        let mut s = StreamStore::new();
+        s.insert(rec(1, 0));
+        s.pick_due(0, 0, 60_000, 1);
+        s.complete(1, 10, PollOutcome::Items(1), Some("e1".into()), None);
+        let first = s.get(1).unwrap().etag.clone().unwrap();
+        // A 304 echoing the same ETag keeps the same interned Rc.
+        s.pick_due(u64::MAX / 2, u64::MAX / 2, 60_000, 1);
+        s.complete(1, 20, PollOutcome::NotModified, Some("e1".into()), None);
+        let second = s.get(1).unwrap().etag.clone().unwrap();
+        assert!(Rc::ptr_eq(&first, &second), "unchanged etag must not re-intern");
+        // A changed ETag replaces it.
+        s.pick_due(u64::MAX / 2, u64::MAX / 2, 60_000, 1);
+        s.complete(1, 30, PollOutcome::Items(1), Some("e2".into()), None);
+        assert_eq!(s.get(1).unwrap().etag.as_deref(), Some("e2"));
     }
 
     #[test]

@@ -139,7 +139,7 @@ fn bounded_mailboxes_shed_instead_of_oom() {
     let mut c = cfg(13, 2_000);
     c.pool_mailbox = 8;
     c.use_resizer = false;
-    c.news_pool = 1;
+    c.set_pool("news", 1);
     c.optimal_buffer = 4_096;
     c.replenish_timeout = 1_000;
     let (sys, world) = run_for(c, 3 * HOUR).unwrap();
@@ -210,7 +210,7 @@ fn snapshot_restore_restart_recovers() {
     let (mut sys, mut world, _h) = bootstrap(c.clone()).unwrap();
     sys.run_until(&mut world, HOUR);
     let (_, inproc_at_crash, _) = world.store.status_counts();
-    let snap = persist::snapshot(&world.store);
+    let snap = persist::snapshot(&world.store, &world.connectors);
     let completed_before = world.counters.jobs_completed;
     drop(sys);
 
@@ -221,7 +221,7 @@ fn snapshot_restore_restart_recovers() {
     // are from the old epoch, so in-process rows (since <= 1h) become
     // stale once now > since + stale_after — run long enough to cover it.
     let (mut sys2, mut world2, _h2) = bootstrap(c).unwrap();
-    world2.store = persist::restore(&snap).unwrap();
+    world2.store = persist::restore(&snap, &mut world2.connectors).unwrap();
     sys2.run_until(&mut world2, 3 * HOUR);
     world2.flush_enrichment(3 * HOUR);
 
