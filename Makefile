@@ -6,12 +6,13 @@
 #                            connectors live end to end; asserts delivery)
 #   make bench-ingest        refresh BENCH_ingest.json (ingest hot-path numbers)
 #   make bench-sqs           refresh BENCH_sqs.json (SQS hot-path numbers)
+#   make bench-store         refresh BENCH_store.json (streams-bucket pick/complete numbers)
 #   make bench               run every bench target
 #   make artifacts           (re)build the AOT enrichment artifacts (needs jax)
 
 CARGO ?= cargo
 
-.PHONY: verify example-connectors bench-ingest bench-sqs bench artifacts
+.PHONY: verify example-connectors bench-ingest bench-sqs bench-store bench artifacts
 
 # The clippy gate covers lib + bins (not --all-targets: the bench/test
 # surface is exercised by `cargo test` and the CI bench smoke instead).
@@ -33,6 +34,10 @@ bench-ingest:
 bench-sqs:
 	cd rust && $(CARGO) bench --bench bench_sqs
 	@test -f BENCH_sqs.json && echo "refreshed BENCH_sqs.json" || true
+
+bench-store:
+	cd rust && $(CARGO) bench --bench bench_store
+	@test -f BENCH_store.json && echo "refreshed BENCH_store.json" || true
 
 bench:
 	cd rust && $(CARGO) bench

@@ -1,0 +1,328 @@
+//! Streams-bucket hot-path bench: the 5-second cron's pick → complete
+//! cycle, wheel-backed [`StreamStore`] vs the pre-change ordered-index
+//! reference.
+//!
+//! The reference side reproduces the pre-wheel per-completion costs in a
+//! faithful in-bench replica: a `BTreeSet<(next_due, id)>` due index and a
+//! `BTreeSet<(since, id)>` in-process index, so every poll pays two tree
+//! splices (remove the claim entry, insert the rescheduled due entry) plus
+//! a range scan per pick. The shipped side is the library path: two
+//! hierarchical timer wheels with O(1) schedule/cancel through per-record
+//! slot handles and bucket-granular drains that sort only the drained
+//! slice into the recycled pick buffer.
+//!
+//! A thread-local counting allocator reports heap allocations per
+//! pick/complete cycle in steady state; the shipped path must be **zero**
+//! after warmup and the bench asserts it. The warmup covers a full lap
+//! of wheel level 2 — the coarsest level this workload occupies — so the
+//! per-bucket occupancy high-water marks are representative, then
+//! `reserve_headroom` locks in 2x peak capacity (without it, occupancy
+//! hovering just under a power-of-two Vec boundary can force a rare
+//! capacity ratchet mid-measurement). Results go to `BENCH_store.json`
+//! at the repo root (same schema as `BENCH_ingest.json`/`BENCH_sqs.json`)
+//! so later PRs can track the trajectory.
+//!
+//! ```bash
+//! cargo bench --bench bench_store
+//! STORE_OPS=20000 STORE_STREAMS=2000 cargo bench --bench bench_store   # CI smoke
+//! ```
+
+use alertmix::benchlib::{allocs, bench_out_path, env_u64, section, time, CountingAllocator, Table};
+use alertmix::connector::ChannelId;
+use alertmix::sim::SimTime;
+use alertmix::store::streams::{PollOutcome, StreamRecord, StreamStore};
+
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
+
+// ---------------------------------------------------------------------------
+// Pre-change reference implementation: the BTreeSet-indexed store, kept
+// verbatim in the bench as the baseline the acceptance numbers compare
+// against. Same scheduling math as the library so both sides walk the
+// same due-time trajectory.
+
+mod legacy {
+    use alertmix::sim::SimTime;
+    use std::collections::{BTreeMap, BTreeSet};
+
+    pub struct Rec {
+        pub next_due: SimTime,
+        pub since: SimTime,
+        pub in_process: bool,
+        pub backoff_level: u8,
+        pub base_interval: SimTime,
+        pub polls: u64,
+    }
+
+    #[derive(Default)]
+    pub struct Store {
+        pub records: BTreeMap<u64, Rec>,
+        due_index: BTreeSet<(SimTime, u64)>,
+        inprocess_index: BTreeSet<(SimTime, u64)>,
+    }
+
+    impl Store {
+        pub fn insert(&mut self, id: u64, next_due: SimTime, base_interval: SimTime) {
+            self.due_index.insert((next_due, id));
+            self.records.insert(
+                id,
+                Rec {
+                    next_due,
+                    since: 0,
+                    in_process: false,
+                    backoff_level: 0,
+                    base_interval,
+                    polls: 0,
+                },
+            );
+        }
+
+        pub fn pick_due_into(
+            &mut self,
+            now: SimTime,
+            horizon: SimTime,
+            stale_after: SimTime,
+            limit: usize,
+            scratch: &mut Vec<(SimTime, u64)>,
+            picked: &mut Vec<u64>,
+        ) {
+            picked.clear();
+            scratch.clear();
+            if now >= stale_after {
+                let cutoff = now - stale_after;
+                scratch.extend(self.inprocess_index.range(..=(cutoff, u64::MAX)).take(limit));
+            }
+            for (since, id) in scratch.drain(..) {
+                self.inprocess_index.remove(&(since, id));
+                let rec = self.records.get_mut(&id).unwrap();
+                rec.since = now;
+                self.inprocess_index.insert((now, id));
+                picked.push(id);
+            }
+            if picked.len() < limit {
+                scratch.clear();
+                scratch.extend(
+                    self.due_index
+                        .range(..=(now + horizon, u64::MAX))
+                        .take(limit - picked.len()),
+                );
+                for (due_at, id) in scratch.drain(..) {
+                    self.due_index.remove(&(due_at, id));
+                    let rec = self.records.get_mut(&id).unwrap();
+                    rec.in_process = true;
+                    rec.since = now;
+                    self.inprocess_index.insert((now, id));
+                    picked.push(id);
+                }
+            }
+        }
+
+        pub fn complete(&mut self, id: u64, now: SimTime, items: bool) {
+            let rec = self.records.get_mut(&id).unwrap();
+            self.inprocess_index.remove(&(rec.since, id));
+            rec.in_process = false;
+            rec.polls += 1;
+            rec.backoff_level = if items { 0 } else { (rec.backoff_level + 1).min(4) };
+            let interval = rec.base_interval << rec.backoff_level.min(6);
+            let jitter_span = (interval / 4).max(1);
+            let h = alertmix::util::hash::combine(id, rec.polls);
+            let jitter = (h % jitter_span) as i64 - (jitter_span / 2) as i64;
+            rec.next_due = now + (interval as i64 + jitter).max(1) as SimTime;
+            self.due_index.insert((rec.next_due, id));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Cron cadence (paper: 5 seconds) and stale window.
+const TICK: SimTime = 5_000;
+const STALE_AFTER: SimTime = 600_000;
+/// Warmup ticks before allocation counting. The workload occupies wheel
+/// levels 0–2: streams backed off to 4.8M ms intervals reschedule into
+/// level-2 buckets, whose 64 slots only repeat every 64 × 2^22 ms ≈ 268M
+/// ms — so the warmup must run a full level-2 lap (≈ 53.7k ticks at 5 s)
+/// so every bucket's occupancy high-water mark is representative before
+/// `reserve_headroom` locks in 2x capacity. 60k ticks ≈ 1.12 laps.
+const WARMUP_TICKS: u64 = 60_000;
+
+fn rec(id: u64, due: SimTime) -> StreamRecord {
+    let mut r = StreamRecord::new(id, ChannelId(0), String::new(), 300_000, 0);
+    r.next_due = due;
+    r
+}
+
+/// One shipped cron tick: drain due streams into the recycled buffer,
+/// then complete each (mostly quiet feeds, the production mix).
+fn shipped_tick(s: &mut StreamStore, now: SimTime, buf: &mut Vec<u64>, sink: &mut u64) -> u64 {
+    s.pick_due_into(now, TICK, STALE_AFTER, usize::MAX, buf);
+    let n = buf.len() as u64;
+    for &id in buf.iter() {
+        let items = id % 4 == 0;
+        s.complete(
+            id,
+            now + 1,
+            if items { PollOutcome::Items(1) } else { PollOutcome::NotModified },
+            None,
+            None,
+        );
+        *sink += id;
+    }
+    n
+}
+
+fn legacy_tick(
+    s: &mut legacy::Store,
+    now: SimTime,
+    scratch: &mut Vec<(SimTime, u64)>,
+    buf: &mut Vec<u64>,
+    sink: &mut u64,
+) -> u64 {
+    s.pick_due_into(now, TICK, STALE_AFTER, usize::MAX, scratch, buf);
+    let n = buf.len() as u64;
+    for &id in buf.iter() {
+        s.complete(id, now + 1, id % 4 == 0);
+        *sink += id;
+    }
+    n
+}
+
+fn main() {
+    let n_streams = env_u64("STORE_STREAMS", 20_000);
+    let target_ops = env_u64("STORE_OPS", 1_000_000);
+    section(&format!(
+        "streams bucket: cron pick → complete cycle, {n_streams} streams, \
+         ~{target_ops} completions ({WARMUP_TICKS} warmup ticks, {TICK} ms tick)"
+    ));
+
+    let mut sink = 0u64;
+
+    // --- reference (BTreeSet indexes) --------------------------------------
+    let mut lq = legacy::Store::default();
+    for id in 1..=n_streams {
+        // Staggered like World::build: next poll uniform across the interval.
+        lq.insert(id, alertmix::util::hash::combine(id, 0xD15E) % 300_000, 300_000);
+    }
+    let mut scratch = Vec::new();
+    let mut buf = Vec::new();
+    let mut now: SimTime = 0;
+    for _ in 0..WARMUP_TICKS {
+        legacy_tick(&mut lq, now, &mut scratch, &mut buf, &mut sink);
+        now += TICK;
+    }
+    let a0 = allocs();
+    let mut ref_ops = 0u64;
+    let (ref_wall, _) = time(3, || {
+        ref_ops = 0;
+        while ref_ops < target_ops {
+            ref_ops += legacy_tick(&mut lq, now, &mut scratch, &mut buf, &mut sink);
+            now += TICK;
+        }
+    });
+    let ref_allocs_per_op = (allocs() - a0) as f64 / (4 * ref_ops) as f64;
+    let ref_ops_s = ref_ops as f64 / ref_wall;
+
+    // --- shipped (timer wheels) --------------------------------------------
+    let mut s = StreamStore::new();
+    for id in 1..=n_streams {
+        s.insert(rec(id, alertmix::util::hash::combine(id, 0xD15E) % 300_000));
+    }
+    let mut pick_buf: Vec<u64> = Vec::new();
+    let mut now: SimTime = 0;
+    let mut pick_peak = 0usize;
+    for _ in 0..WARMUP_TICKS {
+        shipped_tick(&mut s, now, &mut pick_buf, &mut sink);
+        pick_peak = pick_peak.max(pick_buf.len());
+        now += TICK;
+    }
+    // Warm start: every wheel vector gets 2x its observed high-water mark,
+    // so occupancy drift across later laps can never force a realloc mid-
+    // measurement (peaks hover near power-of-two capacity boundaries).
+    s.reserve_headroom();
+    if pick_buf.capacity() < 2 * pick_peak + 8 {
+        pick_buf.reserve_exact(2 * pick_peak + 8 - pick_buf.len());
+    }
+    let a0 = allocs();
+    let mut new_ops = 0u64;
+    while new_ops < target_ops {
+        new_ops += shipped_tick(&mut s, now, &mut pick_buf, &mut sink);
+        now += TICK;
+    }
+    let steady_allocs = allocs() - a0;
+    let new_allocs_per_op = steady_allocs as f64 / new_ops as f64;
+    let mut timed_ops = 0u64;
+    let (new_wall, _) = time(3, || {
+        timed_ops = 0;
+        while timed_ops < target_ops {
+            timed_ops += shipped_tick(&mut s, now, &mut pick_buf, &mut sink);
+            now += TICK;
+        }
+    });
+    let new_ops_s = timed_ops as f64 / new_wall;
+    std::hint::black_box(sink);
+    s.check_invariants().expect("store invariants after bench run");
+
+    let speedup = new_ops_s / ref_ops_s;
+    let mut t = Table::new(&["path", "pick+complete/s", "us/op", "allocs/op (steady)"]);
+    t.row(&[
+        "reference (BTreeSet)".into(),
+        format!("{ref_ops_s:.0}"),
+        format!("{:.3}", 1e6 / ref_ops_s),
+        format!("{ref_allocs_per_op:.3}"),
+    ]);
+    t.row(&[
+        "timer wheel".into(),
+        format!("{new_ops_s:.0}"),
+        format!("{:.3}", 1e6 / new_ops_s),
+        format!("{new_allocs_per_op:.3}"),
+    ]);
+    t.print();
+    println!(
+        "\npick/complete speedup: {speedup:.2}x  |  steady-state allocations \
+         (wheel path, {new_ops} ops): {steady_allocs}"
+    );
+    assert_eq!(
+        steady_allocs, 0,
+        "wheel-backed pick/complete cycle must not allocate in steady state"
+    );
+
+    // --- stale re-pick churn (crashed workers) -----------------------------
+    section("stale re-pick: crashed claims recovered through the in-process wheel");
+    let churn = (n_streams / 10).max(1);
+    let mut s2 = StreamStore::new();
+    for id in 1..=churn {
+        s2.insert(rec(id, 0));
+    }
+    let (stale_s, _) = time(3, || {
+        let mut buf = Vec::new();
+        let mut t = 0;
+        // Pick everything, never complete: every pass after the stale
+        // window re-picks the full population.
+        for _ in 0..4 {
+            s2.pick_due_into(t, TICK, STALE_AFTER, usize::MAX, &mut buf);
+            std::hint::black_box(buf.len());
+            t += STALE_AFTER + 1;
+        }
+    });
+    println!(
+        "4 stale sweeps over {churn} crashed claims: {:.3}s ({:.0} repicks/s), {} total",
+        stale_s,
+        4.0 * churn as f64 / stale_s,
+        s2.stale_repicks
+    );
+
+    // --- machine-readable trend record -------------------------------------
+    let json = format!(
+        "{{\n  \"bench\": \"store\",\n  \"ops\": {new_ops},\n  \"streams\": {n_streams},\n  \
+         \"warmup_ticks\": {WARMUP_TICKS},\n  \"tick_ms\": {TICK},\n  \
+         \"reference\": {{\"items_per_sec\": {ref_ops_s:.0}, \"allocs_per_item\": {ref_allocs_per_op:.3}}},\n  \
+         \"streaming\": {{\"items_per_sec\": {new_ops_s:.0}, \"allocs_per_item\": {new_allocs_per_op:.3}}},\n  \
+         \"speedup\": {speedup:.3},\n  \"zero_alloc_steady_state\": {}\n}}\n",
+        steady_allocs == 0
+    );
+    let out = bench_out_path("BENCH_store.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}

@@ -20,7 +20,8 @@ impl Actor<World> for StreamsPicker {
             return Ok(()); // ignore unknown messages
         }
         let now = ctx.now();
-        // One recycled buffer serves every cron tick: the steady-state
+        // One recycled buffer serves every cron tick, and the store's
+        // timer wheels drain bucket-granularly into it: the steady-state
         // pick path allocates nothing (ROADMAP streams-bucket slice).
         let mut picked = std::mem::take(&mut world.pick_buf);
         world.store.pick_due_into(

@@ -13,8 +13,15 @@ impl Actor<World> for StreamsUpdater {
         let Ok(p) = msg.downcast::<StreamPolled>() else { return Ok(()) };
         let now = ctx.now();
 
-        // Adapt the schedule + release the claim (Couchbase write).
-        world.store.complete(p.stream_id, now, p.outcome, p.etag, p.last_modified);
+        // Adapt the schedule + release the claim (Couchbase write). A
+        // `false` with the stream still present means the claim was gone —
+        // stale-re-picked and completed by the other worker first, or a
+        // duplicate ack. The store already refused to re-index (the old
+        // double-complete corruption); surface it as a metric.
+        let applied = world.store.complete(p.stream_id, now, p.outcome, p.etag, p.last_modified);
+        if !applied && world.store.get(p.stream_id).is_some() {
+            world.metrics.count("LateCompletions", now, 1.0);
+        }
 
         // Ack SQS. A false return means the visibility timeout already
         // expired and the message may be redelivered — at-least-once; the

@@ -122,8 +122,8 @@ pub struct World {
     /// replenishment, so the steady-state pull loop allocates nothing.
     pub router_drain: Vec<(bool, ReceivedMessage)>,
     /// Recycled output buffer for the picker's 5-second cron
-    /// (`StreamStore::pick_due_into`): the steady-state pick path
-    /// allocates nothing.
+    /// (`StreamStore::pick_due_into`, backed by the store's timer
+    /// wheels): the steady-state pick path allocates nothing.
     pub pick_buf: Vec<u64>,
     /// ticket -> item metadata for in-flight enrichment requests.
     pub pending_items: HashMap<u64, ItemMeta>,

@@ -11,10 +11,13 @@
 //! - [`streams::StreamStore`]: the typed "streams bucket" with a secondary
 //!   index on `next_due` plus a stale-in-process index, supporting the
 //!   StreamsPickerActor's query ("streams picked earlier, but could not be
-//!   updated even after a given time elapsed will also be picked").
+//!   updated even after a given time elapsed will also be picked"). Both
+//!   indexes are [`wheel::TimerWheel`]s — O(1) schedule/cancel per
+//!   completion instead of B-tree node churn on every poll.
 
 pub mod persist;
 pub mod streams;
+pub mod wheel;
 
 use crate::sim::SimTime;
 use crate::util::json::Json;

@@ -14,6 +14,13 @@
 //! doesn't serve still restores: the unknown name is interned
 //! (descriptor-only) so the records — and their wire names — survive the
 //! round trip, forward-compatibly.
+//!
+//! The store's timer wheels (due index + stale-in-process index) never
+//! cross the wire: `insert_with_status` rebuilds both from each record's
+//! own `status`/`next_due`/`since` fields, so the snapshot format is
+//! identical to the pre-wheel one. The transient `priority_pending` flag
+//! is likewise not serialized — a crash drops at most one pending bump,
+//! and the stale re-pick polls that stream on restart anyway.
 
 use super::streams::{StreamRecord, StreamStatus, StreamStore};
 use crate::connector::ConnectorRegistry;
@@ -230,6 +237,28 @@ mod tests {
             third.name(again.get(777).unwrap().channel),
             Some("telemetry")
         );
+    }
+
+    #[test]
+    fn restore_rebuilds_wheel_state_and_pick_parity_holds() {
+        // The wheels are derived state: a restored store must pick the
+        // same streams in the same order as the original, immediately.
+        let mut reg = registry();
+        let mut store = populated(&reg);
+        let mut restored = restore(&snapshot(&store, &reg), &mut reg).unwrap();
+        restored.check_invariants().unwrap();
+        for step in 0..6u64 {
+            let now = 40_000 + step * 150_000;
+            let a = store.pick_due(now, 5_000, 60_000, 7);
+            let b = restored.pick_due(now, 5_000, 60_000, 7);
+            assert_eq!(a, b, "pick divergence at t={now}");
+            for id in a {
+                store.complete(id, now + 10, PollOutcome::Items(1), None, None);
+                restored.complete(id, now + 10, PollOutcome::Items(1), None, None);
+            }
+        }
+        store.check_invariants().unwrap();
+        restored.check_invariants().unwrap();
     }
 
     #[test]

@@ -2,21 +2,26 @@
 //! the StreamsPickerActor and the 5-second Cron query.
 //!
 //! Paper semantics implemented here:
-//! - "Streams will be picked based on their next due date" — an ordered
-//!   `(next_due, id)` index;
+//! - "Streams will be picked based on their next due date" — a due-time
+//!   index, backed by a hierarchical [`TimerWheel`] (O(1) per completion;
+//!   the old `BTreeSet<(next_due, id)>` paid two tree splices per poll);
 //! - "streams which were picked earlier, but could not be updated even
 //!   after a given time elapsed will also be picked" — a stale-in-process
-//!   index on `(picked_at, id)`;
+//!   index on the claim time, backed by a second wheel;
 //! - "Picked streams will be updated ... with in-process status" — an
-//!   atomic claim transition (backed by CAS in the document model);
+//!   atomic claim transition (backed by CAS in the document model). A
+//!   *late* completion — the claim was already stale-re-picked, or the ack
+//!   is a duplicate — releases a claim that no longer exists and must not
+//!   touch the indexes: it is a counted no-op ([`StreamStore::late_completions`]);
 //! - adaptive scheduling: streams that keep yielding items are polled more
 //!   often; silent ones back off. This is what produces the diurnal send
 //!   rate CloudWatch shows in Figure 4 (feeds publish diurnally, so due
 //!   times cluster diurnally).
 
+use super::wheel::{TimerWheel, WheelHandle};
 use crate::connector::ChannelId;
 use crate::sim::{SimTime, MINUTE};
-use std::collections::{BTreeSet, HashMap};
+use std::collections::HashMap;
 use std::rc::Rc;
 
 /// Stream processing status.
@@ -49,11 +54,22 @@ pub struct StreamRecord {
     pub etag: Option<Rc<str>>,
     pub last_modified: Option<SimTime>,
     /// Priority flag (newly-created streams go through the priority path).
+    /// Set by `prioritize`, routed on by the picker, and cleared by
+    /// `complete` once the priority poll has been served.
     pub priority: bool,
+    /// A `prioritize` landed while this stream was in-process: `complete`
+    /// serves the bump by scheduling the next poll immediately. Transient
+    /// (not persisted — a crash loses at most one pending bump, and the
+    /// stale re-pick polls the stream anyway).
+    pub priority_pending: bool,
     pub created_at: SimTime,
     /// When the stream was first successfully polled (latency metric for
     /// the priority path).
     pub first_polled_at: Option<SimTime>,
+    /// Slot handle into the store's due wheel (Idle) or in-process wheel
+    /// (InProcess) — rebuilt from `status`/`next_due` on restore, never
+    /// serialized.
+    pub(crate) wheel: WheelHandle,
     // counters
     pub polls: u64,
     pub items_seen: u64,
@@ -74,8 +90,10 @@ impl StreamRecord {
             etag: None,
             last_modified: None,
             priority: false,
+            priority_pending: false,
             created_at: now,
             first_polled_at: None,
+            wheel: WheelHandle::NONE,
             polls: 0,
             items_seen: 0,
             not_modified: 0,
@@ -85,8 +103,10 @@ impl StreamRecord {
 
     /// Effective poll interval under the current backoff level (the level
     /// is clamped at write time; 6 is a hard safety cap = 64x base).
+    /// Saturating: a corrupt snapshot can restore a near-`u64::MAX` base
+    /// interval, which must park the stream in the far future, not wrap.
     pub fn effective_interval(&self) -> SimTime {
-        self.base_interval * (1u64 << self.backoff_level.min(6))
+        self.base_interval.saturating_mul(1u64 << self.backoff_level.min(6))
     }
 }
 
@@ -104,16 +124,23 @@ pub enum PollOutcome {
 /// The streams bucket.
 pub struct StreamStore {
     records: HashMap<u64, StreamRecord>,
-    /// (next_due, id) for Idle streams.
-    due_index: BTreeSet<(SimTime, u64)>,
-    /// (since, id) for InProcess streams.
-    inprocess_index: BTreeSet<(SimTime, u64)>,
-    /// Reused staging buffer for `pick_due_into` (index entries are copied
-    /// out before the indexes are mutated); steady-state picks allocate
+    /// Due-time wheel: one entry `(next_due, id)` per Idle stream.
+    due: TimerWheel,
+    /// Stale-claim wheel: one entry `(since, id)` per InProcess stream.
+    inprocess: TimerWheel,
+    /// Reused staging buffer for `pick_due_into` (wheel drains land here
+    /// before the records are claimed); steady-state picks allocate
     /// nothing here.
     scratch: Vec<(SimTime, u64)>,
+    /// Largest single drain seen (feeds [`Self::reserve_headroom`]).
+    scratch_peak: usize,
     pub claims: u64,
     pub stale_repicks: u64,
+    /// Completions that arrived after the claim they acked was gone (the
+    /// stream was stale-re-picked and the other worker finished first, or
+    /// the ack was a duplicate). Counted no-ops — re-indexing here is how
+    /// the old implementation corrupted the due index.
+    pub late_completions: u64,
     /// Max adaptive backoff level (effective interval = base << level).
     pub max_backoff: u8,
 }
@@ -128,11 +155,13 @@ impl StreamStore {
     pub fn new() -> Self {
         StreamStore {
             records: HashMap::new(),
-            due_index: BTreeSet::new(),
-            inprocess_index: BTreeSet::new(),
+            due: TimerWheel::new(),
+            inprocess: TimerWheel::new(),
             scratch: Vec::new(),
+            scratch_peak: 0,
             claims: 0,
             stale_repicks: 0,
+            late_completions: 0,
             max_backoff: 4,
         }
     }
@@ -155,36 +184,39 @@ impl StreamStore {
     }
 
     /// Insert preserving the record's current status (snapshot restore) —
-    /// regular `insert` assumes Idle.
-    pub fn insert_with_status(&mut self, rec: StreamRecord) {
+    /// regular `insert` assumes Idle. Wheel state is rebuilt here from the
+    /// record's own fields; nothing about the wheels crosses the wire.
+    pub fn insert_with_status(&mut self, mut rec: StreamRecord) {
         debug_assert!(!self.records.contains_key(&rec.id), "duplicate stream id");
-        match rec.status {
-            StreamStatus::Idle => {
-                self.due_index.insert((rec.next_due, rec.id));
-            }
-            StreamStatus::InProcess { since } => {
-                self.inprocess_index.insert((since, rec.id));
-            }
-            StreamStatus::Disabled => {}
-        }
+        rec.wheel = match rec.status {
+            StreamStatus::Idle => self.due.schedule(rec.next_due, rec.id),
+            StreamStatus::InProcess { since } => self.inprocess.schedule(since, rec.id),
+            StreamStatus::Disabled => WheelHandle::NONE,
+        };
         self.records.insert(rec.id, rec);
     }
 
     /// Add a stream (source added "on an ongoing basis").
     pub fn insert(&mut self, rec: StreamRecord) {
         debug_assert!(!self.records.contains_key(&rec.id), "duplicate stream id");
-        if rec.status == StreamStatus::Idle {
-            self.due_index.insert((rec.next_due, rec.id));
-        }
-        self.records.insert(rec.id, rec);
+        debug_assert!(
+            matches!(rec.status, StreamStatus::Idle | StreamStatus::Disabled),
+            "insert() takes unclaimed records; use insert_with_status for restores"
+        );
+        self.insert_with_status(rec);
     }
 
     /// Remove a stream (source deleted). Safe in any status.
     pub fn remove(&mut self, id: u64) -> Option<StreamRecord> {
         let rec = self.records.remove(&id)?;
-        self.due_index.remove(&(rec.next_due, id));
-        if let StreamStatus::InProcess { since } = rec.status {
-            self.inprocess_index.remove(&(since, id));
+        match rec.status {
+            StreamStatus::Idle => {
+                self.due.cancel(rec.wheel, id);
+            }
+            StreamStatus::InProcess { .. } => {
+                self.inprocess.cancel(rec.wheel, id);
+            }
+            StreamStatus::Disabled => {}
         }
         Some(rec)
     }
@@ -211,7 +243,9 @@ impl StreamStore {
 
     /// [`Self::pick_due`] writing into a caller-owned buffer (cleared
     /// first): the cron tick recycles one buffer on the `World`, so the
-    /// steady-state pick path allocates nothing.
+    /// steady-state pick path allocates nothing. Each wheel drain is
+    /// bucket-granular and sorts only the drained slice, so pick order by
+    /// due time is preserved exactly.
     pub fn pick_due_into(
         &mut self,
         now: SimTime,
@@ -228,13 +262,13 @@ impl StreamStore {
         scratch.clear();
         if now >= stale_after {
             let cutoff = now - stale_after;
-            scratch.extend(self.inprocess_index.range(..=(cutoff, u64::MAX)).take(limit));
+            self.inprocess.drain_due_into(cutoff, limit, &mut scratch);
+            self.scratch_peak = self.scratch_peak.max(scratch.len());
         }
-        for (since, id) in scratch.drain(..) {
-            self.inprocess_index.remove(&(since, id));
+        for &(_since, id) in &scratch {
             let rec = self.records.get_mut(&id).unwrap();
             rec.status = StreamStatus::InProcess { since: now };
-            self.inprocess_index.insert((now, id));
+            rec.wheel = self.inprocess.schedule(now, id);
             self.stale_repicks += 1;
             picked.push(id);
         }
@@ -242,25 +276,31 @@ impl StreamStore {
         // Then due idle streams.
         if picked.len() < limit {
             scratch.clear();
-            scratch.extend(
-                self.due_index
-                    .range(..(now + horizon, u64::MAX))
-                    .take(limit - picked.len()),
+            self.due.drain_due_into(
+                now.saturating_add(horizon),
+                limit - picked.len(),
+                &mut scratch,
             );
-            for (due_at, id) in scratch.drain(..) {
-                self.due_index.remove(&(due_at, id));
+            self.scratch_peak = self.scratch_peak.max(scratch.len());
+            for &(_due_at, id) in &scratch {
                 let rec = self.records.get_mut(&id).unwrap();
                 rec.status = StreamStatus::InProcess { since: now };
-                self.inprocess_index.insert((now, id));
+                rec.wheel = self.inprocess.schedule(now, id);
                 self.claims += 1;
                 picked.push(id);
             }
         }
+        scratch.clear();
         self.scratch = scratch;
     }
 
     /// StreamsUpdaterActor: record a poll outcome, adapt the schedule,
-    /// release the claim and re-index the stream.
+    /// release the claim and re-index the stream. Returns `false` without
+    /// touching anything if the stream is unknown **or not in process** —
+    /// a late completion (the claim was stale-re-picked and the other
+    /// worker already finished, or this ack is a duplicate). Re-indexing
+    /// on that path is exactly how the old implementation double-inserted
+    /// into the due index and left a ghost entry behind.
     pub fn complete(
         &mut self,
         id: u64,
@@ -268,11 +308,13 @@ impl StreamStore {
         outcome: PollOutcome,
         etag: Option<String>,
         last_modified: Option<SimTime>,
-    ) {
-        let Some(rec) = self.records.get_mut(&id) else { return };
-        if let StreamStatus::InProcess { since } = rec.status {
-            self.inprocess_index.remove(&(since, id));
+    ) -> bool {
+        let Some(rec) = self.records.get_mut(&id) else { return false };
+        if !matches!(rec.status, StreamStatus::InProcess { .. }) {
+            self.late_completions += 1;
+            return false;
         }
+        self.inprocess.cancel(rec.wheel, id);
         rec.polls += 1;
         if rec.first_polled_at.is_none() {
             rec.first_polled_at = Some(now);
@@ -302,30 +344,76 @@ impl StreamStore {
             rec.last_modified = Some(lm);
         }
         rec.status = StreamStatus::Idle;
-        // Jitter the next poll by ±12.5% (deterministic in (id, polls)):
-        // without it every silent feed marches in lockstep to the same
-        // backoff interval and the fleet synchronizes into bursts that
-        // real populations don't show.
-        let interval = rec.effective_interval();
-        let jitter_span = (interval / 4).max(1);
-        let h = crate::util::hash::combine(id, rec.polls);
-        let jitter = (h % jitter_span) as i64 - (jitter_span / 2) as i64;
-        rec.next_due = now + (interval as i64 + jitter).max(1) as SimTime;
-        self.due_index.insert((rec.next_due, id));
+        if rec.priority_pending {
+            // A prioritize() arrived while this poll was in flight: serve
+            // the bump now instead of silently waiting out the backoff
+            // interval. The flag stays set so the picker routes the makeup
+            // poll through the priority queue; the *next* complete clears
+            // it below.
+            rec.priority_pending = false;
+            rec.next_due = now;
+        } else {
+            // A served priority poll releases the flag — leaving it set
+            // would pin every future poll of this stream to the priority
+            // queue.
+            rec.priority = false;
+            // Jitter the next poll by ±12.5% (deterministic in (id,
+            // polls)): without it every silent feed marches in lockstep to
+            // the same backoff interval and the fleet synchronizes into
+            // bursts that real populations don't show. Saturating u64
+            // math throughout: `interval as i64 + jitter` overflows for
+            // near-`u64::MAX` intervals (reachable by restoring a corrupt
+            // snapshot), which is the overflow the old code hit.
+            let interval = rec.effective_interval();
+            let jitter_span = (interval / 4).max(1);
+            let h = crate::util::hash::combine(id, rec.polls);
+            let offset = h % jitter_span;
+            let half = jitter_span / 2;
+            let delta = interval.saturating_add(offset).saturating_sub(half).max(1);
+            rec.next_due = now.saturating_add(delta);
+            debug_assert!(
+                rec.next_due > now || rec.next_due == SimTime::MAX,
+                "next_due must move forward (now={now}, interval={interval})"
+            );
+        }
+        rec.wheel = self.due.schedule(rec.next_due, id);
+        true
     }
 
     /// Bump a stream to the front of the line (PriorityStreamsActor).
+    /// Idle: re-index to due-now and return `true` (caller claims it).
+    /// InProcess: remember the bump; `complete` serves it by scheduling
+    /// the next poll immediately.
     pub fn prioritize(&mut self, id: u64, now: SimTime) -> bool {
         let Some(rec) = self.records.get_mut(&id) else { return false };
-        if rec.status != StreamStatus::Idle {
-            rec.priority = true;
-            return false;
+        match rec.status {
+            StreamStatus::Idle => {
+                rec.priority = true;
+                rec.next_due = now;
+                rec.wheel = self.due.reschedule(rec.wheel, id, now);
+                true
+            }
+            StreamStatus::InProcess { .. } => {
+                rec.priority = true;
+                rec.priority_pending = true;
+                false
+            }
+            StreamStatus::Disabled => false,
         }
-        self.due_index.remove(&(rec.next_due, id));
-        rec.priority = true;
-        rec.next_due = now;
-        self.due_index.insert((now, id));
-        true
+    }
+
+    /// Capacity-planning warm start: pre-size both wheels and the pick
+    /// scratch buffer to twice their observed high-water marks (see
+    /// [`TimerWheel::reserve_headroom`]). Call once the workload has
+    /// cycled a full lap of the coarsest wheel level it occupies; the
+    /// pick/complete cycle then performs no allocations at all.
+    pub fn reserve_headroom(&mut self) {
+        self.due.reserve_headroom();
+        self.inprocess.reserve_headroom();
+        let want = 2 * self.scratch_peak + 8;
+        if self.scratch.capacity() < want {
+            self.scratch.reserve_exact(want - self.scratch.len());
+        }
     }
 
     /// Counts by status (for `inspect` and invariants).
@@ -343,7 +431,10 @@ impl StreamStore {
         (idle, inproc, disabled)
     }
 
-    /// Index-consistency check used by property tests.
+    /// Index-consistency check used by property tests: every record's
+    /// wheel handle resolves to exactly its `(key, id)` in the right
+    /// wheel, wheel sizes match status counts, and both wheels pass their
+    /// structural self-check.
     pub fn check_invariants(&self) -> Result<(), String> {
         let mut idle = 0;
         let mut inproc = 0;
@@ -351,29 +442,37 @@ impl StreamStore {
             match r.status {
                 StreamStatus::Idle => {
                     idle += 1;
-                    if !self.due_index.contains(&(r.next_due, *id)) {
-                        return Err(format!("idle stream {id} missing from due index"));
+                    if self.due.entry(r.wheel) != Some((r.next_due, *id)) {
+                        return Err(format!("idle stream {id} missing from due wheel"));
                     }
                 }
                 StreamStatus::InProcess { since } => {
                     inproc += 1;
-                    if !self.inprocess_index.contains(&(since, *id)) {
-                        return Err(format!("in-process stream {id} missing from index"));
+                    if self.inprocess.entry(r.wheel) != Some((since, *id)) {
+                        return Err(format!("in-process stream {id} missing from wheel"));
                     }
                 }
                 StreamStatus::Disabled => {}
             }
+            if r.priority_pending && !matches!(r.status, StreamStatus::InProcess { .. }) {
+                return Err(format!("stream {id} has a pending bump but no claim"));
+            }
+            if r.priority_pending && !r.priority {
+                return Err(format!("stream {id} pending bump without priority flag"));
+            }
         }
-        if self.due_index.len() != idle {
-            return Err(format!("due index size {} != idle {}", self.due_index.len(), idle));
+        if self.due.len() != idle {
+            return Err(format!("due wheel size {} != idle {}", self.due.len(), idle));
         }
-        if self.inprocess_index.len() != inproc {
+        if self.inprocess.len() != inproc {
             return Err(format!(
-                "inprocess index size {} != inproc {}",
-                self.inprocess_index.len(),
+                "inprocess wheel size {} != inproc {}",
+                self.inprocess.len(),
                 inproc
             ));
         }
+        self.due.check().map_err(|e| format!("due wheel: {e}"))?;
+        self.inprocess.check().map_err(|e| format!("inprocess wheel: {e}"))?;
         Ok(())
     }
 }
@@ -525,6 +624,135 @@ mod tests {
     }
 
     #[test]
+    fn late_completion_after_stale_repick_is_counted_noop() {
+        // The exact interleaving that used to corrupt the due index:
+        //   t=0      worker A picks stream 1 (claim A)
+        //   t=61s    claim A goes stale, worker B re-picks (claim B)
+        //   t=62s    worker B completes — stream goes Idle, re-indexed
+        //   t=63s    worker A's late complete arrives — the old code
+        //            removed nothing (the in-process entry was B's, gone),
+        //            re-inserted a SECOND due entry and left the first as
+        //            a ghost; check_invariants failed.
+        let mut s = StreamStore::new();
+        s.insert(rec(1, 0));
+        assert_eq!(s.pick_due(0, 0, 60_000, 10), vec![1]); // worker A
+        assert_eq!(s.pick_due(61_000, 0, 60_000, 10), vec![1]); // stale → B
+        assert!(s.complete(1, 62_000, PollOutcome::Items(1), None, None)); // B wins
+        let due_after_b = s.get(1).unwrap().next_due;
+        // A's late completion: counted no-op, nothing re-indexed.
+        assert!(!s.complete(1, 63_000, PollOutcome::Items(5), None, None));
+        assert_eq!(s.late_completions, 1);
+        let r = s.get(1).unwrap();
+        assert_eq!(r.status, StreamStatus::Idle);
+        assert_eq!(r.next_due, due_after_b, "late complete must not reschedule");
+        assert_eq!(r.polls, 1, "late complete must not count a poll");
+        assert_eq!(r.items_seen, 1, "late complete must not count items");
+        s.check_invariants().unwrap();
+        // The stream is still picked exactly once at its next due date.
+        assert_eq!(s.pick_due(due_after_b, 0, 600_000, 10), vec![1]);
+        assert!(s.pick_due(due_after_b, 0, 600_000, 10).is_empty());
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn double_ack_is_counted_noop() {
+        let mut s = StreamStore::new();
+        s.insert(rec(1, 0));
+        s.pick_due(0, 0, 60_000, 10);
+        assert!(s.complete(1, 10, PollOutcome::NotModified, None, None));
+        assert!(!s.complete(1, 11, PollOutcome::NotModified, None, None));
+        assert_eq!(s.late_completions, 1);
+        assert_eq!(s.get(1).unwrap().backoff_level, 1, "double ack must not back off twice");
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn priority_bump_while_in_process_is_served_at_complete() {
+        let mut s = StreamStore::new();
+        s.insert(rec(1, 0));
+        s.pick_due(0, 0, 60_000, 10);
+        // Bump lands mid-poll: flag + pending, no immediate claim.
+        assert!(!s.prioritize(1, 5_000));
+        assert!(s.get(1).unwrap().priority);
+        // Completion serves the bump: due immediately, flag still set so
+        // the picker routes the makeup poll through the priority queue.
+        s.complete(1, 10_000, PollOutcome::NotModified, None, None);
+        let r = s.get(1).unwrap();
+        assert_eq!(r.next_due, 10_000, "bump must be served now, not after backoff");
+        assert!(r.priority);
+        assert!(!r.priority_pending);
+        s.check_invariants().unwrap();
+        // The makeup poll happens right away...
+        assert_eq!(s.pick_due(10_000, 0, 60_000, 10), vec![1]);
+        // ...and completing it clears the flag and resumes normal cadence.
+        s.complete(1, 10_500, PollOutcome::Items(1), None, None);
+        let r = s.get(1).unwrap();
+        assert!(!r.priority, "flag must clear after the priority poll");
+        assert!(r.next_due > 10_500 + 200_000, "normal cadence resumes");
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn priority_flag_clears_after_priority_poll() {
+        // The idle-path half: prioritize → pick → complete must release
+        // the flag (the old code left it set forever, pinning the stream
+        // to the priority queue).
+        let mut s = StreamStore::new();
+        s.insert(rec(7, 500_000));
+        assert!(s.prioritize(7, 100));
+        assert_eq!(s.pick_due(100, 0, 60_000, 10), vec![7]);
+        assert!(s.get(7).unwrap().priority, "flag set while the priority poll runs");
+        s.complete(7, 200, PollOutcome::Items(2), None, None);
+        assert!(!s.get(7).unwrap().priority);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn corrupt_interval_saturates_instead_of_overflowing() {
+        // A corrupt snapshot can restore a near-max base interval at the
+        // top backoff level; completing such a stream used to overflow
+        // `interval as i64 + jitter`. It must saturate into the far
+        // future (and the wheel's overflow level must hold it).
+        let mut s = StreamStore::new();
+        let mut r = rec(1, 0);
+        r.base_interval = u64::MAX - 3;
+        r.backoff_level = 6;
+        r.status = StreamStatus::InProcess { since: 0 };
+        s.insert_with_status(r);
+        assert_eq!(s.get(1).unwrap().effective_interval(), u64::MAX);
+        assert!(s.complete(1, 50, PollOutcome::NotModified, None, None));
+        let r = s.get(1).unwrap();
+        assert!(r.next_due > 50, "saturating schedule still moves forward");
+        s.check_invariants().unwrap();
+        // And the far-future entry is still drainable.
+        assert_eq!(s.pick_due(u64::MAX, 0, u64::MAX, 10), vec![1]);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn backoff_level_six_round_trips_through_the_wheel() {
+        // 64x base = 19.2e6 ms out: lands in a coarse wheel level and must
+        // come back exactly once at its due time.
+        let mut s = StreamStore::new();
+        s.max_backoff = 6;
+        let mut r = rec(1, 0);
+        r.backoff_level = 5;
+        r.status = StreamStatus::InProcess { since: 0 };
+        s.insert_with_status(r);
+        s.complete(1, 1_000, PollOutcome::NotModified, None, None);
+        assert_eq!(s.get(1).unwrap().backoff_level, 6);
+        let due = s.get(1).unwrap().next_due;
+        let want = 1_000 + 64 * 300_000;
+        assert!(
+            (due as i64 - want as i64).unsigned_abs() <= 64 * 300_000 / 8,
+            "due={due} want~{want}"
+        );
+        assert!(s.pick_due(due - 1, 0, u64::MAX, 10).is_empty());
+        assert_eq!(s.pick_due(due, 0, u64::MAX, 10), vec![1]);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
     fn prop_store_invariants_under_random_ops() {
         forall("stream store indexes stay consistent", 60, |g| {
             let mut s = StreamStore::new();
@@ -532,7 +760,7 @@ mod tests {
             let mut next_id = 0u64;
             for _ in 0..g.usize(1, 120) {
                 now += g.u64(0, 5_000);
-                match g.u64(0, 5) {
+                match g.u64(0, 8) {
                     0 => {
                         next_id += 1;
                         s.insert(rec(next_id, now + g.u64(0, 10_000)));
@@ -547,10 +775,42 @@ mod tests {
                         }
                     }
                     2 if next_id > 0 => {
+                        // Any status: idle (reschedule), in-process
+                        // (pending bump), or unknown id.
                         s.prioritize(g.u64(1, next_id + 1), now);
                     }
                     3 if next_id > 0 => {
                         s.remove(g.u64(1, next_id + 1));
+                    }
+                    4 if next_id > 0 => {
+                        // Late/double complete on an arbitrary stream:
+                        // must be a no-op unless genuinely claimed.
+                        s.complete(g.u64(1, next_id + 1), now, PollOutcome::Error, None, None);
+                    }
+                    5 => {
+                        // Pick, then complete twice — the second ack is
+                        // always late.
+                        let picked = s.pick_due(now, 0, 60_000, g.usize(1, 5));
+                        for id in &picked {
+                            s.complete(*id, now, PollOutcome::NotModified, None, None);
+                        }
+                        for id in &picked {
+                            if s.complete(*id, now + 1, PollOutcome::Items(9), None, None) {
+                                return false; // must be late by construction
+                            }
+                        }
+                    }
+                    6 if next_id > 0 => {
+                        // Prioritize whatever is currently in process.
+                        let picked = s.pick_due(now, 0, 60_000, 3);
+                        for id in &picked {
+                            s.prioritize(*id, now);
+                        }
+                        for id in picked {
+                            if g.chance(0.5) {
+                                s.complete(id, now, PollOutcome::Items(1), None, None);
+                            }
+                        }
                     }
                     _ => {
                         s.pick_due(now, 0, 60_000, 5);

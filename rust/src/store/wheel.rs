@@ -1,0 +1,633 @@
+//! Hierarchical timer wheel (calendar queue) for the streams bucket.
+//!
+//! Replaces the two ordered `BTreeSet<(SimTime, u64)>` indexes the
+//! `StreamStore` used for "pick streams by next due date" and "re-pick
+//! stale in-process streams". A completion used to cost two B-tree node
+//! splices (remove the in-process entry, insert the new due entry) — node
+//! churn on every poll of every stream, the hot path the ROADMAP's
+//! streams-bucket slice names. Here both operations are O(1): a slab slot
+//! indexed by a [`WheelHandle`] stored on the stream record, pushed into a
+//! power-of-two time bucket.
+//!
+//! Structure: [`LEVELS`] levels of [`SLOTS`] buckets each. A level-`l`
+//! bucket spans `1 << (BASE_SHIFT + 6*l)` ms (level 0 ≈ 1 s), so the wheel
+//! covers `2^52` ms (~143 k years) before the single overflow list takes
+//! over — far-future due times (e.g. a corrupt snapshot restoring a
+//! near-`u64::MAX` interval at backoff level 6) park there and still
+//! round-trip. Entries are placed by absolute key into the coarsest level
+//! whose span covers their distance from the drain watermark and cascade
+//! down as the watermark enters their bucket, so each entry is touched
+//! O(LEVELS) times over its life.
+//!
+//! [`TimerWheel::drain_due_into`] is bucket-granular: it visits only the
+//! buckets the `(watermark, bound]` window can touch (≤ `SLOTS + 1` per
+//! level, typically 1–2 on a 5-second cron tick), filters due entries into
+//! an internal scratch list, sorts **only that drained slice** by
+//! `(due, id)` — preserving the old ordered-index pick order — and
+//! re-buckets anything beyond `limit` *without freeing its slab slot*, so
+//! external handles stay valid. Steady state allocates nothing: slab slots
+//! recycle through a free list and every vector keeps its capacity. The
+//! wheel tracks per-bucket occupancy high-water marks so
+//! [`TimerWheel::reserve_headroom`] can lock in 2× peak capacity after
+//! the workload has cycled a full lap of its coarsest occupied level —
+//! without that, occupancy hovering just under a power-of-two boundary
+//! can still force a rare capacity ratchet laps later
+//! (`benches/bench_store.rs` warms up past a level-2 lap, reserves
+//! headroom, and then asserts 0 allocations per pick/complete cycle).
+//!
+//! Time may jump arbitrarily far forward between drains (the simulated
+//! clock does); a drain after a jump visits at most one full lap per level.
+//! Keys at or before the watermark are legal (a late `complete` scheduling
+//! `next_due` in the past): they clamp into the watermark's level-0 bucket
+//! and drain on the next call, ordered by their true key.
+
+use crate::sim::SimTime;
+
+/// Buckets per level (64) and its log2, used for shifts and masks.
+const LOG_SLOTS: u32 = 6;
+const SLOTS: usize = 1 << LOG_SLOTS;
+/// Wheel levels before the overflow list.
+const LEVELS: usize = 7;
+/// log2 of the level-0 bucket width in ms (1024 ms ≈ 1 s — finer than the
+/// 5-second cron tick, so same-tick picks stay bucket-local).
+const BASE_SHIFT: u32 = 10;
+/// Flattened bucket index of the overflow list.
+const OVERFLOW: u32 = (LEVELS * SLOTS) as u32;
+/// `Entry::bucket` sentinel for slab slots on the free list.
+const FREE: u32 = u32::MAX;
+
+/// Stable reference to a scheduled entry: an index into the wheel's slab.
+/// Stored on the owning record; survives bucket moves (cascades, drain
+/// overflow re-buckets) because only the slab slot's *contents* move.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WheelHandle(u32);
+
+impl WheelHandle {
+    /// "Not scheduled" sentinel (freshly built records, disabled streams).
+    pub const NONE: WheelHandle = WheelHandle(u32::MAX);
+
+    pub fn is_none(self) -> bool {
+        self == Self::NONE
+    }
+}
+
+impl Default for WheelHandle {
+    fn default() -> Self {
+        Self::NONE
+    }
+}
+
+#[derive(Debug)]
+struct Entry {
+    key: SimTime,
+    id: u64,
+    /// Flattened bucket index (`level * SLOTS + slot`, or [`OVERFLOW`]),
+    /// [`FREE`] while the slab slot sits on the free list.
+    bucket: u32,
+    /// Position inside the bucket's vec (kept exact across swap_removes).
+    pos: u32,
+}
+
+/// The wheel. Keys are absolute [`SimTime`]s; ids are the caller's (the
+/// stream id). One instance backs the due index, a second the stale
+/// in-process index.
+pub struct TimerWheel {
+    entries: Vec<Entry>,
+    free: Vec<u32>,
+    /// `LEVELS * SLOTS` wheel buckets + 1 overflow list.
+    buckets: Vec<Vec<u32>>,
+    /// Drain watermark: every entry with `key <= cur` has been handed out
+    /// (or was scheduled after the fact and clamped to `cur`'s bucket).
+    cur: SimTime,
+    len: usize,
+    /// Lower bound on the smallest key in the overflow list
+    /// (`SimTime::MAX` when provably empty); drains skip the list entirely
+    /// while `bound < overflow_min`.
+    overflow_min: SimTime,
+    /// Reused candidate buffer for drains (slab indices).
+    drain_scratch: Vec<u32>,
+    /// Per-bucket occupancy high-water marks and the largest drain
+    /// candidate set seen, feeding [`Self::reserve_headroom`].
+    peaks: Vec<u32>,
+    drain_peak: usize,
+}
+
+impl Default for TimerWheel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[inline]
+fn level_shift(level: usize) -> u32 {
+    BASE_SHIFT + LOG_SLOTS * level as u32
+}
+
+impl TimerWheel {
+    pub fn new() -> TimerWheel {
+        TimerWheel {
+            entries: Vec::new(),
+            free: Vec::new(),
+            buckets: (0..LEVELS * SLOTS + 1).map(|_| Vec::new()).collect(),
+            cur: 0,
+            len: 0,
+            overflow_min: SimTime::MAX,
+            drain_scratch: Vec::new(),
+            peaks: vec![0; LEVELS * SLOTS + 1],
+            drain_peak: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The bucket a key belongs in, relative to the current watermark.
+    /// Keys at or before the watermark clamp into its level-0 bucket.
+    fn bucket_for(&self, key: SimTime) -> u32 {
+        let eff = key.max(self.cur);
+        let delta = eff - self.cur;
+        for level in 0..LEVELS {
+            let shift = level_shift(level);
+            if (delta >> shift) < SLOTS as u64 {
+                let slot = (eff >> shift) as usize & (SLOTS - 1);
+                return (level * SLOTS + slot) as u32;
+            }
+        }
+        OVERFLOW
+    }
+
+    /// Append slab slot `idx` to bucket `bucket`, fixing its back-refs.
+    fn attach(&mut self, idx: u32, bucket: u32) {
+        let v = &mut self.buckets[bucket as usize];
+        let e = &mut self.entries[idx as usize];
+        e.bucket = bucket;
+        e.pos = v.len() as u32;
+        v.push(idx);
+        if bucket == OVERFLOW {
+            self.overflow_min = self.overflow_min.min(e.key);
+        }
+        let occupancy = v.len() as u32;
+        let peak = &mut self.peaks[bucket as usize];
+        if occupancy > *peak {
+            *peak = occupancy;
+        }
+    }
+
+    /// Remove slab slot `idx` from its bucket (the slab slot itself is
+    /// untouched — caller re-attaches or frees it).
+    fn detach(&mut self, idx: u32) {
+        let (bucket, pos) =
+            (self.entries[idx as usize].bucket as usize, self.entries[idx as usize].pos as usize);
+        let v = &mut self.buckets[bucket];
+        v.swap_remove(pos);
+        if let Some(&moved) = v.get(pos) {
+            self.entries[moved as usize].pos = pos as u32;
+        }
+    }
+
+    /// O(1): place `(key, id)` and return a stable handle for it.
+    pub fn schedule(&mut self, key: SimTime, id: u64) -> WheelHandle {
+        let idx = match self.free.pop() {
+            Some(idx) => {
+                self.entries[idx as usize] = Entry { key, id, bucket: FREE, pos: 0 };
+                idx
+            }
+            None => {
+                debug_assert!(self.entries.len() < u32::MAX as usize - 1);
+                self.entries.push(Entry { key, id, bucket: FREE, pos: 0 });
+                (self.entries.len() - 1) as u32
+            }
+        };
+        self.attach(idx, self.bucket_for(key));
+        self.len += 1;
+        WheelHandle(idx)
+    }
+
+    /// O(1): remove the entry behind `handle`. Returns its `(key, id)`, or
+    /// `None` if the handle is stale (freed, or recycled for another id —
+    /// the id check makes misuse loud instead of corrupting).
+    pub fn cancel(&mut self, handle: WheelHandle, id: u64) -> Option<(SimTime, u64)> {
+        let e = self.entries.get(handle.0 as usize)?;
+        if e.bucket == FREE || e.id != id {
+            debug_assert!(e.bucket == FREE || e.id == id, "stale wheel handle for id {id}");
+            return None;
+        }
+        let key = e.key;
+        self.detach(handle.0);
+        self.entries[handle.0 as usize].bucket = FREE;
+        self.free.push(handle.0);
+        self.len -= 1;
+        Some((key, id))
+    }
+
+    /// O(1): move the entry behind `handle` to `new_key`, keeping the
+    /// handle valid. Panics (debug) on a stale handle.
+    pub fn reschedule(&mut self, handle: WheelHandle, id: u64, new_key: SimTime) -> WheelHandle {
+        let e = &self.entries[handle.0 as usize];
+        debug_assert!(e.bucket != FREE && e.id == id, "stale wheel handle for id {id}");
+        self.detach(handle.0);
+        self.entries[handle.0 as usize].key = new_key;
+        let bucket = self.bucket_for(new_key);
+        self.attach(handle.0, bucket);
+        handle
+    }
+
+    /// `(key, id)` behind a handle, `None` if freed. Used by invariant
+    /// checks; not on the hot path.
+    pub fn entry(&self, handle: WheelHandle) -> Option<(SimTime, u64)> {
+        let e = self.entries.get(handle.0 as usize)?;
+        if e.bucket == FREE {
+            return None;
+        }
+        Some((e.key, e.id))
+    }
+
+    /// Drain up to `limit` entries with `key <= bound` into `out`
+    /// (appended as `(key, id)`, sorted ascending — the pick order the old
+    /// ordered index gave). Entries past `limit` keep their slab slot and
+    /// handle and re-bucket at the new watermark for the next drain.
+    /// Advances the watermark to `max(watermark, bound)`. Returns the
+    /// number drained.
+    pub fn drain_due_into(
+        &mut self,
+        bound: SimTime,
+        limit: usize,
+        out: &mut Vec<(SimTime, u64)>,
+    ) -> usize {
+        if limit == 0 {
+            return 0;
+        }
+        let old_cur = self.cur;
+        self.cur = self.cur.max(bound);
+        if self.len == 0 {
+            return 0;
+        }
+        let mut cand = std::mem::take(&mut self.drain_scratch);
+        cand.clear();
+
+        for level in 0..LEVELS {
+            let shift = level_shift(level);
+            let first = old_cur >> shift;
+            let last = bound >> shift;
+            // Visit at most one full lap; `last < first` (bound behind the
+            // watermark) still revisits the watermark bucket, where any
+            // late-scheduled keys were clamped.
+            let hi = last.clamp(first, first + SLOTS as u64);
+            let mut abs = first;
+            loop {
+                let bucket = (level * SLOTS + (abs as usize & (SLOTS - 1))) as u32;
+                let mut v = std::mem::take(&mut self.buckets[bucket as usize]);
+                let mut i = 0;
+                while i < v.len() {
+                    let idx = v[i];
+                    if self.entries[idx as usize].key <= bound {
+                        v.swap_remove(i);
+                        if let Some(&moved) = v.get(i) {
+                            self.entries[moved as usize].pos = i as u32;
+                        }
+                        cand.push(idx);
+                    } else {
+                        i += 1;
+                    }
+                }
+                // Cascade: once the watermark lands in a coarse bucket, its
+                // not-yet-due entries re-place into finer levels so later
+                // drains stop touching them here. Entries from a future lap
+                // of this level map back to the same bucket and stay.
+                if level > 0 && abs == last && !v.is_empty() {
+                    let mut i = 0;
+                    while i < v.len() {
+                        let idx = v[i];
+                        let nb = self.bucket_for(self.entries[idx as usize].key);
+                        if nb != bucket {
+                            v.swap_remove(i);
+                            if let Some(&moved) = v.get(i) {
+                                self.entries[moved as usize].pos = i as u32;
+                            }
+                            self.attach(idx, nb);
+                        } else {
+                            i += 1;
+                        }
+                    }
+                }
+                self.buckets[bucket as usize] = v;
+                if abs == hi {
+                    break;
+                }
+                abs += 1;
+            }
+        }
+
+        // Overflow list: scanned only when the bound can reach it; due
+        // entries drain, the rest migrate into the wheel now that the
+        // watermark moved (their distance shrank) or refresh the min hint.
+        if self.overflow_min <= bound {
+            let mut v = std::mem::take(&mut self.buckets[OVERFLOW as usize]);
+            let mut min = SimTime::MAX;
+            let mut i = 0;
+            while i < v.len() {
+                let idx = v[i];
+                let key = self.entries[idx as usize].key;
+                let remove_here = if key <= bound {
+                    cand.push(idx);
+                    true
+                } else {
+                    let nb = self.bucket_for(key);
+                    if nb != OVERFLOW {
+                        self.attach(idx, nb);
+                        true
+                    } else {
+                        min = min.min(key);
+                        false
+                    }
+                };
+                if remove_here {
+                    v.swap_remove(i);
+                    if let Some(&moved) = v.get(i) {
+                        self.entries[moved as usize].pos = i as u32;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            self.overflow_min = min;
+            self.buckets[OVERFLOW as usize] = v;
+        }
+
+        self.drain_peak = self.drain_peak.max(cand.len());
+        // Sort only the drained slice — bucket granularity already gives
+        // coarse time order; this restores the exact (due, id) order.
+        {
+            let entries = &self.entries;
+            cand.sort_unstable_by_key(|&idx| {
+                let e = &entries[idx as usize];
+                (e.key, e.id)
+            });
+        }
+        let take = cand.len().min(limit);
+        for &idx in &cand[..take] {
+            let e = &mut self.entries[idx as usize];
+            out.push((e.key, e.id));
+            e.bucket = FREE;
+            self.free.push(idx);
+            self.len -= 1;
+        }
+        // Limit overflow: re-bucket at the new watermark, handles intact.
+        for &idx in &cand[take..] {
+            let bucket = self.bucket_for(self.entries[idx as usize].key);
+            self.attach(idx, bucket);
+        }
+        cand.clear();
+        self.drain_scratch = cand;
+        take
+    }
+
+    /// Pre-size every internal vector to at least **twice** its observed
+    /// high-water mark (plus a small absolute slack). A long-running
+    /// scheduler calls this once the workload has cycled a full lap of
+    /// the coarsest level it occupies: from then on the
+    /// schedule/cancel/drain cycle performs no allocations at all,
+    /// because occupancy would have to double past every recorded peak
+    /// before any vector grows again. Capacity-planning warm start — the
+    /// store bench relies on it for its zero-allocation assertion.
+    pub fn reserve_headroom(&mut self) {
+        for (v, &peak) in self.buckets.iter_mut().zip(&self.peaks) {
+            let want = 2 * peak as usize + 8;
+            if v.capacity() < want {
+                v.reserve_exact(want - v.len());
+            }
+        }
+        let slots = self.entries.len();
+        if self.entries.capacity() < 2 * slots + 8 {
+            self.entries.reserve_exact(slots + 8);
+        }
+        let want_free = 2 * slots + 8;
+        if self.free.capacity() < want_free {
+            self.free.reserve_exact(want_free - self.free.len());
+        }
+        let want_scratch = 2 * self.drain_peak + 8;
+        if self.drain_scratch.capacity() < want_scratch {
+            self.drain_scratch.reserve_exact(want_scratch);
+        }
+    }
+
+    /// Structural self-check for tests: back-refs exact, len consistent,
+    /// free list and buckets disjoint, overflow hint a true lower bound.
+    pub fn check(&self) -> Result<(), String> {
+        let mut seen = 0usize;
+        for (b, v) in self.buckets.iter().enumerate() {
+            for (pos, &idx) in v.iter().enumerate() {
+                let e = self
+                    .entries
+                    .get(idx as usize)
+                    .ok_or_else(|| format!("bucket {b} holds bad slab index {idx}"))?;
+                if e.bucket as usize != b || e.pos as usize != pos {
+                    return Err(format!(
+                        "entry {idx} back-ref ({}, {}) != actual ({b}, {pos})",
+                        e.bucket, e.pos
+                    ));
+                }
+                if b == OVERFLOW as usize && e.key < self.overflow_min {
+                    return Err(format!(
+                        "overflow key {} below hint {}",
+                        e.key, self.overflow_min
+                    ));
+                }
+                seen += 1;
+            }
+        }
+        if seen != self.len {
+            return Err(format!("len {} != bucketed entries {seen}", self.len));
+        }
+        for &idx in &self.free {
+            if self.entries[idx as usize].bucket != FREE {
+                return Err(format!("free-listed entry {idx} still bucketed"));
+            }
+        }
+        if self.free.len() + self.len != self.entries.len() {
+            return Err(format!(
+                "slab accounting off: {} free + {} live != {} slots",
+                self.free.len(),
+                self.len,
+                self.entries.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use std::collections::BTreeSet;
+
+    fn drain(w: &mut TimerWheel, bound: SimTime, limit: usize) -> Vec<(SimTime, u64)> {
+        let mut out = Vec::new();
+        w.drain_due_into(bound, limit, &mut out);
+        out
+    }
+
+    #[test]
+    fn drains_in_due_order() {
+        let mut w = TimerWheel::new();
+        w.schedule(500, 3);
+        w.schedule(100, 1);
+        w.schedule(100, 2);
+        w.schedule(90_000_000, 4); // far future, higher level
+        assert_eq!(drain(&mut w, 1_000, 10), vec![(100, 1), (100, 2), (500, 3)]);
+        assert_eq!(w.len(), 1);
+        assert_eq!(drain(&mut w, 100_000_000, 10), vec![(90_000_000, 4)]);
+        w.check().unwrap();
+    }
+
+    #[test]
+    fn limit_leaves_rest_scheduled_with_live_handles() {
+        let mut w = TimerWheel::new();
+        let handles: Vec<_> = (0..10u64).map(|i| w.schedule(i * 10, i)).collect();
+        assert_eq!(drain(&mut w, 1_000, 3), vec![(0, 0), (10, 1), (20, 2)]);
+        assert_eq!(w.len(), 7);
+        // The re-bucketed extras kept their handles.
+        for (i, h) in handles.iter().enumerate().skip(3) {
+            assert_eq!(w.entry(*h), Some((i as u64 * 10, i as u64)));
+        }
+        w.check().unwrap();
+        assert_eq!(drain(&mut w, 1_000, 100).len(), 7);
+    }
+
+    #[test]
+    fn cancel_and_reschedule() {
+        let mut w = TimerWheel::new();
+        let a = w.schedule(100, 1);
+        let b = w.schedule(200, 2);
+        assert_eq!(w.cancel(a, 1), Some((100, 1)));
+        assert_eq!(w.cancel(a, 1), None, "double cancel is a None");
+        let b2 = w.reschedule(b, 2, 50);
+        assert_eq!(w.entry(b2), Some((50, 2)));
+        assert_eq!(drain(&mut w, 1_000, 10), vec![(50, 2)]);
+        w.check().unwrap();
+    }
+
+    #[test]
+    fn far_future_overflow_round_trips() {
+        // Backoff level 6 on a corrupt near-max interval lands past the
+        // top wheel span; the overflow list must hand it back when due.
+        let mut w = TimerWheel::new();
+        let far = 1u64 << 60;
+        let h = w.schedule(far, 9);
+        w.schedule(1_000, 1);
+        assert_eq!(drain(&mut w, 2_000, 10), vec![(1_000, 1)]);
+        assert_eq!(w.entry(h), Some((far, 9)));
+        assert_eq!(drain(&mut w, u64::MAX, 10), vec![(far, 9)]);
+        w.check().unwrap();
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn late_keys_clamp_and_still_drain() {
+        let mut w = TimerWheel::new();
+        assert!(drain(&mut w, 1 << 40, 10).is_empty()); // watermark far ahead
+        w.schedule(5, 1); // way before the watermark
+        w.schedule((1 << 40) + 10, 2);
+        assert_eq!(drain(&mut w, (1 << 40) + 100, 10), vec![(5, 1), ((1 << 40) + 10, 2)]);
+        w.check().unwrap();
+    }
+
+    #[test]
+    fn huge_time_jumps_visit_one_lap() {
+        let mut w = TimerWheel::new();
+        for i in 0..100u64 {
+            w.schedule(i * 1_000_000, i);
+        }
+        // One drain to the far future returns everything, ordered.
+        let got = drain(&mut w, u64::MAX / 2, 1_000);
+        assert_eq!(got.len(), 100);
+        assert!(got.windows(2).all(|p| p[0] < p[1]));
+        w.check().unwrap();
+    }
+
+    #[test]
+    fn reserve_headroom_is_behavior_neutral() {
+        let mut w = TimerWheel::new();
+        let handles: Vec<_> = (0..200u64).map(|i| w.schedule(i * 7_000, i)).collect();
+        drain(&mut w, 300_000, 10);
+        w.reserve_headroom();
+        w.check().unwrap();
+        assert_eq!(w.len(), 190);
+        for (i, h) in handles.iter().enumerate().skip(100) {
+            assert_eq!(w.entry(*h), Some((i as u64 * 7_000, i as u64)));
+        }
+        // Everything still drains in order afterwards.
+        let rest = drain(&mut w, u64::MAX, 1_000);
+        assert_eq!(rest.len(), 190);
+        assert!(rest.windows(2).all(|p| p[0] < p[1]));
+        w.check().unwrap();
+    }
+
+    #[test]
+    fn prop_wheel_matches_btreeset_oracle() {
+        forall("wheel drains == ordered-set drains", 120, |g| {
+            let mut w = TimerWheel::new();
+            let mut oracle: BTreeSet<(SimTime, u64)> = BTreeSet::new();
+            let mut handles: Vec<(u64, WheelHandle, SimTime)> = Vec::new();
+            let mut now = 0u64;
+            let mut next_id = 0u64;
+            for _ in 0..g.usize(1, 80) {
+                match g.u64(0, 4) {
+                    0 => {
+                        // Schedule near, far, or late relative to now.
+                        next_id += 1;
+                        let key = match g.u64(0, 3) {
+                            0 => now.saturating_add(g.u64(0, 100_000)),
+                            1 => now.saturating_add(g.u64(0, 1 << 55)),
+                            _ => now.saturating_sub(g.u64(0, 50_000)),
+                        };
+                        let h = w.schedule(key, next_id);
+                        oracle.insert((key, next_id));
+                        handles.push((next_id, h, key));
+                    }
+                    1 if !handles.is_empty() => {
+                        let i = g.usize(0, handles.len());
+                        let (id, h, key) = handles.swap_remove(i);
+                        assert_eq!(w.cancel(h, id), Some((key, id)));
+                        oracle.remove(&(key, id));
+                    }
+                    2 if !handles.is_empty() => {
+                        let i = g.usize(0, handles.len());
+                        let (id, h, key) = handles[i];
+                        let nk = now.saturating_add(g.u64(0, 1 << 30));
+                        handles[i] = (id, w.reschedule(h, id, nk), nk);
+                        oracle.remove(&(key, id));
+                        oracle.insert((nk, id));
+                    }
+                    _ => {
+                        now += g.u64(0, 200_000);
+                        let limit = g.usize(1, 12);
+                        let got = drain(&mut w, now, limit);
+                        let want: Vec<(SimTime, u64)> = oracle
+                            .range(..=(now, u64::MAX))
+                            .take(limit)
+                            .copied()
+                            .collect();
+                        if got != want {
+                            return false;
+                        }
+                        for e in &got {
+                            oracle.remove(e);
+                            handles.retain(|(id, _, _)| *id != e.1);
+                        }
+                    }
+                }
+                if w.check().is_err() || w.len() != oracle.len() {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+}

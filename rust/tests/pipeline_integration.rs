@@ -8,6 +8,7 @@
 use alertmix::config::AlertMixConfig;
 use alertmix::pipeline::{bootstrap, run_for, PrioritizeStream};
 use alertmix::sim::{HOUR, MINUTE};
+use alertmix::store::streams::StreamStatus;
 
 fn cfg(seed: u64, feeds: usize) -> AlertMixConfig {
     AlertMixConfig {
@@ -103,8 +104,22 @@ fn priority_streams_processed_first_under_load() {
         assert!(p99 < 5 * MINUTE, "priority p99 = {p99}ms");
     }
     for id in targets {
-        assert!(world.store.get(id).unwrap().priority);
+        // The bump was served and released: the flag clears once the
+        // priority poll completes (leaving it set forever would pin the
+        // stream to the priority queue). Tolerate a bump still in flight
+        // at the cutoff — claimed, or just released with its makeup poll
+        // imminent.
+        let r = world.store.get(id).unwrap();
+        let in_flight = matches!(r.status, StreamStatus::InProcess { .. });
+        assert!(
+            !r.priority || in_flight || r.next_due <= 40 * MINUTE,
+            "stream {id}: priority flag pinned (status {:?}, next_due {})",
+            r.status,
+            r.next_due
+        );
+        assert!(r.polls > 0, "priority stream {id} never polled");
     }
+    world.store.check_invariants().unwrap();
 }
 
 #[test]

@@ -1,0 +1,306 @@
+//! Differential property test: the wheel-backed [`StreamStore`] against a
+//! BTreeSet-indexed oracle.
+//!
+//! The oracle is the pre-wheel index structure — an ordered
+//! `(next_due, id)` set for Idle streams and an ordered `(since, id)` set
+//! for in-process claims — carrying the *fixed* completion semantics
+//! (late completions are no-ops, priority bumps are served at complete,
+//! saturating jitter math). Driving both through identical random op
+//! sequences and asserting identical pick results isolates exactly what
+//! this PR replaced: the index data structure, not the scheduling policy.
+
+use alertmix::connector::ChannelId;
+use alertmix::sim::SimTime;
+use alertmix::store::streams::{PollOutcome, StreamRecord, StreamStatus, StreamStore};
+use alertmix::util::prop::forall;
+use std::collections::{BTreeSet, HashMap};
+
+/// Minimal record state the oracle needs to mirror scheduling decisions.
+struct OracleRec {
+    status: StreamStatus,
+    next_due: SimTime,
+    base_interval: SimTime,
+    backoff_level: u8,
+    priority: bool,
+    priority_pending: bool,
+    polls: u64,
+}
+
+/// The old index layout (two ordered sets) with the new semantics.
+#[derive(Default)]
+struct OracleStore {
+    records: HashMap<u64, OracleRec>,
+    due_index: BTreeSet<(SimTime, u64)>,
+    inprocess_index: BTreeSet<(SimTime, u64)>,
+    max_backoff: u8,
+    late_completions: u64,
+    stale_repicks: u64,
+    claims: u64,
+}
+
+impl OracleStore {
+    fn new() -> Self {
+        OracleStore { max_backoff: 4, ..Default::default() }
+    }
+
+    fn insert(&mut self, id: u64, next_due: SimTime, base_interval: SimTime) {
+        self.due_index.insert((next_due, id));
+        self.records.insert(
+            id,
+            OracleRec {
+                status: StreamStatus::Idle,
+                next_due,
+                base_interval,
+                backoff_level: 0,
+                priority: false,
+                priority_pending: false,
+                polls: 0,
+            },
+        );
+    }
+
+    fn remove(&mut self, id: u64) {
+        let Some(rec) = self.records.remove(&id) else { return };
+        match rec.status {
+            StreamStatus::Idle => {
+                self.due_index.remove(&(rec.next_due, id));
+            }
+            StreamStatus::InProcess { since } => {
+                self.inprocess_index.remove(&(since, id));
+            }
+            StreamStatus::Disabled => {}
+        }
+    }
+
+    fn pick_due(
+        &mut self,
+        now: SimTime,
+        horizon: SimTime,
+        stale_after: SimTime,
+        limit: usize,
+    ) -> Vec<u64> {
+        let mut picked = Vec::new();
+        if now >= stale_after {
+            let cutoff = now - stale_after;
+            let stale: Vec<(SimTime, u64)> =
+                self.inprocess_index.range(..=(cutoff, u64::MAX)).take(limit).copied().collect();
+            for (since, id) in stale {
+                self.inprocess_index.remove(&(since, id));
+                self.records.get_mut(&id).unwrap().status =
+                    StreamStatus::InProcess { since: now };
+                self.inprocess_index.insert((now, id));
+                self.stale_repicks += 1;
+                picked.push(id);
+            }
+        }
+        if picked.len() < limit {
+            let bound = now.saturating_add(horizon);
+            let due: Vec<(SimTime, u64)> = self
+                .due_index
+                .range(..=(bound, u64::MAX))
+                .take(limit - picked.len())
+                .copied()
+                .collect();
+            for (due_at, id) in due {
+                self.due_index.remove(&(due_at, id));
+                self.records.get_mut(&id).unwrap().status =
+                    StreamStatus::InProcess { since: now };
+                self.inprocess_index.insert((now, id));
+                self.claims += 1;
+                picked.push(id);
+            }
+        }
+        picked
+    }
+
+    fn complete(&mut self, id: u64, now: SimTime, outcome: PollOutcome) -> bool {
+        let Some(rec) = self.records.get_mut(&id) else { return false };
+        let StreamStatus::InProcess { since } = rec.status else {
+            self.late_completions += 1;
+            return false;
+        };
+        self.inprocess_index.remove(&(since, id));
+        rec.polls += 1;
+        match outcome {
+            PollOutcome::Items(_) => rec.backoff_level = 0,
+            PollOutcome::NotModified | PollOutcome::Error => {
+                rec.backoff_level = (rec.backoff_level + 1).min(self.max_backoff);
+            }
+        }
+        rec.status = StreamStatus::Idle;
+        if rec.priority_pending {
+            rec.priority_pending = false;
+            rec.next_due = now;
+        } else {
+            rec.priority = false;
+            let interval =
+                rec.base_interval.saturating_mul(1u64 << rec.backoff_level.min(6));
+            let jitter_span = (interval / 4).max(1);
+            let h = alertmix::util::hash::combine(id, rec.polls);
+            let offset = h % jitter_span;
+            let half = jitter_span / 2;
+            let delta = interval.saturating_add(offset).saturating_sub(half).max(1);
+            rec.next_due = now.saturating_add(delta);
+        }
+        self.due_index.insert((rec.next_due, id));
+        true
+    }
+
+    fn prioritize(&mut self, id: u64, now: SimTime) -> bool {
+        let Some(rec) = self.records.get_mut(&id) else { return false };
+        match rec.status {
+            StreamStatus::Idle => {
+                self.due_index.remove(&(rec.next_due, id));
+                rec.priority = true;
+                rec.next_due = now;
+                self.due_index.insert((now, id));
+                true
+            }
+            StreamStatus::InProcess { .. } => {
+                rec.priority = true;
+                rec.priority_pending = true;
+                false
+            }
+            StreamStatus::Disabled => false,
+        }
+    }
+}
+
+fn rec(id: u64, due: SimTime, base_interval: SimTime) -> StreamRecord {
+    let mut r =
+        StreamRecord::new(id, ChannelId(0), format!("http://feed/{id}"), base_interval, 0);
+    r.next_due = due;
+    r
+}
+
+#[test]
+fn wheel_store_matches_btreeset_oracle_on_500_random_sequences() {
+    forall("wheel-backed store == ordered-index oracle", 500, |g| {
+        let mut s = StreamStore::new();
+        let mut o = OracleStore::new();
+        let mut now: SimTime = 0;
+        let mut next_id = 0u64;
+        for _ in 0..g.usize(1, 60) {
+            now += g.u64(0, 400_000);
+            match g.u64(0, 7) {
+                0 => {
+                    // Insert with near or far due dates and varied cadence.
+                    next_id += 1;
+                    let due = now.saturating_add(g.u64(0, 40_000_000));
+                    let base = [60_000, 300_000, 1_800_000][g.usize(0, 3)];
+                    s.insert(rec(next_id, due, base));
+                    o.insert(next_id, due, base);
+                }
+                1 | 2 => {
+                    let horizon = g.u64(0, 10_000);
+                    let limit = g.usize(1, 12);
+                    let got = s.pick_due(now, horizon, 600_000, limit);
+                    let want = o.pick_due(now, horizon, 600_000, limit);
+                    if got != want {
+                        return false;
+                    }
+                    for id in got {
+                        if g.chance(0.75) {
+                            let outcome = if g.chance(0.5) {
+                                PollOutcome::Items(1)
+                            } else {
+                                PollOutcome::NotModified
+                            };
+                            let a = s.complete(id, now, outcome, None, None);
+                            let b = o.complete(id, now, outcome);
+                            if a != b {
+                                return false;
+                            }
+                        } // else crash: stays in-process for the stale path
+                    }
+                }
+                3 if next_id > 0 => {
+                    let id = g.u64(1, next_id + 1);
+                    if s.prioritize(id, now) != o.prioritize(id, now) {
+                        return false;
+                    }
+                }
+                4 if next_id > 0 => {
+                    let id = g.u64(1, next_id + 1);
+                    s.remove(id);
+                    o.remove(id);
+                }
+                5 if next_id > 0 => {
+                    // Late / double completes, including unknown ids.
+                    let id = g.u64(1, next_id + 3);
+                    let a = s.complete(id, now, PollOutcome::Error, None, None);
+                    let b = o.complete(id, now, PollOutcome::Error);
+                    if a != b {
+                        return false;
+                    }
+                }
+                _ => {
+                    // Big horizon sweep: exercises coarse wheel levels.
+                    let got = s.pick_due(now, 60_000_000, 600_000, 40);
+                    let want = o.pick_due(now, 60_000_000, 600_000, 40);
+                    if got != want {
+                        return false;
+                    }
+                    for id in got {
+                        let a = s.complete(id, now + 1, PollOutcome::Items(2), None, None);
+                        let b = o.complete(id, now + 1, PollOutcome::Items(2));
+                        if a != b {
+                            return false;
+                        }
+                    }
+                }
+            }
+            if s.check_invariants().is_err() {
+                return false;
+            }
+        }
+        // Terminal cross-checks: same population, same schedule, same
+        // counters.
+        if s.late_completions != o.late_completions
+            || s.stale_repicks != o.stale_repicks
+            || s.claims != o.claims
+            || s.len() != o.records.len()
+        {
+            return false;
+        }
+        for (id, orec) in &o.records {
+            let srec = match s.get(*id) {
+                Some(r) => r,
+                None => return false,
+            };
+            if srec.status != orec.status
+                || srec.next_due != orec.next_due
+                || srec.priority != orec.priority
+                || srec.backoff_level != orec.backoff_level
+            {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn drained_order_is_exactly_due_order_across_levels() {
+    // Streams whose due dates straddle several wheel levels (seconds to
+    // weeks) must come back in global (due, id) order regardless of which
+    // bucket held them.
+    let mut s = StreamStore::new();
+    let dues = [
+        5u64,
+        900,
+        70_000,
+        71_000,
+        4_200_000,
+        4_200_001,
+        270_000_000,
+        1 << 40,
+        (1 << 40) + 1,
+    ];
+    for (i, d) in dues.iter().enumerate() {
+        s.insert(rec(i as u64 + 1, *d, 300_000));
+    }
+    let picked = s.pick_due(1 << 41, 0, u64::MAX, 100);
+    assert_eq!(picked, (1..=dues.len() as u64).collect::<Vec<_>>());
+    s.check_invariants().unwrap();
+}
