@@ -6,11 +6,15 @@
 #                            connectors live end to end; asserts delivery)
 #   make bench-ingest        refresh BENCH_ingest.json (ingest hot-path numbers)
 #   make bench-sqs           refresh BENCH_sqs.json (SQS hot-path numbers)
-#   make bench-store         refresh BENCH_store.json (streams-bucket pick/complete numbers)
+#   make bench-store         refresh BENCH_store.json (streams-bucket pick/complete
+#                            numbers; SHARDS=N runs the sharded coordinator and
+#                            records cross-shard balance, e.g. `make bench-store SHARDS=8`)
 #   make bench               run every bench target
 #   make artifacts           (re)build the AOT enrichment artifacts (needs jax)
 
 CARGO ?= cargo
+# Coordinator shards for bench-store (1 = classic single coordinator).
+SHARDS ?= 1
 
 .PHONY: verify example-connectors bench-ingest bench-sqs bench-store bench artifacts
 
@@ -36,7 +40,7 @@ bench-sqs:
 	@test -f BENCH_sqs.json && echo "refreshed BENCH_sqs.json" || true
 
 bench-store:
-	cd rust && $(CARGO) bench --bench bench_store
+	cd rust && SHARDS=$(SHARDS) $(CARGO) bench --bench bench_store
 	@test -f BENCH_store.json && echo "refreshed BENCH_store.json" || true
 
 bench:

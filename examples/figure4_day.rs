@@ -9,9 +9,16 @@
 //!   2. a peak on the order of ~8,000 messages / 5 min (~27 msg/s),
 //!   3. queue-emptying speed matching ingestion speed (no congestion).
 //!
+//! The run also exercises the sharded coordinator (`FIG4_SHARDS`,
+//! default 8): after the day completes it prints the `ShardStats`
+//! cross-shard balance table — how evenly the hash routing spread the
+//! diurnal pick/complete load over the coordinator shards (ROADMAP:
+//! "measure cross-shard balance under the diurnal Figure-4 load").
+//!
 //! ```bash
 //! cargo run --release --example figure4_day            # full 200k x 24h
 //! FIG4_FEEDS=20000 cargo run --release --example figure4_day   # faster
+//! FIG4_SHARDS=1 cargo run --release --example figure4_day      # classic single coordinator
 //! ```
 
 use alertmix::config::AlertMixConfig;
@@ -24,6 +31,10 @@ fn main() -> anyhow::Result<()> {
     if let Ok(n) = std::env::var("FIG4_FEEDS") {
         cfg.n_feeds = n.parse()?;
     }
+    cfg.n_shards = match std::env::var("FIG4_SHARDS") {
+        Ok(s) => s.parse()?,
+        Err(_) => 8,
+    };
     if !cfg!(feature = "xla")
         || alertmix::runtime::find_artifact(alertmix::runtime::DEFAULT_ARTIFACT).is_none()
     {
@@ -31,9 +42,10 @@ fn main() -> anyhow::Result<()> {
         cfg.use_xla = false;
     }
     println!(
-        "figure4: {} feeds, 24 virtual hours, 5-min pick cycle, seed {}",
-        cfg.n_feeds, cfg.seed
+        "figure4: {} feeds, 24 virtual hours, 5-min pick cycle, {} coordinator shard(s), seed {}",
+        cfg.n_feeds, cfg.n_shards, cfg.seed
     );
+    let pick_horizon = cfg.pick_interval;
     let wall = std::time::Instant::now();
     let (_sys, world) = run_for(cfg, DAY)?;
     println!("simulated 24h in {:.1}s wall", wall.elapsed().as_secs_f64());
@@ -87,6 +99,34 @@ fn main() -> anyhow::Result<()> {
         day_peak,
         day_trough,
         day_peak / day_trough.max(1.0)
+    );
+
+    // -- Cross-shard balance under the diurnal load ------------------------
+    // One day of the Figure-4 population through the hash-partitioned
+    // coordinator: every shard should carry ~1/N of the records and of
+    // the lifetime pick/complete traffic.
+    let stats = world.store.shard_stats(DAY, pick_horizon);
+    println!(
+        "\ncoordinator shard balance after 24h ({} shards):",
+        world.store.n_shards()
+    );
+    println!(
+        "  {:>5} {:>9} {:>9} {:>11} {:>9} {:>7} {:>6}",
+        "shard", "records", "due-soon", "in-process", "claims", "stale", "late"
+    );
+    for st in &stats {
+        println!(
+            "  {:>5} {:>9} {:>9} {:>11} {:>9} {:>7} {:>6}",
+            st.shard, st.records, st.due_soon, st.in_process, st.claims, st.stale_repicks,
+            st.late_completions
+        );
+    }
+    let claims_min = stats.iter().map(|s| s.claims).min().unwrap_or(0);
+    let claims_max = stats.iter().map(|s| s.claims).max().unwrap_or(0);
+    println!(
+        "  claim imbalance (max/min): {:.3}  |  total claims {}",
+        claims_max as f64 / claims_min.max(1) as f64,
+        world.store.claims()
     );
 
     println!(

@@ -100,7 +100,7 @@ fn main() {
     println!(
         "self-healing: {} worker restarts, {} stale re-picks, backlog at end {}",
         restarts,
-        world.store.stale_repicks,
+        world.store.stale_repicks(),
         world.queues.total_visible()
     );
 

@@ -44,9 +44,14 @@ pub struct AlertMixConfig {
     pub syndication_rate: f64,
 
     // -- picker / cron ----------------------------------------------------
+    /// Coordinator shards: the streams bucket is partitioned by
+    /// `stream_id` hash into this many independent shards, each with its
+    /// own picker/updater pair running the cron concurrently. 1 (the
+    /// default) is today's single-coordinator behavior, bit for bit.
+    pub n_shards: usize,
     /// Cron cadence ("runs at fixed intervals, say 5 seconds").
     pub pick_interval: SimTime,
-    /// Streams picked per cron run at most.
+    /// Streams picked per cron run at most, per shard.
     pub pick_batch: usize,
     /// Re-pick in-process streams stuck longer than this.
     pub stale_after: SimTime,
@@ -105,6 +110,7 @@ impl Default for AlertMixConfig {
             base_poll_interval: 5 * MINUTE,
             diurnal_depth: 0.65,
             syndication_rate: 0.12,
+            n_shards: 1,
             pick_interval: 5 * SECOND,
             pick_batch: 2_000,
             stale_after: 10 * MINUTE,
@@ -223,6 +229,7 @@ impl AlertMixConfig {
                 "base_poll_interval_ms" => c.base_poll_interval = u()?,
                 "diurnal_depth" => c.diurnal_depth = f()?,
                 "syndication_rate" => c.syndication_rate = f()?,
+                "n_shards" => c.n_shards = u()? as usize,
                 "pick_interval_ms" => c.pick_interval = u()?,
                 "pick_batch" => c.pick_batch = u()? as usize,
                 "stale_after_ms" => c.stale_after = u()?,
@@ -288,6 +295,9 @@ impl AlertMixConfig {
         }
         if self.pick_interval == 0 || self.base_poll_interval == 0 {
             bail!("intervals must be > 0");
+        }
+        if self.n_shards == 0 || self.n_shards > 1024 {
+            bail!("n_shards must be in 1..=1024");
         }
         if self.enrich_batch == 0 || self.enrich_batch > 64 {
             bail!("enrich_batch must be in 1..=64 (compiled artifact width)");
@@ -358,6 +368,21 @@ mod tests {
         let j = Json::parse(r#"{"enrich_batch": 100}"#).unwrap();
         assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
         let j = Json::parse(r#"{"worker_fault_rate": 2.0}"#).unwrap();
+        assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
+    }
+
+    #[test]
+    fn n_shards_parses_defaults_and_validates() {
+        // Legacy JSON without the key keeps the single-coordinator default.
+        let j = Json::parse(r#"{"n_feeds": 50}"#).unwrap();
+        let c = AlertMixConfig::from_json(&j, AlertMixConfig::default()).unwrap();
+        assert_eq!(c.n_shards, 1);
+        let j = Json::parse(r#"{"n_shards": 8}"#).unwrap();
+        let c = AlertMixConfig::from_json(&j, AlertMixConfig::default()).unwrap();
+        assert_eq!(c.n_shards, 8);
+        let j = Json::parse(r#"{"n_shards": 0}"#).unwrap();
+        assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
+        let j = Json::parse(r#"{"n_shards": 4096}"#).unwrap();
         assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
     }
 

@@ -4,8 +4,12 @@ use crate::sim::SimTime;
 use crate::sqs::ReceiptHandle;
 use crate::store::streams::PollOutcome;
 
-/// Timer: StreamsPicker cadence (the 5-second "Cron").
-pub struct PickDue;
+/// Timer: StreamsPicker cadence (the 5-second "Cron"). One message per
+/// coordinator shard per tick — each shard's picker claims only from its
+/// own partition of the streams bucket, so shards cron concurrently.
+pub struct PickDue {
+    pub shard: usize,
+}
 
 /// Timer: FeedRouter replenishment evaluation.
 pub struct RouterTick;

@@ -3,8 +3,9 @@
 //! Actor topology (paper Figures 2 & 3):
 //!
 //! ```text
-//!   [timer] -> StreamsPickerActor ("Cron", 5 s)
-//!                 | pick_due() from the streams bucket
+//!   [timer] -> StreamsPickerActor ("Cron", 5 s; one per coordinator
+//!                 |                shard, claiming its own partition)
+//!                 | pick_shard_due_into() from the streams bucket
 //!                 v
 //!         SQS main queue  /  SQS priority queue
 //!                 ^                          ^
@@ -21,7 +22,8 @@
 //!             \       v        v         /         optimal-size resizer)
 //!              +--> EnrichStage (micro-batch -> XLA/PJRT enricher)
 //!              |        -> dedup -> Elasticsearch-lite sink
-//!              +--> StreamsUpdaterActor (complete + SQS delete)
+//!              +--> StreamsUpdaterActor (complete + SQS delete;
+//!                     one per shard, routed by the stream's shard)
 //!   [timer] -> DeadLettersListener -> metrics/alarms ("ELK" + email)
 //! ```
 
@@ -52,7 +54,9 @@ use crate::util::rng::Rng;
 /// Addresses of the spawned topology.
 #[derive(Debug, Clone)]
 pub struct Handles {
-    pub picker: ActorId,
+    /// One StreamsPicker per coordinator shard (index = shard id), each
+    /// driven by its own `PickDue { shard }` timer.
+    pub pickers: Vec<ActorId>,
     pub feed_router: ActorId,
     pub distributor: ActorId,
     pub priority_streams: ActorId,
@@ -60,7 +64,10 @@ pub struct Handles {
     /// (registration order). `None` for descriptor-only registry entries
     /// (channels known by name but served by no connector here).
     pub pools: Vec<Option<ActorId>>,
-    pub updater: ActorId,
+    /// One StreamsUpdater per coordinator shard: workers route each
+    /// completion to the updater owning the stream's shard, so two
+    /// shards' bucket writes never serialize behind one mailbox.
+    pub updaters: Vec<ActorId>,
     pub enrich_stage: ActorId,
     pub monitor: ActorId,
 }
@@ -73,16 +80,22 @@ impl Handles {
         self.pools.get(channel.0 as usize).copied().flatten()
     }
 
+    /// The updater owning a coordinator shard. Defensive modulo: handles
+    /// built for fewer shards (test fixtures) still route somewhere.
+    pub fn updater_for(&self, shard: usize) -> ActorId {
+        self.updaters[shard % self.updaters.len()]
+    }
+
     /// Test/bench fixture: every role (and `n_pools` worker pools) served
     /// by a single actor.
     pub fn uniform(actor: ActorId, n_pools: usize) -> Handles {
         Handles {
-            picker: actor,
+            pickers: vec![actor],
             feed_router: actor,
             distributor: actor,
             priority_streams: actor,
             pools: vec![Some(actor); n_pools],
-            updater: actor,
+            updaters: vec![actor],
             enrich_stage: actor,
             monitor: actor,
         }
@@ -111,14 +124,25 @@ pub fn bootstrap_with(
     cfg.validate()?;
     let mut world = World::build_with(&cfg, registry)?;
     let mut sys: ActorSystem<World> = ActorSystem::new(cfg.seed ^ 0x5157E4);
+    let n_shards = world.store.n_shards();
+    // Single-shard deployments keep the classic unsuffixed actor names.
+    let shard_name = |base: &str, shard: usize| {
+        if n_shards == 1 { base.to_string() } else { format!("{base}-{shard}") }
+    };
 
     // -- actors -----------------------------------------------------------
-    let updater = sys.spawn(
-        "streams-updater",
-        // paper: "will also have a bounded priority mail box"
-        MailboxKind::BoundedStablePriority(cfg.pool_mailbox * 4),
-        Box::new(|_| Box::new(updater::StreamsUpdater)),
-    );
+    // One updater per coordinator shard (workers route completions by the
+    // stream's shard, so bucket writes scale with the shard count).
+    let updaters: Vec<ActorId> = (0..n_shards)
+        .map(|s| {
+            sys.spawn(
+                &shard_name("streams-updater", s),
+                // paper: "will also have a bounded priority mail box"
+                MailboxKind::BoundedStablePriority(cfg.pool_mailbox * 4),
+                Box::new(|_| Box::new(updater::StreamsUpdater)),
+            )
+        })
+        .collect();
 
     let enrich_stage = sys.spawn(
         "enrich-stage",
@@ -186,11 +210,16 @@ pub fn bootstrap_with(
         Box::new(|_| Box::new(router::FeedRouter::new())),
     );
 
-    let picker = sys.spawn(
-        "streams-picker",
-        MailboxKind::Unbounded,
-        Box::new(|_| Box::new(picker::StreamsPicker)),
-    );
+    // One picker per coordinator shard, each with its own cron timer.
+    let pickers: Vec<ActorId> = (0..n_shards)
+        .map(|s| {
+            sys.spawn(
+                &shard_name("streams-picker", s),
+                MailboxKind::Unbounded,
+                Box::new(|_| Box::new(picker::StreamsPicker)),
+            )
+        })
+        .collect();
 
     let priority_streams = sys.spawn(
         "priority-streams",
@@ -205,12 +234,12 @@ pub fn bootstrap_with(
     );
 
     let handles = Handles {
-        picker,
+        pickers: pickers.clone(),
         feed_router,
         distributor,
         priority_streams,
         pools,
-        updater,
+        updaters,
         enrich_stage,
         monitor,
     };
@@ -218,7 +247,14 @@ pub fn bootstrap_with(
     world.dead_letters = sys.dead_letters.clone();
 
     // -- timers ("scheduler") ------------------------------------------------
-    sys.schedule_periodic(0, cfg.pick_interval, picker, PRIORITY_NORMAL, || PickDue);
+    // The cron fans out one PickDue per shard per tick; each shard's
+    // picker claims only its own partition, so the ticks can interleave
+    // freely in the actor system.
+    for (shard, picker) in pickers.iter().enumerate() {
+        sys.schedule_periodic(0, cfg.pick_interval, *picker, PRIORITY_NORMAL, move || PickDue {
+            shard,
+        });
+    }
     sys.schedule_periodic(0, cfg.router_tick, feed_router, PRIORITY_NORMAL, || RouterTick);
     let wait = cfg.enrich_max_wait.max(1);
     sys.schedule_periodic(wait, wait / 2 + 1, enrich_stage, PRIORITY_NORMAL, || EnrichTick);
@@ -262,8 +298,14 @@ mod tests {
     #[test]
     fn bootstrap_spawns_topology() {
         let (sys, world, h) = bootstrap(AlertMixConfig::tiny()).unwrap();
-        // 7 singleton actors + one pool per registered connector.
+        // 5 singleton actors + a picker/updater pair per shard (1 here)
+        // + one pool per registered connector.
         assert_eq!(sys.cell_count(), 7 + world.connectors.connector_count());
+        assert_eq!(h.pickers.len(), 1);
+        assert_eq!(h.updaters.len(), 1);
+        // Single shard keeps the classic names.
+        assert_eq!(sys.name_of(h.pickers[0]), "streams-picker");
+        assert_eq!(sys.name_of(h.updaters[0]), "streams-updater");
         assert_eq!(world.connectors.connector_count(), 4, "classic quartet by default");
         assert_eq!(world.store.len(), 200);
         let news = world.connectors.id("news").unwrap();
@@ -275,6 +317,46 @@ mod tests {
             let pool = h.pool_for(id).expect("pool per connector");
             assert_eq!(sys.name_of(pool), format!("{}-pool", d.name));
         }
+    }
+
+    #[test]
+    fn sharded_bootstrap_spawns_a_pair_per_shard() {
+        let mut cfg = AlertMixConfig::tiny();
+        cfg.n_shards = 4;
+        let (sys, world, h) = bootstrap(cfg).unwrap();
+        assert_eq!(
+            sys.cell_count(),
+            5 + 2 * 4 + world.connectors.connector_count(),
+            "a picker/updater pair per shard"
+        );
+        assert_eq!(h.pickers.len(), 4);
+        assert_eq!(h.updaters.len(), 4);
+        assert_eq!(sys.name_of(h.pickers[2]), "streams-picker-2");
+        assert_eq!(sys.name_of(h.updaters[3]), "streams-updater-3");
+        assert_eq!(world.store.n_shards(), 4);
+        // Every shard got a slice of the seeded universe.
+        for s in 0..4 {
+            assert!(!world.store.shard(s).is_empty(), "shard {s} empty");
+        }
+    }
+
+    #[test]
+    fn sharded_short_run_moves_messages_end_to_end() {
+        let mut cfg = AlertMixConfig::tiny();
+        cfg.seed = 11;
+        cfg.n_shards = 4;
+        let (_sys, world) = run_for(cfg, 30 * MINUTE).unwrap();
+        let sent = world.queues.main.counters.sent + world.queues.priority.counters.sent;
+        let deleted = world.queues.main.counters.deleted + world.queues.priority.counters.deleted;
+        assert!(sent > 0, "pickers should enqueue due streams");
+        assert!(deleted > 0, "workers should complete and delete");
+        // Every shard's cron actually ran and claimed something.
+        for stats in world.store.shard_stats(30 * MINUTE, 0) {
+            assert!(stats.claims > 0, "shard {} never claimed", stats.shard);
+        }
+        let c = &world.counters;
+        assert_eq!(c.items_fetched, c.items_ingested + c.items_deduped, "{c:?}");
+        world.store.check_invariants().unwrap();
     }
 
     #[test]

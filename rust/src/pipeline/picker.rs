@@ -6,6 +6,12 @@
 //! due streams (in-process status) and enqueues a job per stream into the
 //! main or priority SQS queue. Streams stuck in-process past the stale
 //! window are re-picked — the paper's recovery story for lost messages.
+//!
+//! The streams bucket is partitioned into `cfg.n_shards` independent
+//! shards: one picker actor per shard, each driven by its own
+//! `PickDue { shard }` timer and claiming only from its own partition
+//! through its own pooled buffer — no shared mutable state between two
+//! shards' cron ticks.
 
 use super::messages::{PickDue, PrioritizeStream};
 use super::world::World;
@@ -16,15 +22,29 @@ pub struct StreamsPicker;
 
 impl Actor<World> for StreamsPicker {
     fn receive(&mut self, ctx: &mut Ctx, world: &mut World, msg: Msg) -> ActorResult {
-        if msg.downcast::<PickDue>().is_err() {
+        let Ok(pick) = msg.downcast::<PickDue>() else {
             return Ok(()); // ignore unknown messages
+        };
+        let shard = pick.shard;
+        if shard >= world.store.n_shards() {
+            return Ok(()); // stale timer from a differently-sharded config
+        }
+        // Self-heal after a store swap onto more shards than the world
+        // was bootstrapped with (snapshot restored with a larger
+        // n_shards): grow the buffer pool instead of panicking.
+        if world.pick_bufs.len() <= shard {
+            world.pick_bufs.resize_with(shard + 1, Vec::new);
         }
         let now = ctx.now();
-        // One recycled buffer serves every cron tick, and the store's
-        // timer wheels drain bucket-granularly into it: the steady-state
-        // pick path allocates nothing (ROADMAP streams-bucket slice).
-        let mut picked = std::mem::take(&mut world.pick_buf);
-        world.store.pick_due_into(
+        // One recycled pair buffer per shard serves every cron tick, and
+        // the shard's timer wheels drain bucket-granularly into it: the
+        // steady-state pick path allocates nothing (ROADMAP streams-bucket
+        // slice). The pick emits (id, priority) pairs, so routing to the
+        // main vs priority queue needs no re-fetch of the records this
+        // very call just claimed.
+        let mut picked = std::mem::take(&mut world.pick_bufs[shard]);
+        world.store.pick_shard_due_into(
+            shard,
             now,
             world.cfg.pick_interval,
             world.cfg.stale_after,
@@ -33,12 +53,11 @@ impl Actor<World> for StreamsPicker {
         );
         let mut to_priority = 0u64;
         let mut to_main = 0u64;
-        for id in &picked {
-            let priority = world.store.get(*id).map(|r| r.priority).unwrap_or(false);
+        for &(id, priority) in &picked {
             // Compact job body: the wire-equivalent of the production
             // system's {"stream_id":N} JSON, without formatting a String
             // per job on the enqueue hot path.
-            let body = JobBody::StreamId(*id);
+            let body = JobBody::StreamId(id);
             if priority {
                 world.queues.priority.send(now, body);
                 to_priority += 1;
@@ -48,7 +67,7 @@ impl Actor<World> for StreamsPicker {
             }
         }
         let n_picked = picked.len();
-        world.pick_buf = picked;
+        world.pick_bufs[shard] = picked;
         if n_picked == 0 {
             return Ok(());
         }
@@ -79,13 +98,25 @@ impl Actor<World> for PriorityStreams {
         }
         // Mark + pull forward in the bucket; if idle, claim immediately and
         // push straight onto the priority queue so it beats the next cron.
+        // The claim goes through the owning shard's recycled pair buffer —
+        // the priority fast path is as allocation-free as the cron.
         if world.store.prioritize(id, now) {
-            let picked = world.store.pick_due(now, 0, world.cfg.stale_after, 1);
-            for id in picked {
-                world.queues.priority.send(now, JobBody::StreamId(id));
+            let shard = world.store.shard_of(id);
+            // Self-heal after a store swap onto more shards (e.g. a
+            // snapshot restored with a larger n_shards than the world was
+            // bootstrapped with): grow the buffer pool instead of
+            // panicking on the index.
+            if world.pick_bufs.len() <= shard {
+                world.pick_bufs.resize_with(shard + 1, Vec::new);
+            }
+            let mut picked = std::mem::take(&mut world.pick_bufs[shard]);
+            world.store.pick_shard_due_into(shard, now, 0, world.cfg.stale_after, 1, &mut picked);
+            for &(picked_id, _priority) in &picked {
+                world.queues.priority.send(now, JobBody::StreamId(picked_id));
                 world.metrics.count("NumberOfMessagesSent", now, 1.0);
                 world.metrics.count("PriorityMessagesSent", now, 1.0);
             }
+            world.pick_bufs[shard] = picked;
         }
         ctx.take(1);
         Ok(())
@@ -109,12 +140,45 @@ mod tests {
             sys.spawn("p", MailboxKind::Unbounded, Box::new(|_| Box::new(StreamsPicker)));
         let mut w = world();
         // All 200 tiny-universe streams are due within the first interval.
-        sys.tell_at(w.cfg.base_poll_interval, picker, PickDue);
+        sys.tell_at(w.cfg.base_poll_interval, picker, PickDue { shard: 0 });
         sys.run_to_idle(&mut w);
         let sent = w.queues.main.counters.sent;
         assert!(sent > 0, "sent={sent}");
         let (_idle, inproc, _) = w.store.status_counts();
         assert_eq!(inproc as u64, sent, "every enqueued stream is claimed");
+    }
+
+    #[test]
+    fn sharded_pickers_claim_disjoint_partitions() {
+        let mut sys: ActorSystem<World> = ActorSystem::new(1);
+        let picker =
+            sys.spawn("p", MailboxKind::Unbounded, Box::new(|_| Box::new(StreamsPicker)));
+        let mut cfg = AlertMixConfig::tiny();
+        cfg.n_shards = 4;
+        let mut w = World::build(&cfg).unwrap();
+        // Tick shard 1 only: every claim lands in that partition.
+        sys.tell_at(w.cfg.base_poll_interval, picker, PickDue { shard: 1 });
+        sys.run_to_idle(&mut w);
+        let sent_one = w.queues.main.counters.sent;
+        assert!(sent_one > 0);
+        let (_, inproc1, _) = w.store.shard(1).status_counts();
+        let (_, inproc_total, _) = w.store.status_counts();
+        assert_eq!(inproc_total, inproc1, "only shard 1's partition claimed");
+        assert_eq!(sent_one, inproc_total as u64, "every enqueued stream is claimed");
+        // The remaining shards' ticks pick up their own partitions; no
+        // stream is claimed twice (sent tracks due-pick claims exactly).
+        for shard in [0usize, 2, 3] {
+            sys.tell_at(w.cfg.base_poll_interval, picker, PickDue { shard });
+        }
+        // A tick for an out-of-range shard (stale config) is ignored.
+        sys.tell_at(w.cfg.base_poll_interval, picker, PickDue { shard: 99 });
+        sys.run_to_idle(&mut w);
+        let sent = w.queues.main.counters.sent;
+        assert!(sent >= sent_one);
+        assert_eq!(sent, w.store.claims(), "one enqueue per claim, nothing doubled");
+        let (_, inproc_after, _) = w.store.status_counts();
+        assert_eq!(sent, inproc_after as u64);
+        w.store.check_invariants().unwrap();
     }
 
     #[test]

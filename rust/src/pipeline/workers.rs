@@ -50,7 +50,10 @@ impl Actor<World> for ChannelWorker {
             PollOutcome::NotModified => world.counters.polls_not_modified += 1,
             PollOutcome::Error => world.counters.polls_error += 1,
         }
-        let updater = world.handles().updater;
+        // Completions route to the updater owning the stream's shard:
+        // bucket writes for different shards never share a mailbox.
+        let shard = world.store.shard_of(job.stream_id);
+        let updater = world.handles().updater_for(shard);
         ctx.send(
             updater,
             StreamPolled {
@@ -128,7 +131,7 @@ mod tests {
             Box::new(move |_| Box::new(ChannelWorker { channel })),
         );
         let mut h = Handles::uniform(wk, w.connectors.len());
-        h.updater = upd;
+        h.updaters = vec![upd];
         h.enrich_stage = enr;
         w.handles = Some(h);
         (sys, w, wk)

@@ -16,7 +16,8 @@ use crate::runtime::{Batcher, BatcherConfig, CpuFallbackEnricher, EnrichBackend}
 use crate::sim::SimTime;
 use crate::sink::{ElasticLite, SinkDoc};
 use crate::sqs::{DualQueue, ReceivedMessage, RedrivePolicy};
-use crate::store::streams::{StreamRecord, StreamStore};
+use crate::store::shard::ShardedStreamStore;
+use crate::store::streams::StreamRecord;
 use crate::text::FEATURE_DIM;
 use crate::util::IdGen;
 use std::cell::RefCell;
@@ -103,7 +104,10 @@ pub struct World {
     /// The pluggable source registry: one [`crate::connector::SourceConnector`]
     /// per channel, dispatched by the worker pools.
     pub connectors: ConnectorRegistry,
-    pub store: StreamStore,
+    /// The streams bucket, partitioned into `cfg.n_shards` independent
+    /// shards behind the coordinator facade (1 shard = the classic single
+    /// coordinator).
+    pub store: ShardedStreamStore,
     pub queues: DualQueue,
     pub universe: FeedUniverse,
     pub http: HttpSim,
@@ -121,10 +125,11 @@ pub struct World {
     /// (`DualQueue::receive_prioritized_into`): one buffer serves every
     /// replenishment, so the steady-state pull loop allocates nothing.
     pub router_drain: Vec<(bool, ReceivedMessage)>,
-    /// Recycled output buffer for the picker's 5-second cron
-    /// (`StreamStore::pick_due_into`, backed by the store's timer
-    /// wheels): the steady-state pick path allocates nothing.
-    pub pick_buf: Vec<u64>,
+    /// Recycled `(stream_id, priority)` output buffers for the 5-second
+    /// cron, one per coordinator shard (`pick_shard_due_into`, backed by
+    /// each shard's timer wheels): the steady-state pick path allocates
+    /// nothing, and two shards' pickers never contend for a buffer.
+    pub pick_bufs: Vec<Vec<(u64, bool)>>,
     /// ticket -> item metadata for in-flight enrichment requests.
     pub pending_items: HashMap<u64, ItemMeta>,
     pub doc_ids: IdGen,
@@ -170,8 +175,8 @@ impl World {
         // backoff level with its next poll staggered uniformly across its
         // own effective interval. (A cold start would open with a
         // pathological 200k-feed sweep no production chart shows.)
-        let mut store = StreamStore::new();
-        store.max_backoff = cfg.max_backoff_level;
+        let mut store = ShardedStreamStore::new(cfg.n_shards);
+        store.set_max_backoff(cfg.max_backoff_level);
         for p in universe.profiles() {
             let base_interval = connectors
                 .descriptor(p.channel)
@@ -204,6 +209,8 @@ impl World {
         let mut metrics = MetricRegistry::cloudwatch();
         metrics.add_alarm("DeadLetters", cfg.dead_letter_alarm, true);
 
+        let n_shards = store.n_shards();
+
         Ok(World {
             connectors,
             store,
@@ -228,7 +235,7 @@ impl World {
             }),
             enrich_pool: EnrichBufferPool::default(),
             router_drain: Vec::new(),
-            pick_buf: Vec::new(),
+            pick_bufs: vec![Vec::new(); n_shards],
             pending_items: HashMap::new(),
             doc_ids: IdGen::new(),
             alerts: AlertBook::new(),

@@ -13,9 +13,15 @@
 //!   StreamsPickerActor's query ("streams picked earlier, but could not be
 //!   updated even after a given time elapsed will also be picked"). Both
 //!   indexes are [`wheel::TimerWheel`]s — O(1) schedule/cancel per
-//!   completion instead of B-tree node churn on every poll.
+//!   completion instead of B-tree node churn on every poll;
+//! - [`shard::ShardedStreamStore`]: the coordinator facade — N independent
+//!   `StreamStore` shards keyed by `stream_id` hash, so one picker/updater
+//!   pair per shard can run the 5-second cron concurrently. `StreamStore`
+//!   is the shard unit; the facade owns routing, aggregate counters and
+//!   the cross-shard balance report.
 
 pub mod persist;
+pub mod shard;
 pub mod streams;
 pub mod wheel;
 

@@ -21,15 +21,23 @@
 //! identical to the pre-wheel one. The transient `priority_pending` flag
 //! is likewise not serialized — a crash drops at most one pending bump,
 //! and the stale re-pick polls that stream on restart anyway.
+//!
+//! The shard layout never crosses the wire either: `snapshot` merges all
+//! shards deterministically by id, and `restore` re-partitions the
+//! records into whatever `n_shards` the restoring deployment runs — a
+//! snapshot taken on a 1-shard coordinator restores onto 8 shards and
+//! vice versa, byte-identically on the way back out.
 
-use super::streams::{StreamRecord, StreamStatus, StreamStore};
+use super::shard::ShardedStreamStore;
+use super::streams::{StreamRecord, StreamStatus};
 use crate::connector::ConnectorRegistry;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 
-/// Serialize the full bucket (deterministic key order via the Json codec).
+/// Serialize the full bucket (deterministic key order via the Json codec;
+/// shards merged by id, so the output is independent of the shard count).
 /// `channels` maps registry ids to wire names.
-pub fn snapshot(store: &StreamStore, channels: &ConnectorRegistry) -> String {
+pub fn snapshot(store: &ShardedStreamStore, channels: &ConnectorRegistry) -> String {
     let mut records = Vec::new();
     let mut sorted: Vec<&StreamRecord> = store.records().collect();
     sorted.sort_by_key(|r| r.id);
@@ -71,24 +79,29 @@ pub fn snapshot(store: &StreamStore, channels: &ConnectorRegistry) -> String {
     }
     Json::obj()
         .set("version", 1u64)
-        .set("max_backoff", store.max_backoff as u64)
+        .set("max_backoff", store.max_backoff() as u64)
         .set("records", Json::Arr(records))
         .to_string()
 }
 
-/// Restore a bucket from a snapshot. Channel names are resolved against
-/// `channels`; unknown names (snapshots from deployments serving more
-/// sources) are interned descriptor-only so nothing is lost — their jobs
-/// are counted as unrouted and DLQ'd until a connector is registered
-/// under that name.
-pub fn restore(text: &str, channels: &mut ConnectorRegistry) -> Result<StreamStore> {
+/// Restore a bucket from a snapshot into an `n_shards`-way coordinator
+/// (records re-partition by id hash, whatever layout wrote the snapshot).
+/// Channel names are resolved against `channels`; unknown names
+/// (snapshots from deployments serving more sources) are interned
+/// descriptor-only so nothing is lost — their jobs are counted as
+/// unrouted and DLQ'd until a connector is registered under that name.
+pub fn restore(
+    text: &str,
+    channels: &mut ConnectorRegistry,
+    n_shards: usize,
+) -> Result<ShardedStreamStore> {
     let j = Json::parse(text).map_err(|e| anyhow!("snapshot parse: {e}"))?;
     let version = j.get("version").and_then(Json::as_u64).unwrap_or(0);
     if version != 1 {
         bail!("unsupported snapshot version {version}");
     }
-    let mut store = StreamStore::new();
-    store.max_backoff = j.get("max_backoff").and_then(Json::as_u64).unwrap_or(4) as u8;
+    let mut store = ShardedStreamStore::new(n_shards);
+    store.set_max_backoff(j.get("max_backoff").and_then(Json::as_u64).unwrap_or(4) as u8);
     let records = j
         .get("records")
         .and_then(Json::as_arr)
@@ -135,11 +148,11 @@ mod tests {
         ConnectorRegistry::from_config(&AlertMixConfig::default()).unwrap()
     }
 
-    fn populated(reg: &ConnectorRegistry) -> StreamStore {
+    fn populated(reg: &ConnectorRegistry, n_shards: usize) -> ShardedStreamStore {
         let news = reg.id("news").unwrap();
         let twitter = reg.id("twitter").unwrap();
-        let mut s = StreamStore::new();
-        s.max_backoff = 5;
+        let mut s = ShardedStreamStore::new(n_shards);
+        s.set_max_backoff(5);
         for id in 1..=20u64 {
             let mut r = StreamRecord::new(
                 id,
@@ -151,11 +164,15 @@ mod tests {
             r.next_due = id * 1_000;
             s.insert(r);
         }
-        // Exercise state: pick a few, complete some with etags.
-        let picked = s.pick_due(25_000, 0, 60_000, 8);
-        for (i, id) in picked.iter().enumerate() {
-            if i % 2 == 0 {
-                s.complete(*id, 30_000, PollOutcome::Items(2), Some(format!("e{id}")), Some(9));
+        // Exercise state: pick everything due, complete half with etags.
+        // Keyed by id (not pick position) so the resulting record state is
+        // identical under any shard layout — the byte-equality tests below
+        // rely on that.
+        let picked = s.pick_due(25_000, 0, 60_000, usize::MAX);
+        assert_eq!(picked.len(), 20);
+        for id in picked {
+            if id % 2 == 0 {
+                s.complete(id, 30_000, PollOutcome::Items(2), Some(format!("e{id}")), Some(9));
             } // odd ones stay in-process (simulated crash)
         }
         s.prioritize(15, 31_000);
@@ -165,11 +182,11 @@ mod tests {
     #[test]
     fn roundtrip_preserves_everything() {
         let mut reg = registry();
-        let store = populated(&reg);
+        let store = populated(&reg, 1);
         let snap = snapshot(&store, &reg);
-        let restored = restore(&snap, &mut reg).unwrap();
+        let restored = restore(&snap, &mut reg, 1).unwrap();
         assert_eq!(restored.len(), store.len());
-        assert_eq!(restored.max_backoff, store.max_backoff);
+        assert_eq!(restored.max_backoff(), store.max_backoff());
         assert_eq!(restored.status_counts(), store.status_counts());
         for id in 1..=20u64 {
             let a = store.get(id).unwrap();
@@ -187,16 +204,41 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_is_independent_of_shard_count_and_repartitions() {
+        // The wire format never sees the shard layout: a 4-shard
+        // coordinator emits byte-identically what a 1-shard one does, and
+        // a snapshot restores across any shard-count change.
+        let mut reg = registry();
+        let single = populated(&reg, 1);
+        let sharded = populated(&reg, 4);
+        let snap = snapshot(&single, &reg);
+        assert_eq!(snap, snapshot(&sharded, &reg), "merge-by-id must hide the layout");
+
+        for &(from, to) in &[(1usize, 8usize), (8, 1), (4, 3)] {
+            let src = populated(&reg, from);
+            let snap = snapshot(&src, &reg);
+            let dst = restore(&snap, &mut reg, to).unwrap();
+            assert_eq!(dst.n_shards(), to);
+            assert_eq!(dst.len(), src.len());
+            assert_eq!(dst.status_counts(), src.status_counts());
+            dst.check_invariants().unwrap();
+            // And the way back out is byte-identical.
+            assert_eq!(snapshot(&dst, &reg), snap, "{from}->{to}");
+        }
+    }
+
+    #[test]
     fn crashed_inprocess_streams_recovered_after_restart() {
         let mut reg = registry();
-        let store = populated(&reg);
+        let store = populated(&reg, 1);
         let (_, inproc_before, _) = store.status_counts();
         assert!(inproc_before > 0, "test needs crashed streams");
-        let mut restored = restore(&snapshot(&store, &reg), &mut reg).unwrap();
+        // Restore onto a *different* shard count: recovery must not care.
+        let mut restored = restore(&snapshot(&store, &reg), &mut reg, 4).unwrap();
         // After restart, the stale re-pick recovers the in-process rows.
         let repicked = restored.pick_due(25_000 + 120_000, 0, 60_000, 100);
         assert!(repicked.len() >= inproc_before);
-        assert_eq!(restored.stale_repicks as usize, inproc_before);
+        assert_eq!(restored.stale_repicks() as usize, inproc_before);
     }
 
     #[test]
@@ -218,13 +260,13 @@ mod tests {
             },
             conn,
         );
-        let mut store = populated(&newer);
+        let mut store = populated(&newer, 2);
         store.insert(StreamRecord::new(777, telemetry, "http://t/1".into(), 60_000, 0));
 
         let snap = snapshot(&store, &newer);
         let mut older = registry();
         assert!(older.id("telemetry").is_none());
-        let restored = restore(&snap, &mut older).unwrap();
+        let restored = restore(&snap, &mut older, 2).unwrap();
         let interned = older.id("telemetry").expect("unknown name interned on restore");
         assert!(older.connector(interned).is_none(), "descriptor-only");
         assert_eq!(restored.get(777).unwrap().channel, interned);
@@ -232,7 +274,7 @@ mod tests {
         let snap2 = snapshot(&restored, &older);
         assert!(snap2.contains("\"telemetry\""));
         let mut third = registry();
-        let again = restore(&snap2, &mut third).unwrap();
+        let again = restore(&snap2, &mut third, 1).unwrap();
         assert_eq!(
             third.name(again.get(777).unwrap().channel),
             Some("telemetry")
@@ -243,9 +285,10 @@ mod tests {
     fn restore_rebuilds_wheel_state_and_pick_parity_holds() {
         // The wheels are derived state: a restored store must pick the
         // same streams in the same order as the original, immediately.
+        // (Same shard count on both sides: order parity is per-shard.)
         let mut reg = registry();
-        let mut store = populated(&reg);
-        let mut restored = restore(&snapshot(&store, &reg), &mut reg).unwrap();
+        let mut store = populated(&reg, 1);
+        let mut restored = restore(&snapshot(&store, &reg), &mut reg, 1).unwrap();
         restored.check_invariants().unwrap();
         for step in 0..6u64 {
             let now = 40_000 + step * 150_000;
@@ -264,8 +307,8 @@ mod tests {
     #[test]
     fn rejects_garbage_and_bad_versions() {
         let mut reg = registry();
-        assert!(restore("not json", &mut reg).is_err());
-        assert!(restore("{\"version\": 99, \"records\": []}", &mut reg).is_err());
-        assert!(restore("{\"version\": 1}", &mut reg).is_err());
+        assert!(restore("not json", &mut reg, 1).is_err());
+        assert!(restore("{\"version\": 99, \"records\": []}", &mut reg, 1).is_err());
+        assert!(restore("{\"version\": 1}", &mut reg, 4).is_err());
     }
 }

@@ -226,9 +226,9 @@ impl StreamStore {
     /// (marks InProcess) and returns them ordered by due time — the atomic
     /// pick-and-mark the paper performs against Couchbase.
     ///
-    /// Allocating convenience wrapper over [`Self::pick_due_into`] (tests
-    /// and the rare priority path; the 5-second cron uses the pooled
-    /// buffer on `World`).
+    /// Allocating convenience wrapper over [`Self::pick_due_into`] that
+    /// drops the priority flags (tests and reporting; the 5-second cron
+    /// uses the pooled pair buffers on `World`).
     pub fn pick_due(
         &mut self,
         now: SimTime,
@@ -238,21 +238,24 @@ impl StreamStore {
     ) -> Vec<u64> {
         let mut picked = Vec::new();
         self.pick_due_into(now, horizon, stale_after, limit, &mut picked);
-        picked
+        picked.into_iter().map(|(id, _priority)| id).collect()
     }
 
-    /// [`Self::pick_due`] writing into a caller-owned buffer (cleared
-    /// first): the cron tick recycles one buffer on the `World`, so the
-    /// steady-state pick path allocates nothing. Each wheel drain is
-    /// bucket-granular and sorts only the drained slice, so pick order by
-    /// due time is preserved exactly.
+    /// [`Self::pick_due`] writing `(stream_id, priority)` pairs into a
+    /// caller-owned buffer (cleared first): the cron tick recycles one
+    /// buffer per shard on the `World`, so the steady-state pick path
+    /// allocates nothing. The priority flag is read at claim time, so the
+    /// picker routes each job to the right queue without re-fetching the
+    /// record it just claimed. Each wheel drain is bucket-granular and
+    /// sorts only the drained slice, so pick order by due time is
+    /// preserved exactly.
     pub fn pick_due_into(
         &mut self,
         now: SimTime,
         horizon: SimTime,
         stale_after: SimTime,
         limit: usize,
-        picked: &mut Vec<u64>,
+        picked: &mut Vec<(u64, bool)>,
     ) {
         picked.clear();
         let mut scratch = std::mem::take(&mut self.scratch);
@@ -270,7 +273,7 @@ impl StreamStore {
             rec.status = StreamStatus::InProcess { since: now };
             rec.wheel = self.inprocess.schedule(now, id);
             self.stale_repicks += 1;
-            picked.push(id);
+            picked.push((id, rec.priority));
         }
 
         // Then due idle streams.
@@ -287,7 +290,7 @@ impl StreamStore {
                 rec.status = StreamStatus::InProcess { since: now };
                 rec.wheel = self.inprocess.schedule(now, id);
                 self.claims += 1;
-                picked.push(id);
+                picked.push((id, rec.priority));
             }
         }
         scratch.clear();
@@ -594,15 +597,37 @@ mod tests {
             a.insert(rec(id, id * 10));
             b.insert(rec(id, id * 10));
         }
-        let mut buf = vec![99, 98, 97]; // stale content must be cleared
+        let mut buf = vec![(99, true), (98, false), (97, true)]; // stale content must be cleared
         b.pick_due_into(60, 0, 60_000, 4, &mut buf);
-        assert_eq!(a.pick_due(60, 0, 60_000, 4), buf);
+        let ids = |pairs: &[(u64, bool)]| pairs.iter().map(|p| p.0).collect::<Vec<_>>();
+        assert_eq!(a.pick_due(60, 0, 60_000, 4), ids(&buf));
         // Reuse the same buffer for the next tick: capacity survives.
         let cap = buf.capacity();
         b.pick_due_into(200, 0, 60_000, 4, &mut buf);
-        assert_eq!(a.pick_due(200, 0, 60_000, 4), buf);
+        assert_eq!(a.pick_due(200, 0, 60_000, 4), ids(&buf));
         assert!(buf.capacity() >= cap);
         b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pick_pairs_carry_the_priority_flag_at_claim_time() {
+        // The picker routes jobs to the priority queue straight off the
+        // pair — no re-fetch of the record it just claimed.
+        let mut s = StreamStore::new();
+        s.insert(rec(1, 100));
+        s.insert(rec(2, 200));
+        assert!(s.prioritize(2, 50));
+        let mut buf = Vec::new();
+        s.pick_due_into(300, 0, 60_000, 10, &mut buf);
+        assert_eq!(buf, vec![(2, true), (1, false)]);
+        // A stale re-pick of a prioritized claim also carries the flag:
+        // the bump landed mid-claim, so priority is set on the record.
+        // (Stale order is by claim time then id: both claims date from
+        // t=300, so id order.)
+        s.prioritize(2, 400);
+        s.pick_due_into(700_000, 0, 60_000, 10, &mut buf);
+        assert_eq!(buf, vec![(1, false), (2, true)]);
+        s.check_invariants().unwrap();
     }
 
     #[test]

@@ -156,7 +156,9 @@ fn snapshot_with_five_channels_restores_on_four_channel_deployment() {
     )
     .unwrap();
     assert!(world2.connectors.id("youtube").is_none());
-    let restored = persist::restore(&snap, &mut world2.connectors).unwrap();
+    // Restore onto a 2-shard coordinator: unknown names intern the same
+    // way regardless of the restoring deployment's shard layout.
+    let restored = persist::restore(&snap, &mut world2.connectors, 2).unwrap();
     assert_eq!(restored.len(), world.store.len());
     let yt2 = world2.connectors.id("youtube").expect("interned on restore");
     assert!(world2.connectors.connector(yt2).is_none(), "descriptor-only");

@@ -77,7 +77,7 @@ fn fault_injection_self_heals() {
     assert_eq!(restarts, failed, "every failure restarts the routee");
     // Crashed jobs leave streams in-process; the stale re-pick recovers
     // them ("it will automatically be picked in next cycles").
-    assert!(world.store.stale_repicks > 0, "stale re-picks should recover crashed streams");
+    assert!(world.store.stale_repicks() > 0, "stale re-picks should recover crashed streams");
     // The system keeps making progress regardless.
     assert!(world.counters.jobs_completed > 100);
 }
@@ -171,9 +171,9 @@ fn bounded_mailboxes_shed_instead_of_oom() {
     let q = &world.queues.main.counters;
     let redelivered = q.received > q.deleted + world.queues.main.in_flight_count() as u64;
     assert!(
-        redelivered || world.store.stale_repicks > 0 || q.redriven > 0,
+        redelivered || world.store.stale_repicks() > 0 || q.redriven > 0,
         "no recovery path exercised: {q:?}, stale={}",
-        world.store.stale_repicks
+        world.store.stale_repicks()
     );
 }
 
@@ -231,18 +231,23 @@ fn snapshot_restore_restart_recovers() {
 
     // Restart: fresh topology, restored bucket (ETags and schedules
     // survive; the SQS queue contents are lost with the process, exactly
-    // the failure the paper's re-pick covers).
+    // the failure the paper's re-pick covers). The restored deployment
+    // runs 4 coordinator shards: the 1-shard snapshot re-partitions on
+    // restore, and recovery must not care about the layout change.
     // The restored process starts its own clock at 0; snapshot timestamps
     // are from the old epoch, so in-process rows (since <= 1h) become
     // stale once now > since + stale_after — run long enough to cover it.
-    let (mut sys2, mut world2, _h2) = bootstrap(c).unwrap();
-    world2.store = persist::restore(&snap, &mut world2.connectors).unwrap();
+    let mut c2 = c;
+    c2.n_shards = 4;
+    let (mut sys2, mut world2, _h2) = bootstrap(c2.clone()).unwrap();
+    world2.store = persist::restore(&snap, &mut world2.connectors, c2.n_shards).unwrap();
+    world2.store.check_invariants().unwrap();
     sys2.run_until(&mut world2, 3 * HOUR);
     world2.flush_enrichment(3 * HOUR);
 
     assert!(world2.counters.jobs_completed > 0, "system resumes after restart");
     if inproc_at_crash > 0 {
-        assert!(world2.store.stale_repicks > 0, "crashed in-process streams re-picked");
+        assert!(world2.store.stale_repicks() > 0, "crashed in-process streams re-picked");
     }
     // ETags survived the restart: conditional gets keep working.
     assert!(world2.counters.polls_not_modified > 0);

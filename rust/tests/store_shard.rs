@@ -1,0 +1,289 @@
+//! Differential property tests: the [`ShardedStreamStore`] coordinator
+//! facade against a single [`StreamStore`] oracle.
+//!
+//! The shard unit *is* `StreamStore` (itself differential-tested against
+//! an ordered-index oracle in `store_wheel.rs`), so what these tests
+//! isolate is exactly the layer this PR added: hash routing, per-shard
+//! picks, aggregate counters, and snapshot re-partitioning. Pick results
+//! are compared as **sets** per tick — the sharded coordinator's
+//! documented relaxation is that global pick order becomes per-shard due
+//! order — while statuses, schedules and counters must match exactly.
+
+use alertmix::connector::ChannelId;
+use alertmix::sim::SimTime;
+use alertmix::store::persist;
+use alertmix::store::shard::{shard_index, ShardedStreamStore};
+use alertmix::store::streams::{PollOutcome, StreamRecord, StreamStore};
+use alertmix::util::prop::forall;
+
+fn rec(id: u64, due: SimTime, base_interval: SimTime) -> StreamRecord {
+    let mut r =
+        StreamRecord::new(id, ChannelId(0), format!("http://feed/{id}"), base_interval, 0);
+    r.next_due = due;
+    r
+}
+
+/// Pick from both stores with an unbinding limit and compare as sets.
+/// Returns the picked ids (the common set) or None on divergence.
+fn pick_both(
+    sharded: &mut ShardedStreamStore,
+    oracle: &mut StreamStore,
+    now: SimTime,
+    horizon: SimTime,
+    stale_after: SimTime,
+) -> Option<Vec<u64>> {
+    let mut got = sharded.pick_due(now, horizon, stale_after, usize::MAX);
+    let mut want = oracle.pick_due(now, horizon, stale_after, usize::MAX);
+    got.sort_unstable();
+    want.sort_unstable();
+    if got != want {
+        return None;
+    }
+    Some(got)
+}
+
+#[test]
+fn four_shard_store_matches_single_store_oracle_on_500_random_sequences() {
+    forall("4-shard coordinator == single-store oracle (pick sets)", 500, |g| {
+        let mut s = ShardedStreamStore::new(4);
+        let mut o = StreamStore::new();
+        let mut now: SimTime = 0;
+        let mut next_id = 0u64;
+        for _ in 0..g.usize(1, 60) {
+            now += g.u64(0, 400_000);
+            match g.u64(0, 7) {
+                0 => {
+                    // Insert with near or far due dates and varied cadence.
+                    next_id += 1;
+                    let due = now.saturating_add(g.u64(0, 40_000_000));
+                    let base = [60_000, 300_000, 1_800_000][g.usize(0, 3)];
+                    s.insert(rec(next_id, due, base));
+                    o.insert(rec(next_id, due, base));
+                }
+                1 | 2 => {
+                    let horizon = g.u64(0, 10_000);
+                    let Some(picked) = pick_both(&mut s, &mut o, now, horizon, 600_000)
+                    else {
+                        return false;
+                    };
+                    for id in picked {
+                        if g.chance(0.75) {
+                            let outcome = if g.chance(0.5) {
+                                PollOutcome::Items(1)
+                            } else {
+                                PollOutcome::NotModified
+                            };
+                            let a = s.complete(id, now, outcome, None, None);
+                            let b = o.complete(id, now, outcome, None, None);
+                            if a != b {
+                                return false;
+                            }
+                        } // else crash: stays in-process for the stale path
+                    }
+                }
+                3 if next_id > 0 => {
+                    let id = g.u64(1, next_id + 1);
+                    if s.prioritize(id, now) != o.prioritize(id, now) {
+                        return false;
+                    }
+                }
+                4 if next_id > 0 => {
+                    let id = g.u64(1, next_id + 1);
+                    let a = s.remove(id).map(|r| r.id);
+                    let b = o.remove(id).map(|r| r.id);
+                    if a != b {
+                        return false;
+                    }
+                }
+                5 if next_id > 0 => {
+                    // Late / double completes, including unknown ids.
+                    let id = g.u64(1, next_id + 3);
+                    let a = s.complete(id, now, PollOutcome::Error, None, None);
+                    let b = o.complete(id, now, PollOutcome::Error, None, None);
+                    if a != b {
+                        return false;
+                    }
+                }
+                _ => {
+                    // Big horizon sweep: exercises coarse wheel levels in
+                    // every shard at once.
+                    let Some(picked) = pick_both(&mut s, &mut o, now, 60_000_000, 600_000)
+                    else {
+                        return false;
+                    };
+                    for id in picked {
+                        let a = s.complete(id, now + 1, PollOutcome::Items(2), None, None);
+                        let b = o.complete(id, now + 1, PollOutcome::Items(2), None, None);
+                        if a != b {
+                            return false;
+                        }
+                    }
+                }
+            }
+            if s.check_invariants().is_err() {
+                return false;
+            }
+        }
+        // Terminal cross-checks: same population, same schedules, same
+        // flags, and counters aggregate across shards to the oracle's.
+        if s.late_completions() != o.late_completions
+            || s.stale_repicks() != o.stale_repicks
+            || s.claims() != o.claims
+            || s.len() != o.len()
+            || s.status_counts() != o.status_counts()
+        {
+            return false;
+        }
+        for orec in o.records() {
+            let srec = match s.get(orec.id) {
+                Some(r) => r,
+                None => return false,
+            };
+            if srec.status != orec.status
+                || srec.next_due != orec.next_due
+                || srec.priority != orec.priority
+                || srec.backoff_level != orec.backoff_level
+                || srec.polls != orec.polls
+            {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn bounded_shard_picks_partition_the_oracles_unbounded_pick() {
+    // A binding limit fills shard-by-shard (documented), but whatever is
+    // claimed must still be a subset of what the single store would have
+    // claimed, and repeated ticks drain exactly the oracle's set.
+    let mut s = ShardedStreamStore::new(4);
+    let mut o = StreamStore::new();
+    for id in 1..=200u64 {
+        let due = (id * 37) % 5_000;
+        s.insert(rec(id, due, 300_000));
+        o.insert(rec(id, due, 300_000));
+    }
+    let oracle_set = {
+        let mut v = o.pick_due(10_000, 0, 600_000, usize::MAX);
+        v.sort_unstable();
+        v
+    };
+    let mut claimed = Vec::new();
+    loop {
+        let batch = s.pick_due(10_000, 0, 600_000, 17);
+        if batch.is_empty() {
+            break;
+        }
+        assert!(batch.len() <= 17, "limit respected across shards");
+        claimed.extend(batch);
+    }
+    claimed.sort_unstable();
+    assert_eq!(claimed, oracle_set, "bounded ticks drain exactly the oracle's set");
+    s.check_invariants().unwrap();
+}
+
+#[test]
+fn snapshot_repartition_roundtrip_1_to_8_and_back_keeps_pick_parity() {
+    use alertmix::config::AlertMixConfig;
+    use alertmix::connector::ConnectorRegistry;
+
+    let mut reg = ConnectorRegistry::from_config(&AlertMixConfig::default()).unwrap();
+    let news = reg.id("news").unwrap();
+
+    // A 1-shard coordinator with mixed state: idle, claimed, prioritized,
+    // backed-off, far-future.
+    let mut one = ShardedStreamStore::new(1);
+    for id in 1..=120u64 {
+        let mut r = StreamRecord::new(id, news, format!("http://s/{id}"), 300_000, 0);
+        r.next_due = (id * 7_919) % 2_000_000;
+        if id % 9 == 0 {
+            r.backoff_level = 3;
+        }
+        one.insert(r);
+    }
+    let picked = one.pick_due(300_000, 0, 600_000, usize::MAX);
+    for id in picked {
+        if id % 3 != 0 {
+            one.complete(id, 310_000, PollOutcome::Items(1), Some(format!("e{id}")), None);
+        } // every third stays in-process (crash)
+    }
+    one.prioritize(11, 320_000);
+
+    // 1 -> 8: same records, every shard holds its hash partition.
+    let snap1 = persist::snapshot(&one, &reg);
+    let mut eight = persist::restore(&snap1, &mut reg, 8).unwrap();
+    assert_eq!(eight.n_shards(), 8);
+    assert_eq!(eight.len(), one.len());
+    assert_eq!(eight.status_counts(), one.status_counts());
+    eight.check_invariants().unwrap();
+    for r in eight.records() {
+        assert_eq!(
+            eight.shard(shard_index(r.id, 8)).get(r.id).map(|x| x.id),
+            Some(r.id)
+        );
+    }
+
+    // Pick parity after restore: same sets at every probe time, and
+    // completing them keeps the two coordinators in lockstep.
+    let mut one_live = persist::restore(&snap1, &mut reg, 1).unwrap();
+    for step in 0..6u64 {
+        let now = 400_000 + step * 900_000;
+        let mut a = one_live.pick_due(now, 5_000, 600_000, usize::MAX);
+        let mut b = eight.pick_due(now, 5_000, 600_000, usize::MAX);
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "pick-set divergence at t={now}");
+        for id in a {
+            assert_eq!(
+                one_live.complete(id, now + 10, PollOutcome::NotModified, None, None),
+                eight.complete(id, now + 10, PollOutcome::NotModified, None, None)
+            );
+        }
+    }
+
+    // 8 -> 1: the merged snapshot is byte-identical to what the 1-shard
+    // twin emits, and restores back into a single coordinator.
+    let snap8 = persist::snapshot(&eight, &reg);
+    assert_eq!(snap8, persist::snapshot(&one_live, &reg), "wire format hides the layout");
+    let back = persist::restore(&snap8, &mut reg, 1).unwrap();
+    assert_eq!(back.n_shards(), 1);
+    assert_eq!(back.len(), eight.len());
+    assert_eq!(back.status_counts(), eight.status_counts());
+    back.check_invariants().unwrap();
+    assert_eq!(persist::snapshot(&back, &reg), snap8, "8->1 round trip is lossless");
+}
+
+#[test]
+fn prop_repartition_preserves_every_record_across_random_shard_counts() {
+    forall("snapshot re-partitions losslessly for any shard count", 60, |g| {
+        let mut reg = alertmix::connector::ConnectorRegistry::from_config(
+            &alertmix::config::AlertMixConfig::default(),
+        )
+        .unwrap();
+        let from = g.usize(1, 9);
+        let to = g.usize(1, 9);
+        let mut src = ShardedStreamStore::new(from);
+        let n = g.usize(1, 80);
+        for id in 1..=n as u64 {
+            src.insert(rec(id, g.u64(0, 10_000_000), 300_000));
+        }
+        // Random claims so statuses vary.
+        let picked = src.pick_due(g.u64(0, 5_000_000), 0, 600_000, usize::MAX);
+        for id in picked {
+            if g.chance(0.5) {
+                src.complete(id, 6_000_000, PollOutcome::Items(1), None, None);
+            }
+        }
+        let snap = persist::snapshot(&src, &reg);
+        let dst = match persist::restore(&snap, &mut reg, to) {
+            Ok(d) => d,
+            Err(_) => return false,
+        };
+        dst.n_shards() == to
+            && dst.len() == src.len()
+            && dst.status_counts() == src.status_counts()
+            && dst.check_invariants().is_ok()
+            && persist::snapshot(&dst, &reg) == snap
+    });
+}
