@@ -4,6 +4,10 @@
 #                            suite (+ clippy -D warnings when installed)
 #   make example-connectors  run examples/five_sources.rs (all five source
 #                            connectors live end to end; asserts delivery)
+#   make chaos               pinned-seed chaos day: full fault plan, crash +
+#                            restore mid-outage, asserts the delivery-
+#                            conservation invariant (failures print the seed
+#                            and FaultPlan JSON needed for a replay)
 #   make bench-ingest        refresh BENCH_ingest.json (ingest hot-path numbers)
 #   make bench-sqs           refresh BENCH_sqs.json (SQS hot-path numbers)
 #   make bench-store         refresh BENCH_store.json (streams-bucket pick/complete
@@ -16,7 +20,12 @@ CARGO ?= cargo
 # Coordinator shards for bench-store (1 = classic single coordinator).
 SHARDS ?= 1
 
-.PHONY: verify example-connectors bench-ingest bench-sqs bench-store bench artifacts
+.PHONY: verify example-connectors chaos bench-ingest bench-sqs bench-store bench artifacts
+
+# Pinned seed so CI failures replay bit-for-bit; override for exploration:
+#   make chaos CHAOS_SEED=99 CHAOS_FEEDS=10000
+CHAOS_SEED ?= 17
+CHAOS_FEEDS ?= 2000
 
 # The clippy gate covers lib + bins (not --all-targets: the bench/test
 # surface is exercised by `cargo test` and the CI bench smoke instead).
@@ -30,6 +39,10 @@ verify:
 
 example-connectors:
 	cd rust && $(CARGO) run --release --example five_sources
+
+chaos:
+	cd rust && CHAOS_SEED=$(CHAOS_SEED) CHAOS_FEEDS=$(CHAOS_FEEDS) \
+		$(CARGO) run --release --example chaos_day
 
 bench-ingest:
 	cd rust && $(CARGO) bench --bench bench_ingest

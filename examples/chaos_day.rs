@@ -1,0 +1,167 @@
+//! Chaos day: the self-asserting fault-injection harness.
+//!
+//! Runs the full pipeline under the kitchen-sink `FaultPlan` — connector
+//! errors/timeouts/429s, enrichment failures, SQS duplicate + delayed
+//! redelivery, sink partial bulk failures, periodic brownout bursts,
+//! scripted outages, circuit breakers — then crashes mid-outage,
+//! restores the streams bucket from its snapshot, and rides out a second
+//! leg. After each leg it checks **delivery conservation**:
+//!
+//! ```text
+//! items_fetched == docs_indexed + items_deduped
+//!                + enrich_poisoned + docs_poisoned      (accounted)
+//! docs_indexed  == sink.doc_count()                     (exactly once)
+//! ```
+//!
+//! Any violation prints the seed and the exact `FaultPlan` JSON needed to
+//! replay the run bit-for-bit, then exits non-zero (CI wires this up via
+//! `make chaos`).
+//!
+//! ```bash
+//! cargo run --release --example chaos_day                 # default seed
+//! CHAOS_SEED=7 CHAOS_FEEDS=2000 cargo run --release --example chaos_day
+//! ```
+
+use alertmix::config::AlertMixConfig;
+use alertmix::fault::{FaultPlan, FaultSite, Outage};
+use alertmix::pipeline::{bootstrap, World};
+use alertmix::sim::{HOUR, MINUTE};
+use alertmix::store::persist;
+
+fn fail(world: &World, seed: u64, label: &str, msg: String) -> ! {
+    eprintln!("chaos_day FAILED [{label}]: {msg}");
+    eprintln!("replay with: CHAOS_SEED={seed} and fault plan:");
+    eprintln!("  {}", world.fault.plan());
+    std::process::exit(2);
+}
+
+fn check_conservation(world: &World, seed: u64, label: &str) {
+    let c = &world.counters;
+    let fc = &world.fault.counters;
+    let sc = &world.sink.counters;
+    let accounted = sc.docs_indexed + c.items_deduped + fc.enrich_poisoned + sc.docs_poisoned;
+    if c.items_fetched != accounted {
+        fail(
+            world,
+            seed,
+            label,
+            format!(
+                "conservation: fetched {} != indexed {} + deduped {} + enrich_poisoned {} + docs_poisoned {}",
+                c.items_fetched, sc.docs_indexed, c.items_deduped, fc.enrich_poisoned, sc.docs_poisoned
+            ),
+        );
+    }
+    if world.sink.doc_count() as u64 != sc.docs_indexed {
+        fail(
+            world,
+            seed,
+            label,
+            format!(
+                "exactly-once: doc_count {} != docs_indexed {}",
+                world.sink.doc_count(),
+                sc.docs_indexed
+            ),
+        );
+    }
+    if world.enrich_retry_depth() != 0 || world.sink.retry_depth() != 0 {
+        fail(
+            world,
+            seed,
+            label,
+            format!(
+                "retry queues not drained: enrich {} sink {}",
+                world.enrich_retry_depth(),
+                world.sink.retry_depth()
+            ),
+        );
+    }
+    let q = &world.queues;
+    let sent = q.main.counters.sent + q.priority.counters.sent;
+    let deleted = q.main.counters.deleted + q.priority.counters.deleted;
+    let rest = q.total_visible() as u64
+        + (q.main.in_flight_count() + q.priority.in_flight_count()) as u64
+        + (q.main.dead_letter_count() + q.priority.dead_letter_count()) as u64;
+    if sent != deleted + rest {
+        fail(world, seed, label, format!("queue conservation: sent {sent} != deleted {deleted} + outstanding {rest}"));
+    }
+    println!(
+        "[{label}] conservation OK: fetched {} = indexed {} + deduped {} + poisoned {}+{}",
+        c.items_fetched, sc.docs_indexed, c.items_deduped, fc.enrich_poisoned, sc.docs_poisoned
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let seed: u64 = std::env::var("CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(17);
+    let feeds: usize = std::env::var("CHAOS_FEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(5_000);
+
+    let mut cfg = AlertMixConfig { seed, n_feeds: feeds, ..AlertMixConfig::tiny() };
+    cfg.use_xla = false;
+    cfg.fault = FaultPlan {
+        // Scripted outages on top of the chaotic rates: a 30-min connector
+        // blackout (trips breakers) and a 15-min sink brownout.
+        outages: vec![
+            Outage { site: FaultSite::ConnectorPoll, from: 2 * HOUR, until: 2 * HOUR + 30 * MINUTE },
+            Outage { site: FaultSite::SinkFlush, from: HOUR, until: HOUR + 15 * MINUTE },
+        ],
+        ..FaultPlan::chaotic()
+    };
+    println!(
+        "chaos_day: {} feeds, seed {}, 2 legs (crash mid-outage at 2h15m, restore, +4h)",
+        feeds, seed
+    );
+    println!("fault plan: {}", cfg.fault);
+
+    // -- Leg 1: run into the connector outage, crash in the middle of it.
+    let wall = std::time::Instant::now();
+    let (mut sys, mut world, _h) = bootstrap(cfg.clone())?;
+    // Genuine origin throttling on top of injected faults (the simulated
+    // HTTP layer's own 429 path).
+    world.http.cfg.rate_limit_rate = 0.01;
+    sys.run_until(&mut world, 2 * HOUR + 15 * MINUTE);
+    let (_, inproc_at_crash, _) = world.store.status_counts();
+    let snap = persist::snapshot(&world.store, &world.connectors);
+    world.flush_enrichment(2 * HOUR + 15 * MINUTE);
+    println!("\n== leg 1 (crashed mid-outage, {} streams in-process) ==", inproc_at_crash);
+    println!("{}", world.recovery_table());
+    check_conservation(&world, seed, "leg 1");
+    if world.fault.counters.total_injected() == 0 {
+        fail(&world, seed, "leg 1", "no faults injected — the chaos plan never fired".into());
+    }
+    if world.fault.counters.breaker_opens == 0 {
+        fail(&world, seed, "leg 1", "30-min connector outage failed to trip a breaker".into());
+    }
+    drop(sys);
+
+    // -- Leg 2: restore the bucket, ride out the (replayed) outages.
+    let (mut sys2, mut world2, _h2) = bootstrap(cfg.clone())?;
+    world2.http.cfg.rate_limit_rate = 0.01;
+    world2.store = persist::restore(&snap, &mut world2.connectors, cfg.n_shards)?;
+    world2.store.check_invariants().map_err(anyhow::Error::msg)?;
+    sys2.run_until(&mut world2, 4 * HOUR);
+    world2.flush_enrichment(4 * HOUR);
+    println!("\n== leg 2 (restored bucket, +4h under the same plan) ==");
+    println!("{}", world2.recovery_table());
+    check_conservation(&world2, seed, "leg 2");
+    if world2.counters.polls_ok == 0 {
+        fail(&world2, seed, "leg 2", "no successful polls after restore".into());
+    }
+    if inproc_at_crash > 0 && world2.store.stale_repicks() == 0 {
+        fail(&world2, seed, "leg 2", "crashed in-process streams were never re-picked".into());
+    }
+    if world2.fault.breakers_open() != 0 {
+        fail(&world2, seed, "leg 2", "breakers still open at the end of the run".into());
+    }
+
+    let c = &world2.counters;
+    println!(
+        "\nitems leg2: fetched {} indexed {} deduped {} | dlq {} | breaker opens {} closes {}",
+        c.items_fetched,
+        world2.sink.counters.docs_indexed,
+        c.items_deduped,
+        world2.fault.counters.enrich_poisoned + world2.sink.counters.docs_poisoned,
+        world2.fault.counters.breaker_opens,
+        world2.fault.counters.breaker_closes,
+    );
+    println!("chaos_day PASSED in {:.1}s wall (seed {seed})", wall.elapsed().as_secs_f64());
+    Ok(())
+}

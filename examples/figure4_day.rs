@@ -35,6 +35,11 @@ fn main() -> anyhow::Result<()> {
         Ok(s) => s.parse()?,
         Err(_) => 8,
     };
+    // FIG4_CHAOS=1 reruns the day under the kitchen-sink fault plan (the
+    // recovery table below then shows what fired and what was recovered).
+    if std::env::var("FIG4_CHAOS").is_ok_and(|v| v == "1") {
+        cfg.fault = alertmix::fault::FaultPlan::chaotic();
+    }
     if !cfg!(feature = "xla")
         || alertmix::runtime::find_artifact(alertmix::runtime::DEFAULT_ARTIFACT).is_none()
     {
@@ -128,6 +133,12 @@ fn main() -> anyhow::Result<()> {
         claims_max as f64 / claims_min.max(1) as f64,
         world.store.claims()
     );
+
+    // -- Fault/recovery accounting (only when a fault plan is active) ------
+    if world.fault.enabled() {
+        println!("\nfault injection & recovery after 24h:");
+        println!("{}", world.recovery_table());
+    }
 
     println!(
         "\nbacklog at end: {} visible, {} in dead letters, {} support emails",

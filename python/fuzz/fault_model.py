@@ -1,0 +1,541 @@
+#!/usr/bin/env python3
+"""Executable model checks for rust/src/fault (and the dead-letters
+windowed counter fix).
+
+This container has no Rust toolchain, so the fault-injection logic is
+ported line-by-line here and fuzzed against independent oracles:
+
+  1. SplitMix64 Rng port: determinism, stream independence, [0,1) f64.
+  2. RetryPolicy: exact no-jitter schedule, cap, budget exhaustion,
+     jitter bounds over random policies.
+  3. ChaosInjector: empty plan never draws; outage windows are exact;
+     burst windows multiply per-opportunity rates; per-seed determinism.
+  4. Circuit breaker: differential test against an explicit-state oracle
+     over random error/success/check sequences (500 seeds).
+  5. Sink bulk retry/poison loop: conservation (indexed + poisoned ==
+     ingested) and termination for random rates/budgets (300 seeds).
+  6. Enrichment batch retry/poison accounting: delivered + poisoned ==
+     fetched (300 seeds).
+  7. DeadLetters windowed `since()` vs a keep-every-timestamp oracle,
+     including the >ring-size burst regression (200 seeds).
+
+Run: python3 python/fuzz/fault_model.py
+"""
+
+import random
+import sys
+
+MASK = (1 << 64) - 1
+GAMMA = 0x9E3779B97F4A7C15
+
+
+def _mix(z: int) -> int:
+    z &= MASK
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return (z ^ (z >> 31)) & MASK
+
+
+class Rng:
+    """Port of rust/src/util/rng.rs (SplitMix64)."""
+
+    def __init__(self, seed: int, _raw_state: int | None = None):
+        self.state = _raw_state if _raw_state is not None else _mix((seed ^ GAMMA) & MASK)
+
+    def stream(self, tag: int) -> "Rng":
+        t = _mix((tag * GAMMA) & MASK ^ 0xD1B54A32D192ED03)
+        return Rng(0, _raw_state=_mix(self.state ^ t))
+
+    def next_u64(self) -> int:
+        self.state = (self.state + GAMMA) & MASK
+        return _mix(self.state)
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def chance(self, p: float) -> bool:
+        return self.next_f64() < p
+
+
+class RetryPolicy:
+    """Port of fault::RetryPolicy."""
+
+    def __init__(self, base=200, cap=30_000, budget=5, jitter=0.25):
+        self.base, self.cap, self.budget, self.jitter = base, cap, budget, jitter
+
+    def delay(self, attempt: int, rng: Rng):
+        if attempt >= self.budget:
+            return None
+        exp = min(attempt, 20)
+        raw = min(max(self.base, 1) * (1 << exp), max(self.cap, 1))
+        if self.jitter > 0.0:
+            f = 1.0 - self.jitter + 2.0 * self.jitter * rng.next_f64()
+            raw = int(raw * f)
+        return max(raw, 1)
+
+
+class Plan:
+    def __init__(self, **kw):
+        self.connector_error_rate = kw.get("connector_error_rate", 0.0)
+        self.connector_timeout_rate = kw.get("connector_timeout_rate", 0.0)
+        self.connector_rate_limit_rate = kw.get("connector_rate_limit_rate", 0.0)
+        self.enrich_fail_rate = kw.get("enrich_fail_rate", 0.0)
+        self.sqs_dup_rate = kw.get("sqs_dup_rate", 0.0)
+        self.sqs_delay_rate = kw.get("sqs_delay_rate", 0.0)
+        self.sink_reject_rate = kw.get("sink_reject_rate", 0.0)
+        self.burst_period = kw.get("burst_period", 0)
+        self.burst_len = kw.get("burst_len", 0)
+        self.burst_factor = kw.get("burst_factor", 1.0)
+        self.outages = kw.get("outages", [])  # (site, from, until)
+        self.retry = kw.get("retry", RetryPolicy())
+        self.breaker_threshold = kw.get("breaker_threshold", 0)
+        self.breaker_cooldown = kw.get("breaker_cooldown", 30_000)
+
+    def enabled(self):
+        return (
+            self.connector_error_rate > 0
+            or self.connector_timeout_rate > 0
+            or self.connector_rate_limit_rate > 0
+            or self.enrich_fail_rate > 0
+            or self.sqs_dup_rate > 0
+            or self.sqs_delay_rate > 0
+            or self.sink_reject_rate > 0
+            or self.outages
+            or self.breaker_threshold > 0
+        )
+
+
+class Injector:
+    """Port of fault::ChaosInjector (connector/enrich/breaker subset)."""
+
+    def __init__(self, plan: Plan, seed: int):
+        self.plan = plan
+        self.enabled = plan.enabled()
+        root = Rng(seed)
+        self.rng_connector = root.stream(1)
+        self.rng_enrich = root.stream(2)
+        self.rng_sqs = root.stream(3)
+        self.rng_retry = root.stream(4)
+        self.draws = 0
+        self.breakers = {}  # channel -> [consecutive, open_until, open]
+        self.opens = self.closes = self.fast_fails = 0
+
+    def _factor(self, now):
+        if self.plan.burst_period > 0 and now % self.plan.burst_period < self.plan.burst_len:
+            return self.plan.burst_factor
+        return 1.0
+
+    def _outage(self, site, now):
+        return any(s == site and f <= now < u for (s, f, u) in self.plan.outages)
+
+    def _roll(self, rng, p):
+        if p <= 0.0:
+            return False
+        self.draws += 1
+        return rng.chance(min(p, 1.0))
+
+    def connector_fault(self, now):
+        if not self.enabled:
+            return None
+        if self._outage("connector", now):
+            return "error"
+        f = self._factor(now)
+        if self._roll(self.rng_connector, self.plan.connector_rate_limit_rate * f):
+            return "rate_limited"
+        if self._roll(self.rng_connector, self.plan.connector_timeout_rate * f):
+            return "timeout"
+        if self._roll(self.rng_connector, self.plan.connector_error_rate * f):
+            return "error"
+        return None
+
+    def enrich_fault(self, now):
+        if not self.enabled:
+            return False
+        if self._outage("enrich", now):
+            return True
+        return self._roll(self.rng_enrich, self.plan.enrich_fail_rate * self._factor(now))
+
+    # -- circuit breaker (port of breaker_check/note_error/note_success) --
+    def _b(self, ch):
+        return self.breakers.setdefault(ch, [0, 0, False])
+
+    def breaker_check(self, ch, now):
+        if self.plan.breaker_threshold == 0:
+            return False
+        b = self._b(ch)
+        if b[2] and now < b[1]:
+            self.fast_fails += 1
+            return True
+        return False
+
+    def breaker_note_error(self, ch, now):
+        if self.plan.breaker_threshold == 0:
+            return False
+        b = self._b(ch)
+        b[0] += 1
+        if b[0] >= self.plan.breaker_threshold:
+            b[1] = now + self.plan.breaker_cooldown
+            if not b[2]:
+                b[2] = True
+                self.opens += 1
+                return True
+        return False
+
+    def breaker_note_success(self, ch):
+        if self.plan.breaker_threshold == 0:
+            return
+        b = self._b(ch)
+        b[0] = 0
+        if b[2]:
+            b[2] = False
+            self.closes += 1
+
+
+FAILURES = []
+
+
+def check(cond, msg):
+    if not cond:
+        FAILURES.append(msg)
+        print(f"FAIL: {msg}")
+
+
+# ---------------------------------------------------------------------------
+# 1. Rng sanity
+# ---------------------------------------------------------------------------
+def t_rng():
+    a, b = Rng(42), Rng(42)
+    check(all(a.next_u64() == b.next_u64() for _ in range(1000)), "rng determinism")
+    check(Rng(1).next_u64() != Rng(2).next_u64(), "rng seeds differ")
+    root = Rng(7)
+    s1, s1b, s2 = root.stream(1), root.stream(1), root.stream(2)
+    v = s1.next_u64()
+    check(v == s1b.next_u64(), "stream(tag) stable")
+    check(v != s2.next_u64(), "streams decorrelated")
+    r = Rng(11)
+    check(all(0.0 <= r.next_f64() < 1.0 for _ in range(100_000)), "f64 in [0,1)")
+
+
+# ---------------------------------------------------------------------------
+# 2. RetryPolicy
+# ---------------------------------------------------------------------------
+def t_retry():
+    p = RetryPolicy(base=100, cap=1_000, budget=5, jitter=0.0)
+    rng = Rng(1)
+    sched = [p.delay(a, rng) for a in range(5)]
+    check(sched == [100, 200, 400, 800, 1_000], f"no-jitter schedule {sched}")
+    check(p.delay(5, rng) is None and p.delay(99, rng) is None, "budget exhausts")
+
+    pyrng = random.Random(0)
+    for _ in range(500):
+        base = pyrng.randint(1, 10_000)
+        cap = base + pyrng.randint(0, 100_000)
+        jit = pyrng.uniform(0.0, 0.99)
+        pol = RetryPolicy(base=base, cap=cap, budget=pyrng.randint(1, 12), jitter=jit)
+        rng = Rng(pyrng.randint(0, MASK))
+        for a in range(pol.budget):
+            raw = min(base * (1 << min(a, 20)), cap)
+            d = pol.delay(a, rng)
+            lo, hi = int(raw * (1 - jit)) - 1, int(raw * (1 + jit)) + 1
+            check(d is not None and max(lo, 1) <= d <= max(hi, 1), f"jitter bounds: {d} vs [{lo},{hi}]")
+        check(pol.delay(pol.budget, rng) is None, "budget is final")
+
+
+# ---------------------------------------------------------------------------
+# 3. Injector: no-draw empty plan, outage exactness, burst factor, determinism
+# ---------------------------------------------------------------------------
+def t_injector():
+    inj = Injector(Plan(), 42)
+    for t in range(50_000):
+        check(inj.connector_fault(t) is None, "empty plan injects nothing")
+        check(not inj.enrich_fault(t), "empty plan never fails enrich")
+    check(inj.draws == 0, "empty plan never draws")
+
+    inj = Injector(Plan(outages=[("connector", 100, 200)]), 42)
+    for t in range(300):
+        got = inj.connector_fault(t)
+        want = "error" if 100 <= t < 200 else None
+        check(got == want, f"outage window exact at t={t}: {got}")
+    check(inj.draws == 0, "outage-only plan never draws (rates are 0)")
+
+    # Burst multiplier: measure per-opportunity rates.
+    plan = Plan(enrich_fail_rate=0.05, burst_period=1_000, burst_len=100, burst_factor=10.0)
+    inj = Injector(plan, 3)
+    hit_in = hit_out = 0
+    for t in range(200_000):
+        h = inj.enrich_fault(t)
+        if t % 1_000 < 100:
+            hit_in += h
+        else:
+            hit_out += h
+    rate_in, rate_out = hit_in / 20_000, hit_out / 180_000
+    check(rate_in > 4 * rate_out, f"burst dominates: {rate_in:.3f} vs {rate_out:.3f}")
+    check(abs(rate_out - 0.05) < 0.01, f"base rate ~0.05: {rate_out:.3f}")
+    check(abs(rate_in - 0.5) < 0.05, f"burst rate ~0.5: {rate_in:.3f}")
+
+    # Determinism per seed.
+    def seq(seed):
+        i = Injector(Plan(connector_error_rate=0.2, connector_timeout_rate=0.1), seed)
+        return [i.connector_fault(t) for t in range(5_000)]
+
+    check(seq(7) == seq(7), "injector deterministic per seed")
+    check(seq(7) != seq(8), "injector seeds differ")
+
+
+# ---------------------------------------------------------------------------
+# 4. Breaker vs oracle
+# ---------------------------------------------------------------------------
+class BreakerOracle:
+    """Independent reimplementation: explicit CLOSED/OPEN/HALF_OPEN states."""
+
+    def __init__(self, threshold, cooldown):
+        self.threshold, self.cooldown = threshold, cooldown
+        self.state = "CLOSED"
+        self.streak = 0
+        self.until = 0
+
+    def check(self, now):
+        # True = must fail fast.
+        if self.state == "OPEN":
+            if now >= self.until:
+                self.state = "HALF_OPEN"
+                return False
+            return True
+        return False
+
+    def error(self, now):
+        self.streak += 1
+        if self.streak >= self.threshold:
+            # An error at/past threshold always (re)arms the window; the
+            # opens counter increments only on CLOSED->OPEN (in the port,
+            # HALF_OPEN keeps b.open == True, so a failed trial does not
+            # double-count).
+            prev = self.state
+            self.until = now + self.cooldown
+            self.state = "OPEN"
+            return prev == "CLOSED"
+        return False
+
+    def success(self):
+        self.streak = 0
+        closed = self.state in ("OPEN", "HALF_OPEN")
+        self.state = "CLOSED"
+        return closed
+
+
+def t_breaker():
+    pyrng = random.Random(1)
+    for seed in range(500):
+        threshold = pyrng.randint(1, 8)
+        cooldown = pyrng.randint(1, 5_000)
+        inj = Injector(Plan(breaker_threshold=threshold, breaker_cooldown=cooldown), seed)
+        # Oracle tracks HALF_OPEN explicitly; the port models it as
+        # "open flag stays set, check lets one through past open_until".
+        orc = BreakerOracle(threshold, cooldown)
+        now = 0
+        opens = closes = 0
+        for _ in range(300):
+            now += pyrng.randint(1, max(1, cooldown // 2))
+            op = pyrng.random()
+            if op < 0.5:
+                got = inj.breaker_check(0, now)
+                want = orc.check(now)
+                check(got == want, f"breaker seed {seed}: check mismatch at {now}")
+            elif op < 0.8:
+                newly = inj.breaker_note_error(0, now)
+                want_newly = orc.error(now)
+                opens += want_newly
+                check(newly == want_newly, f"breaker seed {seed}: newly-open mismatch at {now}")
+            else:
+                inj.breaker_note_success(0)
+                closes += orc.success()
+        check(inj.opens == opens, f"breaker seed {seed}: opens {inj.opens} vs oracle {opens}")
+        check(inj.closes == closes, f"breaker seed {seed}: closes {inj.closes} vs oracle {closes}")
+
+
+# ---------------------------------------------------------------------------
+# 5. Sink bulk retry/poison: conservation + termination
+# ---------------------------------------------------------------------------
+def t_sink():
+    pyrng = random.Random(2)
+    for seed in range(300):
+        reject = pyrng.uniform(0.0, 0.97)
+        budget = pyrng.randint(0, 5)
+        n = pyrng.randint(1, 400)
+        retry = RetryPolicy(base=pyrng.randint(1, 500), cap=2_000, budget=budget, jitter=0.2)
+        rng = Rng(seed).stream(5)
+        indexed = poisoned = retried = 0
+        clock = 0
+        # queue of (attempts, not_before)
+        pending = [(0, 0)] * n
+        steps = 0
+        while pending:
+            steps += 1
+            check(steps <= n * (budget + 2) + 1, f"sink seed {seed}: drain must terminate")
+            clock = max(clock, min(nb for _, nb in pending))
+            nxt = []
+            for attempts, not_before in pending:
+                if not_before > clock:
+                    nxt.append((attempts, not_before))
+                    continue
+                if attempts > 0:
+                    retried += 1
+                if rng.chance(min(reject, 1.0)):
+                    d = retry.delay(attempts, rng)
+                    if d is None:
+                        poisoned += 1
+                    else:
+                        nxt.append((attempts + 1, clock + d))
+                else:
+                    indexed += 1
+            pending = nxt
+        check(indexed + poisoned == n, f"sink seed {seed}: conservation {indexed}+{poisoned}!={n}")
+        if budget == 0:
+            check(retried == 0, f"sink seed {seed}: zero budget never retries")
+
+
+# ---------------------------------------------------------------------------
+# 6. Enrichment retry accounting
+# ---------------------------------------------------------------------------
+def t_enrich():
+    pyrng = random.Random(3)
+    for seed in range(300):
+        fail = pyrng.uniform(0.0, 0.95)
+        budget = pyrng.randint(0, 4)
+        retry = RetryPolicy(base=100, cap=5_000, budget=budget, jitter=0.25)
+        inj = Injector(Plan(enrich_fail_rate=fail, retry=retry), seed)
+        delivered = poisoned = 0
+        total = 0
+        now = 0
+        queue = []  # (n_items, attempts, not_before)
+        for _ in range(100):
+            now += 50
+            n_items = pyrng.randint(1, 64)
+            total += n_items
+            queue.append((n_items, 0, now))
+            # Drain due retries the way process_enrich_retries does.
+            nxt = []
+            for items, attempts, nb in queue:
+                if nb > now:
+                    nxt.append((items, attempts, nb))
+                    continue
+                if inj.enrich_fault(now):
+                    d = retry.delay(attempts, inj.rng_retry)
+                    if d is None:
+                        poisoned += items
+                    else:
+                        nxt.append((items, attempts + 1, now + d))
+                else:
+                    delivered += items
+            queue = nxt
+        # Final quiesce: advance time past every not_before.
+        guard = 0
+        while queue:
+            guard += 1
+            check(guard < 10_000, f"enrich seed {seed}: quiesce terminates")
+            now = max(now, min(nb for _, _, nb in queue))
+            nxt = []
+            for items, attempts, nb in queue:
+                if nb > now:
+                    nxt.append((items, attempts, nb))
+                    continue
+                if inj.enrich_fault(now):
+                    d = retry.delay(attempts, inj.rng_retry)
+                    if d is None:
+                        poisoned += items
+                    else:
+                        nxt.append((items, attempts + 1, now + d))
+                else:
+                    delivered += items
+            queue = nxt
+        check(
+            delivered + poisoned == total,
+            f"enrich seed {seed}: {delivered}+{poisoned} != {total}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# 7. DeadLetters windowed counter vs oracle
+# ---------------------------------------------------------------------------
+RETENTION = 10 * 60 * 1000
+
+
+class DeadLettersModel:
+    """Port of the fixed actor/dead_letters.rs counting structure."""
+
+    def __init__(self, keep):
+        self.keep = keep
+        self.recent = []
+        self.window = []  # (at, count) buckets
+
+    def publish(self, at):
+        if len(self.recent) == self.keep:
+            self.recent.pop(0)
+        if self.window and self.window[-1][0] >= at:
+            self.window[-1] = (self.window[-1][0], self.window[-1][1] + 1)
+        else:
+            self.window.append((at, 1))
+        horizon = max(at - RETENTION, 0)
+        while len(self.window) > 1 and self.window[0][0] < horizon:
+            self.window.pop(0)
+        self.recent.append(at)
+
+    def since(self, t):
+        total = 0
+        for at, n in reversed(self.window):
+            if at < t:
+                break
+            total += n
+        return total
+
+
+def t_dead_letters():
+    pyrng = random.Random(4)
+    for seed in range(200):
+        keep = pyrng.choice([3, 10, 100, 4096])
+        m = DeadLettersModel(keep)
+        oracle = []  # every timestamp, unbounded
+        now = 0
+        for _ in range(pyrng.randint(10, 3_000)):
+            now += pyrng.randint(0, 200)
+            m.publish(now)
+            oracle.append(now)
+            if pyrng.random() < 0.1:
+                t = max(now - pyrng.randint(0, RETENTION - 1), 0)
+                want = sum(1 for x in oracle if x >= t)
+                got = m.since(t)
+                check(got == want, f"dlq seed {seed}: since({t}) = {got}, want {want}")
+    # Regression: burst far beyond the ring inside one window.
+    m = DeadLettersModel(4096)
+    for i in range(10_000):
+        m.publish(i // 100)
+    check(m.since(0) == 10_000, f"ring-size regression: {m.since(0)}")
+    check(m.since(50) == 5_000, f"windowed half: {m.since(50)}")
+    check(len(m.recent) == 4096, "ring still caps")
+    # Retention pruning.
+    m = DeadLettersModel(10)
+    m.publish(0)
+    m.publish(RETENTION + 1)
+    check(m.since(0) == 1, "pre-retention bucket pruned")
+
+
+def main():
+    for name, fn in [
+        ("rng", t_rng),
+        ("retry", t_retry),
+        ("injector", t_injector),
+        ("breaker", t_breaker),
+        ("sink", t_sink),
+        ("enrich", t_enrich),
+        ("dead_letters", t_dead_letters),
+    ]:
+        fn()
+        print(f"ok: {name}")
+    if FAILURES:
+        print(f"\n{len(FAILURES)} FAILURES")
+        sys.exit(1)
+    print("\nall fault-model checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -33,10 +33,20 @@ pub struct DeadLetter {
     pub reason: DeadLetterReason,
 }
 
+/// How long windowed counts are retained (must exceed any alert window).
+/// Coalesced per-timestamp buckets, so memory is bounded by distinct
+/// letter timestamps in the retention horizon, not by letter count.
+const WINDOW_RETENTION_MS: SimTime = 10 * 60 * 1000;
+
 /// The office: ring buffer of recent letters + lifetime counters.
 pub struct DeadLetters {
     recent: VecDeque<DeadLetter>,
     keep: usize,
+    /// Windowed counts, independent of the ring: `(timestamp, letters)`
+    /// buckets. The ring holds at most `keep` letters for inspection, but
+    /// a burst can blow far past `keep` inside one alert window — counting
+    /// the ring alone silently saturated `since()` at `keep`.
+    window: VecDeque<(SimTime, u64)>,
     pub total: u64,
     pub by_overflow: u64,
     pub by_stopped: u64,
@@ -55,6 +65,7 @@ impl DeadLetters {
         DeadLetters {
             recent: VecDeque::with_capacity(keep.min(4096)),
             keep,
+            window: VecDeque::new(),
             total: 0,
             by_overflow: 0,
             by_stopped: 0,
@@ -74,17 +85,33 @@ impl DeadLetters {
         if self.recent.len() == self.keep {
             self.recent.pop_front();
         }
+        // Windowed count bucket, independent of ring eviction. The sim
+        // clock is monotone, so timestamps arrive nondecreasing; a
+        // straggler folds into the newest bucket (overcounts a window by
+        // at most the stragglers, never undercounts).
+        match self.window.back_mut() {
+            Some(b) if b.0 >= letter.at => b.1 += 1,
+            _ => self.window.push_back((letter.at, 1)),
+        }
+        let horizon = letter.at.saturating_sub(WINDOW_RETENTION_MS);
+        while self.window.len() > 1 && self.window.front().is_some_and(|&(at, _)| at < horizon) {
+            self.window.pop_front();
+        }
         self.recent.push_back(letter);
     }
 
-    /// Most recent letters, oldest first.
+    /// Most recent letters, oldest first (capped at the ring size).
     pub fn recent(&self) -> impl Iterator<Item = &DeadLetter> {
         self.recent.iter()
     }
 
     /// Letters recorded since the given time (for windowed alerting).
+    /// Exact for windows inside the retention horizon even when far more
+    /// than the ring size arrived — the count no longer saturates at
+    /// `keep`.
     pub fn since(&self, t: SimTime) -> usize {
-        self.recent.iter().rev().take_while(|l| l.at >= t).count()
+        self.window.iter().rev().take_while(|&&(at, _)| at >= t).map(|&(_, n)| n).sum::<u64>()
+            as usize
     }
 }
 
@@ -127,5 +154,29 @@ mod tests {
         assert_eq!(d.since(70), 3); // letters at 70, 80, 90
         assert_eq!(d.since(0), 10);
         assert_eq!(d.since(91), 0);
+    }
+
+    #[test]
+    fn since_does_not_saturate_at_ring_size() {
+        // Regression: a burst larger than the ring inside one window used
+        // to report at most `keep` letters.
+        let mut d = DeadLetters::default(); // keep = 4096
+        for i in 0..10_000u64 {
+            d.publish(letter(i / 100, DeadLetterReason::MailboxOverflow));
+        }
+        assert_eq!(d.since(0), 10_000);
+        assert_eq!(d.since(50), 5_000); // letters at t >= 50: i in 5_000..10_000
+        assert_eq!(d.recent().count(), 4096); // ring still caps inspection
+        assert_eq!(d.total, 10_000);
+    }
+
+    #[test]
+    fn window_buckets_prune_past_retention() {
+        let mut d = DeadLetters::new(10);
+        d.publish(letter(0, DeadLetterReason::MailboxOverflow));
+        d.publish(letter(WINDOW_RETENTION_MS + 1, DeadLetterReason::MailboxOverflow));
+        // The t=0 bucket fell off the retention horizon.
+        assert_eq!(d.since(0), 1);
+        assert_eq!(d.total, 2);
     }
 }

@@ -22,5 +22,5 @@ pub use message::{
     ActorId, Envelope, Msg, Priority, PRIORITY_HIGH, PRIORITY_LOW, PRIORITY_NORMAL, SYSTEM,
 };
 pub use resizer::{OptimalSizeExploringResizer, ResizerConfig};
-pub use supervision::{Directive, FailureState, SupervisorStrategy};
+pub use supervision::{decide, on_success, Directive, FailureState, SupervisorStrategy};
 pub use system::{ActorFactory, ActorSystem, CellStats};

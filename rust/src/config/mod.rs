@@ -99,6 +99,12 @@ pub struct AlertMixConfig {
     // -- monitoring -----------------------------------------------------------
     pub dead_letter_alarm: f64,
     pub monitor_interval: SimTime,
+
+    // -- fault injection --------------------------------------------------
+    /// Seeded chaos schedule (`crate::fault`). The default empty plan
+    /// injects nothing and draws nothing: default runs are byte-identical
+    /// to a build without the fault subsystem.
+    pub fault: crate::fault::FaultPlan,
 }
 
 impl Default for AlertMixConfig {
@@ -142,6 +148,7 @@ impl Default for AlertMixConfig {
             sink_bulk: 64,
             dead_letter_alarm: 100.0,
             monitor_interval: MINUTE,
+            fault: crate::fault::FaultPlan::default(),
         }
     }
 }
@@ -276,6 +283,7 @@ impl AlertMixConfig {
                 "sink_bulk" => c.sink_bulk = u()? as usize,
                 "dead_letter_alarm" => c.dead_letter_alarm = f()?,
                 "monitor_interval_ms" => c.monitor_interval = u()?,
+                "fault" => c.fault = crate::fault::FaultPlan::from_json(v)?,
                 other => bail!("unknown config key: {other}"),
             }
         }
@@ -333,6 +341,7 @@ impl AlertMixConfig {
         if self.visibility_timeout <= self.replenish_timeout {
             bail!("visibility_timeout must exceed replenish_timeout");
         }
+        self.fault.validate()?;
         Ok(())
     }
 }
@@ -428,6 +437,34 @@ mod tests {
             assert_eq!(c.connectors.len(), 1);
             assert_eq!(c.connectors[0].pool, 32, "alias must win over the list default");
         }
+    }
+
+    #[test]
+    fn fault_plan_parses_and_validates() {
+        // Absent key: the empty (disabled) plan.
+        let j = Json::parse(r#"{"n_feeds": 50}"#).unwrap();
+        let c = AlertMixConfig::from_json(&j, AlertMixConfig::default()).unwrap();
+        assert!(!c.fault.enabled());
+        // Full plan threads through.
+        let j = Json::parse(
+            r#"{"fault": {
+                "seed": 9, "connector_error_rate": 0.1, "enrich_fail_rate": 0.05,
+                "sink_reject_rate": 0.2, "breaker_threshold": 4,
+                "retry": {"base_ms": 100, "cap_ms": 2000, "budget": 3, "jitter": 0.2},
+                "outages": [{"site": "sink", "from_ms": 0, "until_ms": 60000}]
+            }}"#,
+        )
+        .unwrap();
+        let c = AlertMixConfig::from_json(&j, AlertMixConfig::default()).unwrap();
+        assert!(c.fault.enabled());
+        assert_eq!(c.fault.seed, 9);
+        assert_eq!(c.fault.retry.budget, 3);
+        assert_eq!(c.fault.outages.len(), 1);
+        // Bad rates and unknown sub-keys refuse.
+        let j = Json::parse(r#"{"fault": {"sqs_dup_rate": 3.0}}"#).unwrap();
+        assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
+        let j = Json::parse(r#"{"fault": {"nope": 1}}"#).unwrap();
+        assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
     }
 
     #[test]

@@ -457,6 +457,13 @@ impl SourceConnector for RssConnector {
                 world.counters.fetch_errors += 1;
                 PollResult::error()
             }
+            HttpStatus::TooManyRequests => {
+                // Throttled: back off like any transient failure, but keep
+                // the dedicated counter so dashboards can tell 429s apart.
+                world.counters.rate_limited += 1;
+                world.counters.fetch_errors += 1;
+                PollResult::error()
+            }
             HttpStatus::ServerError(_) | HttpStatus::Timeout => {
                 world.counters.fetch_errors += 1;
                 PollResult::error()

@@ -1,0 +1,911 @@
+//! Deterministic, seeded fault injection — the chaos substrate.
+//!
+//! Nothing in a simulation proves the self-healing story until something
+//! actually *fails*. This module provides the failure side: a [`FaultPlan`]
+//! (per-site rates, periodic burst windows, and scripted outages keyed to
+//! the sim clock) driven through a [`ChaosInjector`] with its own seeded
+//! RNG — so a chaos run replays bit-for-bit from its seed, and an *empty*
+//! plan draws nothing at all (the no-fault hot path is untouched).
+//!
+//! Injection sites cover every stage boundary of the pipeline:
+//!
+//! - **connector polls** (`FaultSite::ConnectorPoll`): the source answers
+//!   429 / 5xx / timeout instead of items (worker boundary, all channels);
+//! - **enrichment** (`FaultSite::Enrich`): the batch backend fails
+//!   transiently; the batch is parked and retried, never silently dropped;
+//! - **SQS delivery** (`FaultSite::SqsDeliver`): duplicate and delayed
+//!   redelivery via visibility-lease manipulation (the at-least-once
+//!   contract, exercised for real);
+//! - **sink flush** (`FaultSite::SinkFlush`): per-doc bulk rejections
+//!   (ES-style partial failure) feeding the sink's retry queue.
+//!
+//! Recovery is shared: one [`RetryPolicy`] (jittered exponential backoff +
+//! attempt budget) serves the enrichment stage, the sink retry queue, and
+//! the connector circuit breakers; budget exhaustion routes work to the
+//! pipeline-level poison DLQ counters instead of losing it. The payoff is
+//! a conservation invariant checked end to end in `tests/chaos.rs`:
+//! every item feedsim produced is indexed exactly once, deduped, or
+//! accounted for in a DLQ counter.
+
+use crate::sim::SimTime;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Result};
+use std::fmt;
+
+/// A stage boundary where faults can be injected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Worker → source: the poll itself fails (429/5xx/timeout).
+    ConnectorPoll,
+    /// EnrichStage → backend: the whole batch fails transiently.
+    Enrich,
+    /// SQS → router: duplicate or delayed redelivery.
+    SqsDeliver,
+    /// Sink bulk flush: per-doc rejections.
+    SinkFlush,
+}
+
+impl FaultSite {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::ConnectorPoll => "connector",
+            FaultSite::Enrich => "enrich",
+            FaultSite::SqsDeliver => "sqs",
+            FaultSite::SinkFlush => "sink",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<FaultSite> {
+        Ok(match s {
+            "connector" => FaultSite::ConnectorPoll,
+            "enrich" => FaultSite::Enrich,
+            "sqs" => FaultSite::SqsDeliver,
+            "sink" => FaultSite::SinkFlush,
+            other => bail!("unknown fault site '{other}' (connector|enrich|sqs|sink)"),
+        })
+    }
+}
+
+/// A scripted outage: the site fails deterministically for the whole
+/// window `[from, until)` of the sim clock, regardless of rates.
+#[derive(Debug, Clone)]
+pub struct Outage {
+    pub site: FaultSite,
+    pub from: SimTime,
+    pub until: SimTime,
+}
+
+/// Shared retry/backoff policy: jittered exponential backoff with an
+/// attempt budget. One type serves the enrichment stage, the sink bulk
+/// retry queue and the connector circuit breakers, so every stage recovers
+/// the same way instead of improvising.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// First-retry delay, ms.
+    pub base: SimTime,
+    /// Backoff ceiling, ms.
+    pub cap: SimTime,
+    /// Attempts allowed before the work is poisoned (routed to the DLQ).
+    pub budget: u32,
+    /// Multiplicative jitter: the delay is scaled uniformly in
+    /// `[1 - jitter, 1 + jitter)`. 0 disables (and draws nothing).
+    pub jitter: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { base: 200, cap: 30_000, budget: 5, jitter: 0.25 }
+    }
+}
+
+impl RetryPolicy {
+    /// Delay before retry number `attempt` (0-based: the delay after the
+    /// first failure is `delay(0)`). `None` once the budget is exhausted —
+    /// the caller must poison the work, not retry it.
+    pub fn delay(&self, attempt: u32, rng: &mut Rng) -> Option<SimTime> {
+        if attempt >= self.budget {
+            return None;
+        }
+        let exp = attempt.min(20);
+        let raw = self.base.max(1).saturating_mul(1 << exp).min(self.cap.max(1));
+        let jittered = if self.jitter > 0.0 {
+            let f = 1.0 - self.jitter + 2.0 * self.jitter * rng.next_f64();
+            (raw as f64 * f) as SimTime
+        } else {
+            raw
+        };
+        Some(jittered.max(1))
+    }
+}
+
+/// The full fault schedule for a run. `FaultPlan::default()` is the empty
+/// plan: nothing fires, nothing draws, behavior is byte-identical to a
+/// build without this module.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Dedicated chaos seed; 0 derives one from the experiment seed, so
+    /// the same experiment replays bit-for-bit either way.
+    pub seed: u64,
+    // -- per-site rates (probability per operation) ------------------------
+    pub connector_error_rate: f64,
+    pub connector_timeout_rate: f64,
+    pub connector_rate_limit_rate: f64,
+    pub enrich_fail_rate: f64,
+    pub sqs_dup_rate: f64,
+    pub sqs_delay_rate: f64,
+    /// Redelivery lead for `sqs_delay_rate` faults: the message's
+    /// visibility lease is shortened to this.
+    pub sqs_delay_ms: SimTime,
+    pub sink_reject_rate: f64,
+    // -- burst windows ------------------------------------------------------
+    /// Every `burst_period` ms the rates multiply by `burst_factor` for
+    /// `burst_len` ms (a periodic brownout). 0 disables.
+    pub burst_period: SimTime,
+    pub burst_len: SimTime,
+    pub burst_factor: f64,
+    // -- scripted outages ---------------------------------------------------
+    pub outages: Vec<Outage>,
+    // -- recovery -----------------------------------------------------------
+    pub retry: RetryPolicy,
+    /// Consecutive poll errors that open a channel's circuit breaker;
+    /// 0 disables the breaker (and keeps the classic Restart supervision).
+    pub breaker_threshold: u32,
+    /// How long an open breaker fails fast before a half-open trial.
+    pub breaker_cooldown: SimTime,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            connector_error_rate: 0.0,
+            connector_timeout_rate: 0.0,
+            connector_rate_limit_rate: 0.0,
+            enrich_fail_rate: 0.0,
+            sqs_dup_rate: 0.0,
+            sqs_delay_rate: 0.0,
+            sqs_delay_ms: 10_000,
+            sink_reject_rate: 0.0,
+            burst_period: 0,
+            burst_len: 0,
+            burst_factor: 1.0,
+            outages: Vec::new(),
+            retry: RetryPolicy::default(),
+            breaker_threshold: 0,
+            breaker_cooldown: 30_000,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// True when any site can fire. The injector checks this before any
+    /// RNG draw, so an empty plan has zero effect on the hot path.
+    pub fn enabled(&self) -> bool {
+        self.connector_error_rate > 0.0
+            || self.connector_timeout_rate > 0.0
+            || self.connector_rate_limit_rate > 0.0
+            || self.enrich_fail_rate > 0.0
+            || self.sqs_dup_rate > 0.0
+            || self.sqs_delay_rate > 0.0
+            || self.sink_reject_rate > 0.0
+            || !self.outages.is_empty()
+            || self.breaker_threshold > 0
+    }
+
+    /// A kitchen-sink plan: every site fires at moderate rates, with a
+    /// burst window and breakers armed. The chaos example and tests layer
+    /// scripted outages on top.
+    pub fn chaotic() -> FaultPlan {
+        FaultPlan {
+            connector_error_rate: 0.05,
+            connector_timeout_rate: 0.02,
+            connector_rate_limit_rate: 0.02,
+            enrich_fail_rate: 0.03,
+            sqs_dup_rate: 0.03,
+            sqs_delay_rate: 0.03,
+            sqs_delay_ms: 15_000,
+            sink_reject_rate: 0.05,
+            burst_period: 20 * 60 * 1000,
+            burst_len: 2 * 60 * 1000,
+            burst_factor: 5.0,
+            retry: RetryPolicy { base: 100, cap: 10_000, budget: 4, jitter: 0.25 },
+            breaker_threshold: 8,
+            breaker_cooldown: 20_000,
+            ..FaultPlan::default()
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<FaultPlan> {
+        let mut p = FaultPlan::default();
+        let obj = j.as_obj().ok_or_else(|| anyhow!("fault must be a JSON object"))?;
+        for (k, v) in obj {
+            let u = || v.as_u64().ok_or_else(|| anyhow!("fault.{k} must be a non-negative integer"));
+            let f = || v.as_f64().ok_or_else(|| anyhow!("fault.{k} must be a number"));
+            match k.as_str() {
+                "seed" => p.seed = u()?,
+                "connector_error_rate" => p.connector_error_rate = f()?,
+                "connector_timeout_rate" => p.connector_timeout_rate = f()?,
+                "connector_rate_limit_rate" => p.connector_rate_limit_rate = f()?,
+                "enrich_fail_rate" => p.enrich_fail_rate = f()?,
+                "sqs_dup_rate" => p.sqs_dup_rate = f()?,
+                "sqs_delay_rate" => p.sqs_delay_rate = f()?,
+                "sqs_delay_ms" => p.sqs_delay_ms = u()?,
+                "sink_reject_rate" => p.sink_reject_rate = f()?,
+                "burst_period_ms" => p.burst_period = u()?,
+                "burst_len_ms" => p.burst_len = u()?,
+                "burst_factor" => p.burst_factor = f()?,
+                "breaker_threshold" => p.breaker_threshold = u()? as u32,
+                "breaker_cooldown_ms" => p.breaker_cooldown = u()?,
+                "retry" => {
+                    let r = v.as_obj().ok_or_else(|| anyhow!("fault.retry must be an object"))?;
+                    for (rk, rv) in r {
+                        let ru = || {
+                            rv.as_u64()
+                                .ok_or_else(|| anyhow!("fault.retry.{rk} must be an integer"))
+                        };
+                        match rk.as_str() {
+                            "base_ms" => p.retry.base = ru()?,
+                            "cap_ms" => p.retry.cap = ru()?,
+                            "budget" => p.retry.budget = ru()? as u32,
+                            "jitter" => {
+                                p.retry.jitter = rv
+                                    .as_f64()
+                                    .ok_or_else(|| anyhow!("fault.retry.jitter must be a number"))?
+                            }
+                            other => bail!("unknown fault.retry key: {other}"),
+                        }
+                    }
+                }
+                "outages" => {
+                    let arr =
+                        v.as_arr().ok_or_else(|| anyhow!("fault.outages must be an array"))?;
+                    for o in arr {
+                        let site = FaultSite::parse(
+                            o.get("site")
+                                .and_then(Json::as_str)
+                                .ok_or_else(|| anyhow!("outage missing site"))?,
+                        )?;
+                        let from = o
+                            .get("from_ms")
+                            .and_then(Json::as_u64)
+                            .ok_or_else(|| anyhow!("outage missing from_ms"))?;
+                        let until = o
+                            .get("until_ms")
+                            .and_then(Json::as_u64)
+                            .ok_or_else(|| anyhow!("outage missing until_ms"))?;
+                        p.outages.push(Outage { site, from, until });
+                    }
+                }
+                other => bail!("unknown fault key: {other}"),
+            }
+        }
+        p.validate()?;
+        Ok(p)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, rate) in [
+            ("connector_error_rate", self.connector_error_rate),
+            ("connector_timeout_rate", self.connector_timeout_rate),
+            ("connector_rate_limit_rate", self.connector_rate_limit_rate),
+            ("enrich_fail_rate", self.enrich_fail_rate),
+            ("sqs_dup_rate", self.sqs_dup_rate),
+            ("sqs_delay_rate", self.sqs_delay_rate),
+            ("sink_reject_rate", self.sink_reject_rate),
+        ] {
+            if !(0.0..=1.0).contains(&rate) {
+                bail!("fault.{name} must be a probability, got {rate}");
+            }
+        }
+        if self.sqs_delay_rate > 0.0 && self.sqs_delay_ms == 0 {
+            bail!("fault.sqs_delay_ms must be > 0 when sqs_delay_rate is set");
+        }
+        if self.burst_period > 0 && self.burst_len > self.burst_period {
+            bail!("fault burst_len_ms must not exceed burst_period_ms");
+        }
+        if self.burst_factor < 0.0 {
+            bail!("fault.burst_factor must be >= 0");
+        }
+        if !(0.0..1.0).contains(&self.retry.jitter) {
+            bail!("fault.retry.jitter must be in [0, 1)");
+        }
+        if self.retry.base == 0 || self.retry.cap < self.retry.base {
+            bail!("fault.retry needs base_ms >= 1 and cap_ms >= base_ms");
+        }
+        for o in &self.outages {
+            if o.from >= o.until {
+                bail!("fault outage window must satisfy from_ms < until_ms");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// JSON rendering, so a failing chaos run can print the exact plan (plus
+/// seed) needed to replay it.
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, w: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            w,
+            "{{\"seed\": {}, \"connector_error_rate\": {}, \"connector_timeout_rate\": {}, \
+             \"connector_rate_limit_rate\": {}, \"enrich_fail_rate\": {}, \"sqs_dup_rate\": {}, \
+             \"sqs_delay_rate\": {}, \"sqs_delay_ms\": {}, \"sink_reject_rate\": {}, \
+             \"burst_period_ms\": {}, \"burst_len_ms\": {}, \"burst_factor\": {}, \
+             \"retry\": {{\"base_ms\": {}, \"cap_ms\": {}, \"budget\": {}, \"jitter\": {}}}, \
+             \"breaker_threshold\": {}, \"breaker_cooldown_ms\": {}, \"outages\": [",
+            self.seed,
+            self.connector_error_rate,
+            self.connector_timeout_rate,
+            self.connector_rate_limit_rate,
+            self.enrich_fail_rate,
+            self.sqs_dup_rate,
+            self.sqs_delay_rate,
+            self.sqs_delay_ms,
+            self.sink_reject_rate,
+            self.burst_period,
+            self.burst_len,
+            self.burst_factor,
+            self.retry.base,
+            self.retry.cap,
+            self.retry.budget,
+            self.retry.jitter,
+            self.breaker_threshold,
+            self.breaker_cooldown,
+        )?;
+        for (i, o) in self.outages.iter().enumerate() {
+            if i > 0 {
+                write!(w, ", ")?;
+            }
+            write!(
+                w,
+                "{{\"site\": \"{}\", \"from_ms\": {}, \"until_ms\": {}}}",
+                o.site.name(),
+                o.from,
+                o.until
+            )?;
+        }
+        write!(w, "]}}")
+    }
+}
+
+/// What a connector-poll fault looks like to the worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConnectorFault {
+    /// HTTP 429: the source throttled us.
+    RateLimited,
+    /// Transient 5xx.
+    ServerError,
+    /// The fetch timed out entirely (costs the full timeout budget).
+    Timeout,
+}
+
+/// What an SQS delivery fault does to the message's visibility lease.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SqsFault {
+    /// Lease shrunk to zero: the message redelivers immediately — a
+    /// duplicate delivery through the normal at-least-once machinery.
+    Duplicate,
+    /// Lease shrunk to the given ms: an early redelivery races the
+    /// in-flight completion.
+    Delay(SimTime),
+}
+
+/// Fault/recovery accounting, surfaced by the monitor and the recovery
+/// tables in `figure4_day` / `chaos_day`.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// RNG decisions taken. Stays 0 for an empty plan — the cheap proof
+    /// that the no-fault path never touches the chaos RNG.
+    pub draws: u64,
+    pub injected_connector_error: u64,
+    pub injected_connector_timeout: u64,
+    pub injected_rate_limit: u64,
+    pub injected_enrich: u64,
+    pub injected_sqs_dup: u64,
+    pub injected_sqs_delay: u64,
+    pub retries_enrich: u64,
+    /// Items whose enrichment batch exhausted its retry budget (pipeline
+    /// poison DLQ).
+    pub enrich_poisoned: u64,
+    pub breaker_opens: u64,
+    pub breaker_closes: u64,
+    /// Polls answered by an open breaker without touching the source.
+    pub breaker_fast_fails: u64,
+}
+
+impl FaultCounters {
+    pub fn total_injected(&self) -> u64 {
+        self.injected_connector_error
+            + self.injected_connector_timeout
+            + self.injected_rate_limit
+            + self.injected_enrich
+            + self.injected_sqs_dup
+            + self.injected_sqs_delay
+    }
+}
+
+/// Per-channel circuit breaker state.
+#[derive(Debug, Clone, Default)]
+struct Breaker {
+    consecutive: u32,
+    open_until: SimTime,
+    open: bool,
+}
+
+/// The runtime side of a [`FaultPlan`]: owns the dedicated chaos RNG
+/// (sub-streamed per site so sites stay decorrelated), the per-channel
+/// circuit breakers, and the fault counters.
+pub struct ChaosInjector {
+    plan: FaultPlan,
+    enabled: bool,
+    root: Rng,
+    rng_connector: Rng,
+    rng_enrich: Rng,
+    rng_sqs: Rng,
+    rng_retry: Rng,
+    breakers: Vec<Breaker>,
+    pub counters: FaultCounters,
+}
+
+impl ChaosInjector {
+    /// `default_seed` is used when the plan doesn't pin its own.
+    pub fn new(plan: FaultPlan, default_seed: u64) -> Self {
+        let seed = if plan.seed != 0 { plan.seed } else { default_seed };
+        let root = Rng::new(seed);
+        ChaosInjector {
+            enabled: plan.enabled(),
+            rng_connector: root.stream(1),
+            rng_enrich: root.stream(2),
+            rng_sqs: root.stream(3),
+            rng_retry: root.stream(4),
+            root,
+            plan,
+            breakers: Vec::new(),
+            counters: FaultCounters::default(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Burst multiplier at `now` (1.0 outside burst windows).
+    fn factor(&self, now: SimTime) -> f64 {
+        if self.plan.burst_period > 0 && now % self.plan.burst_period < self.plan.burst_len {
+            self.plan.burst_factor
+        } else {
+            1.0
+        }
+    }
+
+    fn outage_active(&self, site: FaultSite, now: SimTime) -> bool {
+        self.plan.outages.iter().any(|o| o.site == site && o.from <= now && now < o.until)
+    }
+
+    /// One seeded Bernoulli decision (counted).
+    fn roll(rng: &mut Rng, draws: &mut u64, p: f64) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        *draws += 1;
+        rng.chance(p.min(1.0))
+    }
+
+    /// Should this connector poll fail, and how? `None` = poll normally.
+    pub fn connector_fault(&mut self, now: SimTime) -> Option<ConnectorFault> {
+        if !self.enabled {
+            return None;
+        }
+        if self.outage_active(FaultSite::ConnectorPoll, now) {
+            self.counters.injected_connector_error += 1;
+            return Some(ConnectorFault::ServerError);
+        }
+        let f = self.factor(now);
+        if Self::roll(
+            &mut self.rng_connector,
+            &mut self.counters.draws,
+            self.plan.connector_rate_limit_rate * f,
+        ) {
+            self.counters.injected_rate_limit += 1;
+            return Some(ConnectorFault::RateLimited);
+        }
+        if Self::roll(
+            &mut self.rng_connector,
+            &mut self.counters.draws,
+            self.plan.connector_timeout_rate * f,
+        ) {
+            self.counters.injected_connector_timeout += 1;
+            return Some(ConnectorFault::Timeout);
+        }
+        if Self::roll(
+            &mut self.rng_connector,
+            &mut self.counters.draws,
+            self.plan.connector_error_rate * f,
+        ) {
+            self.counters.injected_connector_error += 1;
+            return Some(ConnectorFault::ServerError);
+        }
+        None
+    }
+
+    /// Should this enrichment batch fail transiently?
+    pub fn enrich_fault(&mut self, now: SimTime) -> bool {
+        if !self.enabled {
+            return false;
+        }
+        if self.outage_active(FaultSite::Enrich, now) {
+            self.counters.injected_enrich += 1;
+            return true;
+        }
+        let hit = Self::roll(
+            &mut self.rng_enrich,
+            &mut self.counters.draws,
+            self.plan.enrich_fail_rate * self.factor(now),
+        );
+        if hit {
+            self.counters.injected_enrich += 1;
+        }
+        hit
+    }
+
+    /// Should this SQS delivery be duplicated or redelivered early?
+    pub fn sqs_fault(&mut self, now: SimTime) -> Option<SqsFault> {
+        if !self.enabled {
+            return None;
+        }
+        if self.outage_active(FaultSite::SqsDeliver, now) {
+            self.counters.injected_sqs_dup += 1;
+            return Some(SqsFault::Duplicate);
+        }
+        let f = self.factor(now);
+        if Self::roll(&mut self.rng_sqs, &mut self.counters.draws, self.plan.sqs_dup_rate * f) {
+            self.counters.injected_sqs_dup += 1;
+            return Some(SqsFault::Duplicate);
+        }
+        if Self::roll(&mut self.rng_sqs, &mut self.counters.draws, self.plan.sqs_delay_rate * f) {
+            self.counters.injected_sqs_delay += 1;
+            return Some(SqsFault::Delay(self.plan.sqs_delay_ms));
+        }
+        None
+    }
+
+    /// Backoff before enrichment retry number `attempt` (0-based); `None`
+    /// = budget exhausted, poison the batch.
+    pub fn retry_delay(&mut self, attempt: u32) -> Option<SimTime> {
+        self.plan.retry.delay(attempt, &mut self.rng_retry)
+    }
+
+    /// Sink-side chaos handle: the sink owns its rejection decisions and
+    /// retry queue, fed by a sub-stream of the same chaos seed.
+    pub fn sink_chaos(&self) -> Option<SinkChaos> {
+        let outages: Vec<(SimTime, SimTime)> = self
+            .plan
+            .outages
+            .iter()
+            .filter(|o| o.site == FaultSite::SinkFlush)
+            .map(|o| (o.from, o.until))
+            .collect();
+        if self.plan.sink_reject_rate <= 0.0 && outages.is_empty() {
+            return None;
+        }
+        Some(SinkChaos {
+            reject_rate: self.plan.sink_reject_rate,
+            burst_period: self.plan.burst_period,
+            burst_len: self.plan.burst_len,
+            burst_factor: self.plan.burst_factor,
+            outages,
+            retry: self.plan.retry,
+            rng: self.root.stream(5),
+            draws: 0,
+        })
+    }
+
+    // -- circuit breakers ---------------------------------------------------
+
+    pub fn breaker_enabled(&self) -> bool {
+        self.plan.breaker_threshold > 0
+    }
+
+    fn breaker(&mut self, channel: u16) -> &mut Breaker {
+        let idx = channel as usize;
+        if self.breakers.len() <= idx {
+            self.breakers.resize(idx + 1, Breaker::default());
+        }
+        &mut self.breakers[idx]
+    }
+
+    /// True when the channel's breaker is open at `now`: the worker must
+    /// fail fast (supervised) without touching the source. Once the
+    /// cooldown elapses a single half-open trial poll is let through.
+    pub fn breaker_check(&mut self, channel: u16, now: SimTime) -> bool {
+        if !self.breaker_enabled() {
+            return false;
+        }
+        let b = self.breaker(channel);
+        if b.open && now < b.open_until {
+            self.counters.breaker_fast_fails += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Record a failed poll; returns true if this error opened (or
+    /// re-armed) the breaker.
+    pub fn breaker_note_error(&mut self, channel: u16, now: SimTime) -> bool {
+        if !self.breaker_enabled() {
+            return false;
+        }
+        let threshold = self.plan.breaker_threshold;
+        let cooldown = self.plan.breaker_cooldown;
+        let b = self.breaker(channel);
+        b.consecutive += 1;
+        if b.consecutive >= threshold {
+            b.open_until = now + cooldown;
+            if !b.open {
+                b.open = true;
+                self.counters.breaker_opens += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Record a successful poll: resets the failure streak and closes an
+    /// open breaker (the half-open trial succeeded).
+    pub fn breaker_note_success(&mut self, channel: u16) {
+        if !self.breaker_enabled() {
+            return;
+        }
+        let b = self.breaker(channel);
+        b.consecutive = 0;
+        if b.open {
+            b.open = false;
+            self.counters.breaker_closes += 1;
+        }
+    }
+
+    /// Channels whose breaker is currently open.
+    pub fn breakers_open(&self) -> usize {
+        self.breakers.iter().filter(|b| b.open).count()
+    }
+}
+
+/// The sink's slice of the chaos plan: per-doc bulk rejection decisions
+/// plus the shared retry policy, with its own decorrelated RNG stream.
+pub struct SinkChaos {
+    pub reject_rate: f64,
+    burst_period: SimTime,
+    burst_len: SimTime,
+    burst_factor: f64,
+    outages: Vec<(SimTime, SimTime)>,
+    pub retry: RetryPolicy,
+    rng: Rng,
+    /// Seeded decisions taken (0 proves the no-fault path never draws).
+    pub draws: u64,
+}
+
+impl SinkChaos {
+    /// Does this doc's bulk slot fail (ES-style partial bulk failure)?
+    pub fn reject(&mut self, now: SimTime) -> bool {
+        if self.outages.iter().any(|&(from, until)| from <= now && now < until) {
+            return true;
+        }
+        if self.reject_rate <= 0.0 {
+            return false;
+        }
+        let f = if self.burst_period > 0 && now % self.burst_period < self.burst_len {
+            self.burst_factor
+        } else {
+            1.0
+        };
+        self.draws += 1;
+        self.rng.chance((self.reject_rate * f).min(1.0))
+    }
+
+    /// Backoff before retry number `attempt` (0-based); `None` = poison.
+    pub fn retry_delay(&mut self, attempt: u32) -> Option<SimTime> {
+        self.retry.delay(attempt, &mut self.rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_disabled_and_never_draws() {
+        let mut inj = ChaosInjector::new(FaultPlan::default(), 42);
+        assert!(!inj.enabled());
+        for t in 0..10_000 {
+            assert_eq!(inj.connector_fault(t), None);
+            assert!(!inj.enrich_fault(t));
+            assert_eq!(inj.sqs_fault(t), None);
+            assert!(!inj.breaker_check(0, t));
+        }
+        assert_eq!(inj.counters.draws, 0, "no-fault path must not touch the RNG");
+        assert!(inj.sink_chaos().is_none());
+    }
+
+    #[test]
+    fn injector_is_deterministic_per_seed() {
+        let run = |seed: u64| -> Vec<Option<ConnectorFault>> {
+            let mut inj = ChaosInjector::new(FaultPlan::chaotic(), seed);
+            (0..2_000).map(|t| inj.connector_fault(t)).collect()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8), "different seeds must differ");
+    }
+
+    #[test]
+    fn plan_seed_pins_the_stream_regardless_of_default() {
+        let mut plan = FaultPlan::chaotic();
+        plan.seed = 99;
+        let mut a = ChaosInjector::new(plan.clone(), 1);
+        let mut b = ChaosInjector::new(plan, 2);
+        let fa: Vec<_> = (0..500).map(|t| a.connector_fault(t)).collect();
+        let fb: Vec<_> = (0..500).map(|t| b.connector_fault(t)).collect();
+        assert_eq!(fa, fb);
+    }
+
+    #[test]
+    fn scripted_outage_fails_deterministically() {
+        let mut plan = FaultPlan::default();
+        plan.outages.push(Outage { site: FaultSite::ConnectorPoll, from: 100, until: 200 });
+        let mut inj = ChaosInjector::new(plan, 42);
+        assert!(inj.enabled());
+        assert_eq!(inj.connector_fault(99), None);
+        assert_eq!(inj.connector_fault(100), Some(ConnectorFault::ServerError));
+        assert_eq!(inj.connector_fault(199), Some(ConnectorFault::ServerError));
+        assert_eq!(inj.connector_fault(200), None);
+        assert_eq!(inj.counters.injected_connector_error, 2);
+        // Outage decisions are schedule lookups and the plan's rates are
+        // all zero, so the chaos RNG is never touched.
+        assert_eq!(inj.counters.draws, 0);
+    }
+
+    #[test]
+    fn burst_window_multiplies_rates() {
+        let mut plan = FaultPlan::default();
+        plan.enrich_fail_rate = 0.05;
+        plan.burst_period = 1_000;
+        plan.burst_len = 100;
+        plan.burst_factor = 10.0;
+        let mut inj = ChaosInjector::new(plan, 3);
+        let mut in_burst = 0u32;
+        let mut outside = 0u32;
+        for t in 0..100_000u64 {
+            let hit = inj.enrich_fault(t);
+            if t % 1_000 < 100 {
+                in_burst += hit as u32;
+            } else {
+                outside += hit as u32;
+            }
+        }
+        // 10% of the time at 50% vs 90% of the time at 5%: the burst share
+        // should clearly dominate per-opportunity.
+        let burst_rate = in_burst as f64 / 10_000.0;
+        let base_rate = outside as f64 / 90_000.0;
+        assert!(burst_rate > 4.0 * base_rate, "burst={burst_rate} base={base_rate}");
+    }
+
+    #[test]
+    fn retry_policy_grows_caps_and_exhausts() {
+        let p = RetryPolicy { base: 100, cap: 1_000, budget: 5, jitter: 0.0 };
+        let mut rng = Rng::new(1);
+        let delays: Vec<_> = (0..5).map(|a| p.delay(a, &mut rng).unwrap()).collect();
+        assert_eq!(delays, vec![100, 200, 400, 800, 1_000]);
+        assert_eq!(p.delay(5, &mut rng), None, "budget exhausted");
+        assert_eq!(p.delay(99, &mut rng), None);
+    }
+
+    #[test]
+    fn retry_jitter_stays_in_bounds() {
+        let p = RetryPolicy { base: 1_000, cap: 1_000_000, budget: 10, jitter: 0.25 };
+        let mut rng = Rng::new(5);
+        for attempt in 0..10 {
+            let raw = 1_000u64.saturating_mul(1 << attempt.min(20)).min(1_000_000);
+            for _ in 0..200 {
+                let d = p.delay(attempt, &mut rng).unwrap();
+                let lo = (raw as f64 * 0.75) as u64;
+                let hi = (raw as f64 * 1.25) as u64 + 1;
+                assert!(d >= lo && d <= hi, "attempt {attempt}: {d} not in [{lo}, {hi}]");
+            }
+        }
+    }
+
+    #[test]
+    fn breaker_opens_after_threshold_and_closes_on_success() {
+        let mut plan = FaultPlan::default();
+        plan.breaker_threshold = 3;
+        plan.breaker_cooldown = 1_000;
+        let mut inj = ChaosInjector::new(plan, 1);
+        assert!(!inj.breaker_check(2, 0));
+        assert!(!inj.breaker_note_error(2, 0));
+        assert!(!inj.breaker_note_error(2, 10));
+        assert!(inj.breaker_note_error(2, 20), "third consecutive error opens");
+        assert_eq!(inj.counters.breaker_opens, 1);
+        assert!(inj.breaker_check(2, 500), "open: fail fast");
+        assert_eq!(inj.counters.breaker_fast_fails, 1);
+        // Cooldown elapsed: half-open trial is let through.
+        assert!(!inj.breaker_check(2, 1_020));
+        // Trial fails: re-arms without double-counting the open.
+        inj.breaker_note_error(2, 1_020);
+        assert_eq!(inj.counters.breaker_opens, 1);
+        assert!(inj.breaker_check(2, 1_500));
+        // Trial succeeds after the next cooldown: breaker closes.
+        assert!(!inj.breaker_check(2, 3_000));
+        inj.breaker_note_success(2);
+        assert_eq!(inj.counters.breaker_closes, 1);
+        assert!(!inj.breaker_check(2, 3_001));
+        assert_eq!(inj.breakers_open(), 0);
+    }
+
+    #[test]
+    fn breakers_are_per_channel() {
+        let mut plan = FaultPlan::default();
+        plan.breaker_threshold = 1;
+        let mut inj = ChaosInjector::new(plan, 1);
+        assert!(inj.breaker_note_error(0, 0));
+        assert!(inj.breaker_check(0, 1));
+        assert!(!inj.breaker_check(1, 1), "channel 1 unaffected");
+    }
+
+    #[test]
+    fn sink_chaos_rejects_deterministically_and_respects_budget() {
+        let mut plan = FaultPlan::chaotic();
+        plan.sink_reject_rate = 0.5;
+        let inj = ChaosInjector::new(plan, 11);
+        let mut a = inj.sink_chaos().unwrap();
+        let mut b = inj.sink_chaos().unwrap();
+        let ra: Vec<bool> = (0..1_000).map(|t| a.reject(t)).collect();
+        let rb: Vec<bool> = (0..1_000).map(|t| b.reject(t)).collect();
+        assert_eq!(ra, rb, "same seed, same rejections");
+        assert!(ra.iter().any(|&x| x) && ra.iter().any(|&x| !x));
+        assert_eq!(a.retry_delay(a.retry.budget), None);
+    }
+
+    #[test]
+    fn plan_json_round_trip_and_validation() {
+        let text = r#"{
+            "seed": 7,
+            "connector_error_rate": 0.1,
+            "connector_timeout_rate": 0.05,
+            "enrich_fail_rate": 0.02,
+            "sqs_dup_rate": 0.01,
+            "sink_reject_rate": 0.2,
+            "burst_period_ms": 60000, "burst_len_ms": 5000, "burst_factor": 4.0,
+            "retry": {"base_ms": 50, "cap_ms": 5000, "budget": 3, "jitter": 0.1},
+            "breaker_threshold": 5, "breaker_cooldown_ms": 10000,
+            "outages": [{"site": "connector", "from_ms": 1000, "until_ms": 2000}]
+        }"#;
+        let j = Json::parse(text).unwrap();
+        let p = FaultPlan::from_json(&j).unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.retry.budget, 3);
+        assert_eq!(p.outages.len(), 1);
+        assert_eq!(p.outages[0].site, FaultSite::ConnectorPoll);
+        assert!(p.enabled());
+        // Display renders replayable JSON that parses back.
+        let rendered = p.to_string();
+        let p2 = FaultPlan::from_json(&Json::parse(&rendered).unwrap()).unwrap();
+        assert_eq!(p2.seed, p.seed);
+        assert_eq!(p2.outages.len(), 1);
+        assert_eq!(p2.retry, p.retry);
+
+        // Bad values refuse.
+        let bad = Json::parse(r#"{"connector_error_rate": 1.5}"#).unwrap();
+        assert!(FaultPlan::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"not_a_key": 1}"#).unwrap();
+        assert!(FaultPlan::from_json(&bad).is_err());
+        let bad =
+            Json::parse(r#"{"outages": [{"site": "connector", "from_ms": 5, "until_ms": 5}]}"#)
+                .unwrap();
+        assert!(FaultPlan::from_json(&bad).is_err());
+    }
+}

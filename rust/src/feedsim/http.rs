@@ -22,6 +22,10 @@ pub struct HttpConfig {
     pub error_rate: f64,
     /// Probability a fetch times out entirely.
     pub timeout_rate: f64,
+    /// Probability the origin throttles the fetch (429 Too Many
+    /// Requests). Default 0.0 — the RNG draw is gated on the rate being
+    /// positive, so existing seeds replay byte-identically.
+    pub rate_limit_rate: f64,
     /// Probability a feed URL has moved (emits one 301 hop).
     pub redirect_rate: f64,
     /// Median fetch latency, ms.
@@ -38,6 +42,7 @@ impl Default for HttpConfig {
         HttpConfig {
             error_rate: 0.01,
             timeout_rate: 0.003,
+            rate_limit_rate: 0.0,
             redirect_rate: 0.004,
             latency_median_ms: 120.0,
             latency_sigma: 0.7,
@@ -54,6 +59,8 @@ pub enum HttpStatus {
     NotModified,
     MovedPermanently { location: String },
     ServerError(u16),
+    /// 429 — the origin is throttling this client.
+    TooManyRequests,
     Timeout,
 }
 
@@ -89,6 +96,7 @@ pub struct HttpCounters {
     pub redirects: u64,
     pub errors: u64,
     pub timeouts: u64,
+    pub rate_limited: u64,
     pub bytes_served: u64,
 }
 
@@ -165,6 +173,19 @@ impl HttpSim {
                 body: None,
                 items: Vec::new(),
                 latency_ms: latency,
+            };
+        }
+        // Gated on the rate so a 0.0 config never draws — byte-identical
+        // RNG stream for configs that predate this status.
+        if self.cfg.rate_limit_rate > 0.0 && self.rng.chance(self.cfg.rate_limit_rate) {
+            self.counters.rate_limited += 1;
+            return HttpResponse {
+                status: HttpStatus::TooManyRequests,
+                etag: None,
+                last_modified: None,
+                body: None,
+                items: Vec::new(),
+                latency_ms: latency / 4 + 1, // throttles answer fast
             };
         }
 
@@ -325,6 +346,17 @@ mod tests {
         let resp = http.fetch(&mut u, &url, &Conditional::default(), HOUR);
         assert_eq!(resp.status, HttpStatus::Timeout);
         assert_eq!(resp.latency_ms, http.cfg.timeout_ms);
+    }
+
+    #[test]
+    fn rate_limits_injected() {
+        let (mut http, mut u) = world();
+        http.cfg.rate_limit_rate = 1.0;
+        let url = u.profile(2).url.clone();
+        let resp = http.fetch(&mut u, &url, &Conditional::default(), HOUR);
+        assert_eq!(resp.status, HttpStatus::TooManyRequests);
+        assert_eq!(http.counters.rate_limited, 1);
+        assert!(resp.body.is_none());
     }
 
     #[test]

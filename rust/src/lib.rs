@@ -16,6 +16,7 @@ pub mod benchlib;
 pub mod config;
 pub mod connector;
 pub mod dedup;
+pub mod fault;
 pub mod feedsim;
 pub mod metrics;
 pub mod pipeline;

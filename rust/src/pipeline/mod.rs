@@ -185,13 +185,29 @@ pub fn bootstrap_with(
         } else {
             None
         };
+        // With circuit breakers armed, sustained source failure surfaces
+        // as supervised errors from the breaker fast-fail path; Backoff
+        // spaces the routee's restarts (degradation) instead of the hot
+        // Restart loop, and the unbounded retry budget means the pool is
+        // never stopped — streams re-schedule, they are not lost. The
+        // classic Restart strategy is kept verbatim when breakers are off
+        // so default runs stay byte-identical.
+        let strategy = if cfg.fault.breaker_threshold > 0 {
+            SupervisorStrategy::Backoff {
+                base: cfg.fault.retry.base,
+                cap: cfg.fault.retry.cap,
+                max_retries: u32::MAX,
+            }
+        } else {
+            SupervisorStrategy::Restart { max_retries: 50, within: 60_000 }
+        };
         let pool = sys.spawn_pool(
             &name,
             // paper: "pool of actors with bounded stable priority mail box"
             MailboxKind::BoundedStablePriority(mailbox),
             Box::new(move |_| Box::new(workers::ChannelWorker { channel })),
             size.max(1),
-            SupervisorStrategy::Restart { max_retries: 50, within: 60_000 },
+            strategy,
             resizer,
         );
         pools.push(Some(pool));

@@ -28,6 +28,18 @@ impl Actor<World> for DeadLettersMonitor {
         // Also surface backlog and in-flight gauges for the dashboards.
         world.metrics.gauge("JobsInFlight", now, world.counters.jobs_in_flight() as f64);
         world.metrics.gauge("SinkDocs", now, world.sink.doc_count() as f64);
+        // Fault/recovery gauges, only when chaos is active: a no-fault run
+        // publishes exactly the metrics it always did.
+        if world.fault.enabled() {
+            let fc = &world.fault.counters;
+            world.metrics.gauge("InjectedFaults", now, fc.total_injected() as f64);
+            world.metrics.gauge("BreakerOpens", now, fc.breaker_opens as f64);
+            world.metrics.gauge("BreakersOpenNow", now, world.fault.breakers_open() as f64);
+            let dlq = fc.enrich_poisoned + world.sink.counters.docs_poisoned;
+            world.metrics.gauge("PoisonDlqDepth", now, dlq as f64);
+            world.metrics.gauge("SinkRetryDepth", now, world.sink.retry_depth() as f64);
+            world.metrics.gauge("EnrichRetryDepth", now, world.enrich_retry_depth() as f64);
+        }
         world.metrics.evaluate_alarms(now);
         Ok(())
     }

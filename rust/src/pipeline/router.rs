@@ -94,6 +94,25 @@ impl Actor<World> for FeedRouter {
                 }
                 continue;
             };
+            // Chaos: duplicate or delay this delivery by shrinking the
+            // message's visibility lease. Zero lease = the message is
+            // visible again immediately and redelivers in a later pull —
+            // a genuine duplicate delivery exercising the at-least-once
+            // contract (the second completion is a counted
+            // LateCompletion; re-fetched items fall out at dedup).
+            if world.fault.enabled() {
+                if let Some(f) = world.fault.sqs_fault(now) {
+                    let lease = match f {
+                        crate::fault::SqsFault::Duplicate => 0,
+                        crate::fault::SqsFault::Delay(d) => d,
+                    };
+                    if from_priority {
+                        world.queues.priority.change_visibility(now, m.handle, lease);
+                    } else {
+                        world.queues.main.change_visibility(now, m.handle, lease);
+                    }
+                }
+            }
             world.counters.jobs_dispatched += 1;
             let pri = if from_priority { PRIORITY_HIGH } else { PRIORITY_NORMAL };
             ctx.send_pri(

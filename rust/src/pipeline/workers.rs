@@ -15,7 +15,8 @@
 use super::messages::{FeedJob, StreamPolled};
 use super::world::World;
 use crate::actor::{Actor, ActorError, ActorResult, Ctx, Msg};
-use crate::connector::ChannelId;
+use crate::connector::{ChannelId, PollResult};
+use crate::fault::ConnectorFault;
 use crate::store::streams::PollOutcome;
 
 pub struct ChannelWorker {
@@ -34,6 +35,19 @@ impl Actor<World> for ChannelWorker {
             return Err(ActorError::new("injected worker crash"));
         }
 
+        // Circuit breaker: after sustained poll failures this channel's
+        // breaker is open and the worker fails fast without touching the
+        // source. The supervised error leaves the stream in-process (the
+        // stale re-pick recovers it) and the SQS message undeleted (it
+        // redelivers after the visibility timeout) — degraded, never lost.
+        if world.fault.breaker_check(self.channel.0, ctx.now()) {
+            return Err(ActorError::new(format!(
+                "circuit breaker open for channel {} ({})",
+                self.channel.0,
+                world.connectors.name(self.channel).unwrap_or("?"),
+            )));
+        }
+
         // Registry dispatch. An unmapped channel is a supervised failure —
         // the job stays undeleted in SQS and either redelivers once a
         // connector appears or lands in the DLQ where the monitor sees it.
@@ -44,11 +58,38 @@ impl Actor<World> for ChannelWorker {
                 world.connectors.name(self.channel).unwrap_or("?"),
             )));
         };
-        let result = connector.poll(ctx, world, job.stream_id);
+
+        // Chaos: the source answers 429/5xx/timeout instead of items. The
+        // failed poll flows through the normal outcome path so the
+        // schedule backs off and SQS acks exactly as for a real error.
+        let result = match world.fault.connector_fault(ctx.now()) {
+            Some(fault) => {
+                world.counters.fetch_errors += 1;
+                let latency = match fault {
+                    ConnectorFault::Timeout => world.http.cfg.timeout_ms,
+                    ConnectorFault::RateLimited => {
+                        world.counters.rate_limited += 1;
+                        5
+                    }
+                    ConnectorFault::ServerError => 5,
+                };
+                ctx.take(latency);
+                PollResult::error()
+            }
+            None => connector.poll(ctx, world, job.stream_id),
+        };
         match result.outcome {
             PollOutcome::Items(_) => world.counters.polls_ok += 1,
             PollOutcome::NotModified => world.counters.polls_not_modified += 1,
             PollOutcome::Error => world.counters.polls_error += 1,
+        }
+        if world.fault.breaker_enabled() {
+            match result.outcome {
+                PollOutcome::Error => {
+                    world.fault.breaker_note_error(self.channel.0, ctx.now());
+                }
+                _ => world.fault.breaker_note_success(self.channel.0),
+            }
         }
         // Completions route to the updater owning the stream's shard:
         // bucket writes for different shards never share a mailbox.
@@ -281,5 +322,44 @@ mod tests {
         let st = sys.stats(wk);
         assert_eq!(st.failed, 1);
         assert_eq!(w.counters.jobs_completed, 0, "crashed before reporting");
+    }
+
+    #[test]
+    fn injected_connector_fault_reports_error_outcome() {
+        // A chaos-injected poll failure is indistinguishable downstream
+        // from a real one: the outcome still reaches the updater so the
+        // schedule backs off and SQS acks.
+        let (mut sys, mut w, wk) = setup("news");
+        let mut plan = crate::fault::FaultPlan::default();
+        plan.connector_error_rate = 1.0;
+        w.fault = crate::fault::ChaosInjector::new(plan, 7);
+        sys.tell_at(DAY, wk, job(1));
+        sys.run_to_idle(&mut w);
+        assert_eq!(w.counters.jobs_completed, 1, "failed poll still reports");
+        assert_eq!(w.counters.polls_error, 1);
+        assert_eq!(w.counters.fetch_errors, 1);
+        assert_eq!(w.fault.counters.injected_connector_error, 1);
+        assert_eq!(w.metrics.get("got-error").unwrap().total(), 1.0);
+    }
+
+    #[test]
+    fn breaker_opens_after_sustained_failures_and_fast_fails() {
+        let (mut sys, mut w, wk) = setup("news");
+        let mut plan = crate::fault::FaultPlan::default();
+        plan.connector_error_rate = 1.0;
+        plan.breaker_threshold = 3;
+        plan.breaker_cooldown = crate::sim::DAY; // never half-opens here
+        w.fault = crate::fault::ChaosInjector::new(plan, 7);
+        for i in 0..6u64 {
+            sys.tell_at(DAY + i, wk, job(1));
+        }
+        sys.run_to_idle(&mut w);
+        assert_eq!(w.fault.counters.breaker_opens, 1);
+        assert_eq!(w.fault.counters.breaker_fast_fails, 3, "polls 4-6 fail fast");
+        assert_eq!(w.counters.polls_error, 3, "only pre-trip polls hit the source");
+        // Fast-failed jobs are supervised errors: no outcome reported,
+        // the SQS message stays undeleted and redelivers.
+        assert_eq!(sys.stats(wk).failed, 3);
+        assert_eq!(w.fault.breakers_open(), 1);
     }
 }

@@ -7,12 +7,13 @@ use crate::actor::DeadLetters;
 use crate::config::AlertMixConfig;
 use crate::connector::ConnectorRegistry;
 use crate::dedup::{DedupVerdict, Deduper};
+use crate::fault::ChaosInjector;
 use crate::feedsim::{
     FeedUniverse, HttpConfig, HttpSim, SocialConfig, SocialSim, SysmonConfig, SysmonSim,
     UniverseConfig,
 };
 use crate::metrics::MetricRegistry;
-use crate::runtime::{Batcher, BatcherConfig, CpuFallbackEnricher, EnrichBackend};
+use crate::runtime::{Batcher, BatcherConfig, CpuFallbackEnricher, EnrichBackend, Enrichment};
 use crate::sim::SimTime;
 use crate::sink::{ElasticLite, SinkDoc};
 use crate::sqs::{DualQueue, ReceivedMessage, RedrivePolicy};
@@ -21,8 +22,24 @@ use crate::store::streams::StreamRecord;
 use crate::text::FEATURE_DIM;
 use crate::util::IdGen;
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
+
+/// Chaos-seed salt: the fault injector gets its own decorrelated RNG
+/// universe derived from the experiment seed (unless the plan pins one).
+const FAULT_SEED_SALT: u64 = 0xFA17_5EED;
+
+/// An enrichment batch that failed transiently, parked with its backoff
+/// deadline. The staged columns are copied out (the batcher's staging area
+/// must drain before the next push), retried on the EnrichTick timer, and
+/// poisoned to the DLQ counters once the retry budget exhausts.
+struct EnrichRetry {
+    tickets: Vec<u64>,
+    features: Vec<f32>,
+    /// Retries already spent (the next delay draw uses this).
+    attempts: u32,
+    not_before: SimTime,
+}
 
 /// End-to-end accounting, asserted by integration tests
 /// (conservation: fetched == ingested + deduped).
@@ -140,6 +157,11 @@ pub struct World {
     /// actor reads it; the system writes it).
     pub dead_letters: Rc<RefCell<DeadLetters>>,
     pub handles: Option<Handles>,
+    /// The seeded fault injector driven by `cfg.fault`. Disabled (and
+    /// draw-free) under the default empty plan.
+    pub fault: ChaosInjector,
+    /// Transiently-failed enrichment batches waiting out their backoff.
+    enrich_retries: VecDeque<EnrichRetry>,
 }
 
 impl World {
@@ -211,6 +233,10 @@ impl World {
 
         let n_shards = store.n_shards();
 
+        let fault = ChaosInjector::new(cfg.fault.clone(), cfg.seed ^ FAULT_SEED_SALT);
+        let mut sink = ElasticLite::new(cfg.sink_bulk);
+        sink.chaos = fault.sink_chaos();
+
         Ok(World {
             connectors,
             store,
@@ -225,7 +251,7 @@ impl World {
                 seed: cfg.seed ^ 0x5195_604D,
                 ..SysmonConfig::default()
             }),
-            sink: ElasticLite::new(cfg.sink_bulk),
+            sink,
             dedup: Deduper::new(cfg.dedup_max_hamming),
             metrics,
             enricher,
@@ -242,6 +268,8 @@ impl World {
             counters: WorldCounters::default(),
             dead_letters: Rc::new(RefCell::new(DeadLetters::default())),
             handles: None,
+            fault,
+            enrich_retries: VecDeque::new(),
             cfg: cfg.clone(),
         })
     }
@@ -269,20 +297,34 @@ impl World {
         cost
     }
 
-    /// Timeout-flush hook for the EnrichTick timer.
+    /// Timeout-flush hook for the EnrichTick timer. Also the retry pump
+    /// for fault-parked enrichment batches (a no-op while none exist).
     pub fn enrich_poll_timeout(&mut self, now: SimTime) -> SimTime {
-        if self.batcher.poll_timeout(now) {
-            self.process_staged(now)
-        } else {
-            0
+        let mut cost = if self.batcher.poll_timeout(now) { self.process_staged(now) } else { 0 };
+        if !self.enrich_retries.is_empty() {
+            cost += self.process_enrich_retries(now);
         }
+        cost
     }
 
-    /// End-of-run drain.
+    /// End-of-run drain: flush the staging area, then drive any parked
+    /// retry batches to completion by stepping past each backoff deadline
+    /// (every parked item ends up delivered or poisoned, so conservation
+    /// can be asserted on a quiesced world).
     pub fn flush_enrichment(&mut self, now: SimTime) {
         while self.batcher.flush() {
             self.process_staged(now);
         }
+        let mut t = now;
+        while !self.enrich_retries.is_empty() {
+            let next = self.enrich_retries.iter().map(|r| r.not_before).min().unwrap();
+            t = t.max(next);
+            self.process_enrich_retries(t);
+        }
+        // Quiesce the sink too: push the last partial bulk through and
+        // walk its retry queue dry, so conservation holds exactly.
+        self.sink.flush();
+        self.sink.drain_retries(t);
     }
 
     /// Run the staged columnar batch through the enricher, then dedup +
@@ -293,53 +335,210 @@ impl World {
         if n == 0 {
             return 0;
         }
+        if self.fault.enrich_fault(now) {
+            self.park_staged_for_retry(now);
+            return 0;
+        }
         let enriched = match self.enricher.enrich_batch(self.batcher.staged_features(), n) {
             Ok(e) => e,
             Err(err) => {
-                eprintln!("alertmix: enrichment failed, dropping batch: {err}");
-                for i in 0..n {
-                    let ticket = self.batcher.staged_tickets()[i];
-                    self.pending_items.remove(&ticket);
-                }
-                self.batcher.clear_staged();
+                // Transient backend failure: park the batch for a backoff
+                // retry instead of dropping it (delivery conservation).
+                eprintln!("alertmix: enrichment failed, parking batch for retry: {err}");
+                self.park_staged_for_retry(now);
                 return 0;
             }
         };
         self.counters.enrich_batches += 1;
-        for (i, e) in enriched.iter().enumerate() {
-            let ticket = self.batcher.staged_tickets()[i];
-            let Some(meta) = self.pending_items.remove(&ticket) else { continue };
-            match self.dedup.check_and_insert(&meta.guid, &meta.url, e.simhash, meta.doc_id) {
-                DedupVerdict::Fresh => {
-                    let doc = SinkDoc {
-                        doc_id: meta.doc_id,
-                        stream_id: meta.stream_id,
-                        guid: meta.guid,
-                        title: meta.title,
-                        body: meta.body,
-                        url: meta.url,
-                        published_ms: meta.published_ms,
-                        ingested_ms: now,
-                        scores: e.scores.clone(),
-                        simhash: e.simhash,
-                    };
-                    // Real-time alerting on the fresh item (AlertMix!).
-                    let fired = self.alerts.check(&doc, now);
-                    if fired > 0 {
-                        self.metrics.count("AlertsFired", now, fired as f64);
-                    }
-                    self.sink.ingest(doc);
-                    self.counters.items_ingested += 1;
-                    self.metrics.count("ItemsIngested", now, 1.0);
-                }
-                DedupVerdict::ExactDuplicate | DedupVerdict::NearDuplicate(_) => {
-                    self.counters.items_deduped += 1;
-                    self.metrics.count("DuplicatesDropped", now, 1.0);
-                }
-            }
-        }
+        deliver_rows(
+            now,
+            self.batcher.staged_tickets(),
+            enriched,
+            &mut self.pending_items,
+            &mut self.dedup,
+            &mut self.alerts,
+            &mut self.sink,
+            &mut self.metrics,
+            &mut self.counters,
+        );
         self.batcher.clear_staged();
         // Virtual cost model: dispatch overhead + per-item compute.
         1 + n as SimTime / 16
+    }
+
+    /// Copy the staged batch out into the retry queue (the staging area
+    /// must drain before the next push) and schedule its first retry.
+    fn park_staged_for_retry(&mut self, now: SimTime) {
+        let entry = EnrichRetry {
+            tickets: self.batcher.staged_tickets().to_vec(),
+            features: self.batcher.staged_features().to_vec(),
+            attempts: 0,
+            not_before: now, // requeue_or_poison sets the real deadline
+        };
+        self.batcher.clear_staged();
+        self.requeue_or_poison(entry, now);
+    }
+
+    /// Re-attempt due retry batches. Each failure re-queues with the next
+    /// backoff delay until the shared retry budget exhausts, at which
+    /// point the batch's items are poisoned: removed from flight and
+    /// accounted in the DLQ counters, never silently lost.
+    fn process_enrich_retries(&mut self, now: SimTime) -> SimTime {
+        let mut cost = 0;
+        for _ in 0..self.enrich_retries.len() {
+            let Some(mut entry) = self.enrich_retries.pop_front() else { break };
+            if entry.not_before > now {
+                self.enrich_retries.push_back(entry);
+                continue;
+            }
+            let n = entry.tickets.len();
+            if self.fault.enrich_fault(now) {
+                entry.attempts += 1;
+                self.requeue_or_poison(entry, now);
+                continue;
+            }
+            match self.enricher.enrich_batch(&entry.features, n) {
+                Ok(enriched) => {
+                    self.counters.enrich_batches += 1;
+                    self.fault.counters.retries_enrich += 1;
+                    deliver_rows(
+                        now,
+                        &entry.tickets,
+                        enriched,
+                        &mut self.pending_items,
+                        &mut self.dedup,
+                        &mut self.alerts,
+                        &mut self.sink,
+                        &mut self.metrics,
+                        &mut self.counters,
+                    );
+                    cost += 1 + n as SimTime / 16;
+                }
+                Err(_) => {
+                    entry.attempts += 1;
+                    self.requeue_or_poison(entry, now);
+                }
+            }
+        }
+        cost
+    }
+
+    fn requeue_or_poison(&mut self, mut entry: EnrichRetry, now: SimTime) {
+        match self.fault.retry_delay(entry.attempts) {
+            Some(d) => {
+                entry.not_before = now + d;
+                self.metrics.count("EnrichRetriesQueued", now, 1.0);
+                self.enrich_retries.push_back(entry);
+            }
+            None => {
+                let n = entry.tickets.len() as u64;
+                for t in &entry.tickets {
+                    self.pending_items.remove(t);
+                }
+                self.fault.counters.enrich_poisoned += n;
+                self.metrics.count("PoisonedItems", now, n as f64);
+                eprintln!(
+                    "alertmix: enrichment batch poisoned after {} attempts ({} items -> DLQ)",
+                    entry.attempts, n
+                );
+            }
+        }
+    }
+
+    /// Enrichment batches currently parked awaiting a backoff retry.
+    pub fn enrich_retry_depth(&self) -> usize {
+        self.enrich_retries.len()
+    }
+
+    /// Human-readable fault/recovery summary (the chaos-run counterpart
+    /// of the coordinator's ShardStats balance table).
+    pub fn recovery_table(&self) -> String {
+        let fc = &self.fault.counters;
+        let sc = &self.sink.counters;
+        let mut s = String::new();
+        s.push_str("  site        injected  retried  poisoned\n");
+        s.push_str(&format!(
+            "  connector   {:>8}  {:>7}  {:>8}\n",
+            fc.injected_connector_error + fc.injected_connector_timeout + fc.injected_rate_limit,
+            "-",
+            "-"
+        ));
+        s.push_str(&format!(
+            "  enrich      {:>8}  {:>7}  {:>8}\n",
+            fc.injected_enrich, fc.retries_enrich, fc.enrich_poisoned
+        ));
+        s.push_str(&format!(
+            "  sqs         {:>8}  {:>7}  {:>8}\n",
+            fc.injected_sqs_dup + fc.injected_sqs_delay,
+            "-",
+            "-"
+        ));
+        s.push_str(&format!(
+            "  sink        {:>8}  {:>7}  {:>8}\n",
+            sc.docs_rejected, sc.docs_retried, sc.docs_poisoned
+        ));
+        s.push_str(&format!(
+            "  breakers: opens={} closes={} fast_fails={} open_now={}\n",
+            fc.breaker_opens,
+            fc.breaker_closes,
+            fc.breaker_fast_fails,
+            self.fault.breakers_open()
+        ));
+        s.push_str(&format!(
+            "  dlq: enrich_poisoned={} docs_poisoned={} (total {})\n",
+            fc.enrich_poisoned,
+            sc.docs_poisoned,
+            fc.enrich_poisoned + sc.docs_poisoned
+        ));
+        s
+    }
+}
+
+/// Deliver one enriched batch to dedup + alerting + the sink. A free
+/// function over disjoint `World` fields because the `enriched` slice
+/// still borrows the enricher backend.
+#[allow(clippy::too_many_arguments)]
+fn deliver_rows(
+    now: SimTime,
+    tickets: &[u64],
+    enriched: &[Enrichment],
+    pending_items: &mut HashMap<u64, ItemMeta>,
+    dedup: &mut Deduper,
+    alerts: &mut AlertBook,
+    sink: &mut ElasticLite,
+    metrics: &mut MetricRegistry,
+    counters: &mut WorldCounters,
+) {
+    for (i, e) in enriched.iter().enumerate() {
+        let ticket = tickets[i];
+        let Some(meta) = pending_items.remove(&ticket) else { continue };
+        match dedup.check_and_insert(&meta.guid, &meta.url, e.simhash, meta.doc_id) {
+            DedupVerdict::Fresh => {
+                let doc = SinkDoc {
+                    doc_id: meta.doc_id,
+                    stream_id: meta.stream_id,
+                    guid: meta.guid,
+                    title: meta.title,
+                    body: meta.body,
+                    url: meta.url,
+                    published_ms: meta.published_ms,
+                    ingested_ms: now,
+                    scores: e.scores.clone(),
+                    simhash: e.simhash,
+                };
+                // Real-time alerting on the fresh item (AlertMix!).
+                let fired = alerts.check(&doc, now);
+                if fired > 0 {
+                    metrics.count("AlertsFired", now, fired as f64);
+                }
+                sink.ingest(doc);
+                counters.items_ingested += 1;
+                metrics.count("ItemsIngested", now, 1.0);
+            }
+            DedupVerdict::ExactDuplicate | DedupVerdict::NearDuplicate(_) => {
+                counters.items_deduped += 1;
+                metrics.count("DuplicatesDropped", now, 1.0);
+            }
+        }
     }
 }

@@ -6,10 +6,11 @@
 //! indexing into an inverted index, plus enough query capability
 //! (term/phrase lookup) for the examples to verify end-to-end delivery.
 
+use crate::fault::SinkChaos;
 use crate::sim::SimTime;
 use crate::sqs::LatencyHistogram;
 use crate::text::tokenize;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 /// An enriched document as delivered to the sink.
 #[derive(Debug, Clone)]
@@ -34,6 +35,32 @@ pub struct SinkCounters {
     pub docs_indexed: u64,
     pub bulk_requests: u64,
     pub tokens_indexed: u64,
+    /// Per-doc bulk slots rejected (ES-style partial bulk failure).
+    pub docs_rejected: u64,
+    /// Rejected docs re-entered into a later bulk from the retry queue.
+    pub docs_retried: u64,
+    /// Docs whose retry budget exhausted: routed to the poison DLQ
+    /// counter instead of silently dropped.
+    pub docs_poisoned: u64,
+}
+
+/// Outcome of one bulk request, per document — what a real ES `_bulk`
+/// response item list collapses to.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct BulkResult {
+    pub indexed: u64,
+    pub rejected: u64,
+    /// How many of this bulk's slots came from the retry queue.
+    pub retried: u64,
+    pub poisoned: u64,
+}
+
+/// A rejected doc waiting out its backoff before re-entering a bulk.
+struct RetryDoc {
+    doc: SinkDoc,
+    /// Retries already spent (the next delay draw uses this).
+    attempts: u32,
+    not_before: SimTime,
 }
 
 /// A naive but real inverted index.
@@ -49,6 +76,15 @@ pub struct ElasticLite {
     /// log-bucketed histogram — same structure as the SQS delete-latency
     /// tracking, so percentiles stay cheap at any ingest volume.
     latencies: LatencyHistogram,
+    /// Fault injection handle: when set, bulk slots can reject per-doc.
+    /// `None` (the default) keeps every path below byte-identical to the
+    /// pre-chaos sink.
+    pub chaos: Option<SinkChaos>,
+    /// Rejected docs backing off before their next bulk attempt.
+    retry_q: VecDeque<RetryDoc>,
+    /// Sink-local clock: the max `ingested_ms` seen, so `flush()` (which
+    /// has no time argument at its call sites) knows "now" for backoff.
+    clock: SimTime,
 }
 
 impl ElasticLite {
@@ -60,12 +96,16 @@ impl ElasticLite {
             bulk_size,
             counters: SinkCounters::default(),
             latencies: LatencyHistogram::new(),
+            chaos: None,
+            retry_q: VecDeque::new(),
+            clock: 0,
         }
     }
 
     /// Queue a document for the next bulk. Returns true if the bulk filled
     /// and was flushed.
     pub fn ingest(&mut self, doc: SinkDoc) -> bool {
+        self.clock = self.clock.max(doc.ingested_ms);
         self.pending.push(doc);
         if self.pending.len() >= self.bulk_size {
             self.flush();
@@ -77,22 +117,94 @@ impl ElasticLite {
 
     /// Flush the bulk buffer into the index.
     pub fn flush(&mut self) {
-        if self.pending.is_empty() {
-            return;
-        }
-        self.counters.bulk_requests += 1;
-        for doc in std::mem::take(&mut self.pending) {
-            self.latencies.record(doc.ingested_ms.saturating_sub(doc.published_ms));
-            for tok in tokenize(&doc.title).into_iter().chain(tokenize(&doc.body)) {
-                self.counters.tokens_indexed += 1;
-                let posting = self.postings.entry(tok).or_default();
-                if posting.last() != Some(&doc.doc_id) {
-                    posting.push(doc.doc_id);
+        self.flush_at(self.clock);
+    }
+
+    /// Flush the bulk buffer as of `now`: due retries re-enter the bulk
+    /// ahead of fresh docs, and (under chaos) each slot can reject — the
+    /// per-doc outcome an ES `_bulk` response reports.
+    pub fn flush_at(&mut self, now: SimTime) -> BulkResult {
+        self.clock = self.clock.max(now);
+        let now = self.clock;
+        let mut res = BulkResult::default();
+        let mut due: Vec<RetryDoc> = Vec::new();
+        if !self.retry_q.is_empty() {
+            for _ in 0..self.retry_q.len() {
+                let Some(r) = self.retry_q.pop_front() else { break };
+                if r.not_before <= now {
+                    due.push(r);
+                } else {
+                    self.retry_q.push_back(r);
                 }
             }
-            self.counters.docs_indexed += 1;
-            self.docs.insert(doc.doc_id, doc);
         }
+        if self.pending.is_empty() && due.is_empty() {
+            return res;
+        }
+        self.counters.bulk_requests += 1;
+        for r in due {
+            self.counters.docs_retried += 1;
+            res.retried += 1;
+            self.bulk_slot(r.doc, r.attempts, now, &mut res);
+        }
+        for doc in std::mem::take(&mut self.pending) {
+            self.bulk_slot(doc, 0, now, &mut res);
+        }
+        res
+    }
+
+    /// One bulk slot: index the doc, or (chaos) reject it into the retry
+    /// queue / poison DLQ.
+    fn bulk_slot(&mut self, doc: SinkDoc, attempts: u32, now: SimTime, res: &mut BulkResult) {
+        let rejected = match self.chaos.as_mut() {
+            Some(ch) => ch.reject(now),
+            None => false,
+        };
+        if rejected {
+            self.counters.docs_rejected += 1;
+            res.rejected += 1;
+            match self.chaos.as_mut().and_then(|ch| ch.retry_delay(attempts)) {
+                Some(d) => self.retry_q.push_back(RetryDoc {
+                    doc,
+                    attempts: attempts + 1,
+                    not_before: now + d,
+                }),
+                None => {
+                    self.counters.docs_poisoned += 1;
+                    res.poisoned += 1;
+                }
+            }
+            return;
+        }
+        self.latencies.record(doc.ingested_ms.saturating_sub(doc.published_ms));
+        for tok in tokenize(&doc.title).into_iter().chain(tokenize(&doc.body)) {
+            self.counters.tokens_indexed += 1;
+            let posting = self.postings.entry(tok).or_default();
+            if posting.last() != Some(&doc.doc_id) {
+                posting.push(doc.doc_id);
+            }
+        }
+        self.counters.docs_indexed += 1;
+        self.docs.insert(doc.doc_id, doc);
+        res.indexed += 1;
+    }
+
+    /// Drive the retry queue to empty by advancing the sink clock past
+    /// each backoff deadline. Every queued doc ends up indexed or
+    /// poisoned — the end-of-run quiesce the conservation invariant needs.
+    /// No-op (and no draw) when the queue is already empty.
+    pub fn drain_retries(&mut self, from: SimTime) {
+        self.clock = self.clock.max(from);
+        while !self.retry_q.is_empty() {
+            let next = self.retry_q.iter().map(|r| r.not_before).min().unwrap();
+            let t = self.clock.max(next);
+            self.flush_at(t);
+        }
+    }
+
+    /// Docs currently waiting in the bulk retry queue.
+    pub fn retry_depth(&self) -> usize {
+        self.retry_q.len()
     }
 
     /// Term query: doc ids containing the token.
@@ -215,5 +327,75 @@ mod tests {
         let mut es = ElasticLite::new(1);
         es.ingest(doc(1, "echo echo echo", 0, 1));
         assert_eq!(es.search_term("echo"), &[1]);
+    }
+
+    fn chaotic_sink(reject_rate: f64, budget: u32, seed: u64) -> ElasticLite {
+        use crate::fault::{ChaosInjector, FaultPlan, RetryPolicy};
+        let mut plan = FaultPlan::default();
+        plan.sink_reject_rate = reject_rate;
+        plan.retry = RetryPolicy { base: 100, cap: 1_000, budget, jitter: 0.25 };
+        let mut es = ElasticLite::new(4);
+        es.chaos = ChaosInjector::new(plan, seed).sink_chaos();
+        assert!(es.chaos.is_some());
+        es
+    }
+
+    #[test]
+    fn chaos_rejects_retry_and_eventually_index_or_poison() {
+        let mut es = chaotic_sink(0.4, 3, 9);
+        let n = 500u64;
+        for i in 0..n {
+            es.ingest(doc(i + 1, "alpha beta", 0, (i + 1) * 10));
+        }
+        es.flush();
+        es.drain_retries(n * 10);
+        let c = &es.counters;
+        assert!(c.docs_rejected > 0, "rejections should fire at 40%");
+        assert!(c.docs_retried > 0, "rejected docs re-enter later bulks");
+        // Conservation at the sink: every ingested doc is indexed exactly
+        // once or poisoned — never both, never lost.
+        assert_eq!(c.docs_indexed + c.docs_poisoned, n);
+        assert_eq!(es.doc_count() as u64, c.docs_indexed, "exactly once");
+        assert_eq!(es.retry_depth(), 0);
+        assert_eq!(es.pending_count(), 0);
+    }
+
+    #[test]
+    fn chaos_zero_budget_poisons_immediately() {
+        let mut es = chaotic_sink(1.0, 0, 3);
+        for i in 0..8u64 {
+            es.ingest(doc(i + 1, "t", 0, 10));
+        }
+        es.flush();
+        assert_eq!(es.counters.docs_poisoned, 8);
+        assert_eq!(es.counters.docs_indexed, 0);
+        assert_eq!(es.retry_depth(), 0);
+    }
+
+    #[test]
+    fn chaos_is_deterministic_per_seed() {
+        let run = |seed: u64| {
+            let mut es = chaotic_sink(0.3, 2, seed);
+            for i in 0..200u64 {
+                es.ingest(doc(i + 1, "w", 0, (i + 1) * 5));
+            }
+            es.flush();
+            es.drain_retries(2_000);
+            (es.counters.docs_indexed, es.counters.docs_rejected, es.counters.docs_poisoned)
+        };
+        assert_eq!(run(42), run(42));
+    }
+
+    #[test]
+    fn no_chaos_keeps_legacy_counters_silent() {
+        let mut es = ElasticLite::new(2);
+        for i in 0..5u64 {
+            es.ingest(doc(i + 1, "t", 0, 10));
+        }
+        es.flush();
+        es.drain_retries(1_000);
+        let c = &es.counters;
+        assert_eq!((c.docs_rejected, c.docs_retried, c.docs_poisoned), (0, 0, 0));
+        assert_eq!(c.docs_indexed, 5);
     }
 }

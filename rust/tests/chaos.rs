@@ -1,0 +1,241 @@
+//! Chaos-day integration tests: the full pipeline under seeded fault
+//! injection at every stage boundary (connector, enrichment, SQS
+//! delivery, sink bulk indexing).
+//!
+//! The headline invariant is **delivery conservation**: after a run
+//! quiesces, every item the feed simulator produced is indexed exactly
+//! once, deduplicated, or accounted for in a poison DLQ counter — never
+//! silently lost, never double-indexed. That identity must hold for any
+//! seed, under scripted outages, and across a crash/snapshot/restore.
+
+use alertmix::config::AlertMixConfig;
+use alertmix::fault::{FaultPlan, FaultSite, Outage, RetryPolicy};
+use alertmix::pipeline::{bootstrap, run_for, World};
+use alertmix::sim::{HOUR, MINUTE};
+
+fn cfg(seed: u64, feeds: usize) -> AlertMixConfig {
+    AlertMixConfig {
+        seed,
+        n_feeds: feeds,
+        use_xla: false,
+        worker_fault_rate: 0.0,
+        ..AlertMixConfig::tiny()
+    }
+}
+
+/// The conservation identity, checked after the run has quiesced
+/// (`run_for` / `flush_enrichment` drain the batcher, the enrichment
+/// retry queue and the sink retry queue):
+///
+/// ```text
+/// items_fetched == docs_indexed + items_deduped
+///                + enrich_poisoned + docs_poisoned   (accounted)
+/// docs_indexed  == sink.doc_count()                  (exactly once)
+/// ```
+fn assert_conservation(world: &World, label: &str) {
+    let c = &world.counters;
+    let fc = &world.fault.counters;
+    let sc = &world.sink.counters;
+    assert_eq!(
+        c.items_fetched,
+        sc.docs_indexed + c.items_deduped + fc.enrich_poisoned + sc.docs_poisoned,
+        "[{label}] conservation: fetched={} indexed={} deduped={} \
+         enrich_poisoned={} docs_poisoned={} (plan: {})",
+        c.items_fetched,
+        sc.docs_indexed,
+        c.items_deduped,
+        fc.enrich_poisoned,
+        sc.docs_poisoned,
+        world.fault.plan(),
+    );
+    // Ingested rows split exactly between indexed and poisoned.
+    assert_eq!(c.items_ingested, sc.docs_indexed + sc.docs_poisoned, "[{label}] sink split");
+    // Exactly once: the document store holds each indexed doc once,
+    // despite SQS duplicate deliveries and bulk retries.
+    assert_eq!(world.sink.doc_count() as u64, sc.docs_indexed, "[{label}] exactly-once");
+    // Nothing left parked in a retry queue.
+    assert_eq!(world.enrich_retry_depth(), 0, "[{label}] enrich retry queue drained");
+    assert_eq!(world.sink.retry_depth(), 0, "[{label}] sink retry queue drained");
+    // SQS conservation survives visibility-lease chaos (duplicates are
+    // redeliveries of the same message, never new sends).
+    let q = &world.queues;
+    let sent = q.main.counters.sent + q.priority.counters.sent;
+    let deleted = q.main.counters.deleted + q.priority.counters.deleted;
+    let visible = q.total_visible() as u64;
+    let in_flight = (q.main.in_flight_count() + q.priority.in_flight_count()) as u64;
+    let dlq = (q.main.dead_letter_count() + q.priority.dead_letter_count()) as u64;
+    assert_eq!(sent, deleted + visible + in_flight + dlq, "[{label}] queue conservation");
+}
+
+#[test]
+fn conservation_holds_across_100_chaotic_seeds() {
+    // Every site fires (errors, timeouts, 429s, enrich failures, SQS
+    // duplicates/delays, sink rejections, brownout bursts, breakers) and
+    // the accounting still balances — for 100 different seeds.
+    let mut total_injected = 0u64;
+    for seed in 0..100u64 {
+        let mut c = cfg(seed, 80);
+        c.fault = FaultPlan::chaotic();
+        let (_, world) = run_for(c, 30 * MINUTE).unwrap();
+        assert_conservation(&world, &format!("seed {seed}"));
+        total_injected += world.fault.counters.total_injected();
+    }
+    assert!(total_injected > 1_000, "chaos actually fired: {total_injected} injections");
+}
+
+#[test]
+fn chaotic_runs_replay_bit_for_bit() {
+    let run = |_: ()| {
+        let mut c = cfg(42, 200);
+        c.fault = FaultPlan::chaotic();
+        run_for(c, HOUR).unwrap().1
+    };
+    let (w1, w2) = (run(()), run(()));
+    assert_eq!(w1.counters.items_fetched, w2.counters.items_fetched);
+    assert_eq!(w1.counters.items_ingested, w2.counters.items_ingested);
+    assert_eq!(w1.sink.doc_count(), w2.sink.doc_count());
+    // The injection schedule itself replays, not just the outcome.
+    assert_eq!(w1.fault.counters, w2.fault.counters);
+    assert_eq!(w1.sink.counters.docs_rejected, w2.sink.counters.docs_rejected);
+    assert!(w1.fault.counters.total_injected() > 0, "chaos fired");
+}
+
+#[test]
+fn pinned_plan_seed_decouples_chaos_from_experiment_seed() {
+    // Same experiment seed, different plan seeds: the workload is the
+    // same but the injection schedule differs.
+    let run = |plan_seed: u64| {
+        let mut c = cfg(42, 150);
+        c.fault = FaultPlan { seed: plan_seed, ..FaultPlan::chaotic() };
+        run_for(c, HOUR).unwrap().1
+    };
+    let (w1, w2) = (run(1), run(2));
+    assert_ne!(
+        w1.fault.counters, w2.fault.counters,
+        "plan seed must drive the injection schedule"
+    );
+    assert_conservation(&w1, "plan seed 1");
+    assert_conservation(&w2, "plan seed 2");
+}
+
+#[test]
+fn empty_plan_is_byte_identical_and_never_draws() {
+    // A config carrying an explicit-but-empty FaultPlan must behave
+    // byte-for-byte like the seed config: same counters, zero chaos RNG
+    // draws, no sink chaos attached.
+    let (_, base) = run_for(cfg(9, 200), HOUR).unwrap();
+    let mut c = cfg(9, 200);
+    c.fault = FaultPlan { seed: 0xDEAD_BEEF, ..FaultPlan::default() }; // seed alone enables nothing
+    let (_, w) = run_for(c, HOUR).unwrap();
+    assert!(!w.fault.enabled());
+    assert_eq!(w.fault.counters.draws, 0, "no-fault path must never touch the chaos RNG");
+    assert_eq!(base.counters.items_fetched, w.counters.items_fetched);
+    assert_eq!(base.counters.items_ingested, w.counters.items_ingested);
+    assert_eq!(base.counters.items_deduped, w.counters.items_deduped);
+    assert_eq!(base.counters.jobs_completed, w.counters.jobs_completed);
+    assert_eq!(base.sink.doc_count(), w.sink.doc_count());
+    assert_eq!(base.queues.main.counters.sent, w.queues.main.counters.sent);
+    assert_eq!(base.sink.counters.bulk_requests, w.sink.counters.bulk_requests);
+    // And the legacy identity still reads the classic way.
+    assert_eq!(w.counters.items_fetched, w.counters.items_ingested + w.counters.items_deduped);
+}
+
+#[test]
+fn scripted_connector_outage_opens_breakers_then_recovers() {
+    let mut c = cfg(31, 200);
+    c.fault = FaultPlan {
+        outages: vec![Outage { site: FaultSite::ConnectorPoll, from: 20 * MINUTE, until: 35 * MINUTE }],
+        breaker_threshold: 5,
+        breaker_cooldown: 2 * MINUTE,
+        retry: RetryPolicy { base: 100, cap: 5_000, budget: 4, jitter: 0.25 },
+        ..FaultPlan::default()
+    };
+    let (sys, world) = run_for(c, 2 * HOUR).unwrap();
+    let fc = &world.fault.counters;
+    assert!(fc.breaker_opens >= 1, "sustained outage must trip a breaker");
+    assert!(fc.breaker_fast_fails >= 1, "open breakers must shed polls");
+    assert!(fc.breaker_closes >= 1, "post-outage half-open trials must close breakers");
+    assert_eq!(world.fault.breakers_open(), 0, "all breakers closed again by the end");
+    // Degraded, never lost: polls succeeded after the outage and the
+    // accounting balances. Fast-failed jobs recovered via stale re-pick
+    // or SQS redelivery.
+    assert!(world.counters.polls_ok > 0);
+    assert_conservation(&world, "scripted outage");
+    let restarts: u64 = sys.all_stats().iter().map(|s| s.restarts).sum();
+    assert!(restarts > 0, "breaker fast-fails are supervised failures");
+    assert!(world.store.stale_repicks() > 0 || {
+        let q = &world.queues.main.counters;
+        q.received > q.deleted
+    });
+}
+
+#[test]
+fn heavy_sink_rejection_retries_then_poisons() {
+    let mut c = cfg(77, 150);
+    c.fault = FaultPlan {
+        sink_reject_rate: 0.9,
+        retry: RetryPolicy { base: 50, cap: 1_000, budget: 2, jitter: 0.0 },
+        ..FaultPlan::default()
+    };
+    let (_, world) = run_for(c, HOUR).unwrap();
+    let sc = &world.sink.counters;
+    assert!(sc.docs_rejected > 0, "rejections fired");
+    assert!(sc.docs_retried > 0, "rejected docs were retried");
+    assert!(sc.docs_poisoned > 0, "budget-exhausted docs landed in the DLQ counter");
+    assert!(sc.docs_indexed > 0, "some docs still made it through");
+    assert_conservation(&world, "heavy sink rejection");
+}
+
+#[test]
+fn enrich_failures_retry_and_poison_with_budget_zero() {
+    // Budget 0 means the first failure poisons the batch — the DLQ path
+    // without the retry detour.
+    let mut c = cfg(78, 150);
+    c.fault = FaultPlan {
+        enrich_fail_rate: 0.5,
+        retry: RetryPolicy { base: 50, cap: 1_000, budget: 0, jitter: 0.0 },
+        ..FaultPlan::default()
+    };
+    let (_, world) = run_for(c, HOUR).unwrap();
+    let fc = &world.fault.counters;
+    assert!(fc.injected_enrich > 0);
+    assert!(fc.enrich_poisoned > 0, "zero budget: every failed batch poisons");
+    assert_eq!(fc.retries_enrich, 0, "zero budget: no retries");
+    assert_conservation(&world, "enrich budget 0");
+}
+
+#[test]
+fn snapshot_restore_mid_outage_conserves() {
+    // Crash in the middle of a scripted connector outage, restore the
+    // streams bucket, keep running with the same fault plan: the restored
+    // process rides out its own copy of the outage and the post-restart
+    // accounting balances.
+    use alertmix::store::persist;
+
+    let mut c = cfg(23, 200);
+    c.fault = FaultPlan {
+        outages: vec![Outage { site: FaultSite::ConnectorPoll, from: 30 * MINUTE, until: 90 * MINUTE }],
+        breaker_threshold: 6,
+        breaker_cooldown: 2 * MINUTE,
+        ..FaultPlan::chaotic()
+    };
+    let (mut sys, mut world, _h) = bootstrap(c.clone()).unwrap();
+    sys.run_until(&mut world, HOUR); // mid-outage
+    let (_, inproc_at_crash, _) = world.store.status_counts();
+    let snap = persist::snapshot(&world.store, &world.connectors);
+    assert!(world.fault.counters.total_injected() > 0, "chaos fired before the crash");
+    drop(sys);
+
+    let (mut sys2, mut world2, _h2) = bootstrap(c.clone()).unwrap();
+    world2.store = persist::restore(&snap, &mut world2.connectors, c.n_shards).unwrap();
+    world2.store.check_invariants().unwrap();
+    sys2.run_until(&mut world2, 3 * HOUR);
+    world2.flush_enrichment(3 * HOUR);
+
+    assert!(world2.counters.jobs_completed > 0, "system resumes under chaos");
+    if inproc_at_crash > 0 {
+        assert!(world2.store.stale_repicks() > 0, "in-process streams re-picked after restore");
+    }
+    assert!(world2.counters.polls_ok > 0, "post-outage polls succeed");
+    assert_conservation(&world2, "restored world");
+}

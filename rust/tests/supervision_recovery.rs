@@ -1,0 +1,183 @@
+//! Supervision under real failures: transient errors must lead to a
+//! Backoff restart, a delayed retry, and a successful poll — and the
+//! stop budget must be final within its failure run.
+
+use alertmix::actor::{
+    decide, on_success, Actor, ActorError, ActorResult, ActorSystem, Ctx, Directive, FailureState,
+    MailboxKind, Msg, SupervisorStrategy,
+};
+use alertmix::config::AlertMixConfig;
+use alertmix::fault::{FaultPlan, FaultSite, Outage, RetryPolicy};
+use alertmix::pipeline::run_for;
+use alertmix::sim::{SimTime, HOUR, MINUTE};
+use alertmix::util::rng::Rng;
+
+struct Ping;
+
+/// World for the micro-topology: failure script + success log. It lives
+/// outside the routee, so restarts (which rebuild the routee from its
+/// factory) cannot reset the script.
+#[derive(Default)]
+struct Script {
+    injected: u32,
+    phase2_injected: bool,
+    success_times: Vec<SimTime>,
+}
+
+struct Flaky;
+impl Actor<Script> for Flaky {
+    fn receive(&mut self, ctx: &mut Ctx, w: &mut Script, msg: Msg) -> ActorResult {
+        if msg.downcast::<Ping>().is_err() {
+            return Ok(());
+        }
+        // Phase 1: fail the first three messages (a transient outage).
+        if w.injected < 3 {
+            w.injected += 1;
+            return Err(ActorError::new("transient failure"));
+        }
+        // Phase 2: one more failure long after recovery.
+        if ctx.now() >= 10_000 && !w.phase2_injected {
+            w.phase2_injected = true;
+            return Err(ActorError::new("late transient failure"));
+        }
+        w.success_times.push(ctx.now());
+        Ok(())
+    }
+}
+
+#[test]
+fn backoff_delays_restart_then_poll_succeeds_and_resets() {
+    let mut sys: ActorSystem<Script> = ActorSystem::new(1);
+    let pool = sys.spawn_pool(
+        "flaky",
+        MailboxKind::Unbounded,
+        Box::new(|_| Box::new(Flaky)),
+        1,
+        SupervisorStrategy::Backoff { base: 100, cap: 10_000, max_retries: 10 },
+        None,
+    );
+    let mut w = Script::default();
+    for _ in 0..4 {
+        sys.tell_at(0, pool, Ping);
+    }
+    // Phase 2, well past the phase-1 backoffs: one failure, one success.
+    sys.tell_at(10_000, pool, Ping);
+    sys.tell_at(10_000, pool, Ping);
+    sys.run_to_idle(&mut w);
+
+    let st = sys.stats(pool);
+    assert_eq!(st.failed, 4, "three phase-1 failures + one phase-2 failure");
+    assert_eq!(st.restarts, 4, "every transient failure restarts the routee");
+    assert_eq!(w.success_times.len(), 2);
+    // Phase 1: restarts are *delayed* — 100, 200, 400ms of backoff must
+    // elapse before the fourth message can succeed.
+    assert!(
+        w.success_times[0] >= 700,
+        "first success at {}ms, before the backoff schedule ran out",
+        w.success_times[0]
+    );
+    // Phase 2: the success in between reset the consecutive count, so the
+    // late failure backs off `base` (100ms), not `base * 2^3` (800ms).
+    assert!(
+        (10_100..10_400).contains(&w.success_times[1]),
+        "second success at {}ms: consecutive-failure count must reset on success",
+        w.success_times[1]
+    );
+}
+
+#[test]
+fn full_pipeline_transient_outage_backs_off_and_recovers() {
+    // The same story end to end: a scripted connector outage trips the
+    // breakers, the pool's Backoff supervision delays restarts, and once
+    // the outage lifts the streams are re-picked and polled successfully.
+    let mut c = AlertMixConfig {
+        seed: 5,
+        n_feeds: 200,
+        use_xla: false,
+        worker_fault_rate: 0.0,
+        ..AlertMixConfig::tiny()
+    };
+    c.fault = FaultPlan {
+        outages: vec![Outage { site: FaultSite::ConnectorPoll, from: 15 * MINUTE, until: 30 * MINUTE }],
+        breaker_threshold: 4,
+        breaker_cooldown: MINUTE,
+        retry: RetryPolicy { base: 200, cap: 10_000, budget: 5, jitter: 0.25 },
+        ..FaultPlan::default()
+    };
+    let (sys, world) = run_for(c, 2 * HOUR).unwrap();
+    let stats = sys.all_stats();
+    let failed: u64 = stats.iter().map(|s| s.failed).sum();
+    let restarts: u64 = stats.iter().map(|s| s.restarts).sum();
+    assert!(failed > 0, "outage must fail polls");
+    assert_eq!(restarts, failed, "Backoff restarts every failed routee (budget is u32::MAX)");
+    assert!(world.fault.counters.breaker_opens >= 1);
+    assert!(world.store.stale_repicks() > 0, "in-process streams re-picked after crashes");
+    assert!(world.counters.polls_ok > 0, "polls succeed once the outage lifts");
+    assert_eq!(world.fault.breakers_open(), 0, "breakers closed again by the end");
+    // Work completed both sides of the outage.
+    assert!(world.counters.jobs_completed > 100);
+}
+
+#[test]
+fn stop_budget_is_final_within_a_failure_run() {
+    // Property: once `decide()` answers Stop, later failures in the same
+    // window (Restart strategy) or the same consecutive run (Backoff)
+    // never flip back to Restart.
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed);
+        let max_retries = (rng.next_u64() % 5) as u32;
+        let within: SimTime = 1_000 + rng.next_u64() % 10_000;
+        let strategy = SupervisorStrategy::Restart { max_retries, within };
+        let mut st = FailureState::default();
+        let mut now: SimTime = rng.next_u64() % 1_000;
+        let window_started = |st: &FailureState| st.window_start;
+        let mut stopped_in_window: Option<SimTime> = None;
+        for _ in 0..50 {
+            now += rng.next_u64() % (within / 2); // some steps roll the window
+            let d = decide(strategy, &mut st, now, false);
+            match d {
+                Directive::Stop => stopped_in_window = Some(window_started(&st)),
+                Directive::Restart { .. } => {
+                    if let Some(w) = stopped_in_window {
+                        assert_ne!(
+                            w,
+                            window_started(&st),
+                            "seed {seed}: Restart after Stop in the same window \
+                             (now={now}, within={within}, max_retries={max_retries})"
+                        );
+                    }
+                }
+                Directive::Resume => unreachable!("Restart strategy never resumes"),
+            }
+        }
+    }
+}
+
+#[test]
+fn backoff_stop_is_final_until_success() {
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed);
+        let max_retries = (rng.next_u64() % 6) as u32;
+        let strategy = SupervisorStrategy::Backoff { base: 50, cap: 5_000, max_retries };
+        let mut st = FailureState::default();
+        let mut now: SimTime = 0;
+        let mut stopped = false;
+        for step in 0..60 {
+            // Occasionally a success resets the run — Stop finality only
+            // holds between successes.
+            if rng.chance(0.2) {
+                on_success(&mut st);
+                stopped = false;
+            }
+            now += 1 + rng.next_u64() % 500;
+            match decide(strategy, &mut st, now, false) {
+                Directive::Stop => stopped = true,
+                Directive::Restart { delay } => {
+                    assert!(!stopped, "seed {seed} step {step}: Restart after Stop without a success");
+                    assert!(delay <= 5_000, "backoff delay respects the cap");
+                }
+                Directive::Resume => unreachable!(),
+            }
+        }
+    }
+}
