@@ -8,6 +8,11 @@
 #                            restore mid-outage, asserts the delivery-
 #                            conservation invariant (failures print the seed
 #                            and FaultPlan JSON needed for a replay)
+#   make drills              pinned-seed autoscaling/backpressure drills:
+#                            flash crowd, sink brownout, shard hotspot; each
+#                            self-asserts recovery within budget and writes
+#                            BENCH_recovery.json (failures print the seed and
+#                            FaultPlan for a replay, same as chaos)
 #   make bench-ingest        refresh BENCH_ingest.json (ingest hot-path numbers)
 #   make bench-sqs           refresh BENCH_sqs.json (SQS hot-path numbers)
 #   make bench-store         refresh BENCH_store.json (streams-bucket pick/complete
@@ -20,12 +25,18 @@ CARGO ?= cargo
 # Coordinator shards for bench-store (1 = classic single coordinator).
 SHARDS ?= 1
 
-.PHONY: verify example-connectors chaos bench-ingest bench-sqs bench-store bench artifacts
+.PHONY: verify example-connectors chaos drills bench-ingest bench-sqs bench-store bench artifacts
 
 # Pinned seed so CI failures replay bit-for-bit; override for exploration:
 #   make chaos CHAOS_SEED=99 CHAOS_FEEDS=10000
 CHAOS_SEED ?= 17
 CHAOS_FEEDS ?= 2000
+
+# Drill seed/universe, same replay discipline:
+#   make drills DRILL_SEED=7 DRILL=brownout
+DRILL_SEED ?= 21
+DRILL_FEEDS ?= 2000
+DRILL ?= all
 
 # The clippy gate covers lib + bins (not --all-targets: the bench/test
 # surface is exercised by `cargo test` and the CI bench smoke instead).
@@ -43,6 +54,10 @@ example-connectors:
 chaos:
 	cd rust && CHAOS_SEED=$(CHAOS_SEED) CHAOS_FEEDS=$(CHAOS_FEEDS) \
 		$(CARGO) run --release --example chaos_day
+
+drills:
+	cd rust && DRILL=$(DRILL) DRILL_SEED=$(DRILL_SEED) DRILL_FEEDS=$(DRILL_FEEDS) \
+		$(CARGO) run --release --example drills
 
 bench-ingest:
 	cd rust && $(CARGO) bench --bench bench_ingest

@@ -1,0 +1,433 @@
+//! Autoscaling + backpressure drills: three self-asserting scenarios that
+//! prove the closed feedback loop (signal bus -> resizer / admission
+//! window) actually closes.
+//!
+//! 1. **flash_crowd** — a breaking-news surge: the news channel's publish
+//!    rate jumps 100x for 30 minutes against a deliberately tight worker
+//!    pool. The pool must scale up (resize events on the feedback bus) and
+//!    the SQS backlog must drain back to its pre-surge baseline within the
+//!    recovery budget.
+//! 2. **brownout** — a 30-minute sink outage. The sink bulk-retry queue
+//!    must shrink the router's dynamic admission window (backpressure
+//!    engages), total in-flight work stays bounded by the configured
+//!    optimal buffer throughout, and PR 6's delivery-conservation
+//!    invariant holds at the end.
+//! 3. **shard_hotspot** — a burst of 200 web-app prioritizations all
+//!    landing on one coordinator shard. The priority queue must absorb and
+//!    drain the burst within budget; nothing is lost.
+//!
+//! Each drill runs under a pinned seed and writes its recovery time to
+//! `BENCH_recovery.json`. On failure it prints the seed and the active
+//! `FaultPlan` JSON — the same replay discipline as `chaos_day`.
+//!
+//! ```bash
+//! make drills                                   # all three, pinned seeds
+//! DRILL=brownout DRILL_SEED=7 cargo run --release --example drills
+//! ```
+
+use alertmix::benchlib::bench_out_path;
+use alertmix::config::AlertMixConfig;
+use alertmix::fault::{FaultPlan, FaultSite, Outage, RetryPolicy};
+use alertmix::feedsim::FlashCrowd;
+use alertmix::pipeline::{bootstrap, PrioritizeStream, World};
+use alertmix::sim::{SimTime, HOUR, MINUTE, SECOND};
+
+/// Probe cadence: the drills step the simulation and sample between steps.
+const PROBE: SimTime = 30 * SECOND;
+
+fn fail(world: &World, seed: u64, label: &str, msg: String) -> ! {
+    eprintln!("drills FAILED [{label}]: {msg}");
+    eprintln!("replay with: DRILL={label} DRILL_SEED={seed} and fault plan:");
+    eprintln!("  {}", world.fault.plan());
+    std::process::exit(2);
+}
+
+/// PR 6's delivery-conservation invariant (see `chaos_day`): every fetched
+/// item is indexed, deduped, or poisoned; the sink holds exactly the
+/// indexed docs; retry queues are drained; SQS messages all accounted for.
+fn check_conservation(world: &World, seed: u64, label: &str) {
+    let c = &world.counters;
+    let fc = &world.fault.counters;
+    let sc = &world.sink.counters;
+    let accounted = sc.docs_indexed + c.items_deduped + fc.enrich_poisoned + sc.docs_poisoned;
+    if c.items_fetched != accounted {
+        fail(
+            world,
+            seed,
+            label,
+            format!(
+                "conservation: fetched {} != indexed {} + deduped {} + enrich_poisoned {} + docs_poisoned {}",
+                c.items_fetched, sc.docs_indexed, c.items_deduped, fc.enrich_poisoned, sc.docs_poisoned
+            ),
+        );
+    }
+    if world.sink.doc_count() as u64 != sc.docs_indexed {
+        fail(
+            world,
+            seed,
+            label,
+            format!(
+                "exactly-once: doc_count {} != docs_indexed {}",
+                world.sink.doc_count(),
+                sc.docs_indexed
+            ),
+        );
+    }
+    if world.enrich_retry_depth() != 0 || world.sink.retry_depth() != 0 {
+        fail(
+            world,
+            seed,
+            label,
+            format!(
+                "retry queues not drained: enrich {} sink {}",
+                world.enrich_retry_depth(),
+                world.sink.retry_depth()
+            ),
+        );
+    }
+    let q = &world.queues;
+    let sent = q.main.counters.sent + q.priority.counters.sent;
+    let deleted = q.main.counters.deleted + q.priority.counters.deleted;
+    let rest = q.total_visible() as u64
+        + (q.main.in_flight_count() + q.priority.in_flight_count()) as u64
+        + (q.main.dead_letter_count() + q.priority.dead_letter_count()) as u64;
+    if sent != deleted + rest {
+        fail(
+            world,
+            seed,
+            label,
+            format!("queue conservation: sent {sent} != deleted {deleted} + outstanding {rest}"),
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Drill 1: breaking-news flash crowd.
+
+fn drill_flash_crowd(seed: u64, feeds: usize) -> String {
+    let label = "flash";
+    let onset = HOUR;
+    let surge_end = HOUR + 30 * MINUTE;
+    let budget_end = surge_end + 60 * MINUTE;
+    let run_end = 3 * HOUR;
+
+    let mut cfg = AlertMixConfig { seed, n_feeds: feeds, ..AlertMixConfig::tiny() };
+    cfg.use_xla = false;
+    // Fast cadence so the surge translates into job-arrival pressure
+    // within the window, and a deliberately tight news pool: the burst
+    // must *force* the resizer to scale it, not find it pre-provisioned.
+    cfg.base_poll_interval = MINUTE;
+    cfg.set_pool("news", 1);
+
+    let (mut sys, mut world, h) = bootstrap(cfg).expect("bootstrap");
+    let news = world.connectors.id("news").expect("news channel");
+    let news_pool = h.pool_for(news).expect("news pool");
+    world.universe.add_flash_crowd(FlashCrowd {
+        from: onset,
+        until: surge_end,
+        factor: 100.0,
+        channel: Some(news),
+    });
+    println!("[{label}] 100x news surge in [{onset}, {surge_end}) ms, seed {seed}");
+
+    let mut baseline_peak = 0usize; // pre-surge backlog peak ([20min, onset))
+    let mut surge_peak = 0usize;
+    let mut size_at_onset = 0usize;
+    let mut pool_peak_after_onset = 0usize;
+    let mut recovered_at: Option<SimTime> = None;
+    let mut resizes_at_onset = 0u64;
+
+    let mut t = 0;
+    while t < run_end {
+        t += PROBE;
+        sys.run_until(&mut world, t);
+        let visible = world.queues.total_visible();
+        let pool_size = sys.pool_size(news_pool);
+        if t >= 20 * MINUTE && t < onset {
+            baseline_peak = baseline_peak.max(visible);
+        }
+        if t == onset {
+            size_at_onset = pool_size;
+            resizes_at_onset = world.feedback.borrow().resize_events;
+        }
+        if t > onset {
+            surge_peak = surge_peak.max(visible);
+            pool_peak_after_onset = pool_peak_after_onset.max(pool_size);
+        }
+        if recovered_at.is_none() && t >= surge_end && visible <= baseline_peak * 2 + 50 {
+            recovered_at = Some(t);
+        }
+    }
+    world.flush_enrichment(run_end);
+    world.sink.flush();
+
+    let Some(recovered_at) = recovered_at else {
+        fail(&world, seed, label, format!("backlog never returned to baseline (baseline_peak {baseline_peak}, final visible {})", world.queues.total_visible()));
+    };
+    if recovered_at > budget_end {
+        fail(
+            &world,
+            seed,
+            label,
+            format!("recovered at {recovered_at} ms, past the budget {budget_end} ms"),
+        );
+    }
+    if pool_peak_after_onset <= size_at_onset {
+        fail(
+            &world,
+            seed,
+            label,
+            format!("news pool never grew under the surge (onset size {size_at_onset}, peak {pool_peak_after_onset})"),
+        );
+    }
+    let resize_events = world.feedback.borrow().resize_events;
+    if resize_events <= resizes_at_onset {
+        fail(&world, seed, label, "no resize events on the feedback bus after onset".into());
+    }
+    check_conservation(&world, seed, label);
+
+    let recovery_ms = recovered_at - surge_end;
+    println!(
+        "[{label}] PASSED: pool {size_at_onset} -> {pool_peak_after_onset}, backlog peak {surge_peak} (baseline {baseline_peak}), recovered {recovery_ms} ms after surge end"
+    );
+    format!(
+        "{{\"name\": \"flash_crowd\", \"onset_ms\": {onset}, \"surge_end_ms\": {surge_end}, \
+         \"recovered_ms\": {recovered_at}, \"recovery_ms\": {recovery_ms}, \
+         \"baseline_peak_visible\": {baseline_peak}, \"surge_peak_visible\": {surge_peak}, \
+         \"pool_at_onset\": {size_at_onset}, \"pool_peak\": {pool_peak_after_onset}, \
+         \"resize_events\": {resize_events}}}"
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Drill 2: slow-sink brownout.
+
+fn drill_brownout(seed: u64, feeds: usize) -> String {
+    let label = "brownout";
+    let outage_from = HOUR;
+    let outage_until = HOUR + 30 * MINUTE;
+    let budget_end = outage_until + 30 * MINUTE;
+    let run_end = 3 * HOUR;
+
+    let mut cfg = AlertMixConfig { seed, n_feeds: feeds, ..AlertMixConfig::tiny() };
+    cfg.use_xla = false;
+    cfg.fault = FaultPlan {
+        outages: vec![Outage { site: FaultSite::SinkFlush, from: outage_from, until: outage_until }],
+        // Patient retries: docs survive several minutes of outage before
+        // poisoning, so the retry queue stays deep enough to squeeze the
+        // admission window for most of the brownout.
+        retry: RetryPolicy { base: 500, cap: 60_000, budget: 8, jitter: 0.25 },
+        ..FaultPlan::default()
+    };
+    let base = cfg.optimal_buffer;
+    let (mut sys, mut world, _h) = bootstrap(cfg).expect("bootstrap");
+    println!("[{label}] sink outage in [{outage_from}, {outage_until}) ms, seed {seed}");
+
+    let mut max_in_flight = 0u64;
+    let mut max_retry_depth = 0usize;
+    let mut recovered_at: Option<SimTime> = None;
+
+    let mut t = 0;
+    while t < run_end {
+        t += PROBE;
+        sys.run_until(&mut world, t);
+        let in_flight = world.counters.jobs_in_flight();
+        max_in_flight = max_in_flight.max(in_flight);
+        max_retry_depth = max_retry_depth.max(world.sink.retry_depth());
+        // The hard bound: backpressure keeps outstanding work within the
+        // configured buffer at every probe, outage or not.
+        if in_flight as usize > base {
+            fail(
+                &world,
+                seed,
+                label,
+                format!("in-flight {in_flight} exceeded the optimal buffer {base} at {t} ms"),
+            );
+        }
+        if recovered_at.is_none() && t >= outage_until && world.sink.retry_depth() == 0 {
+            recovered_at = Some(t);
+        }
+    }
+    world.flush_enrichment(run_end);
+    world.sink.flush();
+
+    if max_retry_depth == 0 {
+        fail(&world, seed, label, "sink retry queue never filled — the outage never bit".into());
+    }
+    let min_window = world.feedback.borrow().min_window();
+    match min_window {
+        Some(w) if w < base => {}
+        other => fail(
+            &world,
+            seed,
+            label,
+            format!("admission window never shrank under sink pressure (min {other:?}, base {base})"),
+        ),
+    }
+    let Some(recovered_at) = recovered_at else {
+        fail(&world, seed, label, format!("sink retry queue never drained (depth {} at end)", world.sink.retry_depth()));
+    };
+    if recovered_at > budget_end {
+        fail(
+            &world,
+            seed,
+            label,
+            format!("retry queue drained at {recovered_at} ms, past the budget {budget_end} ms"),
+        );
+    }
+    check_conservation(&world, seed, label);
+
+    let recovery_ms = recovered_at - outage_until;
+    let min_window = min_window.unwrap();
+    println!(
+        "[{label}] PASSED: retry depth peak {max_retry_depth}, window {base} -> {min_window}, in-flight peak {max_in_flight}, recovered {recovery_ms} ms after outage end"
+    );
+    format!(
+        "{{\"name\": \"brownout\", \"outage_from_ms\": {outage_from}, \"outage_until_ms\": {outage_until}, \
+         \"recovered_ms\": {recovered_at}, \"recovery_ms\": {recovery_ms}, \
+         \"max_sink_retry_depth\": {max_retry_depth}, \"admission_base\": {base}, \
+         \"min_admission_window\": {min_window}, \"max_in_flight\": {max_in_flight}}}"
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Drill 3: shard hotspot.
+
+fn drill_shard_hotspot(seed: u64, feeds: usize) -> String {
+    let label = "hotspot";
+    let n_shards = 8usize;
+    let hot = 3usize;
+    let burst_at = 30 * MINUTE;
+    let burst_size = 200usize;
+    let budget_end = burst_at + 30 * MINUTE;
+    let run_end = 90 * MINUTE;
+
+    let mut cfg = AlertMixConfig { seed, n_feeds: feeds, ..AlertMixConfig::tiny() };
+    cfg.use_xla = false;
+    cfg.n_shards = n_shards;
+    let (mut sys, mut world, h) = bootstrap(cfg).expect("bootstrap");
+
+    // Every prioritized stream lands on the hot shard.
+    let hot_ids: Vec<u64> = world
+        .universe
+        .profiles()
+        .iter()
+        .map(|p| p.id)
+        .filter(|&id| world.store.shard_of(id) == hot)
+        .take(burst_size)
+        .collect();
+    if hot_ids.len() < burst_size / 2 {
+        fail(&world, seed, label, format!("only {} streams on shard {hot}", hot_ids.len()));
+    }
+    for (i, &id) in hot_ids.iter().enumerate() {
+        sys.tell_at(burst_at + i as SimTime, h.priority_streams, PrioritizeStream { stream_id: id });
+    }
+    println!(
+        "[{label}] {} prioritizations on shard {hot}/{n_shards} at {burst_at} ms, seed {seed}",
+        hot_ids.len()
+    );
+
+    let pri_sent_before = world.queues.priority.counters.sent;
+    let mut recovered_at: Option<SimTime> = None;
+    let mut pri_backlog_peak = 0usize;
+
+    let mut t = 0;
+    while t < run_end {
+        t += PROBE;
+        sys.run_until(&mut world, t);
+        let pri_backlog =
+            world.queues.priority.visible_count() + world.queues.priority.in_flight_count();
+        if t > burst_at {
+            pri_backlog_peak = pri_backlog_peak.max(pri_backlog);
+        }
+        // Recovered: the priority lane is back to trickle level (a few
+        // messages between router ticks), not holding burst backlog.
+        if recovered_at.is_none() && t > burst_at && pri_backlog <= 4 {
+            recovered_at = Some(t);
+        }
+    }
+    world.flush_enrichment(run_end);
+    world.sink.flush();
+
+    if world.counters.missing_streams > 0 {
+        fail(
+            &world,
+            seed,
+            label,
+            format!("{} prioritized streams missing from the bucket", world.counters.missing_streams),
+        );
+    }
+    let pri_sent = world.queues.priority.counters.sent - pri_sent_before;
+    if (pri_sent as usize) < hot_ids.len() * 3 / 4 {
+        fail(
+            &world,
+            seed,
+            label,
+            format!("only {pri_sent} priority enqueues for {} prioritizations", hot_ids.len()),
+        );
+    }
+    let Some(recovered_at) = recovered_at else {
+        fail(&world, seed, label, format!("priority lane never drained (backlog peak {pri_backlog_peak})"));
+    };
+    if recovered_at > budget_end {
+        fail(
+            &world,
+            seed,
+            label,
+            format!("priority lane drained at {recovered_at} ms, past the budget {budget_end} ms"),
+        );
+    }
+    let picked_hot = world.feedback.borrow().picked_on_shard(hot);
+    if picked_hot == 0 {
+        fail(&world, seed, label, format!("feedback bus saw no picks on hot shard {hot}"));
+    }
+    check_conservation(&world, seed, label);
+
+    let recovery_ms = recovered_at - burst_at;
+    println!(
+        "[{label}] PASSED: {pri_sent} priority enqueues, backlog peak {pri_backlog_peak}, hot-shard picks {picked_hot}, drained {recovery_ms} ms after burst"
+    );
+    format!(
+        "{{\"name\": \"shard_hotspot\", \"burst_at_ms\": {burst_at}, \"burst_size\": {}, \
+         \"recovered_ms\": {recovered_at}, \"recovery_ms\": {recovery_ms}, \
+         \"priority_sent\": {pri_sent}, \"priority_backlog_peak\": {pri_backlog_peak}, \
+         \"hot_shard\": {hot}, \"hot_shard_picks\": {picked_hot}}}",
+        hot_ids.len()
+    )
+}
+
+// ---------------------------------------------------------------------------
+
+fn main() {
+    let seed: u64 = std::env::var("DRILL_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(21);
+    let feeds: usize =
+        std::env::var("DRILL_FEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(2_000);
+    let which = std::env::var("DRILL").unwrap_or_else(|_| "all".to_string());
+
+    let wall = std::time::Instant::now();
+    let mut results = Vec::new();
+    if which == "all" || which == "flash" {
+        results.push(drill_flash_crowd(seed, feeds));
+    }
+    if which == "all" || which == "brownout" {
+        results.push(drill_brownout(seed, feeds));
+    }
+    if which == "all" || which == "hotspot" {
+        results.push(drill_shard_hotspot(seed, feeds));
+    }
+    if results.is_empty() {
+        eprintln!("unknown DRILL={which} (expected flash|brownout|hotspot|all)");
+        std::process::exit(1);
+    }
+
+    let json = format!(
+        "{{\n  \"seed\": {seed},\n  \"feeds\": {feeds},\n  \"drills\": [\n    {}\n  ]\n}}\n",
+        results.join(",\n    ")
+    );
+    let out = bench_out_path("BENCH_recovery.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+    println!("drills PASSED in {:.1}s wall (seed {seed})", wall.elapsed().as_secs_f64());
+}

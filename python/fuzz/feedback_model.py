@@ -1,0 +1,420 @@
+#!/usr/bin/env python3
+"""Executable model checks for the closed-loop autoscaling PR
+(rust/src/actor/resizer.rs control law + rust/src/pipeline/feedback.rs
+admission window).
+
+This container has no Rust toolchain, so the control-law logic is
+ported line-by-line here and fuzzed against independent oracles:
+
+  1. SplitMix64 Rng port (with Lemire bounded sampling, which the
+     explore branch uses): determinism and range bounds.
+  2. admission_window: identity at zero congestion, [floor, base]
+     clamping, monotone non-increasing in every congestion input
+     (1000 random cases each).
+  3. Resizer, deterministic scenarios: no action before the window
+     closes; hysteretic shrink only after down_windows genuine idle
+     windows; the stale-window discard (a quiet gap must not read as
+     one giant idle window); cooldown blackout between actions;
+     inhibited growth resuming the instant pressure clears (with the
+     kept streak).
+  4. Anti-flapping property: 500 random window traces (saturated /
+     idle / moderate / empty, random poll gaps, explore ratios,
+     pressure updates) — no two resize actions within one cooldown,
+     all sizes within [lower, upper].
+  5. Step-load convergence: a fluid queue offering 1600 jobs per 5 s
+     window at 10 ms each (needs >= 4 workers) with exploration off —
+     the pool grows to meet demand, the backlog drains and stays
+     drained, and the steady-state size band is narrow (no
+     oscillation), for 200 random service-time perturbations.
+
+Run: python3 python/fuzz/feedback_model.py
+"""
+
+import random
+import sys
+
+MASK = (1 << 64) - 1
+GAMMA = 0x9E3779B97F4A7C15
+
+
+def _mix(z: int) -> int:
+    z &= MASK
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return (z ^ (z >> 31)) & MASK
+
+
+class Rng:
+    """Port of rust/src/util/rng.rs (SplitMix64 + Lemire bounded)."""
+
+    def __init__(self, seed: int):
+        self.state = _mix((seed ^ GAMMA) & MASK)
+
+    def next_u64(self) -> int:
+        self.state = (self.state + GAMMA) & MASK
+        return _mix(self.state)
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def chance(self, p: float) -> bool:
+        return self.next_f64() < p
+
+    def below(self, n: int) -> int:
+        x = self.next_u64()
+        m = x * n
+        l = m & MASK
+        if l < n:
+            t = (-n) % (1 << 64) % n
+            while l < t:
+                x = self.next_u64()
+                m = x * n
+                l = m & MASK
+        return m >> 64
+
+    def range(self, lo: int, hi: int) -> int:
+        return lo + self.below(hi - lo)
+
+
+# ---------------------------------------------------------------------------
+# Ports under test
+# ---------------------------------------------------------------------------
+
+STALE_WINDOW_FACTOR = 3
+
+
+def admission_window(base, floor_cfg, sink_retry, enrich_items, sqs_excess):
+    """Port of pipeline::feedback::admission_window."""
+    floor = min(floor_cfg, base) if floor_cfg > 0 else min(max(base // 8, 1), base)
+    return max(max(base - (sink_retry + enrich_items + sqs_excess), 0), floor)
+
+
+class ResizerConfig:
+    def __init__(self, **kw):
+        self.lower_bound = kw.get("lower_bound", 1)
+        self.upper_bound = kw.get("upper_bound", 64)
+        self.action_interval = kw.get("action_interval", 5_000)
+        self.explore_ratio = kw.get("explore_ratio", 0.4)
+        self.explore_step = kw.get("explore_step", 0.1)
+        self.weight_decay = kw.get("weight_decay", 0.8)
+        self.min_utilization = kw.get("min_utilization", 0.5)
+        self.cooldown = kw.get("cooldown", 15_000)
+        self.up_windows = kw.get("up_windows", 2)
+        self.down_windows = kw.get("down_windows", 3)
+
+
+class Resizer:
+    """Port of actor::OptimalSizeExploringResizer."""
+
+    def __init__(self, cfg: ResizerConfig, rng: Rng):
+        self.cfg = cfg
+        self.rng = rng
+        self.perf_log = {}  # size -> decayed throughput
+        self.window_start = 0
+        self.processed = 0
+        self.busy_ms = 0
+        self.lag_streak = 0
+        self.idle_streak = 0
+        self.cooldown_until = 0
+        self.inhibit_grow = False
+        self.resizes = 0
+
+    def record(self, service_ms):
+        self.processed += 1
+        self.busy_ms += service_ms
+
+    def note_pressure(self, inhibit_grow):
+        self.inhibit_grow = inhibit_grow
+
+    def _best_size(self, fallback):
+        # BTreeMap::iter().max_by keeps the *last* maximal entry in key
+        # order, i.e. the largest size among throughput ties.
+        best, best_v = fallback, None
+        for size in sorted(self.perf_log):
+            v = self.perf_log[size]
+            if best_v is None or v >= best_v:
+                best, best_v = size, v
+        return best
+
+    def poll(self, now, current_size, queue_len):
+        elapsed = now - self.window_start
+        if elapsed >= self.cfg.action_interval * STALE_WINDOW_FACTOR:
+            self.window_start = now
+            self.processed = 0
+            self.busy_ms = 0
+            return None
+        if elapsed < self.cfg.action_interval:
+            return None
+        if self.processed == 0:
+            self.window_start = now
+            return None
+        util = self.busy_ms / (elapsed * max(current_size, 1))
+        throughput = self.processed / elapsed
+        for s in self.perf_log:
+            self.perf_log[s] *= self.cfg.weight_decay
+        self.perf_log[current_size] = max(self.perf_log.get(current_size, 0.0), throughput)
+        self.window_start = now
+        self.processed = 0
+        self.busy_ms = 0
+
+        lagging = util > 0.8 and queue_len > current_size
+        idle = util < self.cfg.min_utilization and queue_len == 0
+        self.lag_streak = self.lag_streak + 1 if lagging else 0
+        self.idle_streak = self.idle_streak + 1 if idle else 0
+
+        if now < self.cooldown_until:
+            return None
+
+        if lagging and self.lag_streak >= self.cfg.up_windows:
+            if self.inhibit_grow:
+                return None
+            target = current_size + max(current_size // 2, 2)
+            target = min(max(target, self.cfg.lower_bound), self.cfg.upper_bound)
+            if target != current_size:
+                self.resizes += 1
+                self.cooldown_until = now + self.cfg.cooldown
+                return target
+            return None
+
+        if idle and self.idle_streak >= self.cfg.down_windows:
+            target = max(current_size - 1, self.cfg.lower_bound)
+            if target != current_size:
+                self.resizes += 1
+                self.cooldown_until = now + self.cfg.cooldown
+                return target
+            return None
+
+        if lagging or idle:
+            return None
+
+        if self.rng.chance(self.cfg.explore_ratio):
+            span = max(int(-(-current_size * self.cfg.explore_step // 1)), 1)
+            delta = self.rng.range(0, 2 * span + 1) - span
+            target = max(current_size + delta, self.cfg.lower_bound)
+        else:
+            best = self._best_size(current_size)
+            target = max((current_size + best) // 2, 1)
+        target = min(max(target, self.cfg.lower_bound), self.cfg.upper_bound)
+        if target != current_size:
+            self.resizes += 1
+            self.cooldown_until = now + self.cfg.cooldown
+            return target
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Checks
+# ---------------------------------------------------------------------------
+
+FAILURES = []
+
+
+def check(cond, msg):
+    if not cond:
+        FAILURES.append(msg)
+        print(f"FAIL: {msg}")
+
+
+def t_rng():
+    a, b = Rng(7), Rng(7)
+    check(
+        [a.next_u64() for _ in range(16)] == [b.next_u64() for _ in range(16)],
+        "rng determinism",
+    )
+    r = Rng(11)
+    for _ in range(2_000):
+        v = r.range(3, 10)
+        check(3 <= v < 10, f"range bounds: {v}")
+
+
+def t_admission():
+    py = random.Random(0xFEEDBAC)
+    for i in range(1_000):
+        base = py.randint(1, 4_096)
+        floor_cfg = py.randint(0, 128)
+        check(
+            admission_window(base, floor_cfg, 0, 0, 0) == base,
+            f"identity at zero congestion (case {i})",
+        )
+        s, e, q = (py.randint(0, 10_000) for _ in range(3))
+        w = admission_window(base, floor_cfg, s, e, q)
+        floor = min(floor_cfg, base) if floor_cfg > 0 else min(max(base // 8, 1), base)
+        check(floor <= w <= base, f"window in [floor, base] (case {i})")
+        w2 = admission_window(
+            base, floor_cfg, s + py.randint(0, 500), e + py.randint(0, 500), q + py.randint(0, 500)
+        )
+        check(w2 <= w, f"monotone non-increasing (case {i})")
+
+
+def t_resizer_deterministic():
+    # No action before the measurement window closes.
+    r = Resizer(ResizerConfig(explore_ratio=0.0), Rng(1))
+    for _ in range(10):
+        r.record(400)
+    check(r.poll(2_000, 4, 50) is None, "no action before action_interval")
+
+    # Hysteretic shrink: exactly down_windows genuine idle windows.
+    r = Resizer(ResizerConfig(explore_ratio=0.0), Rng(2))
+    for w in range(1, 4):
+        r.record(10)
+        got = r.poll(w * 5_000, 8, 0)
+        if w < 3:
+            check(got is None, f"idle streak not ripe at window {w}")
+        else:
+            check(got == 7, f"third idle window shrinks 8 -> 7, got {got}")
+
+    # Stale-window discard: a straggler completing across a quiet gap
+    # must not be measured as one giant idle window.
+    r = Resizer(ResizerConfig(explore_ratio=0.0), Rng(3))
+    for _ in range(10):
+        r.record(4_000)  # healthy saturated window at size 8
+    check(r.poll(5_000, 8, 0) is None, "saturated no-queue window holds steady")
+    r.record(20)
+    check(r.poll(120_000, 8, 0) is None, "stale window discarded")
+    check(r.idle_streak == 0, "discard must not advance the idle streak")
+    # Three genuine idle windows are still required before any shrink.
+    check(r.poll(125_000, 8, 0) is None, "empty window after discard is a no-op")
+    for w in range(1, 4):
+        r.record(10)
+        got = r.poll(125_000 + w * 5_000, 8, 0)
+        check(
+            (got is None) if w < 3 else (got == 7),
+            f"post-discard shrink discipline at window {w}: {got}",
+        )
+
+    # Cooldown blackout: a second saturated streak inside the blackout
+    # must not act; the same streak acts once the blackout expires.
+    r = Resizer(ResizerConfig(explore_ratio=0.0), Rng(4))
+    size = 4
+    for _ in range(10):
+        r.record(2_000)
+    check(r.poll(5_000, size, 40) is None, "one lagging window is not a streak")
+    for _ in range(10):
+        r.record(2_000)
+    got = r.poll(10_000, size, 40)
+    check(got == 6, f"two lagging windows grow 4 -> 6, got {got}")
+    size = got
+    for t in (15_000, 20_000):
+        for _ in range(10):
+            r.record(3_000)
+        check(r.poll(t, size, 60) is None, f"cooldown blackout holds at {t}")
+    for _ in range(10):
+        r.record(3_000)
+    got = r.poll(25_000, size, 60)
+    check(got == 9, f"blackout expiry acts on the kept streak, got {got}")
+
+    # Inhibited growth resumes the instant pressure clears.
+    r = Resizer(ResizerConfig(explore_ratio=0.0), Rng(5))
+    r.note_pressure(True)
+    for t in (5_000, 10_000):
+        for _ in range(10):
+            r.record(2_000)
+        check(r.poll(t, 4, 40) is None, f"inhibit_grow blocks growth at {t}")
+    r.note_pressure(False)
+    for _ in range(10):
+        r.record(2_000)
+    got = r.poll(15_000, 4, 40)
+    check(got == 6, f"growth resumes with the kept streak, got {got}")
+
+
+def t_antiflap():
+    py = random.Random(0xA5CA1E)
+    for case in range(500):
+        cooldown = py.randint(5_000, 30_000)
+        cfg = ResizerConfig(
+            cooldown=cooldown,
+            explore_ratio=py.random(),
+            up_windows=py.randint(1, 4),
+            down_windows=py.randint(1, 4),
+        )
+        r = Resizer(cfg, Rng(py.randrange(1 << 62)))
+        size = py.randint(1, 16)
+        now = 0
+        last_action = None
+        for _ in range(100):
+            now += py.randint(5_000, 20_000)
+            if py.random() < 0.1:
+                r.note_pressure(py.random() < 0.5)
+            flavor = py.randint(0, 3)
+            if flavor == 0:  # saturated with backlog
+                for _ in range(10):
+                    r.record(500 * size)
+                queue = size * 2 + py.randint(1, 50)
+            elif flavor == 1:  # idle
+                r.record(py.randint(1, 200))
+                queue = 0
+            elif flavor == 2:  # moderate (~0.6 util)
+                for _ in range(5):
+                    r.record(600 * size)
+                queue = 0
+            else:  # nothing completed
+                queue = 0
+            new_size = r.poll(now, size, queue)
+            if new_size is not None:
+                check(
+                    cfg.lower_bound <= new_size <= cfg.upper_bound,
+                    f"case {case}: size {new_size} out of bounds",
+                )
+                if last_action is not None and now - last_action < cooldown:
+                    check(False, f"case {case}: actions {last_action} and {now} within cooldown {cooldown}")
+                last_action = now
+                size = new_size
+
+
+def t_convergence():
+    py = random.Random(0xC0FFEE)
+    for case in range(200):
+        cfg = ResizerConfig(explore_ratio=0.0)
+        r = Resizer(cfg, Rng(py.randrange(1 << 62)))
+        size = 1
+        backlog = 0
+        sizes = []
+        backlogs = []
+        actions = []
+        # Jitter the per-job service time a little per case: demand needs
+        # ceil(3.2 * service/10) workers, still ~4 for the whole band.
+        service = py.randint(9, 11)
+        for w in range(200):
+            now = (w + 1) * 5_000
+            capacity = size * (5_000 // service)
+            served = min(backlog + 1_600, capacity)
+            backlog = backlog + 1_600 - served
+            for _ in range(served // 100):
+                r.record(100 * service)
+            got = r.poll(now, size, backlog)
+            if got is not None:
+                actions.append(now)
+                size = got
+            sizes.append(size)
+            backlogs.append(backlog)
+        need = -(-1_600 * service // 5_000)  # ceil: workers needed
+        check(size >= need, f"case {case}: final size {size} below demand {need}")
+        check(backlog == 0, f"case {case}: backlog {backlog} never drained")
+        check(all(b == 0 for b in backlogs[-20:]), f"case {case}: backlog not stable")
+        for a, b in zip(actions, actions[1:]):
+            check(b - a >= cfg.cooldown, f"case {case}: actions {a},{b} violate cooldown")
+        tail = sizes[-60:]
+        check(
+            max(tail) - min(tail) <= 3,
+            f"case {case}: steady state oscillates {min(tail)}..{max(tail)}",
+        )
+
+
+def main():
+    for name, fn in [
+        ("rng", t_rng),
+        ("admission", t_admission),
+        ("resizer_deterministic", t_resizer_deterministic),
+        ("antiflap", t_antiflap),
+        ("convergence", t_convergence),
+    ]:
+        fn()
+        print(f"ok: {name}")
+    if FAILURES:
+        print(f"\n{len(FAILURES)} FAILURES")
+        sys.exit(1)
+    print("\nall feedback-model checks passed")
+
+
+if __name__ == "__main__":
+    main()

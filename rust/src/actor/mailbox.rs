@@ -64,6 +64,10 @@ pub struct Mailbox {
     pub rejected: u64,
     /// High-water mark of queue depth.
     pub peak_len: usize,
+    /// High-water mark since the last [`Mailbox::take_recent_peak`] —
+    /// a windowed peak for the feedback bus (lifetime `peak_len` never
+    /// comes back down, so it can't show recovery).
+    recent_peak: usize,
 }
 
 impl Mailbox {
@@ -74,7 +78,7 @@ impl Mailbox {
             MailboxKind::UnboundedStablePriority => (Store::Pri(BinaryHeap::new()), None),
             MailboxKind::BoundedStablePriority(c) => (Store::Pri(BinaryHeap::new()), Some(c)),
         };
-        Mailbox { store, capacity, enqueued: 0, rejected: 0, peak_len: 0 }
+        Mailbox { store, capacity, enqueued: 0, rejected: 0, peak_len: 0, recent_peak: 0 }
     }
 
     /// Enqueue; on overflow the envelope is handed back for dead-letter
@@ -91,8 +95,18 @@ impl Mailbox {
             Store::Pri(h) => h.push(PriorityEntry(env)),
         }
         self.enqueued += 1;
-        self.peak_len = self.peak_len.max(self.len());
+        let len = self.len();
+        self.peak_len = self.peak_len.max(len);
+        self.recent_peak = self.recent_peak.max(len);
         Ok(())
+    }
+
+    /// Windowed high-water mark: returns the peak depth since the last
+    /// call and re-arms the window at the current depth.
+    pub fn take_recent_peak(&mut self) -> usize {
+        let peak = self.recent_peak.max(self.len());
+        self.recent_peak = self.len();
+        peak
     }
 
     /// Dequeue the next message per the mailbox discipline.
@@ -192,6 +206,24 @@ mod tests {
         m.pop();
         assert_eq!(m.peak_len, 5);
         assert_eq!(m.len(), 3);
+    }
+
+    #[test]
+    fn recent_peak_resets_per_window() {
+        let mut m = Mailbox::new(MailboxKind::Unbounded);
+        for i in 0..5 {
+            m.push(env(4, i)).unwrap();
+        }
+        m.pop();
+        m.pop();
+        assert_eq!(m.take_recent_peak(), 5, "first window saw depth 5");
+        assert_eq!(m.take_recent_peak(), 3, "window re-arms at current depth");
+        m.pop();
+        m.pop();
+        m.pop();
+        assert_eq!(m.take_recent_peak(), 3, "drain-down still reports the re-arm depth");
+        assert_eq!(m.take_recent_peak(), 0);
+        assert_eq!(m.peak_len, 5, "lifetime high-water is untouched");
     }
 
     #[test]

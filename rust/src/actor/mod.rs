@@ -21,6 +21,6 @@ pub use mailbox::{Mailbox, MailboxKind};
 pub use message::{
     ActorId, Envelope, Msg, Priority, PRIORITY_HIGH, PRIORITY_LOW, PRIORITY_NORMAL, SYSTEM,
 };
-pub use resizer::{OptimalSizeExploringResizer, ResizerConfig};
+pub use resizer::{OptimalSizeExploringResizer, PoolPressure, ResizerConfig};
 pub use supervision::{decide, on_success, Directive, FailureState, SupervisorStrategy};
-pub use system::{ActorFactory, ActorSystem, CellStats};
+pub use system::{ActorFactory, ActorSystem, CellStats, PoolSample, ResizeSignals};

@@ -6,10 +6,31 @@
 //! (random ±step around the current size) and *optimizing* (jump toward the
 //! size with the best observed throughput), keeping a decaying performance
 //! log per size.
+//!
+//! On top of the explore/optimize walk sits an HPA-style control loop:
+//! scale-up requires `up_windows` *consecutive* lagging windows, scale-down
+//! requires `down_windows` consecutive idle windows, and every action arms
+//! a `cooldown` during which no further action fires (streaks keep
+//! accumulating under cooldown so a persistent lag acts the moment the
+//! cooldown expires). Downstream congestion reported via [`PoolPressure`]
+//! inhibits growth: adding workers to a pool whose sink is drowning only
+//! balloons in-flight work.
 
 use crate::sim::SimTime;
 use crate::util::rng::Rng;
 use std::collections::BTreeMap;
+
+/// Downstream-congestion signal fed to the resizer by the feedback bus.
+///
+/// `downstream` is a dimensionless congestion ratio (retry-queue depths
+/// over the admission base; 0.0 = clear, >= 1.0 = drowning) and
+/// `inhibit_grow` is the hard gate (breaker open on this pool's channel,
+/// or downstream >= 1.0).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PoolPressure {
+    pub downstream: f64,
+    pub inhibit_grow: bool,
+}
 
 #[derive(Debug, Clone)]
 pub struct ResizerConfig {
@@ -25,6 +46,13 @@ pub struct ResizerConfig {
     pub weight_decay: f64,
     /// Only act when utilization is high enough to be informative.
     pub min_utilization: f64,
+    /// Minimum virtual time between two resize actions (anti-flapping).
+    pub cooldown: SimTime,
+    /// Consecutive lagging windows required before scaling up.
+    pub up_windows: u32,
+    /// Consecutive idle windows required before scaling down (hysteresis:
+    /// shrinking is slower to trigger than growing).
+    pub down_windows: u32,
 }
 
 impl Default for ResizerConfig {
@@ -37,9 +65,17 @@ impl Default for ResizerConfig {
             explore_step: 0.1,
             weight_decay: 0.8,
             min_utilization: 0.5,
+            cooldown: 15_000,
+            up_windows: 2,
+            down_windows: 3,
         }
     }
 }
+
+/// A window whose `elapsed` exceeds `action_interval * STALE_WINDOW_FACTOR`
+/// is discarded rather than measured: it spans an idle gap, so its
+/// utilization/throughput would be deflated by the gap, not informative.
+const STALE_WINDOW_FACTOR: u64 = 3;
 
 /// Throughput-exploring pool resizer.
 #[derive(Debug)]
@@ -51,6 +87,14 @@ pub struct OptimalSizeExploringResizer {
     window_start: SimTime,
     processed_in_window: u64,
     busy_ms_in_window: SimTime,
+    /// Consecutive windows that measured saturated-with-backlog.
+    lag_streak: u32,
+    /// Consecutive windows that measured underutilized-and-empty.
+    idle_streak: u32,
+    /// No action fires before this instant (armed by every action).
+    cooldown_until: SimTime,
+    /// Latest downstream-congestion report (see [`PoolPressure`]).
+    pressure: PoolPressure,
     /// Counters for reporting/ablation.
     pub resizes: u64,
     pub explorations: u64,
@@ -66,6 +110,10 @@ impl OptimalSizeExploringResizer {
             window_start: 0,
             processed_in_window: 0,
             busy_ms_in_window: 0,
+            lag_streak: 0,
+            idle_streak: 0,
+            cooldown_until: 0,
+            pressure: PoolPressure::default(),
             resizes: 0,
             explorations: 0,
             optimizations: 0,
@@ -82,11 +130,32 @@ impl OptimalSizeExploringResizer {
         self.busy_ms_in_window += service_ms;
     }
 
+    /// Update the downstream-congestion signal (sticky until replaced).
+    pub fn note_pressure(&mut self, p: PoolPressure) {
+        self.pressure = p;
+    }
+
     /// Called by the cell after each completion; returns the new desired
     /// pool size if a resize action is due.
     pub fn poll(&mut self, now: SimTime, current_size: usize, queue_len: usize) -> Option<usize> {
         let elapsed = now.saturating_sub(self.window_start);
-        if elapsed < self.cfg.action_interval || self.processed_in_window == 0 {
+        // Stale window: it spans an idle gap (polls only happen on message
+        // completion, so nothing capped it while the pool sat empty).
+        // Measuring it would divide a sliver of busy time by the whole gap
+        // and trigger a spurious shrink + poison the perf log — discard it.
+        if elapsed >= self.cfg.action_interval.saturating_mul(STALE_WINDOW_FACTOR) {
+            self.window_start = now;
+            self.processed_in_window = 0;
+            self.busy_ms_in_window = 0;
+            return None;
+        }
+        if elapsed < self.cfg.action_interval {
+            return None;
+        }
+        if self.processed_in_window == 0 {
+            // Nothing completed successfully this window (all failures):
+            // re-open the window at `now` so it can't grow without bound.
+            self.window_start = now;
             return None;
         }
         // Utilization of the pool over the window.
@@ -105,27 +174,53 @@ impl OptimalSizeExploringResizer {
         self.processed_in_window = 0;
         self.busy_ms_in_window = 0;
 
+        // Classify the window and update streaks *before* the cooldown
+        // gate, so a sustained condition acts the instant cooldown expires
+        // instead of re-counting its windows from zero.
+        let lagging = util > 0.8 && queue_len > current_size;
+        let idle = util < self.cfg.min_utilization && queue_len == 0;
+        self.lag_streak = if lagging { self.lag_streak + 1 } else { 0 };
+        self.idle_streak = if idle { self.idle_streak + 1 } else { 0 };
+
+        if now < self.cooldown_until {
+            return None;
+        }
+
         // Backpressure rule: saturated pool with a backlog grows
         // multiplicatively — waiting for the explore walk to find the
         // right size would let the queue snowball (this is the dominant
         // regime during the cold-start sweep of a 200k-feed universe).
-        if util > 0.8 && queue_len > current_size {
+        if lagging && self.lag_streak >= self.cfg.up_windows {
+            if self.pressure.inhibit_grow {
+                // Downstream is the bottleneck: growing this pool would
+                // only balloon in-flight work. Keep the streak so growth
+                // fires as soon as the congestion clears.
+                return None;
+            }
             let target = (current_size + (current_size / 2).max(2))
                 .clamp(self.cfg.lower_bound, self.cfg.upper_bound);
             if target != current_size {
                 self.resizes += 1;
+                self.cooldown_until = now + self.cfg.cooldown;
                 return Some(target);
             }
             return None;
         }
 
         // Underutilized and no backlog: shrink gently toward lower bound.
-        if util < self.cfg.min_utilization && queue_len == 0 {
+        if idle && self.idle_streak >= self.cfg.down_windows {
             let target = (current_size - 1).max(self.cfg.lower_bound);
             if target != current_size {
                 self.resizes += 1;
+                self.cooldown_until = now + self.cfg.cooldown;
                 return Some(target);
             }
+            return None;
+        }
+
+        // A streak is building but not ripe: hold size steady rather than
+        // letting the explore walk fight the control loop.
+        if lagging || idle {
             return None;
         }
 
@@ -149,6 +244,7 @@ impl OptimalSizeExploringResizer {
         let target = target.clamp(self.cfg.lower_bound, self.cfg.upper_bound);
         if target != current_size {
             self.resizes += 1;
+            self.cooldown_until = now + self.cfg.cooldown;
             Some(target)
         } else {
             None
@@ -174,10 +270,43 @@ mod tests {
     #[test]
     fn shrinks_when_underutilized_and_idle() {
         let mut r = mk(ResizerConfig { min_utilization: 0.5, ..Default::default() });
-        // 1 message of 10ms over a 5000ms window on 8 routees => util ~0
+        // 1 message of 10ms per 5000ms window on 8 routees => util ~0.
+        // One idle window is not enough (down_windows = 3 hysteresis);
+        // the third consecutive idle window triggers the shrink.
         r.record(10);
-        let next = r.poll(5_000, 8, 0);
-        assert_eq!(next, Some(7));
+        assert_eq!(r.poll(5_000, 8, 0), None);
+        r.record(10);
+        assert_eq!(r.poll(10_000, 8, 0), None);
+        r.record(10);
+        assert_eq!(r.poll(15_000, 8, 0), Some(7));
+    }
+
+    #[test]
+    fn idle_gap_does_not_trigger_spurious_shrink() {
+        // Regression: after a long idle gap the first poll used to span
+        // the whole gap — deflated utilization fired a bogus shrink and
+        // wrote a near-zero throughput into the perf log.
+        let mut r = mk(ResizerConfig { explore_ratio: 0.0, ..Default::default() });
+        // Healthy warm-up window, fully utilized, at size 8.
+        for _ in 0..500 {
+            r.record(80);
+        }
+        assert_eq!(r.poll(5_000, 8, 0), None); // window measured, no action
+        // ... then the pool sits idle for an hour. The first message after
+        // the gap completes and polls: the window spans the gap, so it
+        // must be discarded, not measured.
+        r.record(10);
+        assert_eq!(r.poll(3_600_000, 8, 0), None);
+        // The perf log must not have been poisoned by a gap-deflated
+        // throughput record for size 8: the healthy record decays but a
+        // fresh saturated window still measures sane utilization.
+        for _ in 0..500 {
+            r.record(80);
+        }
+        // elapsed = 5_000 since the discarded-window reset; util = 1.0.
+        let after = r.poll(3_605_000, 8, 0);
+        assert_eq!(after, None, "util 1.0 with empty queue is healthy — no action");
+        assert_eq!(r.resizes, 0, "no spurious resize across the idle gap");
     }
 
     #[test]
@@ -225,5 +354,51 @@ mod tests {
         }
         assert!(r.explorations > 0);
         assert_eq!(r.optimizations, 0);
+    }
+
+    #[test]
+    fn cooldown_blocks_consecutive_actions() {
+        // Sustained saturation: first grow fires after up_windows lagging
+        // windows, then the cooldown blackout holds until it expires.
+        let mut r = mk(ResizerConfig { upper_bound: 256, ..Default::default() });
+        let mut size = 4usize;
+        let mut actions: Vec<SimTime> = Vec::new();
+        for w in 1..=40u64 {
+            let now = w * 5_000;
+            for _ in 0..2000 {
+                r.record(30); // busy: util well above 0.8 at small sizes
+            }
+            if let Some(n) = r.poll(now, size, size * 10) {
+                actions.push(now);
+                size = n;
+            }
+        }
+        assert!(actions.len() >= 2, "sustained lag must keep scaling up");
+        for pair in actions.windows(2) {
+            assert!(
+                pair[1] - pair[0] >= ResizerConfig::default().cooldown,
+                "actions at {} and {} violate the cooldown",
+                pair[0],
+                pair[1]
+            );
+        }
+    }
+
+    #[test]
+    fn inhibited_growth_resumes_when_pressure_clears() {
+        let mut r = mk(ResizerConfig::default());
+        r.note_pressure(PoolPressure { downstream: 2.0, inhibit_grow: true });
+        for w in 1..=4u64 {
+            for _ in 0..2000 {
+                r.record(30);
+            }
+            assert_eq!(r.poll(w * 5_000, 4, 40), None, "growth must be inhibited");
+        }
+        // Congestion clears; the accumulated lag streak acts immediately.
+        r.note_pressure(PoolPressure::default());
+        for _ in 0..2000 {
+            r.record(30);
+        }
+        assert_eq!(r.poll(25_000, 4, 40), Some(6));
     }
 }

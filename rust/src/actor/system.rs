@@ -18,7 +18,7 @@ use super::actor::{Actor, Ctx, Outbound};
 use super::dead_letters::{DeadLetter, DeadLetterReason, DeadLetters};
 use super::mailbox::{Mailbox, MailboxKind};
 use super::message::{ActorId, Envelope, Msg, Priority, PRIORITY_NORMAL, SYSTEM};
-use super::resizer::OptimalSizeExploringResizer;
+use super::resizer::{OptimalSizeExploringResizer, PoolPressure};
 use super::supervision::{decide, on_success, Directive, FailureState, SupervisorStrategy};
 use crate::sim::{Clock, EventQueue, SimTime};
 use std::cell::RefCell;
@@ -52,6 +52,10 @@ struct Cell<W> {
     restarts: u64,
     busy_ms: SimTime,
     queue_wait_ms: SimTime,
+    // Sampling cursors for the signals observer (deltas since last sample).
+    last_sample_at: SimTime,
+    busy_at_sample: SimTime,
+    processed_at_sample: u64,
 }
 
 impl<W> Cell<W> {
@@ -82,6 +86,38 @@ struct Timer<W> {
     _ph: std::marker::PhantomData<W>,
 }
 
+/// One periodic health reading of a cell, pushed to a [`ResizeSignals`]
+/// observer (the pipeline's feedback bus). Deltas are since the previous
+/// sample of the same cell.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolSample {
+    pub cell: u32,
+    pub pool_size: usize,
+    pub mailbox_len: usize,
+    /// Windowed mailbox high-water since the last sample.
+    pub mailbox_recent_peak: usize,
+    /// Busy-time fraction of the pool over the sample window (0..=1).
+    pub utilization: f64,
+    /// Messages processed since the last sample.
+    pub processed_delta: u64,
+    /// Lifetime resize-action count (from the resizer, 0 if none).
+    pub resizes: u64,
+}
+
+/// Observer interface the actor system feeds with pool-health samples and
+/// consults for downstream-congestion pressure before each resizer poll.
+/// Attached via [`ActorSystem::attach_signals`]; when absent (the default)
+/// the system behaves exactly as before — no samples, no pressure.
+pub trait ResizeSignals {
+    /// Periodic health sample for one cell (at most one per cell per
+    /// `sample_interval` of virtual time).
+    fn note_sample(&mut self, now: SimTime, name: &str, sample: PoolSample);
+    /// Current downstream pressure to apply to this cell's resizer.
+    fn pressure(&self, cell: u32) -> PoolPressure;
+    /// A resize action just happened on `cell` (from -> to routees).
+    fn note_resize(&mut self, now: SimTime, cell: u32, from: usize, to: usize);
+}
+
 /// Snapshot of one cell's runtime stats (for `inspect` and benches).
 #[derive(Debug, Clone)]
 pub struct CellStats {
@@ -109,6 +145,8 @@ pub struct ActorSystem<W> {
     rng_root: Rng,
     /// Total messages dispatched (including redeliveries).
     pub dispatched: u64,
+    /// Optional pool-health observer + its sample interval (virtual ms).
+    signals: Option<(Rc<RefCell<dyn ResizeSignals>>, SimTime)>,
 }
 
 impl<W> ActorSystem<W> {
@@ -122,7 +160,15 @@ impl<W> ActorSystem<W> {
             seq: 0,
             rng_root: Rng::new(seed),
             dispatched: 0,
+            signals: None,
         }
+    }
+
+    /// Attach a pool-health observer: every cell pushes a [`PoolSample`]
+    /// at most once per `sample_interval`, and each resizer poll first
+    /// pulls [`ResizeSignals::pressure`] for its cell.
+    pub fn attach_signals(&mut self, bus: Rc<RefCell<dyn ResizeSignals>>, sample_interval: SimTime) {
+        self.signals = Some((bus, sample_interval.max(1)));
     }
 
     pub fn now(&self) -> SimTime {
@@ -175,6 +221,9 @@ impl<W> ActorSystem<W> {
             restarts: 0,
             busy_ms: 0,
             queue_wait_ms: 0,
+            last_sample_at: 0,
+            busy_at_sample: 0,
+            processed_at_sample: 0,
         };
         self.cells.push(cell);
         ActorId(self.cells.len() as u32 - 1)
@@ -448,18 +497,64 @@ impl<W> ActorSystem<W> {
             }
         }
 
-        // Resizer decision point.
+        // Push a health sample to the feedback bus if one is due.
+        self.maybe_sample(cell_idx, now);
+
+        // Resizer decision point: refresh downstream pressure, then poll.
         let resize_to = {
+            let pressure = self.signals.as_ref().map(|(bus, _)| bus.borrow().pressure(cell_idx));
             let cell = &mut self.cells[cell_idx as usize];
             let size = cell.live_routees();
             let qlen = cell.mailbox.len();
-            cell.resizer.as_mut().and_then(|rz| rz.poll(now, size, qlen))
+            cell.resizer.as_mut().and_then(|rz| {
+                if let Some(p) = pressure {
+                    rz.note_pressure(p);
+                }
+                rz.poll(now, size, qlen)
+            })
         };
         if let Some(target) = resize_to {
+            let from = self.cells[cell_idx as usize].live_routees();
             self.resize(cell_idx, target);
+            if let Some((bus, _)) = &self.signals {
+                let bus = bus.clone();
+                bus.borrow_mut().note_resize(now, cell_idx, from, target);
+            }
         }
 
         self.pump(world, cell_idx);
+    }
+
+    /// Push a [`PoolSample`] for this cell to the signals observer if the
+    /// sample interval has elapsed since the cell's previous sample.
+    fn maybe_sample(&mut self, cell_idx: u32, now: SimTime) {
+        let Some((bus, interval)) = self.signals.as_ref().map(|(b, i)| (b.clone(), *i)) else {
+            return;
+        };
+        let sample = {
+            let cell = &mut self.cells[cell_idx as usize];
+            let elapsed = now.saturating_sub(cell.last_sample_at);
+            if elapsed < interval {
+                return;
+            }
+            let size = cell.live_routees();
+            let busy_delta = cell.busy_ms.saturating_sub(cell.busy_at_sample);
+            let processed_delta = cell.processed.saturating_sub(cell.processed_at_sample);
+            cell.last_sample_at = now;
+            cell.busy_at_sample = cell.busy_ms;
+            cell.processed_at_sample = cell.processed;
+            PoolSample {
+                cell: cell_idx,
+                pool_size: size,
+                mailbox_len: cell.mailbox.len(),
+                mailbox_recent_peak: cell.mailbox.take_recent_peak(),
+                utilization: (busy_delta as f64 / (elapsed as f64 * size.max(1) as f64)).min(1.0),
+                processed_delta,
+                resizes: cell.resizer.as_ref().map_or(0, |rz| rz.resizes),
+            }
+        };
+        let cell = &self.cells[cell_idx as usize];
+        bus.borrow_mut().note_sample(now, &cell.name, sample);
     }
 
     fn resize(&mut self, cell_idx: u32, target: usize) {
@@ -798,6 +893,59 @@ mod tests {
         sys.run_to_idle(&mut w);
         assert!(sys.pool_size(id) > 1, "pool should have grown, size={}", sys.pool_size(id));
         assert_eq!(w.counter, 2000);
+    }
+
+    #[test]
+    fn signals_observer_gets_samples_and_resize_events() {
+        struct Bus {
+            samples: u64,
+            resizes: Vec<(usize, usize)>,
+        }
+        impl ResizeSignals for Bus {
+            fn note_sample(&mut self, _now: SimTime, name: &str, s: PoolSample) {
+                assert_eq!(name, "work");
+                assert!(s.utilization <= 1.0);
+                self.samples += 1;
+            }
+            fn pressure(&self, _cell: u32) -> PoolPressure {
+                PoolPressure::default()
+            }
+            fn note_resize(&mut self, _now: SimTime, _cell: u32, from: usize, to: usize) {
+                self.resizes.push((from, to));
+            }
+        }
+        let bus = Rc::new(RefCell::new(Bus { samples: 0, resizes: Vec::new() }));
+        let mut sys: ActorSystem<TestWorld> = ActorSystem::new(7);
+        sys.attach_signals(bus.clone(), 1_000);
+        let rz = OptimalSizeExploringResizer::new(
+            ResizerConfig {
+                lower_bound: 1,
+                upper_bound: 16,
+                action_interval: 1_000,
+                explore_ratio: 0.5,
+                ..Default::default()
+            },
+            Rng::new(3),
+        );
+        let id = sys.spawn_pool(
+            "work",
+            MailboxKind::Unbounded,
+            Box::new(|_| Box::new(Echo { service: 50 })),
+            1,
+            SupervisorStrategy::default(),
+            Some(rz),
+        );
+        let mut w = TestWorld::default();
+        for i in 0..2000u64 {
+            sys.tell_at(i * 25, id, format!("m{i}"));
+        }
+        sys.run_to_idle(&mut w);
+        assert!(bus.borrow().samples > 0, "periodic samples must flow to the bus");
+        assert!(!bus.borrow().resizes.is_empty(), "resize events must be reported");
+        for &(from, to) in &bus.borrow().resizes {
+            assert_ne!(from, to);
+        }
+        assert!(sys.pool_size(id) > 1);
     }
 
     #[test]

@@ -72,6 +72,11 @@ pub struct AlertMixConfig {
     pub replenish_timeout: SimTime,
     /// Router tick cadence.
     pub router_tick: SimTime,
+    /// Floor of the dynamic admission window (0 = auto: optimal_buffer/8).
+    /// Downstream congestion (sink/enrich retry depth, SQS in-flight
+    /// excess) shrinks the in-flight window from `optimal_buffer` down to
+    /// this floor, never below.
+    pub admission_floor: usize,
 
     // -- source connectors / worker pools -----------------------------------
     /// Declarative connector list: one worker pool per entry, spawned by
@@ -82,6 +87,12 @@ pub struct AlertMixConfig {
     pub pool_mailbox: usize,
     pub use_resizer: bool,
     pub resizer_upper: usize,
+    /// Anti-flapping blackout after each resize action (virtual ms).
+    pub resizer_cooldown_ms: SimTime,
+    /// Consecutive lagging windows before a pool scales up.
+    pub resizer_up_windows: u32,
+    /// Consecutive idle windows before a pool scales down (hysteresis).
+    pub resizer_down_windows: u32,
     /// Probability a worker crashes on a message (fault injection; the
     /// supervisor restarts it).
     pub worker_fault_rate: f64,
@@ -127,6 +138,7 @@ impl Default for AlertMixConfig {
             replenish_count: 64,
             replenish_timeout: 2 * SECOND,
             router_tick: 500,
+            admission_floor: 0,
             // The classic quartet; shares mirror the historical universe
             // mix (news absorbs the remainder as the largest share).
             connectors: vec![
@@ -138,6 +150,9 @@ impl Default for AlertMixConfig {
             pool_mailbox: 4_096,
             use_resizer: true,
             resizer_upper: 64,
+            resizer_cooldown_ms: 15 * SECOND,
+            resizer_up_windows: 2,
+            resizer_down_windows: 3,
             worker_fault_rate: 0.0005,
             enrich_batch: 64,
             enrich_max_wait: 250,
@@ -247,6 +262,7 @@ impl AlertMixConfig {
                 "replenish_count" => c.replenish_count = u()? as usize,
                 "replenish_timeout_ms" => c.replenish_timeout = u()?,
                 "router_tick_ms" => c.router_tick = u()?,
+                "admission_floor" => c.admission_floor = u()? as usize,
                 // Declarative connector list: applied before this loop
                 // (see above) so legacy aliases compose either way round.
                 "connectors" => {}
@@ -275,6 +291,9 @@ impl AlertMixConfig {
                 "pool_mailbox" => c.pool_mailbox = u()? as usize,
                 "use_resizer" => c.use_resizer = b()?,
                 "resizer_upper" => c.resizer_upper = u()? as usize,
+                "resizer_cooldown_ms" => c.resizer_cooldown_ms = u()?,
+                "resizer_up_windows" => c.resizer_up_windows = u()? as u32,
+                "resizer_down_windows" => c.resizer_down_windows = u()? as u32,
                 "worker_fault_rate" => c.worker_fault_rate = f()?,
                 "enrich_batch" => c.enrich_batch = u()? as usize,
                 "enrich_max_wait_ms" => c.enrich_max_wait = u()?,
@@ -341,6 +360,12 @@ impl AlertMixConfig {
         if self.visibility_timeout <= self.replenish_timeout {
             bail!("visibility_timeout must exceed replenish_timeout");
         }
+        if self.admission_floor > self.optimal_buffer {
+            bail!("admission_floor must not exceed optimal_buffer");
+        }
+        if self.resizer_up_windows == 0 || self.resizer_down_windows == 0 {
+            bail!("resizer up/down windows must be >= 1");
+        }
         self.fault.validate()?;
         Ok(())
     }
@@ -392,6 +417,33 @@ mod tests {
         let j = Json::parse(r#"{"n_shards": 0}"#).unwrap();
         assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
         let j = Json::parse(r#"{"n_shards": 4096}"#).unwrap();
+        assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
+    }
+
+    #[test]
+    fn autoscaling_keys_parse_default_and_validate() {
+        // Absent keys keep the defaults.
+        let j = Json::parse(r#"{"n_feeds": 50}"#).unwrap();
+        let c = AlertMixConfig::from_json(&j, AlertMixConfig::default()).unwrap();
+        assert_eq!(c.resizer_cooldown_ms, 15 * SECOND);
+        assert_eq!(c.resizer_up_windows, 2);
+        assert_eq!(c.resizer_down_windows, 3);
+        assert_eq!(c.admission_floor, 0, "0 = auto (optimal_buffer/8)");
+        // Explicit values thread through.
+        let j = Json::parse(
+            r#"{"resizer_cooldown_ms": 30000, "resizer_up_windows": 3,
+                "resizer_down_windows": 5, "admission_floor": 32}"#,
+        )
+        .unwrap();
+        let c = AlertMixConfig::from_json(&j, AlertMixConfig::default()).unwrap();
+        assert_eq!(c.resizer_cooldown_ms, 30_000);
+        assert_eq!(c.resizer_up_windows, 3);
+        assert_eq!(c.resizer_down_windows, 5);
+        assert_eq!(c.admission_floor, 32);
+        // Invalid combinations refuse.
+        let j = Json::parse(r#"{"admission_floor": 9999}"#).unwrap();
+        assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
+        let j = Json::parse(r#"{"resizer_up_windows": 0}"#).unwrap();
         assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
     }
 

@@ -674,6 +674,16 @@ impl ChaosInjector {
     pub fn breakers_open(&self) -> usize {
         self.breakers.iter().filter(|b| b.open).count()
     }
+
+    /// Read-only probe: is `channel`'s breaker open (still inside its
+    /// cooldown) at `now`? Unlike [`ChaosInjector::breaker_check`] this
+    /// never counts a fast-fail — it exists for observers (the feedback
+    /// bus marks such pools grow-inhibited) and must not perturb counters.
+    pub fn breaker_is_open(&self, channel: u16, now: SimTime) -> bool {
+        self.breakers
+            .get(channel as usize)
+            .is_some_and(|b| b.open && now < b.open_until)
+    }
 }
 
 /// The sink's slice of the chaos plan: per-doc bulk rejection decisions

@@ -14,4 +14,4 @@ pub use http::{Conditional, HttpConfig, HttpResponse, HttpSim, HttpStatus};
 pub use rss::{parse_rss, write_rss, RssFeed, RssItem};
 pub use social::{Platform, Post, SocialConfig, SocialResult, SocialSim};
 pub use sysmon::{GaugeReading, Severity, SysmonConfig, SysmonSim, GAUGES};
-pub use universe::{FeedProfile, FeedUniverse, GeneratedItem, UniverseConfig};
+pub use universe::{FeedProfile, FeedUniverse, FlashCrowd, GeneratedItem, UniverseConfig};

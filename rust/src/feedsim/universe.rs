@@ -75,6 +75,22 @@ impl UniverseConfig {
     }
 }
 
+/// A transient publish-rate surge — the flash-crowd drills' load model
+/// ("breaking news": one channel's sources all publish at once).
+///
+/// Multiplies the affected feeds' publish rate by `factor` inside
+/// `[from, until)`. Crowds stack multiplicatively if windows overlap.
+/// With no crowds registered the universe is byte-identical to before.
+#[derive(Debug, Clone)]
+pub struct FlashCrowd {
+    pub from: SimTime,
+    pub until: SimTime,
+    /// Publish-rate multiplier inside the window.
+    pub factor: f64,
+    /// Restrict the surge to one channel's feeds; `None` hits everything.
+    pub channel: Option<ChannelId>,
+}
+
 /// Per-feed static profile.
 #[derive(Debug, Clone)]
 pub struct FeedProfile {
@@ -150,6 +166,8 @@ pub struct FeedUniverse {
     /// Counter for wire (syndicated) stories.
     next_wire_id: u64,
     pub items_generated: u64,
+    /// Registered rate surges (empty by default — no trajectory change).
+    flash: Vec<FlashCrowd>,
 }
 
 impl FeedUniverse {
@@ -201,7 +219,13 @@ impl FeedUniverse {
             rng_root,
             next_wire_id: 1,
             items_generated: 0,
+            flash: Vec::new(),
         }
+    }
+
+    /// Register a publish-rate surge (see [`FlashCrowd`]).
+    pub fn add_flash_crowd(&mut self, fc: FlashCrowd) {
+        self.flash.push(fc);
     }
 
     pub fn n_feeds(&self) -> usize {
@@ -223,15 +247,45 @@ impl FeedUniverse {
         1.0 + self.cfg.diurnal_depth * phase.cos()
     }
 
+    /// Flash-crowd multiplier for `channel` at time `t`. 1.0 with no active
+    /// window; multiplying by the literal 1.0 is IEEE-exact, so a universe
+    /// with no crowds registered integrates to bit-identical totals.
+    fn flash_factor(&self, channel: ChannelId, t: SimTime) -> f64 {
+        let mut f = 1.0;
+        for fc in &self.flash {
+            if t >= fc.from && t < fc.until && fc.channel.is_none_or(|c| c == channel) {
+                f *= fc.factor;
+            }
+        }
+        f
+    }
+
+    /// Next flash-window edge strictly after `t` (integration split point).
+    fn next_flash_boundary(&self, t: SimTime) -> SimTime {
+        let mut next = SimTime::MAX;
+        for fc in &self.flash {
+            if fc.from > t {
+                next = next.min(fc.from);
+            }
+            if fc.until > t {
+                next = next.min(fc.until);
+            }
+        }
+        next
+    }
+
     /// Expected number of items feed `id` publishes over [a, b), integrating
-    /// the diurnal modulation hour-by-hour.
+    /// the diurnal modulation hour-by-hour. Integration segments also split
+    /// at flash-crowd window edges so the surge factor is piecewise-exact.
     fn expected_items(&self, id: u64, a: SimTime, b: SimTime) -> f64 {
-        let rate = self.profile(id).rate_per_ms;
+        let p = self.profile(id);
+        let (rate, channel) = (p.rate_per_ms, p.channel);
         let mut total = 0.0;
         let mut t = a;
         while t < b {
-            let seg_end = ((t / HOUR + 1) * HOUR).min(b);
-            total += rate * self.diurnal_factor(t) * (seg_end - t) as f64;
+            let seg_end = ((t / HOUR + 1) * HOUR).min(b).min(self.next_flash_boundary(t));
+            total +=
+                rate * self.diurnal_factor(t) * self.flash_factor(channel, t) * (seg_end - t) as f64;
             t = seg_end;
         }
         total
@@ -443,6 +497,45 @@ mod tests {
             }
         }
         assert!(found, "expected at least one multi-feed wire story");
+    }
+
+    #[test]
+    fn flash_crowd_multiplies_expected_rate_in_window_only() {
+        let base = small();
+        let mut crowded = small();
+        crowded.add_flash_crowd(FlashCrowd {
+            from: HOUR,
+            until: 2 * HOUR,
+            factor: 100.0,
+            channel: None,
+        });
+        let id = 1u64;
+        // Outside the window: bit-identical to the plain universe.
+        assert_eq!(base.expected_items(id, 0, HOUR), crowded.expected_items(id, 0, HOUR));
+        assert_eq!(
+            base.expected_items(id, 2 * HOUR, 3 * HOUR),
+            crowded.expected_items(id, 2 * HOUR, 3 * HOUR)
+        );
+        // Inside: exactly factor x.
+        let plain = base.expected_items(id, HOUR, 2 * HOUR);
+        let surged = crowded.expected_items(id, HOUR, 2 * HOUR);
+        assert!((surged / plain - 100.0).abs() < 1e-9, "surged={surged} plain={plain}");
+        // An interval straddling the window splits at both edges.
+        let straddle = crowded.expected_items(id, HOUR / 2, 2 * HOUR + HOUR / 2);
+        let expect = base.expected_items(id, HOUR / 2, HOUR)
+            + surged
+            + base.expected_items(id, 2 * HOUR, 2 * HOUR + HOUR / 2);
+        assert!((straddle - expect).abs() < 1e-9);
+        // Channel-scoped crowds leave other channels' feeds untouched.
+        let ch = base.profile(id).channel;
+        let mut scoped = small();
+        scoped.add_flash_crowd(FlashCrowd {
+            from: HOUR,
+            until: 2 * HOUR,
+            factor: 100.0,
+            channel: Some(ChannelId(ch.0 + 100)),
+        });
+        assert_eq!(scoped.expected_items(id, HOUR, 2 * HOUR), plain);
     }
 
     #[test]

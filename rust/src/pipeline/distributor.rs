@@ -46,6 +46,8 @@ impl Actor<World> for ChannelDistributor {
             return Ok(());
         };
         let pri = if job.from_priority || rec.priority { PRIORITY_HIGH } else { PRIORITY_NORMAL };
+        let channel = rec.channel.0;
+        world.feedback.borrow_mut().note_dispatch(channel);
         ctx.send_pri(pool, pri, *job);
         Ok(())
     }

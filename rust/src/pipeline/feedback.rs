@@ -1,0 +1,330 @@
+//! The feedback bus: the pipeline's closed-loop signal plane.
+//!
+//! PR 6 made faults observable (breaker state, retry depths, poison DLQ);
+//! this module closes the loop. One `FeedbackBus`, shared `Rc<RefCell<..>>`
+//! between the `ActorSystem` and the `World` (the same pattern as
+//! `DeadLetters`), aggregates three signal families:
+//!
+//! 1. **Pool lag** — per-cell [`PoolSample`]s pushed by the actor system
+//!    (mailbox depth + windowed peak, utilization, processed delta,
+//!    resize events), which the monitor republishes as gauges and the
+//!    drills assert against.
+//! 2. **Downstream congestion** — sink retry-queue depth, parked enrich
+//!    retries and SQS in-flight excess, reported by the router every tick.
+//!    These drive two controls: the router's *dynamic admission window*
+//!    (see [`admission_window`]) and the per-pool [`PoolPressure`] that
+//!    inhibits resizer growth while the bottleneck is downstream.
+//! 3. **Placement** — per-shard pick volume/saturation and per-channel
+//!    dispatch counts, so hotspot drills can see skew without groveling
+//!    through metrics time series.
+//!
+//! The bus is pure observation + arithmetic: it owns no RNG, sends no
+//! messages, and takes no virtual time, so attaching it never perturbs
+//! the simulation trajectory.
+
+use crate::actor::{PoolPressure, PoolSample, ResizeSignals};
+use crate::sim::SimTime;
+
+/// Latest health reading for one actor cell (pool or single actor).
+#[derive(Debug, Clone, Default)]
+pub struct PoolHealth {
+    pub cell: u32,
+    pub name: String,
+    pub size: usize,
+    pub mailbox_len: usize,
+    pub mailbox_recent_peak: usize,
+    pub utilization: f64,
+    pub processed_delta: u64,
+    /// Lifetime resize-action count reported by the cell's resizer.
+    pub resizes: u64,
+    /// Resize events observed by the bus for this cell.
+    pub resize_events: u64,
+    pub last_resize_at: SimTime,
+    /// Growth is inhibited (breaker open on this pool's channel).
+    pub inhibit_grow: bool,
+    pub sampled_at: SimTime,
+}
+
+/// The dynamic admission window: how many jobs the router lets in flight.
+///
+/// Starts from the configured base (`optimal_buffer`) and shrinks one slot
+/// per unit of downstream congestion — queued sink retries, parked enrich
+/// retry items, and SQS deliveries still in flight beyond what the router
+/// itself dispatched. Floored at `floor_cfg` (or `base/8` when 0) so
+/// replenishment never stalls completely — the pipeline must keep probing
+/// or it would never observe recovery.
+///
+/// At zero congestion the window equals `base` exactly, which keeps
+/// fault-free runs byte-identical to the static-watermark behavior.
+pub fn admission_window(
+    base: usize,
+    floor_cfg: usize,
+    sink_retry: usize,
+    enrich_items: usize,
+    sqs_excess: usize,
+) -> usize {
+    let floor = if floor_cfg > 0 { floor_cfg.min(base) } else { (base / 8).max(1).min(base) };
+    base.saturating_sub(sink_retry + enrich_items + sqs_excess).max(floor)
+}
+
+/// Aggregated live signals; see the module docs.
+#[derive(Debug, Default)]
+pub struct FeedbackBus {
+    /// Indexed by cell id; `None` until the first sample arrives.
+    pools: Vec<Option<PoolHealth>>,
+    /// Total resize events across all cells.
+    pub resize_events: u64,
+    // -- downstream congestion (refreshed by the router every tick) --
+    pub sink_retry_depth: usize,
+    pub enrich_retry_items: usize,
+    pub sqs_excess_in_flight: usize,
+    pub admission_base: usize,
+    pub admission_window: usize,
+    /// Smallest admission window observed (usize::MAX until first report):
+    /// the drills use it to prove backpressure actually engaged.
+    pub min_admission_window: usize,
+    // -- placement (picker / distributor) --
+    picked_per_shard: Vec<u64>,
+    saturated_picks_per_shard: Vec<u64>,
+    dispatched_per_channel: Vec<u64>,
+}
+
+impl FeedbackBus {
+    pub fn new() -> Self {
+        FeedbackBus { min_admission_window: usize::MAX, ..Default::default() }
+    }
+
+    /// Router tick: report congestion inputs and the window they produced.
+    pub fn note_congestion(
+        &mut self,
+        base: usize,
+        window: usize,
+        sink_retry: usize,
+        enrich_items: usize,
+        sqs_excess: usize,
+    ) {
+        self.admission_base = base;
+        self.admission_window = window;
+        self.sink_retry_depth = sink_retry;
+        self.enrich_retry_items = enrich_items;
+        self.sqs_excess_in_flight = sqs_excess;
+        self.min_admission_window = self.min_admission_window.min(window);
+    }
+
+    /// Monitor tick: mark/unmark a cell whose channel breaker is open.
+    pub fn set_inhibit(&mut self, cell: u32, inhibit: bool) {
+        if let Some(Some(p)) = self.pools.get_mut(cell as usize) {
+            p.inhibit_grow = inhibit;
+        } else if inhibit {
+            // No sample yet: materialize a stub so the flag isn't lost.
+            self.ensure_slot(cell);
+            let slot = &mut self.pools[cell as usize];
+            let p = slot.get_or_insert_with(PoolHealth::default);
+            p.cell = cell;
+            p.inhibit_grow = true;
+        }
+    }
+
+    /// Picker: `n` streams picked on `shard` (`saturated` = hit pick_batch).
+    pub fn note_pick(&mut self, shard: usize, n: u64, saturated: bool) {
+        if self.picked_per_shard.len() <= shard {
+            self.picked_per_shard.resize(shard + 1, 0);
+            self.saturated_picks_per_shard.resize(shard + 1, 0);
+        }
+        self.picked_per_shard[shard] += n;
+        if saturated {
+            self.saturated_picks_per_shard[shard] += 1;
+        }
+    }
+
+    /// Distributor: one job dispatched toward `channel`'s worker pool.
+    pub fn note_dispatch(&mut self, channel: u16) {
+        let ch = channel as usize;
+        if self.dispatched_per_channel.len() <= ch {
+            self.dispatched_per_channel.resize(ch + 1, 0);
+        }
+        self.dispatched_per_channel[ch] += 1;
+    }
+
+    /// All cells that have reported at least one sample (or inhibit stub).
+    pub fn pools(&self) -> impl Iterator<Item = &PoolHealth> {
+        self.pools.iter().filter_map(|p| p.as_ref())
+    }
+
+    pub fn pool_by_name(&self, name: &str) -> Option<&PoolHealth> {
+        self.pools().find(|p| p.name == name)
+    }
+
+    /// Smallest admission window seen so far, if the router has reported.
+    pub fn min_window(&self) -> Option<usize> {
+        (self.min_admission_window != usize::MAX).then_some(self.min_admission_window)
+    }
+
+    pub fn picked_on_shard(&self, shard: usize) -> u64 {
+        self.picked_per_shard.get(shard).copied().unwrap_or(0)
+    }
+
+    pub fn saturated_picks_on_shard(&self, shard: usize) -> u64 {
+        self.saturated_picks_per_shard.get(shard).copied().unwrap_or(0)
+    }
+
+    pub fn dispatched_to_channel(&self, channel: u16) -> u64 {
+        self.dispatched_per_channel.get(channel as usize).copied().unwrap_or(0)
+    }
+
+    /// Congestion ratio fed to resizers: retry backlogs relative to the
+    /// admission base. 0.0 when the router hasn't reported yet.
+    pub fn downstream_congestion(&self) -> f64 {
+        if self.admission_base == 0 {
+            return 0.0;
+        }
+        (self.sink_retry_depth + self.enrich_retry_items) as f64 / self.admission_base as f64
+    }
+
+    fn ensure_slot(&mut self, cell: u32) {
+        if self.pools.len() <= cell as usize {
+            self.pools.resize(cell as usize + 1, None);
+        }
+    }
+}
+
+impl ResizeSignals for FeedbackBus {
+    fn note_sample(&mut self, now: SimTime, name: &str, s: PoolSample) {
+        self.ensure_slot(s.cell);
+        let slot = &mut self.pools[s.cell as usize];
+        let p = slot.get_or_insert_with(PoolHealth::default);
+        if p.name.is_empty() {
+            p.name = name.to_string();
+        }
+        p.cell = s.cell;
+        p.size = s.pool_size;
+        p.mailbox_len = s.mailbox_len;
+        p.mailbox_recent_peak = s.mailbox_recent_peak;
+        p.utilization = s.utilization;
+        p.processed_delta = s.processed_delta;
+        p.resizes = s.resizes;
+        p.sampled_at = now;
+    }
+
+    fn pressure(&self, cell: u32) -> PoolPressure {
+        let downstream = self.downstream_congestion();
+        let inhibit = self
+            .pools
+            .get(cell as usize)
+            .and_then(|p| p.as_ref())
+            .is_some_and(|p| p.inhibit_grow);
+        PoolPressure { downstream, inhibit_grow: inhibit || downstream >= 1.0 }
+    }
+
+    fn note_resize(&mut self, now: SimTime, cell: u32, _from: usize, to: usize) {
+        self.resize_events += 1;
+        self.ensure_slot(cell);
+        let slot = &mut self.pools[cell as usize];
+        let p = slot.get_or_insert_with(PoolHealth::default);
+        p.cell = cell;
+        p.size = to;
+        p.resize_events += 1;
+        p.last_resize_at = now;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_window_is_identity_at_zero_congestion() {
+        // The byte-identity guarantee: no congestion => window == base,
+        // for any base and floor configuration.
+        for base in [1usize, 8, 64, 256, 2_048] {
+            assert_eq!(admission_window(base, 0, 0, 0, 0), base);
+            assert_eq!(admission_window(base, base / 2 + 1, 0, 0, 0), base);
+        }
+    }
+
+    #[test]
+    fn admission_window_shrinks_monotonically_and_floors() {
+        let base = 256;
+        let mut last = base;
+        for depth in 0..600 {
+            let w = admission_window(base, 0, depth, 0, 0);
+            assert!(w <= last, "window must be monotone non-increasing in congestion");
+            assert!(w >= base / 8, "window must respect the auto floor");
+            last = w;
+        }
+        assert_eq!(last, base / 8, "deep congestion pins the window at the floor");
+        // Explicit floor overrides the base/8 auto floor.
+        assert_eq!(admission_window(base, 100, 10_000, 0, 0), 100);
+        // All three congestion inputs count.
+        assert_eq!(admission_window(base, 0, 10, 20, 30), base - 60);
+        // Degenerate base never yields a zero window.
+        assert_eq!(admission_window(1, 0, 50, 0, 0), 1);
+    }
+
+    #[test]
+    fn bus_tracks_samples_resizes_and_min_window() {
+        let mut bus = FeedbackBus::new();
+        assert_eq!(bus.min_window(), None);
+        bus.note_sample(
+            5_000,
+            "pool-news",
+            PoolSample {
+                cell: 3,
+                pool_size: 4,
+                mailbox_len: 10,
+                mailbox_recent_peak: 25,
+                utilization: 0.9,
+                processed_delta: 100,
+                resizes: 0,
+            },
+        );
+        bus.note_resize(6_000, 3, 4, 6);
+        let p = bus.pool_by_name("pool-news").expect("sampled pool visible");
+        assert_eq!(p.size, 6, "resize event updates the live size");
+        assert_eq!(p.mailbox_recent_peak, 25);
+        assert_eq!(p.resize_events, 1);
+        assert_eq!(bus.resize_events, 1);
+
+        bus.note_congestion(256, 200, 40, 16, 0);
+        bus.note_congestion(256, 256, 0, 0, 0);
+        assert_eq!(bus.min_window(), Some(200));
+        assert_eq!(bus.admission_window, 256);
+    }
+
+    #[test]
+    fn pressure_inhibits_on_breaker_and_deep_congestion() {
+        let mut bus = FeedbackBus::new();
+        assert_eq!(bus.pressure(0), PoolPressure::default());
+        // Breaker-open flag inhibits that cell only.
+        bus.set_inhibit(2, true);
+        assert!(bus.pressure(2).inhibit_grow);
+        assert!(!bus.pressure(1).inhibit_grow);
+        bus.set_inhibit(2, false);
+        assert!(!bus.pressure(2).inhibit_grow);
+        // Congestion at or beyond one full admission base inhibits all.
+        bus.note_congestion(100, 13, 80, 20, 0);
+        let p = bus.pressure(1);
+        assert!(p.inhibit_grow);
+        assert!((p.downstream - 1.0).abs() < 1e-12);
+        // Mild congestion reports the ratio but does not inhibit.
+        bus.note_congestion(100, 70, 20, 10, 0);
+        let p = bus.pressure(1);
+        assert!(!p.inhibit_grow);
+        assert!((p.downstream - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn placement_counters_accumulate() {
+        let mut bus = FeedbackBus::new();
+        bus.note_pick(3, 150, false);
+        bus.note_pick(3, 200, true);
+        bus.note_pick(0, 10, false);
+        bus.note_dispatch(1);
+        bus.note_dispatch(1);
+        assert_eq!(bus.picked_on_shard(3), 350);
+        assert_eq!(bus.saturated_picks_on_shard(3), 1);
+        assert_eq!(bus.picked_on_shard(7), 0);
+        assert_eq!(bus.dispatched_to_channel(1), 2);
+        assert_eq!(bus.dispatched_to_channel(9), 0);
+    }
+}

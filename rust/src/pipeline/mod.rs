@@ -30,6 +30,7 @@
 pub mod alerts;
 mod distributor;
 mod enrich_stage;
+pub mod feedback;
 mod messages;
 mod monitor;
 mod picker;
@@ -39,6 +40,7 @@ mod workers;
 mod world;
 
 pub use alerts::{AlertBook, AlertEvent, AlertRule};
+pub use feedback::{admission_window, FeedbackBus, PoolHealth};
 pub use messages::*;
 pub use world::{World, WorldCounters};
 
@@ -178,6 +180,9 @@ pub fn bootstrap_with(
                 ResizerConfig {
                     lower_bound: 1,
                     upper_bound: cfg.resizer_upper,
+                    cooldown: cfg.resizer_cooldown_ms,
+                    up_windows: cfg.resizer_up_windows,
+                    down_windows: cfg.resizer_down_windows,
                     ..Default::default()
                 },
                 Rng::new(cfg.seed ^ (0xA + channel.0 as u64)),
@@ -261,6 +266,11 @@ pub fn bootstrap_with(
     };
     world.handles = Some(handles.clone());
     world.dead_letters = sys.dead_letters.clone();
+    // Close the loop: the actor system pushes pool-health samples into
+    // the world's feedback bus (one per cell per resizer window) and
+    // consults it for downstream pressure before every resizer poll.
+    // Pure observation — attaching it never perturbs the trajectory.
+    sys.attach_signals(world.feedback.clone(), 5_000);
 
     // -- timers ("scheduler") ------------------------------------------------
     // The cron fans out one PickDue per shard per tick; each shard's

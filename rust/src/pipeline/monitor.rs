@@ -28,17 +28,63 @@ impl Actor<World> for DeadLettersMonitor {
         // Also surface backlog and in-flight gauges for the dashboards.
         world.metrics.gauge("JobsInFlight", now, world.counters.jobs_in_flight() as f64);
         world.metrics.gauge("SinkDocs", now, world.sink.doc_count() as f64);
-        // Fault/recovery gauges, only when chaos is active: a no-fault run
-        // publishes exactly the metrics it always did.
+        // Recovery-state gauges, published *unconditionally*: the feedback
+        // loop and operators need the baseline signals even in fault-free
+        // runs (they read zero there). Only the injection counters stay
+        // gated — they exist solely under an active plan.
+        world.metrics.gauge("BreakersOpenNow", now, world.fault.breakers_open() as f64);
+        let dlq = world.fault.counters.enrich_poisoned + world.sink.counters.docs_poisoned;
+        world.metrics.gauge("PoisonDlqDepth", now, dlq as f64);
+        world.metrics.gauge("SinkRetryDepth", now, world.sink.retry_depth() as f64);
+        world.metrics.gauge("EnrichRetryDepth", now, world.enrich_retry_depth() as f64);
         if world.fault.enabled() {
             let fc = &world.fault.counters;
             world.metrics.gauge("InjectedFaults", now, fc.total_injected() as f64);
             world.metrics.gauge("BreakerOpens", now, fc.breaker_opens as f64);
-            world.metrics.gauge("BreakersOpenNow", now, world.fault.breakers_open() as f64);
-            let dlq = fc.enrich_poisoned + world.sink.counters.docs_poisoned;
-            world.metrics.gauge("PoisonDlqDepth", now, dlq as f64);
-            world.metrics.gauge("SinkRetryDepth", now, world.sink.retry_depth() as f64);
-            world.metrics.gauge("EnrichRetryDepth", now, world.enrich_retry_depth() as f64);
+        }
+
+        // Close the loop against breaker state: pools whose channel
+        // breaker is open are marked grow-inhibited on the feedback bus
+        // (adding workers to a pool that fast-fails only spins restarts).
+        let bus = world.feedback.clone();
+        if let Some(handles) = &world.handles {
+            let mut bus = bus.borrow_mut();
+            for (ch, pid) in handles.pools.iter().enumerate() {
+                if let Some(pid) = pid {
+                    bus.set_inhibit(pid.0, world.fault.breaker_is_open(ch as u16, now));
+                }
+            }
+        }
+
+        // Pool-health gauges from the feedback bus (unconditional too).
+        {
+            let bus = bus.borrow();
+            if bus.admission_base > 0 {
+                world.metrics.gauge("AdmissionWindow", now, bus.admission_window as f64);
+            }
+            if bus.resize_events > 0 {
+                world.metrics.gauge("PoolResizeEvents", now, bus.resize_events as f64);
+            }
+            for p in bus.pools() {
+                if p.name.is_empty() {
+                    continue; // inhibit stub without a sample yet
+                }
+                world.metrics.gauge(&format!("PoolSize[{}]", p.name), now, p.size as f64);
+                world.metrics.gauge(&format!("PoolMailbox[{}]", p.name), now, p.mailbox_len as f64);
+                world.metrics.peak(
+                    &format!("PoolMailboxPeak[{}]", p.name),
+                    now,
+                    p.mailbox_recent_peak as f64,
+                );
+                world.metrics.gauge(
+                    &format!("PoolUtilization[{}]", p.name),
+                    now,
+                    p.utilization,
+                );
+                if p.resizes > 0 {
+                    world.metrics.gauge(&format!("PoolResizes[{}]", p.name), now, p.resizes as f64);
+                }
+            }
         }
         world.metrics.evaluate_alarms(now);
         Ok(())
@@ -93,5 +139,27 @@ mod tests {
         sys.tell_at(10 * MINUTE, mon, MonitorTick);
         sys.run_to_idle(&mut w);
         assert!(w.metrics.emails.is_empty());
+    }
+
+    #[test]
+    fn baseline_recovery_gauges_publish_without_faults() {
+        // Satellite of the closed loop: the recovery-state gauges are no
+        // longer gated behind an active FaultPlan — a clean run publishes
+        // them too (reading zero), so dashboards and drills always have
+        // the baseline.
+        let mut sys: ActorSystem<World> = ActorSystem::new(1);
+        let mut w = World::build(&AlertMixConfig::tiny()).unwrap();
+        w.dead_letters = sys.dead_letters.clone();
+        let mon =
+            sys.spawn("mon", MailboxKind::Unbounded, Box::new(|_| Box::new(DeadLettersMonitor)));
+        sys.tell_at(MINUTE, mon, MonitorTick);
+        sys.run_to_idle(&mut w);
+        for name in ["SinkRetryDepth", "EnrichRetryDepth", "PoisonDlqDepth", "BreakersOpenNow"] {
+            let s = w.metrics.get(name).unwrap_or_else(|| panic!("{name} gauge missing"));
+            assert_eq!(s.total(), 0.0, "{name} must read zero in a clean run");
+        }
+        // Injection counters stay gated: they only exist under a plan.
+        assert!(w.metrics.get("InjectedFaults").is_none());
+        assert!(w.metrics.emails.is_empty(), "baseline gauges must not alarm");
     }
 }

@@ -68,6 +68,14 @@ impl Actor<World> for StreamsPicker {
         }
         let n_picked = picked.len();
         world.pick_bufs[shard] = picked;
+        // Placement signal: per-shard pick volume, and whether the claim
+        // hit the batch cap (a saturated pick means due work outran this
+        // tick's claim window — the hotspot drills read this skew).
+        world.feedback.borrow_mut().note_pick(
+            shard,
+            n_picked as u64,
+            n_picked >= world.cfg.pick_batch,
+        );
         if n_picked == 0 {
             return Ok(());
         }

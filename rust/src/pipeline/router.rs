@@ -68,11 +68,36 @@ impl Actor<World> for FeedRouter {
         if !count_trigger && !timeout_trigger {
             return Ok(());
         }
-        // (a)+(d): replenish up to the optimal buffer.
-        if in_flight >= world.cfg.optimal_buffer {
+        // (a)+(d): replenish up to the *dynamic admission window* — the
+        // optimal buffer shrunk by downstream congestion. A slow sink
+        // (deep bulk-retry queue), parked enrichment retries, or SQS
+        // deliveries still leased beyond what we dispatched all narrow
+        // the window, so backpressure propagates to replenishment instead
+        // of ballooning in-flight work. At zero congestion the window is
+        // exactly `optimal_buffer`: fault-free runs are unchanged.
+        let sink_retry = world.sink.retry_depth();
+        let enrich_items = world.enrich_retry_depth().saturating_mul(world.cfg.enrich_batch);
+        let sqs_leased =
+            world.queues.main.in_flight_count() + world.queues.priority.in_flight_count();
+        let sqs_excess = sqs_leased.saturating_sub(in_flight);
+        let window = super::feedback::admission_window(
+            world.cfg.optimal_buffer,
+            world.cfg.admission_floor,
+            sink_retry,
+            enrich_items,
+            sqs_excess,
+        );
+        world.feedback.borrow_mut().note_congestion(
+            world.cfg.optimal_buffer,
+            window,
+            sink_retry,
+            enrich_items,
+            sqs_excess,
+        );
+        if in_flight >= window {
             return Ok(());
         }
-        let want = world.cfg.optimal_buffer - in_flight;
+        let want = window - in_flight;
 
         // One batched drain: a single receive_prioritized_into call pulls
         // the whole replenishment (internally looping the SQS 10-message
@@ -227,6 +252,31 @@ mod tests {
         sys.run_to_idle(&mut w);
         // Only the first tick pulls (5); the second sees in_flight == 5.
         assert_eq!(w.counters.jobs_dispatched, 5);
+    }
+
+    #[test]
+    fn admission_window_shrinks_under_sqs_pressure() {
+        // Messages leased out-of-band (chaos redeliveries, stuck leases)
+        // count against the window: the router must not balloon total
+        // outstanding work past the optimal buffer.
+        let mut sys: ActorSystem<World> = ActorSystem::new(1);
+        let (mut w, _sink) = world_with_handles(&mut sys);
+        w.cfg.optimal_buffer = 5;
+        let router =
+            sys.spawn("router", MailboxKind::Unbounded, Box::new(|_| Box::new(FeedRouter::new())));
+        for i in 0..50 {
+            w.queues.main.send(0, format!("{{\"stream_id\":{i}}}"));
+        }
+        // Lease 3 messages directly (never dispatched, never completed):
+        // the router sees 3 excess in-flight leases.
+        let leased = w.queues.main.receive(0, 3);
+        assert_eq!(leased.len(), 3);
+        sys.tell_at(w.cfg.replenish_timeout, router, RouterTick);
+        sys.run_to_idle(&mut w);
+        // window = max(5 - 3, floor=1) = 2 (auto floor: 5/8 -> 1).
+        assert_eq!(w.counters.jobs_dispatched, 2);
+        assert_eq!(w.feedback.borrow().min_window(), Some(2));
+        assert_eq!(w.feedback.borrow().sqs_excess_in_flight, 3);
     }
 
     #[test]

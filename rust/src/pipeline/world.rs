@@ -1,6 +1,7 @@
 //! The shared world: every substrate the actors operate on.
 
 use super::alerts::AlertBook;
+use super::feedback::FeedbackBus;
 use super::messages::{EnrichBatch, ItemMeta};
 use super::Handles;
 use crate::actor::DeadLetters;
@@ -157,6 +158,11 @@ pub struct World {
     /// actor reads it; the system writes it).
     pub dead_letters: Rc<RefCell<DeadLetters>>,
     pub handles: Option<Handles>,
+    /// The closed-loop signal bus: pool-health samples from the actor
+    /// system, congestion reports from the router, placement counters
+    /// from picker/distributor. Shared with the `ActorSystem` via
+    /// `attach_signals` (same `Rc<RefCell<..>>` pattern as dead letters).
+    pub feedback: Rc<RefCell<FeedbackBus>>,
     /// The seeded fault injector driven by `cfg.fault`. Disabled (and
     /// draw-free) under the default empty plan.
     pub fault: ChaosInjector,
@@ -268,6 +274,7 @@ impl World {
             counters: WorldCounters::default(),
             dead_letters: Rc::new(RefCell::new(DeadLetters::default())),
             handles: None,
+            feedback: Rc::new(RefCell::new(FeedbackBus::new())),
             fault,
             enrich_retries: VecDeque::new(),
             cfg: cfg.clone(),

@@ -1,0 +1,315 @@
+//! Closed-loop autoscaling tests: the HPA-style resizer control law, the
+//! dynamic admission window, and the end-to-end feedback loop.
+//!
+//! The headline properties:
+//!
+//! - **Anti-flapping** — under arbitrary lag traces, a pool never resizes
+//!   twice within one cooldown window, and sizes stay within bounds.
+//! - **Convergence** — a step load (explore disabled) grows the pool to a
+//!   size that meets demand, drains the backlog, and then holds steady
+//!   instead of oscillating.
+//! - **Backpressure identity** — at zero downstream congestion the
+//!   admission window equals the configured base exactly; with the
+//!   resizer off and no fault plan, whole runs replay bit-for-bit (the
+//!   signal plane is pure observation).
+//! - **End to end** — a flash-crowd surge against a tight pool produces
+//!   resize events on the feedback bus and real pool growth.
+
+use alertmix::actor::{OptimalSizeExploringResizer, PoolPressure, ResizerConfig};
+use alertmix::config::AlertMixConfig;
+use alertmix::feedsim::FlashCrowd;
+use alertmix::pipeline::{admission_window, bootstrap, run_for};
+use alertmix::sim::{SimTime, HOUR, MINUTE, SECOND};
+use alertmix::util::prop::forall;
+use alertmix::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Admission-window arithmetic.
+
+#[test]
+fn admission_window_identity_monotonicity_and_floor() {
+    // Zero congestion is the identity: the window IS the base. This is
+    // what keeps fault-free runs byte-identical to the static watermark.
+    forall("zero congestion leaves the window at base", 300, |g| {
+        let base = g.usize(1, 4_096);
+        let floor_cfg = g.usize(0, 64);
+        admission_window(base, floor_cfg, 0, 0, 0) == base
+    });
+    // The window is clamped to [floor, base] for any congestion level.
+    forall("window stays within [floor, base]", 300, |g| {
+        let base = g.usize(1, 4_096);
+        let floor_cfg = g.usize(0, 8_192);
+        let w = admission_window(base, floor_cfg, g.usize(0, 10_000), g.usize(0, 10_000), g.usize(0, 10_000));
+        let floor = if floor_cfg > 0 { floor_cfg.min(base) } else { (base / 8).max(1).min(base) };
+        w >= floor && w <= base
+    });
+    // More congestion never widens the window.
+    forall("window is monotone non-increasing in congestion", 300, |g| {
+        let base = g.usize(1, 4_096);
+        let floor_cfg = g.usize(0, 64);
+        let (s, e, q) = (g.usize(0, 2_000), g.usize(0, 2_000), g.usize(0, 2_000));
+        let w1 = admission_window(base, floor_cfg, s, e, q);
+        let w2 = admission_window(base, floor_cfg, s + g.usize(0, 500), e + g.usize(0, 500), q + g.usize(0, 500));
+        w2 <= w1
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Resizer control law.
+
+/// Anti-flapping: feed the resizer randomized window traces — saturated,
+/// idle, moderate, and empty windows in any order, with random poll gaps,
+/// exploration ratios and downstream pressure — and check that any two
+/// resize actions are at least one cooldown apart and every size stays
+/// within the configured bounds.
+#[test]
+fn no_resize_twice_within_cooldown_under_random_traces() {
+    forall("resize actions are >= cooldown apart and in bounds", 80, |g| {
+        let cooldown = g.u64(5_000, 30_000);
+        let cfg = ResizerConfig {
+            cooldown,
+            explore_ratio: g.f64(0.0, 1.0),
+            up_windows: g.u64(1, 4) as u32,
+            down_windows: g.u64(1, 4) as u32,
+            ..ResizerConfig::default()
+        };
+        let lower = cfg.lower_bound;
+        let upper = cfg.upper_bound;
+        let mut r = OptimalSizeExploringResizer::new(cfg, Rng::new(g.u64(0, u64::MAX - 1)));
+        let mut size = g.usize(1, 16);
+        let mut now: SimTime = 0;
+        let mut last_action: Option<SimTime> = None;
+        for _ in 0..100 {
+            now += g.u64(5_000, 20_000);
+            if g.chance(0.1) {
+                r.note_pressure(PoolPressure {
+                    downstream: g.f64(0.0, 2.0),
+                    inhibit_grow: g.bool(),
+                });
+            }
+            // Random window flavor (busy_ms is scaled by size so the
+            // utilization classification is size-independent).
+            let queue_len = match g.u64(0, 4) {
+                0 => {
+                    // Saturated: util 1.0 and a real backlog.
+                    for _ in 0..10 {
+                        r.record(500 * size as u64);
+                    }
+                    size * 2 + g.usize(1, 50)
+                }
+                1 => {
+                    // Idle: tiny utilization, empty queue.
+                    r.record(g.u64(1, 200));
+                    0
+                }
+                2 => {
+                    // Moderate: util ~0.6, no backlog.
+                    for _ in 0..5 {
+                        r.record(600 * size as u64);
+                    }
+                    0
+                }
+                _ => 0, // Nothing completed this window.
+            };
+            if let Some(new_size) = r.poll(now, size, queue_len) {
+                if new_size < lower || new_size > upper {
+                    return false;
+                }
+                if let Some(prev) = last_action {
+                    if now - prev < cooldown {
+                        return false;
+                    }
+                }
+                last_action = Some(now);
+                size = new_size;
+            }
+        }
+        true
+    });
+}
+
+/// Step-load convergence: a constant offered load of 1600 jobs per 5 s
+/// window at 10 ms per job needs a pool of at least 4. With exploration
+/// disabled, the controller must grow from 1 to a size that meets demand,
+/// drain the backlog, and then hold a narrow size band — no oscillation.
+#[test]
+fn step_load_converges_without_oscillation() {
+    let cfg = ResizerConfig { explore_ratio: 0.0, ..ResizerConfig::default() };
+    let cooldown = cfg.cooldown;
+    let mut r = OptimalSizeExploringResizer::new(cfg, Rng::new(7));
+
+    let mut size = 1usize;
+    let mut backlog = 0u64;
+    let mut action_times: Vec<SimTime> = Vec::new();
+    let mut sizes: Vec<usize> = Vec::new();
+    let mut backlogs: Vec<u64> = Vec::new();
+    for w in 0..200u64 {
+        let now = (w + 1) * 5_000;
+        // Simple fluid queue: capacity = size workers * 500 jobs/window.
+        let capacity = size as u64 * 500;
+        let served = (backlog + 1_600).min(capacity);
+        backlog = backlog + 1_600 - served;
+        for _ in 0..served / 100 {
+            r.record(1_000); // 100 jobs x 10 ms, batched for test speed
+        }
+        if let Some(new_size) = r.poll(now, size, backlog as usize) {
+            action_times.push(now);
+            size = new_size;
+        }
+        sizes.push(size);
+        backlogs.push(backlog);
+    }
+
+    assert!(size >= 4, "pool must reach demand-meeting capacity, got {size}");
+    assert_eq!(backlog, 0, "backlog must drain once capacity meets demand");
+    assert!(
+        backlogs.iter().rev().take(20).all(|&b| b == 0),
+        "backlog must stay drained, tail: {:?}",
+        &backlogs[backlogs.len() - 20..]
+    );
+    for pair in action_times.windows(2) {
+        assert!(pair[1] - pair[0] >= cooldown, "actions {pair:?} violate cooldown");
+    }
+    let tail = &sizes[sizes.len() - 60..];
+    let (lo, hi) = (tail.iter().min().unwrap(), tail.iter().max().unwrap());
+    assert!(hi - lo <= 3, "steady state oscillates: sizes ranged {lo}..{hi} over the last 60 windows");
+}
+
+/// Regression for the stale-window bug: completions trickling in across a
+/// long quiet gap must not be read as one giant low-utilization window
+/// (which used to shrink healthy pools the moment traffic paused).
+#[test]
+fn stale_window_after_quiet_gap_is_discarded() {
+    let cfg = ResizerConfig { explore_ratio: 0.0, ..ResizerConfig::default() };
+    let mut r = OptimalSizeExploringResizer::new(cfg, Rng::new(3));
+
+    // A healthy saturated window at size 8 (util 1.0, no backlog).
+    for _ in 0..10 {
+        r.record(4_000);
+    }
+    assert_eq!(r.poll(5 * SECOND, 8, 0), None);
+
+    // One straggler completes during a 115 s quiet spell. The elapsed
+    // window is way past STALE_WINDOW_FACTOR * action_interval: discard.
+    r.record(20);
+    assert_eq!(r.poll(120 * SECOND, 8, 0), None, "stale window must be discarded, not read as idle");
+
+    // The discard re-opened the window at `now`: a full down_windows run
+    // of *genuine* idle windows is still required before any shrink.
+    assert_eq!(r.poll(125 * SECOND, 8, 0), None); // empty window, no-op
+    for w in 1..=3u64 {
+        r.record(10);
+        let got = r.poll(125 * SECOND + w * 5_000, 8, 0);
+        if w < 3 {
+            assert_eq!(got, None, "idle streak not ripe at window {w}");
+        } else {
+            assert_eq!(got, Some(7), "three genuine idle windows shrink by one");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Whole-pipeline properties.
+
+/// With the resizer off and no fault plan, the feedback bus is pure
+/// observation: runs replay bit-for-bit and no resize event ever fires.
+/// This is the acceptance check that attaching the signal plane did not
+/// perturb the baseline trajectory.
+#[test]
+fn resizer_off_no_fault_runs_replay_bit_for_bit() {
+    let run = || {
+        let mut c = AlertMixConfig {
+            seed: 5,
+            n_feeds: 150,
+            use_xla: false,
+            worker_fault_rate: 0.0,
+            ..AlertMixConfig::tiny()
+        };
+        c.use_resizer = false;
+        run_for(c, HOUR).unwrap().1
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(format!("{:?}", a.counters), format!("{:?}", b.counters));
+    assert_eq!(a.sink.doc_count(), b.sink.doc_count());
+    assert_eq!(a.queues.main.counters.sent, b.queues.main.counters.sent);
+    assert_eq!(a.queues.priority.counters.sent, b.queues.priority.counters.sent);
+    assert_eq!(a.sink.counters.bulk_requests, b.sink.counters.bulk_requests);
+    // No resizers attached => nothing on the bus ever resizes.
+    assert_eq!(a.feedback.borrow().resize_events, 0);
+    assert!(!a.fault.enabled(), "no fault plan must mean no chaos");
+    // The legacy conservation identity still reads the classic way.
+    assert_eq!(a.counters.items_fetched, a.counters.items_ingested + a.counters.items_deduped);
+}
+
+/// End to end: a 100x breaking-news surge against a news pool pinned to
+/// size 1 must produce resize events on the feedback bus and real pool
+/// growth — the miniature version of the `drills` flash-crowd scenario.
+#[test]
+fn flash_crowd_drives_pool_growth_end_to_end() {
+    let onset = 20 * MINUTE;
+    let surge_end = 35 * MINUTE;
+    let run_end = 60 * MINUTE;
+
+    let mut cfg = AlertMixConfig {
+        seed: 11,
+        n_feeds: 1_500,
+        use_xla: false,
+        worker_fault_rate: 0.0,
+        ..AlertMixConfig::tiny()
+    };
+    // Fast cadence so the publish surge becomes job-arrival pressure
+    // within the window, and a deliberately tight news pool.
+    cfg.base_poll_interval = MINUTE;
+    cfg.set_pool("news", 1);
+
+    let (mut sys, mut world, h) = bootstrap(cfg).expect("bootstrap");
+    let news = world.connectors.id("news").expect("news channel");
+    let news_pool = h.pool_for(news).expect("news pool");
+    world.universe.add_flash_crowd(FlashCrowd {
+        from: onset,
+        until: surge_end,
+        factor: 100.0,
+        channel: Some(news),
+    });
+
+    // Let the cold-start transient grow and shrink back first.
+    sys.run_until(&mut world, onset);
+    let size_at_onset = sys.pool_size(news_pool);
+    let resizes_at_onset = world.feedback.borrow().resize_events;
+
+    // Probe through the surge: reads between steps never perturb the run.
+    let mut pool_peak = size_at_onset;
+    let mut t = onset;
+    while t < run_end {
+        t += 30 * SECOND;
+        sys.run_until(&mut world, t);
+        pool_peak = pool_peak.max(sys.pool_size(news_pool));
+    }
+    world.flush_enrichment(run_end);
+    world.sink.flush();
+
+    assert!(
+        pool_peak > size_at_onset,
+        "news pool must grow under the surge (onset size {size_at_onset}, peak {pool_peak})"
+    );
+    let resize_events = world.feedback.borrow().resize_events;
+    assert!(
+        resize_events > resizes_at_onset,
+        "feedback bus must record resize events after onset ({resizes_at_onset} -> {resize_events})"
+    );
+    let health = world
+        .feedback
+        .borrow()
+        .pool_by_name("news-pool")
+        .map(|p| (p.resize_events, p.size))
+        .expect("news pool sampled on the bus");
+    assert!(health.0 > 0, "per-pool health must carry resize events");
+    // Conservation still holds after the surge drains.
+    let c = &world.counters;
+    let sc = &world.sink.counters;
+    assert_eq!(
+        c.items_fetched,
+        sc.docs_indexed + c.items_deduped + world.fault.counters.enrich_poisoned + sc.docs_poisoned
+    );
+    assert_eq!(world.sink.doc_count() as u64, sc.docs_indexed);
+}
