@@ -13,6 +13,13 @@
 #                            self-asserts recovery within budget and writes
 #                            BENCH_recovery.json (failures print the seed and
 #                            FaultPlan for a replay, same as chaos)
+#   make alerts              pinned-seed alert storm: 100k standing queries on
+#                            the percolator, scripted market shocks + flash
+#                            crowd; self-asserts exact fire counts from the
+#                            pure market oracle, selectivity and latency
+#                            budgets (failures print the replay seed)
+#   make bench-alerts        refresh BENCH_alerts.json (percolator match path;
+#                            asserts 0 allocs/doc steady state at 100k queries)
 #   make bench-ingest        refresh BENCH_ingest.json (ingest hot-path numbers)
 #   make bench-sqs           refresh BENCH_sqs.json (SQS hot-path numbers)
 #   make bench-store         refresh BENCH_store.json (streams-bucket pick/complete
@@ -25,7 +32,7 @@ CARGO ?= cargo
 # Coordinator shards for bench-store (1 = classic single coordinator).
 SHARDS ?= 1
 
-.PHONY: verify example-connectors chaos drills bench-ingest bench-sqs bench-store bench artifacts
+.PHONY: verify example-connectors chaos drills alerts bench-alerts bench-ingest bench-sqs bench-store bench artifacts
 
 # Pinned seed so CI failures replay bit-for-bit; override for exploration:
 #   make chaos CHAOS_SEED=99 CHAOS_FEEDS=10000
@@ -37,6 +44,11 @@ CHAOS_FEEDS ?= 2000
 DRILL_SEED ?= 21
 DRILL_FEEDS ?= 2000
 DRILL ?= all
+
+# Alert-storm seed/size, same replay discipline:
+#   make alerts STORM_SEED=7 STORM_QUERIES=250000
+STORM_SEED ?= 77
+STORM_QUERIES ?= 100000
 
 # The clippy gate covers lib + bins (not --all-targets: the bench/test
 # surface is exercised by `cargo test` and the CI bench smoke instead).
@@ -58,6 +70,14 @@ chaos:
 drills:
 	cd rust && DRILL=$(DRILL) DRILL_SEED=$(DRILL_SEED) DRILL_FEEDS=$(DRILL_FEEDS) \
 		$(CARGO) run --release --example drills
+
+alerts:
+	cd rust && STORM_SEED=$(STORM_SEED) ALERT_QUERIES=$(STORM_QUERIES) \
+		$(CARGO) run --release --example alert_storm
+
+bench-alerts:
+	cd rust && $(CARGO) bench --bench bench_alerts
+	@test -f BENCH_alerts.json && echo "refreshed BENCH_alerts.json" || true
 
 bench-ingest:
 	cd rust && $(CARGO) bench --bench bench_ingest

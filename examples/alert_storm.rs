@@ -1,0 +1,287 @@
+//! Alert storm: the percolator's end-to-end acceptance gate.
+//!
+//! Boots the full pipeline with a market-data connector next to the news
+//! firehose, registers 100k+ standing queries (a long noise tail plus
+//! numeric crash/rally/rate rules pinned to one symbol), scripts three
+//! oscillating flash shocks on that symbol, rides a news flash crowd, and
+//! then self-asserts:
+//!
+//! - **Exact fire counts.** The market simulator is pure in
+//!   `(symbol, window, seed, shocks)`, so the expected number of
+//!   crash/rally fires is re-derived *independently of the pipeline* by
+//!   enumerating `MarketSim::window_summary` over every completed window.
+//!   Delivered fires must match exactly.
+//! - **Selectivity.** Mean candidate probes per doc stays tiny despite
+//!   the 100k-query index (cold-anchored noise rules are never probed).
+//! - **Latency.** p99 publish→alert stays within the poll-cadence budget.
+//! - **Lifecycle.** Ack/resolve move the per-state counters; a snapshot
+//!   of the live rules restores by name into a fresh engine that fires
+//!   identically on a probe document.
+//!
+//! Any violation prints the seed needed to replay and exits non-zero
+//! (`make alerts` wires this into CI).
+//!
+//! ```bash
+//! cargo run --release --example alert_storm
+//! STORM_SEED=77 ALERT_QUERIES=100000 cargo run --release --example alert_storm
+//! ```
+
+use alertmix::alert::{restore_rules, snapshot_rules, AlertEngine, AlertState, RuleSpec};
+use alertmix::config::{AlertMixConfig, ConnectorSpec};
+use alertmix::feedsim::FlashCrowd;
+use alertmix::pipeline::bootstrap;
+use alertmix::sim::{HOUR, MINUTE, SECOND};
+use alertmix::sink::SinkDoc;
+use std::rc::Rc;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn fail(seed: u64, msg: String) -> ! {
+    eprintln!("alert_storm FAILED: {msg}");
+    eprintln!("replay with: STORM_SEED={seed}");
+    std::process::exit(2);
+}
+
+macro_rules! check {
+    ($seed:expr, $cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            fail($seed, format!($($arg)+));
+        }
+    };
+}
+
+fn main() -> anyhow::Result<()> {
+    let seed = env_u64("STORM_SEED", 77);
+    let nq = env_u64("ALERT_QUERIES", 100_000);
+    let mut cfg = AlertMixConfig {
+        seed,
+        n_feeds: 1_500,
+        use_xla: false,
+        ..AlertMixConfig::default()
+    };
+    // Market windows are all distinct prints; keep near-duplicate folding
+    // out of the fire-count ledger.
+    cfg.dedup_max_hamming = 0;
+    cfg.connectors =
+        vec![ConnectorSpec::new("news", 8, 0.96), ConnectorSpec::new("market", 2, 0.04)];
+    println!("alert_storm: seed {seed}, {} feeds, {nq} noise queries, 1 virtual hour", cfg.n_feeds);
+
+    let (mut sys, mut world, _h) = bootstrap(cfg)?;
+
+    // Pick the shock symbol: the first stream on the market channel.
+    let market_ch = world.connectors.id("market").expect("market connector registered");
+    let news_ch = world.connectors.id("news").expect("news connector registered");
+    let shock_sym = world
+        .universe
+        .profiles()
+        .iter()
+        .find(|p| p.channel == market_ch)
+        .map(|p| p.id)
+        .expect("at least one market stream");
+    let market_streams =
+        world.universe.profiles().iter().filter(|p| p.channel == market_ch).count();
+    println!("market streams: {market_streams}, shock symbol: {shock_sym}");
+
+    // Three scripted oscillating shocks, all well before the end of the
+    // run so every breaching window is delivered and the exact-count
+    // ledger closes.
+    for (i, at) in [10 * MINUTE, 20 * MINUTE, 35 * MINUTE].into_iter().enumerate() {
+        world.market.script_shock(shock_sym, at, 400.0, 1_000 + i as u64 * 500);
+    }
+    // A news flash crowd *after* the last shock: stresses the pipeline
+    // without sitting between a shock and its delivery.
+    world.universe.add_flash_crowd(FlashCrowd {
+        from: 42 * MINUTE,
+        until: 48 * MINUTE,
+        factor: 100.0,
+        channel: Some(news_ch),
+    });
+
+    // Standing queries. The four market rules anchor on the `move_bps`
+    // field name; the noise tail anchors on per-rule cold terms and is
+    // never probed by real traffic.
+    let crash_q = world
+        .alert_engine
+        .register(
+            RuleSpec::named("crash")
+                .numeric_lte("move_bps", -250.0)
+                .stream(shock_sym)
+                .notify("pager"),
+        )
+        .unwrap();
+    let rally_q = world
+        .alert_engine
+        .register(
+            RuleSpec::named("rally")
+                .numeric_gte("move_bps", 250.0)
+                .stream(shock_sym)
+                .notify("email"),
+        )
+        .unwrap();
+    let never_q = world
+        .alert_engine
+        .register(RuleSpec::named("never").numeric_lte("move_bps", -2_000.0))
+        .unwrap();
+    let burst_q = world
+        .alert_engine
+        .register(
+            RuleSpec::named("burst")
+                .numeric_lte("move_bps", -250.0)
+                .stream(shock_sym)
+                .rate(3, 2 * SECOND)
+                .notify("pager"),
+        )
+        .unwrap();
+    for i in 0..nq {
+        world
+            .alert_engine
+            .register(RuleSpec::named(&format!("noise{i}")).all_terms(&[&format!("z{i}noise")]))
+            .unwrap();
+    }
+    println!("registered {} standing queries", world.alert_engine.rule_count());
+
+    sys.run_until(&mut world, HOUR);
+    world.flush_enrichment(sys.now());
+    world.sink.flush();
+
+    let c = &world.counters;
+    println!(
+        "\nitems: fetched {} -> ingested {} / deduped {} (sink docs {})",
+        c.items_fetched,
+        c.items_ingested,
+        c.items_deduped,
+        world.sink.doc_count()
+    );
+    println!("alert engine:\n{}", world.alert_table());
+
+    // --- exact fire counts from the pure oracle ---------------------------
+    // Re-derive the expected crash/rally fires by enumerating every
+    // completed window of the shock symbol through the pure summary; only
+    // emitted windows become documents.
+    let done = world.market.completed_window(sys.now()).unwrap_or(0);
+    let mut expect_crash = 0u64;
+    let mut expect_rally = 0u64;
+    for w in 0..=done {
+        let win = world.market.window_summary(shock_sym, w);
+        if !world.market.emits(&win) {
+            continue;
+        }
+        if win.move_bps <= -250.0 {
+            expect_crash += 1;
+            check!(seed, win.shocked, "natural window {w} breached -250bps — bound broke");
+        }
+        if win.move_bps >= 250.0 {
+            expect_rally += 1;
+            check!(seed, win.shocked, "natural window {w} breached +250bps — bound broke");
+        }
+    }
+    let st = &world.alert_engine.store;
+    check!(
+        seed,
+        st.fires_for(crash_q) == expect_crash,
+        "crash fired {} times, oracle expects {expect_crash}",
+        st.fires_for(crash_q)
+    );
+    check!(
+        seed,
+        st.fires_for(rally_q) == expect_rally,
+        "rally fired {} times, oracle expects {expect_rally}",
+        st.fires_for(rally_q)
+    );
+    check!(seed, expect_crash > 0, "shocks must produce crash windows");
+    check!(seed, st.fires_for(never_q) == 0, "the -2000bps rule can never fire");
+    check!(
+        seed,
+        st.fires_for(burst_q) >= 1,
+        "rate rule should fire at least once per shock burst"
+    );
+    println!(
+        "exact counts OK: crash {expect_crash}, rally {expect_rally}, burst {}",
+        st.fires_for(burst_q)
+    );
+
+    // --- selectivity and latency -----------------------------------------
+    let ppd = world.alert_engine.probes_per_doc();
+    check!(
+        seed,
+        ppd <= 16.0,
+        "probes/doc {ppd:.2} above bound — the noise tail is being probed"
+    );
+    let p99 = st.latencies.percentile(0.99).expect("fires recorded");
+    check!(
+        seed,
+        p99 <= 5 * MINUTE,
+        "p99 publish->alert latency {p99}ms above the 5min budget"
+    );
+    check!(
+        seed,
+        world.metrics.get("AlertsFired").is_some(),
+        "AlertsFired metric series missing"
+    );
+    check!(
+        seed,
+        c.items_fetched == c.items_ingested + c.items_deduped,
+        "item conservation violated"
+    );
+    println!("selectivity OK: {ppd:.2} probes/doc; latency OK: p99 {p99}ms");
+
+    // --- lifecycle: ack the crash page, resolve it ------------------------
+    let st = &mut world.alert_engine.store;
+    let inst_id = st.open_for(crash_q).expect("crash instance open").id;
+    let (a0, k0, r0) = (st.active, st.acked, st.resolved);
+    check!(seed, st.acknowledge(inst_id), "ack of the open crash instance");
+    check!(seed, st.active == a0 - 1 && st.acked == k0 + 1, "ack moves the counters");
+    check!(seed, st.resolve(inst_id), "resolve of the acked instance");
+    check!(seed, st.resolved == r0 + 1, "resolve moves the counters");
+    check!(
+        seed,
+        st.instance(inst_id).unwrap().state == AlertState::Resolved,
+        "instance lands Resolved"
+    );
+    check!(seed, st.open_for(crash_q).is_none(), "resolved instance is no longer open");
+
+    // --- persistence: snapshot, restore by name, identical behavior -------
+    let snap = snapshot_rules(&world.alert_engine);
+    let mut fresh = AlertEngine::new();
+    let added = restore_rules(&snap, &mut fresh).expect("snapshot restores");
+    check!(
+        seed,
+        added == world.alert_engine.rule_count(),
+        "restore added {added} of {} rules",
+        world.alert_engine.rule_count()
+    );
+    for name in ["crash", "rally", "never", "burst"] {
+        check!(
+            seed,
+            fresh.rule_id(name) == world.alert_engine.rule_id(name),
+            "rule '{name}' must restore to the same id"
+        );
+    }
+    // A probe doc fires the same rule in the restored engine.
+    let probe = SinkDoc {
+        doc_id: 1,
+        stream_id: shock_sym,
+        guid: "urn:probe:1".into(),
+        title: "probe".into(),
+        body: String::new(),
+        url: String::new(),
+        published_ms: 0,
+        ingested_ms: 0,
+        scores: vec![0.9],
+        simhash: 0,
+        fields: vec![(Rc::from("move_bps"), -300.0)],
+    };
+    let fired = fresh.percolate(&probe, 1_000);
+    check!(seed, fired == 1, "probe doc should fire exactly the crash rule, fired {fired}");
+    check!(
+        seed,
+        fresh.index.last_fired() == &[fresh.rule_id("crash").unwrap()][..],
+        "restored engine fires 'crash' on the probe doc"
+    );
+    println!("lifecycle + persistence OK ({added} rules restored by name)");
+
+    println!("\nalert_storm OK: exact fire counts under seed {seed}");
+    Ok(())
+}

@@ -91,7 +91,7 @@ fn main() -> anyhow::Result<()> {
         "social API: {} calls, {} rate-limited | sysmon: {} scrapes, {} breaches",
         world.social.calls, world.social.rate_limited, world.sysmon.scrapes, world.sysmon.breaches
     );
-    println!("alerts: {} events across {} rules", world.alerts.events.len(), world.alerts.rule_count());
+    println!("alerts: {} events across {} rules", world.alerts.matches, world.alerts.rule_count());
     for ev in world.alerts.events.iter().take(6) {
         println!("  [{:>7}s] {:<20} {}", ev.fired_at / 1000, ev.rule_name, ev.title);
     }
@@ -108,7 +108,7 @@ fn main() -> anyhow::Result<()> {
         "metrics streams produced no sink docs"
     );
     anyhow::ensure!(
-        world.alerts.events.iter().any(|e| e.rule_id == 3 || e.rule_id == 4),
+        world.alerts.rule_fires(3) + world.alerts.rule_fires(4) > 0,
         "monitoring threshold rules fired no alerts"
     );
     anyhow::ensure!(

@@ -60,7 +60,7 @@ fn main() -> anyhow::Result<()> {
 
     // 3b. Alerts that fired during the hour.
     println!("\nalerts fired: {} (p99 publish→alert latency {:?} ms)",
-        world.alerts.events.len(), world.alerts.latency_pct(0.99));
+        world.alerts.matches, world.alerts.latency_pct(0.99));
     for ev in world.alerts.events.iter().take(3) {
         println!("  [{}] \"{}\" ({}s after publish)", ev.rule_name, ev.title, ev.latency_ms / 1000);
     }

@@ -1,0 +1,598 @@
+#!/usr/bin/env python3
+"""Executable model checks for rust/src/alert (the percolator and the
+alert lifecycle store).
+
+This container has no Rust toolchain, so the alert engine's matching and
+lifecycle logic is ported line-by-line here and fuzzed against
+independent oracles:
+
+  1. SplitMix64 Rng port sanity (same port as fault_model.py).
+  2. Percolator vs brute force: every document is matched both through
+     the anchored inverted index and through a scan-every-rule oracle,
+     over random conjunctive/any/phrase/numeric/stream/relevance/rate
+     rules and docs with unknown tokens, missing scores and missing
+     fields — including mid-stream registrations (500 seeds).
+  3. Anchoring: an empty engine does zero work per doc; a rule anchored
+     on a term the corpus never contains is never probed, even at 200
+     registered rules.
+  4. Rate windows: the capped k-timestamp ring agrees with a
+     keep-every-timestamp oracle and never grows past k (100 seeds).
+  5. Lifecycle legality: random fire/ack/resolve walks keep the state
+     machine legal (ack only from Active, resolve terminal, fire never
+     lands on a Resolved instance) and the per-state counters partition
+     the instance set (50 seeds x 300 ops).
+
+Run: python3 python/fuzz/alert_model.py
+"""
+
+import random
+import sys
+
+MASK = (1 << 64) - 1
+GAMMA = 0x9E3779B97F4A7C15
+
+
+def _mix(z: int) -> int:
+    z &= MASK
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return (z ^ (z >> 31)) & MASK
+
+
+class Rng:
+    """Port of rust/src/util/rng.rs (SplitMix64)."""
+
+    def __init__(self, seed: int, _raw_state: int | None = None):
+        self.state = _raw_state if _raw_state is not None else _mix((seed ^ GAMMA) & MASK)
+
+    def stream(self, tag: int) -> "Rng":
+        t = _mix((tag * GAMMA) & MASK ^ 0xD1B54A32D192ED03)
+        return Rng(0, _raw_state=_mix(self.state ^ t))
+
+    def next_u64(self) -> int:
+        self.state = (self.state + GAMMA) & MASK
+        return _mix(self.state)
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+
+def tokenize(text):
+    """Port of text::tokenize / Percolator::scan_text: lowercase
+    alphanumeric runs, tokens of more than one byte."""
+    toks, cur = [], []
+    for c in text:
+        if c.isalnum():
+            cur.append(c.lower())
+        elif cur:
+            tok = "".join(cur)
+            if len(tok.encode("utf-8")) > 1:
+                toks.append(tok)
+            cur = []
+    if cur:
+        tok = "".join(cur)
+        if len(tok.encode("utf-8")) > 1:
+            toks.append(tok)
+    return toks
+
+
+class RuleSpec:
+    """alert::config::RuleSpec, reduced to the matcher-relevant fields.
+    numeric entries are (field, gte_or_None, lte_or_None); rate is
+    (k, window_ms) or None."""
+
+    def __init__(self, name, all_terms=(), any_terms=(), phrase=None,
+                 numeric=(), min_relevance=0.0, streams=(), rate=None):
+        self.name = name
+        self.all = list(all_terms)
+        self.any = list(any_terms)
+        self.phrase = phrase
+        self.numeric = list(numeric)
+        self.min_relevance = min_relevance
+        self.streams = list(streams)
+        self.rate = rate
+
+
+class Doc:
+    """sink::SinkDoc, reduced to the matcher-relevant fields."""
+
+    def __init__(self, doc_id, stream_id, title, body="", scores=(0.9,),
+                 fields=(), published_ms=0):
+        self.doc_id = doc_id
+        self.stream_id = stream_id
+        self.title = title
+        self.body = body
+        self.scores = list(scores)
+        self.fields = list(fields)
+        self.published_ms = published_ms
+
+
+# Sequence sentinel for out-of-dictionary tokens (TermId(u32::MAX) in the
+# port): keeps its position so phrases cannot match across a gap.
+UNKNOWN = None
+
+
+def contains_phrase(seq, phrase):
+    n = len(phrase)
+    if n > len(seq):
+        return False
+    return any(seq[i:i + n] == phrase for i in range(len(seq) - n + 1))
+
+
+class Percolator:
+    """Port of alert::percolator::Percolator. The Rust generation-stamp
+    membership test is modeled with a per-doc set (same semantics: df
+    increments once per doc per distinct term, on the doc path only)."""
+
+    def __init__(self):
+        self.by_str = {}        # term -> tid (registration path interns)
+        self.terms = []
+        self.df = []
+        self.queries = []
+        self.by_name = {}
+        self.postings = {}      # anchor tid -> [qid]
+        self.unanchored = []
+        self.rate = {}          # (qid, stream) -> ring of <= k timestamps
+        self.docs = 0
+        self.probes = 0
+        self.raw_matches = 0
+        self.last_fired = []
+
+    def _intern(self, s):
+        t = self.by_str.get(s)
+        if t is None:
+            t = len(self.terms)
+            self.by_str[s] = t
+            self.terms.append(s)
+            self.df.append(0)
+        return t
+
+    def register(self, spec):
+        if spec.name in self.by_name:
+            raise ValueError(f"alert rule '{spec.name}' already registered")
+        all_ids = [self._intern(t) for s in spec.all for t in tokenize(s)]
+        any_ids = [self._intern(t) for s in spec.any for t in tokenize(s)]
+        phrase = [self._intern(t) for t in tokenize(spec.phrase)] if spec.phrase else []
+        numeric = [(self._intern(f), g, l) for (f, g, l) in spec.numeric]
+        required = sorted(set(all_ids + phrase + [f for (f, _, _) in numeric]))
+        qid = len(self.queries)
+        if required:
+            # Rarest required term anchors; ties toward the lower id.
+            anchor = min(required, key=lambda t: (self.df[t], t))
+            self.postings.setdefault(anchor, []).append(qid)
+        else:
+            self.unanchored.append(qid)
+        self.by_name[spec.name] = qid
+        self.queries.append({
+            "name": spec.name,
+            "required": required,
+            "any": any_ids,
+            "phrase": phrase,
+            "numeric": numeric,
+            "min_relevance": spec.min_relevance,
+            "streams": sorted(set(spec.streams)),
+            "rate": spec.rate,
+        })
+        return qid
+
+    def percolate(self, doc, now):
+        self.docs += 1
+        seen = set()
+        seq = []
+        distinct = []
+
+        def mark(t):
+            if t not in seen:
+                seen.add(t)
+                self.df[t] += 1
+                distinct.append(t)
+
+        for text in (doc.title, doc.body):
+            for tok in tokenize(text):
+                t = self.by_str.get(tok)
+                if t is None:
+                    seq.append(UNKNOWN)  # never intern from the doc path
+                else:
+                    seq.append(t)
+                    mark(t)
+        doc_fields = []
+        for (name, v) in doc.fields:
+            t = self.by_str.get(name)
+            if t is not None:
+                doc_fields.append((t, v))
+                mark(t)
+
+        fired = []
+        for t in distinct:
+            for qid in self.postings.get(t, ()):
+                self._eval(qid, seen, seq, doc_fields, doc, now, fired)
+        for qid in self.unanchored:
+            self._eval(qid, seen, seq, doc_fields, doc, now, fired)
+        self.last_fired = fired
+        return len(fired)
+
+    def _eval(self, qid, seen, seq, doc_fields, doc, now, fired):
+        self.probes += 1
+        q = self.queries[qid]
+        for t in q["required"]:
+            if t not in seen:
+                return
+        if q["streams"] and doc.stream_id not in q["streams"]:
+            return
+        rel = doc.scores[0] if doc.scores else 1.0
+        if rel < q["min_relevance"]:
+            return
+        if q["any"] and not any(t in seen for t in q["any"]):
+            return
+        if len(q["phrase"]) > 1 and not contains_phrase(seq, q["phrase"]):
+            return
+        for (f, g, l) in q["numeric"]:
+            v = next((fv for (ft, fv) in doc_fields if ft == f), None)
+            if v is None:
+                return
+            if g is not None and v < g:
+                return
+            if l is not None and v > l:
+                return
+        self.raw_matches += 1
+        if q["rate"] is not None:
+            k, window = q["rate"]
+            ring = self.rate.setdefault((qid, doc.stream_id), [])
+            while ring and ring[0] + window < now:
+                ring.pop(0)
+            if len(ring) >= k:
+                ring.pop(0)
+            ring.append(now)
+            if len(ring) < k:
+                return
+        fired.append(qid)
+
+
+class OracleRule:
+    """Independent scan-one-rule matcher: no dictionary, no anchoring, no
+    posting lists; raw token strings and an unbounded keep-every-timestamp
+    rate history per stream."""
+
+    def __init__(self, spec):
+        self.spec = spec
+        self.all = [t for s in spec.all for t in tokenize(s)]
+        self.any = [t for s in spec.any for t in tokenize(s)]
+        self.phrase = tokenize(spec.phrase) if spec.phrase else []
+        self.history = {}  # stream -> [every raw-match timestamp]
+
+    def matches(self, doc, now):
+        toks = tokenize(doc.title) + tokenize(doc.body)
+        tokset = set(toks)
+        if any(t not in tokset for t in self.all):
+            return False
+        if any(t not in tokset for t in self.phrase):
+            return False
+        fields = dict(doc.fields)
+        if any(f not in fields for (f, _, _) in self.spec.numeric):
+            return False
+        if self.spec.streams and doc.stream_id not in self.spec.streams:
+            return False
+        rel = doc.scores[0] if doc.scores else 1.0
+        if rel < self.spec.min_relevance:
+            return False
+        if self.any and not any(t in tokset for t in self.any):
+            return False
+        if len(self.phrase) > 1:
+            n = len(self.phrase)
+            if not any(toks[i:i + n] == self.phrase for i in range(len(toks) - n + 1)):
+                return False
+        for (f, g, l) in self.spec.numeric:
+            v = fields[f]
+            if g is not None and v < g:
+                return False
+            if l is not None and v > l:
+                return False
+        # Raw match: only now does the rate history advance.
+        if self.spec.rate is not None:
+            k, w = self.spec.rate
+            h = self.history.setdefault(doc.stream_id, [])
+            h.append(now)
+            if sum(1 for t in h if t + w >= now) < k:
+                return False
+        return True
+
+
+RECENT_ALERTS = 256
+
+
+class AlertStore:
+    """Port of alert::lifecycle::AlertStore (fanout and the latency
+    histogram reduced to sample counting)."""
+
+    def __init__(self):
+        self.next_id = 1
+        self.instances = {}
+        self.open = {}
+        self.recent = []
+        self.active = self.acked = self.resolved = 0
+        self.fires = 0
+        self.fires_by_query = {}
+        self.samples = 0
+
+    def fire(self, query, doc_id, stream_id, published_ms, now):
+        self.fires += 1
+        self.fires_by_query[query] = self.fires_by_query.get(query, 0) + 1
+        self.samples += 1
+        iid = self.open.get(query)
+        if iid is not None:
+            inst = self.instances[iid]
+            inst["fires"] += 1
+            inst["last_fired_at"] = now
+            return iid
+        iid = self.next_id
+        self.next_id += 1
+        self.instances[iid] = {
+            "id": iid, "query": query, "stream_id": stream_id,
+            "first_doc": doc_id, "opened_at": now, "last_fired_at": now,
+            "fires": 1, "state": "Active",
+        }
+        self.open[query] = iid
+        self.active += 1
+        if len(self.recent) == RECENT_ALERTS:
+            self.recent.pop(0)
+        self.recent.append(iid)
+        return iid
+
+    def acknowledge(self, iid):
+        inst = self.instances.get(iid)
+        if inst is None or inst["state"] != "Active":
+            return False
+        inst["state"] = "Acknowledged"
+        self.active -= 1
+        self.acked += 1
+        return True
+
+    def resolve(self, iid):
+        inst = self.instances.get(iid)
+        if inst is None or inst["state"] == "Resolved":
+            return False
+        if inst["state"] == "Active":
+            self.active -= 1
+        else:
+            self.acked -= 1
+        inst["state"] = "Resolved"
+        self.resolved += 1
+        del self.open[inst["query"]]
+        return True
+
+
+FAILURES = []
+
+
+def check(cond, msg):
+    if not cond:
+        FAILURES.append(msg)
+        print(f"FAIL: {msg}")
+
+
+# ---------------------------------------------------------------------------
+# 1. Rng sanity
+# ---------------------------------------------------------------------------
+def t_rng():
+    a, b = Rng(42), Rng(42)
+    check(all(a.next_u64() == b.next_u64() for _ in range(1000)), "rng determinism")
+    root = Rng(7)
+    check(root.stream(1).next_u64() == root.stream(1).next_u64(), "stream(tag) stable")
+    check(root.stream(1).next_u64() != root.stream(2).next_u64(), "streams decorrelated")
+    r = Rng(11)
+    check(all(0.0 <= r.next_f64() < 1.0 for _ in range(50_000)), "f64 in [0,1)")
+
+
+# ---------------------------------------------------------------------------
+# 2. Percolator vs brute force
+# ---------------------------------------------------------------------------
+FIELD_NAMES = ["px", "qty"]
+
+
+def gen_rule(r, i, vocab):
+    all_terms = [r.choice(vocab) for _ in range(r.randint(0, 2))]
+    any_terms = [r.choice(vocab) for _ in range(r.randint(1, 2))] if r.random() < 0.4 else []
+    phrase = None
+    if r.random() < 0.3:
+        phrase = " ".join(r.choice(vocab) for _ in range(r.randint(1, 3)))
+    numeric = []
+    if r.random() < 0.3:
+        lo = round(r.uniform(0, 80), 2)
+        g = lo if r.random() < 0.8 else None
+        l = round(lo + r.uniform(0, 40), 2) if r.random() < 0.6 else None
+        if g is None and l is None:
+            g = lo
+        numeric.append((r.choice(FIELD_NAMES), g, l))
+    min_rel = 0.0 if r.random() < 0.6 else round(r.uniform(0.2, 0.8), 2)
+    streams = sorted(r.sample(range(1, 6), r.randint(1, 2))) if r.random() < 0.3 else []
+    rate = (r.randint(2, 4), r.randint(200, 1500)) if r.random() < 0.25 else None
+    if not (all_terms or any_terms or phrase or numeric):
+        all_terms = [r.choice(vocab)]  # keep rules non-degenerate
+    return RuleSpec(f"r{i}", all_terms, any_terms, phrase, numeric, min_rel, streams, rate)
+
+
+def gen_doc(r, i, vocab):
+    words = [r.choice(vocab) for _ in range(r.randint(0, 6))]
+    if r.random() < 0.1:
+        # A field name as a *text* token: stamps the term without carrying
+        # a value, so numeric rules get probed and then must reject.
+        words.append(r.choice(FIELD_NAMES))
+    for _ in range(r.randint(0, 2)):
+        noise = "zz" + "".join(r.choice("abcdefgh") for _ in range(4))
+        words.insert(r.randint(0, len(words)), noise)
+    cut = r.randint(0, len(words))
+    scores = [] if r.random() < 0.1 else [round(r.random(), 3)]
+    fields = []
+    if r.random() < 0.6:
+        fields.append(("px", round(r.uniform(0, 120), 2)))
+    if r.random() < 0.3:
+        fields.append(("qty", round(r.uniform(0, 120), 2)))
+    return Doc(i, r.randint(1, 5), " ".join(words[:cut]), " ".join(words[cut:]),
+               scores, fields)
+
+
+def t_differential():
+    for seed in range(500):
+        r = random.Random(seed * 7919 + 1)
+        vocab = [f"w{j:02d}" for j in range(r.randint(8, 25))]
+        n_rules = r.randint(10, 30)
+        specs = [gen_rule(r, i, vocab) for i in range(n_rules)]
+        split = r.randint(0, n_rules)
+
+        p = Percolator()
+        oracle = []
+        for s in specs[:split]:
+            p.register(s)
+            oracle.append(OracleRule(s))
+
+        now = 0
+        n_docs = r.randint(40, 120)
+        doc_split = r.randint(0, n_docs)
+        for d in range(n_docs):
+            if d == doc_split:
+                # Mid-stream registration: later rules see a taught
+                # dictionary (anchor dfs differ) but must match the same.
+                for s in specs[split:]:
+                    p.register(s)
+                    oracle.append(OracleRule(s))
+            now += r.randint(0, 400)
+            doc = gen_doc(r, d, vocab)
+            p.percolate(doc, now)
+            got = sorted(p.queries[q]["name"] for q in p.last_fired)
+            want = sorted(o.spec.name for o in oracle if o.matches(doc, now))
+            check(got == want, f"diff seed {seed} doc {d}: {got} vs {want}")
+            check(len(p.last_fired) == len(set(p.last_fired)),
+                  f"diff seed {seed} doc {d}: duplicate fire")
+        check(p.probes <= len(p.queries) * n_docs,
+              f"diff seed {seed}: probes exceed rules x docs")
+
+
+# ---------------------------------------------------------------------------
+# 3. Anchoring selectivity and empty-engine zero work
+# ---------------------------------------------------------------------------
+def t_anchoring():
+    p = Percolator()
+    for i in range(100):
+        check(p.percolate(Doc(i, 1, "hello world common", ""), i) == 0, "empty fires 0")
+    check(p.probes == 0 and p.raw_matches == 0, "empty engine does zero work per doc")
+
+    # Teach df for 'common', then register a two-term rule: docs carrying
+    # only 'common' must never probe it (its anchor is the rare term).
+    p = Percolator()
+    p.register(RuleSpec("seed", ["common"]))
+    for i in range(50):
+        p.percolate(Doc(i, 1, "common words here", ""), i)
+    p.register(RuleSpec("r", ["common", "rareword"]))
+    before = p.probes
+    p.percolate(Doc(1000, 1, "common chatter", ""), 0)
+    check(p.probes - before == 1, "only the seed rule probes on 'common'")
+    check(p.percolate(Doc(1001, 1, "common rareword", ""), 0) == 2,
+          "both rules fire with both terms")
+
+    # At scale: 200 cold-anchored rules stay invisible to hot traffic.
+    p = Percolator()
+    p.register(RuleSpec("hot", ["alpha"]))
+    p.percolate(Doc(0, 1, "alpha beta", ""), 0)  # df(alpha) = 1
+    for i in range(200):
+        p.register(RuleSpec(f"cold{i}", [f"c{i}x", "alpha"]))
+    before = p.probes
+    for i in range(100):
+        fired = p.percolate(Doc(10 + i, 1, "alpha beta alpha", ""), i)
+        check(fired == 1, "only the hot rule fires")
+    check(p.probes - before == 100, "cold-anchored rules are never probed")
+
+
+# ---------------------------------------------------------------------------
+# 4. Rate window: capped ring vs keep-every-timestamp oracle
+# ---------------------------------------------------------------------------
+def t_rate():
+    for seed in range(100):
+        r = random.Random(seed)
+        k = r.randint(2, 5)
+        w = r.randint(100, 2000)
+        p = Percolator()
+        p.register(RuleSpec("r", ["hit"], rate=(k, w)))
+        history = []
+        now = 0
+        for d in range(300):
+            now += r.randint(0, 500)
+            hit = r.random() < 0.7
+            doc = Doc(d, 1, "hit" if hit else "miss", "")
+            fired = p.percolate(doc, now)
+            want = False
+            if hit:
+                history.append(now)
+                want = sum(1 for t in history if t + w >= now) >= k
+            check(fired == (1 if want else 0),
+                  f"rate seed {seed} doc {d}: fired {fired}, want {want}")
+            ring_len = len(p.rate.get((0, 1), ()))
+            check(ring_len <= k, f"rate seed {seed}: ring grew to {ring_len} > k={k}")
+
+
+# ---------------------------------------------------------------------------
+# 5. Lifecycle legality under random fire/ack/resolve walks
+# ---------------------------------------------------------------------------
+def t_lifecycle():
+    for seed in range(50):
+        r = random.Random(seed)
+        s = AlertStore()
+        now = 0
+        for step in range(300):
+            now += r.randint(1, 100)
+            op = r.random()
+            ids = list(s.instances)
+            if op < 0.5 or not ids:
+                q = r.randint(0, 9)
+                iid = s.fire(q, step, 1 + q % 3, max(now - r.randint(0, 50), 0), now)
+                inst = s.instances[iid]
+                check(inst["state"] != "Resolved",
+                      f"life seed {seed} step {step}: fire landed on Resolved")
+                check(s.open.get(q) == iid,
+                      f"life seed {seed} step {step}: fire must target the open instance")
+            elif op < 0.75:
+                iid = r.choice(ids)
+                prev = s.instances[iid]["state"]
+                ok = s.acknowledge(iid)
+                check(ok == (prev == "Active"),
+                      f"life seed {seed} step {step}: ack from {prev} -> {ok}")
+            else:
+                iid = r.choice(ids)
+                prev = s.instances[iid]["state"]
+                ok = s.resolve(iid)
+                check(ok == (prev != "Resolved"),
+                      f"life seed {seed} step {step}: resolve from {prev} -> {ok}")
+                check(not s.resolve(iid),
+                      f"life seed {seed} step {step}: resolve must be terminal")
+            check(s.active + s.acked + s.resolved == len(s.instances),
+                  f"life seed {seed} step {step}: counters must partition instances")
+            check(s.fires == s.samples,
+                  f"life seed {seed} step {step}: every fire records a latency sample")
+            check(len(s.recent) <= RECENT_ALERTS,
+                  f"life seed {seed} step {step}: recent ring unbounded")
+            for q, iid in s.open.items():
+                check(s.instances[iid]["state"] != "Resolved",
+                      f"life seed {seed} step {step}: resolved instance still open")
+        check(s.fires == sum(s.fires_by_query.values()),
+              f"life seed {seed}: per-query fires must sum to total")
+        check(s.fires == sum(i["fires"] for i in s.instances.values()),
+              f"life seed {seed}: coalesced instance fires must sum to total")
+
+
+def main():
+    for name, fn in [
+        ("rng", t_rng),
+        ("percolator-differential", t_differential),
+        ("anchoring", t_anchoring),
+        ("rate-window", t_rate),
+        ("lifecycle", t_lifecycle),
+    ]:
+        fn()
+        print(f"ok: {name}")
+    if FAILURES:
+        print(f"\n{len(FAILURES)} FAILURES")
+        sys.exit(1)
+    print("\nall alert-model checks passed")
+
+
+if __name__ == "__main__":
+    main()

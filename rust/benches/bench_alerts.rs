@@ -1,0 +1,288 @@
+//! Percolator bench: match a document stream against 100k+ standing
+//! queries and pin the two numbers that make the inverted-query-index
+//! design work:
+//!
+//! 1. **Selectivity** — candidate probes per document stay tiny relative
+//!    to the registered query count (the anchor-term postings walk, not a
+//!    scan of every rule).
+//! 2. **Zero allocation in steady state** — after warmup (scratch buffers
+//!    sized, rate rings armed, lifecycle instances opened) the whole
+//!    percolate → fire → lifecycle path must not touch the heap,
+//!    asserted with the counting allocator.
+//!
+//! The synthetic workload mirrors the alert engine's intended mix: a band
+//! of "hot desk" keyword rules that fire constantly, a long tail of
+//! cold-anchored keyword rules that are never even probed, numeric band
+//! rules over the `mid` market field (probed every doc — their field-name
+//! anchor occurs on every market doc) and per-stream rate windows.
+//!
+//! Warmup is deterministic, not statistical: every rate ring is armed to
+//! its `k` cap and every rule that can fire is fired once *before* the
+//! counted passes, so a first-fire HashMap insert or a ring capacity bump
+//! can never land inside the measured window.
+//!
+//! ```bash
+//! cargo bench --bench bench_alerts
+//! ALERT_QUERIES=100000 ALERT_DOCS=4000 ALERT_PASSES=2 cargo bench --bench bench_alerts  # CI smoke
+//! ```
+//!
+//! Results go to `BENCH_alerts.json` at the repo root, same trend-record
+//! schema as the other `BENCH_*.json` files.
+
+use alertmix::alert::{AlertEngine, RuleSpec};
+use alertmix::benchlib::{allocs, bench_out_path, env_u64, section, time, CountingAllocator, Table};
+use alertmix::sink::SinkDoc;
+use alertmix::sqs::LatencyHistogram;
+use alertmix::util::rng::Rng;
+use std::rc::Rc;
+
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
+
+/// Hot vocabulary: words that actually occur in documents.
+const HOT_WORDS: usize = 200;
+/// Hot words per document (plus noise tokens the dictionary never holds).
+const DOC_HOT: usize = 8;
+const DOC_NOISE: usize = 4;
+/// Streams documents are spread across (rate rings are per-stream).
+const STREAMS: u64 = 32;
+/// Rate-window size: small enough that the per-pair ring saturates (and
+/// therefore reaches its final capacity) during the deterministic pre-arm.
+const RATE_K: u32 = 8;
+const RATE_WINDOW_MS: u64 = 10_000;
+/// Upper bound asserted on mean candidate probes per document.
+const PROBES_PER_DOC_BOUND: f64 = 96.0;
+
+fn hot_word(j: usize) -> String {
+    format!("hot{j:03}desk")
+}
+
+fn bare_doc(id: u64, stream: u64, title: String) -> SinkDoc {
+    SinkDoc {
+        doc_id: id,
+        stream_id: stream,
+        guid: format!("urn:bench:{id}"),
+        title,
+        body: String::new(),
+        url: String::new(),
+        published_ms: 0,
+        ingested_ms: 0,
+        scores: vec![0.9],
+        simhash: 0,
+        fields: Vec::new(),
+    }
+}
+
+/// The big registered set — mostly cold-anchored keyword rules, with a
+/// sprinkle of numeric band rules and per-stream rate windows.
+fn register_queries(engine: &mut AlertEngine, n: u64) {
+    for i in 0..n {
+        let spec = if i % 2_000 == 0 {
+            // Numeric band on the market field: anchors on the field name,
+            // so it is probed on every doc carrying `mid` (all of them
+            // here) and fires on ~0.5% of values.
+            RuleSpec::named(&format!("num{i}")).numeric_gte("mid", 995.0).notify("pager")
+        } else if i % 2_000 == 1 {
+            // Rate window over a hot word: raw matches are frequent, the
+            // alert fires only on >= k within the window on one stream.
+            RuleSpec::named(&format!("rate{i}"))
+                .all_terms(&[&hot_word((i as usize / 2_000) % HOT_WORDS)])
+                .rate(RATE_K, RATE_WINDOW_MS)
+        } else {
+            // The long tail: one per-rule cold term plus a hot term. The
+            // cold term has df 0, the hot term's df was taught by the df
+            // warmup docs — so the rule anchors on the cold term and is
+            // never probed by this corpus.
+            RuleSpec::named(&format!("kw{i}"))
+                .all_terms(&[&format!("q{i}cold"), &hot_word(i as usize % HOT_WORDS)])
+        };
+        engine.register(spec).expect("bench specs are valid");
+    }
+}
+
+/// Deterministic document corpus: every doc carries DOC_HOT hot words,
+/// DOC_NOISE out-of-dictionary noise tokens and a `mid` field.
+fn build_docs(n: u64, mid_field: &Rc<str>, rng: &mut Rng) -> Vec<SinkDoc> {
+    let hot: Vec<String> = (0..HOT_WORDS).map(hot_word).collect();
+    (0..n)
+        .map(|i| {
+            let mut words: Vec<&str> = Vec::with_capacity(DOC_HOT);
+            for _ in 0..DOC_HOT {
+                words.push(&hot[rng.below(HOT_WORDS as u64) as usize]);
+            }
+            let title = words[..DOC_HOT / 2].join(" ");
+            let mut body = words[DOC_HOT / 2..].join(" ");
+            for _ in 0..DOC_NOISE {
+                body.push(' ');
+                body.push_str(&rng.ident(10));
+            }
+            SinkDoc {
+                doc_id: i,
+                stream_id: 1 + rng.below(STREAMS),
+                guid: format!("urn:bench:{i}"),
+                title,
+                body,
+                url: String::new(),
+                published_ms: i,
+                ingested_ms: i,
+                scores: vec![0.9],
+                simhash: 0,
+                fields: vec![(mid_field.clone(), rng.next_f64() * 1000.0)],
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let nq = env_u64("ALERT_QUERIES", 100_000);
+    let nd = env_u64("ALERT_DOCS", 20_000);
+    let passes = env_u64("ALERT_PASSES", 5).max(1);
+    section(&format!(
+        "percolator: {nq} standing queries x {nd} docs x {passes} passes \
+         ({HOT_WORDS} hot terms, {STREAMS} streams)"
+    ));
+
+    let mut rng = Rng::new(0xA1E7);
+    let mut engine = AlertEngine::new();
+
+    // Hot-desk rules: one per hot word, firing whenever the word occurs.
+    for j in 0..HOT_WORDS {
+        engine
+            .register(
+                RuleSpec::named(&format!("seed{j}")).all_terms(&[&hot_word(j)]).notify("email"),
+            )
+            .unwrap();
+    }
+    // Teach the dictionary document frequencies before the bulk
+    // registration: a few docs covering every hot word give them df >= 1,
+    // so the tail rules below anchor on their fresh (df 0) cold terms.
+    // (This also fires every seed rule once — instances open.)
+    let mid_field: Rc<str> = Rc::from("mid");
+    for (d, start) in (0..HOT_WORDS).step_by(DOC_HOT).enumerate() {
+        let title: Vec<String> = (start..start + DOC_HOT).map(hot_word).collect();
+        engine.percolate(&bare_doc(1_000_000 + d as u64, 1, title.join(" ")), 0);
+    }
+    register_queries(&mut engine, nq);
+    println!(
+        "registered {} queries over {} interned terms",
+        engine.rule_count(),
+        engine.index.term_count()
+    );
+
+    let docs = build_docs(nd, &mid_field, &mut rng);
+
+    // Deterministic pre-arm, part 1: every rate ring for every
+    // (rule, stream) pair this corpus can touch is driven to its k cap, so
+    // its HashMap entry exists and its VecDeque is at final capacity.
+    let mut pre_id = 2_000_000u64;
+    for i in 0..nq {
+        if i % 2_000 != 1 {
+            continue;
+        }
+        let word = hot_word((i as usize / 2_000) % HOT_WORDS);
+        for s in 1..=STREAMS {
+            for _ in 0..RATE_K {
+                pre_id += 1;
+                engine.percolate(&bare_doc(pre_id, s, word.clone()), 0);
+            }
+        }
+    }
+    // Part 2: fire every numeric rule once (they share the 995 threshold).
+    let mut hotdoc = bare_doc(3_000_000, 1, String::new());
+    hotdoc.fields.push((mid_field.clone(), 999.9));
+    engine.percolate(&hotdoc, 0);
+
+    // Part 3: one full pass over the real corpus sizes every scratch
+    // buffer for the widest doc.
+    let mut now = RATE_WINDOW_MS + 1; // pre-arm timestamps are all expired
+    for d in &docs {
+        engine.percolate(d, now);
+        now += 1;
+    }
+
+    // Reset stats after warmup so probes_per_doc reflects steady state.
+    engine.index.docs = 0;
+    engine.index.probes = 0;
+    engine.index.raw_matches = 0;
+
+    // Measured passes: allocation count + per-doc latency.
+    let mut lat = LatencyHistogram::new();
+    let mut fired_total = 0u64;
+    let a0 = allocs();
+    let t0 = std::time::Instant::now();
+    for _ in 0..passes {
+        for d in &docs {
+            let dt0 = std::time::Instant::now();
+            fired_total += engine.percolate(d, now) as u64;
+            lat.record(dt0.elapsed().as_micros() as u64);
+            now += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let steady_allocs = allocs() - a0;
+
+    let measured = nd * passes;
+    let docs_per_sec = measured as f64 / wall;
+    let probes_per_doc = engine.probes_per_doc();
+    let p50_us = lat.percentile(0.5).unwrap_or(0);
+    let p99_us = lat.percentile(0.99).unwrap_or(0);
+
+    // A clean throughput read without the per-doc Instant overhead.
+    let (tput_wall, _) = time(1, || {
+        for d in &docs {
+            std::hint::black_box(engine.percolate(d, now));
+            now += 1;
+        }
+    });
+    let clean_docs_per_sec = nd as f64 / tput_wall;
+
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["queries".into(), format!("{}", engine.rule_count())]);
+    t.row(&["docs percolated (measured)".into(), format!("{measured}")]);
+    t.row(&["docs/s (latency pass)".into(), format!("{docs_per_sec:.0}")]);
+    t.row(&["docs/s (clean pass)".into(), format!("{clean_docs_per_sec:.0}")]);
+    t.row(&["probes/doc".into(), format!("{probes_per_doc:.1}")]);
+    t.row(&["raw matches".into(), format!("{}", engine.index.raw_matches)]);
+    t.row(&["alerts fired".into(), format!("{fired_total}")]);
+    t.row(&["lifecycle fires".into(), format!("{}", engine.store.fires)]);
+    t.row(&["match latency p50".into(), format!("{p50_us} us")]);
+    t.row(&["match latency p99".into(), format!("{p99_us} us")]);
+    t.row(&["steady-state allocs".into(), format!("{steady_allocs}")]);
+    t.print();
+
+    assert_eq!(
+        steady_allocs, 0,
+        "percolate -> fire -> lifecycle must not allocate in steady state"
+    );
+    assert!(
+        probes_per_doc <= PROBES_PER_DOC_BOUND,
+        "probes/doc {probes_per_doc:.1} above bound {PROBES_PER_DOC_BOUND} — anchoring regressed"
+    );
+    if nq >= 20_000 {
+        assert!(
+            probes_per_doc < engine.rule_count() as f64 / 100.0,
+            "probes/doc must be a tiny fraction of registered queries"
+        );
+    }
+    assert!(fired_total > 0, "hot-desk rules must fire");
+    println!(
+        "\npercolate OK: {:.1} probes/doc across {} queries, 0 steady-state allocations",
+        probes_per_doc,
+        engine.rule_count()
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"alerts\",\n  \"queries\": {},\n  \"docs\": {measured},\n  \
+         \"docs_per_sec\": {clean_docs_per_sec:.0},\n  \"probes_per_doc\": {probes_per_doc:.2},\n  \
+         \"raw_matches\": {},\n  \"fired\": {fired_total},\n  \"p50_us\": {p50_us},\n  \
+         \"p99_us\": {p99_us},\n  \"zero_alloc_steady_state\": {}\n}}\n",
+        engine.rule_count(),
+        engine.index.raw_matches,
+        steady_allocs == 0
+    );
+    let out = bench_out_path("BENCH_alerts.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}

@@ -1,0 +1,344 @@
+//! Declarative standing-query specs: the `alerts` config key is a JSON
+//! array of rules, each named (names are the persistence identity, like
+//! connector names in store snapshots). A [`RuleSpec`] is the
+//! human-facing form; `Percolator::register` compiles it.
+
+use crate::sim::SimTime;
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+
+/// A numeric range predicate over a document field: `gte <= field <= lte`
+/// (either bound optional, at least one present).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NumericSpec {
+    pub field: String,
+    pub gte: Option<f64>,
+    pub lte: Option<f64>,
+}
+
+/// A per-stream rate window: fire once `>= k` raw matches land within
+/// `window_ms` on one stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RateSpec {
+    pub k: u32,
+    pub window_ms: SimTime,
+}
+
+/// One declarative standing query.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct RuleSpec {
+    pub name: String,
+    /// Conjunctive terms — every token of every entry must occur.
+    pub all: Vec<String>,
+    /// Disjunctive terms — at least one token must occur (if non-empty).
+    pub any: Vec<String>,
+    /// Consecutive-token phrase.
+    pub phrase: Option<String>,
+    pub numeric: Vec<NumericSpec>,
+    pub min_relevance: f32,
+    /// Restrict to these stream ids; empty = all streams.
+    pub streams: Vec<u64>,
+    pub rate: Option<RateSpec>,
+    /// Notification channel names to fan out on.
+    pub notify: Vec<String>,
+}
+
+impl RuleSpec {
+    pub fn named(name: &str) -> Self {
+        RuleSpec { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn all_terms(mut self, terms: &[&str]) -> Self {
+        self.all.extend(terms.iter().map(|s| s.to_string()));
+        self
+    }
+
+    pub fn any_terms(mut self, terms: &[&str]) -> Self {
+        self.any.extend(terms.iter().map(|s| s.to_string()));
+        self
+    }
+
+    pub fn phrase(mut self, p: &str) -> Self {
+        self.phrase = Some(p.to_string());
+        self
+    }
+
+    pub fn numeric_gte(mut self, field: &str, v: f64) -> Self {
+        self.push_numeric(field, Some(v), None);
+        self
+    }
+
+    pub fn numeric_lte(mut self, field: &str, v: f64) -> Self {
+        self.push_numeric(field, None, Some(v));
+        self
+    }
+
+    fn push_numeric(&mut self, field: &str, gte: Option<f64>, lte: Option<f64>) {
+        if let Some(n) = self.numeric.iter_mut().find(|n| n.field == field) {
+            if gte.is_some() {
+                n.gte = gte;
+            }
+            if lte.is_some() {
+                n.lte = lte;
+            }
+            return;
+        }
+        self.numeric.push(NumericSpec { field: field.to_string(), gte, lte });
+    }
+
+    pub fn min_relevance(mut self, v: f32) -> Self {
+        self.min_relevance = v;
+        self
+    }
+
+    pub fn stream(mut self, id: u64) -> Self {
+        self.streams.push(id);
+        self
+    }
+
+    pub fn rate(mut self, k: u32, window_ms: SimTime) -> Self {
+        self.rate = Some(RateSpec { k, window_ms });
+        self
+    }
+
+    pub fn notify(mut self, channel: &str) -> Self {
+        self.notify.push(channel.to_string());
+        self
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let Some(obj) = v.as_obj() else { bail!("alert rule must be an object") };
+        let mut spec = RuleSpec::default();
+        for (k, val) in obj {
+            match k.as_str() {
+                "name" => {
+                    spec.name = val.as_str().map(str::to_string).unwrap_or_default();
+                }
+                "all" => spec.all = str_list(val, "all")?,
+                "any" => spec.any = str_list(val, "any")?,
+                "phrase" => spec.phrase = val.as_str().map(str::to_string),
+                "numeric" => {
+                    let Some(arr) = val.as_arr() else { bail!("alerts: 'numeric' must be an array") };
+                    for n in arr {
+                        let Some(field) = n.get("field").and_then(|f| f.as_str()) else {
+                            bail!("alerts: numeric predicate needs a 'field'");
+                        };
+                        spec.numeric.push(NumericSpec {
+                            field: field.to_string(),
+                            gte: n.get("gte").and_then(|x| x.as_f64()),
+                            lte: n.get("lte").and_then(|x| x.as_f64()),
+                        });
+                    }
+                }
+                "min_relevance" => {
+                    spec.min_relevance = val.as_f64().unwrap_or(0.0) as f32;
+                }
+                "streams" => {
+                    let Some(arr) = val.as_arr() else { bail!("alerts: 'streams' must be an array") };
+                    for s in arr {
+                        let Some(id) = s.as_u64() else { bail!("alerts: stream ids must be numbers") };
+                        spec.streams.push(id);
+                    }
+                }
+                "rate" => {
+                    let k = val.get("k").and_then(|x| x.as_u64()).unwrap_or(0) as u32;
+                    let window_ms = val.get("window_ms").and_then(|x| x.as_u64()).unwrap_or(0);
+                    spec.rate = Some(RateSpec { k, window_ms });
+                }
+                "notify" => spec.notify = str_list(val, "notify")?,
+                other => bail!("alerts: unknown rule key '{other}'"),
+            }
+        }
+        Ok(spec)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj().set("name", self.name.as_str());
+        if !self.all.is_empty() {
+            o = o.set("all", self.all.iter().map(|s| Json::from(s.as_str())).collect::<Vec<_>>());
+        }
+        if !self.any.is_empty() {
+            o = o.set("any", self.any.iter().map(|s| Json::from(s.as_str())).collect::<Vec<_>>());
+        }
+        if let Some(p) = &self.phrase {
+            o = o.set("phrase", p.as_str());
+        }
+        if !self.numeric.is_empty() {
+            let arr: Vec<Json> = self
+                .numeric
+                .iter()
+                .map(|n| {
+                    let mut j = Json::obj().set("field", n.field.as_str());
+                    if let Some(g) = n.gte {
+                        j = j.set("gte", g);
+                    }
+                    if let Some(l) = n.lte {
+                        j = j.set("lte", l);
+                    }
+                    j
+                })
+                .collect();
+            o = o.set("numeric", arr);
+        }
+        if self.min_relevance > 0.0 {
+            o = o.set("min_relevance", self.min_relevance as f64);
+        }
+        if !self.streams.is_empty() {
+            o = o.set("streams", self.streams.iter().map(|&s| Json::from(s)).collect::<Vec<_>>());
+        }
+        if let Some(r) = self.rate {
+            o = o.set("rate", Json::obj().set("k", r.k as u64).set("window_ms", r.window_ms));
+        }
+        if !self.notify.is_empty() {
+            o = o.set(
+                "notify",
+                self.notify.iter().map(|s| Json::from(s.as_str())).collect::<Vec<_>>(),
+            );
+        }
+        o
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            bail!("alert rule needs a non-empty name");
+        }
+        let has_predicate = !self.all.is_empty()
+            || !self.any.is_empty()
+            || self.phrase.is_some()
+            || !self.numeric.is_empty();
+        if !has_predicate {
+            bail!("alert rule '{}' has no predicate (all/any/phrase/numeric)", self.name);
+        }
+        for s in self.all.iter().chain(self.any.iter()).chain(self.phrase.iter()) {
+            if crate::text::tokenize(s).is_empty() {
+                bail!("alert rule '{}': '{}' tokenizes to nothing", self.name, s);
+            }
+        }
+        for n in &self.numeric {
+            if n.field.is_empty() {
+                bail!("alert rule '{}': numeric predicate needs a field", self.name);
+            }
+            if n.gte.is_none() && n.lte.is_none() {
+                bail!("alert rule '{}': numeric '{}' needs gte and/or lte", self.name, n.field);
+            }
+            if let (Some(g), Some(l)) = (n.gte, n.lte) {
+                if g > l {
+                    bail!("alert rule '{}': numeric '{}' has gte > lte", self.name, n.field);
+                }
+            }
+        }
+        if let Some(r) = self.rate {
+            if r.k == 0 {
+                bail!("alert rule '{}': rate k must be >= 1", self.name);
+            }
+            if r.window_ms == 0 {
+                bail!("alert rule '{}': rate window_ms must be > 0", self.name);
+            }
+        }
+        if !(0.0..=1.0).contains(&self.min_relevance) {
+            bail!("alert rule '{}': min_relevance must be in [0, 1]", self.name);
+        }
+        Ok(())
+    }
+}
+
+/// The `alerts` config key: a list of rules registered at world build.
+/// Empty (the default) keeps the whole engine out of the hot path.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AlertsConfig {
+    pub rules: Vec<RuleSpec>,
+}
+
+impl AlertsConfig {
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let Some(arr) = v.as_arr() else { bail!("'alerts' must be an array of rules") };
+        let mut c = AlertsConfig::default();
+        for r in arr {
+            c.rules.push(RuleSpec::from_json(r)?);
+        }
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let mut seen = std::collections::HashSet::new();
+        for r in &self.rules {
+            r.validate()?;
+            if !seen.insert(r.name.as_str()) {
+                bail!("duplicate alert rule name '{}'", r.name);
+            }
+        }
+        Ok(())
+    }
+}
+
+fn str_list(v: &Json, key: &str) -> Result<Vec<String>> {
+    let Some(arr) = v.as_arr() else { bail!("alerts: '{key}' must be an array of strings") };
+    let mut out = Vec::new();
+    for s in arr {
+        let Some(s) = s.as_str() else { bail!("alerts: '{key}' entries must be strings") };
+        out.push(s.to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_through_json() {
+        let spec = RuleSpec::named("crash-watch")
+            .all_terms(&["market"])
+            .any_terms(&["selloff", "rally"])
+            .phrase("flash crash")
+            .numeric_gte("move_bps", 250.0)
+            .numeric_lte("move_bps", 900.0)
+            .min_relevance(0.5)
+            .stream(42)
+            .rate(5, 10_000)
+            .notify("pager");
+        let text = spec.to_json().to_string();
+        let back = RuleSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, spec);
+        back.validate().unwrap();
+    }
+
+    #[test]
+    fn alerts_config_parses_an_array() {
+        let j = Json::parse(
+            r#"[
+                {"name": "a", "all": ["storm"]},
+                {"name": "b", "numeric": [{"field": "mid", "gte": 100}]}
+            ]"#,
+        )
+        .unwrap();
+        let c = AlertsConfig::from_json(&j).unwrap();
+        assert_eq!(c.rules.len(), 2);
+        c.validate().unwrap();
+        assert_eq!(c.rules[1].numeric[0].gte, Some(100.0));
+    }
+
+    #[test]
+    fn validation_rejects_bad_rules() {
+        assert!(RuleSpec::named("").all_terms(&["x1"]).validate().is_err(), "empty name");
+        assert!(RuleSpec::named("p").validate().is_err(), "no predicate");
+        assert!(RuleSpec::named("p").all_terms(&["?"]).validate().is_err(), "term w/o tokens");
+        let bad_band = RuleSpec::named("p").numeric_gte("x", 5.0).numeric_lte("x", 1.0);
+        assert!(bad_band.validate().is_err(), "gte > lte");
+        assert!(RuleSpec::named("p").all_terms(&["x1"]).rate(0, 100).validate().is_err());
+        assert!(RuleSpec::named("p").all_terms(&["x1"]).min_relevance(2.0).validate().is_err());
+        let dup = AlertsConfig {
+            rules: vec![
+                RuleSpec::named("a").all_terms(&["x1"]),
+                RuleSpec::named("a").all_terms(&["y1"]),
+            ],
+        };
+        assert!(dup.validate().is_err(), "duplicate names");
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let j = Json::parse(r#"[{"name": "a", "allterms": ["x"]}]"#).unwrap();
+        assert!(AlertsConfig::from_json(&j).is_err());
+    }
+}

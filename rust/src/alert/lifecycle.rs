@@ -1,0 +1,305 @@
+//! Alert lifecycle: fired queries become *instances* that operators walk
+//! through `Active → Acknowledged → Resolved` (the StreamFlow status
+//! model). Repeated fires of an open instance coalesce (fire count +
+//! last-fired timestamp) instead of minting duplicates; once resolved, the
+//! next fire opens a fresh instance. Fanout is counted per notification
+//! channel (interned [`ChannelId`], same representation as the connector
+//! registry but a separate namespace), and publish→alert latency feeds an
+//! O(1)-memory [`LatencyHistogram`] — never an unbounded event vec.
+
+use crate::connector::ChannelId;
+use crate::sim::SimTime;
+use crate::sqs::LatencyHistogram;
+use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
+
+/// Operator-facing state of one alert instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlertState {
+    Active,
+    Acknowledged,
+    Resolved,
+}
+
+/// One open-or-closed occurrence of a standing query firing.
+#[derive(Debug, Clone)]
+pub struct AlertInstance {
+    pub id: u64,
+    pub query: u32,
+    pub name: Rc<str>,
+    /// Stream of the doc that opened the instance.
+    pub stream_id: u64,
+    pub first_doc: u64,
+    pub opened_at: SimTime,
+    pub last_fired_at: SimTime,
+    /// Fires coalesced into this instance (>= 1).
+    pub fires: u64,
+    pub state: AlertState,
+}
+
+/// Bounded ring of recently-opened instance ids kept for operator views.
+pub const RECENT_ALERTS: usize = 256;
+
+/// The lifecycle store: instances, open-instance map, per-state counters,
+/// per-channel fanout, and the latency histogram.
+pub struct AlertStore {
+    next_id: u64,
+    instances: HashMap<u64, AlertInstance>,
+    /// query id -> open (non-resolved) instance id; at most one per query.
+    open: HashMap<u32, u64>,
+    /// Most recently opened instance ids, capped at [`RECENT_ALERTS`].
+    pub recent: VecDeque<u64>,
+    pub active: u64,
+    pub acked: u64,
+    pub resolved: u64,
+    /// Total fires across all queries (coalesced fires included).
+    pub fires: u64,
+    fires_by_query: HashMap<u32, u64>,
+    /// Channel interner: id -> name and name -> id.
+    channels: Vec<Rc<str>>,
+    by_channel: HashMap<Rc<str>, ChannelId>,
+    /// Notifications dispatched per channel (every fire fans out).
+    fanout: Vec<u64>,
+    /// publish -> alert-fired latency, O(1) memory.
+    pub latencies: LatencyHistogram,
+}
+
+impl Default for AlertStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AlertStore {
+    pub fn new() -> Self {
+        AlertStore {
+            next_id: 1,
+            instances: HashMap::new(),
+            open: HashMap::new(),
+            recent: VecDeque::new(),
+            active: 0,
+            acked: 0,
+            resolved: 0,
+            fires: 0,
+            fires_by_query: HashMap::new(),
+            channels: Vec::new(),
+            by_channel: HashMap::new(),
+            fanout: Vec::new(),
+            latencies: LatencyHistogram::new(),
+        }
+    }
+
+    /// Intern a notification channel name (registration path).
+    pub fn channel(&mut self, name: &str) -> ChannelId {
+        if let Some(&id) = self.by_channel.get(name) {
+            return id;
+        }
+        assert!(self.channels.len() < u16::MAX as usize, "channel id space exhausted");
+        let id = ChannelId(self.channels.len() as u16);
+        let rc: Rc<str> = Rc::from(name);
+        self.channels.push(rc.clone());
+        self.by_channel.insert(rc, id);
+        self.fanout.push(0);
+        id
+    }
+
+    pub fn channel_name(&self, id: ChannelId) -> Option<&str> {
+        self.channels.get(id.0 as usize).map(|s| &**s)
+    }
+
+    pub fn fanout_count(&self, id: ChannelId) -> u64 {
+        self.fanout.get(id.0 as usize).copied().unwrap_or(0)
+    }
+
+    /// Record one fire of `query`. Coalesces into the open instance when
+    /// one exists, otherwise opens a new Active instance. Returns the
+    /// instance id. Every fire counts latency and fans out to `notify`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fire(
+        &mut self,
+        query: u32,
+        name: &Rc<str>,
+        notify: &[ChannelId],
+        doc_id: u64,
+        stream_id: u64,
+        published_ms: SimTime,
+        now: SimTime,
+    ) -> u64 {
+        self.fires += 1;
+        *self.fires_by_query.entry(query).or_insert(0) += 1;
+        self.latencies.record(now.saturating_sub(published_ms));
+        for ch in notify {
+            if let Some(slot) = self.fanout.get_mut(ch.0 as usize) {
+                *slot += 1;
+            }
+        }
+        if let Some(&id) = self.open.get(&query) {
+            let inst = self.instances.get_mut(&id).expect("open instance exists");
+            inst.fires += 1;
+            inst.last_fired_at = now;
+            return id;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.instances.insert(
+            id,
+            AlertInstance {
+                id,
+                query,
+                name: name.clone(),
+                stream_id,
+                first_doc: doc_id,
+                opened_at: now,
+                last_fired_at: now,
+                fires: 1,
+                state: AlertState::Active,
+            },
+        );
+        self.open.insert(query, id);
+        self.active += 1;
+        if self.recent.len() == RECENT_ALERTS {
+            self.recent.pop_front();
+        }
+        self.recent.push_back(id);
+        id
+    }
+
+    /// Active → Acknowledged. Any other transition is rejected.
+    pub fn acknowledge(&mut self, id: u64) -> bool {
+        match self.instances.get_mut(&id) {
+            Some(inst) if inst.state == AlertState::Active => {
+                inst.state = AlertState::Acknowledged;
+                self.active -= 1;
+                self.acked += 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Active|Acknowledged → Resolved (terminal). A later fire of the same
+    /// query opens a *new* instance — never flips this one back.
+    pub fn resolve(&mut self, id: u64) -> bool {
+        let Some(inst) = self.instances.get_mut(&id) else { return false };
+        match inst.state {
+            AlertState::Active => self.active -= 1,
+            AlertState::Acknowledged => self.acked -= 1,
+            AlertState::Resolved => return false,
+        }
+        inst.state = AlertState::Resolved;
+        self.resolved += 1;
+        self.open.remove(&inst.query);
+        true
+    }
+
+    pub fn instance(&self, id: u64) -> Option<&AlertInstance> {
+        self.instances.get(&id)
+    }
+
+    /// The open (Active or Acknowledged) instance for a query, if any.
+    pub fn open_for(&self, query: u32) -> Option<&AlertInstance> {
+        self.open.get(&query).and_then(|id| self.instances.get(id))
+    }
+
+    pub fn fires_for(&self, query: u32) -> u64 {
+        self.fires_by_query.get(&query).copied().unwrap_or(0)
+    }
+
+    pub fn total_instances(&self) -> usize {
+        self.instances.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn name() -> Rc<str> {
+        Rc::from("rule")
+    }
+
+    fn counters_conserve(s: &AlertStore) {
+        assert_eq!(
+            (s.active + s.acked + s.resolved) as usize,
+            s.total_instances(),
+            "state counters must partition the instance set"
+        );
+    }
+
+    #[test]
+    fn fire_opens_then_coalesces() {
+        let mut s = AlertStore::new();
+        let id = s.fire(0, &name(), &[], 10, 7, 0, 100);
+        let id2 = s.fire(0, &name(), &[], 11, 7, 50, 200);
+        assert_eq!(id, id2, "second fire coalesces into the open instance");
+        let inst = s.instance(id).unwrap();
+        assert_eq!(inst.fires, 2);
+        assert_eq!(inst.last_fired_at, 200);
+        assert_eq!(inst.first_doc, 10);
+        assert_eq!(s.fires, 2);
+        assert_eq!(s.fires_for(0), 2);
+        assert_eq!(s.active, 1);
+        assert_eq!(s.total_instances(), 1);
+        counters_conserve(&s);
+    }
+
+    #[test]
+    fn lifecycle_transitions_are_legal_only() {
+        let mut s = AlertStore::new();
+        let id = s.fire(0, &name(), &[], 1, 7, 0, 10);
+        assert!(!s.resolve(9999), "unknown id");
+        assert!(s.acknowledge(id));
+        assert!(!s.acknowledge(id), "double-ack rejected");
+        assert_eq!((s.active, s.acked, s.resolved), (0, 1, 0));
+        assert!(s.resolve(id));
+        assert!(!s.resolve(id), "resolved is terminal");
+        assert!(!s.acknowledge(id), "no Resolved -> Acknowledged");
+        assert_eq!((s.active, s.acked, s.resolved), (0, 0, 1));
+        counters_conserve(&s);
+        // Re-fire after resolve opens a NEW instance; the old one stays
+        // resolved.
+        let id2 = s.fire(0, &name(), &[], 2, 7, 0, 20);
+        assert_ne!(id, id2);
+        assert_eq!(s.instance(id).unwrap().state, AlertState::Resolved);
+        assert_eq!(s.instance(id2).unwrap().state, AlertState::Active);
+        assert_eq!(s.open_for(0).unwrap().id, id2);
+        counters_conserve(&s);
+    }
+
+    #[test]
+    fn resolve_straight_from_active() {
+        let mut s = AlertStore::new();
+        let id = s.fire(3, &name(), &[], 1, 7, 0, 10);
+        assert!(s.resolve(id), "ack is optional");
+        assert_eq!((s.active, s.acked, s.resolved), (0, 0, 1));
+        counters_conserve(&s);
+    }
+
+    #[test]
+    fn fanout_counts_every_fire_per_channel() {
+        let mut s = AlertStore::new();
+        let email = s.channel("email");
+        let pager = s.channel("pager");
+        assert_eq!(s.channel("email"), email, "interned");
+        s.fire(0, &name(), &[email, pager], 1, 7, 0, 10);
+        s.fire(0, &name(), &[email, pager], 2, 7, 0, 20);
+        s.fire(1, &name(), &[email], 3, 7, 0, 30);
+        assert_eq!(s.fanout_count(email), 3);
+        assert_eq!(s.fanout_count(pager), 2);
+        assert_eq!(s.channel_name(pager), Some("pager"));
+    }
+
+    #[test]
+    fn latency_recorded_and_recent_ring_bounded() {
+        let mut s = AlertStore::new();
+        for i in 0..(RECENT_ALERTS as u64 + 50) {
+            // Distinct queries so every fire opens a new instance.
+            let id = s.fire(i as u32, &name(), &[], i, 7, 0, 100);
+            s.resolve(id);
+        }
+        assert_eq!(s.recent.len(), RECENT_ALERTS, "recent ring stays bounded");
+        assert_eq!(s.latencies.samples(), RECENT_ALERTS as u64 + 50);
+        assert_eq!(s.latencies.percentile(1.0), Some(100));
+        counters_conserve(&s);
+    }
+}

@@ -1,0 +1,163 @@
+//! Standing-query alert engine.
+//!
+//! AlertMix's product is *alerts*: users register standing queries and the
+//! platform matches every ingested document against all of them, pushing
+//! notifications on matches. At 100k+ registered queries the naive
+//! scan-every-rule approach (`pipeline::alerts::AlertBook`, kept as the
+//! test oracle) is untenable, so this subsystem inverts the problem
+//! percolator-style — see [`percolator`] for the index, [`lifecycle`] for
+//! the `Active → Acknowledged → Resolved` instance store, [`config`] for
+//! the declarative `alerts` config key, and [`persist`] for name-based
+//! rule snapshots.
+//!
+//! [`AlertEngine`] is the facade the pipeline wires at the sink boundary:
+//! every doc that survives dedup is percolated, fired queries are recorded
+//! in the lifecycle store with per-channel fanout and publish→alert
+//! latency. An engine with zero rules costs one branch per doc — the empty
+//! `alerts` config runs byte-identical to a build without the subsystem.
+
+pub mod config;
+pub mod lifecycle;
+pub mod percolator;
+pub mod persist;
+
+pub use config::{AlertsConfig, NumericSpec, RateSpec, RuleSpec};
+pub use lifecycle::{AlertInstance, AlertState, AlertStore, RECENT_ALERTS};
+pub use percolator::{CompiledQuery, NumericPred, Percolator, TermDict, TermId};
+pub use persist::{restore_rules, snapshot_rules, ALERTS_SNAPSHOT_VERSION};
+
+use crate::sim::SimTime;
+use crate::sink::SinkDoc;
+use anyhow::Result;
+
+/// The percolator index + lifecycle store behind one registration and one
+/// match entry point.
+pub struct AlertEngine {
+    pub index: Percolator,
+    pub store: AlertStore,
+    /// Registered specs in registration order (persistence source).
+    specs: Vec<RuleSpec>,
+}
+
+impl Default for AlertEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AlertEngine {
+    pub fn new() -> Self {
+        AlertEngine { index: Percolator::new(), store: AlertStore::new(), specs: Vec::new() }
+    }
+
+    /// Validate, compile and index a rule; interns its notify channels in
+    /// the lifecycle store. Returns the query id.
+    pub fn register(&mut self, spec: RuleSpec) -> Result<u32> {
+        spec.validate()?;
+        let notify: Vec<_> = spec.notify.iter().map(|n| self.store.channel(n)).collect();
+        let qid = self.index.register(&spec, notify)?;
+        self.specs.push(spec);
+        Ok(qid)
+    }
+
+    /// Percolate one document; every fired query lands in the lifecycle
+    /// store. Returns how many queries fired. Zero registered rules →
+    /// a single length check and out.
+    pub fn percolate(&mut self, doc: &SinkDoc, now: SimTime) -> usize {
+        if self.index.is_empty() {
+            return 0;
+        }
+        let n = self.index.percolate(doc, now);
+        for i in 0..n {
+            let qid = self.index.last_fired()[i];
+            let q = self.index.query(qid);
+            self.store.fire(
+                qid,
+                &q.name,
+                &q.notify,
+                doc.doc_id,
+                doc.stream_id,
+                doc.published_ms,
+                now,
+            );
+        }
+        n
+    }
+
+    pub fn rule_count(&self) -> usize {
+        self.index.query_count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn specs(&self) -> &[RuleSpec] {
+        &self.specs
+    }
+
+    pub fn rule_id(&self, name: &str) -> Option<u32> {
+        self.index.id_of(name)
+    }
+
+    pub fn probes_per_doc(&self) -> f64 {
+        self.index.probes_per_doc()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(id: u64, stream: u64, title: &str) -> SinkDoc {
+        SinkDoc {
+            doc_id: id,
+            stream_id: stream,
+            guid: format!("g{id}"),
+            title: title.into(),
+            body: String::new(),
+            url: "http://x".into(),
+            published_ms: 100,
+            ingested_ms: 0,
+            scores: vec![0.9],
+            simhash: 0,
+            fields: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn empty_engine_is_a_single_branch() {
+        let mut e = AlertEngine::new();
+        assert_eq!(e.percolate(&doc(1, 7, "anything at all"), 500), 0);
+        assert_eq!(e.index.docs, 0, "empty engine must not even count the doc");
+        assert_eq!(e.index.probes, 0);
+        assert_eq!(e.store.fires, 0);
+    }
+
+    #[test]
+    fn fires_flow_into_the_lifecycle_store() {
+        let mut e = AlertEngine::new();
+        let qid =
+            e.register(RuleSpec::named("storm").all_terms(&["storm"]).notify("pager")).unwrap();
+        assert_eq!(e.percolate(&doc(1, 7, "storm warning issued"), 500), 1);
+        assert_eq!(e.store.fires, 1);
+        assert_eq!(e.store.fires_for(qid), 1);
+        let inst = e.store.open_for(qid).unwrap();
+        assert_eq!(inst.state, AlertState::Active);
+        assert_eq!(&*inst.name, "storm");
+        assert_eq!(e.store.latencies.percentile(1.0), Some(400), "publish->alert latency");
+        let pager = e.store.channel("pager");
+        assert_eq!(e.store.fanout_count(pager), 1);
+        // Second fire coalesces rather than opening a new instance.
+        assert_eq!(e.percolate(&doc(2, 7, "storm again"), 900), 1);
+        assert_eq!(e.store.total_instances(), 1);
+        assert_eq!(e.store.open_for(qid).unwrap().fires, 2);
+    }
+
+    #[test]
+    fn invalid_spec_rejected_at_registration() {
+        let mut e = AlertEngine::new();
+        assert!(e.register(RuleSpec::named("nopred")).is_err());
+        assert_eq!(e.rule_count(), 0);
+    }
+}

@@ -1,0 +1,687 @@
+//! The percolator: an inverted index over *queries*.
+//!
+//! At 100k+ standing queries, scanning every rule per document is dead on
+//! arrival — so the matching problem is inverted, exactly like
+//! Elasticsearch's percolate API. Each registered query is compiled
+//! against an interned term dictionary ([`TermId`], `Rc<str>` interning
+//! like `connector::ChannelId`) and indexed under its **rarest required
+//! term** (document frequency at registration time, ties toward the lower
+//! id): a document can only match the query if that anchor term occurs in
+//! it, so the per-doc walk probes just the posting lists of the document's
+//! own distinct terms.
+//!
+//! Matching a document is two allocation-free phases over reusable scratch
+//! buffers:
+//!
+//! 1. **Scan**: tokenize title+body (same semantics as [`crate::text::tokenize`])
+//!    into `doc_seq`, stamping each in-dictionary term's generation slot
+//!    (`seen_gen[t] == doc_gen` ⇔ term occurs in this doc) and collecting
+//!    the distinct-term list. Out-of-dictionary tokens push an `UNKNOWN`
+//!    sentinel into the sequence so phrase adjacency cannot jump a gap.
+//!    Numeric fields resolve the same way — a registered field name *is* a
+//!    term, which is what lets numeric-only queries anchor on their field
+//!    name instead of falling into the probe-every-doc list.
+//! 2. **Probe**: for each distinct term, walk its anchor postings and
+//!    count down the candidate's remaining required terms via the
+//!    generation stamps; only fully-anchored candidates pay for the full
+//!    evaluation (stream filter, relevance, any-terms, phrase adjacency,
+//!    numeric ranges, rate window).
+//!
+//! Rate windows (`>= k matches in w ms`) keep a ring of at most `k`
+//! timestamps per armed `(query, stream)` pair — the ring is allocated on
+//! the first raw match (the rare path) and reused forever after, so the
+//! steady state stays allocation-free. `benches/bench_alerts.rs` pins all
+//! of this with the counting allocator at 100k registered queries.
+
+use super::config::{RateSpec, RuleSpec};
+use crate::sim::SimTime;
+use crate::sink::SinkDoc;
+use crate::connector::ChannelId;
+use anyhow::{bail, Result};
+use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
+
+/// Interned term handle — an index into the dictionary's parallel arrays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TermId(pub u32);
+
+/// Sequence sentinel for tokens the dictionary has never seen. Pushed into
+/// `doc_seq` (never into the dictionary) so a phrase like "flash crash"
+/// cannot match "flash <unknown-word> crash".
+const UNKNOWN: TermId = TermId(u32::MAX);
+
+/// The interned term dictionary: `Rc<str>` keys shared between the lookup
+/// map and the id-indexed table, plus the per-term document frequency
+/// (anchor selection) and the per-doc generation stamp (membership test
+/// without a per-doc HashSet).
+pub struct TermDict {
+    by_str: HashMap<Rc<str>, TermId>,
+    terms: Vec<Rc<str>>,
+    /// Documents this term has occurred in (distinct per doc).
+    df: Vec<u64>,
+    /// `seen_gen[t] == doc_gen` ⇔ term occurs in the current document.
+    seen_gen: Vec<u32>,
+}
+
+impl TermDict {
+    fn new() -> Self {
+        TermDict {
+            by_str: HashMap::new(),
+            terms: Vec::new(),
+            df: Vec::new(),
+            seen_gen: Vec::new(),
+        }
+    }
+
+    /// Intern a term (registration path only — the doc path never inserts).
+    fn intern(&mut self, s: &str) -> TermId {
+        if let Some(&t) = self.by_str.get(s) {
+            return t;
+        }
+        assert!(self.terms.len() < u32::MAX as usize - 1, "term id space exhausted");
+        let t = TermId(self.terms.len() as u32);
+        let rc: Rc<str> = Rc::from(s);
+        self.by_str.insert(rc.clone(), t);
+        self.terms.push(rc);
+        self.df.push(0);
+        self.seen_gen.push(0);
+        t
+    }
+
+    pub fn get(&self, s: &str) -> Option<TermId> {
+        self.by_str.get(s).copied()
+    }
+
+    pub fn name(&self, t: TermId) -> &str {
+        &self.terms[t.0 as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.terms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    #[inline]
+    fn seen(&self, t: TermId, doc_gen: u32) -> bool {
+        self.seen_gen[t.0 as usize] == doc_gen
+    }
+}
+
+/// A numeric range predicate, compiled (field name interned).
+#[derive(Debug, Clone, Copy)]
+pub struct NumericPred {
+    pub field: TermId,
+    pub gte: Option<f64>,
+    pub lte: Option<f64>,
+}
+
+/// A registered query in compiled form.
+pub struct CompiledQuery {
+    pub name: Rc<str>,
+    /// The count-down set: every `all` term, phrase word and numeric field
+    /// name. All must be stamped in the current doc before the candidate
+    /// pays for full evaluation.
+    pub(crate) required: Vec<TermId>,
+    pub(crate) any: Vec<TermId>,
+    /// Consecutive token sequence; empty = no phrase predicate.
+    pub(crate) phrase: Vec<TermId>,
+    pub(crate) numeric: Vec<NumericPred>,
+    pub(crate) min_relevance: f32,
+    /// Sorted; empty = all streams.
+    pub(crate) streams: Vec<u64>,
+    pub(crate) rate: Option<RateSpec>,
+    /// Notification channels (lifecycle-store interned) to fan out on.
+    pub notify: Vec<ChannelId>,
+}
+
+impl CompiledQuery {
+    pub fn has_rate(&self) -> bool {
+        self.rate.is_some()
+    }
+}
+
+/// The query index + per-doc match state. See the module docs for the
+/// walk; all scratch buffers live here so `percolate` allocates nothing
+/// in steady state.
+pub struct Percolator {
+    dict: TermDict,
+    queries: Vec<CompiledQuery>,
+    by_name: HashMap<Rc<str>, u32>,
+    /// Anchor term id -> posting list of query ids (indexed by `TermId.0`;
+    /// non-anchor terms keep an empty list).
+    postings: Vec<Vec<u32>>,
+    /// Pre-merged evaluation list of queries with nothing to anchor on
+    /// (any-only rules): probed once per doc, never copied per doc.
+    unanchored: Vec<u32>,
+
+    // ---- reusable per-doc scratch --------------------------------------
+    doc_gen: u32,
+    tok: String,
+    doc_seq: Vec<TermId>,
+    distinct: Vec<TermId>,
+    doc_fields: Vec<(TermId, f64)>,
+    fired_buf: Vec<u32>,
+
+    /// Armed rate rings: `(query, stream)` -> last ≤ k in-window raw-match
+    /// timestamps. Lazily allocated on a pair's first raw match.
+    rate: HashMap<(u32, u64), VecDeque<SimTime>>,
+
+    // ---- stats ---------------------------------------------------------
+    pub docs: u64,
+    pub probes: u64,
+    pub raw_matches: u64,
+}
+
+impl Default for Percolator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Percolator {
+    pub fn new() -> Self {
+        Percolator {
+            dict: TermDict::new(),
+            queries: Vec::new(),
+            by_name: HashMap::new(),
+            postings: Vec::new(),
+            unanchored: Vec::new(),
+            doc_gen: 0,
+            tok: String::new(),
+            doc_seq: Vec::new(),
+            distinct: Vec::new(),
+            doc_fields: Vec::new(),
+            fired_buf: Vec::new(),
+            rate: HashMap::new(),
+            docs: 0,
+            probes: 0,
+            raw_matches: 0,
+        }
+    }
+
+    /// Compile and index a rule. `notify` are the lifecycle store's
+    /// interned channel ids for the spec's notify list. Names are unique.
+    pub fn register(&mut self, spec: &RuleSpec, notify: Vec<ChannelId>) -> Result<u32> {
+        if self.by_name.contains_key(spec.name.as_str()) {
+            bail!("alert rule '{}' already registered", spec.name);
+        }
+        let mut all: Vec<TermId> = Vec::new();
+        for s in &spec.all {
+            for t in crate::text::tokenize(s) {
+                all.push(self.dict.intern(&t));
+            }
+        }
+        let mut any: Vec<TermId> = Vec::new();
+        for s in &spec.any {
+            for t in crate::text::tokenize(s) {
+                any.push(self.dict.intern(&t));
+            }
+        }
+        let mut phrase: Vec<TermId> = Vec::new();
+        if let Some(p) = &spec.phrase {
+            for t in crate::text::tokenize(p) {
+                phrase.push(self.dict.intern(&t));
+            }
+        }
+        let mut numeric = Vec::new();
+        for n in &spec.numeric {
+            numeric.push(NumericPred {
+                field: self.dict.intern(&n.field),
+                gte: n.gte,
+                lte: n.lte,
+            });
+        }
+        // Count-down set: text terms + numeric field names, deduped.
+        let mut required: Vec<TermId> = all
+            .iter()
+            .chain(phrase.iter())
+            .copied()
+            .chain(numeric.iter().map(|n| n.field))
+            .collect();
+        required.sort_unstable();
+        required.dedup();
+        let mut streams = spec.streams.clone();
+        streams.sort_unstable();
+        streams.dedup();
+
+        let qid = self.queries.len() as u32;
+        // Rarest required term anchors the query (df at registration
+        // time; ties break toward the lower TermId so replays are exact).
+        match required.iter().copied().min_by_key(|t| (self.dict.df[t.0 as usize], t.0)) {
+            Some(t) => {
+                let idx = t.0 as usize;
+                if self.postings.len() <= idx {
+                    self.postings.resize_with(idx + 1, Vec::new);
+                }
+                self.postings[idx].push(qid);
+            }
+            None => self.unanchored.push(qid),
+        }
+        let name: Rc<str> = Rc::from(spec.name.as_str());
+        self.by_name.insert(name.clone(), qid);
+        self.queries.push(CompiledQuery {
+            name,
+            required,
+            any,
+            phrase,
+            numeric,
+            min_relevance: spec.min_relevance,
+            streams,
+            rate: spec.rate,
+            notify,
+        });
+        Ok(qid)
+    }
+
+    pub fn query_count(&self) -> usize {
+        self.queries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queries.is_empty()
+    }
+
+    pub fn query(&self, qid: u32) -> &CompiledQuery {
+        &self.queries[qid as usize]
+    }
+
+    pub fn id_of(&self, name: &str) -> Option<u32> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn term_count(&self) -> usize {
+        self.dict.len()
+    }
+
+    /// Query ids fired by the most recent [`Self::percolate`] call.
+    pub fn last_fired(&self) -> &[u32] {
+        &self.fired_buf
+    }
+
+    /// Mean candidate probes per percolated doc — the selectivity number
+    /// `BENCH_alerts.json` tracks (at 100k queries it should be tiny).
+    pub fn probes_per_doc(&self) -> f64 {
+        if self.docs == 0 {
+            0.0
+        } else {
+            self.probes as f64 / self.docs as f64
+        }
+    }
+
+    /// Match one document against every registered query. Fired query ids
+    /// land in [`Self::last_fired`]; returns how many fired. Zero-alloc in
+    /// steady state (scratch buffers + warmed rate rings).
+    pub fn percolate(&mut self, doc: &SinkDoc, now: SimTime) -> usize {
+        self.docs += 1;
+        self.begin_doc();
+        // Phase 1: scan. `scan_text` feeds the scratch tokenizer; numeric
+        // field names stamp like text terms (see module docs).
+        self.scan_text_title_body(doc);
+        self.doc_fields.clear();
+        for (name, v) in &doc.fields {
+            if let Some(t) = self.dict.get(name) {
+                self.doc_fields.push((t, *v));
+                self.mark_seen(t);
+            }
+        }
+        // Phase 2: probe. Distinct-term posting walks + the unanchored
+        // list, evaluated in place over disjoint scratch fields.
+        self.fired_buf.clear();
+        for di in 0..self.distinct.len() {
+            let t = self.distinct[di];
+            let Some(list) = self.postings.get(t.0 as usize) else { continue };
+            for &qid in list {
+                eval_query(
+                    qid,
+                    &self.queries,
+                    &self.dict,
+                    self.doc_gen,
+                    &self.doc_seq,
+                    &self.doc_fields,
+                    doc,
+                    now,
+                    &mut self.rate,
+                    &mut self.probes,
+                    &mut self.raw_matches,
+                    &mut self.fired_buf,
+                );
+            }
+        }
+        for ui in 0..self.unanchored.len() {
+            let qid = self.unanchored[ui];
+            eval_query(
+                qid,
+                &self.queries,
+                &self.dict,
+                self.doc_gen,
+                &self.doc_seq,
+                &self.doc_fields,
+                doc,
+                now,
+                &mut self.rate,
+                &mut self.probes,
+                &mut self.raw_matches,
+                &mut self.fired_buf,
+            );
+        }
+        self.fired_buf.len()
+    }
+
+    fn begin_doc(&mut self) {
+        self.doc_gen = self.doc_gen.wrapping_add(1);
+        if self.doc_gen == 0 {
+            // Generation counter wrapped (once per 2^32 docs): reset every
+            // stamp so a stale generation can't read as "seen".
+            for g in &mut self.dict.seen_gen {
+                *g = 0;
+            }
+            self.doc_gen = 1;
+        }
+        self.doc_seq.clear();
+        self.distinct.clear();
+    }
+
+    /// Stamp a term as present in the current doc (first occurrence also
+    /// bumps its document frequency and the distinct list).
+    fn mark_seen(&mut self, t: TermId) {
+        let slot = &mut self.dict.seen_gen[t.0 as usize];
+        if *slot != self.doc_gen {
+            *slot = self.doc_gen;
+            self.dict.df[t.0 as usize] += 1;
+            self.distinct.push(t);
+        }
+    }
+
+    fn scan_text_title_body(&mut self, doc: &SinkDoc) {
+        self.scan_text(&doc.title);
+        self.scan_text(&doc.body);
+    }
+
+    /// Tokenize into the scratch buffer with the exact semantics of
+    /// [`crate::text::tokenize`]: lowercase alphanumeric runs, tokens of
+    /// more than one *byte*. No per-doc Vec<String>/HashSet.
+    fn scan_text(&mut self, text: &str) {
+        self.tok.clear();
+        for c in text.chars() {
+            if c.is_alphanumeric() {
+                // Lowercase may expand (İ → i + combining dot).
+                for lc in c.to_lowercase() {
+                    self.tok.push(lc);
+                }
+            } else if !self.tok.is_empty() {
+                self.flush_token();
+            }
+        }
+        self.flush_token();
+    }
+
+    fn flush_token(&mut self) {
+        if self.tok.len() > 1 {
+            match self.dict.get(&self.tok) {
+                Some(t) => {
+                    self.doc_seq.push(t);
+                    self.mark_seen(t);
+                }
+                // Unknown token: keep its position so phrases can't match
+                // across it, but never intern from the doc path.
+                None => self.doc_seq.push(UNKNOWN),
+            }
+        }
+        self.tok.clear();
+    }
+}
+
+/// Evaluate one candidate query against the current document. A free
+/// function over disjoint `Percolator` fields so the posting-list borrow
+/// in `percolate` can stay live across the call.
+#[allow(clippy::too_many_arguments)]
+fn eval_query(
+    qid: u32,
+    queries: &[CompiledQuery],
+    dict: &TermDict,
+    doc_gen: u32,
+    doc_seq: &[TermId],
+    doc_fields: &[(TermId, f64)],
+    doc: &SinkDoc,
+    now: SimTime,
+    rate: &mut HashMap<(u32, u64), VecDeque<SimTime>>,
+    probes: &mut u64,
+    raw_matches: &mut u64,
+    fired: &mut Vec<u32>,
+) {
+    *probes += 1;
+    let cq = &queries[qid as usize];
+    // Count down the remaining required terms; any miss disqualifies.
+    for &t in &cq.required {
+        if !dict.seen(t, doc_gen) {
+            return;
+        }
+    }
+    if !cq.streams.is_empty() && cq.streams.binary_search(&doc.stream_id).is_err() {
+        return;
+    }
+    if doc.scores.first().copied().unwrap_or(1.0) < cq.min_relevance {
+        return;
+    }
+    if !cq.any.is_empty() && !cq.any.iter().any(|&t| dict.seen(t, doc_gen)) {
+        return;
+    }
+    if cq.phrase.len() > 1 && !contains_phrase(doc_seq, &cq.phrase) {
+        return;
+    }
+    for p in &cq.numeric {
+        // doc_fields is a handful of entries; linear scan beats a map.
+        let Some(&(_, v)) = doc_fields.iter().find(|(f, _)| *f == p.field) else { return };
+        if let Some(g) = p.gte {
+            if v < g {
+                return;
+            }
+        }
+        if let Some(l) = p.lte {
+            if v > l {
+                return;
+            }
+        }
+    }
+    *raw_matches += 1;
+    // Rate window: a raw match arms/advances the per-(query, stream)
+    // ring; the alert only fires once >= k raw matches sit within the
+    // window (ages <= window_ms count as inside). The ring is capped at k
+    // timestamps — ">= k in window" never needs more history than that.
+    if let Some(rw) = cq.rate {
+        let ring = rate.entry((qid, doc.stream_id)).or_default();
+        while let Some(&t0) = ring.front() {
+            if t0 + rw.window_ms < now {
+                ring.pop_front();
+            } else {
+                break;
+            }
+        }
+        if ring.len() >= rw.k as usize {
+            ring.pop_front();
+        }
+        ring.push_back(now);
+        if (ring.len() as u32) < rw.k {
+            return;
+        }
+    }
+    fired.push(qid);
+}
+
+fn contains_phrase(seq: &[TermId], phrase: &[TermId]) -> bool {
+    if phrase.len() > seq.len() {
+        return false;
+    }
+    seq.windows(phrase.len()).any(|w| w == phrase)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alert::config::RuleSpec;
+
+    fn doc(id: u64, stream: u64, title: &str, body: &str) -> SinkDoc {
+        SinkDoc {
+            doc_id: id,
+            stream_id: stream,
+            guid: format!("g{id}"),
+            title: title.into(),
+            body: body.into(),
+            url: "http://x".into(),
+            published_ms: 0,
+            ingested_ms: 0,
+            scores: vec![0.9],
+            simhash: 0,
+            fields: Vec::new(),
+        }
+    }
+
+    fn fired_names(p: &Percolator) -> Vec<String> {
+        let mut v: Vec<String> =
+            p.last_fired().iter().map(|&q| p.query(q).name.to_string()).collect();
+        v.sort();
+        v
+    }
+
+    #[test]
+    fn conjunctive_terms_and_anchoring() {
+        let mut p = Percolator::new();
+        p.register(&RuleSpec::named("rate-cut").all_terms(&["rate", "cut"]), Vec::new()).unwrap();
+        p.register(&RuleSpec::named("never").all_terms(&["zzznever"]), Vec::new()).unwrap();
+        assert_eq!(p.percolate(&doc(1, 7, "central bank rate decision", ""), 0), 0);
+        assert_eq!(p.percolate(&doc(2, 7, "surprise rate cut announced", ""), 0), 1);
+        assert_eq!(fired_names(&p), vec!["rate-cut"]);
+        // Neither doc contains "zzznever", so that rule is never probed.
+        assert!(p.probes <= 2, "anchored probing must skip unrelated rules: {}", p.probes);
+    }
+
+    #[test]
+    fn duplicate_name_rejected() {
+        let mut p = Percolator::new();
+        p.register(&RuleSpec::named("a").all_terms(&["x1"]), Vec::new()).unwrap();
+        assert!(p.register(&RuleSpec::named("a").all_terms(&["y1"]), Vec::new()).is_err());
+    }
+
+    #[test]
+    fn phrase_requires_adjacency_even_across_unknown_tokens() {
+        let mut p = Percolator::new();
+        p.register(&RuleSpec::named("fc").phrase("flash crash"), Vec::new()).unwrap();
+        assert_eq!(p.percolate(&doc(1, 7, "a flash crash today", ""), 0), 1);
+        assert_eq!(p.percolate(&doc(2, 7, "flash then crash", ""), 0), 0, "gap breaks the phrase");
+        // "then" is out-of-dictionary: without the UNKNOWN sentinel the
+        // known-term sequence would read "flash crash" and false-positive.
+        assert_eq!(p.percolate(&doc(3, 7, "crash flash", ""), 0), 0, "order matters");
+    }
+
+    #[test]
+    fn numeric_rules_anchor_on_field_name() {
+        let mut p = Percolator::new();
+        p.register(&RuleSpec::named("hot").numeric_gte("move_bps", 250.0), Vec::new()).unwrap();
+        let mut d = doc(1, 7, "tick", "market data");
+        d.fields.push((Rc::from("move_bps"), 300.0));
+        assert_eq!(p.percolate(&d, 0), 1);
+        let mut d2 = doc(2, 7, "tick", "market data");
+        d2.fields.push((Rc::from("move_bps"), 100.0));
+        assert_eq!(p.percolate(&d2, 0), 0);
+        // A doc without the field never probes the rule at all.
+        let before = p.probes;
+        assert_eq!(p.percolate(&doc(3, 7, "plain story", "no fields"), 0), 0);
+        assert_eq!(p.probes, before, "field-name anchor keeps fieldless docs free");
+    }
+
+    #[test]
+    fn numeric_range_both_bounds() {
+        let mut p = Percolator::new();
+        let spec = RuleSpec::named("band").numeric_gte("x", 10.0).numeric_lte("x", 20.0);
+        p.register(&spec, Vec::new()).unwrap();
+        for (v, expect) in [(9.0, 0), (10.0, 1), (15.0, 1), (20.0, 1), (21.0, 0)] {
+            let mut d = doc(100 + v as u64, 7, "t", "b");
+            d.fields.push((Rc::from("x"), v));
+            assert_eq!(p.percolate(&d, 0), expect, "x={v}");
+        }
+    }
+
+    #[test]
+    fn stream_filter_and_relevance() {
+        let mut p = Percolator::new();
+        let spec = RuleSpec::named("s99").all_terms(&["markets"]).stream(99).min_relevance(0.6);
+        p.register(&spec, Vec::new()).unwrap();
+        assert_eq!(p.percolate(&doc(1, 7, "markets rally", ""), 0), 0, "wrong stream");
+        assert_eq!(p.percolate(&doc(2, 99, "markets rally", ""), 0), 1);
+        let mut low = doc(3, 99, "markets rally", "");
+        low.scores = vec![0.3];
+        assert_eq!(p.percolate(&low, 0), 0, "below min_relevance");
+    }
+
+    #[test]
+    fn any_terms_disjunctive() {
+        let mut p = Percolator::new();
+        let spec = RuleSpec::named("energy").all_terms(&["energy"]).any_terms(&["solar", "wind"]);
+        p.register(&spec, Vec::new()).unwrap();
+        assert_eq!(p.percolate(&doc(1, 7, "energy project approved", ""), 0), 0);
+        assert_eq!(p.percolate(&doc(2, 7, "energy project solar", ""), 0), 1);
+        assert_eq!(p.percolate(&doc(3, 7, "wind energy farm", ""), 0), 1);
+    }
+
+    #[test]
+    fn rarest_term_is_the_anchor() {
+        let mut p = Percolator::new();
+        // Teach the dictionary that "common" is frequent before registering.
+        p.register(&RuleSpec::named("seed").all_terms(&["common"]), Vec::new()).unwrap();
+        for i in 0..50 {
+            p.percolate(&doc(i, 7, "common words here", ""), 0);
+        }
+        p.register(&RuleSpec::named("r").all_terms(&["common", "rareword"]), Vec::new()).unwrap();
+        // A doc with only the common term must not probe rule "r" (its
+        // anchor is the rare term), only the seed rule.
+        let before = p.probes;
+        p.percolate(&doc(1000, 7, "common chatter", ""), 0);
+        assert_eq!(p.probes - before, 1, "only the seed rule probes on 'common'");
+        // With both terms, "r" probes and fires.
+        assert_eq!(p.percolate(&doc(1001, 7, "common rareword", ""), 0), 2);
+    }
+
+    #[test]
+    fn rate_window_arms_and_fires_at_k() {
+        let mut p = Percolator::new();
+        let spec = RuleSpec::named("burst").all_terms(&["breach"]).rate(3, 1_000);
+        p.register(&spec, Vec::new()).unwrap();
+        assert_eq!(p.percolate(&doc(1, 7, "breach", ""), 0), 0, "1 of 3");
+        assert_eq!(p.percolate(&doc(2, 7, "breach", ""), 400), 0, "2 of 3");
+        assert_eq!(p.percolate(&doc(3, 7, "breach", ""), 800), 1, "k-th within w fires");
+        assert_eq!(p.raw_matches, 3);
+        // Decay: after the window passes, the count restarts.
+        assert_eq!(p.percolate(&doc(4, 7, "breach", ""), 10_000), 0, "window expired");
+        // Per-stream isolation: other streams arm independently.
+        assert_eq!(p.percolate(&doc(5, 8, "breach", ""), 10_100), 0);
+        // Ring never grows past k.
+        for (q_s, ring) in &p.rate {
+            assert!(ring.len() <= 3, "ring for {q_s:?} grew to {}", ring.len());
+        }
+    }
+
+    #[test]
+    fn unanchored_any_only_rule_probes_every_doc() {
+        let mut p = Percolator::new();
+        p.register(&RuleSpec::named("any").any_terms(&["alpha", "beta"]), Vec::new()).unwrap();
+        assert_eq!(p.percolate(&doc(1, 7, "gamma delta", ""), 0), 0);
+        assert_eq!(p.probes, 1, "unanchored rules probe on every doc");
+        assert_eq!(p.percolate(&doc(2, 7, "beta waves", ""), 0), 1);
+    }
+
+    #[test]
+    fn scratch_reuse_keeps_results_independent() {
+        let mut p = Percolator::new();
+        p.register(&RuleSpec::named("a").all_terms(&["apple"]), Vec::new()).unwrap();
+        p.register(&RuleSpec::named("b").all_terms(&["banana"]), Vec::new()).unwrap();
+        assert_eq!(p.percolate(&doc(1, 7, "apple pie", ""), 0), 1);
+        assert_eq!(fired_names(&p), vec!["a"]);
+        assert_eq!(p.percolate(&doc(2, 7, "banana bread", ""), 0), 1);
+        assert_eq!(fired_names(&p), vec!["b"], "previous doc's stamps must not leak");
+        assert_eq!(p.percolate(&doc(3, 7, "cherry tart", ""), 0), 0);
+        assert!(p.last_fired().is_empty());
+    }
+}

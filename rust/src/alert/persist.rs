@@ -1,0 +1,81 @@
+//! Name-based persistence for registered standing queries, following the
+//! store-snapshot discipline: a versioned JSON document whose identity is
+//! rule *names*, so a snapshot taken on one deployment restores cleanly
+//! into another (already-present names are skipped, not duplicated).
+
+use super::AlertEngine;
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+
+pub const ALERTS_SNAPSHOT_VERSION: u64 = 1;
+
+/// Serialize every registered rule spec (deterministic order: the
+/// registration order, which replays identically under a pinned seed).
+pub fn snapshot_rules(engine: &AlertEngine) -> String {
+    let rules: Vec<Json> = engine.specs().iter().map(|s| s.to_json()).collect();
+    Json::obj()
+        .set("version", ALERTS_SNAPSHOT_VERSION)
+        .set("rules", rules)
+        .to_pretty()
+}
+
+/// Register every rule from `text` that the engine doesn't already know by
+/// name. Returns how many rules were added.
+pub fn restore_rules(text: &str, engine: &mut AlertEngine) -> Result<usize> {
+    let j = Json::parse(text)?;
+    let version = j.get("version").and_then(|v| v.as_u64()).unwrap_or(0);
+    if version != ALERTS_SNAPSHOT_VERSION {
+        bail!("alerts snapshot version {version} unsupported (want {ALERTS_SNAPSHOT_VERSION})");
+    }
+    let Some(rules) = j.get("rules").and_then(|r| r.as_arr()) else {
+        bail!("alerts snapshot missing 'rules' array");
+    };
+    let mut added = 0;
+    for r in rules {
+        let spec = super::config::RuleSpec::from_json(r)?;
+        if engine.rule_id(&spec.name).is_some() {
+            continue;
+        }
+        engine.register(spec)?;
+        added += 1;
+    }
+    Ok(added)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alert::config::RuleSpec;
+
+    #[test]
+    fn snapshot_restore_round_trips_by_name() {
+        let mut a = AlertEngine::new();
+        a.register(RuleSpec::named("crash").numeric_lte("move_bps", -250.0).notify("pager"))
+            .unwrap();
+        a.register(RuleSpec::named("storm").all_terms(&["storm", "warning"])).unwrap();
+        let snap = snapshot_rules(&a);
+
+        let mut b = AlertEngine::new();
+        // Pre-register one of the names: restore must skip it.
+        b.register(RuleSpec::named("storm").all_terms(&["storm", "warning"])).unwrap();
+        let added = restore_rules(&snap, &mut b).unwrap();
+        assert_eq!(added, 1, "only the missing rule is added");
+        assert_eq!(b.rule_count(), 2);
+        assert!(b.rule_id("crash").is_some());
+
+        // The restored engine serializes back to an equivalent rule set.
+        let mut c = AlertEngine::new();
+        assert_eq!(restore_rules(&snap, &mut c).unwrap(), 2);
+        assert_eq!(c.rule_count(), a.rule_count());
+        for spec in a.specs() {
+            assert!(c.rule_id(&spec.name).is_some(), "missing {}", spec.name);
+        }
+    }
+
+    #[test]
+    fn version_mismatch_bails() {
+        let text = Json::obj().set("version", 99u64).set("rules", Vec::<Json>::new()).to_pretty();
+        let mut e = AlertEngine::new();
+        assert!(restore_rules(&text, &mut e).is_err());
+    }
+}

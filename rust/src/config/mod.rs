@@ -116,6 +116,13 @@ pub struct AlertMixConfig {
     /// injects nothing and draws nothing: default runs are byte-identical
     /// to a build without the fault subsystem.
     pub fault: crate::fault::FaultPlan,
+
+    // -- standing-query alerts --------------------------------------------
+    /// Declarative alert rules (`crate::alert`), registered into the
+    /// percolator at world build. The default empty list keeps the engine
+    /// to a single branch per doc: runs without rules are byte-identical
+    /// to a build without the subsystem.
+    pub alerts: crate::alert::AlertsConfig,
 }
 
 impl Default for AlertMixConfig {
@@ -164,6 +171,7 @@ impl Default for AlertMixConfig {
             dead_letter_alarm: 100.0,
             monitor_interval: MINUTE,
             fault: crate::fault::FaultPlan::default(),
+            alerts: crate::alert::AlertsConfig::default(),
         }
     }
 }
@@ -303,6 +311,7 @@ impl AlertMixConfig {
                 "dead_letter_alarm" => c.dead_letter_alarm = f()?,
                 "monitor_interval_ms" => c.monitor_interval = u()?,
                 "fault" => c.fault = crate::fault::FaultPlan::from_json(v)?,
+                "alerts" => c.alerts = crate::alert::AlertsConfig::from_json(v)?,
                 other => bail!("unknown config key: {other}"),
             }
         }
@@ -366,6 +375,7 @@ impl AlertMixConfig {
         if self.resizer_up_windows == 0 || self.resizer_down_windows == 0 {
             bail!("resizer up/down windows must be >= 1");
         }
+        self.alerts.validate()?;
         self.fault.validate()?;
         Ok(())
     }
@@ -516,6 +526,32 @@ mod tests {
         let j = Json::parse(r#"{"fault": {"sqs_dup_rate": 3.0}}"#).unwrap();
         assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
         let j = Json::parse(r#"{"fault": {"nope": 1}}"#).unwrap();
+        assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
+    }
+
+    #[test]
+    fn alerts_key_parses_defaults_and_validates() {
+        // Absent key: the empty rule list (engine disabled).
+        let j = Json::parse(r#"{"n_feeds": 50}"#).unwrap();
+        let c = AlertMixConfig::from_json(&j, AlertMixConfig::default()).unwrap();
+        assert!(c.alerts.rules.is_empty());
+        // A declarative rule list threads through.
+        let j = Json::parse(
+            r#"{"alerts": [
+                {"name": "crash", "numeric": [{"field": "move_bps", "lte": -250}],
+                 "rate": {"k": 3, "window_ms": 10000}, "notify": ["pager"]},
+                {"name": "storm", "all": ["storm", "warning"]}
+            ]}"#,
+        )
+        .unwrap();
+        let c = AlertMixConfig::from_json(&j, AlertMixConfig::default()).unwrap();
+        assert_eq!(c.alerts.rules.len(), 2);
+        assert_eq!(c.alerts.rules[0].name, "crash");
+        assert_eq!(c.alerts.rules[0].rate.unwrap().k, 3);
+        // Invalid rules refuse at config load, not at world build.
+        let j = Json::parse(r#"{"alerts": [{"name": "p"}]}"#).unwrap();
+        assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err(), "no predicate");
+        let j = Json::parse(r#"{"alerts": [{"name": "a", "nope": 1}]}"#).unwrap();
         assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
     }
 

@@ -27,7 +27,7 @@ use crate::actor::Ctx;
 use crate::config::AlertMixConfig;
 use crate::feedsim::{Conditional, HttpStatus, Platform, SocialResult};
 use crate::pipeline::{EnrichBatch, ItemMeta, World};
-use crate::sim::{SimTime, MINUTE};
+use crate::sim::{SimTime, MINUTE, SECOND};
 use crate::store::streams::PollOutcome;
 use crate::text::featurize_item_into;
 use anyhow::{bail, Result};
@@ -51,6 +51,8 @@ pub enum SourceKind {
     VideoTimeline,
     /// System-monitoring gauge scrape with threshold rules.
     Metrics,
+    /// Windowed market-data gauge stream (L2-orderbook-style).
+    Market,
     /// Anything registered programmatically.
     Custom,
 }
@@ -163,6 +165,22 @@ impl PollSink<'_> {
         url: String,
         published_ms: SimTime,
     ) {
+        self.push_fields(guid, title, body, url, published_ms, Vec::new());
+    }
+
+    /// `push` plus numeric gauge fields (market/sysmon readings) carried
+    /// through enrichment to `SinkDoc.fields` for the alert percolator.
+    /// Field names should be connector-interned `Rc<str>` clones so the
+    /// per-item cost is a refcount bump, not a string allocation.
+    pub fn push_fields(
+        &mut self,
+        guid: String,
+        title: String,
+        body: String,
+        url: String,
+        published_ms: SimTime,
+        fields: Vec<(Rc<str>, f64)>,
+    ) {
         let doc_id = self.world.doc_ids.next();
         self.world.counters.items_fetched += 1;
         featurize_item_into(&title, &body, self.features);
@@ -174,6 +192,7 @@ impl PollSink<'_> {
             body,
             url,
             published_ms,
+            fields,
         });
     }
 }
@@ -339,8 +358,8 @@ impl ConnectorRegistry {
             let Some((kind, interval, connector)) = builtin_connector(&spec.name) else {
                 bail!(
                     "unknown connector '{}' in config — built-ins are news, custom_rss, \
-                     facebook, twitter, youtube, metrics; custom connectors must be \
-                     registered programmatically via pipeline::bootstrap_with",
+                     facebook, twitter, youtube, metrics, market; custom connectors must \
+                     be registered programmatically via pipeline::bootstrap_with",
                     spec.name
                 );
             };
@@ -381,6 +400,7 @@ pub fn builtin_connector(name: &str) -> Option<(SourceKind, SimTime, Rc<dyn Sour
         ),
         "youtube" => (SourceKind::VideoTimeline, 0, Rc::new(YouTubeConnector)),
         "metrics" => (SourceKind::Metrics, MINUTE, Rc::new(MetricsConnector)),
+        "market" => (SourceKind::Market, 5 * SECOND, Rc::new(MarketDataConnector::new())),
         _ => return None,
     };
     Some(out)
@@ -601,6 +621,90 @@ impl SourceConnector for MetricsConnector {
     }
 }
 
+/// Windowed market-data feed — the abstract's "trading" scenario. Each
+/// stream is a symbol; a poll drains every completed 100 ms window since
+/// the last poll from `world.market` and ships the windows that moved
+/// (quiet symbols return NotModified so the schedule backs off). Items
+/// carry the normalized gauges as numeric `fields` for the alert
+/// percolator: field names are interned once per connector, so the
+/// per-item cost is four refcount bumps.
+pub struct MarketDataConnector {
+    f_mid: Rc<str>,
+    f_move: Rc<str>,
+    f_spread: Rc<str>,
+    f_imbalance: Rc<str>,
+}
+
+impl Default for MarketDataConnector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MarketDataConnector {
+    pub fn new() -> Self {
+        MarketDataConnector {
+            f_mid: Rc::from("mid"),
+            f_move: Rc::from("move_bps"),
+            f_spread: Rc::from("spread_bps"),
+            f_imbalance: Rc::from("imbalance"),
+        }
+    }
+}
+
+impl SourceConnector for MarketDataConnector {
+    fn poll(&self, ctx: &mut Ctx, world: &mut World, stream_id: u64) -> PollResult {
+        let now = ctx.now();
+        let wins = world.market.poll(stream_id, now);
+        // Feed-handler round trip.
+        ctx.take(1);
+        if wins.is_empty() {
+            return PollResult::not_modified();
+        }
+        let n = ship_poll(ctx, world, stream_id, |sink| {
+            for w in &wins {
+                // Movement words give text rules something to match; the
+                // `w{sym}x{window}` ident keeps templated bodies distinct
+                // for the near-dup signature.
+                let mood = if w.move_bps <= -200.0 {
+                    "sharp selloff plunge"
+                } else if w.move_bps >= 200.0 {
+                    "sharp rally surge"
+                } else {
+                    "quiet drift"
+                };
+                let title = format!(
+                    "sym {stream_id} mid {:.2} move {:+.1}bps window {}",
+                    w.mid, w.move_bps, w.window
+                );
+                let body = format!(
+                    "market tick w{stream_id}x{} {mood} spread {:.1}bps depth {:.0}/{:.0} \
+                     imbalance {:+.2}",
+                    w.window, w.spread_bps, w.bid_depth, w.ask_depth, w.imbalance
+                );
+                sink.push_fields(
+                    format!("urn:market:{stream_id}:{}", w.window),
+                    title,
+                    body,
+                    format!("http://market.sim/sym-{stream_id}/{}", w.window),
+                    w.ts,
+                    vec![
+                        (self.f_mid.clone(), w.mid),
+                        (self.f_move.clone(), w.move_bps),
+                        (self.f_spread.clone(), w.spread_bps),
+                        (self.f_imbalance.clone(), w.imbalance),
+                    ],
+                );
+            }
+        });
+        PollResult {
+            outcome: PollOutcome::Items(n),
+            etag: None,
+            last_modified: Some(now),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -651,7 +755,7 @@ mod tests {
 
     #[test]
     fn builtins_cover_the_scenario_list() {
-        for name in ["news", "custom_rss", "facebook", "twitter", "youtube", "metrics"] {
+        for name in ["news", "custom_rss", "facebook", "twitter", "youtube", "metrics", "market"] {
             assert!(builtin_connector(name).is_some(), "{name}");
         }
         assert!(builtin_connector("nntp").is_none());

@@ -1,0 +1,313 @@
+//! Simulated market-data substrate: per-symbol L2-orderbook-style gauges
+//! normalized into fixed 100 ms windows — the source behind the `market`
+//! connector and the numeric/rate-window alerting scenario.
+//!
+//! Every number is a pure deterministic function of
+//! `(symbol, window index, seed)`: a per-symbol base price, a slow
+//! sinusoidal drift, and rare hash-gated micro-spikes (±40..100 bps, ~0.6%
+//! of windows), so identical runs see identical prints and the alert
+//! examples can compute their expected fire counts *independently* of the
+//! pipeline via [`MarketSim::window_summary`]. Top-`top_n` book levels are
+//! aggregated into per-window depth/imbalance gauges (the "100ms-window
+//! top-N normalization" pattern).
+//!
+//! Natural window-to-window moves are bounded: spikes contribute at most
+//! ±100 bps each side of a window edge, so |move| stays ≈ ≤ 205 bps.
+//! Scripted shocks ([`MarketSim::script_shock`]) are the only way past
+//! that — during a shock the mid oscillates by the full magnitude every
+//! window (an oscillating flash crash), so *every* shock window emits and
+//! breaches any threshold between the natural bound and the magnitude.
+//! That gap is what lets `examples/alert_storm.rs` assert **exact** fire
+//! counts under a pinned seed.
+
+use crate::sim::SimTime;
+use crate::util::hash::combine;
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct MarketConfig {
+    pub seed: u64,
+    /// Normalization window ("say, 100 milliseconds").
+    pub window_ms: SimTime,
+    /// Book levels aggregated into the depth/imbalance gauges.
+    pub top_n: u64,
+    /// Emit a window when |move_bps| reaches this (plus heartbeats).
+    pub emit_min_move_bps: f64,
+    /// Every n-th window emits regardless of movement (liveness).
+    pub heartbeat_windows: u64,
+}
+
+impl Default for MarketConfig {
+    fn default() -> Self {
+        MarketConfig {
+            seed: 0x3A9C_E711,
+            window_ms: 100,
+            top_n: 5,
+            emit_min_move_bps: 15.0,
+            heartbeat_windows: 600,
+        }
+    }
+}
+
+/// One normalized 100 ms window of one symbol, as emitted to a connector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MarketWindow {
+    pub window: u64,
+    /// Window end timestamp (the publish instant).
+    pub ts: SimTime,
+    pub mid: f64,
+    /// Mid move vs the previous window, in basis points.
+    pub move_bps: f64,
+    pub spread_bps: f64,
+    /// Sum of the top-N bid/ask level sizes.
+    pub bid_depth: f64,
+    pub ask_depth: f64,
+    /// (bid - ask) / (bid + ask), in [-1, 1].
+    pub imbalance: f64,
+    /// True iff a scripted shock covers this window.
+    pub shocked: bool,
+}
+
+/// A scripted price shock: while active, the mid is displaced by
+/// `magnitude_bps` with the sign alternating per window.
+#[derive(Debug, Clone, Copy)]
+struct Shock {
+    symbol: u64,
+    from_window: u64,
+    until_window: u64,
+    magnitude_bps: f64,
+}
+
+/// The market front: pure window synthesis + per-symbol poll cursors.
+pub struct MarketSim {
+    pub cfg: MarketConfig,
+    shocks: Vec<Shock>,
+    /// symbol -> next window index to process.
+    next: HashMap<u64, u64>,
+    pub windows_seen: u64,
+    pub windows_emitted: u64,
+}
+
+impl Default for MarketSim {
+    fn default() -> Self {
+        Self::new(MarketConfig::default())
+    }
+}
+
+impl MarketSim {
+    pub fn new(cfg: MarketConfig) -> Self {
+        MarketSim { cfg, shocks: Vec::new(), next: HashMap::new(), windows_seen: 0, windows_emitted: 0 }
+    }
+
+    /// Script an oscillating flash shock on one symbol over
+    /// `[at_ms, at_ms + duration_ms)` (rounded to whole windows).
+    pub fn script_shock(
+        &mut self,
+        symbol: u64,
+        at_ms: SimTime,
+        magnitude_bps: f64,
+        duration_ms: SimTime,
+    ) {
+        let w = self.cfg.window_ms.max(1);
+        self.shocks.push(Shock {
+            symbol,
+            from_window: at_ms / w,
+            until_window: (at_ms + duration_ms) / w,
+            magnitude_bps,
+        });
+    }
+
+    /// Per-symbol base mid price in [10, 500).
+    fn base_price(&self, symbol: u64) -> f64 {
+        10.0 + (combine(symbol, 0xBA5E ^ self.cfg.seed) % 49_000) as f64 / 100.0
+    }
+
+    /// Fractional displacement of the mid in window `w` (wave + spike +
+    /// shock), pure in `(symbol, w, seed, scripted shocks)`.
+    fn displacement(&self, symbol: u64, w: u64) -> (f64, bool) {
+        let phase = (combine(symbol, 0x9A5E ^ self.cfg.seed) % 1000) as f64 / 1000.0;
+        // 20 bps amplitude over a 600-window (one-minute) period: the
+        // per-window drift is far below emit_min_move_bps.
+        let wave = 0.002 * ((w as f64 / 600.0 + phase) * std::f64::consts::TAU).sin();
+        let h = combine(combine(symbol, 0x5717_CE ^ self.cfg.seed), w) % 1000;
+        let spike = if h < 6 {
+            let mag = (40 + combine(symbol ^ w, 0x3317 ^ self.cfg.seed) % 61) as f64 / 10_000.0;
+            if h % 2 == 0 {
+                mag
+            } else {
+                -mag
+            }
+        } else {
+            0.0
+        };
+        let mut shocked = false;
+        let mut shock = 0.0;
+        for s in &self.shocks {
+            if s.symbol == symbol && (s.from_window..s.until_window).contains(&w) {
+                shocked = true;
+                // Alternate sign per window: every in-shock window edge
+                // swings by ~2x the magnitude.
+                let mag = s.magnitude_bps / 10_000.0;
+                shock += if w % 2 == 0 { mag } else { -mag };
+            }
+        }
+        (wave + spike + shock, shocked)
+    }
+
+    fn mid(&self, symbol: u64, w: u64) -> f64 {
+        let (d, _) = self.displacement(symbol, w);
+        self.base_price(symbol) * (1.0 + d)
+    }
+
+    /// The pure per-window summary — usable as an oracle independent of
+    /// the poll cursors (the alert examples enumerate windows with this).
+    pub fn window_summary(&self, symbol: u64, w: u64) -> MarketWindow {
+        let mid = self.mid(symbol, w);
+        let (_, shocked) = self.displacement(symbol, w);
+        let move_bps = if w == 0 {
+            0.0
+        } else {
+            (mid / self.mid(symbol, w - 1) - 1.0) * 10_000.0
+        };
+        // Spread widens with movement; depth/imbalance are hash-synthesized
+        // over the top-N levels.
+        let spread_bps = 1.0 + move_bps.abs() * 0.05;
+        let mut bid_depth = 0.0;
+        let mut ask_depth = 0.0;
+        for lvl in 0..self.cfg.top_n {
+            let hb = combine(combine(symbol, 0xB1D ^ self.cfg.seed ^ lvl), w) % 1000;
+            let ha = combine(combine(symbol, 0xA5C ^ self.cfg.seed ^ lvl), w) % 1000;
+            // Level sizes decay with book depth.
+            let scale = 100.0 / (1.0 + lvl as f64);
+            bid_depth += (100 + hb) as f64 / 1000.0 * scale;
+            ask_depth += (100 + ha) as f64 / 1000.0 * scale;
+        }
+        let imbalance = (bid_depth - ask_depth) / (bid_depth + ask_depth);
+        MarketWindow {
+            window: w,
+            ts: (w + 1) * self.cfg.window_ms,
+            mid,
+            move_bps,
+            spread_bps,
+            bid_depth,
+            ask_depth,
+            imbalance,
+            shocked,
+        }
+    }
+
+    /// Pure emission predicate: movement past the threshold or heartbeat.
+    pub fn emits(&self, win: &MarketWindow) -> bool {
+        win.move_bps.abs() >= self.cfg.emit_min_move_bps
+            || win.window % self.cfg.heartbeat_windows.max(1) == 0
+    }
+
+    /// The highest window index fully elapsed at `now` (None before the
+    /// first window closes).
+    pub fn completed_window(&self, now: SimTime) -> Option<u64> {
+        let w = self.cfg.window_ms.max(1);
+        (now >= w).then(|| now / w - 1)
+    }
+
+    /// Drain every completed-but-unprocessed window for `symbol`,
+    /// returning the ones that emit. No catch-up cap: emission is pure per
+    /// window, so backoff gaps change batching, never content.
+    pub fn poll(&mut self, symbol: u64, now: SimTime) -> Vec<MarketWindow> {
+        let Some(done) = self.completed_window(now) else { return Vec::new() };
+        let start = *self.next.get(&symbol).unwrap_or(&0);
+        let mut out = Vec::new();
+        for w in start..=done {
+            self.windows_seen += 1;
+            let win = self.window_summary(symbol, w);
+            if self.emits(&win) {
+                self.windows_emitted += 1;
+                out.push(win);
+            }
+        }
+        self.next.insert(symbol, done + 1);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::MINUTE;
+
+    #[test]
+    fn deterministic_across_instances_and_poll_batching() {
+        let mut a = MarketSim::default();
+        let mut b = MarketSim::default();
+        // a polls once at the end; b polls every second. Same emissions.
+        let end = 30_000;
+        let ea = a.poll(7, end);
+        let mut eb = Vec::new();
+        for t in (1_000..=end).step_by(1_000) {
+            eb.extend(b.poll(7, t));
+        }
+        assert_eq!(ea, eb, "poll batching must not change content");
+        assert!(!ea.is_empty(), "heartbeat at window 0 guarantees at least one emission");
+    }
+
+    #[test]
+    fn natural_moves_bounded_below_shock_scale() {
+        let sim = MarketSim::default();
+        for symbol in 1..=20u64 {
+            for w in 1..6_000u64 {
+                let win = sim.window_summary(symbol, w);
+                assert!(
+                    win.move_bps.abs() < 250.0,
+                    "natural move {} bps at ({symbol}, {w})",
+                    win.move_bps
+                );
+                assert!(!win.shocked);
+                assert!(win.mid > 0.0);
+                assert!((-1.0..=1.0).contains(&win.imbalance));
+            }
+        }
+    }
+
+    #[test]
+    fn spikes_make_emission_sparse_but_present() {
+        let mut sim = MarketSim::default();
+        let emitted = sim.poll(3, 10 * MINUTE);
+        let seen = sim.windows_seen;
+        assert!(!emitted.is_empty());
+        assert!(
+            (emitted.len() as u64) < seen / 20,
+            "emission should be sparse: {} of {seen}",
+            emitted.len()
+        );
+        // Some emissions are movement-driven, not just heartbeats.
+        assert!(emitted.iter().any(|w| w.move_bps.abs() >= sim.cfg.emit_min_move_bps));
+    }
+
+    #[test]
+    fn scripted_shock_breaches_and_every_shock_window_emits() {
+        let mut sim = MarketSim::default();
+        sim.script_shock(5, 10_000, 400.0, 1_000);
+        let wins = sim.poll(5, 20_000);
+        let shocked: Vec<_> = wins.iter().filter(|w| w.shocked).collect();
+        assert_eq!(shocked.len(), 10, "every window of the 1s shock emits");
+        assert!(
+            shocked.iter().any(|w| w.move_bps <= -250.0),
+            "oscillation produces deep negative moves"
+        );
+        assert!(shocked.iter().any(|w| w.move_bps >= 250.0));
+        // Other symbols are untouched.
+        let other = sim.poll(6, 20_000);
+        assert!(other.iter().all(|w| !w.shocked && w.move_bps.abs() < 250.0));
+    }
+
+    #[test]
+    fn oracle_matches_poll_exactly() {
+        let mut sim = MarketSim::default();
+        sim.script_shock(9, 5_000, 300.0, 500);
+        let polled = sim.poll(9, 60_000);
+        // Re-derive the emission set from the pure summary.
+        let done = sim.completed_window(60_000).unwrap();
+        let expect: Vec<MarketWindow> =
+            (0..=done).map(|w| sim.window_summary(9, w)).filter(|w| sim.emits(w)).collect();
+        assert_eq!(polled, expect);
+    }
+}

@@ -5,12 +5,14 @@
 //! DESIGN.md §2 for the substitution rationale.
 
 pub mod http;
+pub mod market;
 pub mod rss;
 pub mod social;
 pub mod sysmon;
 pub mod universe;
 
 pub use http::{Conditional, HttpConfig, HttpResponse, HttpSim, HttpStatus};
+pub use market::{MarketConfig, MarketSim, MarketWindow};
 pub use rss::{parse_rss, write_rss, RssFeed, RssItem};
 pub use social::{Platform, Post, SocialConfig, SocialResult, SocialSim};
 pub use sysmon::{GaugeReading, Severity, SysmonConfig, SysmonSim, GAUGES};

@@ -11,6 +11,7 @@
 //! `BENCH_ingest.json` / `BENCH_sqs.json` at the repo root for the
 //! tracked hot-path measurements.
 pub mod actor;
+pub mod alert;
 pub mod baseline;
 pub mod benchlib;
 pub mod config;

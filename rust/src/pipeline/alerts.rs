@@ -6,17 +6,26 @@
 //! *fresh* ingested item is matched at the enrich stage in real time. A
 //! match produces an [`AlertEvent`] on the subscriber's channel —
 //! webhook/email in production, an in-memory feed here.
+//!
+//! This is the *legacy* scan-the-candidates matcher; the scalable path is
+//! `crate::alert` (the percolator), which is differential-tested against
+//! this book as its oracle. Memory here is bounded regardless: latency
+//! percentiles come from an O(1)-memory [`LatencyHistogram`] and only a
+//! small ring of recent events is retained (total fires live in
+//! [`AlertBook::matches`] and [`AlertBook::rule_fires`]).
 
 use crate::sim::SimTime;
 use crate::sink::SinkDoc;
+use crate::sqs::LatencyHistogram;
 use crate::text::tokenize;
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::rc::Rc;
 
 /// What a subscriber listens for.
 #[derive(Debug, Clone)]
 pub struct AlertRule {
     pub id: u64,
-    pub name: String,
+    pub name: Rc<str>,
     /// All these tokens must appear in title or body (lowercased).
     pub all_terms: Vec<String>,
     /// At least one of these, if non-empty.
@@ -31,7 +40,7 @@ impl AlertRule {
     pub fn keyword(id: u64, name: &str, all: &[&str]) -> Self {
         AlertRule {
             id,
-            name: name.to_string(),
+            name: Rc::from(name),
             all_terms: all.iter().map(|s| s.to_lowercase()).collect(),
             any_terms: Vec::new(),
             min_relevance: 0.0,
@@ -56,18 +65,23 @@ impl AlertRule {
     }
 }
 
-/// A fired alert.
+/// A fired alert. Name and title are shared `Rc<str>`s — an event costs
+/// two refcount bumps, not two string clones.
 #[derive(Debug, Clone)]
 pub struct AlertEvent {
     pub rule_id: u64,
-    pub rule_name: String,
+    pub rule_name: Rc<str>,
     pub doc_id: u64,
     pub stream_id: u64,
-    pub title: String,
+    pub title: Rc<str>,
     pub fired_at: SimTime,
     /// publish -> alert latency, the number subscribers care about.
     pub latency_ms: SimTime,
 }
+
+/// Most recent events kept for operator feeds; older ones age out (totals
+/// survive in the counters and the latency histogram).
+pub const RECENT_EVENTS: usize = 1024;
 
 /// The matcher: rules indexed by their rarest required term so each item
 /// only probes rules that could possibly match (same idea as ES percolate).
@@ -75,11 +89,17 @@ pub struct AlertBook {
     rules: HashMap<u64, AlertRule>,
     /// term -> rule ids requiring that term (first `all_term` as anchor).
     anchor: HashMap<String, Vec<u64>>,
-    /// rules with no all_terms (must be probed every item).
+    /// rules with no all_terms (must be probed every item). Kept as a
+    /// pre-merged evaluation list — the per-doc path iterates it in place,
+    /// never copies it into the candidate buffer.
     unanchored: Vec<u64>,
-    pub events: Vec<AlertEvent>,
+    /// Bounded ring of the most recent events (see [`RECENT_EVENTS`]).
+    pub events: VecDeque<AlertEvent>,
     pub matches: u64,
     pub probes: u64,
+    fires_by_rule: HashMap<u64, u64>,
+    /// publish -> alert latency in O(1) memory.
+    pub latencies: LatencyHistogram,
 }
 
 impl Default for AlertBook {
@@ -94,9 +114,11 @@ impl AlertBook {
             rules: HashMap::new(),
             anchor: HashMap::new(),
             unanchored: Vec::new(),
-            events: Vec::new(),
+            events: VecDeque::new(),
             matches: 0,
             probes: 0,
+            fires_by_rule: HashMap::new(),
+            latencies: LatencyHistogram::new(),
         }
     }
 
@@ -125,13 +147,18 @@ impl AlertBook {
         self.rules.len()
     }
 
+    /// Lifetime fires of one rule (survives event-ring aging).
+    pub fn rule_fires(&self, rule_id: u64) -> u64 {
+        self.fires_by_rule.get(&rule_id).copied().unwrap_or(0)
+    }
+
     /// Match one freshly-ingested document; fires events for every rule hit.
     pub fn check(&mut self, doc: &SinkDoc, now: SimTime) -> usize {
         let tokens: HashSet<String> = tokenize(&doc.title)
             .into_iter()
             .chain(tokenize(&doc.body))
             .collect();
-        let mut candidates: Vec<u64> = self.unanchored.clone();
+        let mut candidates: Vec<u64> = Vec::new();
         for tok in &tokens {
             if let Some(ids) = self.anchor.get(tok) {
                 candidates.extend_from_slice(ids);
@@ -139,35 +166,47 @@ impl AlertBook {
         }
         candidates.sort_unstable();
         candidates.dedup();
+        // Anchored candidates first, then the unanchored list in place —
+        // the two sets are disjoint (unanchored rules have no anchor
+        // term), so no per-doc merge/copy is needed.
         let mut fired = 0;
-        for id in candidates {
+        let mut title: Option<Rc<str>> = None;
+        for i in 0..candidates.len() + self.unanchored.len() {
+            let id = if i < candidates.len() {
+                candidates[i]
+            } else {
+                self.unanchored[i - candidates.len()]
+            };
             self.probes += 1;
             let rule = &self.rules[&id];
             if rule.matches(doc, &tokens) {
                 fired += 1;
                 self.matches += 1;
-                self.events.push(AlertEvent {
+                *self.fires_by_rule.entry(id).or_insert(0) += 1;
+                let latency_ms = now.saturating_sub(doc.published_ms);
+                self.latencies.record(latency_ms);
+                if self.events.len() == RECENT_EVENTS {
+                    self.events.pop_front();
+                }
+                let title = title.get_or_insert_with(|| Rc::from(doc.title.as_str()));
+                self.events.push_back(AlertEvent {
                     rule_id: id,
                     rule_name: rule.name.clone(),
                     doc_id: doc.doc_id,
                     stream_id: doc.stream_id,
-                    title: doc.title.clone(),
+                    title: title.clone(),
                     fired_at: now,
-                    latency_ms: now.saturating_sub(doc.published_ms),
+                    latency_ms,
                 });
             }
         }
         fired
     }
 
-    /// p-th percentile publish→alert latency.
+    /// p-th percentile publish→alert latency (histogram-backed: exact at
+    /// the extremes, bucket-resolution in between).
     pub fn latency_pct(&self, p: f64) -> Option<SimTime> {
-        if self.events.is_empty() {
-            return None;
-        }
-        let mut xs: Vec<SimTime> = self.events.iter().map(|e| e.latency_ms).collect();
-        xs.sort_unstable();
-        Some(xs[((xs.len() - 1) as f64 * p).round() as usize])
+        self.latencies.percentile(p)
     }
 }
 
@@ -187,6 +226,7 @@ mod tests {
             ingested_ms: 5_000,
             scores: vec![relevance],
             simhash: 0,
+            fields: Vec::new(),
         }
     }
 
@@ -199,6 +239,9 @@ mod tests {
         let ev = &book.events[0];
         assert_eq!(ev.rule_id, 1);
         assert_eq!(ev.latency_ms, 4_000);
+        assert_eq!(&*ev.rule_name, "drought watch");
+        assert_eq!(&*ev.title, "record drought in denver");
+        assert_eq!(book.rule_fires(1), 1);
         // Non-matching item does not fire.
         assert_eq!(book.check(&doc(11, "markets rally", "calm day", 0.9), 6_000), 0);
     }
@@ -256,6 +299,17 @@ mod tests {
     }
 
     #[test]
+    fn unanchored_rules_probe_without_copying() {
+        let mut book = AlertBook::new();
+        let mut rule = AlertRule::keyword(9, "any solar", &[]);
+        rule.any_terms = vec!["solar".into()];
+        book.subscribe(rule);
+        assert_eq!(book.check(&doc(1, "cloudy day", "", 0.5), 0), 0);
+        assert_eq!(book.probes, 1, "unanchored rules are probed on every doc");
+        assert_eq!(book.check(&doc(2, "solar farm opens", "", 0.5), 0), 1);
+    }
+
+    #[test]
     fn latency_percentiles() {
         let mut book = AlertBook::new();
         book.subscribe(AlertRule::keyword(1, "m", &["markets"]));
@@ -264,5 +318,21 @@ mod tests {
         }
         assert_eq!(book.latency_pct(0.0), Some(0));
         assert_eq!(book.latency_pct(1.0), Some(900));
+    }
+
+    #[test]
+    fn event_ring_stays_bounded_while_totals_survive() {
+        let mut book = AlertBook::new();
+        book.subscribe(AlertRule::keyword(1, "m", &["markets"]));
+        let n = RECENT_EVENTS as u64 + 100;
+        for i in 0..n {
+            book.check(&doc(i, "markets move", "", 0.5), 1_000);
+        }
+        assert_eq!(book.events.len(), RECENT_EVENTS);
+        assert_eq!(book.matches, n);
+        assert_eq!(book.rule_fires(1), n);
+        assert_eq!(book.latencies.samples(), n);
+        // The ring holds the *latest* events.
+        assert_eq!(book.events.back().unwrap().doc_id, n - 1);
     }
 }

@@ -61,6 +61,7 @@ mod tests {
                 body,
                 url: format!("http://x/{doc_id}"),
                 published_ms: 0,
+                fields: Vec::new(),
             });
         }
         EnrichBatch { metas, features }
@@ -138,6 +139,7 @@ mod tests {
             body: base.to_string(),
             url: "http://f1/a".into(),
             published_ms: 0,
+            fields: Vec::new(),
         });
         featurize_item_into(&rewritten, &rewritten, &mut features);
         metas.push(ItemMeta {
@@ -148,6 +150,7 @@ mod tests {
             body: rewritten.clone(),
             url: "http://f2/b".into(),
             published_ms: 0,
+            fields: Vec::new(),
         });
         sys.tell(stage, EnrichBatch { metas, features });
         sys.run_to_idle(&mut w);

@@ -78,4 +78,8 @@ pub struct ItemMeta {
     pub body: String,
     pub url: String,
     pub published_ms: SimTime,
+    /// Numeric gauge fields attached by the connector (empty for plain
+    /// text items); names are connector-interned `Rc<str>`, flowing
+    /// through to `SinkDoc.fields` for the alert percolator.
+    pub fields: Vec<(std::rc::Rc<str>, f64)>,
 }

@@ -42,6 +42,17 @@ impl Actor<World> for DeadLettersMonitor {
             world.metrics.gauge("InjectedFaults", now, fc.total_injected() as f64);
             world.metrics.gauge("BreakerOpens", now, fc.breaker_opens as f64);
         }
+        // Standing-query alert gauges, gated on registered rules (the
+        // empty `alerts` config must publish nothing so rule-free runs
+        // stay byte-identical to pre-engine builds). AlertsFired itself is
+        // counted at the sink boundary in `deliver_rows`.
+        if world.alert_engine.rule_count() > 0 {
+            let st = &world.alert_engine.store;
+            world.metrics.gauge("AlertsActive", now, st.active as f64);
+            world.metrics.gauge("AlertsAcked", now, st.acked as f64);
+            world.metrics.gauge("AlertsResolved", now, st.resolved as f64);
+            world.metrics.gauge("PercolatorProbesPerDoc", now, world.alert_engine.probes_per_doc());
+        }
 
         // Close the loop against breaker state: pools whose channel
         // breaker is open are marked grow-inhibited on the feedback bus
@@ -161,5 +172,24 @@ mod tests {
         // Injection counters stay gated: they only exist under a plan.
         assert!(w.metrics.get("InjectedFaults").is_none());
         assert!(w.metrics.emails.is_empty(), "baseline gauges must not alarm");
+        // Alert gauges stay gated too: no registered rules, no signals.
+        assert!(w.metrics.get("AlertsActive").is_none());
+        assert!(w.metrics.get("PercolatorProbesPerDoc").is_none());
+    }
+
+    #[test]
+    fn alert_gauges_publish_when_rules_registered() {
+        let mut sys: ActorSystem<World> = ActorSystem::new(1);
+        let mut cfg = AlertMixConfig::tiny();
+        cfg.alerts.rules.push(crate::alert::RuleSpec::named("storm").all_terms(&["storm"]));
+        let mut w = World::build(&cfg).unwrap();
+        w.dead_letters = sys.dead_letters.clone();
+        let mon =
+            sys.spawn("mon", MailboxKind::Unbounded, Box::new(|_| Box::new(DeadLettersMonitor)));
+        sys.tell_at(MINUTE, mon, MonitorTick);
+        sys.run_to_idle(&mut w);
+        for name in ["AlertsActive", "AlertsAcked", "AlertsResolved", "PercolatorProbesPerDoc"] {
+            assert!(w.metrics.get(name).is_some(), "{name} gauge missing");
+        }
     }
 }

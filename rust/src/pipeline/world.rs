@@ -5,13 +5,14 @@ use super::feedback::FeedbackBus;
 use super::messages::{EnrichBatch, ItemMeta};
 use super::Handles;
 use crate::actor::DeadLetters;
+use crate::alert::AlertEngine;
 use crate::config::AlertMixConfig;
 use crate::connector::ConnectorRegistry;
 use crate::dedup::{DedupVerdict, Deduper};
 use crate::fault::ChaosInjector;
 use crate::feedsim::{
-    FeedUniverse, HttpConfig, HttpSim, SocialConfig, SocialSim, SysmonConfig, SysmonSim,
-    UniverseConfig,
+    FeedUniverse, HttpConfig, HttpSim, MarketConfig, MarketSim, SocialConfig, SocialSim,
+    SysmonConfig, SysmonSim, UniverseConfig,
 };
 use crate::metrics::MetricRegistry;
 use crate::runtime::{Batcher, BatcherConfig, CpuFallbackEnricher, EnrichBackend, Enrichment};
@@ -132,6 +133,8 @@ pub struct World {
     pub social: SocialSim,
     /// System-monitoring substrate behind the `metrics` connector.
     pub sysmon: SysmonSim,
+    /// Market-data substrate behind the `market` connector.
+    pub market: MarketSim,
     pub sink: ElasticLite,
     pub dedup: Deduper,
     pub metrics: MetricRegistry,
@@ -151,8 +154,13 @@ pub struct World {
     /// ticket -> item metadata for in-flight enrichment requests.
     pub pending_items: HashMap<u64, ItemMeta>,
     pub doc_ids: IdGen,
-    /// Alert subscriptions matched against every fresh ingested item.
+    /// Alert subscriptions matched against every fresh ingested item
+    /// (legacy scan matcher; kept as the percolator's oracle).
     pub alerts: AlertBook,
+    /// The standing-query percolator + lifecycle store (`crate::alert`),
+    /// fed every doc that survives dedup. One branch per doc when the
+    /// `alerts` config is empty.
+    pub alert_engine: AlertEngine,
     pub counters: WorldCounters,
     /// Shared view of the actor system's dead-letter office (monitor
     /// actor reads it; the system writes it).
@@ -243,6 +251,13 @@ impl World {
         let mut sink = ElasticLite::new(cfg.sink_bulk);
         sink.chaos = fault.sink_chaos();
 
+        // Register the config's declarative standing queries (validated
+        // again here so programmatic construction gets the same gate).
+        let mut alert_engine = AlertEngine::new();
+        for spec in &cfg.alerts.rules {
+            alert_engine.register(spec.clone())?;
+        }
+
         Ok(World {
             connectors,
             store,
@@ -256,6 +271,10 @@ impl World {
             sysmon: SysmonSim::new(SysmonConfig {
                 seed: cfg.seed ^ 0x5195_604D,
                 ..SysmonConfig::default()
+            }),
+            market: MarketSim::new(MarketConfig {
+                seed: cfg.seed ^ 0x3A9C_E711,
+                ..MarketConfig::default()
             }),
             sink,
             dedup: Deduper::new(cfg.dedup_max_hamming),
@@ -271,6 +290,7 @@ impl World {
             pending_items: HashMap::new(),
             doc_ids: IdGen::new(),
             alerts: AlertBook::new(),
+            alert_engine,
             counters: WorldCounters::default(),
             dead_letters: Rc::new(RefCell::new(DeadLetters::default())),
             handles: None,
@@ -364,6 +384,7 @@ impl World {
             &mut self.pending_items,
             &mut self.dedup,
             &mut self.alerts,
+            &mut self.alert_engine,
             &mut self.sink,
             &mut self.metrics,
             &mut self.counters,
@@ -415,6 +436,7 @@ impl World {
                         &mut self.pending_items,
                         &mut self.dedup,
                         &mut self.alerts,
+                        &mut self.alert_engine,
                         &mut self.sink,
                         &mut self.metrics,
                         &mut self.counters,
@@ -499,6 +521,54 @@ impl World {
         ));
         s
     }
+
+    /// Human-readable standing-query alert summary (the alert-engine
+    /// counterpart of `recovery_table`): index shape, selectivity,
+    /// lifecycle state counts, per-channel fanout and the most recent
+    /// instances.
+    pub fn alert_table(&self) -> String {
+        let eng = &self.alert_engine;
+        let st = &eng.store;
+        let mut s = String::new();
+        s.push_str(&format!(
+            "  queries={} terms={} docs={} probes/doc={:.2} raw_matches={}\n",
+            eng.rule_count(),
+            eng.index.term_count(),
+            eng.index.docs,
+            eng.probes_per_doc(),
+            eng.index.raw_matches,
+        ));
+        s.push_str(&format!(
+            "  fires={} instances={} active={} acked={} resolved={}",
+            st.fires,
+            st.total_instances(),
+            st.active,
+            st.acked,
+            st.resolved,
+        ));
+        if let (Some(p50), Some(p99)) = (st.latencies.percentile(0.5), st.latencies.percentile(0.99))
+        {
+            s.push_str(&format!("  latency p50={p50}ms p99={p99}ms"));
+        }
+        s.push('\n');
+        let mut ch = 0u16;
+        while let Some(name) = st.channel_name(crate::connector::ChannelId(ch)) {
+            s.push_str(&format!(
+                "  channel {name:<12} notified {:>8}\n",
+                st.fanout_count(crate::connector::ChannelId(ch))
+            ));
+            ch += 1;
+        }
+        for &id in st.recent.iter().rev().take(5) {
+            if let Some(inst) = st.instance(id) {
+                s.push_str(&format!(
+                    "  #{} {:<24} {:?} fires={} stream={} opened@{}ms\n",
+                    inst.id, inst.name, inst.state, inst.fires, inst.stream_id, inst.opened_at
+                ));
+            }
+        }
+        s
+    }
 }
 
 /// Deliver one enriched batch to dedup + alerting + the sink. A free
@@ -512,6 +582,7 @@ fn deliver_rows(
     pending_items: &mut HashMap<u64, ItemMeta>,
     dedup: &mut Deduper,
     alerts: &mut AlertBook,
+    alert_engine: &mut AlertEngine,
     sink: &mut ElasticLite,
     metrics: &mut MetricRegistry,
     counters: &mut WorldCounters,
@@ -532,9 +603,14 @@ fn deliver_rows(
                     ingested_ms: now,
                     scores: e.scores.clone(),
                     simhash: e.simhash,
+                    fields: meta.fields,
                 };
-                // Real-time alerting on the fresh item (AlertMix!).
+                // Real-time alerting on the fresh item (AlertMix!): the
+                // legacy subscription book and the standing-query
+                // percolator both see every doc that survives dedup.
                 let fired = alerts.check(&doc, now);
+                let pfired = alert_engine.percolate(&doc, now);
+                let fired = fired + pfired;
                 if fired > 0 {
                     metrics.count("AlertsFired", now, fired as f64);
                 }

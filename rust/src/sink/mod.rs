@@ -27,6 +27,10 @@ pub struct SinkDoc {
     pub scores: Vec<f32>,
     /// SimHash signature (for audit).
     pub simhash: u64,
+    /// Numeric gauge fields (market data, sysmon readings) carried to the
+    /// alert percolator; names are interned `Rc<str>` shared with the
+    /// producing connector, empty for plain text docs.
+    pub fields: Vec<(std::rc::Rc<str>, f64)>,
 }
 
 /// Ingest statistics (drives Figure-4's "deleting/emptying" parity check).
@@ -272,6 +276,7 @@ mod tests {
             ingested_ms: ing_ms,
             scores: vec![0.5],
             simhash: 0,
+            fields: Vec::new(),
         }
     }
 

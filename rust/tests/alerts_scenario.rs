@@ -23,8 +23,11 @@ fn alerts_fire_on_matching_ingest() {
     world.flush_enrichment(sys.now());
 
     assert!(world.alerts.matches > 0, "expected alert matches in 3h of news");
-    assert!(world.alerts.events.iter().any(|e| e.rule_id == 1));
-    assert!(world.alerts.events.iter().any(|e| e.rule_id == 2));
+    // Lifetime per-rule counters — robust to the bounded event ring aging
+    // out early fires.
+    assert!(world.alerts.rule_fires(1) > 0);
+    assert!(world.alerts.rule_fires(2) > 0);
+    assert_eq!(world.alerts.rule_fires(4), 0);
     assert!(world.alerts.events.iter().all(|e| e.rule_id != 4));
     // Every fired alert references a really-ingested doc with the term.
     for ev in world.alerts.events.iter().take(50) {
@@ -53,10 +56,10 @@ fn unsubscribe_mid_run_stops_new_events() {
     let (mut sys, mut world, _h) = bootstrap(cfg).unwrap();
     world.alerts.subscribe(AlertRule::keyword(1, "m", &["markets"]));
     sys.run_until(&mut world, 90 * MINUTE);
-    let before = world.alerts.events.len();
+    let before = world.alerts.matches;
     assert!(before > 0, "need some events to make the test meaningful");
     world.alerts.unsubscribe(1);
     sys.run_until(&mut world, 3 * HOUR);
     world.flush_enrichment(sys.now());
-    assert_eq!(world.alerts.events.len(), before, "no events after unsubscribe");
+    assert_eq!(world.alerts.matches, before, "no events after unsubscribe");
 }
