@@ -1,7 +1,13 @@
 # AlertMix — repo-root automation.
 #
-#   make verify              tier-1 gate: offline release build + full test
-#                            suite (+ clippy -D warnings when installed)
+#   make verify              tier-1 gate: pallas-lint + offline release build
+#                            + full test suite (+ clippy -D warnings when
+#                            installed)
+#   make lint                pallas-lint static analysis (determinism, hot-path
+#                            allocs, borrow discipline, panic audit). Always
+#                            runs the dependency-free Python mirror; also runs
+#                            the Rust binary when a cargo toolchain exists.
+#                            Exit 1 on any unsuppressed diagnostic.
 #   make example-connectors  run examples/five_sources.rs (all five source
 #                            connectors live end to end; asserts delivery)
 #   make chaos               pinned-seed chaos day: full fault plan, crash +
@@ -32,7 +38,7 @@ CARGO ?= cargo
 # Coordinator shards for bench-store (1 = classic single coordinator).
 SHARDS ?= 1
 
-.PHONY: verify example-connectors chaos drills alerts bench-alerts bench-ingest bench-sqs bench-store bench artifacts
+.PHONY: verify lint example-connectors chaos drills alerts bench-alerts bench-ingest bench-sqs bench-store bench artifacts
 
 # Pinned seed so CI failures replay bit-for-bit; override for exploration:
 #   make chaos CHAOS_SEED=99 CHAOS_FEEDS=10000
@@ -50,9 +56,20 @@ DRILL ?= all
 STORM_SEED ?= 77
 STORM_QUERIES ?= 100000
 
+# The Python mirror is the unconditional gate (it runs even in cargo-less
+# containers); the Rust binary re-checks with identical output when the
+# toolchain exists, so a drift between the two fails loudly.
+lint:
+	python3 python/lint/pallas_lint.py --root .
+	@if $(CARGO) --version >/dev/null 2>&1; then \
+		cd rust && $(CARGO) run --release --quiet --bin pallas_lint -- --root ..; \
+	else \
+		echo "cargo unavailable; pallas-lint ran via the python mirror only"; \
+	fi
+
 # The clippy gate covers lib + bins (not --all-targets: the bench/test
 # surface is exercised by `cargo test` and the CI bench smoke instead).
-verify:
+verify: lint
 	cd rust && $(CARGO) build --release && $(CARGO) test -q
 	cd rust && if $(CARGO) clippy --version >/dev/null 2>&1; then \
 		$(CARGO) clippy -- -D warnings; \

@@ -1,0 +1,825 @@
+#!/usr/bin/env python3
+"""pallas-lint: repo-invariant static analysis for the AlertMix tree.
+
+This is the dependency-free Python mirror of the Rust implementation in
+`rust/src/lint/` + `rust/src/bin/pallas_lint.rs`. It exists so the lint
+gate runs even in build containers that have no cargo toolchain. The two
+implementations MUST emit byte-identical output; the golden tests
+(`python/tests/test_lint.py`, `rust/tests/lint_rules.rs`) enforce this on
+the fixture corpus under `tests/lint_fixtures/`.
+
+Design constraints shared with the Rust side:
+  * no regexes anywhere — every match is hand-rolled substring/char
+    scanning, so both implementations use the same primitives and cannot
+    drift on engine semantics;
+  * line-scanner, not a full parser: strings/comments are stripped with a
+    small state machine that survives multi-line strings, raw strings and
+    nested block comments; braces on stripped code drive a scope stack
+    (fn / anonymous / #[cfg(test)] regions).
+
+Rule catalog (see rust/DESIGN.md "Static analysis" for the full spec):
+  wall-clock        SystemTime / Instant::now in rust/src (determinism)
+  rng               thread_rng / rand::random / from_entropy / RandomState
+  unordered         HashMap/HashSet iteration inside ordered-output fns
+                    (persist/snapshot/fmt/table/save/to_json/serialize/
+                    display) without a nearby sort
+  hot-path-alloc    heap-allocating tokens inside a `// lint:hot-path` fn
+  hot-path-missing  a bench-asserted 0-alloc fn (manifest below) defined
+                    without the `// lint:hot-path` marker
+  double-borrow     two borrows of one RefCell receiver in one statement,
+                    at least one of them borrow_mut (runtime panic)
+  guard-across-call let-bound RefCell guard alive across a call back into
+                    the ActorSystem (tell/schedule/run_* — runtime panic)
+  panic             unwrap/expect/panic!/unreachable!/todo!/unimplemented!
+                    in rust/src pipeline code
+  bad-suppression   malformed lint:allow / unknown rule id
+  unused-suppression a lint:allow that suppressed nothing
+
+Suppression grammar: `// lint:allow(<rule>, <reason>)` — trailing on the
+offending line, or on its own line immediately above. The reason is
+mandatory and must not contain parentheses.
+"""
+
+import os
+import sys
+
+# ---------------------------------------------------------------------------
+# Rule catalog (keep in lock-step with rust/src/lint/mod.rs).
+# ---------------------------------------------------------------------------
+
+SUPPRESSIBLE_RULES = (
+    "wall-clock",
+    "rng",
+    "unordered",
+    "hot-path-alloc",
+    "hot-path-missing",
+    "double-borrow",
+    "guard-across-call",
+    "panic",
+)
+
+# Bench-asserted 0-alloc functions: every definition in rust/src must carry
+# a `// lint:hot-path` marker (bench_ingest / bench_alerts / bench_store /
+# bench_sqs pin these at 0 allocs per item in steady state).
+HOT_MANIFEST = (
+    "featurize_item_into",
+    "percolate",
+    "pick_due_into",
+    "drain_due_into",
+    "receive_prioritized_into",
+    "flush_at",
+)
+
+WALL_TOKENS = ("SystemTime", "Instant::now")
+RNG_TOKENS = ("thread_rng", "rand::random", "from_entropy", "RandomState")
+
+ALLOC_TOKENS = (
+    "format!",
+    "vec!",
+    "String::from",
+    "String::new",
+    "String::with_capacity",
+    "Vec::new",
+    "Vec::with_capacity",
+    "Vec::from",
+    "Box::new",
+    "Rc::new",
+    "Arc::new",
+    "HashMap::new",
+    "HashSet::new",
+    "BTreeMap::new",
+    ".to_string(",
+    ".to_owned(",
+    ".to_vec(",
+    ".collect(",
+    ".clone(",
+)
+
+PANIC_TOKENS = (
+    ".unwrap()",
+    # `.expect("` (with the opening quote) so user-defined `expect(...)`
+    # methods — e.g. the JSON parser's byte matcher — don't false-positive.
+    # Option/Result::expect always takes a message literal in this tree.
+    '.expect("',
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+)
+
+# Calls that can re-enter ActorSystem/World dispatch while a RefCell guard
+# is live (the two panic shapes PR 7's feedback bus had to design around).
+REENTRY_TOKENS = (
+    ".tell(",
+    ".tell_pri(",
+    ".tell_at(",
+    ".schedule_periodic(",
+    ".run_until(",
+    ".run_to_idle(",
+    ".spawn(",
+)
+
+# Enclosing-fn name fragments that mark an ordered-output context for the
+# `unordered` rule.
+ORDERED_CTX = (
+    "persist",
+    "snapshot",
+    "fmt",
+    "table",
+    "save",
+    "to_json",
+    "serialize",
+    "display",
+)
+
+ITER_METHODS = (
+    ".iter(",
+    ".iter_mut(",
+    ".keys(",
+    ".values(",
+    ".values_mut(",
+    ".drain(",
+    ".into_iter(",
+)
+
+SCAN_SUBDIRS = ("rust/src", "rust/benches", "rust/tests", "examples")
+
+MSG_WALL = "wall-clock time source in deterministic pipeline code; route through sim::Clock"
+MSG_RNG = "ambient RNG in deterministic pipeline code; use a seeded util::rng stream"
+MSG_UNORDERED = (
+    "unordered HashMap/HashSet iteration in ordered-output context; "
+    "sort before emitting or justify with lint:allow(unordered, ...)"
+)
+MSG_PANIC = (
+    "panicking call in pipeline code; convert to a counted error path "
+    "or justify with lint:allow(panic, <invariant>)"
+)
+
+
+def is_ident_char(c):
+    return c.isalnum() or c == "_" if c.isascii() else False
+
+
+def find_word(code, word, start=0):
+    """First occurrence of `word` at ident boundaries, or -1."""
+    i = start
+    while True:
+        k = code.find(word, i)
+        if k == -1:
+            return -1
+        before_ok = k == 0 or not is_ident_char(code[k - 1])
+        end = k + len(word)
+        after_ok = end >= len(code) or not is_ident_char(code[end])
+        if before_ok and after_ok:
+            return k
+        i = k + 1
+
+
+def contains_token(code, token):
+    """Substring match; ident-boundary-checked only at ends that are ident chars."""
+    i = 0
+    while True:
+        k = code.find(token, i)
+        if k == -1:
+            return False
+        before_ok = True
+        if is_ident_char(token[0]):
+            before_ok = k == 0 or not is_ident_char(code[k - 1])
+        after_ok = True
+        if is_ident_char(token[-1]):
+            end = k + len(token)
+            after_ok = end >= len(code) or not is_ident_char(code[end])
+        if before_ok and after_ok:
+            return True
+        i = k + 1
+
+
+def ident_before(code, idx):
+    """Identifier ending just before byte index idx (exclusive), or ''."""
+    j = idx
+    while j > 0 and is_ident_char(code[j - 1]):
+        j -= 1
+    return code[j:idx]
+
+
+def ident_after(code, idx):
+    """Identifier starting at the first ident char at/after idx, or ''."""
+    n = len(code)
+    i = idx
+    while i < n and code[i].isspace():
+        i += 1
+    j = i
+    while j < n and is_ident_char(code[j]):
+        j += 1
+    return code[i:j]
+
+
+# ---------------------------------------------------------------------------
+# String/comment stripper: one instance per file, state survives newlines.
+# ---------------------------------------------------------------------------
+
+MODE_NORMAL = 0
+MODE_BLOCK = 1
+MODE_STRING = 2
+MODE_RAW = 3
+
+
+class Stripper:
+    def __init__(self):
+        self.mode = MODE_NORMAL
+        self.block_depth = 0
+        self.raw_hashes = 0
+
+    def strip(self, raw):
+        """Return (code, comment) for one source line."""
+        code = []
+        comment = ""
+        i = 0
+        n = len(raw)
+        while i < n:
+            c = raw[i]
+            if self.mode == MODE_BLOCK:
+                if raw.startswith("/*", i):
+                    self.block_depth += 1
+                    i += 2
+                elif raw.startswith("*/", i):
+                    self.block_depth -= 1
+                    i += 2
+                    if self.block_depth == 0:
+                        self.mode = MODE_NORMAL
+                else:
+                    i += 1
+                continue
+            if self.mode == MODE_STRING:
+                if c == "\\":
+                    i += 2
+                elif c == '"':
+                    self.mode = MODE_NORMAL
+                    code.append('"')
+                    i += 1
+                else:
+                    i += 1
+                continue
+            if self.mode == MODE_RAW:
+                if c == '"' and raw[i + 1 : i + 1 + self.raw_hashes] == "#" * self.raw_hashes:
+                    self.mode = MODE_NORMAL
+                    code.append('"')
+                    i += 1 + self.raw_hashes
+                else:
+                    i += 1
+                continue
+            # MODE_NORMAL
+            if raw.startswith("//", i):
+                comment = raw[i + 2 :]
+                break
+            if raw.startswith("/*", i):
+                self.mode = MODE_BLOCK
+                self.block_depth = 1
+                i += 2
+                continue
+            if c == '"':
+                self.mode = MODE_STRING
+                code.append('"')
+                i += 1
+                continue
+            if c == "r" and not (i > 0 and is_ident_char(raw[i - 1])):
+                j = i + 1
+                h = 0
+                while j < n and raw[j] == "#":
+                    h += 1
+                    j += 1
+                if j < n and raw[j] == '"':
+                    self.mode = MODE_RAW
+                    self.raw_hashes = h
+                    code.append('"')
+                    i = j + 1
+                    continue
+                code.append(c)
+                i += 1
+                continue
+            if c == "'":
+                # char literal ('x', '\n', '\u{..}') or a lifetime ('a)
+                if i + 1 < n and raw[i + 1] == "\\":
+                    j = raw.find("'", i + 2)
+                    if j != -1 and j - i <= 12:
+                        i = j + 1
+                        continue
+                elif i + 2 < n and raw[i + 2] == "'":
+                    i += 3
+                    continue
+                i += 1  # lifetime / stray quote: drop it
+                continue
+            code.append(c)
+            i += 1
+        return "".join(code), comment
+
+
+# ---------------------------------------------------------------------------
+# Suppression comments.
+# ---------------------------------------------------------------------------
+
+
+def parse_markers(comment):
+    """Parse lint markers out of a line-comment text.
+
+    Returns (allows, errors, hot) where allows is a list of rule ids,
+    errors is a list of (kind, detail) with kind in
+    {"malformed", "unknown-rule"}, and hot is True when the comment
+    carries a `lint:hot-path` marker.
+    """
+    allows = []
+    errors = []
+    hot = False
+    idx = 0
+    while True:
+        k = comment.find("lint:", idx)
+        if k == -1:
+            break
+        rest = comment[k + 5 :]
+        if rest.startswith("hot-path"):
+            hot = True
+            idx = k + 5 + len("hot-path")
+            continue
+        if not rest.startswith("allow"):
+            idx = k + 5
+            continue
+        j = k + 5 + len("allow")
+        if j >= len(comment) or comment[j] != "(":
+            errors.append(("malformed", ""))
+            idx = j
+            continue
+        close = comment.find(")", j)
+        if close == -1:
+            errors.append(("malformed", ""))
+            idx = j + 1
+            continue
+        inner = comment[j + 1 : close]
+        comma = inner.find(",")
+        if comma == -1:
+            errors.append(("malformed", ""))
+            idx = close + 1
+            continue
+        rule = inner[:comma].strip()
+        reason = inner[comma + 1 :].strip()
+        if not reason:
+            errors.append(("malformed", ""))
+        elif rule not in SUPPRESSIBLE_RULES:
+            errors.append(("unknown-rule", rule))
+        else:
+            allows.append(rule)
+        idx = close + 1
+    return allows, errors, hot
+
+
+# ---------------------------------------------------------------------------
+# Per-file analysis.
+# ---------------------------------------------------------------------------
+
+
+def collect_hash_idents(lines):
+    """Identifiers declared as HashMap/HashSet anywhere in the file.
+
+    Catches struct fields / params (`name: HashMap<..>`, with optional path
+    prefix) and let-bindings (`let [mut] name = HashMap::new()` etc.).
+    """
+    idents = set()
+    for code, _comment in lines:
+        for word in ("HashMap", "HashSet"):
+            start = 0
+            while True:
+                k = find_word(code, word, start)
+                if k == -1:
+                    break
+                start = k + len(word)
+                # walk back over a `path::segment::` prefix
+                j = k
+                while j >= 2 and code[j - 1] == ":" and code[j - 2] == ":":
+                    j -= 2
+                    while j > 0 and is_ident_char(code[j - 1]):
+                        j -= 1
+                # skip whitespace backward
+                p = j
+                while p > 0 and code[p - 1].isspace():
+                    p -= 1
+                if p > 0 and code[p - 1] == ":" and (p < 2 or code[p - 2] != ":"):
+                    name = ident_before(code, p - 1 - _trailing_space(code, p - 1))
+                    if name:
+                        idents.add(name)
+                    continue
+                # let-binding form: `let [mut] name ... = [path::]Hash{Map,Set}::`
+                eq = code.rfind("=", 0, j)
+                if eq != -1:
+                    let_at = find_word(code, "let")
+                    if let_at != -1 and let_at < eq:
+                        name = ident_after(code, let_at + 3)
+                        if name == "mut":
+                            name = ident_after(code, find_word(code, "mut", let_at) + 3)
+                        if name:
+                            idents.add(name)
+    return idents
+
+
+def _trailing_space(code, idx):
+    """Count spaces immediately before byte index idx (exclusive)."""
+    n = 0
+    while idx - 1 - n >= 0 and code[idx - 1 - n].isspace():
+        n += 1
+    return n
+
+
+class Scope:
+    __slots__ = ("kind", "name", "hot")
+
+    def __init__(self, kind, name, hot):
+        self.kind = kind  # "fn" | "anon" | "test"
+        self.name = name
+        self.hot = hot
+
+
+class Allow:
+    __slots__ = ("rule", "line", "used", "in_test")
+
+    def __init__(self, rule, line):
+        self.rule = rule
+        self.line = line
+        self.used = False
+        self.in_test = False
+
+
+class Guard:
+    __slots__ = ("name", "depth", "active")
+
+    def __init__(self, name, depth):
+        self.name = name
+        self.depth = depth
+        self.active = True
+
+
+def analyze_file(relpath, text):
+    """Return (diagnostics, suppressed_count) for one file.
+
+    Diagnostics are (relpath, line, rule, message) tuples, unsorted.
+    """
+    in_src = relpath.startswith("rust/src/")
+    stripper = Stripper()
+    raw_lines = text.split("\n")
+    lines = [stripper.strip(raw) for raw in raw_lines]
+    hash_idents = collect_hash_idents(lines)
+
+    diags = []
+    suppressed = [0]
+    allows_by_line = {}
+    all_allows = []
+    pending_allows = []
+    pending_hot = False
+    pending_fn = None
+    pending_fn_hot = False
+    pending_test = False
+    scopes = []
+    guards = []
+    stmt_buf = []
+    stmt_start = 0
+
+    def attach_allow(rule, line):
+        a = Allow(rule, line)
+        allows_by_line.setdefault(line, []).append(a)
+        all_allows.append(a)
+
+    def emit(line, rule, message):
+        for a in allows_by_line.get(line, ()):
+            if a.rule == rule:
+                a.used = True
+                suppressed[0] += 1
+                return
+        diags.append((relpath, line, rule, message))
+
+    def snapshot():
+        in_test = any(s.kind == "test" for s in scopes)
+        hot = any(s.hot for s in scopes)
+        names = [s.name for s in scopes if s.kind == "fn" and s.name]
+        return in_test, hot, names
+
+    for lineno0, (code, comment) in enumerate(lines):
+        lineno = lineno0 + 1
+        trimmed = code.strip()
+
+        # 1. markers
+        allows, errors, hot_marker = parse_markers(comment)
+        for kind, detail in errors:
+            if kind == "malformed":
+                emit(lineno, "bad-suppression",
+                     "malformed lint marker; expected lint:allow(<rule>, <reason>)")
+            else:
+                emit(lineno, "bad-suppression",
+                     "unknown rule '" + detail + "' in lint:allow")
+        if hot_marker:
+            pending_hot = True
+        if allows:
+            if trimmed:
+                for r in allows:
+                    attach_allow(r, lineno)
+            else:
+                for r in allows:
+                    pending_allows.append(r)
+        elif trimmed and pending_allows:
+            for r in pending_allows:
+                attach_allow(r, lineno)
+            pending_allows = []
+        if not trimmed:
+            # blank / comment-only line: nothing below applies
+            continue
+        if pending_allows:
+            for r in pending_allows:
+                attach_allow(r, lineno)
+            pending_allows = []
+
+        before_test, before_hot, before_names = snapshot()
+
+        # 2. structure: cfg(test) + fn detection
+        if "#[cfg(test)]" in code:
+            pending_test = True
+        fn_at = find_word(code, "fn")
+        if fn_at != -1 and pending_fn is None:
+            name = ident_after(code, fn_at + 2)
+            if name:
+                pending_fn = name
+                pending_fn_hot = pending_hot
+                pending_hot = False
+                if (
+                    in_src
+                    and name in HOT_MANIFEST
+                    and not pending_fn_hot
+                    and not before_test
+                    and not pending_test
+                ):
+                    emit(lineno, "hot-path-missing",
+                         "bench-asserted 0-alloc fn `" + name
+                         + "` defined without a // lint:hot-path marker")
+
+        # 3. braces drive the scope stack
+        for c in code:
+            if c == "{":
+                if pending_test:
+                    scopes.append(Scope("test", None, False))
+                    pending_test = False
+                    pending_fn = None
+                    pending_fn_hot = False
+                elif pending_fn is not None:
+                    scopes.append(Scope("fn", pending_fn, pending_fn_hot))
+                    pending_fn = None
+                    pending_fn_hot = False
+                else:
+                    scopes.append(Scope("anon", None, False))
+            elif c == "}":
+                if scopes:
+                    scopes.pop()
+                depth = len(scopes)
+                for g in guards:
+                    if g.depth > depth:
+                        g.active = False
+
+        after_test, after_hot, after_names = snapshot()
+        in_test = before_test or after_test
+        hot_here = before_hot or after_hot
+        ctx_names = before_names + [n for n in after_names if n not in before_names]
+
+        for a in allows_by_line.get(lineno, ()):
+            a.in_test = in_test
+
+        # trait-decl `fn name(...);` never opens a body
+        if pending_fn is not None and trimmed.endswith(";"):
+            pending_fn = None
+            pending_fn_hot = False
+
+        # 4. guard-across-call: check live guards, then record new bindings
+        if in_src and not in_test:
+            for g in guards:
+                if not g.active:
+                    continue
+                if contains_token(code, "drop(" ) and ident_after(code, code.find("drop(") + 5) == g.name:
+                    g.active = False
+                    continue
+                for tok in REENTRY_TOKENS:
+                    if tok in code:
+                        emit(lineno, "guard-across-call",
+                             "RefCell guard `" + g.name
+                             + "` held across ActorSystem re-entry (" + tok
+                             + "...); drop it before dispatching")
+                        g.active = False
+                        break
+            # Only a binding whose value IS the guard (`let g = x.borrow_mut();`)
+            # outlives the statement; `let n = x.borrow_mut().pop();` drops the
+            # temporary guard at the `;` and is not tracked.
+            if trimmed.startswith("let ") and trimmed.endswith(".borrow_mut();"):
+                name = ident_after(code, code.find("let ") + 4)
+                if name == "mut":
+                    m = find_word(code, "mut")
+                    name = ident_after(code, m + 3)
+                if name and name != "_":
+                    guards.append(Guard(name, len(scopes)))
+
+        # 5. statement accumulation for double-borrow
+        if in_src:
+            if not stmt_buf:
+                stmt_start = lineno
+            # join trimmed so `x\n.borrow_mut()` chains keep their receiver
+            stmt_buf.append(trimmed)
+            if trimmed.endswith(";") or trimmed.endswith("{") or trimmed.endswith("}") or len(stmt_buf) > 40:
+                stmt = "".join(stmt_buf)
+                stmt_buf = []
+                if not in_test:
+                    check_double_borrow(stmt, stmt_start, emit)
+
+        # 6. token rules
+        if in_src and not in_test:
+            for tok in WALL_TOKENS:
+                if contains_token(code, tok):
+                    emit(lineno, "wall-clock", MSG_WALL)
+                    break
+            for tok in RNG_TOKENS:
+                if contains_token(code, tok):
+                    emit(lineno, "rng", MSG_RNG)
+                    break
+            for tok in PANIC_TOKENS:
+                if tok in code:
+                    emit(lineno, "panic", MSG_PANIC)
+                    break
+            if any(_name_is_ordered_ctx(n) for n in ctx_names):
+                check_unordered(code, lines, lineno0, hash_idents, emit)
+        if hot_here and not in_test:
+            for tok in ALLOC_TOKENS:
+                if tok in code:
+                    emit(lineno, "hot-path-alloc",
+                         "heap allocation in lint:hot-path region (" + tok.strip(".(") + ")")
+                    break
+
+    # 7. unused suppressions
+    for a in all_allows:
+        if not a.used and not a.in_test:
+            diags.append((relpath, a.line, "unused-suppression",
+                          "lint:allow(" + a.rule + ") suppressed no diagnostic"))
+    return diags, suppressed[0]
+
+
+def _name_is_ordered_ctx(name):
+    lower = name.lower()
+    return any(frag in lower for frag in ORDERED_CTX)
+
+
+def check_unordered(code, lines, lineno0, hash_idents, emit):
+    for meth in ITER_METHODS:
+        start = 0
+        while True:
+            k = code.find(meth, start)
+            if k == -1:
+                break
+            start = k + 1
+            recv = ident_before(code, k)
+            if recv and recv in hash_idents:
+                # "the site sorts": a `sort` on this line or the next 3
+                window = code
+                for off in (1, 2, 3):
+                    if lineno0 + off < len(lines):
+                        window += " " + lines[lineno0 + off][0]
+                if "sort" not in window:
+                    emit(lineno0 + 1, "unordered", MSG_UNORDERED)
+                return
+
+
+def check_double_borrow(stmt, start_line, emit):
+    """Two borrows of the same receiver in one statement, >=1 mutable."""
+    recvs = {}
+    i = 0
+    while True:
+        k = stmt.find(".borrow", i)
+        if k == -1:
+            break
+        j = k + len(".borrow")
+        mutable = stmt[j : j + 4] == "_mut"
+        if mutable:
+            j += 4
+        if stmt[j : j + 1] != "(":
+            i = k + 1
+            continue
+        # receiver: dotted path immediately before the call
+        p = k
+        segs = []
+        while True:
+            name = ident_before(stmt, p)
+            if not name:
+                break
+            segs.insert(0, name)
+            p -= len(name)
+            if p > 0 and stmt[p - 1] == ".":
+                p -= 1
+            else:
+                break
+        recv = ".".join(segs)
+        if recv:
+            n_total, n_mut = recvs.get(recv, (0, 0))
+            recvs[recv] = (n_total + 1, n_mut + (1 if mutable else 0))
+        i = j
+    for recv in sorted(recvs):
+        n_total, n_mut = recvs[recv]
+        if n_total >= 2 and n_mut >= 1:
+            emit(start_line, "double-borrow",
+                 "same-statement aliasing borrow of `" + recv + "` (panics at runtime)")
+            return
+
+
+# ---------------------------------------------------------------------------
+# Driver.
+# ---------------------------------------------------------------------------
+
+
+def collect_files(root):
+    out = []
+    for sub in SCAN_SUBDIRS:
+        base = os.path.join(root, sub)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames.sort()
+            for f in sorted(filenames):
+                if f.endswith(".rs"):
+                    rel = os.path.relpath(os.path.join(dirpath, f), root)
+                    out.append(rel.replace(os.sep, "/"))
+    out.sort()
+    return out
+
+
+def json_escape(s):
+    out = []
+    for c in s:
+        if c == '"':
+            out.append('\\"')
+        elif c == "\\":
+            out.append("\\\\")
+        else:
+            out.append(c)
+    return "".join(out)
+
+
+def render(diags, fmt):
+    if fmt == "json":
+        if not diags:
+            return "[]\n"
+        rows = []
+        for path, line, rule, message in diags:
+            rows.append(
+                '  {"path": "' + json_escape(path) + '", "line": ' + str(line)
+                + ', "rule": "' + rule + '", "message": "' + json_escape(message) + '"}'
+            )
+        return "[\n" + ",\n".join(rows) + "\n]\n"
+    return "".join(
+        path + ":" + str(line) + ": [" + rule + "] " + message + "\n"
+        for path, line, rule, message in diags
+    )
+
+
+def run(root, fmt):
+    files = collect_files(root)
+    diags = []
+    suppressed = 0
+    for rel in files:
+        try:
+            with open(os.path.join(root, rel), encoding="utf-8") as fh:
+                text = fh.read()
+        except OSError as e:
+            sys.stderr.write("pallas-lint: cannot read " + rel + ": " + str(e) + "\n")
+            return 2
+        d, s = analyze_file(rel, text)
+        diags.extend(d)
+        suppressed += s
+    diags.sort(key=lambda t: (t[0], t[1], t[2], t[3]))
+    sys.stdout.write(render(diags, fmt))
+    sys.stderr.write(
+        "pallas-lint: " + str(len(files)) + " files, " + str(len(diags))
+        + " diagnostics, " + str(suppressed) + " suppressed\n"
+    )
+    return 1 if diags else 0
+
+
+def main(argv):
+    root = "."
+    fmt = "text"
+    i = 1
+    while i < len(argv):
+        a = argv[i]
+        if a == "--root" and i + 1 < len(argv):
+            root = argv[i + 1]
+            i += 2
+        elif a == "--format" and i + 1 < len(argv):
+            fmt = argv[i + 1]
+            if fmt not in ("text", "json"):
+                sys.stderr.write("pallas-lint: unknown format " + fmt + "\n")
+                return 2
+            i += 2
+        else:
+            sys.stderr.write("usage: pallas_lint.py [--root DIR] [--format text|json]\n")
+            return 2
+    return run(root, fmt)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

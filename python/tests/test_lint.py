@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""Self-tests for the Python pallas-lint mirror.
+
+Standalone-runnable (no pytest): `python3 python/tests/test_lint.py`.
+Covers the golden fixture corpus, the seeded per-rule regressions, the
+full-tree cleanliness gate, and the CLI contract (exit codes, summary
+line). The Rust side (`rust/tests/lint_rules.rs`) re-runs the same
+goldens and additionally diffs its output against this mirror's.
+"""
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+LINT = os.path.join(REPO, "python", "lint", "pallas_lint.py")
+FIXTURES = os.path.join(REPO, "tests", "lint_fixtures")
+
+FAILURES = []
+
+
+def check(name, cond, detail=""):
+    if cond:
+        print("ok   " + name)
+    else:
+        print("FAIL " + name + ("  [" + detail + "]" if detail else ""))
+        FAILURES.append(name)
+
+
+def run_lint(root, fmt=None):
+    cmd = [sys.executable, LINT, "--root", root]
+    if fmt:
+        cmd += ["--format", fmt]
+    p = subprocess.run(cmd, capture_output=True, text=True)
+    return p.returncode, p.stdout, p.stderr
+
+
+def read(path):
+    with open(path, encoding="utf-8") as fh:
+        return fh.read()
+
+
+# Each rule family must catch its seeded bad-fixture regression at the
+# exact file:line (acceptance criterion for the lint PR).
+SEEDED = [
+    "rust/src/determinism_bad.rs:4: [wall-clock]",
+    "rust/src/determinism_bad.rs:11: [rng]",
+    "rust/src/persist_unordered.rs:14: [unordered]",
+    "rust/src/hotpath.rs:11: [hot-path-alloc]",
+    "rust/src/hotpath_manifest.rs:9: [hot-path-missing]",
+    "rust/src/borrow.rs:20: [double-borrow]",
+    "rust/src/borrow.rs:26: [double-borrow]",
+    "rust/src/borrow.rs:40: [guard-across-call]",
+    "rust/src/pipeline/panics.rs:13: [panic]",
+    "rust/src/pipeline/panics.rs:15: [panic]",
+    "rust/src/pipeline/panics.rs:17: [panic]",
+    "rust/src/suppression.rs:5: [bad-suppression]",
+    "rust/src/suppression.rs:10: [bad-suppression]",
+    "rust/src/suppression.rs:16: [unused-suppression]",
+    "examples/example_gate.rs:10: [unused-suppression]",
+]
+
+# Good shapes that must stay silent: suppressed sites, sorted iteration,
+# the cfg(test)-module exemption, unmarked non-manifest fns.
+MUST_NOT_FIRE = [
+    "determinism_good.rs",
+    "panics.rs:34",  # justified invariant, suppressed
+    "panics.rs:47",  # unwrap inside #[cfg(test)] mod
+    "persist_unordered.rs:22",  # sorted snapshot
+    "borrow.rs:33",  # two different cells in one statement
+    "borrow.rs:48",  # guard dropped before dispatch
+]
+
+
+def main():
+    # 1. golden text output
+    rc, out, err = run_lint(FIXTURES)
+    want_txt = read(os.path.join(FIXTURES, "expected.txt"))
+    check("fixture text output matches golden", out == want_txt,
+          "got %d bytes, want %d" % (len(out), len(want_txt)))
+    check("fixture run exits 1 (diagnostics present)", rc == 1, "rc=%d" % rc)
+    check("fixture summary counts files/diags/suppressed",
+          err.strip() == "pallas-lint: 9 files, 20 diagnostics, 4 suppressed",
+          err.strip())
+
+    # 2. golden json output
+    rc, out_json, _ = run_lint(FIXTURES, "json")
+    want_json = read(os.path.join(FIXTURES, "expected.json"))
+    check("fixture json output matches golden", out_json == want_json)
+    check("fixture json run exits 1", rc == 1, "rc=%d" % rc)
+
+    # 3. seeded per-rule regressions, independent of the golden file
+    for needle in SEEDED:
+        check("seeded: " + needle, needle in out)
+    for needle in MUST_NOT_FIRE:
+        check("silent: " + needle, needle not in out)
+
+    # 4. the real tree is lint-clean
+    rc, out, err = run_lint(REPO)
+    check("full tree emits no diagnostics", out == "", out[:200])
+    check("full tree run exits 0", rc == 0, "rc=%d err=%s" % (rc, err.strip()))
+    check("full tree summary reports 0 diagnostics",
+          " 0 diagnostics, " in err, err.strip())
+
+    # 5. CLI contract: bad --format is a usage error
+    rc, _, _ = run_lint(FIXTURES, "xml")
+    check("unknown --format exits 2", rc == 2, "rc=%d" % rc)
+
+    print()
+    if FAILURES:
+        print("test_lint: %d checks FAILED: %s" % (len(FAILURES), ", ".join(FAILURES)))
+        return 1
+    print("test_lint: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -236,7 +236,7 @@ impl OptimalSizeExploringResizer {
             let best = self
                 .perf_log
                 .iter()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(s, _)| *s)
                 .unwrap_or(current_size);
             ((current_size + best) / 2).max(1)

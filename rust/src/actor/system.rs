@@ -404,6 +404,7 @@ impl<W> ActorSystem<W> {
             let cell = &mut self.cells[cell_idx as usize];
             cell.queue_wait_ms += wait;
             let routee = &mut cell.routees[slot];
+            // lint:allow(panic, dispatch selects only slots where actor.is_some - see claim_idle_routee - and slots vacate only via stop/restart which never race a claimed dispatch in this single-threaded runtime)
             let actor = routee.actor.as_mut().expect("idle routee has actor");
             actor.receive(&mut ctx, world, env.msg)
         };

@@ -134,6 +134,7 @@ impl AlertStore {
             }
         }
         if let Some(&id) = self.open.get(&query) {
+            // lint:allow(panic, open[] and instances[] are inserted and removed together - an open id without an instance is impossible by construction)
             let inst = self.instances.get_mut(&id).expect("open instance exists");
             inst.fires += 1;
             inst.last_fired_at = now;

@@ -63,6 +63,7 @@ impl AlertEngine {
     /// Percolate one document; every fired query lands in the lifecycle
     /// store. Returns how many queries fired. Zero registered rules →
     /// a single length check and out.
+    // lint:hot-path
     pub fn percolate(&mut self, doc: &SinkDoc, now: SimTime) -> usize {
         if self.index.is_empty() {
             return 0;

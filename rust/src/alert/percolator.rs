@@ -314,6 +314,7 @@ impl Percolator {
     /// Match one document against every registered query. Fired query ids
     /// land in [`Self::last_fired`]; returns how many fired. Zero-alloc in
     /// steady state (scratch buffers + warmed rate rings).
+    // lint:hot-path
     pub fn percolate(&mut self, doc: &SinkDoc, now: SimTime) -> usize {
         self.docs += 1;
         self.begin_doc();

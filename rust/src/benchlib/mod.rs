@@ -13,12 +13,12 @@ pub fn time<F: FnMut()>(repeats: usize, mut f: F) -> (f64, f64) {
     f(); // warmup
     let mut samples: Vec<f64> = (0..repeats.max(1))
         .map(|_| {
-            let t = Instant::now();
+            let t = Instant::now(); // lint:allow(wall-clock, benchlib exists to measure real elapsed time; never feeds pipeline state)
             f();
             t.elapsed().as_secs_f64()
         })
         .collect();
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     (samples[samples.len() / 2], samples[0])
 }
 

@@ -1,0 +1,32 @@
+//! CLI entry point for pallas-lint (see `alertmix::lint`).
+//!
+//! Usage mirrors the Python reference implementation exactly:
+//!   pallas_lint [--root DIR] [--format text|json]
+//! Exit codes: 0 clean, 1 diagnostics emitted, 2 usage/io error.
+
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().collect();
+    let mut root = String::from(".");
+    let mut fmt = String::from("text");
+    let mut i = 1;
+    while i < argv.len() {
+        let a = &argv[i];
+        if a == "--root" && i + 1 < argv.len() {
+            root = argv[i + 1].clone();
+            i += 2;
+        } else if a == "--format" && i + 1 < argv.len() {
+            fmt = argv[i + 1].clone();
+            if fmt != "text" && fmt != "json" {
+                eprintln!("pallas-lint: unknown format {}", fmt);
+                return ExitCode::from(2);
+            }
+            i += 2;
+        } else {
+            eprintln!("usage: pallas_lint [--root DIR] [--format text|json]");
+            return ExitCode::from(2);
+        }
+    }
+    ExitCode::from(alertmix::lint::run(&root, &fmt) as u8)
+}

@@ -87,22 +87,21 @@ pub fn parse_rss(xml: &str) -> Result<RssFeed, XmlError> {
             }
             XmlEvent::Text(text) => {
                 let leaf = path.last().map(String::as_str).unwrap_or("");
-                let in_item = cur.is_some();
-                match (in_item, leaf) {
-                    (true, "guid") => cur.as_mut().unwrap().guid.push_str(&text),
-                    (true, "title") => cur.as_mut().unwrap().title.push_str(&text),
-                    (true, "link") => cur.as_mut().unwrap().link.push_str(&text),
-                    (true, "description") => cur.as_mut().unwrap().description.push_str(&text),
-                    (true, "pubDate") => {
+                match (cur.as_mut(), leaf) {
+                    (Some(item), "guid") => item.guid.push_str(&text),
+                    (Some(item), "title") => item.title.push_str(&text),
+                    (Some(item), "link") => item.link.push_str(&text),
+                    (Some(item), "description") => item.description.push_str(&text),
+                    (Some(item), "pubDate") => {
                         // Virtual timestamp rides after '@'.
                         if let Some(at) = text.rfind('@') {
                             if let Ok(ms) = text[at + 1..].trim().parse::<u64>() {
-                                cur.as_mut().unwrap().pub_ms = ms;
+                                item.pub_ms = ms;
                             }
                         }
                     }
-                    (false, "title") => feed.title.push_str(&text),
-                    (false, "link") => feed.link.push_str(&text),
+                    (None, "title") => feed.title.push_str(&text),
+                    (None, "link") => feed.link.push_str(&text),
                     _ => {}
                 }
             }

@@ -19,6 +19,7 @@ pub mod connector;
 pub mod dedup;
 pub mod fault;
 pub mod feedsim;
+pub mod lint;
 pub mod metrics;
 pub mod pipeline;
 pub mod runtime;

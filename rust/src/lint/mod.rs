@@ -1,0 +1,1091 @@
+//! pallas-lint: repo-invariant static analysis for the AlertMix tree.
+//!
+//! This is the Rust implementation; `python/lint/pallas_lint.py` is the
+//! dependency-free mirror that runs in build containers without cargo.
+//! The two MUST emit byte-identical output; the golden tests
+//! (`rust/tests/lint_rules.rs`, `python/tests/test_lint.py`) enforce this
+//! on the fixture corpus under `tests/lint_fixtures/`.
+//!
+//! Design constraints shared with the Python side:
+//!   * no regexes anywhere — every match is hand-rolled substring/char
+//!     scanning, so both implementations use the same primitives and
+//!     cannot drift on engine semantics;
+//!   * line-scanner, not a full parser: strings/comments are stripped
+//!     with a small state machine that survives multi-line strings, raw
+//!     strings and nested block comments; braces on stripped code drive
+//!     a scope stack (fn / anonymous / cfg(test) regions);
+//!   * the Python mirror indexes by code point, so this side scans
+//!     `Vec<char>` lines — byte indexing would diverge on the em-dashes
+//!     that appear in comments and suppression reasons.
+//!
+//! See `rust/DESIGN.md` ("Static analysis") for the rule catalog and the
+//! suppression grammar. NOTE: this module is itself linted, so comments
+//! here must never spell out a literal suppression/hot-path marker — the
+//! scanner would try to honor it.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::path::Path;
+
+// ---------------------------------------------------------------------------
+// Rule catalog (keep in lock-step with python/lint/pallas_lint.py).
+// ---------------------------------------------------------------------------
+
+pub const SUPPRESSIBLE_RULES: [&str; 8] = [
+    "wall-clock",
+    "rng",
+    "unordered",
+    "hot-path-alloc",
+    "hot-path-missing",
+    "double-borrow",
+    "guard-across-call",
+    "panic",
+];
+
+/// Bench-asserted 0-alloc functions: every definition in rust/src must
+/// carry a hot-path marker comment (bench_ingest / bench_alerts /
+/// bench_store / bench_sqs pin these at 0 allocs per item in steady state).
+pub const HOT_MANIFEST: [&str; 6] = [
+    "featurize_item_into",
+    "percolate",
+    "pick_due_into",
+    "drain_due_into",
+    "receive_prioritized_into",
+    "flush_at",
+];
+
+const WALL_TOKENS: [&str; 2] = ["SystemTime", "Instant::now"];
+const RNG_TOKENS: [&str; 4] = ["thread_rng", "rand::random", "from_entropy", "RandomState"];
+
+const ALLOC_TOKENS: [&str; 19] = [
+    "format!",
+    "vec!",
+    "String::from",
+    "String::new",
+    "String::with_capacity",
+    "Vec::new",
+    "Vec::with_capacity",
+    "Vec::from",
+    "Box::new",
+    "Rc::new",
+    "Arc::new",
+    "HashMap::new",
+    "HashSet::new",
+    "BTreeMap::new",
+    ".to_string(",
+    ".to_owned(",
+    ".to_vec(",
+    ".collect(",
+    ".clone(",
+];
+
+const PANIC_TOKENS: [&str; 6] = [
+    ".unwrap()",
+    // with the opening quote so user-defined `expect(...)` methods — e.g.
+    // the JSON parser's byte matcher — don't false-positive. Option/Result
+    // ::expect always takes a message literal in this tree.
+    ".expect(\"",
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+];
+
+// Calls that can re-enter ActorSystem/World dispatch while a RefCell guard
+// is live (the two panic shapes PR 7's feedback bus had to design around).
+const REENTRY_TOKENS: [&str; 7] = [
+    ".tell(",
+    ".tell_pri(",
+    ".tell_at(",
+    ".schedule_periodic(",
+    ".run_until(",
+    ".run_to_idle(",
+    ".spawn(",
+];
+
+// Enclosing-fn name fragments that mark an ordered-output context for the
+// `unordered` rule.
+const ORDERED_CTX: [&str; 8] = [
+    "persist",
+    "snapshot",
+    "fmt",
+    "table",
+    "save",
+    "to_json",
+    "serialize",
+    "display",
+];
+
+const ITER_METHODS: [&str; 7] = [
+    ".iter(",
+    ".iter_mut(",
+    ".keys(",
+    ".values(",
+    ".values_mut(",
+    ".drain(",
+    ".into_iter(",
+];
+
+const SCAN_SUBDIRS: [&str; 4] = ["rust/src", "rust/benches", "rust/tests", "examples"];
+
+const MSG_WALL: &str =
+    "wall-clock time source in deterministic pipeline code; route through sim::Clock";
+const MSG_RNG: &str = "ambient RNG in deterministic pipeline code; use a seeded util::rng stream";
+const MSG_UNORDERED: &str = "unordered HashMap/HashSet iteration in ordered-output context; \
+     sort before emitting or justify with lint:allow(unordered, ...)";
+const MSG_PANIC: &str = "panicking call in pipeline code; convert to a counted error path \
+     or justify with lint:allow(panic, <invariant>)";
+
+// ---------------------------------------------------------------------------
+// Char-slice scanning primitives (mirror the Python string helpers, which
+// index by code point).
+// ---------------------------------------------------------------------------
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn starts_at(hay: &[char], i: usize, s: &str) -> bool {
+    let mut j = i;
+    for c in s.chars() {
+        if j >= hay.len() || hay[j] != c {
+            return false;
+        }
+        j += 1;
+    }
+    true
+}
+
+/// First occurrence of `needle` at or after `start`, by char index.
+fn find_str(hay: &[char], needle: &str, start: usize) -> Option<usize> {
+    let n = needle.chars().count();
+    if n == 0 {
+        return Some(start);
+    }
+    let mut i = start;
+    while i + n <= hay.len() {
+        if starts_at(hay, i, needle) {
+            return Some(i);
+        }
+        i += 1;
+    }
+    None
+}
+
+/// First occurrence of `word` at ident boundaries, or None.
+fn find_word(code: &[char], word: &str, start: usize) -> Option<usize> {
+    let wlen = word.chars().count();
+    let mut i = start;
+    loop {
+        let k = find_str(code, word, i)?;
+        let before_ok = k == 0 || !is_ident_char(code[k - 1]);
+        let end = k + wlen;
+        let after_ok = end >= code.len() || !is_ident_char(code[end]);
+        if before_ok && after_ok {
+            return Some(k);
+        }
+        i = k + 1;
+    }
+}
+
+/// Substring match; ident-boundary-checked only at ends that are ident chars.
+fn contains_token(code: &[char], token: &str) -> bool {
+    let toks: Vec<char> = token.chars().collect();
+    let (first, last) = match (toks.first(), toks.last()) {
+        (Some(&f), Some(&l)) => (f, l),
+        _ => return false,
+    };
+    let mut i = 0;
+    loop {
+        let k = match find_str(code, token, i) {
+            Some(k) => k,
+            None => return false,
+        };
+        let before_ok = !is_ident_char(first) || k == 0 || !is_ident_char(code[k - 1]);
+        let end = k + toks.len();
+        let after_ok = !is_ident_char(last) || end >= code.len() || !is_ident_char(code[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        i = k + 1;
+    }
+}
+
+/// Identifier ending just before char index idx (exclusive), or "".
+fn ident_before(code: &[char], idx: usize) -> String {
+    let mut j = idx;
+    while j > 0 && is_ident_char(code[j - 1]) {
+        j -= 1;
+    }
+    code[j..idx].iter().collect()
+}
+
+/// Identifier starting at the first ident char at/after idx, or "".
+fn ident_after(code: &[char], idx: usize) -> String {
+    let n = code.len();
+    let mut i = idx;
+    while i < n && code[i].is_whitespace() {
+        i += 1;
+    }
+    let mut j = i;
+    while j < n && is_ident_char(code[j]) {
+        j += 1;
+    }
+    code[i..j].iter().collect()
+}
+
+// ---------------------------------------------------------------------------
+// String/comment stripper: one instance per file, state survives newlines.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Normal,
+    Block,
+    Str,
+    Raw,
+}
+
+struct Stripper {
+    mode: Mode,
+    block_depth: u32,
+    raw_hashes: usize,
+}
+
+impl Stripper {
+    fn new() -> Self {
+        Stripper { mode: Mode::Normal, block_depth: 0, raw_hashes: 0 }
+    }
+
+    /// Return (code, comment) for one source line.
+    fn strip(&mut self, raw_str: &str) -> (Vec<char>, String) {
+        let raw: Vec<char> = raw_str.chars().collect();
+        let mut code: Vec<char> = Vec::new();
+        let mut comment = String::new();
+        let mut i = 0;
+        let n = raw.len();
+        while i < n {
+            let c = raw[i];
+            if self.mode == Mode::Block {
+                if starts_at(&raw, i, "/*") {
+                    self.block_depth += 1;
+                    i += 2;
+                } else if starts_at(&raw, i, "*/") {
+                    self.block_depth -= 1;
+                    i += 2;
+                    if self.block_depth == 0 {
+                        self.mode = Mode::Normal;
+                    }
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            if self.mode == Mode::Str {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    self.mode = Mode::Normal;
+                    code.push('"');
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            if self.mode == Mode::Raw {
+                if c == '"' && hashes_follow(&raw, i + 1, self.raw_hashes) {
+                    self.mode = Mode::Normal;
+                    code.push('"');
+                    i += 1 + self.raw_hashes;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            // Mode::Normal
+            if starts_at(&raw, i, "//") {
+                comment = raw[i + 2..].iter().collect();
+                break;
+            }
+            if starts_at(&raw, i, "/*") {
+                self.mode = Mode::Block;
+                self.block_depth = 1;
+                i += 2;
+                continue;
+            }
+            if c == '"' {
+                self.mode = Mode::Str;
+                code.push('"');
+                i += 1;
+                continue;
+            }
+            if c == 'r' && !(i > 0 && is_ident_char(raw[i - 1])) {
+                let mut j = i + 1;
+                let mut h = 0;
+                while j < n && raw[j] == '#' {
+                    h += 1;
+                    j += 1;
+                }
+                if j < n && raw[j] == '"' {
+                    self.mode = Mode::Raw;
+                    self.raw_hashes = h;
+                    code.push('"');
+                    i = j + 1;
+                    continue;
+                }
+                code.push(c);
+                i += 1;
+                continue;
+            }
+            if c == '\'' {
+                // char literal ('x', '\n', '\u{..}') or a lifetime ('a)
+                if i + 1 < n && raw[i + 1] == '\\' {
+                    let mut advanced = false;
+                    if let Some(j) = find_str(&raw, "'", i + 2) {
+                        if j - i <= 12 {
+                            i = j + 1;
+                            advanced = true;
+                        }
+                    }
+                    if advanced {
+                        continue;
+                    }
+                } else if i + 2 < n && raw[i + 2] == '\'' {
+                    i += 3;
+                    continue;
+                }
+                i += 1; // lifetime / stray quote: drop it
+                continue;
+            }
+            code.push(c);
+            i += 1;
+        }
+        (code, comment)
+    }
+}
+
+fn hashes_follow(hay: &[char], i: usize, h: usize) -> bool {
+    if h == 0 {
+        return true;
+    }
+    if i + h > hay.len() {
+        return false;
+    }
+    hay[i..i + h].iter().all(|&c| c == '#')
+}
+
+// ---------------------------------------------------------------------------
+// Suppression comments.
+// ---------------------------------------------------------------------------
+
+enum MarkerErr {
+    Malformed,
+    Unknown(String),
+}
+
+/// Parse lint markers out of a line-comment text.
+///
+/// Returns (allows, errors, hot) where allows is a list of rule ids and
+/// hot is true when the comment carries the hot-path marker.
+fn parse_markers(comment: &str) -> (Vec<String>, Vec<MarkerErr>, bool) {
+    let com: Vec<char> = comment.chars().collect();
+    let mut allows: Vec<String> = Vec::new();
+    let mut errors: Vec<MarkerErr> = Vec::new();
+    let mut hot = false;
+    let mut idx = 0;
+    loop {
+        let k = match find_str(&com, "lint:", idx) {
+            Some(k) => k,
+            None => break,
+        };
+        let rest = k + 5;
+        if starts_at(&com, rest, "hot-path") {
+            hot = true;
+            idx = rest + 8;
+            continue;
+        }
+        if !starts_at(&com, rest, "allow") {
+            idx = rest;
+            continue;
+        }
+        let j = rest + 5;
+        if j >= com.len() || com[j] != '(' {
+            errors.push(MarkerErr::Malformed);
+            idx = j;
+            continue;
+        }
+        let close = match find_str(&com, ")", j) {
+            Some(c) => c,
+            None => {
+                errors.push(MarkerErr::Malformed);
+                idx = j + 1;
+                continue;
+            }
+        };
+        let inner: String = com[j + 1..close].iter().collect();
+        match inner.find(',') {
+            None => errors.push(MarkerErr::Malformed),
+            Some(comma) => {
+                let rule = inner[..comma].trim();
+                let reason = inner[comma + 1..].trim();
+                if reason.is_empty() {
+                    errors.push(MarkerErr::Malformed);
+                } else if !SUPPRESSIBLE_RULES.contains(&rule) {
+                    errors.push(MarkerErr::Unknown(rule.to_string()));
+                } else {
+                    allows.push(rule.to_string());
+                }
+            }
+        }
+        idx = close + 1;
+    }
+    (allows, errors, hot)
+}
+
+// ---------------------------------------------------------------------------
+// Per-file analysis.
+// ---------------------------------------------------------------------------
+
+/// Identifiers declared as HashMap/HashSet anywhere in the file.
+///
+/// Catches struct fields / params (`name: HashMap<..>`, with optional path
+/// prefix) and let-bindings (`let [mut] name = HashMap::new()` etc.).
+fn collect_hash_idents(lines: &[(Vec<char>, String)]) -> HashSet<String> {
+    let mut idents: HashSet<String> = HashSet::new();
+    for (code, _comment) in lines {
+        for word in ["HashMap", "HashSet"] {
+            let mut start = 0;
+            while let Some(k) = find_word(code, word, start) {
+                start = k + word.chars().count();
+                // walk back over a `path::segment::` prefix
+                let mut j = k;
+                while j >= 2 && code[j - 1] == ':' && code[j - 2] == ':' {
+                    j -= 2;
+                    while j > 0 && is_ident_char(code[j - 1]) {
+                        j -= 1;
+                    }
+                }
+                // skip whitespace backward
+                let mut p = j;
+                while p > 0 && code[p - 1].is_whitespace() {
+                    p -= 1;
+                }
+                if p > 0 && code[p - 1] == ':' && (p < 2 || code[p - 2] != ':') {
+                    let name = ident_before(code, p - 1 - trailing_space(code, p - 1));
+                    if !name.is_empty() {
+                        idents.insert(name);
+                    }
+                    continue;
+                }
+                // let-binding form: `let [mut] name ... = [path::]Hash{Map,Set}::`
+                let eq = rfind_char(code, '=', j);
+                if let Some(eq_at) = eq {
+                    if let Some(let_at) = find_word(code, "let", 0) {
+                        if let_at < eq_at {
+                            let mut name = ident_after(code, let_at + 3);
+                            if name == "mut" {
+                                if let Some(m) = find_word(code, "mut", let_at) {
+                                    name = ident_after(code, m + 3);
+                                }
+                            }
+                            if !name.is_empty() {
+                                idents.insert(name);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    idents
+}
+
+/// Last occurrence of `c` in code[..end), or None.
+fn rfind_char(code: &[char], c: char, end: usize) -> Option<usize> {
+    let mut i = end.min(code.len());
+    while i > 0 {
+        i -= 1;
+        if code[i] == c {
+            return Some(i);
+        }
+    }
+    None
+}
+
+/// Count whitespace chars immediately before char index idx (exclusive).
+fn trailing_space(code: &[char], idx: usize) -> usize {
+    let mut n = 0;
+    while idx >= 1 + n && code[idx - 1 - n].is_whitespace() {
+        n += 1;
+    }
+    n
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum ScopeKind {
+    Fn,
+    Anon,
+    Test,
+}
+
+struct Scope {
+    kind: ScopeKind,
+    name: Option<String>,
+    hot: bool,
+}
+
+struct Allow {
+    rule: String,
+    line: usize,
+    used: bool,
+    in_test: bool,
+}
+
+struct Guard {
+    name: String,
+    depth: usize,
+    active: bool,
+}
+
+/// One diagnostic, (path, line, rule, message).
+#[derive(Clone)]
+pub struct Diag {
+    pub path: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+struct Ctx<'a> {
+    relpath: &'a str,
+    allows_by_line: HashMap<usize, Vec<usize>>,
+    all_allows: Vec<Allow>,
+    diags: Vec<Diag>,
+    suppressed: usize,
+}
+
+impl<'a> Ctx<'a> {
+    fn attach_allow(&mut self, rule: &str, line: usize) {
+        let id = self.all_allows.len();
+        self.all_allows.push(Allow { rule: rule.to_string(), line, used: false, in_test: false });
+        self.allows_by_line.entry(line).or_default().push(id);
+    }
+
+    fn emit(&mut self, line: usize, rule: &'static str, message: String) {
+        if let Some(ids) = self.allows_by_line.get(&line) {
+            for &id in ids {
+                if self.all_allows[id].rule == rule {
+                    self.all_allows[id].used = true;
+                    self.suppressed += 1;
+                    return;
+                }
+            }
+        }
+        self.diags.push(Diag { path: self.relpath.to_string(), line, rule, message });
+    }
+}
+
+fn snapshot(scopes: &[Scope]) -> (bool, bool, Vec<String>) {
+    let in_test = scopes.iter().any(|s| s.kind == ScopeKind::Test);
+    let hot = scopes.iter().any(|s| s.hot);
+    let names: Vec<String> = scopes
+        .iter()
+        .filter(|s| s.kind == ScopeKind::Fn)
+        .filter_map(|s| s.name.clone())
+        .filter(|n| !n.is_empty())
+        .collect();
+    (in_test, hot, names)
+}
+
+fn name_is_ordered_ctx(name: &str) -> bool {
+    let lower = name.to_lowercase();
+    ORDERED_CTX.iter().any(|frag| lower.contains(frag))
+}
+
+/// Return (diagnostics, suppressed_count) for one file. Unsorted.
+pub fn analyze_file(relpath: &str, text: &str) -> (Vec<Diag>, usize) {
+    let in_src = relpath.starts_with("rust/src/");
+    let mut stripper = Stripper::new();
+    let lines: Vec<(Vec<char>, String)> = text.split('\n').map(|raw| stripper.strip(raw)).collect();
+    let hash_idents = collect_hash_idents(&lines);
+
+    let mut ctx = Ctx {
+        relpath,
+        allows_by_line: HashMap::new(),
+        all_allows: Vec::new(),
+        diags: Vec::new(),
+        suppressed: 0,
+    };
+    let mut pending_allows: Vec<String> = Vec::new();
+    let mut pending_hot = false;
+    let mut pending_fn: Option<String> = None;
+    let mut pending_fn_hot = false;
+    let mut pending_test = false;
+    let mut scopes: Vec<Scope> = Vec::new();
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut stmt_buf: Vec<String> = Vec::new();
+    let mut stmt_start = 0usize;
+
+    for (lineno0, (code, comment)) in lines.iter().enumerate() {
+        let lineno = lineno0 + 1;
+        let code_str: String = code.iter().collect();
+        let trimmed = code_str.trim();
+
+        // 1. markers
+        let (allows, errors, hot_marker) = parse_markers(comment);
+        for e in errors {
+            match e {
+                MarkerErr::Malformed => ctx.emit(
+                    lineno,
+                    "bad-suppression",
+                    "malformed lint marker; expected lint:allow(<rule>, <reason>)".to_string(),
+                ),
+                MarkerErr::Unknown(rule) => ctx.emit(
+                    lineno,
+                    "bad-suppression",
+                    format!("unknown rule '{}' in lint:allow", rule),
+                ),
+            }
+        }
+        if hot_marker {
+            pending_hot = true;
+        }
+        if !allows.is_empty() {
+            if !trimmed.is_empty() {
+                for r in &allows {
+                    ctx.attach_allow(r, lineno);
+                }
+            } else {
+                for r in allows {
+                    pending_allows.push(r);
+                }
+            }
+        } else if !trimmed.is_empty() && !pending_allows.is_empty() {
+            for r in pending_allows.drain(..) {
+                ctx.attach_allow(&r, lineno);
+            }
+        }
+        if trimmed.is_empty() {
+            // blank / comment-only line: nothing below applies
+            continue;
+        }
+        if !pending_allows.is_empty() {
+            for r in pending_allows.drain(..) {
+                ctx.attach_allow(&r, lineno);
+            }
+        }
+
+        let (before_test, before_hot, before_names) = snapshot(&scopes);
+
+        // 2. structure: cfg(test) + fn detection
+        if code_str.contains("#[cfg(test)]") {
+            pending_test = true;
+        }
+        if let Some(fn_at) = find_word(code, "fn", 0) {
+            if pending_fn.is_none() {
+                let name = ident_after(code, fn_at + 2);
+                if !name.is_empty() {
+                    pending_fn = Some(name.clone());
+                    pending_fn_hot = pending_hot;
+                    pending_hot = false;
+                    if in_src
+                        && HOT_MANIFEST.contains(&name.as_str())
+                        && !pending_fn_hot
+                        && !before_test
+                        && !pending_test
+                    {
+                        ctx.emit(
+                            lineno,
+                            "hot-path-missing",
+                            format!(
+                                "bench-asserted 0-alloc fn `{}` defined without a // lint:hot-path marker",
+                                name
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+
+        // 3. braces drive the scope stack
+        for &c in code.iter() {
+            if c == '{' {
+                if pending_test {
+                    scopes.push(Scope { kind: ScopeKind::Test, name: None, hot: false });
+                    pending_test = false;
+                    pending_fn = None;
+                    pending_fn_hot = false;
+                } else if let Some(name) = pending_fn.take() {
+                    scopes.push(Scope { kind: ScopeKind::Fn, name: Some(name), hot: pending_fn_hot });
+                    pending_fn_hot = false;
+                } else {
+                    scopes.push(Scope { kind: ScopeKind::Anon, name: None, hot: false });
+                }
+            } else if c == '}' {
+                scopes.pop();
+                let depth = scopes.len();
+                for g in guards.iter_mut() {
+                    if g.depth > depth {
+                        g.active = false;
+                    }
+                }
+            }
+        }
+
+        let (after_test, after_hot, after_names) = snapshot(&scopes);
+        let in_test = before_test || after_test;
+        let hot_here = before_hot || after_hot;
+        let mut ctx_names = before_names.clone();
+        for n in after_names {
+            if !ctx_names.contains(&n) {
+                ctx_names.push(n);
+            }
+        }
+
+        if let Some(ids) = ctx.allows_by_line.get(&lineno) {
+            let ids: Vec<usize> = ids.clone();
+            for id in ids {
+                ctx.all_allows[id].in_test = in_test;
+            }
+        }
+
+        // trait-decl `fn name(...);` never opens a body
+        if pending_fn.is_some() && trimmed.ends_with(';') {
+            pending_fn = None;
+            pending_fn_hot = false;
+        }
+
+        // 4. guard-across-call: check live guards, then record new bindings
+        if in_src && !in_test {
+            let mut fired: Vec<(usize, String, &'static str)> = Vec::new();
+            for g in guards.iter_mut() {
+                if !g.active {
+                    continue;
+                }
+                if contains_token(code, "drop(") {
+                    let dropped = match find_str(code, "drop(", 0) {
+                        Some(dp) => ident_after(code, dp + 5) == g.name,
+                        None => false,
+                    };
+                    if dropped {
+                        g.active = false;
+                        continue;
+                    }
+                }
+                for tok in REENTRY_TOKENS {
+                    if code_str.contains(tok) {
+                        fired.push((lineno, g.name.clone(), tok));
+                        g.active = false;
+                        break;
+                    }
+                }
+            }
+            for (line, name, tok) in fired {
+                ctx.emit(
+                    line,
+                    "guard-across-call",
+                    format!(
+                        "RefCell guard `{}` held across ActorSystem re-entry ({}...); drop it before dispatching",
+                        name, tok
+                    ),
+                );
+            }
+            // Only a binding whose value IS the guard outlives the statement;
+            // a value projected through a temporary guard is dropped at the
+            // semicolon and is not tracked.
+            if trimmed.starts_with("let ") && trimmed.ends_with(".borrow_mut();") {
+                let mut name = match find_str(code, "let ", 0) {
+                    Some(k) => ident_after(code, k + 4),
+                    None => String::new(),
+                };
+                if name == "mut" {
+                    if let Some(m) = find_word(code, "mut", 0) {
+                        name = ident_after(code, m + 3);
+                    }
+                }
+                if !name.is_empty() && name != "_" {
+                    guards.push(Guard { name, depth: scopes.len(), active: true });
+                }
+            }
+        }
+
+        // 5. statement accumulation for double-borrow
+        if in_src {
+            if stmt_buf.is_empty() {
+                stmt_start = lineno;
+            }
+            // join trimmed so multi-line borrow chains keep their receiver
+            stmt_buf.push(trimmed.to_string());
+            if trimmed.ends_with(';')
+                || trimmed.ends_with('{')
+                || trimmed.ends_with('}')
+                || stmt_buf.len() > 40
+            {
+                let stmt: String = stmt_buf.concat();
+                stmt_buf.clear();
+                if !in_test {
+                    check_double_borrow(&stmt, stmt_start, &mut ctx);
+                }
+            }
+        }
+
+        // 6. token rules
+        if in_src && !in_test {
+            for tok in WALL_TOKENS {
+                if contains_token(code, tok) {
+                    ctx.emit(lineno, "wall-clock", MSG_WALL.to_string());
+                    break;
+                }
+            }
+            for tok in RNG_TOKENS {
+                if contains_token(code, tok) {
+                    ctx.emit(lineno, "rng", MSG_RNG.to_string());
+                    break;
+                }
+            }
+            for tok in PANIC_TOKENS {
+                if code_str.contains(tok) {
+                    ctx.emit(lineno, "panic", MSG_PANIC.to_string());
+                    break;
+                }
+            }
+            if ctx_names.iter().any(|n| name_is_ordered_ctx(n)) {
+                check_unordered(code, &code_str, &lines, lineno0, &hash_idents, &mut ctx);
+            }
+        }
+        if hot_here && !in_test {
+            for tok in ALLOC_TOKENS {
+                if code_str.contains(tok) {
+                    let shown: &str = tok.trim_matches(|c| c == '.' || c == '(');
+                    ctx.emit(
+                        lineno,
+                        "hot-path-alloc",
+                        format!("heap allocation in lint:hot-path region ({})", shown),
+                    );
+                    break;
+                }
+            }
+        }
+    }
+
+    // 7. unused suppressions
+    let Ctx { relpath, all_allows, mut diags, suppressed, .. } = ctx;
+    for a in &all_allows {
+        if !a.used && !a.in_test {
+            diags.push(Diag {
+                path: relpath.to_string(),
+                line: a.line,
+                rule: "unused-suppression",
+                message: format!("lint:allow({}) suppressed no diagnostic", a.rule),
+            });
+        }
+    }
+    (diags, suppressed)
+}
+
+fn check_unordered(
+    code: &[char],
+    code_str: &str,
+    lines: &[(Vec<char>, String)],
+    lineno0: usize,
+    hash_idents: &HashSet<String>,
+    ctx: &mut Ctx,
+) {
+    for meth in ITER_METHODS {
+        let mut start = 0;
+        while let Some(k) = find_str(code, meth, start) {
+            start = k + 1;
+            let recv = ident_before(code, k);
+            if !recv.is_empty() && hash_idents.contains(&recv) {
+                // "the site sorts": a `sort` on this line or the next 3
+                let mut window = code_str.to_string();
+                for off in 1..=3 {
+                    if lineno0 + off < lines.len() {
+                        window.push(' ');
+                        let next: String = lines[lineno0 + off].0.iter().collect();
+                        window.push_str(&next);
+                    }
+                }
+                if !window.contains("sort") {
+                    ctx.emit(lineno0 + 1, "unordered", MSG_UNORDERED.to_string());
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Two borrows of the same receiver in one statement, >=1 mutable.
+fn check_double_borrow(stmt: &str, start_line: usize, ctx: &mut Ctx) {
+    let s: Vec<char> = stmt.chars().collect();
+    let mut recvs: BTreeMap<String, (u32, u32)> = BTreeMap::new();
+    let mut i = 0;
+    while let Some(k) = find_str(&s, ".borrow", i) {
+        let mut j = k + 7;
+        let mutable = starts_at(&s, j, "_mut");
+        if mutable {
+            j += 4;
+        }
+        if s.get(j) != Some(&'(') {
+            i = k + 1;
+            continue;
+        }
+        // receiver: dotted path immediately before the call
+        let mut p = k;
+        let mut segs: Vec<String> = Vec::new();
+        loop {
+            let name = ident_before(&s, p);
+            if name.is_empty() {
+                break;
+            }
+            p -= name.chars().count();
+            segs.insert(0, name);
+            if p > 0 && s[p - 1] == '.' {
+                p -= 1;
+            } else {
+                break;
+            }
+        }
+        let recv = segs.join(".");
+        if !recv.is_empty() {
+            let e = recvs.entry(recv).or_insert((0, 0));
+            e.0 += 1;
+            if mutable {
+                e.1 += 1;
+            }
+        }
+        i = j;
+    }
+    for (recv, (n_total, n_mut)) in recvs {
+        if n_total >= 2 && n_mut >= 1 {
+            ctx.emit(
+                start_line,
+                "double-borrow",
+                format!("same-statement aliasing borrow of `{}` (panics at runtime)", recv),
+            );
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Driver.
+// ---------------------------------------------------------------------------
+
+fn walk_rs(dir: &Path, root: &Path, out: &mut Vec<String>) {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            walk_rs(&path, root, out);
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            if let Ok(rel) = path.strip_prefix(root) {
+                let mut parts: Vec<String> = Vec::new();
+                for comp in rel.components() {
+                    parts.push(comp.as_os_str().to_string_lossy().to_string());
+                }
+                out.push(parts.join("/"));
+            }
+        }
+    }
+}
+
+pub fn collect_files(root: &Path) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for sub in SCAN_SUBDIRS {
+        let base = root.join(sub);
+        if !base.is_dir() {
+            continue;
+        }
+        walk_rs(&base, root, &mut out);
+    }
+    out.sort();
+    out
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::new();
+    for c in s.chars() {
+        if c == '"' {
+            out.push_str("\\\"");
+        } else if c == '\\' {
+            out.push_str("\\\\");
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+pub fn render(diags: &[Diag], fmt: &str) -> String {
+    if fmt == "json" {
+        if diags.is_empty() {
+            return "[]\n".to_string();
+        }
+        let rows: Vec<String> = diags
+            .iter()
+            .map(|d| {
+                format!(
+                    "  {{\"path\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}",
+                    json_escape(&d.path),
+                    d.line,
+                    d.rule,
+                    json_escape(&d.message)
+                )
+            })
+            .collect();
+        return format!("[\n{}\n]\n", rows.join(",\n"));
+    }
+    let mut out = String::new();
+    for d in diags {
+        out.push_str(&format!("{}:{}: [{}] {}\n", d.path, d.line, d.rule, d.message));
+    }
+    out
+}
+
+/// Analyze every scanned file under `root`; returns (diags sorted, files, suppressed).
+pub fn analyze_tree(root: &Path) -> Result<(Vec<Diag>, usize, usize), String> {
+    let files = collect_files(root);
+    let mut diags: Vec<Diag> = Vec::new();
+    let mut suppressed = 0usize;
+    for rel in &files {
+        let text = match std::fs::read_to_string(root.join(rel)) {
+            Ok(t) => t,
+            Err(e) => return Err(format!("pallas-lint: cannot read {}: {}", rel, e)),
+        };
+        let (d, s) = analyze_file(rel, &text);
+        diags.extend(d);
+        suppressed += s;
+    }
+    diags.sort_by(|a, b| {
+        (&a.path, a.line, a.rule, &a.message).cmp(&(&b.path, b.line, b.rule, &b.message))
+    });
+    Ok((diags, files.len(), suppressed))
+}
+
+/// CLI driver: returns the process exit code (0 clean, 1 diags, 2 usage/io).
+pub fn run(root: &str, fmt: &str) -> i32 {
+    match analyze_tree(Path::new(root)) {
+        Err(msg) => {
+            eprintln!("{}", msg);
+            2
+        }
+        Ok((diags, nfiles, suppressed)) => {
+            print!("{}", render(&diags, fmt));
+            eprintln!(
+                "pallas-lint: {} files, {} diagnostics, {} suppressed",
+                nfiles,
+                diags.len(),
+                suppressed
+            );
+            if diags.is_empty() {
+                0
+            } else {
+                1
+            }
+        }
+    }
+}

@@ -100,7 +100,7 @@ fn cmd_simulate(cfg: AlertMixConfig, csv_out: Option<&str>) -> Result<()> {
         cfg.seed,
         if cfg.use_xla { "xla-pjrt" } else { "cpu-fallback" }
     );
-    let wall = std::time::Instant::now();
+    let wall = std::time::Instant::now(); // lint:allow(wall-clock, operator-facing wall timing of the demo run; the pipeline itself runs on the sim clock)
     let (sys, world) = pipeline::run_for(cfg, duration)?;
     let wall_s = wall.elapsed().as_secs_f64();
 

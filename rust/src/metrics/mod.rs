@@ -102,7 +102,7 @@ impl TimeSeries {
     /// Index of the peak bucket.
     pub fn peak_index(&self) -> usize {
         (0..self.len())
-            .max_by(|&a, &b| self.value(a).partial_cmp(&self.value(b)).unwrap())
+            .max_by(|&a, &b| self.value(a).total_cmp(&self.value(b)))
             .unwrap_or(0)
     }
 }

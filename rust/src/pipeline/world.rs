@@ -302,6 +302,7 @@ impl World {
     }
 
     pub fn handles(&self) -> &Handles {
+        // lint:allow(panic, bootstrap installs handles before any actor can run; calling handles() pre-bootstrap is a programming error worth failing fast on)
         self.handles.as_ref().expect("bootstrap sets handles")
     }
 
@@ -343,8 +344,7 @@ impl World {
             self.process_staged(now);
         }
         let mut t = now;
-        while !self.enrich_retries.is_empty() {
-            let next = self.enrich_retries.iter().map(|r| r.not_before).min().unwrap();
+        while let Some(next) = self.enrich_retries.iter().map(|r| r.not_before).min() {
             t = t.max(next);
             self.process_enrich_retries(t);
         }

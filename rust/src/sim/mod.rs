@@ -34,6 +34,7 @@ impl Clock {
     }
 
     pub fn system_clock() -> Clock {
+        // lint:allow(wall-clock, Clock::System is the real-time escape hatch itself; every deterministic path uses Clock::Virtual)
         Clock::System { start: std::time::Instant::now() }
     }
 

@@ -86,6 +86,10 @@ pub struct ElasticLite {
     pub chaos: Option<SinkChaos>,
     /// Rejected docs backing off before their next bulk attempt.
     retry_q: VecDeque<RetryDoc>,
+    /// Reusable staging buffer for due retries inside `flush_at`, so the
+    /// flush path stays allocation-free even while the retry queue is
+    /// busy (pallas-lint hot-path-alloc caught the old per-flush `Vec`).
+    retry_scratch: Vec<RetryDoc>,
     /// Sink-local clock: the max `ingested_ms` seen, so `flush()` (which
     /// has no time argument at its call sites) knows "now" for backoff.
     clock: SimTime,
@@ -102,6 +106,7 @@ impl ElasticLite {
             latencies: LatencyHistogram::new(),
             chaos: None,
             retry_q: VecDeque::new(),
+            retry_scratch: Vec::new(),
             clock: 0,
         }
     }
@@ -127,11 +132,13 @@ impl ElasticLite {
     /// Flush the bulk buffer as of `now`: due retries re-enter the bulk
     /// ahead of fresh docs, and (under chaos) each slot can reject — the
     /// per-doc outcome an ES `_bulk` response reports.
+    // lint:hot-path
     pub fn flush_at(&mut self, now: SimTime) -> BulkResult {
         self.clock = self.clock.max(now);
         let now = self.clock;
         let mut res = BulkResult::default();
-        let mut due: Vec<RetryDoc> = Vec::new();
+        let mut due = std::mem::take(&mut self.retry_scratch);
+        due.clear();
         if !self.retry_q.is_empty() {
             for _ in 0..self.retry_q.len() {
                 let Some(r) = self.retry_q.pop_front() else { break };
@@ -143,14 +150,16 @@ impl ElasticLite {
             }
         }
         if self.pending.is_empty() && due.is_empty() {
+            self.retry_scratch = due;
             return res;
         }
         self.counters.bulk_requests += 1;
-        for r in due {
+        for r in due.drain(..) {
             self.counters.docs_retried += 1;
             res.retried += 1;
             self.bulk_slot(r.doc, r.attempts, now, &mut res);
         }
+        self.retry_scratch = due;
         for doc in std::mem::take(&mut self.pending) {
             self.bulk_slot(doc, 0, now, &mut res);
         }
@@ -199,8 +208,7 @@ impl ElasticLite {
     /// No-op (and no draw) when the queue is already empty.
     pub fn drain_retries(&mut self, from: SimTime) {
         self.clock = self.clock.max(from);
-        while !self.retry_q.is_empty() {
-            let next = self.retry_q.iter().map(|r| r.not_before).min().unwrap();
+        while let Some(next) = self.retry_q.iter().map(|r| r.not_before).min() {
             let t = self.clock.max(next);
             self.flush_at(t);
         }

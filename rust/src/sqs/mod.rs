@@ -569,6 +569,7 @@ impl SqsQueue {
                 .get(&h)
                 .is_some_and(|f| f.visible_again == at && f.lease_in_fifo == from_fifo);
             if live {
+                // lint:allow(panic, the live check above just observed this entry under the same exclusive borrow; no interleaving can remove it)
                 let f = self.in_flight.remove(&h).unwrap();
                 self.requeue_scratch.push(f.msg);
             } else if from_fifo {
@@ -670,6 +671,7 @@ impl DualQueue {
     /// one call pulls up to `max` messages, internally looping the SQS
     /// 10-per-receive cap, priority queue strictly first. Appends to
     /// `out` and returns the number of messages pulled.
+    // lint:hot-path
     pub fn receive_prioritized_into(
         &mut self,
         now: SimTime,

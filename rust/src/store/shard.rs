@@ -74,6 +74,10 @@ pub struct ShardStats {
 /// N independent [`StreamStore`] shards behind the streams-bucket API.
 pub struct ShardedStreamStore {
     shards: Vec<StreamStore>,
+    /// Reusable per-shard staging buffer for the multi-shard pick sweep,
+    /// so the steady-state pick path stays allocation-free (pallas-lint
+    /// hot-path-alloc caught the old per-call `Vec::new`).
+    pick_scratch: Vec<(u64, bool)>,
 }
 
 impl ShardedStreamStore {
@@ -81,7 +85,10 @@ impl ShardedStreamStore {
     /// coordinator always has at least one shard).
     pub fn new(n_shards: usize) -> Self {
         let n = n_shards.max(1);
-        ShardedStreamStore { shards: (0..n).map(|_| StreamStore::new()).collect() }
+        ShardedStreamStore {
+            shards: (0..n).map(|_| StreamStore::new()).collect(),
+            pick_scratch: Vec::new(),
+        }
     }
 
     pub fn n_shards(&self) -> usize {
@@ -174,6 +181,7 @@ impl ShardedStreamStore {
     /// up to the remaining limit. With one shard this is exactly the
     /// single-store pick; with several, order is per-shard due order (see
     /// module docs) and a binding `limit` is filled shard-by-shard.
+    // lint:hot-path
     pub fn pick_due_into(
         &mut self,
         now: SimTime,
@@ -186,7 +194,7 @@ impl ShardedStreamStore {
             return self.shards[0].pick_due_into(now, horizon, stale_after, limit, picked);
         }
         picked.clear();
-        let mut shard_buf: Vec<(u64, bool)> = Vec::new();
+        let mut shard_buf = std::mem::take(&mut self.pick_scratch);
         for s in &mut self.shards {
             let remaining = limit - picked.len();
             if remaining == 0 {
@@ -195,6 +203,7 @@ impl ShardedStreamStore {
             s.pick_due_into(now, horizon, stale_after, remaining, &mut shard_buf);
             picked.append(&mut shard_buf);
         }
+        self.pick_scratch = shard_buf;
     }
 
     /// Allocating convenience wrapper (tests / reporting), ids only.

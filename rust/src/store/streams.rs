@@ -141,6 +141,12 @@ pub struct StreamStore {
     /// the ack was a duplicate). Counted no-ops — re-indexing here is how
     /// the old implementation corrupted the due index.
     pub late_completions: u64,
+    /// Wheel entries whose stream record had vanished by drain time.
+    /// Structurally unreachable (records and wheel entries are updated
+    /// together); counted instead of panicking so one corrupt snapshot
+    /// cannot take down a whole coordinator shard — the pallas-lint panic
+    /// audit converted the old `unwrap()`s here.
+    pub wheel_ghosts: u64,
     /// Max adaptive backoff level (effective interval = base << level).
     pub max_backoff: u8,
 }
@@ -162,6 +168,7 @@ impl StreamStore {
             claims: 0,
             stale_repicks: 0,
             late_completions: 0,
+            wheel_ghosts: 0,
             max_backoff: 4,
         }
     }
@@ -249,6 +256,7 @@ impl StreamStore {
     /// record it just claimed. Each wheel drain is bucket-granular and
     /// sorts only the drained slice, so pick order by due time is
     /// preserved exactly.
+    // lint:hot-path
     pub fn pick_due_into(
         &mut self,
         now: SimTime,
@@ -269,7 +277,10 @@ impl StreamStore {
             self.scratch_peak = self.scratch_peak.max(scratch.len());
         }
         for &(_since, id) in &scratch {
-            let rec = self.records.get_mut(&id).unwrap();
+            let Some(rec) = self.records.get_mut(&id) else {
+                self.wheel_ghosts += 1;
+                continue;
+            };
             rec.status = StreamStatus::InProcess { since: now };
             rec.wheel = self.inprocess.schedule(now, id);
             self.stale_repicks += 1;
@@ -286,7 +297,10 @@ impl StreamStore {
             );
             self.scratch_peak = self.scratch_peak.max(scratch.len());
             for &(_due_at, id) in &scratch {
-                let rec = self.records.get_mut(&id).unwrap();
+                let Some(rec) = self.records.get_mut(&id) else {
+                    self.wheel_ghosts += 1;
+                    continue;
+                };
                 rec.status = StreamStatus::InProcess { since: now };
                 rec.wheel = self.inprocess.schedule(now, id);
                 self.claims += 1;
@@ -476,6 +490,12 @@ impl StreamStore {
         }
         self.due.check().map_err(|e| format!("due wheel: {e}"))?;
         self.inprocess.check().map_err(|e| format!("inprocess wheel: {e}"))?;
+        if self.wheel_ghosts > 0 {
+            return Err(format!(
+                "{} wheel entries had no backing record at drain time",
+                self.wheel_ghosts
+            ));
+        }
         Ok(())
     }
 }

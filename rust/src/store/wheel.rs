@@ -253,6 +253,7 @@ impl TimerWheel {
     /// handle and re-bucket at the new watermark for the next drain.
     /// Advances the watermark to `max(watermark, bound)`. Returns the
     /// number drained.
+    // lint:hot-path
     pub fn drain_due_into(
         &mut self,
         bound: SimTime,

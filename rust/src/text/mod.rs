@@ -121,6 +121,7 @@ pub fn featurize_item(title: &str, body: &str) -> [f32; FEATURE_DIM] {
 /// This is the hot-path entry used by the channel workers: `out` is a
 /// reusable columnar buffer (row i at `out[i*FEATURE_DIM..]`), so steady
 /// state re-polls featurize with zero heap allocation.
+// lint:hot-path
 pub fn featurize_item_into(title: &str, body: &str, out: &mut Vec<f32>) {
     let mut counts = [0u32; FEATURE_DIM];
     accumulate_counts(title, 2, &mut counts);

@@ -104,10 +104,12 @@ pub fn forall(name: &str, cases: u64, prop: impl Fn(&mut Gen) -> bool) {
         let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
         match ok {
             Ok(true) => {}
+            // lint:allow(panic, the property harness reports falsification by panicking the enclosing test with the replay seed)
             Ok(false) => panic!(
                 "property '{name}' falsified at case {case} (PROP_SEED={seed}); trace: {:?}",
                 g.trace
             ),
+            // lint:allow(panic, a panicking property is re-raised with the replay seed attached; swallowing it would hide the failure)
             Err(e) => panic!(
                 "property '{name}' panicked at case {case} (PROP_SEED={seed}); trace: {:?}; panic: {:?}",
                 g.trace,

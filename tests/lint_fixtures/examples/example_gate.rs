@@ -1,0 +1,12 @@
+//! Gate fixture: examples/ is outside the determinism/panic gates, so
+//! wall timing and unwraps here are fine — but suppression hygiene still
+//! applies everywhere, so the pointless allow below is flagged.
+
+fn main() {
+    let wall = std::time::Instant::now();
+    let v: Vec<u32> = std::env::args().map(|a| a.len() as u32).collect();
+    let first = v.first().copied().unwrap_or(0);
+    // lint:allow(panic, the panic rule does not even apply out here)
+    let second = v.get(1).copied().unwrap_or(first);
+    println!("ran in {:?} -> {}", wall.elapsed(), second);
+}

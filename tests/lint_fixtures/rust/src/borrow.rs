@@ -1,0 +1,59 @@
+//! Borrow-discipline fixture: the two Rc<RefCell> shapes that panic at
+//! runtime in this architecture.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+pub struct Cell2 {
+    pub inner: Rc<RefCell<Vec<u32>>>,
+    pub other: Rc<RefCell<Vec<u32>>>,
+}
+
+pub struct Sys;
+impl Sys {
+    pub fn tell(&mut self, _v: u32) {}
+}
+
+impl Cell2 {
+    /// Same-statement aliasing borrow of one cell: panics at runtime.
+    pub fn double_bad(&self) -> u32 {
+        let n = self.inner.borrow_mut().pop().unwrap_or(0) + self.inner.borrow().len() as u32;
+        n
+    }
+
+    /// Multi-line statement, same receiver twice, one mutable: panics.
+    pub fn double_bad_multiline(&self) {
+        self.inner
+            .borrow_mut()
+            .push(self.inner.borrow().len() as u32);
+    }
+
+    /// Two different cells in one statement: fine.
+    pub fn double_ok(&self) {
+        self.inner.borrow_mut().push(self.other.borrow().len() as u32);
+    }
+
+    /// Guard held across an ActorSystem re-entry: panics when the system
+    /// calls back into anything that borrows the same cell.
+    pub fn guard_bad(&self, sys: &mut Sys) {
+        let guard = self.inner.borrow_mut();
+        sys.tell(guard.len() as u32);
+    }
+
+    /// Guard dropped before dispatch: fine.
+    pub fn guard_ok_drop(&self, sys: &mut Sys) {
+        let guard = self.inner.borrow_mut();
+        let n = guard.len() as u32;
+        drop(guard);
+        sys.tell(n);
+    }
+
+    /// Guard confined to an inner scope that closes before dispatch: fine.
+    pub fn guard_ok_scope(&self, sys: &mut Sys) {
+        let n = {
+            let guard = self.inner.borrow_mut();
+            guard.len() as u32
+        };
+        sys.tell(n);
+    }
+}

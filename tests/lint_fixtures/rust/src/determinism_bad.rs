@@ -1,0 +1,16 @@
+//! Bad fixture: every determinism token the wall-clock/rng rules forbid.
+
+pub fn sample_wall() -> u64 {
+    let t = std::time::SystemTime::now();
+    let i = std::time::Instant::now();
+    drop((t, i));
+    0
+}
+
+pub fn sample_rng() -> u64 {
+    let mut rng = rand::thread_rng();
+    let x: u64 = rand::random();
+    let s = std::collections::hash_map::RandomState::new();
+    drop((rng, s));
+    x
+}

@@ -1,0 +1,18 @@
+//! Good fixture: justified escape hatches + the deterministic idioms.
+
+pub fn wall_escape_hatch() -> u64 {
+    // lint:allow(wall-clock, fixture models the Clock::System escape hatch)
+    let t = std::time::Instant::now();
+    let _ = t.elapsed();
+    0
+}
+
+pub fn seeded_stream(seed: u64) -> u64 {
+    // A seeded splitmix-style step: deterministic, no ambient RNG.
+    seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+pub fn wall_in_string() -> &'static str {
+    // Tokens inside string literals are stripped, never flagged.
+    "SystemTime and thread_rng are just words here"
+}

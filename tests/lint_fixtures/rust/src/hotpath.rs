@@ -1,0 +1,34 @@
+//! Hot-path fixture: alloc tokens inside and outside marked regions.
+
+pub struct Stage {
+    scratch: Vec<u32>,
+}
+
+impl Stage {
+    /// Marked 0-alloc region: every heap token inside is an error.
+    // lint:hot-path
+    pub fn drain_due_into(&mut self, out: &mut Vec<u32>) {
+        let label = format!("stage-{}", out.len());
+        let copy = self.scratch.clone();
+        let staged: Vec<u32> = Vec::new();
+        out.extend_from_slice(&self.scratch);
+        drop((label, copy, staged));
+    }
+
+    /// Marked region with a justified cold-start branch.
+    // lint:hot-path
+    pub fn receive_prioritized_into(&mut self, out: &mut Vec<u32>) {
+        if self.scratch.capacity() == 0 {
+            // lint:allow(hot-path-alloc, one-time warmup growth; steady state reuses the buffer)
+            self.scratch = Vec::with_capacity(64);
+        }
+        out.extend_from_slice(&self.scratch);
+        self.scratch.clear();
+    }
+
+    /// Unmarked helper: allocation here is nobody's business.
+    pub fn rebuild(&mut self) {
+        self.scratch = Vec::with_capacity(128);
+        let _tmp = vec![0u32; 4];
+    }
+}

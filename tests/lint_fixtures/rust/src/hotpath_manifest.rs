@@ -1,0 +1,20 @@
+//! Manifest fixture: bench-asserted 0-alloc fns must carry the marker.
+
+pub struct Engine {
+    fired: Vec<u32>,
+}
+
+impl Engine {
+    /// In the 0-alloc manifest but missing its marker: diagnostic.
+    pub fn percolate(&mut self, doc: u64) -> usize {
+        self.fired.push(doc as u32);
+        self.fired.len()
+    }
+
+    /// Properly marked manifest fn: no diagnostic.
+    // lint:hot-path
+    pub fn pick_due_into(&mut self, out: &mut Vec<u32>) {
+        out.extend_from_slice(&self.fired);
+        self.fired.clear();
+    }
+}

@@ -1,0 +1,45 @@
+//! Unordered-iteration fixture: HashMap walks in ordered-output contexts.
+
+use std::collections::HashMap;
+
+pub struct Book {
+    docs: HashMap<u64, String>,
+}
+
+impl Book {
+    /// Ordered-output context (name contains `snapshot`): raw iteration
+    /// leaks HashMap order into the wire format.
+    pub fn snapshot_bad(&self) -> String {
+        let mut out = String::new();
+        for (id, body) in self.docs.iter() {
+            out.push_str(&format!("{id}={body};"));
+        }
+        out
+    }
+
+    /// Same context, but the site sorts — no diagnostic.
+    pub fn snapshot_sorted(&self) -> String {
+        let mut rows: Vec<(&u64, &String)> = self.docs.iter().collect();
+        rows.sort_by_key(|(id, _)| **id);
+        let mut out = String::new();
+        for (id, body) in rows {
+            out.push_str(&format!("{id}={body};"));
+        }
+        out
+    }
+
+    /// Same context, justified: the consumer re-sorts downstream.
+    pub fn snapshot_allowed(&self) -> u64 {
+        let mut acc = 0u64;
+        // lint:allow(unordered, order-independent fold; addition commutes)
+        for (id, _) in self.docs.iter() {
+            acc = acc.wrapping_add(*id);
+        }
+        acc
+    }
+
+    /// NOT an ordered-output context: free iteration is fine.
+    pub fn total_len(&self) -> usize {
+        self.docs.values().map(String::len).sum()
+    }
+}

@@ -1,0 +1,49 @@
+//! Panic-audit fixture: raw panics in pipeline code vs annotated
+//! invariants vs test-module exemption.
+
+use std::collections::HashMap;
+
+pub struct Router {
+    routes: HashMap<u16, u64>,
+}
+
+impl Router {
+    /// Unjustified panics on fallible paths: three diagnostics.
+    pub fn route_bad(&self, ch: u16) -> u64 {
+        let hit = self.routes.get(&ch).unwrap();
+        if *hit == 0 {
+            panic!("zero route");
+        }
+        self.routes.get(&ch).copied().expect("route exists")
+    }
+
+    /// Counted-error shape the audit wants: no diagnostics.
+    pub fn route_counted(&self, ch: u16, misses: &mut u64) -> Option<u64> {
+        match self.routes.get(&ch) {
+            Some(v) => Some(*v),
+            None => {
+                *misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Justified invariant: suppressed.
+    pub fn route_invariant(&self, ch: u16) -> u64 {
+        // lint:allow(panic, routes is populated for every registered channel at bootstrap and never shrinks)
+        *self.routes.get(&ch).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unwraps_are_fine_in_tests() {
+        let r = Router { routes: HashMap::new() };
+        assert!(r.route_counted(1, &mut 0).is_none());
+        let v: Option<u32> = None;
+        assert!(std::panic::catch_unwind(|| v.unwrap()).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! Suppression-hygiene fixture: malformed markers, unknown rules, and
+//! allows that suppress nothing.
+
+pub fn missing_reason() -> u32 {
+    // lint:allow(panic)
+    0
+}
+
+pub fn unknown_rule() -> u32 {
+    // lint:allow(made-up-rule, sounds plausible)
+    0
+}
+
+pub fn unused_allow() -> u32 {
+    // lint:allow(rng, nothing random on the next line)
+    1 + 1
+}
