@@ -31,6 +31,10 @@
 #   make bench-store         refresh BENCH_store.json (streams-bucket pick/complete
 #                            numbers; SHARDS=N runs the sharded coordinator and
 #                            records cross-shard balance, e.g. `make bench-store SHARDS=8`)
+#   make bench-sink          refresh BENCH_sink.json (segment-store append /
+#                            recovery-replay / compaction / pooled search;
+#                            asserts 0 allocs/doc on the append hot path and
+#                            0 allocs/search once pools are warm)
 #   make bench               run every bench target
 #   make artifacts           (re)build the AOT enrichment artifacts (needs jax)
 
@@ -38,7 +42,7 @@ CARGO ?= cargo
 # Coordinator shards for bench-store (1 = classic single coordinator).
 SHARDS ?= 1
 
-.PHONY: verify lint example-connectors chaos drills alerts bench-alerts bench-ingest bench-sqs bench-store bench artifacts
+.PHONY: verify lint example-connectors chaos drills alerts bench-alerts bench-ingest bench-sqs bench-store bench-sink bench artifacts
 
 # Pinned seed so CI failures replay bit-for-bit; override for exploration:
 #   make chaos CHAOS_SEED=99 CHAOS_FEEDS=10000
@@ -107,6 +111,10 @@ bench-sqs:
 bench-store:
 	cd rust && SHARDS=$(SHARDS) $(CARGO) bench --bench bench_store
 	@test -f BENCH_store.json && echo "refreshed BENCH_store.json" || true
+
+bench-sink:
+	cd rust && $(CARGO) bench --bench bench_sink
+	@test -f BENCH_sink.json && echo "refreshed BENCH_sink.json" || true
 
 bench:
 	cd rust && $(CARGO) bench

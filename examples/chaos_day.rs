@@ -5,12 +5,16 @@
 //! redelivery, sink partial bulk failures, periodic brownout bursts,
 //! scripted outages, circuit breakers — then crashes mid-outage,
 //! restores the streams bucket from its snapshot, and rides out a second
-//! leg. After each leg it checks **delivery conservation**:
+//! leg. A third leg turns on the durable segment store, kills the
+//! process in the middle of the sink brownout (bulk retries in flight),
+//! and recovers the surviving segment log into a fresh world. After each
+//! leg it checks **delivery conservation**:
 //!
 //! ```text
 //! items_fetched == docs_indexed + items_deduped
 //!                + enrich_poisoned + docs_poisoned      (accounted)
-//! docs_indexed  == sink.doc_count()                     (exactly once)
+//! doc_count     == docs_indexed + docs_recovered
+//!                - docs_overwritten                     (exactly once)
 //! ```
 //!
 //! Any violation prints the seed and the exact `FaultPlan` JSON needed to
@@ -51,15 +55,22 @@ fn check_conservation(world: &World, seed: u64, label: &str) {
             ),
         );
     }
-    if world.sink.doc_count() as u64 != sc.docs_indexed {
+    // Exactly-once, durable-tier aware: every live doc was indexed once,
+    // replayed from the segment log once, or re-delivered over a
+    // recovered id (a latest-wins overwrite). With the store off the
+    // last two terms are zero and this is the classic identity.
+    let live = sc.docs_indexed + sc.docs_recovered - sc.docs_overwritten;
+    if world.sink.doc_count() as u64 != live {
         fail(
             world,
             seed,
             label,
             format!(
-                "exactly-once: doc_count {} != docs_indexed {}",
+                "exactly-once: doc_count {} != docs_indexed {} + docs_recovered {} - docs_overwritten {}",
                 world.sink.doc_count(),
-                sc.docs_indexed
+                sc.docs_indexed,
+                sc.docs_recovered,
+                sc.docs_overwritten
             ),
         );
     }
@@ -162,6 +173,71 @@ fn main() -> anyhow::Result<()> {
         world2.fault.counters.breaker_opens,
         world2.fault.counters.breaker_closes,
     );
+
+    // -- Leg 3: the durable sink. Same plan with the segment store on;
+    // crash in the middle of the sink brownout — bulk retries in flight,
+    // the active segment mid-append — then recover the surviving segment
+    // log into a fresh process. The replayed corpus must match the
+    // durable view at the crash instant exactly, and post-restore
+    // accounting must balance with recovered/overwritten docs in the
+    // exactly-once identity.
+    let mut cfg3 = cfg.clone();
+    cfg3.segment_store.enabled = true;
+    cfg3.segment_store.seal_docs = 64;
+    cfg3.segment_store.hot_docs = 256;
+    cfg3.segment_store.compact_min_segments = 2;
+    cfg3.segment_store.compact_interval_ms = 5 * MINUTE;
+    let (mut sys3, mut world3, _h3) = bootstrap(cfg3.clone())?;
+    world3.http.cfg.rate_limit_rate = 0.01;
+    sys3.run_until(&mut world3, HOUR + 7 * MINUTE); // mid sink brownout
+    let durable_at_crash = world3.sink.doc_count();
+    let retries_in_flight = world3.sink.retry_depth();
+    let disk = world3.sink.take_segment_fs().expect("leg 3 runs with the segment store on");
+    drop(sys3);
+    println!(
+        "\n== leg 3 (durable sink: killed mid-brownout, {durable_at_crash} docs durable, \
+         {retries_in_flight} bulk retries in flight) =="
+    );
+
+    let (mut sys4, mut world4, _h4) = bootstrap(cfg3.clone())?;
+    world4.http.cfg.rate_limit_rate = 0.01;
+    let _ = world4.sink.take_segment_fs(); // fresh empty image; mount the survivor
+    world4.sink.enable_segments(
+        disk,
+        cfg3.segment_store.to_segment_config(),
+        cfg3.segment_store.hot_docs,
+    )?;
+    if world4.sink.counters.docs_recovered as usize != durable_at_crash {
+        fail(
+            &world4,
+            seed,
+            "leg 3",
+            format!(
+                "segment replay diverged: recovered {} != durable at crash {durable_at_crash}",
+                world4.sink.counters.docs_recovered
+            ),
+        );
+    }
+    sys4.run_until(&mut world4, 4 * HOUR);
+    world4.flush_enrichment(4 * HOUR);
+    println!("{}", world4.segment_table());
+    check_conservation(&world4, seed, "leg 3");
+    let segc = world4.sink.segment_counters().expect("store enabled");
+    if world4.sink.counters.segment_errors != 0 {
+        fail(&world4, seed, "leg 3", format!("{} segment append/read errors", world4.sink.counters.segment_errors));
+    }
+    if segc.segments_sealed == 0 || segc.compactions == 0 {
+        fail(
+            &world4,
+            seed,
+            "leg 3",
+            format!(
+                "durable tier never cycled: {} seals, {} compactions",
+                segc.segments_sealed, segc.compactions
+            ),
+        );
+    }
+
     println!("chaos_day PASSED in {:.1}s wall (seed {seed})", wall.elapsed().as_secs_f64());
     Ok(())
 }

@@ -19,6 +19,7 @@
 //! cargo run --release --example figure4_day            # full 200k x 24h
 //! FIG4_FEEDS=20000 cargo run --release --example figure4_day   # faster
 //! FIG4_SHARDS=1 cargo run --release --example figure4_day      # classic single coordinator
+//! FIG4_SEGMENTS=1 cargo run --release --example figure4_day    # durable segment store under the sink
 //! ```
 
 use alertmix::config::AlertMixConfig;
@@ -39,6 +40,14 @@ fn main() -> anyhow::Result<()> {
     // recovery table below then shows what fired and what was recovered).
     if std::env::var("FIG4_CHAOS").is_ok_and(|v| v == "1") {
         cfg.fault = alertmix::fault::FaultPlan::chaotic();
+    }
+    // FIG4_SEGMENTS=1 runs the day over the durable segment store: the
+    // sink RSS report below then shows the bounded hot tier against the
+    // on-disk segment footprint, and the segment table shows the
+    // seal/compaction churn a full diurnal cycle produces.
+    if std::env::var("FIG4_SEGMENTS").is_ok_and(|v| v == "1") {
+        cfg.segment_store.enabled = true;
+        cfg.segment_store.hot_docs = 10_000;
     }
     if !cfg!(feature = "xla")
         || alertmix::runtime::find_artifact(alertmix::runtime::DEFAULT_ARTIFACT).is_none()
@@ -154,6 +163,17 @@ fn main() -> anyhow::Result<()> {
         c.items_deduped,
         world.sink.doc_count()
     );
+
+    // -- Sink memory audit -------------------------------------------------
+    // Every sink collection with its bound (or the invariant that bounds
+    // it); with FIG4_SEGMENTS=1 the hot tier is capped and the corpus
+    // lives in the segment log, so resident state stops scaling with the
+    // day's doc count.
+    println!("\n{}", world.sink.sink_rss_report());
+    let seg_table = world.segment_table();
+    if !seg_table.is_empty() {
+        println!("{seg_table}");
+    }
 
     // Machine-readable output for EXPERIMENTS.md.
     std::fs::write("figure4_day.csv", world.metrics.to_csv(n_periods))?;

@@ -58,6 +58,15 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // Multi-term AND queries go through the pooled read path: the result
+    // buffer is the caller's and is recycled across queries, so repeated
+    // dashboard polls never allocate (asserted by `make bench-sink`).
+    let mut hits = Vec::new();
+    for terms in [&["markets", "rate"][..], &["fire", "evacuation"][..]] {
+        world.sink.search_all_into(terms, &mut hits);
+        println!("  sink search {terms:?} (all terms): {} docs", hits.len());
+    }
+
     // 3b. Alerts that fired during the hour.
     println!("\nalerts fired: {} (p99 publish→alert latency {:?} ms)",
         world.alerts.matches, world.alerts.latency_pct(0.99));

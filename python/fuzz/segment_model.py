@@ -1,0 +1,959 @@
+#!/usr/bin/env python3
+"""Executable model checks for rust/src/sink/segment.rs + sink/compact.rs.
+
+This container has no Rust toolchain, so the segment store's framing,
+recovery and compaction logic is ported line-by-line here and fuzzed
+against a keep-everything oracle (every append ever made, latest-wins):
+
+  1. Frame codec roundtrip: 300 random docs (unicode strings, f32
+     scores, named f64 fields) encode -> decode identical; peek_doc_id
+     agrees with the full decode.
+  2. Torn/corrupt discipline: a frame cut at EVERY byte offset is Torn;
+     a frame with any single byte flipped never decodes to a different
+     doc (magic/type flips are Corrupt, the rest error out via the
+     length or FNV-1a checksum).
+  3. Truncation sweep: a multi-frame active segment chopped at EVERY
+     byte offset recovers exactly the wholly-before-cut prefix, counts
+     one torn frame iff the cut is mid-frame, and truncates the file
+     back to the last good boundary.
+  4. Differential fuzz: 300 seeded random sequences of append/overwrite,
+     seal, compact, clean crash+recover, torn-tail crash and mid-active
+     byte corruption, each recovery diffed doc-for-doc against the
+     oracle (including the read_doc segment-read path).
+  5. Compaction crash windows: a crash between merge-write and manifest
+     commit recovers the old view and removes the orphan merge; a crash
+     between commit and input deletion recovers the new view and removes
+     the orphan inputs; unreferenced junk files are always removed.
+  6. Manifest: version/field validation, sealed-entry defaults, and a
+     corrupt sealed segment failing recovery loudly (strict replay).
+
+Keep in sync with rust/src/sink/segment.rs — the Rust module doc points
+back here.
+
+Run: python3 python/fuzz/segment_model.py
+"""
+
+import json
+import random
+import struct
+import sys
+
+MASK = (1 << 64) - 1
+
+# -- rust/src/util/hash.rs ---------------------------------------------------
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+
+
+def fnv1a(data: bytes) -> int:
+    h = FNV_OFFSET
+    for b in data:
+        h = ((h ^ b) * FNV_PRIME) & MASK
+    return h
+
+
+# -- rust/src/sink/segment.rs: constants and errors --------------------------
+
+FRAME_MAGIC = 0xA7
+FRAME_DOC = 1
+FRAME_HEADER = 14  # magic(1) + type(1) + payload len(4 LE) + fnv1a(8 LE)
+MANIFEST_NAME = "MANIFEST"
+
+
+class FrameError(Exception):
+    pass
+
+
+class Torn(FrameError):
+    """Buffer ends before the frame does: a torn final write."""
+
+
+class Corrupt(FrameError):
+    """Not a valid frame at this offset: data loss past this point."""
+
+
+class RecoverError(Exception):
+    """Strict replay / manifest failure (rust: bail!/anyhow)."""
+
+
+class Crash(Exception):
+    """Injected process death for compaction crash-window tests."""
+
+
+def _f32(x: float) -> float:
+    """Round-trip through IEEE-754 single precision (rust f32 scores)."""
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+class Doc:
+    """Port of sink::SinkDoc (the fields the frame codec serializes)."""
+
+    __slots__ = (
+        "doc_id", "stream_id", "guid", "title", "body", "url",
+        "published_ms", "ingested_ms", "scores", "simhash", "fields",
+    )
+
+    def __init__(self, doc_id, stream_id, guid, title, body, url,
+                 published_ms, ingested_ms, scores, simhash, fields):
+        self.doc_id = doc_id
+        self.stream_id = stream_id
+        self.guid = guid
+        self.title = title
+        self.body = body
+        self.url = url
+        self.published_ms = published_ms
+        self.ingested_ms = ingested_ms
+        self.scores = [_f32(s) for s in scores]
+        self.simhash = simhash
+        self.fields = list(fields)
+
+    def key(self):
+        return (
+            self.doc_id, self.stream_id, self.guid, self.title, self.body,
+            self.url, self.published_ms, self.ingested_ms,
+            tuple(self.scores), self.simhash, tuple(self.fields),
+        )
+
+    def __eq__(self, other):
+        return isinstance(other, Doc) and self.key() == other.key()
+
+    def __repr__(self):
+        return f"Doc({self.doc_id}, {self.title!r})"
+
+
+# -- Frame codec (line-by-line port) -----------------------------------------
+
+
+def encode_payload(doc: Doc, out: bytearray) -> None:
+    out += struct.pack(
+        "<QQQQQ",
+        doc.doc_id, doc.stream_id, doc.published_ms, doc.ingested_ms, doc.simhash,
+    )
+    for s in (doc.guid, doc.title, doc.body, doc.url):
+        b = s.encode("utf-8")
+        out += struct.pack("<I", len(b))
+        out += b
+    out += struct.pack("<I", len(doc.scores))
+    for s in doc.scores:
+        out += struct.pack("<f", s)
+    out += struct.pack("<I", len(doc.fields))
+    for name, v in doc.fields:
+        b = name.encode("utf-8")
+        out += struct.pack("<I", len(b))
+        out += b
+        out += struct.pack("<d", v)
+
+
+class Reader:
+    def __init__(self, buf: bytes):
+        self.buf = buf
+        self.at = 0
+
+    def take(self, n: int) -> bytes:
+        end = self.at + n
+        if end > len(self.buf):
+            raise Corrupt("reader overrun")
+        s = self.buf[self.at:end]
+        self.at = end
+        return s
+
+    def u32(self) -> int:
+        return struct.unpack("<I", self.take(4))[0]
+
+    def u64(self) -> int:
+        return struct.unpack("<Q", self.take(8))[0]
+
+    def f32(self) -> float:
+        return struct.unpack("<f", self.take(4))[0]
+
+    def f64(self) -> float:
+        return struct.unpack("<d", self.take(8))[0]
+
+    def string(self) -> str:
+        n = self.u32()
+        b = self.take(n)
+        try:
+            return b.decode("utf-8")
+        except UnicodeDecodeError as exc:
+            raise Corrupt("invalid utf-8") from exc
+
+
+def decode_payload(payload: bytes) -> Doc:
+    r = Reader(payload)
+    doc_id = r.u64()
+    stream_id = r.u64()
+    published_ms = r.u64()
+    ingested_ms = r.u64()
+    simhash = r.u64()
+    guid = r.string()
+    title = r.string()
+    body = r.string()
+    url = r.string()
+    n_scores = r.u32()
+    if n_scores > len(payload):
+        raise Corrupt("score count")
+    scores = [r.f32() for _ in range(n_scores)]
+    n_fields = r.u32()
+    if n_fields > len(payload):
+        raise Corrupt("field count")
+    fields = [(r.string(), r.f64()) for _ in range(n_fields)]
+    if r.at != len(payload):
+        raise Corrupt("trailing payload bytes")
+    return Doc(doc_id, stream_id, guid, title, body, url,
+               published_ms, ingested_ms, scores, simhash, fields)
+
+
+def encode_frame(doc: Doc, out: bytearray) -> int:
+    start = len(out)
+    out.append(FRAME_MAGIC)
+    out.append(FRAME_DOC)
+    out += bytes(12)  # len + crc slots, filled after the payload encodes
+    body_at = len(out)
+    encode_payload(doc, out)
+    plen = len(out) - body_at
+    crc = fnv1a(bytes(out[body_at:]))
+    out[start + 2:start + 6] = struct.pack("<I", plen)
+    out[start + 6:start + 14] = struct.pack("<Q", crc)
+    return len(out) - start
+
+
+def decode_frame(buf, at: int):
+    rest = bytes(buf[min(at, len(buf)):])
+    if len(rest) == 0:
+        raise Torn("empty")
+    if rest[0] != FRAME_MAGIC:
+        raise Corrupt("bad magic")
+    if len(rest) < FRAME_HEADER:
+        raise Torn("short header")
+    if rest[1] != FRAME_DOC:
+        raise Corrupt("bad frame type")
+    plen = struct.unpack("<I", rest[2:6])[0]
+    crc = struct.unpack("<Q", rest[6:14])[0]
+    end = FRAME_HEADER + plen
+    if len(rest) < end:
+        raise Torn("short payload")
+    payload = rest[FRAME_HEADER:end]
+    if fnv1a(payload) != crc:
+        raise Corrupt("checksum mismatch")
+    return decode_payload(payload), end
+
+
+def peek_doc_id(buf, at: int):
+    rest = bytes(buf[min(at, len(buf)):])
+    if len(rest) < FRAME_HEADER + 8 or rest[0] != FRAME_MAGIC:
+        return None
+    plen = struct.unpack("<I", rest[2:6])[0]
+    end = FRAME_HEADER + plen
+    if len(rest) < end:
+        return None
+    return struct.unpack("<Q", rest[FRAME_HEADER:FRAME_HEADER + 8])[0], end
+
+
+# -- VecFs port --------------------------------------------------------------
+
+
+class VecFs:
+    """In-memory filesystem; cloning the handle shares the 'disk'."""
+
+    def __init__(self, files=None):
+        self.files = files if files is not None else {}
+
+    def clone(self):
+        return VecFs(self.files)  # shared storage, like rust's Rc clone
+
+    def deep_clone(self):
+        return VecFs({k: bytearray(v) for k, v in self.files.items()})
+
+    def append(self, name, data):
+        self.files.setdefault(name, bytearray()).extend(data)
+
+    def read(self, name):
+        f = self.files.get(name)
+        return None if f is None else bytes(f)
+
+    def read_range(self, name, off, length, out: bytearray) -> int:
+        del out[:]
+        f = self.files.get(name)
+        if f is None:
+            raise RecoverError(f"read_range: no such file {name}")
+        start = min(off, len(f))
+        end = min(start + length, len(f))
+        out += f[start:end]
+        return end - start
+
+    def write_atomic(self, name, data):
+        self.files[name] = bytearray(data)
+
+    def truncate(self, name, length):
+        f = self.files.get(name)
+        if f is not None:
+            del f[length:]
+
+    def remove(self, name):
+        self.files.pop(name, None)
+
+    def list(self):
+        return sorted(self.files)
+
+    def length(self, name):
+        f = self.files.get(name)
+        return None if f is None else len(f)
+
+    def chop(self, name, keep):
+        self.truncate(name, keep)
+
+    def flip_byte(self, name, at):
+        f = self.files.get(name)
+        if f is not None and at < len(f):
+            f[at] ^= 0xFF
+
+
+# -- Manifest ----------------------------------------------------------------
+
+
+def seg_name(seg_id: int) -> str:
+    return f"seg-{seg_id:08d}.seg"
+
+
+class SealedSeg:
+    def __init__(self, seg_id, seal_time, frames, nbytes):
+        self.id = seg_id
+        self.seal_time = seal_time
+        self.frames = frames
+        self.bytes = nbytes
+
+
+def manifest_to_json(next_id, active, sealed) -> str:
+    return json.dumps({
+        "version": 1,
+        "next_id": next_id,
+        "active": active,
+        "sealed": [
+            {"id": s.id, "seal_time": s.seal_time, "frames": s.frames, "bytes": s.bytes}
+            for s in sealed
+        ],
+    })
+
+
+def manifest_from_json(text: str):
+    try:
+        j = json.loads(text)
+    except ValueError as exc:
+        raise RecoverError(f"manifest parse: {exc}") from exc
+    if not isinstance(j, dict) or j.get("version") != 1:
+        raise RecoverError(f"manifest version {j.get('version') if isinstance(j, dict) else '?'} unsupported")
+    if "next_id" not in j:
+        raise RecoverError("manifest: next_id")
+    if "active" not in j:
+        raise RecoverError("manifest: active")
+    sealed = []
+    for s in j.get("sealed", []):
+        if "id" not in s:
+            raise RecoverError("sealed: id")
+        sealed.append(SealedSeg(s["id"], s.get("seal_time", 0), s.get("frames", 0), s.get("bytes", 0)))
+    return j["next_id"], j["active"], sealed
+
+
+# -- SegmentStore port -------------------------------------------------------
+
+
+class SegmentConfig:
+    def __init__(self, seal_bytes=4 << 20, seal_docs=8192, compact_min_segments=4):
+        self.seal_bytes = seal_bytes
+        self.seal_docs = seal_docs
+        self.compact_min_segments = compact_min_segments
+
+
+class Counters:
+    def __init__(self):
+        self.frames_appended = 0
+        self.segments_sealed = 0
+        self.compactions = 0
+        self.segments_merged = 0
+        self.frames_dropped = 0
+        self.docs_recovered = 0
+        self.frames_torn = 0
+        self.orphans_removed = 0
+
+
+class Store:
+    """Port of sink::segment::SegmentStore (+ compact.rs)."""
+
+    def __init__(self, fs: VecFs, cfg: SegmentConfig):
+        self.fs = fs
+        self.cfg = cfg
+        self.sealed = []
+        self.next_id = 2
+        self.active_id = 1
+        self.active_name = seg_name(1)
+        self.active_bytes = 0
+        self.active_docs = 0
+        self.index = {}  # doc_id -> (segment, offset)
+        self.counters = Counters()
+
+    @staticmethod
+    def recover(fs: VecFs, cfg: SegmentConfig):
+        store = Store(fs, cfg)
+        manifest = fs.read(MANIFEST_NAME)
+        if manifest is not None:
+            try:
+                text = manifest.decode("utf-8")
+            except UnicodeDecodeError as exc:
+                raise RecoverError("manifest is not valid UTF-8") from exc
+            next_id, active, sealed = manifest_from_json(text)
+            store.next_id = next_id
+            store.active_id = active
+            store.active_name = seg_name(active)
+            store.sealed = sealed
+        live = {}
+        # Sealed segments replay in manifest order (commit order) so a doc
+        # re-indexed across segments resolves latest-wins.
+        for seg in store.sealed:
+            name = seg_name(seg.id)
+            data = fs.read(name)
+            if data is None:
+                raise RecoverError(f"manifest references missing segment {name}")
+            store.replay_bytes(seg.id, data, live, strict=True)
+        # Active tail: a torn or corrupt final record is discarded and
+        # truncated away so the next append starts at a clean boundary.
+        data = fs.read(store.active_name)
+        if data is not None:
+            good = store.replay_bytes(store.active_id, data, live, strict=False)
+            if good < len(data):
+                store.counters.frames_torn += 1
+                fs.truncate(store.active_name, good)
+            store.active_bytes = good
+        store.remove_orphans()
+        store.counters.docs_recovered = len(live)
+        docs = sorted(live.values(), key=lambda d: d.doc_id)
+        return store, docs
+
+    def replay_bytes(self, seg_id, data, live, strict) -> int:
+        at = 0
+        while at < len(data):
+            try:
+                doc, flen = decode_frame(data, at)
+            except FrameError as e:
+                if strict:
+                    raise RecoverError(f"sealed segment {seg_id} bad frame at {at}: {e}") from e
+                return at
+            self.index[doc.doc_id] = (seg_id, at)
+            live[doc.doc_id] = doc
+            if seg_id == self.active_id and not strict:
+                self.active_docs += 1
+            at += flen
+        return at
+
+    def remove_orphans(self):
+        for name in self.fs.list():
+            if name == MANIFEST_NAME:
+                continue
+            referenced = name == self.active_name or any(
+                seg_name(s.id) == name for s in self.sealed
+            )
+            if not referenced:
+                self.fs.remove(name)
+                self.counters.orphans_removed += 1
+
+    def commit_manifest(self):
+        self.fs.write_atomic(
+            MANIFEST_NAME, manifest_to_json(self.next_id, self.active_id, self.sealed).encode()
+        )
+
+    def append_doc(self, doc: Doc, now: int) -> int:
+        """Returns the frame length (harness convenience; rust returns ())."""
+        if self.active_bytes >= self.cfg.seal_bytes or self.active_docs >= self.cfg.seal_docs:
+            self.seal(now)
+        buf = bytearray()
+        encode_frame(doc, buf)
+        self.fs.append(self.active_name, buf)
+        self.index[doc.doc_id] = (self.active_id, self.active_bytes)
+        self.active_bytes += len(buf)
+        self.active_docs += 1
+        self.counters.frames_appended += 1
+        return len(buf)
+
+    def seal(self, now: int):
+        if self.active_docs == 0:
+            return
+        self.sealed.append(SealedSeg(self.active_id, now, self.active_docs, self.active_bytes))
+        self.active_id = self.next_id
+        self.next_id += 1
+        self.active_name = seg_name(self.active_id)
+        self.active_bytes = 0
+        self.active_docs = 0
+        self.counters.segments_sealed += 1
+        self.commit_manifest()
+
+    def read_doc(self, doc_id):
+        loc = self.index.get(doc_id)
+        if loc is None:
+            return None
+        segment, offset = loc
+        name = seg_name(segment)
+        buf = bytearray()
+        got = self.fs.read_range(name, offset, FRAME_HEADER, buf)
+        if got < FRAME_HEADER:
+            raise RecoverError(f"{name}: truncated frame header for doc {doc_id}")
+        plen = struct.unpack("<I", bytes(buf[2:6]))[0]
+        got = self.fs.read_range(name, offset, FRAME_HEADER + plen, buf)
+        if got < FRAME_HEADER + plen:
+            raise RecoverError(f"{name}: truncated frame for doc {doc_id}")
+        doc, _ = decode_frame(buf, 0)
+        return doc
+
+    def contains(self, doc_id) -> bool:
+        return doc_id in self.index
+
+    def maybe_compact(self, now, crash_after=None):
+        if len(self.sealed) < self.cfg.compact_min_segments:
+            return None
+        return self.compact(now, crash_after)
+
+    def compact(self, _now, crash_after=None):
+        """compact.rs: merge sealed segments, drop ghosts, 4-step commit.
+
+        crash_after=1 dies between merge-write and manifest commit;
+        crash_after=2 dies between commit and input deletion.
+        """
+        inputs = list(self.sealed)
+        if not inputs:
+            return {"merged": 0, "frames_kept": 0, "frames_dropped": 0,
+                    "bytes_before": 0, "bytes_after": 0}
+        report = {"merged": len(inputs), "frames_kept": 0, "frames_dropped": 0,
+                  "bytes_before": 0, "bytes_after": 0}
+        merged_id = self.next_id
+        out = bytearray()
+        moved = []
+        max_seal_time = 0
+        for seg in inputs:
+            report["bytes_before"] += seg.bytes
+            max_seal_time = max(max_seal_time, seg.seal_time)
+            name = seg_name(seg.id)
+            data = self.fs.read(name)
+            if data is None:
+                raise RecoverError(f"compaction input {name} missing")
+            at = 0
+            while True:
+                peeked = peek_doc_id(data, at)
+                if peeked is None:
+                    break
+                doc_id, flen = peeked
+                live = self.index.get(doc_id) == (seg.id, at)
+                if live:
+                    moved.append((doc_id, len(out)))
+                    out += data[at:at + flen]
+                    report["frames_kept"] += 1
+                else:
+                    report["frames_dropped"] += 1
+                at += flen
+            if at != len(data):
+                raise RecoverError(f"compaction input {name}: trailing bytes at {at}")
+        report["bytes_after"] = len(out)
+        # (1) materialize the merged segment before any metadata changes.
+        if out:
+            self.fs.write_atomic(seg_name(merged_id), out)
+        if crash_after == 1:
+            raise Crash("between merge write and manifest commit")
+        # (2) the linearization point: swap inputs for the merged segment.
+        self.sealed = []
+        if out:
+            self.sealed.append(
+                SealedSeg(merged_id, max_seal_time, report["frames_kept"], report["bytes_after"])
+            )
+        self.next_id = merged_id + 1
+        self.commit_manifest()
+        if crash_after == 2:
+            raise Crash("between manifest commit and input deletion")
+        # (3) readers now resolve through the merged segment.
+        for doc_id, offset in moved:
+            if doc_id in self.index:
+                self.index[doc_id] = (merged_id, offset)
+        # (4) inputs are unreachable from the manifest; reclaim them.
+        for seg in inputs:
+            self.fs.remove(seg_name(seg.id))
+        self.counters.compactions += 1
+        self.counters.segments_merged += len(inputs)
+        self.counters.frames_dropped += report["frames_dropped"]
+        return report
+
+
+# -- Keep-everything oracle --------------------------------------------------
+
+
+class Oracle:
+    """Every append ever made, with its frame location. The live view is
+    latest-wins over the log; a torn/corrupt active tail erases the log
+    entries at and past the damage point, and a committed compaction
+    erases superseded versions in its input segments (both are physically
+    gone — an older version can no longer shadow in for a doc whose
+    newest frame is later destroyed)."""
+
+    def __init__(self):
+        self.log = []  # (segment_id, offset, frame_len, doc)
+
+    def record(self, seg_id, offset, flen, doc):
+        self.log.append((seg_id, offset, flen, doc))
+
+    def chop_active(self, active_id, keep):
+        self.log = [e for e in self.log if e[0] != active_id or e[1] + e[2] <= keep]
+
+    def compacted(self, input_ids, merged_id):
+        latest = {}
+        for i, e in enumerate(self.log):
+            latest[e[3].doc_id] = i
+        keep = set(latest.values())
+        inputs = set(input_ids)
+        out = []
+        for i, e in enumerate(self.log):
+            if e[0] in inputs:
+                # Live frames move into the merged segment (so a future
+                # compaction sees them as its inputs); ghosts are erased.
+                if i in keep:
+                    out.append((merged_id, e[1], e[2], e[3]))
+            else:
+                out.append(e)
+        self.log = out
+
+    def live(self):
+        d = {}
+        for _, _, _, doc in self.log:
+            d[doc.doc_id] = doc
+        return d
+
+
+# -- Harness -----------------------------------------------------------------
+
+FAILURES = []
+
+
+def check(cond, msg):
+    if not cond:
+        FAILURES.append(msg)
+        print(f"FAIL: {msg}")
+
+
+WORDS = [
+    "alert", "mix", "stream", "rate", "markets", "wildfire", "quake",
+    "éclair", "Δdelta", "数据流", "breaking", "severe",
+]
+
+
+def rand_doc(pyrng: random.Random, doc_id: int) -> Doc:
+    words = lambda n: " ".join(pyrng.choice(WORDS) for _ in range(n))
+    return Doc(
+        doc_id=doc_id,
+        stream_id=pyrng.randint(0, 1 << 40),
+        guid=f"guid-{doc_id}-{pyrng.randint(0, 999)}",
+        title=words(pyrng.randint(1, 5)),
+        body=words(pyrng.randint(0, 12)),
+        url="" if pyrng.random() < 0.2 else f"https://example.test/{doc_id}",
+        published_ms=pyrng.randint(0, 1 << 45),
+        ingested_ms=pyrng.randint(0, 1 << 45),
+        scores=[pyrng.uniform(-2.0, 2.0) for _ in range(pyrng.randint(0, 4))],
+        simhash=pyrng.randint(0, MASK),
+        fields=[(pyrng.choice(WORDS), pyrng.uniform(0.0, 1e6))
+                for _ in range(pyrng.randint(0, 3))],
+    )
+
+
+def assert_converged(store, docs, oracle, tag):
+    want = oracle.live()
+    got = {d.doc_id: d for d in docs}
+    check(store.counters.docs_recovered == len(want),
+          f"{tag}: docs_recovered {store.counters.docs_recovered} != {len(want)}")
+    check(set(got) == set(want),
+          f"{tag}: live ids {sorted(got)[:8]}... != {sorted(want)[:8]}...")
+    for doc_id, doc in want.items():
+        check(got.get(doc_id) == doc, f"{tag}: doc {doc_id} content diverged")
+        rd = store.read_doc(doc_id)
+        check(rd == doc, f"{tag}: read_doc({doc_id}) diverged")
+
+
+# ---------------------------------------------------------------------------
+# 1. Frame roundtrip
+# ---------------------------------------------------------------------------
+def t_roundtrip():
+    pyrng = random.Random(11)
+    for seed in range(300):
+        doc = rand_doc(pyrng, pyrng.randint(1, 1 << 50))
+        buf = bytearray()
+        flen = encode_frame(doc, buf)
+        check(flen == len(buf), f"roundtrip {seed}: frame length bookkeeping")
+        back, end = decode_frame(buf, 0)
+        check(end == flen, f"roundtrip {seed}: decode length {end} != {flen}")
+        check(back == doc, f"roundtrip {seed}: doc diverged")
+        peeked = peek_doc_id(buf, 0)
+        check(peeked == (doc.doc_id, flen), f"roundtrip {seed}: peek {peeked}")
+        # Frames concatenate: decode at the boundary of a two-frame log.
+        doc2 = rand_doc(pyrng, doc.doc_id + 1)
+        encode_frame(doc2, buf)
+        back2, _ = decode_frame(buf, flen)
+        check(back2 == doc2, f"roundtrip {seed}: second frame diverged")
+
+
+# ---------------------------------------------------------------------------
+# 2. Torn / corrupt discipline at every cut and flip
+# ---------------------------------------------------------------------------
+def t_cuts_and_flips():
+    pyrng = random.Random(12)
+    doc = rand_doc(pyrng, 42)
+    frame = bytearray()
+    encode_frame(doc, frame)
+    for cut in range(len(frame)):
+        try:
+            decode_frame(frame[:cut], 0)
+            check(False, f"cut {cut}: prefix decoded")
+        except Torn:
+            pass
+        except Corrupt:
+            check(False, f"cut {cut}: prefix is Corrupt, want Torn")
+    for i in range(len(frame)):
+        flipped = bytearray(frame)
+        flipped[i] ^= 0xFF
+        try:
+            got, _ = decode_frame(flipped, 0)
+            check(False, f"flip {i}: decoded {got!r} from corrupt bytes")
+        except Corrupt:
+            if i in (0, 1):
+                pass  # magic / type flips are definitionally Corrupt
+        except Torn:
+            # A flipped length byte can claim a longer frame than the
+            # buffer holds — indistinguishable from a torn tail, by design.
+            check(2 <= i < 6, f"flip {i}: Torn outside the length field")
+
+
+# ---------------------------------------------------------------------------
+# 3. Truncation sweep: every byte offset of a multi-frame active segment
+# ---------------------------------------------------------------------------
+def t_truncation_sweep():
+    pyrng = random.Random(13)
+    cfg = SegmentConfig(seal_docs=1000)
+    fs = VecFs()
+    store, _ = Store.recover(fs, cfg)
+    docs = []
+    ends = []
+    for i in range(1, 11):
+        doc = rand_doc(pyrng, i)
+        docs.append(doc)
+        store.append_doc(doc, i)
+        ends.append(store.active_bytes)
+    data = fs.read(seg_name(1))
+    check(data is not None and len(data) == ends[-1], "sweep: active file length")
+    for cut in range(len(data) + 1):
+        disk = fs.deep_clone()
+        disk.chop(seg_name(1), cut)
+        st2, recovered = Store.recover(disk, cfg)
+        n_whole = sum(1 for e in ends if e <= cut)
+        check(len(recovered) == n_whole, f"sweep cut {cut}: {len(recovered)} docs, want {n_whole}")
+        check(recovered == docs[:n_whole], f"sweep cut {cut}: prefix content diverged")
+        want_torn = 0 if cut in (0, *ends) else 1
+        check(st2.counters.frames_torn == want_torn,
+              f"sweep cut {cut}: frames_torn {st2.counters.frames_torn} != {want_torn}")
+        good = max((e for e in ends if e <= cut), default=0)
+        check(disk.length(seg_name(1)) == good,
+              f"sweep cut {cut}: file not truncated to {good}")
+        check(st2.active_bytes == good, f"sweep cut {cut}: active_bytes != good")
+
+
+# ---------------------------------------------------------------------------
+# 4. Differential fuzz vs the keep-everything oracle (300 seeds)
+# ---------------------------------------------------------------------------
+def t_differential():
+    for seed in range(300):
+        pyrng = random.Random(1000 + seed)
+        cfg = SegmentConfig(
+            seal_bytes=1 << 20,
+            seal_docs=pyrng.randint(2, 12),
+            compact_min_segments=pyrng.randint(2, 4),
+        )
+        fs = VecFs()
+        store, _ = Store.recover(fs, cfg)
+        oracle = Oracle()
+        next_new = 1
+        now = 0
+        for _ in range(pyrng.randint(10, 60)):
+            now += 1
+            r = pyrng.random()
+            if r < 0.55:
+                ids = {e[3].doc_id for e in oracle.log}
+                if ids and pyrng.random() < 0.3:
+                    doc_id = pyrng.choice(sorted(ids))  # overwrite -> ghost
+                else:
+                    doc_id = next_new
+                    next_new += 1
+                doc = rand_doc(pyrng, doc_id)
+                flen = store.append_doc(doc, now)
+                oracle.record(store.active_id, store.active_bytes - flen, flen, doc)
+            elif r < 0.65:
+                store.seal(now)
+            elif r < 0.75:
+                input_ids = [s.id for s in store.sealed]
+                merged_id = store.next_id
+                if store.maybe_compact(now) is not None:
+                    oracle.compacted(input_ids, merged_id)
+            elif r < 0.90:
+                # Clean crash: the store dies, the shared "disk" survives.
+                del store
+                store, docs = Store.recover(fs, cfg)
+                assert_converged(store, docs, oracle, f"diff seed {seed} clean@{now}")
+            else:
+                # Dirty crash: tear or corrupt the active tail first.
+                active_id, active_name = store.active_id, store.active_name
+                alen = fs.length(active_name) or 0
+                active_entries = [e for e in oracle.log if e[0] == active_id]
+                if alen > 0 and active_entries:
+                    if pyrng.random() < 0.5:
+                        keep = pyrng.randint(0, alen)
+                        fs.chop(active_name, keep)
+                        oracle.chop_active(active_id, keep)
+                    else:
+                        _, off, flen, _ = pyrng.choice(active_entries)
+                        fs.flip_byte(active_name, off + pyrng.randint(0, flen - 1))
+                        # Recovery stops at the corrupt frame and truncates:
+                        # everything from that frame on is gone.
+                        oracle.chop_active(active_id, off)
+                del store
+                store, docs = Store.recover(fs, cfg)
+                assert_converged(store, docs, oracle, f"diff seed {seed} dirty@{now}")
+        store.seal(now + 1)
+        del store
+        store, docs = Store.recover(fs, cfg)
+        assert_converged(store, docs, oracle, f"diff seed {seed} final")
+        check(store.counters.frames_torn == 0, f"diff seed {seed}: final recover saw torn frames")
+
+
+# ---------------------------------------------------------------------------
+# 5. Compaction crash windows
+# ---------------------------------------------------------------------------
+def _ghosty_store(pyrng):
+    """A store with several sealed segments and superseded versions."""
+    cfg = SegmentConfig(seal_docs=3, compact_min_segments=2)
+    fs = VecFs()
+    store, _ = Store.recover(fs, cfg)
+    oracle = Oracle()
+    now = 0
+    for i in list(range(1, 10)) + [1, 2, 3]:  # 1..=3 re-indexed: ghosts
+        now += 1
+        doc = rand_doc(pyrng, i)
+        flen = store.append_doc(doc, now)
+        oracle.record(store.active_id, store.active_bytes - flen, flen, doc)
+    store.seal(now + 1)
+    return cfg, fs, store, oracle
+
+
+def t_compaction_crash_windows():
+    pyrng = random.Random(14)
+    for trial in range(30):
+        # Window (1)->(2): merged file written, manifest still references
+        # the inputs. Recovery keeps the old view and removes the orphan.
+        cfg, fs, store, oracle = _ghosty_store(pyrng)
+        n_sealed = len(store.sealed)
+        try:
+            store.compact(99, crash_after=1)
+            check(False, f"w1 trial {trial}: crash did not fire")
+        except Crash:
+            pass
+        merged_name = seg_name(store.next_id)
+        check(fs.read(merged_name) is not None, f"w1 trial {trial}: merged file missing pre-crash")
+        st2, docs = Store.recover(fs, cfg)
+        assert_converged(st2, docs, oracle, f"w1 trial {trial}")
+        check(st2.counters.orphans_removed >= 1, f"w1 trial {trial}: orphan merge kept")
+        check(fs.read(merged_name) is None, f"w1 trial {trial}: orphan merge still on disk")
+        check(len(st2.sealed) == n_sealed, f"w1 trial {trial}: old sealed set changed")
+
+        # Window (2)->(4): manifest committed, inputs not yet deleted.
+        # Recovery serves the merged view and removes the orphan inputs.
+        cfg, fs, store, oracle = _ghosty_store(pyrng)
+        input_names = [seg_name(s.id) for s in store.sealed]
+        try:
+            store.compact(99, crash_after=2)
+            check(False, f"w2 trial {trial}: crash did not fire")
+        except Crash:
+            pass
+        st2, docs = Store.recover(fs, cfg)
+        assert_converged(st2, docs, oracle, f"w2 trial {trial}")
+        check(len(st2.sealed) == 1, f"w2 trial {trial}: merged manifest not in force")
+        check(st2.counters.orphans_removed >= len(input_names),
+              f"w2 trial {trial}: {st2.counters.orphans_removed} orphans removed, "
+              f"want >= {len(input_names)}")
+        for name in input_names:
+            check(fs.read(name) is None, f"w2 trial {trial}: input {name} still on disk")
+
+        # A completed compaction also survives a crash right after it.
+        cfg, fs, store, oracle = _ghosty_store(pyrng)
+        report = store.compact(99)
+        check(report["frames_dropped"] >= 3, f"w3 trial {trial}: ghosts not dropped")
+        check(report["bytes_after"] < report["bytes_before"], f"w3 trial {trial}: no reclaim")
+        st2, docs = Store.recover(fs, cfg)
+        assert_converged(st2, docs, oracle, f"w3 trial {trial}")
+
+    # Unreferenced junk is always removed.
+    cfg, fs, store, oracle = _ghosty_store(pyrng)
+    fs.write_atomic(seg_name(9999), b"stray uncommitted bytes")
+    fs.write_atomic("MANIFEST.tmp", b"{half a manifest")
+    st2, docs = Store.recover(fs, cfg)
+    assert_converged(st2, docs, oracle, "junk")
+    check(fs.read(seg_name(9999)) is None, "junk: stray segment kept")
+    check(fs.read("MANIFEST.tmp") is None, "junk: stale tmp kept")
+
+
+# ---------------------------------------------------------------------------
+# 6. Manifest validation + strict sealed replay
+# ---------------------------------------------------------------------------
+def t_manifest():
+    n, a, sealed = manifest_from_json(manifest_to_json(7, 3, [SealedSeg(1, 5, 10, 999)]))
+    check((n, a) == (7, 3), "manifest: next_id/active roundtrip")
+    check(sealed[0].id == 1 and sealed[0].bytes == 999, "manifest: sealed roundtrip")
+    for bad in (
+        '{"version": 2, "next_id": 2, "active": 1, "sealed": []}',
+        '{"next_id": 2, "active": 1, "sealed": []}',
+        '{"version": 1, "active": 1, "sealed": []}',
+        '{"version": 1, "next_id": 2, "sealed": []}',
+        '{"version": 1, "next_id": 2, "active": 1, "sealed": [{"frames": 3}]}',
+        "not json at all",
+    ):
+        try:
+            manifest_from_json(bad)
+            check(False, f"manifest: accepted {bad!r}")
+        except RecoverError:
+            pass
+    # Defaults: sealed entries only need `id`.
+    _, _, sealed = manifest_from_json('{"version": 1, "next_id": 5, "active": 4, "sealed": [{"id": 2}]}')
+    check(sealed[0].seal_time == 0 and sealed[0].frames == 0 and sealed[0].bytes == 0,
+          "manifest: sealed defaults")
+
+    # A corrupt SEALED segment must fail recovery loudly (strict replay),
+    # never silently truncate — only the active tail is forgiving.
+    pyrng = random.Random(15)
+    cfg, fs, store, _ = _ghosty_store(pyrng)
+    first_sealed = seg_name(store.sealed[0].id)
+    del store
+    fs.flip_byte(first_sealed, 20)
+    try:
+        Store.recover(fs, cfg)
+        check(False, "manifest: corrupt sealed segment recovered silently")
+    except RecoverError:
+        pass
+
+
+def main():
+    for name, fn in [
+        ("frame roundtrip (300 docs)", t_roundtrip),
+        ("torn/corrupt at every cut+flip", t_cuts_and_flips),
+        ("truncation sweep (every byte offset)", t_truncation_sweep),
+        ("differential vs oracle (300 seeds)", t_differential),
+        ("compaction crash windows", t_compaction_crash_windows),
+        ("manifest + strict sealed replay", t_manifest),
+    ]:
+        fn()
+        print(f"ok: {name}")
+    if FAILURES:
+        print(f"\n{len(FAILURES)} FAILURES")
+        sys.exit(1)
+    print("\nall segment-model checks passed")
+
+
+if __name__ == "__main__":
+    main()

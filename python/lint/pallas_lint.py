@@ -68,6 +68,8 @@ HOT_MANIFEST = (
     "drain_due_into",
     "receive_prioritized_into",
     "flush_at",
+    "append_doc",
+    "search_all_into",
 )
 
 WALL_TOKENS = ("SystemTime", "Instant::now")

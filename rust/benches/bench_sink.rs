@@ -1,0 +1,235 @@
+//! Durable-segment-store hot-path bench: the sink's append path
+//! (`SegmentStore::append_doc`), crash-recovery replay, compaction
+//! ghost-dropping, and the pooled `search_all_into` read path.
+//!
+//! A thread-local counting allocator asserts the two `lint:hot-path`
+//! functions are **zero-alloc in steady state** once the pooled buffers
+//! are warm: `append_doc` encodes into a recycled frame buffer and
+//! appends to a capacity-reserved file (`SegmentStore::reserve`), and
+//! `search_all_into` intersects postings through recycled scratch.
+//! Results go to `BENCH_sink.json` at the repo root (same schema family
+//! as `BENCH_store.json`) so later PRs can track the trajectory.
+//!
+//! ```bash
+//! cargo bench --bench bench_sink
+//! SINK_DOCS=20000 SINK_SEARCHES=20000 cargo bench --bench bench_sink   # CI smoke
+//! ```
+
+use alertmix::benchlib::{allocs, bench_out_path, env_u64, section, time, CountingAllocator, Table};
+use alertmix::sink::{ElasticLite, SegmentConfig, SegmentStore, SinkDoc, VecFs};
+use alertmix::util::hash::combine;
+
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
+
+const VOCAB: [&str; 12] = [
+    "alpha", "beta", "gamma", "delta", "storm", "rally", "calm", "surge", "index", "market",
+    "outage", "signal",
+];
+
+fn word(i: u64, salt: u64) -> &'static str {
+    VOCAB[(combine(i, salt) % VOCAB.len() as u64) as usize]
+}
+
+/// Deterministic synthetic doc (~120 byte frame): three-word title,
+/// eight-word body, two scores, occasional gauge field.
+fn mk_doc(id: u64) -> SinkDoc {
+    let title = format!("{} {} {}", word(id, 1), word(id, 2), word(id, 3));
+    let mut body = String::new();
+    for s in 4..12u64 {
+        if s > 4 {
+            body.push(' ');
+        }
+        body.push_str(word(id, s));
+    }
+    SinkDoc {
+        doc_id: id,
+        stream_id: id % 64,
+        guid: format!("guid-{id}"),
+        title,
+        body,
+        url: format!("http://feed/{id}"),
+        published_ms: id * 10,
+        ingested_ms: id * 10 + 5,
+        scores: vec![
+            (combine(id, 77) % 1000) as f32 / 1000.0,
+            (combine(id, 78) % 1000) as f32 / 1000.0,
+        ],
+        simhash: combine(id, 99),
+        fields: if id % 3 == 0 {
+            vec![(std::rc::Rc::from("gauge"), (combine(id, 13) % 500) as f64)]
+        } else {
+            Vec::new()
+        },
+    }
+}
+
+fn main() {
+    let n_docs = env_u64("SINK_DOCS", 200_000);
+    let n_searches = env_u64("SINK_SEARCHES", 200_000);
+    section(&format!(
+        "segment store: append / recover / compact over {n_docs} docs, \
+         {n_searches} pooled searches"
+    ));
+
+    // Docs are pre-built so the measured windows see only the hot paths.
+    let docs: Vec<SinkDoc> = (1..=n_docs).map(mk_doc).collect();
+    let max_frame = docs.iter().map(|d| d.guid.len() + d.title.len() + d.body.len() + d.url.len() + 128).max().unwrap_or(256);
+
+    // --- append hot path (zero-alloc steady state) -------------------------
+    // Budgets high enough that the measured window never seals: sealing
+    // is the rare, allocation-permitted path by design.
+    let cfg = SegmentConfig {
+        seal_bytes: u64::MAX,
+        seal_docs: u64::MAX,
+        compact_min_segments: usize::MAX,
+    };
+    let (mut store, recovered) =
+        SegmentStore::recover(Box::new(VecFs::new()), cfg).expect("fresh store");
+    assert!(recovered.is_empty());
+    // Warmup: a slice of appends to size the frame buffer, then reserve
+    // the location index + backing file for everything still to come.
+    let warm = (n_docs / 10).max(1) as usize;
+    for d in &docs[..warm] {
+        store.append_doc(d, 0).expect("warmup append");
+    }
+    store.reserve(docs.len() * 6, max_frame);
+    let a0 = allocs();
+    for d in &docs[warm..] {
+        store.append_doc(d, 0).expect("steady append");
+    }
+    let steady_appends = (docs.len() - warm) as u64;
+    let steady_allocs = allocs() - a0;
+    let allocs_per_doc = steady_allocs as f64 / steady_appends as f64;
+    // Throughput over full passes (re-appending the same ids is valid:
+    // latest-wins overwrites, exactly the post-restore re-delivery shape).
+    let bytes_per_pass: u64 = store.active_bytes();
+    let (append_wall, _) = time(3, || {
+        for d in &docs {
+            store.append_doc(d, 0).expect("timed append");
+        }
+    });
+    let append_docs_s = docs.len() as f64 / append_wall;
+    let append_mb_s = bytes_per_pass as f64 / (1 << 20) as f64 / append_wall;
+
+    let mut t = Table::new(&["path", "docs/s", "us/doc", "allocs/doc (steady)"]);
+    t.row(&[
+        "append_doc".into(),
+        format!("{append_docs_s:.0}"),
+        format!("{:.3}", 1e6 / append_docs_s),
+        format!("{allocs_per_doc:.4}"),
+    ]);
+    t.print();
+    println!("steady-state allocations over {steady_appends} appends: {steady_allocs}");
+    assert_eq!(
+        steady_allocs, 0,
+        "append_doc must not allocate in steady state (pooled frame buffer + reserved fs)"
+    );
+
+    // --- crash-recovery replay ---------------------------------------------
+    // Realistic seal budget so recovery walks many sealed segments plus
+    // an active tail — the actual restart shape.
+    section("crash-recovery replay (sealed segments + active tail)");
+    let disk = VecFs::new();
+    let cfg2 = SegmentConfig { seal_docs: 4_096, ..SegmentConfig::default() };
+    let (mut store2, _) =
+        SegmentStore::recover(Box::new(disk.clone()), cfg2.clone()).expect("fresh store");
+    for d in &docs {
+        store2.append_doc(d, d.doc_id).expect("recovery-corpus append");
+    }
+    let sealed = store2.sealed_count();
+    let disk_bytes = store2.total_bytes();
+    drop(store2); // the process dies; `disk` is the surviving image
+    let mut recovered_docs = 0usize;
+    let (rec_wall, _) = time(3, || {
+        let (st, replayed) = SegmentStore::recover(Box::new(disk.clone()), cfg2.clone())
+            .expect("recovery replay");
+        recovered_docs = replayed.len();
+        std::hint::black_box(st.live_docs());
+    });
+    assert_eq!(recovered_docs as u64, n_docs, "replay reconverges with the corpus");
+    let rec_docs_s = recovered_docs as f64 / rec_wall;
+    println!(
+        "replayed {recovered_docs} docs from {sealed} sealed segments \
+         ({:.1} MiB) in {rec_wall:.3}s ({rec_docs_s:.0} docs/s)",
+        disk_bytes as f64 / (1 << 20) as f64
+    );
+
+    // --- compaction: drop ghosts from an overwrite-heavy log ---------------
+    section("compaction (ghost frames from latest-wins overwrites)");
+    let (mut store3, _) =
+        SegmentStore::recover(Box::new(disk.clone()), cfg2.clone()).expect("reopen");
+    for d in &docs {
+        store3.append_doc(d, d.doc_id).expect("overwrite pass"); // every id now has a ghost
+    }
+    store3.seal(n_docs * 10).expect("seal before compaction");
+    // Compaction runs off the sim clock (not a hot path) — report its
+    // effect, not a wall time: a single merge is all a store ever does.
+    let report = store3
+        .maybe_compact(n_docs * 10 + 1)
+        .expect("compact")
+        .expect("overwrite-heavy log must compact");
+    println!(
+        "merged {} segments: kept {} frames, dropped {} ghosts, {} -> {} bytes",
+        report.merged, report.frames_kept, report.frames_dropped, report.bytes_before,
+        report.bytes_after
+    );
+    assert!(report.frames_dropped >= n_docs, "every overwritten id leaves a ghost");
+
+    // --- pooled search path (zero-alloc steady state) ----------------------
+    section("search_all_into (pooled postings intersection)");
+    let mut sink = ElasticLite::new(1024);
+    for d in docs.iter().take(20_000) {
+        sink.ingest(d.clone());
+    }
+    sink.flush_at(0);
+    let term_sets: [&[&str]; 4] =
+        [&["alpha"], &["storm", "rally"], &["index", "market", "signal"], &["calm", "outage"]];
+    let mut out = Vec::new();
+    for terms in &term_sets {
+        sink.search_all_into(terms, &mut out); // warm scratch/lc_buf/out
+        std::hint::black_box(out.len());
+    }
+    let a0 = allocs();
+    let mut hits = 0u64;
+    for i in 0..n_searches {
+        sink.search_all_into(term_sets[(i % 4) as usize], &mut out);
+        hits += out.len() as u64;
+    }
+    let search_steady = allocs() - a0;
+    let (search_wall, _) = time(3, || {
+        for i in 0..n_searches {
+            sink.search_all_into(term_sets[(i % 4) as usize], &mut out);
+            std::hint::black_box(out.len());
+        }
+    });
+    let searches_s = n_searches as f64 / search_wall;
+    println!(
+        "{n_searches} searches, {hits} total hits: {searches_s:.0} searches/s, \
+         steady-state allocations: {search_steady}"
+    );
+    assert!(hits > 0, "vocabulary terms must match indexed docs");
+    assert_eq!(search_steady, 0, "search_all_into must not allocate once pools are warm");
+
+    // --- machine-readable trend record -------------------------------------
+    let json = format!(
+        "{{\n  \"bench\": \"sink\",\n  \"docs\": {n_docs},\n  \
+         \"append\": {{\"docs_per_sec\": {append_docs_s:.0}, \"mb_per_sec\": {append_mb_s:.1}, \
+         \"allocs_per_doc\": {allocs_per_doc:.4}, \"zero_alloc_steady_state\": {}}},\n  \
+         \"recovery\": {{\"docs\": {recovered_docs}, \"sealed_segments\": {sealed}, \
+         \"docs_per_sec\": {rec_docs_s:.0}, \"wall_s\": {rec_wall:.4}}},\n  \
+         \"compaction\": {{\"segments_merged\": {}, \"frames_dropped\": {}, \
+         \"bytes_reclaimed\": {}}},\n  \
+         \"search\": {{\"searches_per_sec\": {searches_s:.0}, \"zero_alloc_steady_state\": {}}}\n}}\n",
+        steady_allocs == 0,
+        report.merged,
+        report.frames_dropped,
+        report.bytes_before.saturating_sub(report.bytes_after),
+        search_steady == 0,
+    );
+    let out = bench_out_path("BENCH_sink.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}

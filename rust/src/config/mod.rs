@@ -123,6 +123,13 @@ pub struct AlertMixConfig {
     /// to a single branch per doc: runs without rules are byte-identical
     /// to a build without the subsystem.
     pub alerts: crate::alert::AlertsConfig,
+
+    // -- durable segment store --------------------------------------------
+    /// Durable segment tier under the sink (`crate::sink::segment`).
+    /// Disabled by default: off-runs are byte-identical to the pure
+    /// in-memory sink (pinned by a replay test), and no `CompactTick`
+    /// timer is even scheduled, so event interleaving is untouched.
+    pub segment_store: crate::sink::SegmentStoreConfig,
 }
 
 impl Default for AlertMixConfig {
@@ -172,6 +179,7 @@ impl Default for AlertMixConfig {
             monitor_interval: MINUTE,
             fault: crate::fault::FaultPlan::default(),
             alerts: crate::alert::AlertsConfig::default(),
+            segment_store: crate::sink::SegmentStoreConfig::default(),
         }
     }
 }
@@ -312,6 +320,9 @@ impl AlertMixConfig {
                 "monitor_interval_ms" => c.monitor_interval = u()?,
                 "fault" => c.fault = crate::fault::FaultPlan::from_json(v)?,
                 "alerts" => c.alerts = crate::alert::AlertsConfig::from_json(v)?,
+                "segment_store" => {
+                    c.segment_store = crate::sink::SegmentStoreConfig::from_json(v)?
+                }
                 other => bail!("unknown config key: {other}"),
             }
         }
@@ -377,6 +388,7 @@ impl AlertMixConfig {
         }
         self.alerts.validate()?;
         self.fault.validate()?;
+        self.segment_store.validate()?;
         Ok(())
     }
 }
@@ -552,6 +564,41 @@ mod tests {
         let j = Json::parse(r#"{"alerts": [{"name": "p"}]}"#).unwrap();
         assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err(), "no predicate");
         let j = Json::parse(r#"{"alerts": [{"name": "a", "nope": 1}]}"#).unwrap();
+        assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
+    }
+
+    #[test]
+    fn segment_store_key_parses_defaults_and_validates() {
+        // Absent key: store off (the byte-identical default).
+        let j = Json::parse(r#"{"n_feeds": 50}"#).unwrap();
+        let c = AlertMixConfig::from_json(&j, AlertMixConfig::default()).unwrap();
+        assert!(!c.segment_store.enabled);
+        // Bool shorthand.
+        let j = Json::parse(r#"{"segment_store": true}"#).unwrap();
+        let c = AlertMixConfig::from_json(&j, AlertMixConfig::default()).unwrap();
+        assert!(c.segment_store.enabled);
+        assert!(c.segment_store.dir.is_empty(), "default backing is in-memory VecFs");
+        // Full object threads through.
+        let j = Json::parse(
+            r#"{"segment_store": {"enabled": true, "seal_docs": 128, "seal_bytes": 65536,
+                "hot_docs": 500, "compact_min_segments": 3, "compact_interval_ms": 30000}}"#,
+        )
+        .unwrap();
+        let c = AlertMixConfig::from_json(&j, AlertMixConfig::default()).unwrap();
+        assert!(c.segment_store.enabled);
+        assert_eq!(c.segment_store.seal_docs, 128);
+        assert_eq!(c.segment_store.hot_docs, 500);
+        assert_eq!(c.segment_store.compact_min_segments, 3);
+        assert_eq!(c.segment_store.compact_interval_ms, 30_000);
+        // Bad values and unknown sub-keys refuse.
+        let j = Json::parse(r#"{"segment_store": {"enabled": true, "seal_docs": 0}}"#).unwrap();
+        assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
+        let j = Json::parse(r#"{"segment_store": {"nope": 1}}"#).unwrap();
+        assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
+        let j = Json::parse(
+            r#"{"segment_store": {"enabled": true, "compact_min_segments": 1}}"#,
+        )
+        .unwrap();
         assert!(AlertMixConfig::from_json(&j, AlertMixConfig::default()).is_err());
     }
 

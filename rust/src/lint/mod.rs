@@ -43,14 +43,17 @@ pub const SUPPRESSIBLE_RULES: [&str; 8] = [
 
 /// Bench-asserted 0-alloc functions: every definition in rust/src must
 /// carry a hot-path marker comment (bench_ingest / bench_alerts /
-/// bench_store / bench_sqs pin these at 0 allocs per item in steady state).
-pub const HOT_MANIFEST: [&str; 6] = [
+/// bench_store / bench_sqs / bench_sink pin these at 0 allocs per item
+/// in steady state).
+pub const HOT_MANIFEST: [&str; 8] = [
     "featurize_item_into",
     "percolate",
     "pick_due_into",
     "drain_due_into",
     "receive_prioritized_into",
     "flush_at",
+    "append_doc",
+    "search_all_into",
 ];
 
 const WALL_TOKENS: [&str; 2] = ["SystemTime", "Instant::now"];

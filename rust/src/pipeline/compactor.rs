@@ -1,0 +1,105 @@
+//! SinkCompactor: background compaction driver for the durable segment
+//! store, ticked off the sim clock (`CompactTick`). Merges sealed
+//! segments and drops superseded doc versions whenever the sealed count
+//! crosses the configured threshold; a below-threshold tick is a no-op.
+//!
+//! Spawned (and its timer scheduled) only when `segment_store.enabled`,
+//! so store-off runs keep the exact pre-PR actor topology and event
+//! interleaving.
+
+use super::messages::CompactTick;
+use super::world::World;
+use crate::actor::{Actor, ActorResult, Ctx, Msg};
+
+pub struct SinkCompactor;
+
+impl Actor<World> for SinkCompactor {
+    fn receive(&mut self, ctx: &mut Ctx, world: &mut World, msg: Msg) -> ActorResult {
+        if msg.downcast::<CompactTick>().is_err() {
+            return Ok(());
+        }
+        let now = ctx.now();
+        match world.sink.compact_tick(now) {
+            Ok(Some(report)) => {
+                world.metrics.count("SinkCompactions", now, 1.0);
+                world.metrics.count("SegmentGhostsDropped", now, report.frames_dropped as f64);
+                world.metrics.gauge(
+                    "SegmentBytesReclaimed",
+                    now,
+                    report.bytes_before.saturating_sub(report.bytes_after) as f64,
+                );
+            }
+            Ok(None) => {}
+            Err(e) => {
+                world.sink.counters.segment_errors += 1;
+                world.metrics.count("SinkCompactionErrors", now, 1.0);
+                eprintln!("alertmix: sink compaction failed: {e}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::actor::{ActorSystem, MailboxKind};
+    use crate::config::AlertMixConfig;
+
+    #[test]
+    fn compact_tick_merges_when_threshold_met() {
+        let mut cfg = AlertMixConfig::tiny();
+        cfg.segment_store.enabled = true;
+        cfg.segment_store.seal_docs = 2;
+        cfg.segment_store.compact_min_segments = 2;
+        let mut w = World::build(&cfg).unwrap();
+        // Hand-feed enough docs to seal several segments.
+        for i in 0..10u64 {
+            w.sink.ingest(crate::sink::SinkDoc {
+                doc_id: i + 1,
+                stream_id: 0,
+                guid: format!("g{i}"),
+                title: "compact me".to_string(),
+                body: String::new(),
+                url: String::new(),
+                published_ms: i,
+                ingested_ms: i,
+                scores: Vec::new(),
+                simhash: 0,
+                fields: Vec::new(),
+            });
+        }
+        w.sink.flush();
+        let (sealed_before, _, _) = w.sink.segment_shape().unwrap();
+        assert!(sealed_before >= 2);
+
+        let mut sys: ActorSystem<World> = ActorSystem::new(1);
+        let c =
+            sys.spawn("sink-compactor", MailboxKind::Unbounded, Box::new(|_| Box::new(SinkCompactor)));
+        sys.tell_at(1_000, c, CompactTick);
+        sys.run_to_idle(&mut w);
+
+        let (sealed_after, _, _) = w.sink.segment_shape().unwrap();
+        assert_eq!(sealed_after, 1, "sealed segments merged into one");
+        assert_eq!(w.sink.segment_counters().unwrap().compactions, 1);
+        assert!(w.metrics.get("SinkCompactions").is_some());
+        // Reads survive compaction.
+        for i in 0..10u64 {
+            assert!(w.sink.fetch(i + 1).is_some(), "doc {} lost", i + 1);
+        }
+    }
+
+    #[test]
+    fn below_threshold_tick_is_silent() {
+        let mut cfg = AlertMixConfig::tiny();
+        cfg.segment_store.enabled = true; // defaults: 8192 docs/seal, min 4
+        let mut w = World::build(&cfg).unwrap();
+        let mut sys: ActorSystem<World> = ActorSystem::new(1);
+        let c =
+            sys.spawn("sink-compactor", MailboxKind::Unbounded, Box::new(|_| Box::new(SinkCompactor)));
+        sys.tell_at(1_000, c, CompactTick);
+        sys.run_to_idle(&mut w);
+        assert_eq!(w.sink.segment_counters().unwrap().compactions, 0);
+        assert!(w.metrics.get("SinkCompactions").is_none());
+    }
+}

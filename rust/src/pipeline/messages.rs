@@ -20,6 +20,11 @@ pub struct EnrichTick;
 /// Timer: dead-letters / alarm evaluation.
 pub struct MonitorTick;
 
+/// Timer: sink segment-store compaction pass. Only scheduled when the
+/// `segment_store` config is enabled — an idle timer would still perturb
+/// event interleaving, and off-runs must stay byte-identical.
+pub struct CompactTick;
+
 /// A feed-processing job pulled from SQS, en route to a channel pool.
 #[derive(Debug, Clone)]
 pub struct FeedJob {

@@ -28,6 +28,7 @@
 //! ```
 
 pub mod alerts;
+mod compactor;
 mod distributor;
 mod enrich_stage;
 pub mod feedback;
@@ -72,6 +73,10 @@ pub struct Handles {
     pub updaters: Vec<ActorId>,
     pub enrich_stage: ActorId,
     pub monitor: ActorId,
+    /// Segment-store compaction driver; `None` unless the
+    /// `segment_store` config is enabled (off-runs spawn no extra actor
+    /// and schedule no extra timer — topology stays byte-identical).
+    pub compactor: Option<ActorId>,
 }
 
 impl Handles {
@@ -100,6 +105,7 @@ impl Handles {
             updaters: vec![actor],
             enrich_stage: actor,
             monitor: actor,
+            compactor: None,
         }
     }
 }
@@ -254,6 +260,19 @@ pub fn bootstrap_with(
         Box::new(|_| Box::new(monitor::DeadLettersMonitor)),
     );
 
+    // Segment-store compaction driver, only under an enabled store: an
+    // idle actor + timer would still perturb event interleaving, and
+    // store-off runs are pinned byte-identical to the pre-store build.
+    let compactor = if cfg.segment_store.enabled {
+        Some(sys.spawn(
+            "sink-compactor",
+            MailboxKind::Unbounded,
+            Box::new(|_| Box::new(compactor::SinkCompactor)),
+        ))
+    } else {
+        None
+    };
+
     let handles = Handles {
         pickers: pickers.clone(),
         feed_router,
@@ -263,6 +282,7 @@ pub fn bootstrap_with(
         updaters,
         enrich_stage,
         monitor,
+        compactor,
     };
     world.handles = Some(handles.clone());
     world.dead_letters = sys.dead_letters.clone();
@@ -291,6 +311,10 @@ pub fn bootstrap_with(
         PRIORITY_NORMAL,
         || MonitorTick,
     );
+    if let Some(compactor) = compactor {
+        let every = cfg.segment_store.compact_interval_ms.max(1);
+        sys.schedule_periodic(every, every, compactor, PRIORITY_NORMAL, || CompactTick);
+    }
 
     Ok((sys, world, handles))
 }
@@ -343,6 +367,22 @@ mod tests {
             let pool = h.pool_for(id).expect("pool per connector");
             assert_eq!(sys.name_of(pool), format!("{}-pool", d.name));
         }
+    }
+
+    #[test]
+    fn segment_store_gates_the_compactor_actor() {
+        // Off (default): no extra cell, no handle — topology unchanged.
+        let (sys, world, h) = bootstrap(AlertMixConfig::tiny()).unwrap();
+        assert!(h.compactor.is_none());
+        assert_eq!(sys.cell_count(), 7 + world.connectors.connector_count());
+        // On: exactly one extra actor, named.
+        let mut cfg = AlertMixConfig::tiny();
+        cfg.segment_store.enabled = true;
+        let (sys, world, h) = bootstrap(cfg).unwrap();
+        let c = h.compactor.expect("compactor spawned when store enabled");
+        assert_eq!(sys.name_of(c), "sink-compactor");
+        assert_eq!(sys.cell_count(), 8 + world.connectors.connector_count());
+        assert!(world.sink.segments_enabled());
     }
 
     #[test]

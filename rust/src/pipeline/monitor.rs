@@ -53,6 +53,22 @@ impl Actor<World> for DeadLettersMonitor {
             world.metrics.gauge("AlertsResolved", now, st.resolved as f64);
             world.metrics.gauge("PercolatorProbesPerDoc", now, world.alert_engine.probes_per_doc());
         }
+        // Durable-segment-store gauges, gated the same way: a disabled
+        // store publishes nothing, keeping off-runs byte-identical.
+        if world.sink.segments_enabled() {
+            if let Some((sealed, total_bytes, active_bytes)) = world.sink.segment_shape() {
+                world.metrics.gauge("SegmentsSealed", now, sealed as f64);
+                world.metrics.gauge("SegmentBytes", now, total_bytes as f64);
+                world.metrics.gauge("SegmentActiveBytes", now, active_bytes as f64);
+            }
+            world.metrics.gauge("SinkHotDocs", now, world.sink.hot_count() as f64);
+            if let Some(sc) = world.sink.segment_counters() {
+                world.metrics.gauge("SegmentsSealedTotal", now, sc.segments_sealed as f64);
+                world.metrics.gauge("SinkDocsRecovered", now, sc.docs_recovered as f64);
+                world.metrics.gauge("SegmentGhostFrames", now, sc.frames_dropped as f64);
+                world.metrics.gauge("SegmentHotMisses", now, sc.hot_misses as f64);
+            }
+        }
 
         // Close the loop against breaker state: pools whose channel
         // breaker is open are marked grow-inhibited on the feedback bus
@@ -175,6 +191,33 @@ mod tests {
         // Alert gauges stay gated too: no registered rules, no signals.
         assert!(w.metrics.get("AlertsActive").is_none());
         assert!(w.metrics.get("PercolatorProbesPerDoc").is_none());
+    }
+
+    #[test]
+    fn segment_gauges_gate_on_the_store() {
+        // Store off: no segment gauges at all.
+        let mut sys: ActorSystem<World> = ActorSystem::new(1);
+        let mut w = World::build(&AlertMixConfig::tiny()).unwrap();
+        w.dead_letters = sys.dead_letters.clone();
+        let mon =
+            sys.spawn("mon", MailboxKind::Unbounded, Box::new(|_| Box::new(DeadLettersMonitor)));
+        sys.tell_at(MINUTE, mon, MonitorTick);
+        sys.run_to_idle(&mut w);
+        assert!(w.metrics.get("SegmentsSealed").is_none());
+        assert!(w.metrics.get("SinkHotDocs").is_none());
+        // Store on: the gauges publish.
+        let mut sys: ActorSystem<World> = ActorSystem::new(1);
+        let mut cfg = AlertMixConfig::tiny();
+        cfg.segment_store.enabled = true;
+        let mut w = World::build(&cfg).unwrap();
+        w.dead_letters = sys.dead_letters.clone();
+        let mon =
+            sys.spawn("mon", MailboxKind::Unbounded, Box::new(|_| Box::new(DeadLettersMonitor)));
+        sys.tell_at(MINUTE, mon, MonitorTick);
+        sys.run_to_idle(&mut w);
+        for name in ["SegmentsSealed", "SegmentBytes", "SinkHotDocs", "SinkDocsRecovered"] {
+            assert!(w.metrics.get(name).is_some(), "{name} gauge missing with store on");
+        }
     }
 
     #[test]

@@ -250,6 +250,21 @@ impl World {
         let fault = ChaosInjector::new(cfg.fault.clone(), cfg.seed ^ FAULT_SEED_SALT);
         let mut sink = ElasticLite::new(cfg.sink_bulk);
         sink.chaos = fault.sink_chaos();
+        // Durable segment tier: off by default (byte-identical sink). An
+        // empty `dir` backs the store with the deterministic in-memory
+        // VecFs; a real directory replays whatever a previous run left.
+        if cfg.segment_store.enabled {
+            let fs: Box<dyn crate::sink::SegFs> = if cfg.segment_store.dir.is_empty() {
+                Box::new(crate::sink::VecFs::new())
+            } else {
+                Box::new(crate::sink::StdFs::open(&cfg.segment_store.dir)?)
+            };
+            sink.enable_segments(
+                fs,
+                cfg.segment_store.to_segment_config(),
+                cfg.segment_store.hot_docs,
+            )?;
+        }
 
         // Register the config's declarative standing queries (validated
         // again here so programmatic construction gets the same gate).
@@ -567,6 +582,42 @@ impl World {
                 ));
             }
         }
+        s
+    }
+
+    /// Human-readable durable-segment-store summary (the storage
+    /// counterpart of `recovery_table`). Empty string when the store is
+    /// off, so callers can print unconditionally.
+    pub fn segment_table(&self) -> String {
+        let Some(sc) = self.sink.segment_counters() else { return String::new() };
+        let (sealed, total_bytes, active_bytes) = self.sink.segment_shape().unwrap_or((0, 0, 0));
+        let mut s = String::new();
+        s.push_str(&format!(
+            "  segments: sealed={} active_bytes={} total_bytes={} live_docs={} hot_docs={}\n",
+            sealed,
+            active_bytes,
+            total_bytes,
+            self.sink.doc_count(),
+            self.sink.hot_count(),
+        ));
+        s.push_str(&format!(
+            "  appends={} seals={} compactions={} merged={} ghosts_dropped={}\n",
+            sc.frames_appended,
+            sc.segments_sealed,
+            sc.compactions,
+            sc.segments_merged,
+            sc.frames_dropped,
+        ));
+        s.push_str(&format!(
+            "  recovery: docs_recovered={} torn_frames={} orphans_removed={}\n",
+            sc.docs_recovered, sc.frames_torn, sc.orphans_removed,
+        ));
+        s.push_str(&format!(
+            "  fetch tiers: hot_hits={} hot_misses={} segment_errors={}\n",
+            sc.hot_hits,
+            sc.hot_misses,
+            self.sink.counters.segment_errors,
+        ));
         s
     }
 }

@@ -1,0 +1,240 @@
+//! Background compaction for the segment store.
+//!
+//! Sealed segments accumulate superseded doc versions (a doc re-indexed
+//! later leaves its old frame behind as a ghost). Compaction merges all
+//! sealed segments into one, keeping only frames the location index
+//! still points at, and swaps the set through the manifest protocol:
+//!
+//! 1. write the merged segment fully (atomic: whole file or nothing);
+//! 2. commit a manifest that references the merged segment instead of
+//!    the inputs — **this is the only state transition**;
+//! 3. retarget the in-memory location index;
+//! 4. delete the input files.
+//!
+//! A crash between (1) and (2) leaves an orphan merged file: recovery
+//! removes it and replays the old inputs, which the old manifest still
+//! references. A crash between (2) and (4) leaves orphan input files:
+//! recovery removes those and replays the merged segment. Readers never
+//! observe a half-compacted view in either case.
+//!
+//! The merged segment keeps the max input `seal_time` as its key so the
+//! `(seal_time, segment_id)` replay order stays monotone; frames keep
+//! their input order, which preserves latest-wins semantics for any doc
+//! whose newest version lives in a later sealed segment or the active
+//! tail. Driven off the sim clock by the `CompactTick` timer — never a
+//! wall clock — so chaos runs replay bit-for-bit.
+
+use super::segment::{peek_doc_id, seg_name as seg_file, SealedSeg, SegmentStore};
+use crate::sim::SimTime;
+use anyhow::{bail, Result};
+
+/// What one compaction pass did (logged into the segment counters and
+/// surfaced by the `World` segment table).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CompactReport {
+    /// Sealed segments consumed as inputs.
+    pub merged: usize,
+    pub frames_kept: u64,
+    /// Ghost frames (superseded doc versions) dropped.
+    pub frames_dropped: u64,
+    pub bytes_before: u64,
+    pub bytes_after: u64,
+}
+
+impl SegmentStore {
+    /// Compact when enough sealed segments have piled up; Ok(None) when
+    /// below the `compact_min_segments` threshold.
+    pub fn maybe_compact(&mut self, now: SimTime) -> Result<Option<CompactReport>> {
+        if self.sealed.len() < self.cfg.compact_min_segments {
+            return Ok(None);
+        }
+        self.compact(now).map(Some)
+    }
+
+    /// Merge all sealed segments into one, dropping ghosts. The active
+    /// segment is untouched — it only ever grows by appends.
+    pub fn compact(&mut self, _now: SimTime) -> Result<CompactReport> {
+        let inputs: Vec<SealedSeg> = self.sealed.clone();
+        if inputs.is_empty() {
+            return Ok(CompactReport::default());
+        }
+        let mut report = CompactReport { merged: inputs.len(), ..CompactReport::default() };
+        let merged_id = self.next_id;
+        let mut out: Vec<u8> = Vec::new();
+        let mut moved: Vec<(u64, u64)> = Vec::new();
+        let mut max_seal_time: SimTime = 0;
+        for seg in &inputs {
+            report.bytes_before += seg.bytes;
+            max_seal_time = max_seal_time.max(seg.seal_time);
+            let name = seg_file(seg.id);
+            let Some(bytes) = self.fs_mut().read(&name)? else {
+                bail!("compaction input {name} missing");
+            };
+            let mut at = 0usize;
+            while let Some((doc_id, flen)) = peek_doc_id(&bytes, at) {
+                let live = self
+                    .index
+                    .get(&doc_id)
+                    .map(|loc| loc.segment == seg.id && loc.offset == at as u64)
+                    .unwrap_or(false);
+                if live {
+                    moved.push((doc_id, out.len() as u64));
+                    out.extend_from_slice(&bytes[at..at + flen]);
+                    report.frames_kept += 1;
+                } else {
+                    report.frames_dropped += 1;
+                }
+                at += flen;
+            }
+            if at != bytes.len() {
+                bail!("compaction input {name}: trailing bytes at {at} of {}", bytes.len());
+            }
+        }
+        report.bytes_after = out.len() as u64;
+        // (1) materialize the merged segment before any metadata changes.
+        if !out.is_empty() {
+            self.fs_mut().write_atomic(&seg_file(merged_id), &out)?;
+        }
+        // (2) the linearization point: swap inputs for the merged segment.
+        self.sealed.clear();
+        if !out.is_empty() {
+            self.sealed.push(SealedSeg {
+                id: merged_id,
+                seal_time: max_seal_time,
+                frames: report.frames_kept,
+                bytes: report.bytes_after,
+            });
+        }
+        self.next_id = merged_id + 1;
+        self.commit_manifest()?;
+        // (3) readers now resolve through the merged segment.
+        for (doc_id, offset) in moved {
+            if let Some(loc) = self.index.get_mut(&doc_id) {
+                loc.segment = merged_id;
+                loc.offset = offset;
+            }
+        }
+        // (4) inputs are unreachable from the manifest; reclaim them.
+        for seg in &inputs {
+            self.fs_mut().remove(&seg_file(seg.id))?;
+        }
+        self.counters.compactions += 1;
+        self.counters.segments_merged += inputs.len() as u64;
+        self.counters.frames_dropped += report.frames_dropped;
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sink::segment::{SegmentConfig, VecFs};
+    use crate::sink::SinkDoc;
+
+    fn doc(id: u64, title: &str) -> SinkDoc {
+        SinkDoc {
+            doc_id: id,
+            stream_id: 0,
+            guid: format!("g{id}"),
+            title: title.to_string(),
+            body: "b".to_string(),
+            url: String::new(),
+            published_ms: id,
+            ingested_ms: id,
+            scores: Vec::new(),
+            simhash: 0,
+            fields: Vec::new(),
+        }
+    }
+
+    fn store_with(fs: &VecFs, seal_docs: u64, min: usize) -> SegmentStore {
+        let cfg = SegmentConfig {
+            seal_docs,
+            compact_min_segments: min,
+            ..SegmentConfig::default()
+        };
+        SegmentStore::recover(Box::new(fs.clone()), cfg).unwrap().0
+    }
+
+    #[test]
+    fn compaction_drops_ghosts_and_preserves_reads() {
+        let fs = VecFs::new();
+        let mut st = store_with(&fs, 2, 2);
+        // Docs 1..=6, with 1 and 2 re-indexed later (ghosts in early segs).
+        for i in 1..=6u64 {
+            st.append_doc(&doc(i, "first"), i).unwrap();
+        }
+        st.append_doc(&doc(1, "second"), 7).unwrap();
+        st.append_doc(&doc(2, "second"), 8).unwrap();
+        st.seal(9).unwrap();
+        let before: Vec<(u64, String)> = (1..=6)
+            .map(|i| (i, st.read_doc(i).unwrap().unwrap().title))
+            .collect();
+        let report = st.maybe_compact(10).unwrap().unwrap();
+        assert!(report.merged >= 2);
+        assert_eq!(report.frames_dropped, 2, "two superseded versions dropped");
+        assert_eq!(st.sealed_count(), 1, "inputs collapsed into one segment");
+        let after: Vec<(u64, String)> = (1..=6)
+            .map(|i| (i, st.read_doc(i).unwrap().unwrap().title))
+            .collect();
+        assert_eq!(before, after, "reads identical across compaction");
+        assert!(report.bytes_after < report.bytes_before);
+    }
+
+    #[test]
+    fn recovery_after_compaction_matches() {
+        let fs = VecFs::new();
+        let mut st = store_with(&fs, 2, 2);
+        for i in 1..=6u64 {
+            st.append_doc(&doc(i, "t"), i).unwrap();
+        }
+        st.append_doc(&doc(3, "t2"), 7).unwrap();
+        st.seal(8).unwrap();
+        st.compact(9).unwrap();
+        drop(st);
+        let (st2, docs) = SegmentStore::recover(
+            Box::new(fs),
+            SegmentConfig { seal_docs: 2, compact_min_segments: 2, ..SegmentConfig::default() },
+        )
+        .unwrap();
+        assert_eq!(docs.len(), 6);
+        assert_eq!(docs.iter().find(|d| d.doc_id == 3).unwrap().title, "t2");
+        assert_eq!(st2.counters.frames_torn, 0);
+    }
+
+    #[test]
+    fn crash_between_merge_write_and_commit_recovers_old_view() {
+        let fs = VecFs::new();
+        let mut st = store_with(&fs, 2, 2);
+        for i in 1..=4u64 {
+            st.append_doc(&doc(i, "t"), i).unwrap();
+        }
+        st.seal(5).unwrap();
+        // Simulate the (1)->(2) crash window: the merged output exists
+        // but the manifest still references the inputs.
+        let merged_name = format!("seg-{:08}.seg", 99u64);
+        let mut disk = fs.clone();
+        use crate::sink::segment::SegFs;
+        disk.append(&merged_name, b"half-written merged segment").unwrap();
+        drop(st);
+        let (st2, docs) = SegmentStore::recover(
+            Box::new(fs.clone()),
+            SegmentConfig { seal_docs: 2, compact_min_segments: 2, ..SegmentConfig::default() },
+        )
+        .unwrap();
+        assert_eq!(docs.len(), 4, "old view intact");
+        assert!(st2.counters.orphans_removed >= 1, "uncommitted merge removed");
+        assert!(fs.read(&merged_name).unwrap().is_none());
+    }
+
+    #[test]
+    fn below_threshold_is_a_no_op() {
+        let fs = VecFs::new();
+        let mut st = store_with(&fs, 100, 4);
+        for i in 1..=5u64 {
+            st.append_doc(&doc(i, "t"), i).unwrap();
+        }
+        assert!(st.maybe_compact(10).unwrap().is_none());
+        assert_eq!(st.counters.compactions, 0);
+    }
+}

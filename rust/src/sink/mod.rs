@@ -12,6 +12,14 @@ use crate::sqs::LatencyHistogram;
 use crate::text::tokenize;
 use std::collections::{HashMap, VecDeque};
 
+pub mod compact;
+pub mod segment;
+
+pub use compact::CompactReport;
+pub use segment::{
+    SegFs, SegmentConfig, SegmentCounters, SegmentStore, SegmentStoreConfig, StdFs, VecFs,
+};
+
 /// An enriched document as delivered to the sink.
 #[derive(Debug, Clone)]
 pub struct SinkDoc {
@@ -46,6 +54,21 @@ pub struct SinkCounters {
     /// Docs whose retry budget exhausted: routed to the poison DLQ
     /// counter instead of silently dropped.
     pub docs_poisoned: u64,
+    /// Docs replayed from the durable segment store at startup. Kept
+    /// separate from `docs_indexed` so the delivery-conservation
+    /// invariant (`fetched == indexed + deduped + poisoned`) stays exact
+    /// across a crash/restore, while exactly-once becomes
+    /// `doc_count == docs_indexed + docs_recovered - docs_overwritten`.
+    pub docs_recovered: u64,
+    /// Indexing operations whose doc id was already live in the store
+    /// (latest-wins replacement, not a new document). Always zero within
+    /// a single run — upstream dedup hands the sink fresh ids — but a
+    /// restart that replays upstream sources over a recovered corpus
+    /// re-delivers old ids, and this counter keeps exactly-once exact.
+    pub docs_overwritten: u64,
+    /// Segment-store append/read failures (counted, never panicked —
+    /// the in-memory index remains authoritative for the run).
+    pub segment_errors: u64,
 }
 
 /// Outcome of one bulk request, per document — what a real ES `_bulk`
@@ -93,6 +116,20 @@ pub struct ElasticLite {
     /// Sink-local clock: the max `ingested_ms` seen, so `flush()` (which
     /// has no time argument at its call sites) knows "now" for backoff.
     clock: SimTime,
+    /// Durable segment store. `None` (the default) keeps every path
+    /// byte-identical to the pure in-memory sink; `Some` turns `docs`
+    /// into a bounded hot tier backed by segment lookup.
+    segments: Option<SegmentStore>,
+    /// FIFO insertion order of the hot tier (eviction order when the
+    /// segment store bounds `docs` to `hot_cap`).
+    hot_order: VecDeque<u64>,
+    /// Hot-tier capacity; only enforced when `segments` is `Some`.
+    hot_cap: usize,
+    /// Pooled (list_len, term_index) scratch for `search_all_into`, so
+    /// repeated conjunction queries allocate nothing.
+    search_scratch: Vec<(usize, usize)>,
+    /// Pooled lowercase buffer for `search_all_into` term folding.
+    lc_buf: String,
 }
 
 impl ElasticLite {
@@ -108,6 +145,53 @@ impl ElasticLite {
             retry_q: VecDeque::new(),
             retry_scratch: Vec::new(),
             clock: 0,
+            segments: None,
+            hot_order: VecDeque::new(),
+            hot_cap: usize::MAX,
+            search_scratch: Vec::new(),
+            lc_buf: String::new(),
+        }
+    }
+
+    /// Attach a durable segment store, replaying whatever the backing
+    /// `fs` already holds: recovered docs rebuild the postings (sorted
+    /// by doc id, so the rebuild is deterministic and postings stay
+    /// sorted for `binary_search`) and refill the hot tier up to
+    /// `hot_cap`. Counted under `docs_recovered`, not `docs_indexed`.
+    pub fn enable_segments(
+        &mut self,
+        fs: Box<dyn SegFs>,
+        cfg: SegmentConfig,
+        hot_cap: usize,
+    ) -> anyhow::Result<()> {
+        let (store, recovered) = SegmentStore::recover(fs, cfg)?;
+        self.hot_cap = hot_cap.max(1);
+        self.counters.docs_recovered += recovered.len() as u64;
+        for doc in recovered {
+            for tok in tokenize(&doc.title).into_iter().chain(tokenize(&doc.body)) {
+                let posting = self.postings.entry(tok).or_default();
+                if posting.last() != Some(&doc.doc_id) {
+                    posting.push(doc.doc_id);
+                }
+            }
+            self.hot_insert(doc);
+        }
+        self.segments = Some(store);
+        Ok(())
+    }
+
+    /// Insert into the bounded hot tier, evicting the oldest entries
+    /// beyond `hot_cap` (their frames stay reachable via the segments).
+    fn hot_insert(&mut self, doc: SinkDoc) {
+        self.hot_order.push_back(doc.doc_id);
+        self.docs.insert(doc.doc_id, doc);
+        while self.docs.len() > self.hot_cap {
+            match self.hot_order.pop_front() {
+                Some(old) => {
+                    self.docs.remove(&old);
+                }
+                None => break,
+            }
         }
     }
 
@@ -198,7 +282,22 @@ impl ElasticLite {
             }
         }
         self.counters.docs_indexed += 1;
-        self.docs.insert(doc.doc_id, doc);
+        if self.segments.is_some() {
+            if let Some(st) = self.segments.as_mut() {
+                if st.contains(doc.doc_id) {
+                    self.counters.docs_overwritten += 1;
+                }
+                if st.append_doc(&doc, now).is_err() {
+                    self.counters.segment_errors += 1;
+                }
+            }
+            self.hot_insert(doc);
+        } else {
+            if self.docs.contains_key(&doc.doc_id) {
+                self.counters.docs_overwritten += 1;
+            }
+            self.docs.insert(doc.doc_id, doc);
+        }
         res.indexed += 1;
     }
 
@@ -227,7 +326,8 @@ impl ElasticLite {
             .unwrap_or(&[])
     }
 
-    /// All-terms conjunction query.
+    /// All-terms conjunction query. Allocates per call; hot callers use
+    /// [`ElasticLite::search_all_into`] instead.
     pub fn search_all(&self, terms: &[&str]) -> Vec<u64> {
         let mut lists: Vec<&[u64]> = terms.iter().map(|t| self.search_term(t)).collect();
         lists.sort_by_key(|l| l.len());
@@ -239,8 +339,87 @@ impl ElasticLite {
             .collect()
     }
 
+    /// Case-fold `term` into the pooled buffer and look up its posting
+    /// list. Split borrows (postings vs buffer) so the returned slice
+    /// can outlive further buffer reuse by the caller.
+    fn posting_lc<'a>(
+        postings: &'a HashMap<String, Vec<u64>>,
+        lc_buf: &mut String,
+        term: &str,
+    ) -> Option<&'a [u64]> {
+        lc_buf.clear();
+        for c in term.chars() {
+            for l in c.to_lowercase() {
+                lc_buf.push(l);
+            }
+        }
+        postings.get(lc_buf.as_str()).map(Vec::as_slice)
+    }
+
+    /// Allocation-free conjunction query: same results as `search_all`,
+    /// intersecting into the caller's buffer via pooled scratch (term
+    /// ordering by selectivity, lowercase folding into a reused String).
+    /// Steady state performs zero heap allocations — bench-asserted by
+    /// `bench_sink` and pinned in the pallas-lint hot-path manifest.
+    // lint:hot-path
+    pub fn search_all_into(&mut self, terms: &[&str], out: &mut Vec<u64>) {
+        out.clear();
+        if terms.is_empty() {
+            return;
+        }
+        let mut order = std::mem::take(&mut self.search_scratch);
+        order.clear();
+        for (i, t) in terms.iter().enumerate() {
+            let len = match Self::posting_lc(&self.postings, &mut self.lc_buf, t) {
+                Some(p) => p.len(),
+                None => {
+                    self.search_scratch = order;
+                    return;
+                }
+            };
+            order.push((len, i));
+        }
+        order.sort_unstable();
+        if let Some((_, first)) = order.first() {
+            if let Some(p) = Self::posting_lc(&self.postings, &mut self.lc_buf, terms[*first]) {
+                out.extend_from_slice(p);
+            }
+        }
+        for &(_, i) in order.iter().skip(1) {
+            if let Some(p) = Self::posting_lc(&self.postings, &mut self.lc_buf, terms[i]) {
+                out.retain(|id| p.binary_search(id).is_ok() || p.contains(id));
+            }
+        }
+        self.search_scratch = order;
+    }
+
+    /// Hot-tier lookup: always hits when the segment store is off (every
+    /// doc is hot); with the store on, evicted docs return `None` here —
+    /// use [`ElasticLite::fetch`] to fall through to the segments.
     pub fn get(&self, doc_id: u64) -> Option<&SinkDoc> {
         self.docs.get(&doc_id)
+    }
+
+    /// Doc lookup through the full storage hierarchy: the bounded hot
+    /// tier first, then the doc's segment frame. Owned return because a
+    /// segment read materializes the doc.
+    pub fn fetch(&mut self, doc_id: u64) -> Option<SinkDoc> {
+        if let Some(d) = self.docs.get(&doc_id) {
+            let d = d.clone();
+            if let Some(st) = self.segments.as_mut() {
+                st.counters.hot_hits += 1;
+            }
+            return Some(d);
+        }
+        let st = self.segments.as_mut()?;
+        st.counters.hot_misses += 1;
+        match st.read_doc(doc_id) {
+            Ok(d) => d,
+            Err(_) => {
+                self.counters.segment_errors += 1;
+                None
+            }
+        }
     }
 
     /// Iterate all indexed documents (reporting/benches).
@@ -248,8 +427,55 @@ impl ElasticLite {
         self.docs.values()
     }
 
+    /// Total indexed docs. With the segment store on, the location index
+    /// is authoritative (the hot tier is only a bounded cache of it).
     pub fn doc_count(&self) -> usize {
+        match &self.segments {
+            Some(st) => st.live_docs(),
+            None => self.docs.len(),
+        }
+    }
+
+    /// Docs currently resident in the in-memory hot tier.
+    pub fn hot_count(&self) -> usize {
         self.docs.len()
+    }
+
+    pub fn segments_enabled(&self) -> bool {
+        self.segments.is_some()
+    }
+
+    /// Segment-store counters (None when the store is off).
+    pub fn segment_counters(&self) -> Option<&SegmentCounters> {
+        self.segments.as_ref().map(|st| &st.counters)
+    }
+
+    /// (sealed segments, total segment bytes, active-segment bytes) for
+    /// gauges/tables; None when the store is off.
+    pub fn segment_shape(&self) -> Option<(usize, u64, u64)> {
+        self.segments.as_ref().map(|st| (st.sealed_count(), st.total_bytes(), st.active_bytes()))
+    }
+
+    /// Run a compaction pass if the sealed-segment threshold is met.
+    /// Driven by the pipeline's `CompactTick` timer off the sim clock.
+    pub fn compact_tick(&mut self, now: SimTime) -> anyhow::Result<Option<CompactReport>> {
+        match self.segments.as_mut() {
+            Some(st) => st.maybe_compact(now),
+            None => Ok(None),
+        }
+    }
+
+    /// Detach and return the segment filesystem (crash simulation: the
+    /// process dies, the disk survives for the next `enable_segments`).
+    pub fn take_segment_fs(&mut self) -> Option<Box<dyn SegFs>> {
+        self.segments.take().map(SegmentStore::into_fs)
+    }
+
+    /// Warm the segment store's pooled buffers/index (bench setup).
+    pub fn reserve_segments(&mut self, docs: usize, frame_bytes: usize) {
+        if let Some(st) = self.segments.as_mut() {
+            st.reserve(docs, frame_bytes);
+        }
     }
 
     pub fn pending_count(&self) -> usize {
@@ -265,6 +491,91 @@ impl ElasticLite {
     /// Number of latency samples recorded (== docs indexed).
     pub fn latency_samples(&self) -> u64 {
         self.latencies.samples()
+    }
+
+    /// Sink memory composition: estimated resident bytes per collection,
+    /// so `figure4_day` can show what the segment tier bounds and what
+    /// still scales with corpus size. Sums are order-independent, so the
+    /// HashMap walks stay deterministic. Audit of every sink-side
+    /// collection:
+    ///   docs        — bounded to `hot_cap` when the segment store is on
+    ///   postings    — grows with vocabulary + doc count (the follow-on:
+    ///                 spill cold posting runs to the segment tier)
+    ///   pending     — bounded by `bulk_size` (flushes at the brim)
+    ///   retry queue — bounded by the retry budget times reject window
+    ///   latencies   — O(1) log-bucketed histogram
+    ///   seg index   — 24B/doc location entries (the bounded trade)
+    pub fn sink_rss_report(&self) -> String {
+        fn doc_bytes(d: &SinkDoc) -> u64 {
+            (d.guid.len()
+                + d.title.len()
+                + d.body.len()
+                + d.url.len()
+                + d.scores.len() * 4
+                + d.fields.iter().map(|(n, _)| n.len() + 16).sum::<usize>()
+                + std::mem::size_of::<SinkDoc>()) as u64
+        }
+        let hot: u64 = self.docs.values().map(doc_bytes).sum();
+        let post_entries: u64 = self.postings.values().map(|v| v.len() as u64).sum();
+        let post: u64 = self
+            .postings
+            .iter()
+            .map(|(k, v)| (k.len() + 48 + v.capacity() * 8) as u64)
+            .sum();
+        let pend: u64 = self.pending.iter().map(doc_bytes).sum();
+        let retry: u64 = self.retry_q.iter().map(|r| doc_bytes(&r.doc) + 16).sum();
+        let (seg_idx, seg_disk) = match &self.segments {
+            Some(st) => (st.rss_estimate(), st.total_bytes()),
+            None => (0, 0),
+        };
+        let mut out = String::new();
+        out.push_str("  sink memory composition (estimated resident bytes)\n");
+        out.push_str(&format!(
+            "    {:<18} {:>10} entries {:>12} B  (bounded: {})\n",
+            "hot docs",
+            self.docs.len(),
+            hot,
+            if self.segments.is_some() { "hot_cap" } else { "NO (store off)" },
+        ));
+        out.push_str(&format!(
+            "    {:<18} {:>10} entries {:>12} B  (bounded: vocabulary)\n",
+            "postings",
+            post_entries,
+            post,
+        ));
+        out.push_str(&format!(
+            "    {:<18} {:>10} entries {:>12} B  (bounded: bulk_size)\n",
+            "pending bulk",
+            self.pending.len(),
+            pend,
+        ));
+        out.push_str(&format!(
+            "    {:<18} {:>10} entries {:>12} B  (bounded: retry budget)\n",
+            "retry queue",
+            self.retry_q.len(),
+            retry,
+        ));
+        out.push_str(&format!(
+            "    {:<18} {:>10} entries {:>12} B  (bounded: O(1) histogram)\n",
+            "latencies",
+            self.latencies.samples(),
+            std::mem::size_of::<LatencyHistogram>(),
+        ));
+        if let Some(st) = &self.segments {
+            out.push_str(&format!(
+                "    {:<18} {:>10} entries {:>12} B  (bounded: 24B/doc index)\n",
+                "segment index",
+                st.live_docs(),
+                seg_idx,
+            ));
+            out.push_str(&format!(
+                "    {:<18} {:>10} sealed  {:>12} B  [on disk, not RSS]\n",
+                "segments",
+                st.sealed_count(),
+                seg_disk,
+            ));
+        }
+        out
     }
 }
 
@@ -397,6 +708,83 @@ mod tests {
             (es.counters.docs_indexed, es.counters.docs_rejected, es.counters.docs_poisoned)
         };
         assert_eq!(run(42), run(42));
+    }
+
+    #[test]
+    fn search_all_into_matches_search_all() {
+        let mut es = ElasticLite::new(1);
+        es.ingest(doc(1, "markets rally today", 0, 5));
+        es.ingest(doc(2, "markets slump today", 0, 5));
+        es.ingest(doc(3, "weather calm today", 0, 5));
+        let mut out = Vec::new();
+        for terms in [
+            &["markets", "rally"][..],
+            &["today"][..],
+            &["Markets", "TODAY"][..],
+            &["markets", "nonexistent"][..],
+            &[][..],
+            &["shared", "body", "words"][..],
+        ] {
+            let expect = es.search_all(terms);
+            es.search_all_into(terms, &mut out);
+            assert_eq!(out, expect, "terms {terms:?}");
+        }
+    }
+
+    fn segmented_sink(bulk: usize, hot_cap: usize, seal_docs: u64) -> (ElasticLite, crate::sink::VecFs) {
+        let fs = VecFs::new();
+        let mut es = ElasticLite::new(bulk);
+        let cfg = SegmentConfig { seal_docs, ..SegmentConfig::default() };
+        es.enable_segments(Box::new(fs.clone()), cfg, hot_cap).unwrap();
+        (es, fs)
+    }
+
+    #[test]
+    fn segment_backed_sink_bounds_the_hot_tier() {
+        let (mut es, _fs) = segmented_sink(1, 3, 2);
+        for i in 1..=10u64 {
+            es.ingest(doc(i, "bounded tier", 0, i));
+        }
+        assert_eq!(es.doc_count(), 10, "index is authoritative");
+        assert!(es.hot_count() <= 3, "hot tier capped at 3, got {}", es.hot_count());
+        // Evicted docs miss the hot tier but fetch from segments.
+        assert!(es.get(1).is_none(), "doc 1 evicted from hot tier");
+        let d = es.fetch(1).expect("doc 1 fetchable from segments");
+        assert_eq!(d.title, "bounded tier");
+        // Hot docs hit the tier directly.
+        assert!(es.get(10).is_some());
+        let sc = es.segment_counters().unwrap();
+        assert!(sc.hot_misses > 0 && sc.hot_hits > 0);
+        // Search still sees every doc (postings are not tiered).
+        assert_eq!(es.search_term("bounded").len(), 10);
+    }
+
+    #[test]
+    fn segment_backed_sink_recovers_after_crash() {
+        let (mut es, fs) = segmented_sink(1, 100, 3);
+        for i in 1..=8u64 {
+            es.ingest(doc(i, "durable doc", 0, i));
+        }
+        assert_eq!(es.counters.docs_indexed, 8);
+        drop(es); // crash: the in-memory index is gone, the "disk" survives
+        let mut es2 = ElasticLite::new(1);
+        es2.enable_segments(
+            Box::new(fs),
+            SegmentConfig { seal_docs: 3, ..SegmentConfig::default() },
+            100,
+        )
+        .unwrap();
+        assert_eq!(es2.doc_count(), 8, "all docs replayed");
+        assert_eq!(es2.counters.docs_recovered, 8);
+        assert_eq!(es2.counters.docs_indexed, 0, "recovery is not re-indexing");
+        // Postings rebuilt: search works identically.
+        assert_eq!(es2.search_term("durable").len(), 8);
+        let mut out = Vec::new();
+        es2.search_all_into(&["durable", "doc"], &mut out);
+        assert_eq!(out, (1..=8).collect::<Vec<_>>());
+        for i in 1..=8u64 {
+            assert!(es2.fetch(i).is_some(), "doc {i} lost in recovery");
+        }
     }
 
     #[test]
